@@ -1,0 +1,84 @@
+//! Ablations over the design choices DESIGN.md §4 calls out:
+//!
+//! * (r, k) sweep — the γ = k / (k + (r-k)β + (d-r)) compression
+//!   trade-off of §II-A: larger r explores more but loosens the
+//!   convergence constant;
+//! * M (recluster period) sweep;
+//! * DBSCAN eps sensitivity;
+//! * age merge rule (min vs max).
+//!
+//! ```sh
+//! cargo run --release --example ablation_rk [-- --rounds 60]
+//! ```
+
+use ragek::clustering::MergeRule;
+use ragek::config::ExperimentConfig;
+use ragek::fl::trainer::Trainer;
+use ragek::util::argparse::ArgSpec;
+
+fn run_one(mut cfg: ExperimentConfig, label: &str) -> anyhow::Result<()> {
+    cfg.eval_every = cfg.rounds; // eval once at the end
+    cfg.eval_mode = ragek::config::EvalMode::Global;
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let report = trainer.run()?;
+    println!(
+        "{label:<34} acc {:6.2}%  clusters {:?}  uplink {:.2} MiB",
+        report.final_accuracy * 100.0,
+        report.cluster_labels,
+        report.history.comm.uplink() as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let spec = ArgSpec::new("ablation_rk", "r/k, M, eps and merge-rule ablations")
+        .opt("rounds", "60", "global rounds per configuration")
+        .opt("seed", "42", "experiment seed");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let a = match spec.parse(&args) {
+        Ok(a) => a,
+        Err(ragek::util::argparse::ArgError::HelpRequested) => {
+            println!("{}", spec.usage());
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let rounds = a.get_usize("rounds")?;
+    let seed = a.get_usize("seed")? as u64;
+    let base = || {
+        let mut c = ExperimentConfig::mnist_scaled();
+        c.rounds = rounds;
+        c.seed = seed;
+        c
+    };
+
+    println!("-- (r, k) sweep (paper: r=75, k=10) --");
+    for (r, k) in [(10usize, 10usize), (25, 10), (75, 10), (200, 10), (75, 5), (75, 25)] {
+        let mut c = base();
+        c.r = r;
+        c.k = k;
+        run_one(c, &format!("r={r:<4} k={k}"))?;
+    }
+
+    println!("\n-- recluster period M (paper: 20) --");
+    for m in [0usize, 5, 20, 50] {
+        let mut c = base();
+        c.recluster_every = m;
+        run_one(c, &format!("M={m} (0 = never recluster)"))?;
+    }
+
+    println!("\n-- DBSCAN eps (default 0.35) --");
+    for eps in [0.1, 0.35, 0.6, 0.9] {
+        let mut c = base();
+        c.dbscan.eps = eps;
+        run_one(c, &format!("eps={eps}"))?;
+    }
+
+    println!("\n-- age merge rule on cluster formation --");
+    for (rule, name) in [(MergeRule::Min, "min (freshest wins)"), (MergeRule::Max, "max")] {
+        let mut c = base();
+        c.merge_rule = rule;
+        run_one(c, name)?;
+    }
+    Ok(())
+}

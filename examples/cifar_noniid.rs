@@ -1,0 +1,102 @@
+//! Figures 4 + 5 driver: the paper's CIFAR10 experiment on the PJRT
+//! (XLA) backend.
+//!
+//! 6 clients, label blocks {0,1,2} / {3,4,5} / {6,7,8,9} assigned to
+//! pairs, r=2500, k=100, Adam 1e-4 on the 2,515,338-parameter CNN of
+//! Table I. H/M/batch/rounds are scaled down for the CPU testbed
+//! (see EXPERIMENTS.md §F4/F5 for the mapping to the paper's values);
+//! pass --rounds/--h to scale back up.
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```sh
+//! cargo run --release --example cifar_noniid [-- --rounds 30]
+//! ```
+
+use ragek::config::ExperimentConfig;
+use ragek::coordinator::strategies::StrategyKind;
+use ragek::fl::metrics::History;
+use ragek::fl::trainer::Trainer;
+use ragek::util::{argparse::ArgSpec, plot};
+
+fn main() -> anyhow::Result<()> {
+    let spec = ArgSpec::new("cifar_noniid", "paper CIFAR10 experiment (Fig. 4 + 5)")
+        .opt("rounds", "16", "global rounds")
+        .opt("h", "8", "local steps per round (paper: 100)")
+        .opt("seed", "42", "experiment seed")
+        .opt("train-n", "900", "synthetic train samples")
+        .opt("out", "results", "output directory")
+        .flag("ragek-only", "skip the rTop-k baseline run");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let a = match spec.parse(&args) {
+        Ok(a) => a,
+        Err(ragek::util::argparse::ArgError::HelpRequested) => {
+            println!("{}", spec.usage());
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let outdir = std::path::PathBuf::from(a.get("out"));
+    std::fs::create_dir_all(&outdir)?;
+
+    let strategies: &[StrategyKind] = if a.get_flag("ragek-only") {
+        &[StrategyKind::RageK]
+    } else {
+        &[StrategyKind::RageK, StrategyKind::RTopK]
+    };
+
+    let mut histories: Vec<History> = Vec::new();
+    for &strategy in strategies {
+        let mut cfg = ExperimentConfig::cifar_paper();
+        cfg.rounds = a.get_usize("rounds")?;
+        cfg.h = a.get_usize("h")?;
+        cfg.recluster_every = (cfg.rounds / 3).max(2);
+        cfg.seed = a.get_usize("seed")? as u64;
+        cfg.train_n = a.get_usize("train-n")?;
+        cfg.test_n = 320;
+        cfg.eval_every = 2;
+        cfg.strategy = strategy;
+        cfg.eval_mode = ragek::config::EvalMode::Global; // see EXPERIMENTS.md §F5
+        println!("\n=== {} (CNN d = {}) ===", strategy.name(), cfg.d());
+        let mut trainer = Trainer::from_config(&cfg)?;
+        if strategy == StrategyKind::RageK {
+            // Fig. 4: snapshots at iteration 1 and after the first
+            // reclustering window (paper: 1 and 201)
+            trainer.heatmap_rounds = vec![1, cfg.recluster_every + 1];
+        }
+        let report = trainer.run()?;
+
+        if strategy == StrategyKind::RageK {
+            for (round, m) in &report.heatmaps {
+                println!("\nFig. 4 — connectivity heatmap @ iteration {round}:");
+                println!("{}", plot::heatmap(m, true));
+                std::fs::write(
+                    outdir.join(format!("fig4_heatmap_round{round}.csv")),
+                    plot::matrix_csv(m),
+                )?;
+            }
+            println!("ground truth pairs: {:?}", report.truth_labels);
+            println!("clusters found:     {:?}", report.cluster_labels);
+        }
+        std::fs::write(
+            outdir.join(format!("fig5_{}.csv", strategy.name().replace('/', "-"))),
+            report.history.to_csv(),
+        )?;
+        histories.push(report.history);
+    }
+
+    if histories.len() > 1 {
+        let refs: Vec<&History> = histories.iter().collect();
+        println!("\nFig. 5(a) — accuracy over rounds:");
+        println!("{}", History::chart_accuracy(&refs, 70, 16));
+    }
+    for h in &histories {
+        println!(
+            "{:<10} final acc {:6.2}%   uplink {:.2} MiB",
+            h.name,
+            h.final_accuracy() * 100.0,
+            h.comm.uplink() as f64 / (1 << 20) as f64,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Quickstart: train the paper's MNIST setup with rAge-k for a few dozen
+//! rounds on the pure-Rust backend (no artifacts needed) and print the
+//! accuracy curve.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use ragek::config::ExperimentConfig;
+use ragek::fl::metrics::History;
+use ragek::fl::trainer::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::mnist_scaled();
+    cfg.rounds = 60; // quick demo; the paper preset runs 150
+    cfg.eval_every = 5;
+
+    println!(
+        "rAge-k quickstart: {} clients, r={}, k={}, H={}, M={} (d={})",
+        cfg.n_clients, cfg.r, cfg.k, cfg.h, cfg.recluster_every, cfg.d()
+    );
+
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let report = trainer.run()?;
+
+    println!("\naccuracy over rounds:");
+    println!("{}", History::chart_accuracy(&[&report.history], 70, 14));
+    println!(
+        "final accuracy: {:.2}%   uplink: {:.2} MiB   clusters found: {:?}",
+        report.final_accuracy * 100.0,
+        report.history.comm.uplink() as f64 / (1 << 20) as f64,
+        report.cluster_labels
+    );
+    if let Some(truth) = &report.truth_labels {
+        println!("ground-truth pairs:              {truth:?}");
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! All-strategy shoot-out at equal k: rAge-k (both variants), rTop-k,
+//! top-k, rand-k and dense on the paper's non-iid MNIST split, reporting
+//! accuracy, uplink bytes, and uplink-to-target-accuracy — the
+//! communication-efficiency trade-off the paper's §III argues.
+//!
+//! ```sh
+//! cargo run --release --example strategy_comparison [-- --rounds 80]
+//! ```
+
+use ragek::config::ExperimentConfig;
+use ragek::coordinator::strategies::StrategyKind;
+use ragek::fl::metrics::History;
+use ragek::fl::trainer::Trainer;
+use ragek::util::argparse::ArgSpec;
+
+fn main() -> anyhow::Result<()> {
+    let spec = ArgSpec::new("strategy_comparison", "all strategies at equal k")
+        .opt("rounds", "80", "global rounds")
+        .opt("seed", "42", "experiment seed")
+        .opt("target", "0.8", "accuracy target for bytes-to-accuracy")
+        .flag("with-dense", "include the (slow, 4d-per-round) dense baseline");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let a = match spec.parse(&args) {
+        Ok(a) => a,
+        Err(ragek::util::argparse::ArgError::HelpRequested) => {
+            println!("{}", spec.usage());
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let target = a.get_f64("target")? as f32;
+
+    let mut strategies = vec![
+        StrategyKind::RageK,
+        StrategyKind::RageKIndependent,
+        StrategyKind::RTopK,
+        StrategyKind::TopK,
+        StrategyKind::RandK,
+    ];
+    if a.get_flag("with-dense") {
+        strategies.push(StrategyKind::Dense);
+    }
+
+    let mut histories: Vec<History> = Vec::new();
+    for strategy in strategies {
+        let mut cfg = ExperimentConfig::mnist_scaled();
+        cfg.rounds = a.get_usize("rounds")?;
+        cfg.seed = a.get_usize("seed")? as u64;
+        cfg.strategy = strategy;
+        cfg.eval_mode = ragek::config::EvalMode::Global;
+        println!("=== {} ===", strategy.name());
+        let mut trainer = Trainer::from_config(&cfg)?;
+        histories.push(trainer.run()?.history);
+    }
+
+    let refs: Vec<&History> = histories.iter().collect();
+    println!("\naccuracy over rounds:");
+    println!("{}", History::chart_accuracy(&refs, 70, 18));
+
+    println!(
+        "{:<14} {:>10} {:>14} {:>18} {:>20}",
+        "strategy", "final acc", "rounds->tgt", "uplink (MiB)", "uplink->tgt (MiB)"
+    );
+    for h in &histories {
+        let fmt_bytes = |b: Option<u64>| {
+            b.map(|x| format!("{:.2}", x as f64 / (1 << 20) as f64))
+                .unwrap_or_else(|| "—".into())
+        };
+        println!(
+            "{:<14} {:>9.2}% {:>14} {:>18.2} {:>20}",
+            h.name,
+            h.final_accuracy() * 100.0,
+            h.rounds_to_accuracy(target)
+                .map(|r| r.to_string())
+                .unwrap_or_else(|| "—".into()),
+            h.comm.uplink() as f64 / (1 << 20) as f64,
+            fmt_bytes(h.uplink_to_accuracy(target)),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,7 @@
+"""Build-time Python for the rAge-k stack (never imported at runtime).
+
+``compile.kernels`` — Layer-1 Pallas kernels (+ jnp oracles in
+``kernels.ref``); ``compile.models`` — Layer-2 model zoo (Table I);
+``compile.model`` — exported-graph builders; ``compile.aot`` — the HLO-text
+exporter driven by ``make artifacts``.
+"""

@@ -1,0 +1,36 @@
+"""Layer-1 Pallas kernels for the rAge-k stack.
+
+Every kernel here runs with ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); on a real TPU the same ``pallas_call``s lower
+to Mosaic. Correctness is pinned against the pure-``jnp`` oracles in
+:mod:`compile.kernels.ref` by the pytest + hypothesis suite.
+
+Kernels:
+
+* :func:`~compile.kernels.matmul.matmul` — tiled matmul shaped for the
+  128x128 MXU; used by the dense layers of both models via
+  :func:`~compile.kernels.matmul.dense` (custom VJP, so fwd *and* bwd run
+  through the kernel).
+* :func:`~compile.kernels.topk.topr_abs` — top-r selection by |g| (the
+  per-client hot spot of the rAge-k protocol): a streaming Pallas |.|
+  stage feeding ``lax.top_k``; plus the blockwise candidate kernel
+  :func:`~compile.kernels.topk.block_topm` powering the approximate mode.
+* :func:`~compile.kernels.sparse.masked_reset` — the eq. (2) age update
+  ``a' = (a + 1) * (1 - mask)`` as a streaming elementwise kernel.
+* :func:`~compile.kernels.sparse.scatter_add` — sparse (idx, val) apply.
+"""
+
+from compile.kernels.matmul import matmul, dense
+from compile.kernels.topk import topr_abs, block_topm, approx_topr_abs
+from compile.kernels.sparse import masked_reset, scatter_add, age_update
+
+__all__ = [
+    "matmul",
+    "dense",
+    "topr_abs",
+    "block_topm",
+    "approx_topr_abs",
+    "masked_reset",
+    "scatter_add",
+    "age_update",
+]

@@ -1,0 +1,109 @@
+"""Tiled Pallas matmul + dense layer with a kernel-backed custom VJP.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper trains on
+GPUs where cuBLAS handles the dense math; on TPU the analogous hot spot is
+an MXU-tiled matmul. Blocks default to (128, 128) output tiles with the
+contraction dimension streamed through VMEM in ``bk`` slabs — the BlockSpec
+grid expresses the HBM->VMEM schedule a CUDA kernel would write with
+threadblocks + shared memory. The output tile doubles as the f32
+accumulator (revisited across the innermost K grid axis), which is the
+MXU accumulate path on real hardware.
+
+Inputs whose dimensions are not tile multiples are zero-padded in the
+wrapper and the result sliced back; zero padding is exact for matmul.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K innermost."""
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _fit_tile(requested: int, dim: int, floor: int = 8) -> int:
+    """Shrink a tile to the next pow2 >= dim so tiny layers don't pay
+    128x zero padding (e.g. the 50-wide MLP hidden layer)."""
+    pow2 = 1 << max(0, dim - 1).bit_length()
+    return min(requested, max(floor, pow2))
+
+
+# Default tiles: sized so every dense layer in the model zoo compiles to a
+# single-iteration grid. Under interpret=True each grid step lowers to a
+# dynamic-slice loop iteration that the pinned XLA 0.5.1 CPU backend
+# executes without cross-iteration fusion (~7x slowdown measured on the
+# CNN FC stack — EXPERIMENTS.md §Perf); one-step grids run at native dot
+# speed. On a real TPU these caps would instead be chosen to fit VMEM
+# (~(128, 128) tiles with a 128-slab contraction; see DESIGN.md
+# §Hardware-Adaptation) — pass bm/bn/bk explicitly to study that shape.
+_BM, _BN, _BK = 256, 1024, 2048
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, w, *, bm: int = _BM, bn: int = _BN, bk: int = _BK):
+    """``x[M, K] @ w[K, N] -> [M, N]`` through the Pallas tile kernel."""
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm = _fit_tile(bm, m)
+    bn = _fit_tile(bn, n)
+    bk = _fit_tile(bk, kdim)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def dense(x, w, b):
+    """Dense layer ``x @ w + b`` whose fwd *and* bwd use the Pallas matmul."""
+    return matmul(x, w) + b
+
+
+def _dense_fwd(x, w, b):
+    return dense(x, w, b), (x, w)
+
+
+def _dense_bwd(res, gy):
+    x, w = res
+    gx = matmul(gy, w.T)
+    gw = matmul(x.T, gy)
+    gb = jnp.sum(gy, axis=0)
+    return gx, gw, gb
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

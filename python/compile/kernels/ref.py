@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the single source of truth for kernel semantics; the pytest +
+hypothesis suite asserts ``assert_allclose(kernel(x), ref(x))`` over swept
+shapes/values, and the Rust side mirrors the same tie-breaking contract
+("value desc, index asc" — what ``jax.lax.top_k`` implements) so Rust, jnp
+and Pallas agree bit-for-bit on selection.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul oracle."""
+    return jnp.matmul(x, w)
+
+
+def dense_ref(x, w, b):
+    """Dense layer oracle: x @ w + b."""
+    return jnp.matmul(x, w) + b
+
+
+def topr_abs_ref(g, r):
+    """Exact top-r of |g|.
+
+    Returns ``(vals, idx)`` where ``vals = |g|[idx]`` sorted descending and
+    ties broken towards the smaller index (the ``lax.top_k`` contract).
+    """
+    vals, idx = jax.lax.top_k(jnp.abs(g), r)
+    return vals, idx.astype(jnp.int32)
+
+
+def block_topm_ref(g, m, block):
+    """Per-block top-m of |g| (candidate stage oracle).
+
+    ``g`` is padded with -1 sentinels to a multiple of ``block``; for each
+    block the m largest |value|s and their *global* indices are returned,
+    shapes ``(nblocks, m)``.
+    """
+    d = g.shape[0]
+    nblocks = -(-d // block)
+    gp = jnp.pad(jnp.abs(g), (0, nblocks * block - d), constant_values=-1.0)
+    gb = gp.reshape(nblocks, block)
+    vals, idx = jax.lax.top_k(gb, m)
+    gidx = idx + (jnp.arange(nblocks) * block)[:, None]
+    return vals, gidx.astype(jnp.int32)
+
+
+def masked_reset_ref(age, mask):
+    """eq. (2) oracle: requested indices (mask==1) reset to 0, rest age +1."""
+    return (age + 1) * (1 - mask)
+
+
+def age_update_ref(age, idx):
+    """eq. (2) with an index list instead of a dense mask."""
+    mask = jnp.zeros_like(age).at[idx].set(1)
+    return masked_reset_ref(age, mask)
+
+
+def scatter_add_ref(dst, idx, vals, scale=1.0):
+    """dst + scale * scatter(idx, vals). Duplicate indices accumulate."""
+    return dst.at[idx].add(scale * vals)
+
+
+def ragek_select_ref(g, age, r, k):
+    """Algorithm 2 oracle (fused client-side rAge-k).
+
+    1. top-r indices of |g|;
+    2. among them, the k with the highest age (ties: smaller *rank* in the
+       top-r list, i.e. larger magnitude, wins — the ``lax.top_k``
+       contract applied to ``age[top_ind]``);
+    3. ages +1 everywhere, then 0 at the selected indices.
+
+    Returns (sel_idx[k], sel_val[k] = g[sel_idx], new_age[d]).
+    """
+    _, top_ind = jax.lax.top_k(jnp.abs(g), r)
+    _, age_rank = jax.lax.top_k(age[top_ind].astype(jnp.float32), k)
+    sel = top_ind[age_rank].astype(jnp.int32)
+    new_age = age_update_ref(age, sel)
+    return sel, g[sel], new_age

@@ -1,0 +1,61 @@
+"""Sparse-update + age-protocol kernels.
+
+* :func:`masked_reset` — eq. (2) of the paper, ``a' = (a + 1) * (1 - m)``,
+  as a blocked streaming elementwise Pallas kernel (the d-dimensional age
+  sweep the PS performs every global round; d = 2.5M for the CIFAR model).
+* :func:`age_update` — eq. (2) taking the selected index list: builds the
+  dense mask with an XLA scatter, then streams through ``masked_reset``.
+* :func:`scatter_add` — applies a sparse (idx, val) gradient to a dense
+  vector. The scatter itself is XLA's native op (data-dependent cross-block
+  writes don't map onto a fixed BlockSpec schedule); it is wrapped here so
+  the artifact graphs and the oracle tests share one entry point.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_reset_kernel(a_ref, m_ref, o_ref):
+    o_ref[...] = (a_ref[...] + 1) * (1 - m_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def masked_reset(age, mask, *, block: int = 16384):
+    """eq. (2): ages +1 everywhere, reset to 0 where mask == 1.
+
+    ``age`` and ``mask`` are i32 vectors of equal length; padding lanes are
+    discarded on the way out.
+    """
+    d = age.shape[0]
+    nblocks = -(-d // block)
+    pad = nblocks * block - d
+    ap = jnp.pad(age, (0, pad))
+    mp = jnp.pad(mask, (0, pad))
+    out = pl.pallas_call(
+        _masked_reset_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nblocks * block,), age.dtype),
+        interpret=True,
+    )(ap, mp)
+    return out[:d]
+
+
+@jax.jit
+def age_update(age, idx):
+    """eq. (2) from an index list: mask = onehot(idx); masked_reset."""
+    mask = jnp.zeros_like(age).at[idx].set(1)
+    return masked_reset(age, mask)
+
+
+@jax.jit
+def scatter_add(dst, idx, vals, scale=1.0):
+    """dst + scale * scatter(idx, vals); duplicate indices accumulate."""
+    return dst.at[idx].add(scale * vals)

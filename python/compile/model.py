@@ -1,0 +1,167 @@
+"""Layer-2 graph builders: the functions that become PJRT artifacts.
+
+Each builder returns a pure, pytree-free function (flat tensors in, tuple
+out) so the HLO interface is trivially consumable from Rust. All state is
+explicit: ``(params[d], m[d], v[d], t[])`` is the client/server Adam
+state, ages are i32[d], labels i32[batch].
+
+Exported graphs (per model; shapes baked at lowering time from the
+experiment config — see ``compile.aot``):
+
+=================  =============================================================
+``train_step``     one local Adam step: (p, m, v, t, x, y) -> (p', m', v', t', loss)
+``local_round``    ``lax.scan`` of H train steps; also returns the last step's
+                   gradient top-r report — one PJRT call per global round
+``grad_topr``      gradient + top-r report at the current params
+``grad``           dense gradient (dense baseline + cross-layer tests)
+``eval_batch``     (loss_sum, correct_count) over a batch
+``apply_sparse``   server Adam on an aggregated sparse update
+                   (idx[K], val[K]) scattered into f32[d]
+``apply_dense``    server Adam on a dense update vector
+``ragek_select``   fused Algorithm 2: (grad, age) -> (sel_idx[k], sel_val[k], age')
+=================  =============================================================
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.sparse import age_update, scatter_add
+from compile.kernels.topk import topr_abs
+from compile.models.common import ModelDef, adam_step, eval_stats
+
+
+def build_train_step(model: ModelDef, lr: float):
+    def train_step(params, m, v, t, x, y):
+        loss, grad = jax.value_and_grad(model.loss)(params, x, y)
+        params, m, v, t = adam_step(params, m, v, t, grad, lr)
+        return params, m, v, t, loss
+
+    return train_step
+
+
+def build_local_round(model: ModelDef, lr: float, h: int, r: int):
+    """H local Adam steps + the top-r index report of the last gradient.
+
+    Matches Algorithm 1 lines 4-8: the gradient sparsified at a global
+    iteration is the one computed in the last local step (t % H == 0).
+
+    The step loop is **unrolled at trace time** rather than `lax.scan`:
+    the pinned XLA 0.5.1 CPU backend executes while-loop bodies without
+    cross-op fusion (measured 25x slower per step on the CNN —
+    EXPERIMENTS.md §Perf); unrolling keeps the whole round one fused
+    computation and one PJRT dispatch.
+    """
+
+    def local_round(params, m, v, t, xs, ys):
+        losses = []
+        grad = jnp.zeros_like(params)
+        for i in range(h):
+            loss, grad = jax.value_and_grad(model.loss)(params, xs[i], ys[i])
+            params, m, v, t = adam_step(params, m, v, t, grad, lr)
+            losses.append(loss)
+        _, top_idx = topr_abs(grad, r=r)
+        # report the SIGNED gradient values: the k-subset the PS requests
+        # is uploaded straight from this report (Algorithm 1 line 8)
+        mean_loss = jnp.mean(jnp.stack(losses))
+        return params, m, v, t, mean_loss, grad[top_idx], top_idx
+
+    return local_round
+
+
+def build_local_round_grad(model: ModelDef, lr: float, h: int):
+    """H local Adam steps returning the last *dense* gradient instead of
+    its in-graph top-r. Transferring the d-vector (10 MB at CIFAR scale)
+    and selecting on the Rust side (heap top-r, ~14 ms at d=2.5M) is ~200x
+    cheaper than the in-graph d log d argsort on the pinned XLA CPU
+    backend (~2.9 s) — EXPERIMENTS.md §Perf. Unrolled like
+    :func:`build_local_round`."""
+
+    def local_round_grad(params, m, v, t, xs, ys):
+        losses = []
+        grad = jnp.zeros_like(params)
+        for i in range(h):
+            loss, grad = jax.value_and_grad(model.loss)(params, xs[i], ys[i])
+            params, m, v, t = adam_step(params, m, v, t, grad, lr)
+            losses.append(loss)
+        return params, m, v, t, jnp.mean(jnp.stack(losses)), grad
+
+    return local_round_grad
+
+
+def build_local_round_fast(model: ModelDef, lr: float, h: int):
+    """H local Adam steps without the top-r report — the Delta-payload
+    hot path (the report is recomputed from the error-feedback memory on
+    the Rust side, so the d log d sort here would be wasted work).
+    Unrolled like :func:`build_local_round`."""
+
+    def local_round_fast(params, m, v, t, xs, ys):
+        losses = []
+        for i in range(h):
+            loss, grad = jax.value_and_grad(model.loss)(params, xs[i], ys[i])
+            params, m, v, t = adam_step(params, m, v, t, grad, lr)
+            losses.append(loss)
+        return params, m, v, t, jnp.mean(jnp.stack(losses))
+
+    return local_round_fast
+
+
+def build_grad_topr(model: ModelDef, r: int):
+    def grad_topr(params, x, y):
+        loss, grad = jax.value_and_grad(model.loss)(params, x, y)
+        _, top_idx = topr_abs(grad, r=r)
+        return loss, grad[top_idx], top_idx
+
+    return grad_topr
+
+
+def build_grad(model: ModelDef):
+    def grad_fn(params, x, y):
+        loss, grad = jax.value_and_grad(model.loss)(params, x, y)
+        return grad, loss
+
+    return grad_fn
+
+
+def build_eval_batch(model: ModelDef):
+    def eval_batch(params, x, y):
+        logits = model.fwd(params, x)
+        return eval_stats(logits, y)
+
+    return eval_batch
+
+
+def build_apply_sparse(lr: float):
+    """Server optimizer: scatter the aggregated (idx, val) pairs into a
+    dense update and take an Adam step on it. Padding entries are
+    (idx=0, val=0) no-ops."""
+
+    def apply_sparse(params, m, v, t, idx, vals):
+        update = scatter_add(jnp.zeros_like(params), idx, vals)
+        return adam_step(params, m, v, t, update, lr)
+
+    return apply_sparse
+
+
+def build_apply_dense(lr: float):
+    def apply_dense(params, m, v, t, update):
+        return adam_step(params, m, v, t, update, lr)
+
+    return apply_dense
+
+
+def build_ragek_select(r: int, k: int):
+    """Fused Algorithm 2 (client-side mode + cross-layer oracle):
+
+    top-r by |g|, then the k oldest of those, then the eq. (2) age sweep.
+    """
+
+    def ragek_select(grad, age):
+        _, top_idx = topr_abs(grad, r=r)
+        # stable argsort == lax.top_k tie contract; avoids the TopK HLO op
+        # the pinned xla_extension text parser cannot read (see topr_abs)
+        rank = jnp.argsort(-age[top_idx].astype(jnp.float32), stable=True)[:k]
+        sel = top_idx[rank]
+        new_age = age_update(age, sel)
+        return sel, grad[sel], new_age
+
+    return ragek_select

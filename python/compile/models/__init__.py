@@ -1,0 +1,34 @@
+"""Layer-2 model zoo (Table I of the paper).
+
+Models are defined over a **flat f32[d] parameter vector** — the Rust
+coordinator treats every model as an opaque (d, batch, input_shape) triple
+and the graphs unflatten internally. ``get_model`` is the registry used by
+``compile.aot`` and the tests.
+"""
+
+from compile.models.common import ModelDef, flatten_params, unflatten_params
+from compile.models.mlp import mnist_mlp
+from compile.models.cnn import cifar_cnn
+
+_REGISTRY = {
+    "mnist": mnist_mlp,
+    "cifar": cifar_cnn,
+}
+
+
+def get_model(name: str) -> ModelDef:
+    """Look up a model by registry name ('mnist' | 'cifar')."""
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(f"unknown model {name!r}; have {sorted(_REGISTRY)}")
+
+
+__all__ = [
+    "ModelDef",
+    "get_model",
+    "flatten_params",
+    "unflatten_params",
+    "mnist_mlp",
+    "cifar_cnn",
+]

@@ -1,0 +1,113 @@
+"""Network 2 of Table I: the 2,515,338-parameter CIFAR10 CNN.
+
+Reconstruction notes (DESIGN.md §5): Table I lists
+``conv(3,64,3)+BN, maxpool(2,2), conv(64,128,3)+BN, conv(128,256,3)+BN,
+conv(256,512,3)+BN, FC(2048,128), FC(128,256), FC(256,512), FC(512,1024),
+FC(1024,10)``. The stated total (2,515,338) matches this layer list with a
+bias on every conv/FC and 2 learned parameters per BN channel — the test
+suite asserts the exact count. FC(2048, .) requires the conv stack to end
+at 2x2x512 spatially, which pins the reconstruction to SAME-padded convs
+with a 2x2 maxpool after *each* of the four conv+BN groups
+(32 -> 16 -> 8 -> 4 -> 2).
+
+BN uses batch statistics (the learned scale/shift are the only BN
+parameters in the Table I count, so running stats are not part of the
+model state). FC layers run through the Pallas ``dense`` kernel; the convs
+stay on XLA's native conv (already MXU-mapped on TPU — see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import dense
+from compile.models.common import ModelDef, unflatten_params
+
+_SPECS = (
+    ("conv1.w", (3, 3, 3, 64)),
+    ("conv1.b", (64,)),
+    ("bn1.scale", (64,)),
+    ("bn1.shift", (64,)),
+    ("conv2.w", (3, 3, 64, 128)),
+    ("conv2.b", (128,)),
+    ("bn2.scale", (128,)),
+    ("bn2.shift", (128,)),
+    ("conv3.w", (3, 3, 128, 256)),
+    ("conv3.b", (256,)),
+    ("bn3.scale", (256,)),
+    ("bn3.shift", (256,)),
+    ("conv4.w", (3, 3, 256, 512)),
+    ("conv4.b", (512,)),
+    ("bn4.scale", (512,)),
+    ("bn4.shift", (512,)),
+    ("fc1.w", (2048, 128)),
+    ("fc1.b", (128,)),
+    ("fc2.w", (128, 256)),
+    ("fc2.b", (256,)),
+    ("fc3.w", (256, 512)),
+    ("fc3.b", (512,)),
+    ("fc4.w", (512, 1024)),
+    ("fc4.b", (1024,)),
+    ("fc5.w", (1024, 10)),
+    ("fc5.b", (10,)),
+)
+
+_BN_EPS = 1e-5
+
+
+def _conv(x, w, b):
+    """SAME-padded 3x3 conv, NHWC / HWIO."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _bn(x, scale, shift):
+    """Batch-norm over (N, H, W) with batch statistics."""
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return scale * (x - mean) * jax.lax.rsqrt(var + _BN_EPS) + shift
+
+
+def _pool(x):
+    """2x2 max pool, stride 2."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def _fwd(flat, x):
+    p = unflatten_params(flat, _SPECS)
+    (c1w, c1b, s1, h1, c2w, c2b, s2, h2, c3w, c3b, s3, h3,
+     c4w, c4b, s4, h4, f1w, f1b, f2w, f2b, f3w, f3b, f4w, f4b, f5w, f5b) = p
+    x = x.reshape(x.shape[0], 32, 32, 3)
+    x = _pool(jnp.maximum(_bn(_conv(x, c1w, c1b), s1, h1), 0.0))
+    x = _pool(jnp.maximum(_bn(_conv(x, c2w, c2b), s2, h2), 0.0))
+    x = _pool(jnp.maximum(_bn(_conv(x, c3w, c3b), s3, h3), 0.0))
+    x = _pool(jnp.maximum(_bn(_conv(x, c4w, c4b), s4, h4), 0.0))
+    x = x.reshape(x.shape[0], 2 * 2 * 512)
+    x = jnp.maximum(dense(x, f1w, f1b), 0.0)
+    x = jnp.maximum(dense(x, f2w, f2b), 0.0)
+    x = jnp.maximum(dense(x, f3w, f3b), 0.0)
+    x = jnp.maximum(dense(x, f4w, f4b), 0.0)
+    return dense(x, f5w, f5b)
+
+
+def cifar_cnn() -> ModelDef:
+    return ModelDef(
+        name="cifar",
+        param_specs=_SPECS,
+        input_shape=(3072,),  # flat 32*32*3; reshaped inside fwd
+        num_classes=10,
+        fwd=_fwd,
+    )

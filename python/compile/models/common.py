@@ -1,0 +1,105 @@
+"""Shared model machinery: flat-parameter handling, losses, Adam.
+
+The Adam constants here (b1=0.9, b2=0.999, eps=1e-8, lr=1e-4 per the
+paper's §III-B) are mirrored exactly by ``rust/src/optimizer/adam.rs``;
+the integration suite cross-checks a train step between the two stacks.
+"""
+
+import dataclasses
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """Everything the AOT exporter needs to know about a model."""
+
+    name: str
+    param_specs: Tuple[Tuple[str, Tuple[int, ...]], ...]
+    input_shape: Tuple[int, ...]  # per-sample, e.g. (784,) or (32, 32, 3)
+    num_classes: int
+    # fwd(flat_params, x[batch, *input_shape]) -> logits[batch, num_classes]
+    fwd: Callable
+
+    @property
+    def d(self) -> int:
+        return sum(int(np.prod(s)) for _, s in self.param_specs)
+
+    def unflatten(self, flat):
+        return unflatten_params(flat, self.param_specs)
+
+    def loss(self, flat, x, y):
+        """Mean softmax cross-entropy."""
+        logits = self.fwd(flat, x)
+        return xent_mean(logits, y)
+
+    def init(self, seed: int) -> np.ndarray:
+        """He-style init, deterministic in ``seed``; returns flat f32[d]."""
+        rng = np.random.default_rng(seed)
+        parts = []
+        for name, shape in self.param_specs:
+            parts.append(_init_one(rng, name, shape))
+        return np.concatenate([p.reshape(-1) for p in parts]).astype(np.float32)
+
+
+def _init_one(rng, name: str, shape: Sequence[int]) -> np.ndarray:
+    if name.endswith(".scale"):  # batch-norm scale
+        return np.ones(shape, np.float32)
+    if name.endswith((".b", ".shift")):  # biases / batch-norm shift
+        return np.zeros(shape, np.float32)
+    # He-normal over fan-in: conv HWIO -> prod(shape[:-1]); fc (in, out).
+    fan_in = int(np.prod(shape[:-1]))
+    std = math.sqrt(2.0 / max(1, fan_in))
+    return (rng.standard_normal(shape) * std).astype(np.float32)
+
+
+def flatten_params(parts: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate([p.reshape(-1) for p in parts])
+
+
+def unflatten_params(flat, specs) -> List[jnp.ndarray]:
+    out, off = [], 0
+    for _, shape in specs:
+        n = int(np.prod(shape))
+        out.append(flat[off : off + n].reshape(shape))
+        off += n
+    assert off == flat.shape[0], f"flat vector length {flat.shape[0]} != {off}"
+    return out
+
+
+def xent_mean(logits, y):
+    """Mean softmax cross-entropy; y is i32[batch]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return -jnp.mean(picked)
+
+
+def eval_stats(logits, y):
+    """(summed loss, correct count) over a batch — Rust divides."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    loss_sum = -jnp.sum(picked)
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1).astype(jnp.int32) == y.astype(jnp.int32))
+        .astype(jnp.float32)
+    )
+    return loss_sum, correct
+
+
+def adam_step(params, m, v, t, grad, lr):
+    """One bias-corrected Adam step; t is an f32 scalar step counter."""
+    t1 = t + 1.0
+    m1 = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+    v1 = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    mhat = m1 / (1.0 - ADAM_B1**t1)
+    vhat = v1 / (1.0 - ADAM_B2**t1)
+    new = params - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return new, m1, v1, t1

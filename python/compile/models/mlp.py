@@ -1,0 +1,36 @@
+"""Network 1 of Table I: FC(784,50) -> ReLU -> FC(50,10) -> softmax.
+
+39,760 parameters exactly (784*50 + 50 + 50*10 + 10); the test suite
+asserts the count. Dense layers run through the Pallas matmul kernel
+(fwd and bwd, via the custom VJP in ``kernels.matmul``).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.matmul import dense
+from compile.models.common import ModelDef
+
+_SPECS = (
+    ("fc1.w", (784, 50)),
+    ("fc1.b", (50,)),
+    ("fc2.w", (50, 10)),
+    ("fc2.b", (10,)),
+)
+
+
+def _fwd(flat, x):
+    from compile.models.common import unflatten_params
+
+    w1, b1, w2, b2 = unflatten_params(flat, _SPECS)
+    h = jnp.maximum(dense(x, w1, b1), 0.0)
+    return dense(h, w2, b2)
+
+
+def mnist_mlp() -> ModelDef:
+    return ModelDef(
+        name="mnist",
+        param_specs=_SPECS,
+        input_shape=(784,),
+        num_classes=10,
+        fwd=_fwd,
+    )

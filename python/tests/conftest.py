@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Run from python/ (`cd python && pytest tests/`) or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

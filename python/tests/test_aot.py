@@ -1,0 +1,93 @@
+"""AOT exporter smoke tests: HLO text well-formedness + manifest contract.
+
+Runs against a freshly exported *tiny* variant (small batch) so the test
+doesn't depend on `make artifacts` having run, plus validates the real
+manifest when artifacts/ already exists.
+"""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as graphs
+from compile.aot import PRESETS, export_fn, to_hlo_text
+from compile.models import get_model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrippable():
+    fn = graphs.build_ragek_select(8, 3)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((100,), jnp.float32),
+        jax.ShapeDtypeStruct((100,), jnp.int32),
+    )
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True: the root computation yields a tuple
+    assert "tuple" in text
+
+
+def test_export_fn_writes_file_and_iface():
+    mdl = get_model("mnist")
+    fn = graphs.build_eval_batch(mdl)
+    with tempfile.TemporaryDirectory() as td:
+        meta = export_fn(
+            fn,
+            (
+                jax.ShapeDtypeStruct((mdl.d,), jnp.float32),
+                jax.ShapeDtypeStruct((16, 784), jnp.float32),
+                jax.ShapeDtypeStruct((16,), jnp.int32),
+            ),
+            "tiny_eval",
+            td,
+        )
+        assert os.path.exists(os.path.join(td, meta["file"]))
+        assert meta["inputs"] == [["f32", [39760]], ["f32", [16, 784]], ["i32", [16]]]
+        assert meta["outputs"] == [["f32", []], ["f32", []]]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_complete_and_files_exist():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    expected_arts = {
+        "train_step", "local_round", "local_round_fast", "local_round_grad",
+        "grad_topr", "grad", "eval_batch", "apply_sparse", "apply_dense",
+        "ragek_select",
+    }
+    for name, preset in PRESETS.items():
+        m = manifest["models"][name]
+        assert set(m["artifacts"]) == expected_arts
+        assert m["r"] == preset["r"] and m["k"] == preset["k"]
+        assert m["k_total"] == preset["n_clients"] * preset["k"]
+        for art in m["artifacts"].values():
+            path = os.path.join(ART, art["file"])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+        init = np.fromfile(os.path.join(ART, m["init_params"]), np.float32)
+        assert init.shape[0] == m["d"]
+        assert np.isfinite(init).all()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_d_matches_table1():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["models"]["mnist"]["d"] == 39760
+    assert manifest["models"]["cifar"]["d"] == 2515338

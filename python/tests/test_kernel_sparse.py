@@ -1,0 +1,81 @@
+"""Sparse/age kernels vs oracles (eq. 2 semantics live here)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels.sparse import age_update, masked_reset, scatter_add
+from compile.kernels import ref
+
+
+@given(
+    d=st.integers(1, 40000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_reset_matches_ref(d, seed):
+    rng = np.random.default_rng(seed)
+    age = jnp.asarray(rng.integers(0, 100, size=d), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, size=d), jnp.int32)
+    got = masked_reset(age, mask)
+    want = ref.masked_reset_ref(age, mask)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    d=st.integers(4, 10000),
+    k=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_age_update_matches_ref(d, k, seed):
+    k = min(k, d)
+    rng = np.random.default_rng(seed)
+    age = jnp.asarray(rng.integers(0, 50, size=d), jnp.int32)
+    idx = jnp.asarray(rng.choice(d, size=k, replace=False), jnp.int32)
+    got = age_update(age, idx)
+    want = ref.age_update_ref(age, idx)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_age_update_invariant_partition():
+    """eq. (2): every coordinate is either 0 (selected) or old+1."""
+    rng = np.random.default_rng(7)
+    age = jnp.asarray(rng.integers(0, 9, size=1000), jnp.int32)
+    idx = jnp.asarray([0, 13, 999], jnp.int32)
+    new = np.asarray(age_update(age, idx))
+    old = np.asarray(age)
+    sel = set([0, 13, 999])
+    for j in range(1000):
+        if j in sel:
+            assert new[j] == 0
+        else:
+            assert new[j] == old[j] + 1
+
+
+@given(
+    d=st.integers(4, 10000),
+    k=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scatter_add_matches_ref(d, k, seed):
+    rng = np.random.default_rng(seed)
+    dst = jnp.asarray(rng.normal(size=d), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, d, size=k), jnp.int32)  # dups allowed
+    vals = jnp.asarray(rng.normal(size=k), jnp.float32)
+    got = scatter_add(dst, idx, vals)
+    want = ref.scatter_add_ref(dst, idx, vals)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_scatter_add_duplicates_accumulate():
+    dst = jnp.zeros(4, jnp.float32)
+    idx = jnp.asarray([1, 1, 1], jnp.int32)
+    vals = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+    np.testing.assert_allclose(scatter_add(dst, idx, vals), [0, 6, 0, 0])
+
+
+def test_scatter_add_zero_padding_is_noop():
+    """The aggregation path pads with (idx=0, val=0) entries."""
+    dst = jnp.asarray([5.0, 6.0], jnp.float32)
+    idx = jnp.zeros(8, jnp.int32)
+    vals = jnp.zeros(8, jnp.float32)
+    np.testing.assert_array_equal(scatter_add(dst, idx, vals), dst)

@@ -1,0 +1,102 @@
+"""Top-r kernels vs oracles: exact path, candidate stage, approx path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels.topk import approx_topr_abs, block_topm, topr_abs
+from compile.kernels import ref
+
+
+@given(
+    d=st.integers(10, 5000),
+    r=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_topr_abs_exact(d, r, seed):
+    r = min(r, d)
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    v, i = topr_abs(g, r=r)
+    rv, ri = ref.topr_abs_ref(g, r)
+    np.testing.assert_array_equal(i, ri)
+    np.testing.assert_allclose(v, rv)
+
+
+def test_topr_abs_paper_dims():
+    """The two (d, r) pairs the paper actually runs."""
+    rng = np.random.default_rng(0)
+    for d, r in [(39760, 75), (2515338, 2500)]:
+        g = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        v, i = topr_abs(g, r=r)
+        rv, ri = ref.topr_abs_ref(g, r)
+        np.testing.assert_array_equal(i, ri)
+        np.testing.assert_allclose(v, rv)
+
+
+def test_topr_abs_ties_prefer_lower_index():
+    g = jnp.zeros(100, jnp.float32).at[jnp.array([7, 3, 50])].set(2.0)
+    _, i = topr_abs(g, r=3)
+    np.testing.assert_array_equal(np.sort(np.asarray(i)), [3, 7, 50])
+    # remaining (all-zero ties) would fill from index 0 upward
+    _, i5 = topr_abs(g, r=5)
+    assert set(np.asarray(i5[:3])) == {3, 7, 50}
+    np.testing.assert_array_equal(np.asarray(i5[3:]), [0, 1])
+
+
+@given(
+    d=st.integers(1, 3000),
+    m=st.integers(1, 8),
+    block=st.sampled_from([64, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_topm_matches_ref(d, m, block, seed):
+    m = min(m, block)
+    rng = np.random.default_rng(seed)
+    # distinct magnitudes so ordering is unambiguous
+    g = jnp.asarray(rng.permutation(np.arange(1, d + 1, dtype=np.float32)))
+    sign = jnp.asarray(rng.choice([-1.0, 1.0], size=d).astype(np.float32))
+    g = g * sign
+    v, i = block_topm(g, m=m, block=block)
+    rv, ri = ref.block_topm_ref(g, m, block)
+    np.testing.assert_array_equal(i, ri)
+    np.testing.assert_allclose(v, rv)
+
+
+def test_approx_topr_exact_when_spread():
+    """When each block holds <= m of the top-r, approx == exact."""
+    d, block, m, r = 4096, 512, 8, 16
+    g = np.zeros(d, np.float32)
+    # two hits per block for the first 8 blocks
+    for b in range(8):
+        g[b * block + 1] = 100.0 + b
+        g[b * block + 99] = 50.0 + b
+    g = jnp.asarray(g)
+    av, ai = approx_topr_abs(g, r=r, m=m, block=block)
+    rv, ri = ref.topr_abs_ref(g, r)
+    np.testing.assert_array_equal(ai, ri)
+    np.testing.assert_allclose(av, rv)
+
+
+def test_approx_topr_misses_when_concentrated():
+    """Documents the known failure mode: > m of the top-r in one block."""
+    d, block, m = 2048, 512, 4
+    g = np.zeros(d, np.float32)
+    g[:8] = np.arange(8, 0, -1)  # 8 biggest all in block 0, m = 4
+    av, ai = approx_topr_abs(jnp.asarray(g), r=8, m=m, block=block)
+    hit = len(set(np.asarray(ai).tolist()) & set(range(8)))
+    assert hit == 4  # only the block's top-m survive
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_approx_topr_recall_random_gradients(seed):
+    """On i.i.d. gradients (the realistic case) recall should be high."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(8192,)), jnp.float32)
+    r = 32
+    _, ai = approx_topr_abs(g, r=r, m=8, block=512)
+    _, ri = ref.topr_abs_ref(g, r)
+    recall = len(set(np.asarray(ai).tolist()) & set(np.asarray(ri).tolist())) / r
+    assert recall >= 0.9

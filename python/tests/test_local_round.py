@@ -1,0 +1,88 @@
+"""local_round graph semantics: scan of H train steps == H sequential
+train_step calls, and the top-r report refers to the LAST step's gradient
+(Algorithm 1 lines 4-8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as graphs
+from compile.models import get_model
+from compile.kernels.ref import topr_abs_ref
+
+LR = 1e-4
+
+
+def _data(h, b, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(h, b, 784)), jnp.float32)
+    ys = jnp.asarray(rng.integers(0, 10, size=(h, b)), jnp.int32)
+    return xs, ys
+
+
+def test_local_round_equals_sequential_steps():
+    mdl = get_model("mnist")
+    h, b, r = 3, 8, 20
+    xs, ys = _data(h, b)
+    p = jnp.asarray(mdl.init(0))
+    z = jnp.zeros_like(p)
+    t = jnp.asarray(0.0)
+
+    round_fn = jax.jit(graphs.build_local_round(mdl, LR, h, r))
+    rp, rm, rv, rt, mean_loss, tv, ti = round_fn(p, z, z, t, xs, ys)
+
+    step_fn = jax.jit(graphs.build_train_step(mdl, LR))
+    sp, sm, sv, st = p, z, z, t
+    losses = []
+    for i in range(h):
+        sp, sm, sv, st, loss = step_fn(sp, sm, sv, st, xs[i], ys[i])
+        losses.append(float(loss))
+
+    np.testing.assert_allclose(rp, sp, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(rm, sm, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(rv, sv, rtol=1e-5, atol=1e-7)
+    assert float(rt) == float(st) == h
+    np.testing.assert_allclose(float(mean_loss), np.mean(losses), rtol=1e-5)
+
+
+def test_local_round_topr_is_last_step_gradient():
+    mdl = get_model("mnist")
+    h, b, r = 2, 8, 25
+    xs, ys = _data(h, b, seed=3)
+    p = jnp.asarray(mdl.init(1))
+    z = jnp.zeros_like(p)
+    t = jnp.asarray(0.0)
+
+    round_fn = jax.jit(graphs.build_local_round(mdl, LR, h, r))
+    _, _, _, _, _, tv, ti = round_fn(p, z, z, t, xs, ys)
+
+    # replay: params right before the last step
+    step_fn = jax.jit(graphs.build_train_step(mdl, LR))
+    sp, sm, sv, st = p, z, z, t
+    for i in range(h - 1):
+        sp, sm, sv, st, _ = step_fn(sp, sm, sv, st, xs[i], ys[i])
+    g = jax.grad(mdl.loss)(sp, xs[h - 1], ys[h - 1])
+    _, want_i = topr_abs_ref(g, r)
+    np.testing.assert_array_equal(ti, want_i)
+    # values are the SIGNED gradient entries at the reported indices
+    np.testing.assert_allclose(tv, g[want_i], rtol=1e-5, atol=1e-7)
+
+
+def test_apply_sparse_equals_apply_dense_on_scatter():
+    mdl = get_model("mnist")
+    d = mdl.d
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(mdl.init(2))
+    z = jnp.zeros_like(p)
+    t = jnp.asarray(0.0)
+    idx = jnp.asarray(rng.choice(d, size=40, replace=False), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=40), jnp.float32)
+
+    sparse_fn = jax.jit(graphs.build_apply_sparse(LR))
+    dense_fn = jax.jit(graphs.build_apply_dense(LR))
+    update = jnp.zeros((d,), jnp.float32).at[idx].add(vals)
+
+    sp = sparse_fn(p, z, z, t, idx, vals)
+    dp = dense_fn(p, z, z, t, update)
+    for a, b in zip(sp, dp):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)

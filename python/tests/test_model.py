@@ -1,0 +1,116 @@
+"""Model-zoo tests: Table I parameter counts, shapes, learning sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import get_model
+from compile.models.common import adam_step, eval_stats, xent_mean
+
+
+def test_param_counts_match_table1():
+    """Table I: 39,760 (MNIST MLP) and 2,515,338 (CIFAR10 CNN), exactly."""
+    assert get_model("mnist").d == 39760
+    assert get_model("cifar").d == 2515338
+
+
+def test_unknown_model_raises():
+    with pytest.raises(KeyError):
+        get_model("imagenet")
+
+
+@pytest.mark.parametrize("name,idim", [("mnist", 784), ("cifar", 3072)])
+def test_fwd_shapes(name, idim):
+    mdl = get_model(name)
+    p = jnp.asarray(mdl.init(0))
+    x = jnp.zeros((5, idim), jnp.float32)
+    logits = mdl.fwd(p, x)
+    assert logits.shape == (5, 10)
+    assert jnp.all(jnp.isfinite(logits))
+
+
+def test_init_deterministic():
+    m = get_model("mnist")
+    np.testing.assert_array_equal(m.init(42), m.init(42))
+    assert not np.array_equal(m.init(42), m.init(43))
+
+
+def test_mlp_gradient_matches_finite_difference():
+    mdl = get_model("mnist")
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(mdl.init(1))
+    x = jnp.asarray(rng.normal(size=(4, 784)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, size=4), jnp.int32)
+    g = jax.grad(mdl.loss)(p, x, y)
+    eps = 1e-2
+    for j in [0, 100, 39000, 39759]:
+        e = jnp.zeros_like(p).at[j].set(eps)
+        fd = (mdl.loss(p + e, x, y) - mdl.loss(p - e, x, y)) / (2 * eps)
+        np.testing.assert_allclose(g[j], fd, rtol=0.05, atol=1e-3)
+
+
+def test_mlp_learns_toy_problem():
+    """A few hundred Adam steps must fit a 2-class toy problem."""
+    mdl = get_model("mnist")
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(mdl.init(0))
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    t = jnp.asarray(0.0)
+    x = np.zeros((64, 784), np.float32)
+    y = rng.integers(0, 2, size=64).astype(np.int32)
+    x[np.arange(64), y * 300] = 5.0  # class signal at two pixels
+    x = jnp.asarray(x + rng.normal(size=x.shape) * 0.05)
+    y = jnp.asarray(y)
+
+    step = jax.jit(
+        lambda p, m, v, t: adam_step(
+            p, m, v, t, jax.grad(mdl.loss)(p, x, y), 1e-3
+        )
+    )
+    loss0 = float(mdl.loss(p, x, y))
+    for _ in range(300):
+        p, m, v, t = step(p, m, v, t)
+    loss1 = float(mdl.loss(p, x, y))
+    assert loss1 < loss0 * 0.2, (loss0, loss1)
+    _, correct = eval_stats(mdl.fwd(p, x), y)
+    assert float(correct) >= 60
+
+
+def test_xent_mean_uniform_logits():
+    logits = jnp.zeros((8, 10))
+    y = jnp.arange(8, dtype=jnp.int32) % 10
+    np.testing.assert_allclose(xent_mean(logits, y), np.log(10.0), rtol=1e-6)
+
+
+def test_adam_step_closed_form_first_step():
+    """After one step from zero state, update = -lr * g/(|g| + eps*corr)."""
+    p = jnp.asarray([1.0, -2.0, 0.5])
+    g = jnp.asarray([0.3, -0.7, 0.0])
+    m = jnp.zeros(3)
+    v = jnp.zeros(3)
+    lr = 1e-2
+    p1, m1, v1, t1 = adam_step(p, m, v, jnp.asarray(0.0), g, lr)
+    # bias-corrected first step moves by exactly lr * sign(g) (eps-small)
+    expect = p - lr * np.sign(np.asarray(g))
+    np.testing.assert_allclose(p1[:2], expect[:2], atol=1e-5)
+    np.testing.assert_allclose(p1[2], p[2])
+    assert float(t1) == 1.0
+
+
+def test_cnn_gradient_nonzero_everywhere():
+    """Every layer of the CNN must receive gradient signal."""
+    mdl = get_model("cifar")
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(mdl.init(0))
+    x = jnp.asarray(rng.normal(size=(2, 3072)), jnp.float32)
+    y = jnp.asarray([1, 7], jnp.int32)
+    g = np.asarray(jax.grad(mdl.loss)(p, x, y))
+    off = 0
+    for name, shape in mdl.param_specs:
+        n = int(np.prod(shape))
+        seg = g[off : off + n]
+        assert np.isfinite(seg).all(), name
+        assert np.abs(seg).max() > 0, f"dead gradient in {name}"
+        off += n

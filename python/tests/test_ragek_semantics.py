@@ -1,0 +1,106 @@
+"""Algorithm 2 (rAge-k) semantics: fused graph vs numpy reference.
+
+This is the contract the Rust coordinator mirrors; the tie-breaking rules
+asserted here ("value desc, index asc" at both top-r and age-rank stages)
+are what make the cross-layer integration tests exact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.model import build_ragek_select
+from compile.kernels.ref import ragek_select_ref
+
+
+def numpy_ragek(g, age, r, k):
+    """Straight-from-the-paper numpy implementation of Algorithm 2."""
+    order = np.lexsort((np.arange(len(g)), -np.abs(g)))  # |g| desc, idx asc
+    top_ind = order[:r]
+    arank = np.lexsort((np.arange(r), -age[top_ind].astype(np.float64)))
+    sel = top_ind[arank[:k]]
+    new_age = (age + 1).copy()
+    new_age[sel] = 0
+    return sel.astype(np.int32), g[sel], new_age
+
+
+@given(
+    d=st.integers(20, 5000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_graph_matches_numpy(d, seed):
+    rng = np.random.default_rng(seed)
+    r = min(16, d)
+    k = max(1, r // 3)
+    # distinct |g| so top-r is unambiguous across implementations
+    mags = rng.permutation(np.arange(1, d + 1, dtype=np.float32))
+    g = mags * rng.choice([-1.0, 1.0], size=d).astype(np.float32)
+    age = rng.integers(0, 30, size=d).astype(np.int32)
+
+    fn = build_ragek_select(r, k)
+    sel, vals, new_age = fn(jnp.asarray(g), jnp.asarray(age))
+    nsel, nvals, nage = numpy_ragek(g, age, r, k)
+
+    assert sorted(np.asarray(sel).tolist()) == sorted(nsel.tolist())
+    np.testing.assert_array_equal(np.asarray(new_age), nage)
+    np.testing.assert_allclose(np.sort(np.asarray(vals)), np.sort(nvals))
+
+
+def test_ref_and_graph_agree():
+    rng = np.random.default_rng(1)
+    d, r, k = 500, 40, 7
+    g = jnp.asarray(rng.normal(size=d), jnp.float32)
+    age = jnp.asarray(rng.integers(0, 20, size=d), jnp.int32)
+    fn = build_ragek_select(r, k)
+    s1, v1, a1 = fn(g, age)
+    s2, v2, a2 = ragek_select_ref(g, age, r, k)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_allclose(v1, v2)
+    np.testing.assert_array_equal(a1, a2)
+
+
+def test_selected_are_oldest_of_topr():
+    """Property: selected indices maximize age among the top-r set."""
+    rng = np.random.default_rng(5)
+    d, r, k = 1000, 50, 10
+    g = rng.normal(size=d).astype(np.float32)
+    age = rng.integers(0, 100, size=d).astype(np.int32)
+    sel, _, _ = numpy_ragek(g, age, r, k)
+    order = np.lexsort((np.arange(d), -np.abs(g)))
+    top = order[:r]
+    unsel = [j for j in top if j not in set(sel.tolist())]
+    assert min(age[sel]) >= max(age[j] for j in unsel) - 0  # allow ties
+    # strictly: every unselected top-r index has age <= every selected one
+    assert max(age[unsel]) <= max(age[sel])
+
+
+def test_equal_ages_reduce_to_topk():
+    """With a uniform age vector, rAge-k degenerates to top-k (the paper's
+    r = k note in §II-A)."""
+    rng = np.random.default_rng(2)
+    d, r, k = 300, 30, 8
+    mags = rng.permutation(np.arange(1, d + 1, dtype=np.float32))
+    g = mags * rng.choice([-1.0, 1.0], size=d)
+    g = g.astype(np.float32)
+    age = np.zeros(d, np.int32)
+    sel, _, _ = numpy_ragek(g, age, r, k)
+    order = np.lexsort((np.arange(d), -np.abs(g)))
+    np.testing.assert_array_equal(np.sort(sel), np.sort(order[:k].astype(np.int32)))
+
+
+def test_rotation_under_repeated_selection():
+    """Ages force exploration: with a static gradient, repeated rAge-k
+    rounds rotate through the whole top-r set instead of hammering the
+    top-k (the bias the paper attributes to plain top-k)."""
+    rng = np.random.default_rng(3)
+    d, r, k = 200, 20, 5
+    mags = rng.permutation(np.arange(1, d + 1, dtype=np.float32))
+    g = (mags * rng.choice([-1.0, 1.0], size=d)).astype(np.float32)
+    age = np.zeros(d, np.int32)
+    seen = set()
+    for _ in range(4):  # r/k = 4 rounds covers the top-r exactly once
+        sel, _, age = numpy_ragek(g, age, r, k)
+        assert seen.isdisjoint(sel.tolist())
+        seen.update(sel.tolist())
+    order = np.lexsort((np.arange(d), -np.abs(g)))
+    assert seen == set(order[:r].tolist())

@@ -1,0 +1,47 @@
+//! eq. (2) age-sweep cost at the paper's two model sizes, plus merge and
+//! frequency bookkeeping — the d-dimensional PS state the paper adds
+//! over plain rTop-k.
+
+use ragek::age::{AgeVector, FrequencyVector};
+use ragek::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("age");
+
+    for (tag, d, k) in [
+        ("mnist d=39760  k=10 ", 39760usize, 10usize),
+        ("cifar d=2.5M   k=100", 2_515_338, 100),
+    ] {
+        let sel: Vec<u32> = (0..k as u32).map(|i| i * 31 % d as u32).collect();
+        let mut age = AgeVector::new(d);
+        b.run_units(&format!("age.update (eq.2)   {tag}"), Some(d as f64), || {
+            age.update(&sel);
+        });
+
+        let other = age.clone();
+        let mut target = age.clone();
+        b.run_units(&format!("age.merge_min       {tag}"), Some(d as f64), || {
+            target.merge_min(&other);
+        });
+
+        b.run_units(&format!("age.gather r=2500   {tag}"), Some(2500.0), || {
+            let idx: Vec<u32> = (0..2500u32).map(|i| i * 97 % d as u32).collect();
+            std::hint::black_box(age.gather(&idx));
+        });
+    }
+
+    // frequency vectors stay sparse: dot cost depends on rounds recorded
+    for rounds in [10usize, 100, 1000] {
+        let mut f1 = FrequencyVector::new();
+        let mut f2 = FrequencyVector::new();
+        for rd in 0..rounds {
+            let idx: Vec<u32> = (0..10u32).map(|i| (i + rd as u32 * 7) % 39760).collect();
+            f1.record(&idx);
+            f2.record(&idx);
+        }
+        b.run(&format!("freq.dot after {rounds:>4} rounds (nnz={})", f1.nnz()), || {
+            std::hint::black_box(f1.dot(&f2));
+        });
+    }
+    b.save();
+}

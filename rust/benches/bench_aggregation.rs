@@ -1,0 +1,48 @@
+//! Aggregation-path cost: g~ = sum of N k-sparse updates, both
+//! materializations, at the paper's two scales.
+
+use ragek::bench::Bench;
+use ragek::coordinator::aggregator::Aggregate;
+use ragek::sparse::SparseVec;
+use ragek::util::rng::Rng;
+
+fn updates(n: usize, d: usize, k: usize, seed: u64) -> Vec<SparseVec> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let idx: Vec<u32> = rng.choose_k(d, k).into_iter().map(|x| x as u32).collect();
+            let mut val = vec![0.0f32; k];
+            rng.fill_gaussian(&mut val, 1.0);
+            SparseVec::new(idx, val)
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("aggregation");
+    for (tag, d, k, n) in [
+        ("mnist d=39760 k=10  n=10", 39760usize, 10usize, 10usize),
+        ("cifar d=2.5M  k=100 n=6 ", 2_515_338, 100, 6),
+        ("scale d=2.5M  k=100 n=64", 2_515_338, 100, 64),
+    ] {
+        let ups = updates(n, d, k, 3);
+        b.run(&format!("aggregate.push x{n:<3} {tag}"), || {
+            let mut agg = Aggregate::new();
+            for u in &ups {
+                agg.push(u.clone());
+            }
+            std::hint::black_box(agg.total_entries());
+        });
+        let mut agg = Aggregate::new();
+        for u in &ups {
+            agg.push(u.clone());
+        }
+        b.run_units(&format!("to_dense          {tag}"), Some(d as f64), || {
+            std::hint::black_box(agg.to_dense(d, 1.0));
+        });
+        b.run_units(&format!("to_padded_pairs   {tag}"), Some((n * k) as f64), || {
+            std::hint::black_box(agg.to_padded_pairs(n * k, 1.0));
+        });
+    }
+    b.save();
+}

@@ -1,0 +1,45 @@
+//! Clustering-pipeline cost: eq. (3) similarity matrix + DBSCAN over
+//! growing client populations (the PS pays this every M rounds).
+
+use ragek::age::FrequencyVector;
+use ragek::bench::Bench;
+use ragek::clustering::{connectivity_matrix, dbscan, distance_matrix, DbscanParams};
+use ragek::util::rng::Rng;
+
+fn freqs(n_clients: usize, rounds: usize, seed: u64) -> Vec<FrequencyVector> {
+    let mut rng = Rng::new(seed);
+    (0..n_clients)
+        .map(|i| {
+            let mut f = FrequencyVector::new();
+            // pair-structured supports: clients 2p, 2p+1 share a band
+            let base = (i / 2) * 500;
+            for _ in 0..rounds {
+                let idx: Vec<u32> =
+                    (0..10).map(|_| (base + rng.below(500)) as u32).collect();
+                f.record(&idx);
+            }
+            f
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("dbscan");
+    for n in [10usize, 50, 200] {
+        let fv = freqs(n, 100, 7);
+        b.run_units(&format!("connectivity (eq.3)  n={n:>3}"), Some((n * n) as f64), || {
+            std::hint::black_box(connectivity_matrix(&fv));
+        });
+        let conn = connectivity_matrix(&fv);
+        b.run(&format!("distance+dbscan      n={n:>3}"), || {
+            let dist = distance_matrix(&conn);
+            std::hint::black_box(dbscan(&dist, DbscanParams::default()));
+        });
+        b.run(&format!("full recluster pass  n={n:>3}"), || {
+            let c = connectivity_matrix(&fv);
+            let dist = distance_matrix(&c);
+            std::hint::black_box(dbscan(&dist, DbscanParams::default()));
+        });
+    }
+    b.save();
+}

@@ -1,0 +1,77 @@
+//! End-to-end global-round latency: the paper's full per-round protocol
+//! (local training x N clients -> reports -> selection -> uploads ->
+//! aggregation -> server apply -> age/frequency bookkeeping) with the
+//! phase breakdown the perf pass optimizes against (EXPERIMENTS.md §Perf).
+
+use ragek::bench::Bench;
+use ragek::config::ExperimentConfig;
+use ragek::coordinator::strategies::StrategyKind;
+use ragek::fl::trainer::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("end2end");
+
+    for (tag, strategy) in [
+        ("rAge-k ", StrategyKind::RageK),
+        ("rTop-k ", StrategyKind::RTopK),
+        ("dense  ", StrategyKind::Dense),
+    ] {
+        let mut cfg = ExperimentConfig::mnist_scaled();
+        cfg.rounds = 1;
+        cfg.train_n = 2000;
+        cfg.test_n = 256;
+        cfg.eval_every = 0;
+        cfg.strategy = strategy;
+        let mut t = Trainer::from_config(&cfg)?;
+        b.run(&format!("global round {tag} (10 clients, H=4, b=256)"), || {
+            t.run_round().unwrap();
+        });
+        if strategy == StrategyKind::RageK {
+            println!("\nphase breakdown (rAge-k rounds):\n{}", t.profile.report());
+        }
+    }
+
+    // PS-only cost at CIFAR scale (no compute backend in the loop):
+    // selection + ages + aggregation for 6 clients at d=2.5M
+    {
+        use ragek::age::AgeVector;
+        use ragek::coordinator::aggregator::Aggregate;
+        use ragek::coordinator::selection::select_disjoint;
+        use ragek::sparse::{topk_abs_sparse, SparseVec};
+        use ragek::util::rng::Rng;
+        let (d, r, k, n) = (2_515_338usize, 2500usize, 100usize, 6usize);
+        let mut rng = Rng::new(1);
+        let mut grads = Vec::new();
+        for _ in 0..n {
+            let mut g = vec![0.0f32; d];
+            rng.fill_gaussian(&mut g, 1.0);
+            grads.push(g);
+        }
+        let reports: Vec<SparseVec> =
+            grads.iter().map(|g| topk_abs_sparse(g, r)).collect();
+        let mut age = AgeVector::new(d);
+        b.run(&format!("PS round (no compute) cifar-scale d=2.5M n={n}"), || {
+            // selection (3 pairs, disjoint within pair)
+            let mut requested: Vec<Vec<u32>> = Vec::new();
+            for p in 0..n / 2 {
+                let rs: Vec<&[u32]> =
+                    vec![&reports[2 * p].idx, &reports[2 * p + 1].idx];
+                requested.extend(select_disjoint(&age, &rs, k));
+            }
+            // uploads + aggregation
+            let mut agg = Aggregate::new();
+            for (req, rep) in requested.iter().zip(&reports) {
+                agg.push(ragek::fl::client::Client::answer_request(rep, req));
+            }
+            let update = agg.to_dense(d, 1.0 / n as f32);
+            std::hint::black_box(&update);
+            // eq. (2)
+            let mut union: Vec<u32> = requested.iter().flatten().cloned().collect();
+            union.sort_unstable();
+            union.dedup();
+            age.update(&union);
+        });
+    }
+    b.save();
+    Ok(())
+}

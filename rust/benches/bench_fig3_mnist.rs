@@ -1,0 +1,66 @@
+//! Fig. 3 regeneration harness: MNIST accuracy (a) and loss (b) series
+//! for rAge-k vs rTop-k at identical (r=75, k=10) bandwidth — prints the
+//! two curves and the headline comparison rows.
+
+use ragek::bench::Bench;
+use ragek::config::{EvalMode, ExperimentConfig};
+use ragek::coordinator::strategies::StrategyKind;
+use ragek::fl::metrics::History;
+use ragek::fl::trainer::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("fig3_mnist");
+    b.min_secs = 0.0;
+
+    // defaults match the recorded EXPERIMENTS.md §F3 run (150 rounds,
+    // train_n 4000); note §F3's seed table — single-seed runs carry
+    // +-5 pt noise and rAge-k's win is the 3-seed mean
+    let rounds: usize = std::env::var("FIG3_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(150);
+
+    let mut histories: Vec<History> = Vec::new();
+    for strategy in [StrategyKind::RageK, StrategyKind::RTopK] {
+        let mut cfg = ExperimentConfig::mnist_scaled();
+        cfg.rounds = rounds;
+        cfg.eval_every = 5;
+        cfg.eval_mode = EvalMode::Global;
+        cfg.strategy = strategy;
+        b.run_once(&format!("{} {rounds}-round run", strategy.name()), || {
+            let mut t = Trainer::from_config(&cfg).unwrap();
+            histories.push(t.run().unwrap().history);
+        });
+    }
+
+    println!("\n[fig3a] accuracy series (global model, eval every 5 rounds):");
+    for h in &histories {
+        let series: Vec<String> =
+            h.acc_series().iter().map(|a| format!("{:.3}", a)).collect();
+        println!("  {:<10} {}", h.name, series.join(" "));
+    }
+    println!("[fig3b] train-loss series:");
+    for h in &histories {
+        let series: Vec<String> =
+            h.loss_series().iter().step_by(5).map(|l| format!("{l:.3}")).collect();
+        println!("  {:<10} {}", h.name, series.join(" "));
+    }
+    println!("\n[fig3] headline:");
+    for h in &histories {
+        println!(
+            "  {:<10} final acc {:5.2}%  rounds-to-50% {:?}  uplink {:.2} MiB",
+            h.name,
+            h.final_accuracy() * 100.0,
+            h.rounds_to_accuracy(0.5),
+            h.comm.uplink() as f64 / (1 << 20) as f64
+        );
+    }
+    let (ragek, rtopk) = (&histories[0], &histories[1]);
+    println!(
+        "  shape check (paper: rAge-k dominates; single-seed noise +-5pt — \
+         see EXPERIMENTS.md §F3 for the 3-seed table): {}",
+        if ragek.final_accuracy() >= rtopk.final_accuracy() { "HOLDS" } else { "INVERTED on this seed" }
+    );
+    b.save();
+    Ok(())
+}

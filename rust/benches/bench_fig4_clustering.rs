@@ -1,0 +1,55 @@
+//! Fig. 4 regeneration harness: CIFAR10 connectivity heatmaps (6 clients,
+//! 3/3/4 label blocks) on the PJRT/XLA backend at reduced scale.
+//! Skips without artifacts. Scale up with FIG4_ROUNDS / the
+//! cifar_noniid example for the full run.
+
+use ragek::bench::Bench;
+use ragek::config::ExperimentConfig;
+use ragek::data::partition::paper_pair_truth;
+use ragek::fl::trainer::Trainer;
+use ragek::util::plot;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("bench_fig4: artifacts/ not built (run `make artifacts`); skipping");
+        return Ok(());
+    }
+    let mut b = Bench::new("fig4_clustering");
+    b.min_secs = 0.0;
+
+    // default kept tiny: one CNN round is ~45 s on the 1-core testbed;
+    // the recorded 6-round run lives in EXPERIMENTS.md §F4
+    let rounds: usize = std::env::var("FIG4_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+
+    let mut cfg = ExperimentConfig::cifar_paper();
+    cfg.rounds = rounds;
+    cfg.h = 4;
+    cfg.recluster_every = (rounds / 2).max(2);
+    cfg.train_n = 600;
+    cfg.test_n = 128;
+    cfg.eval_every = 0;
+
+    let mut heatmaps = Vec::new();
+    let mut labels = Vec::new();
+    b.run_once(&format!("cifar {rounds}-round clustering run (CNN d=2.5M via PJRT)"), || {
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        t.heatmap_rounds = vec![1, rounds];
+        let report = t.run().unwrap();
+        heatmaps = report.heatmaps;
+        labels = report.cluster_labels;
+    });
+
+    let truth = paper_pair_truth(cfg.n_clients);
+    println!("\n[fig4] ground-truth pairs: {truth:?}");
+    for (round, m) in &heatmaps {
+        println!("\n[fig4] connectivity matrix @ iteration {round} (paper Fig. 4):");
+        println!("{}", plot::heatmap(m, true));
+        print!("[fig4] csv:\n{}", plot::matrix_csv(m));
+    }
+    println!("[fig4] clusters found: {labels:?}");
+    b.save();
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Fig. 5 regeneration harness: CIFAR10 accuracy/loss series, rAge-k vs
+//! rTop-k at (r=2500, k=100), PJRT/XLA backend, reduced scale by default
+//! (FIG5_ROUNDS to scale up; the paper runs to iteration 1400).
+//! Skips without artifacts.
+
+use ragek::bench::Bench;
+use ragek::config::{EvalMode, ExperimentConfig};
+use ragek::coordinator::strategies::StrategyKind;
+use ragek::fl::metrics::History;
+use ragek::fl::trainer::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("bench_fig5: artifacts/ not built (run `make artifacts`); skipping");
+        return Ok(());
+    }
+    let mut b = Bench::new("fig5_cifar");
+    b.min_secs = 0.0;
+
+    // default kept tiny (see bench_fig4); recorded run: EXPERIMENTS.md §F5
+    let rounds: usize = std::env::var("FIG5_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+
+    let mut histories: Vec<History> = Vec::new();
+    for strategy in [StrategyKind::RageK, StrategyKind::RTopK] {
+        let mut cfg = ExperimentConfig::cifar_paper();
+        cfg.rounds = rounds;
+        cfg.h = 4;
+        cfg.recluster_every = (rounds / 2).max(2);
+        cfg.train_n = 600;
+        cfg.test_n = 128;
+        cfg.eval_every = 1;
+        cfg.eval_mode = EvalMode::Global;
+        cfg.strategy = strategy;
+        b.run_once(&format!("{} {rounds}-round CNN run", strategy.name()), || {
+            let mut t = Trainer::from_config(&cfg).unwrap();
+            histories.push(t.run().unwrap().history);
+        });
+    }
+
+    println!("\n[fig5a] accuracy series:");
+    for h in &histories {
+        let series: Vec<String> =
+            h.acc_series().iter().map(|a| format!("{a:.3}")).collect();
+        println!("  {:<10} {}", h.name, series.join(" "));
+    }
+    println!("[fig5b] train-loss series:");
+    for h in &histories {
+        let series: Vec<String> =
+            h.loss_series().iter().map(|l| format!("{l:.3}")).collect();
+        println!("  {:<10} {}", h.name, series.join(" "));
+    }
+    for h in &histories {
+        println!(
+            "  {:<10} final acc {:5.2}%  uplink {:.2} MiB",
+            h.name,
+            h.final_accuracy() * 100.0,
+            h.comm.uplink() as f64 / (1 << 20) as f64
+        );
+    }
+    b.save();
+    Ok(())
+}

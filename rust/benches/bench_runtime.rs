@@ -1,0 +1,102 @@
+//! PJRT dispatch cost: per-call latency of each MNIST artifact (the
+//! request-path budget of the XLA backend) + the local_round
+//! amortization that motivates the lax.scan export. Skips without
+//! artifacts.
+
+use ragek::bench::Bench;
+use ragek::runtime::{lit_f32, lit_i32, lit_scalar, Runtime};
+use ragek::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("bench_runtime: artifacts/ not built (run `make artifacts`); skipping");
+        return Ok(());
+    }
+    let rt = Runtime::load("artifacts", "mnist")?;
+    let m = rt.model().clone();
+    let (d, bsz, hs, idim) = (m.d, m.batch, m.h_scan, m.input_dim);
+    let mut rng = Rng::new(0);
+
+    let params = rt.init_params()?;
+    let zeros = vec![0.0f32; d];
+    let mut x1 = vec![0.0f32; bsz * idim];
+    rng.fill_gaussian(&mut x1, 0.5);
+    let y1: Vec<i32> = (0..bsz).map(|i| (i % 10) as i32).collect();
+    let mut xh = vec![0.0f32; hs * bsz * idim];
+    rng.fill_gaussian(&mut xh, 0.5);
+    let yh: Vec<i32> = (0..hs * bsz).map(|i| (i % 10) as i32).collect();
+
+    let mut b = Bench::new("runtime");
+    b.run(&format!("eval_batch        (b={bsz})"), || {
+        rt.call(
+            "eval_batch",
+            &[
+                lit_f32(&params, &[d as i64]).unwrap(),
+                lit_f32(&x1, &[bsz as i64, idim as i64]).unwrap(),
+                lit_i32(&y1, &[bsz as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    });
+    b.run(&format!("train_step        (b={bsz})"), || {
+        rt.call(
+            "train_step",
+            &[
+                lit_f32(&params, &[d as i64]).unwrap(),
+                lit_f32(&zeros, &[d as i64]).unwrap(),
+                lit_f32(&zeros, &[d as i64]).unwrap(),
+                lit_scalar(0.0),
+                lit_f32(&x1, &[bsz as i64, idim as i64]).unwrap(),
+                lit_i32(&y1, &[bsz as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    });
+    b.run(&format!("local_round       (H={hs}, 1 dispatch)"), || {
+        rt.call(
+            "local_round",
+            &[
+                lit_f32(&params, &[d as i64]).unwrap(),
+                lit_f32(&zeros, &[d as i64]).unwrap(),
+                lit_f32(&zeros, &[d as i64]).unwrap(),
+                lit_scalar(0.0),
+                lit_f32(&xh, &[hs as i64, bsz as i64, idim as i64]).unwrap(),
+                lit_i32(&yh, &[hs as i64, bsz as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    });
+    let ktot = m.k_total;
+    let idx = vec![0i32; ktot];
+    let vals = vec![0.0f32; ktot];
+    b.run(&format!("apply_sparse      (K={ktot})"), || {
+        rt.call(
+            "apply_sparse",
+            &[
+                lit_f32(&params, &[d as i64]).unwrap(),
+                lit_f32(&zeros, &[d as i64]).unwrap(),
+                lit_f32(&zeros, &[d as i64]).unwrap(),
+                lit_scalar(0.0),
+                lit_i32(&idx, &[ktot as i64]).unwrap(),
+                lit_f32(&vals, &[ktot as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    });
+    let mut grad = vec![0.0f32; d];
+    rng.fill_gaussian(&mut grad, 1.0);
+    let age = vec![3i32; d];
+    b.run("ragek_select      (fused Alg. 2)", || {
+        rt.call(
+            "ragek_select",
+            &[
+                lit_f32(&grad, &[d as i64]).unwrap(),
+                lit_i32(&age, &[d as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    });
+    b.save();
+    println!("\nper-artifact cumulative profile:\n{}", rt.stats.report());
+    Ok(())
+}

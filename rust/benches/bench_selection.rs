@@ -1,0 +1,47 @@
+//! Hot-path micro-bench: the per-round selection pipeline at the paper's
+//! two scales — client top-r scan (d -> r) and PS age-ranked choice
+//! (r -> k), incl. the disjoint cluster variant.
+
+use ragek::age::AgeVector;
+use ragek::bench::Bench;
+use ragek::coordinator::selection::{select_disjoint, select_oldest_k};
+use ragek::sparse::topk_abs_sparse;
+use ragek::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("selection");
+    let mut rng = Rng::new(0);
+
+    for (tag, d, r, k) in [
+        ("mnist  d=39760  r=75   k=10 ", 39760usize, 75usize, 10usize),
+        ("cifar  d=2.5M   r=2500 k=100", 2_515_338, 2500, 100),
+    ] {
+        let mut grad = vec![0.0f32; d];
+        rng.fill_gaussian(&mut grad, 1.0);
+
+        b.run_units(&format!("client.topr_abs      {tag}"), Some(d as f64), || {
+            std::hint::black_box(topk_abs_sparse(&grad, r));
+        });
+
+        let mut age = AgeVector::new(d);
+        for round in 0..50u32 {
+            let sel: Vec<u32> = (0..k as u32).map(|i| (i * 37 + round * 911) % d as u32).collect();
+            age.update(&sel);
+        }
+        let report = topk_abs_sparse(&grad, r);
+
+        b.run_units(&format!("ps.select_oldest_k   {tag}"), Some(r as f64), || {
+            std::hint::black_box(select_oldest_k(&age, &report.idx, k));
+        });
+
+        // a 2-member cluster (the paper's pair structure)
+        let mut grad2 = vec![0.0f32; d];
+        rng.fill_gaussian(&mut grad2, 1.0);
+        let report2 = topk_abs_sparse(&grad2, r);
+        let reports: Vec<&[u32]> = vec![&report.idx, &report2.idx];
+        b.run_units(&format!("ps.select_disjoint x2 {tag}"), Some(2.0 * r as f64), || {
+            std::hint::black_box(select_disjoint(&age, &reports, k));
+        });
+    }
+    b.save();
+}

@@ -1,0 +1,220 @@
+//! Age and frequency vectors — the bookkeeping at the heart of rAge-k.
+//!
+//! [`AgeVector`] implements the eq. (2) protocol: after each global round
+//! the requested indices reset to age 0 and every other index ages by +1.
+//! One age vector exists **per cluster** (every client starts as a
+//! singleton cluster); on cluster formation member vectors are merged and
+//! on reassignment a client adopts its new cluster's vector (DESIGN.md §5).
+//!
+//! [`FrequencyVector`] counts how often each index was requested from a
+//! client (the f^t[i] of eq. (3)); its pairwise dot products drive the
+//! DBSCAN clustering.
+
+/// Per-cluster age vector (eq. 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgeVector {
+    ages: Vec<u32>,
+}
+
+impl AgeVector {
+    pub fn new(d: usize) -> Self {
+        AgeVector { ages: vec![0; d] }
+    }
+
+    pub fn d(&self) -> usize {
+        self.ages.len()
+    }
+
+    pub fn get(&self, j: usize) -> u32 {
+        self.ages[j]
+    }
+
+    pub fn as_slice(&self) -> &[u32] {
+        &self.ages
+    }
+
+    /// eq. (2): every index ages by one, except the just-requested
+    /// `selected` indices which reset to 0. This is the d-dimensional
+    /// sweep the PS performs per cluster per global round (see
+    /// `benches/bench_age.rs` for its cost at d = 2.5M).
+    pub fn update(&mut self, selected: &[u32]) {
+        for a in self.ages.iter_mut() {
+            *a += 1;
+        }
+        for &j in selected {
+            self.ages[j as usize] = 0;
+        }
+    }
+
+    /// Merge another cluster's vector into this one. Elementwise **min**:
+    /// age = time since *any* member updated the index, which is the
+    /// coordination-relevant notion (an index one member just refreshed
+    /// is not stale for the cluster). `MergeRule` ablations live in
+    /// `clustering::manager`.
+    pub fn merge_min(&mut self, other: &AgeVector) {
+        assert_eq!(self.d(), other.d());
+        for (a, &b) in self.ages.iter_mut().zip(&other.ages) {
+            *a = (*a).min(b);
+        }
+    }
+
+    /// Elementwise max merge (pessimistic alternative, for the ablation).
+    pub fn merge_max(&mut self, other: &AgeVector) {
+        assert_eq!(self.d(), other.d());
+        for (a, &b) in self.ages.iter_mut().zip(&other.ages) {
+            *a = (*a).max(b);
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.ages.fill(0);
+    }
+
+    /// Ages gathered at `idx` as f32 scores (selection input).
+    pub fn gather(&self, idx: &[u32]) -> Vec<f32> {
+        idx.iter().map(|&j| self.ages[j as usize] as f32).collect()
+    }
+
+    pub fn max_age(&self) -> u32 {
+        self.ages.iter().cloned().max().unwrap_or(0)
+    }
+
+    pub fn mean_age(&self) -> f64 {
+        if self.ages.is_empty() {
+            return 0.0;
+        }
+        self.ages.iter().map(|&a| a as f64).sum::<f64>() / self.ages.len() as f64
+    }
+}
+
+/// Per-client request-frequency vector (the f^t[i] of eq. (3)).
+///
+/// Stored sparsely (only requested indices ever become non-zero and only
+/// k per round do) — the dot products in eq. (3) then cost O(nnz), not
+/// O(d), which is what makes the M-periodic clustering cheap at d = 2.5M.
+#[derive(Debug, Clone, Default)]
+pub struct FrequencyVector {
+    counts: std::collections::HashMap<u32, u32>,
+    total: u64,
+}
+
+impl FrequencyVector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one round's requested indices.
+    pub fn record(&mut self, idx: &[u32]) {
+        for &j in idx {
+            *self.counts.entry(j).or_insert(0) += 1;
+            self.total += 1;
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn get(&self, j: u32) -> u32 {
+        self.counts.get(&j).copied().unwrap_or(0)
+    }
+
+    /// <self, other> (sparse dot product over the smaller support).
+    pub fn dot(&self, other: &FrequencyVector) -> f64 {
+        let (small, big) = if self.counts.len() <= other.counts.len() {
+            (self, other)
+        } else {
+            (other, self)
+        };
+        small
+            .counts
+            .iter()
+            .map(|(&j, &c)| c as f64 * big.get(j) as f64)
+            .sum()
+    }
+
+    /// <self, self>.
+    pub fn self_dot(&self) -> f64 {
+        self.counts.values().map(|&c| (c as f64) * (c as f64)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_partition_invariant() {
+        let mut a = AgeVector::new(10);
+        a.update(&[2, 5]);
+        a.update(&[5, 7]);
+        // after round 2: 5,7 are 0; 2 aged once since reset; others 2
+        assert_eq!(a.get(5), 0);
+        assert_eq!(a.get(7), 0);
+        assert_eq!(a.get(2), 1);
+        assert_eq!(a.get(0), 2);
+        // invariant: every age is either 0 (just selected) or old+1
+        let before = a.clone();
+        a.update(&[0]);
+        for j in 0..10 {
+            if j == 0 {
+                assert_eq!(a.get(j), 0);
+            } else {
+                assert_eq!(a.get(j), before.get(j) + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_min_takes_freshest() {
+        let mut a = AgeVector::new(4);
+        let mut b = AgeVector::new(4);
+        a.update(&[0]); // a = [0,1,1,1]
+        b.update(&[3]);
+        b.update(&[3]); // b = [2,2,2,0]
+        a.merge_min(&b);
+        assert_eq!(a.as_slice(), &[0, 1, 1, 0]);
+        let mut c = AgeVector::new(4);
+        c.update(&[1]);
+        let mut d = AgeVector::new(4);
+        d.update(&[2]);
+        d.merge_max(&c);
+        assert_eq!(d.as_slice(), &[1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn gather_scores() {
+        let mut a = AgeVector::new(5);
+        a.update(&[1]);
+        a.update(&[4]);
+        assert_eq!(a.gather(&[0, 1, 4]), vec![2.0, 1.0, 0.0]);
+        assert_eq!(a.max_age(), 2);
+    }
+
+    #[test]
+    fn frequency_dot_products() {
+        let mut f1 = FrequencyVector::new();
+        let mut f2 = FrequencyVector::new();
+        f1.record(&[1, 2, 3]);
+        f1.record(&[1, 2]);
+        f2.record(&[2, 3, 9]);
+        // f1 = {1:2, 2:2, 3:1}, f2 = {2:1, 3:1, 9:1}
+        assert_eq!(f1.dot(&f2), 3.0);
+        assert_eq!(f1.self_dot(), 9.0);
+        assert_eq!(f2.self_dot(), 3.0);
+        assert_eq!(f1.dot(&f2), f2.dot(&f1));
+        assert_eq!(f1.total(), 5);
+        assert_eq!(f1.nnz(), 3);
+    }
+
+    #[test]
+    fn empty_frequency_is_zero() {
+        let f = FrequencyVector::new();
+        assert_eq!(f.self_dot(), 0.0);
+        assert_eq!(f.dot(&FrequencyVector::new()), 0.0);
+    }
+}

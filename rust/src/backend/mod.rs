@@ -1,0 +1,385 @@
+//! Compute backends: where client training actually runs.
+//!
+//! * [`RustBackend`] — the pure-Rust MLP (`nn::mlp`): artifact-free,
+//!   fast for the simulator, and the numerics oracle.
+//! * [`XlaBackend`] — executes the AOT HLO artifacts via PJRT
+//!   ([`crate::runtime`]); the production path, required for the CNN.
+//!
+//! Both expose the same [`Backend`] trait so the FL trainer, examples and
+//! benches are backend-agnostic. Parameter layouts, Adam constants and
+//! the top-r tie-breaking contract are identical across the two (pinned
+//! by `rust/tests/integration_runtime.rs`).
+
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::coordinator::aggregator::Aggregate;
+use crate::nn::adam::AdamState;
+use crate::nn::mlp;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, to_i32, to_scalar, Runtime};
+use crate::sparse::{topk_abs_sparse, SparseVec};
+use anyhow::{bail, Result};
+
+/// Per-client training state (flat params + Adam moments).
+#[derive(Debug, Clone)]
+pub struct ClientState {
+    pub params: Vec<f32>,
+    pub adam: AdamState,
+}
+
+impl ClientState {
+    pub fn new(params: Vec<f32>) -> Self {
+        let d = params.len();
+        ClientState { params, adam: AdamState::new(d) }
+    }
+
+    /// Algorithm 1 line 12: adopt the broadcast global model (local
+    /// optimizer state persists across rounds).
+    pub fn sync_to(&mut self, global: &[f32]) {
+        self.params.copy_from_slice(global);
+    }
+}
+
+/// Global (server) model state.
+#[derive(Debug, Clone)]
+pub struct GlobalState {
+    pub params: Vec<f32>,
+    pub adam: AdamState,
+}
+
+impl GlobalState {
+    pub fn new(params: Vec<f32>) -> Self {
+        let d = params.len();
+        GlobalState { params, adam: AdamState::new(d) }
+    }
+}
+
+/// Result of one client's local round (H local steps).
+#[derive(Debug)]
+pub struct LocalRoundOut {
+    pub mean_loss: f32,
+    /// top-r report of the last local gradient: indices ordered by |g|
+    /// desc with the signed values (so the PS request is answerable from
+    /// the report alone)
+    pub report: SparseVec,
+}
+
+pub trait Backend {
+    fn d(&self) -> usize;
+
+    /// Initial global parameters (deterministic).
+    fn init_params(&mut self) -> Result<Vec<f32>>;
+
+    /// Run `h` local Adam steps on batches (xs: [h*b*input_dim],
+    /// ys: [h*b]) and report the top-r of the final gradient.
+    fn local_round(
+        &mut self,
+        state: &mut ClientState,
+        xs: &[f32],
+        ys: &[i32],
+        h: usize,
+        b: usize,
+    ) -> Result<LocalRoundOut>;
+
+    /// Dense gradient at `params` (rand-k / dense baselines).
+    fn dense_grad(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f32)>;
+
+    /// (loss_sum, correct) over one batch.
+    fn eval(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, usize)>;
+
+    /// Server-side apply of the aggregated update (Adam, lr_server).
+    fn server_apply(
+        &mut self,
+        global: &mut GlobalState,
+        agg: &Aggregate,
+        scale: f32,
+        lr: f32,
+    ) -> Result<()>;
+}
+
+/// Instantiate the backend an experiment config asks for.
+pub fn make_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
+    match cfg.backend {
+        BackendKind::Rust => Ok(Box::new(RustBackend::new(cfg.r, cfg.lr_client, cfg.seed))),
+        BackendKind::Xla => {
+            let mut be = XlaBackend::new(&cfg.artifacts_dir, &cfg.model, cfg.r)?;
+            // Delta payload recomputes the report from the error-feedback
+            // memory on the Rust side; skip the artifact's d log d top-r
+            // sort (EXPERIMENTS.md §Perf)
+            be.fast_round = cfg.payload == crate::config::Payload::Delta;
+            Ok(Box::new(be))
+        }
+    }
+}
+
+// ===================================================================== rust
+
+/// Artifact-free backend: the MNIST MLP with hand-written backprop.
+#[derive(Debug)]
+pub struct RustBackend {
+    r: usize,
+    lr: f32,
+    seed: u64,
+}
+
+impl RustBackend {
+    pub fn new(r: usize, lr: f32, seed: u64) -> Self {
+        RustBackend { r, lr, seed }
+    }
+}
+
+impl Backend for RustBackend {
+    fn d(&self) -> usize {
+        mlp::D
+    }
+
+    fn init_params(&mut self) -> Result<Vec<f32>> {
+        Ok(mlp::init(self.seed))
+    }
+
+    fn local_round(
+        &mut self,
+        state: &mut ClientState,
+        xs: &[f32],
+        ys: &[i32],
+        h: usize,
+        b: usize,
+    ) -> Result<LocalRoundOut> {
+        if xs.len() != h * b * mlp::IN || ys.len() != h * b {
+            bail!("local_round: bad batch shapes");
+        }
+        let mut loss_sum = 0.0f32;
+        let mut last_grad: Vec<f32> = Vec::new();
+        for step in 0..h {
+            let x = &xs[step * b * mlp::IN..(step + 1) * b * mlp::IN];
+            let y = &ys[step * b..(step + 1) * b];
+            let (loss, grad) = mlp::loss_and_grad(&state.params, x, y);
+            state.adam.step(&mut state.params, &grad, self.lr);
+            loss_sum += loss;
+            if step + 1 == h {
+                last_grad = grad;
+            }
+        }
+        Ok(LocalRoundOut {
+            mean_loss: loss_sum / h as f32,
+            report: topk_abs_sparse(&last_grad, self.r),
+        })
+    }
+
+    fn dense_grad(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let (loss, grad) = mlp::loss_and_grad(params, x, y);
+        Ok((grad, loss))
+    }
+
+    fn eval(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, usize)> {
+        Ok(mlp::evaluate(params, x, y))
+    }
+
+    fn server_apply(
+        &mut self,
+        global: &mut GlobalState,
+        agg: &Aggregate,
+        scale: f32,
+        lr: f32,
+    ) -> Result<()> {
+        let update = agg.to_dense(global.params.len(), scale);
+        global.adam.step(&mut global.params, &update, lr);
+        Ok(())
+    }
+}
+
+// ====================================================================== xla
+
+/// PJRT-backed backend executing the AOT artifacts.
+pub struct XlaBackend {
+    rt: Runtime,
+    r: usize,
+    /// use the report-free `local_round_fast` artifact (Delta payload)
+    pub fast_round: bool,
+}
+
+impl std::fmt::Debug for XlaBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaBackend").field("model", &self.rt.model().name).finish()
+    }
+}
+
+impl XlaBackend {
+    pub fn new(artifacts_dir: &str, model: &str, r: usize) -> Result<Self> {
+        let rt = Runtime::load(artifacts_dir, model)?;
+        if r != rt.model().r {
+            bail!(
+                "config r = {r} but artifacts were compiled with r = {} — \
+                 re-run `make artifacts` with matching presets",
+                rt.model().r
+            );
+        }
+        Ok(XlaBackend { rt, r, fast_round: false })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// The r this backend was compiled with (artifact-baked).
+    pub fn r(&self) -> usize {
+        self.r
+    }
+}
+
+impl Backend for XlaBackend {
+    fn d(&self) -> usize {
+        self.rt.model().d
+    }
+
+    fn init_params(&mut self) -> Result<Vec<f32>> {
+        self.rt.init_params()
+    }
+
+    fn local_round(
+        &mut self,
+        state: &mut ClientState,
+        xs: &[f32],
+        ys: &[i32],
+        h: usize,
+        b: usize,
+    ) -> Result<LocalRoundOut> {
+        let m = self.rt.model();
+        let (hs, idim, d) = (m.h_scan, m.input_dim, m.d);
+        if b != m.batch {
+            bail!("xla backend: batch {b} != compiled batch {}", m.batch);
+        }
+        if h % hs != 0 {
+            bail!("xla backend: h = {h} must be a multiple of h_scan = {hs}");
+        }
+        let chunks = h / hs;
+        let arts = &self.rt.model().artifacts;
+        let have_fast = arts.contains_key("local_round_fast");
+        let have_grad = arts.contains_key("local_round_grad");
+        let mut loss_acc = 0.0f32;
+        let mut report = SparseVec::default();
+        for c in 0..chunks {
+            // only the LAST chunk's top-r report is consumed (Algorithm 1
+            // sparsifies the final local gradient); earlier chunks — and
+            // all chunks under fast_round — skip it entirely. For the
+            // last chunk, prefer `local_round_grad` (dense gradient out +
+            // Rust-side heap top-r) over the in-graph argsort of
+            // `local_round`: ~200x cheaper on the pinned XLA CPU backend
+            // (EXPERIMENTS.md §Perf).
+            let last = c + 1 == chunks;
+            let artifact = if have_fast && (self.fast_round || !last) {
+                "local_round_fast"
+            } else if have_grad {
+                "local_round_grad"
+            } else {
+                "local_round"
+            };
+            let xs_c = &xs[c * hs * b * idim..(c + 1) * hs * b * idim];
+            let ys_c = &ys[c * hs * b..(c + 1) * hs * b];
+            let outs = self.rt.call(
+                artifact,
+                &[
+                    lit_f32(&state.params, &[d as i64])?,
+                    lit_f32(&state.adam.m, &[d as i64])?,
+                    lit_f32(&state.adam.v, &[d as i64])?,
+                    lit_scalar(state.adam.t),
+                    lit_f32(xs_c, &[hs as i64, b as i64, idim as i64])?,
+                    lit_i32(ys_c, &[hs as i64, b as i64])?,
+                ],
+            )?;
+            state.params = to_f32(&outs[0])?;
+            state.adam.m = to_f32(&outs[1])?;
+            state.adam.v = to_f32(&outs[2])?;
+            state.adam.t = to_scalar(&outs[3])?;
+            loss_acc += to_scalar(&outs[4])?;
+            if c + 1 == chunks && outs.len() == 6 {
+                // local_round_grad: dense last gradient out, top-r here
+                let grad = to_f32(&outs[5])?;
+                report = topk_abs_sparse(&grad, self.r);
+            } else if c + 1 == chunks && outs.len() > 6 {
+                // local_round: in-graph (signed g[idx], idx) report,
+                // ordered by |g| desc — same contract as topk_abs_sparse
+                let vals = to_f32(&outs[5])?;
+                let idx: Vec<u32> =
+                    to_i32(&outs[6])?.into_iter().map(|i| i as u32).collect();
+                report = SparseVec::new(idx, vals);
+            }
+        }
+        Ok(LocalRoundOut { mean_loss: loss_acc / chunks as f32, report })
+    }
+
+    fn dense_grad(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let m = self.rt.model();
+        let (b, idim, d) = (m.batch, m.input_dim, m.d);
+        if y.len() != b {
+            bail!("dense_grad: batch {} != compiled batch {b}", y.len());
+        }
+        let outs = self.rt.call(
+            "grad",
+            &[
+                lit_f32(params, &[d as i64])?,
+                lit_f32(x, &[b as i64, idim as i64])?,
+                lit_i32(y, &[b as i64])?,
+            ],
+        )?;
+        Ok((to_f32(&outs[0])?, to_scalar(&outs[1])?))
+    }
+
+    fn eval(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, usize)> {
+        let m = self.rt.model();
+        let (b, idim, d) = (m.batch, m.input_dim, m.d);
+        if y.len() != b {
+            bail!("eval: batch {} != compiled batch {b}", y.len());
+        }
+        let outs = self.rt.call(
+            "eval_batch",
+            &[
+                lit_f32(params, &[d as i64])?,
+                lit_f32(x, &[b as i64, idim as i64])?,
+                lit_i32(y, &[b as i64])?,
+            ],
+        )?;
+        Ok((to_scalar(&outs[0])?, to_scalar(&outs[1])? as usize))
+    }
+
+    fn server_apply(
+        &mut self,
+        global: &mut GlobalState,
+        agg: &Aggregate,
+        scale: f32,
+        lr: f32,
+    ) -> Result<()> {
+        let m = self.rt.model();
+        let d = m.d;
+        let _ = lr; // baked into the artifact at AOT time
+        let outs = if agg.total_entries() <= m.k_total {
+            let (idx, val) = agg.to_padded_pairs(m.k_total, scale);
+            self.rt.call(
+                "apply_sparse",
+                &[
+                    lit_f32(&global.params, &[d as i64])?,
+                    lit_f32(&global.adam.m, &[d as i64])?,
+                    lit_f32(&global.adam.v, &[d as i64])?,
+                    lit_scalar(global.adam.t),
+                    lit_i32(&idx, &[m.k_total as i64])?,
+                    lit_f32(&val, &[m.k_total as i64])?,
+                ],
+            )?
+        } else {
+            let update = agg.to_dense(d, scale);
+            self.rt.call(
+                "apply_dense",
+                &[
+                    lit_f32(&global.params, &[d as i64])?,
+                    lit_f32(&global.adam.m, &[d as i64])?,
+                    lit_f32(&global.adam.v, &[d as i64])?,
+                    lit_scalar(global.adam.t),
+                    lit_f32(&update, &[d as i64])?,
+                ],
+            )?
+        };
+        global.params = to_f32(&outs[0])?;
+        global.adam.m = to_f32(&outs[1])?;
+        global.adam.v = to_f32(&outs[2])?;
+        global.adam.t = to_scalar(&outs[3])?;
+        Ok(())
+    }
+}

@@ -1,0 +1,214 @@
+//! Micro-benchmark harness (criterion is not in the offline registry):
+//! warmup + timed iterations, mean/median/p99 + throughput reporting,
+//! and a tabular printer shared by every `rust/benches/*.rs` target.
+
+use crate::util::{mean, percentile, stddev};
+use std::time::Instant;
+
+/// One benchmark's collected timings.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs: Vec<f64>,
+    /// optional work units per iteration (elements, bytes, ...) for
+    /// throughput reporting
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        mean(&self.secs)
+    }
+
+    pub fn median(&self) -> f64 {
+        percentile(&self.secs, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.secs, 99.0)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        stddev(&self.secs)
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.mean())
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:8.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:8.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:8.3}ms", s * 1e3)
+    } else {
+        format!("{s:8.3}s ")
+    }
+}
+
+/// The harness: `Bench::new("suite").run("case", || work())`.
+pub struct Bench {
+    suite: String,
+    /// minimum wall time to spend measuring each case
+    pub min_secs: f64,
+    pub warmup_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        println!("\n== bench suite: {suite} ==");
+        println!(
+            "{:<42} {:>10} {:>10} {:>10} {:>8}",
+            "case", "mean", "median", "p99", "iters"
+        );
+        Bench {
+            suite: suite.to_string(),
+            min_secs: std::env::var("BENCH_MIN_SECS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0.5),
+            warmup_iters: 2,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` until `min_secs` of samples accumulate (at least 3 iters).
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.run_units(name, None, move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Time `f` exactly once, no warmup — for end-to-end harnesses whose
+    /// body is itself a full (expensive, stateful) experiment run.
+    pub fn run_once(&mut self, name: &str, f: impl FnOnce()) -> &BenchResult {
+        let t0 = Instant::now();
+        f();
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            secs: vec![t0.elapsed().as_secs_f64()],
+            units_per_iter: None,
+        };
+        println!(
+            "{:<42} {} {} {} {:>8}",
+            res.name,
+            fmt_time(res.mean()),
+            fmt_time(res.median()),
+            fmt_time(res.p99()),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Like `run`, with a throughput denominator (units per iteration).
+    pub fn run_units(
+        &mut self,
+        name: &str,
+        units_per_iter: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut secs = Vec::new();
+        let t_start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            secs.push(t0.elapsed().as_secs_f64());
+            if secs.len() >= 3 && t_start.elapsed().as_secs_f64() > self.min_secs {
+                break;
+            }
+            if secs.len() >= 10_000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: secs.len(),
+            secs,
+            units_per_iter,
+        };
+        let tput = res
+            .throughput()
+            .map(|t| format!("  {:>12.1} unit/s", t))
+            .unwrap_or_default();
+        println!(
+            "{:<42} {} {} {} {:>8}{tput}",
+            res.name,
+            fmt_time(res.mean()),
+            fmt_time(res.median()),
+            fmt_time(res.p99()),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Dump all results as JSON (consumed by EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            (
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::Str(r.name.clone())),
+                                ("mean_s", Json::Num(r.mean())),
+                                ("median_s", Json::Num(r.median())),
+                                ("p99_s", Json::Num(r.p99())),
+                                ("iters", Json::Num(r.iters as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write results JSON under results/bench/.
+    pub fn save(&self) {
+        let dir = std::path::Path::new("results/bench");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{}.json", self.suite.replace('/', "_")));
+            let _ = std::fs::write(&path, self.to_json().to_pretty());
+            println!("  -> {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let mut b = Bench::new("selftest");
+        b.min_secs = 0.01;
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.mean() >= 0.0);
+        let j = b.to_json();
+        assert_eq!(j.at(&["results"]).as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-5).contains("µs"));
+        assert!(fmt_time(2e-2).contains("ms"));
+        assert!(fmt_time(2.0).contains("s"));
+    }
+}

@@ -1,0 +1,170 @@
+//! DBSCAN (Ester et al., KDD'96) from scratch over a precomputed distance
+//! matrix — no external clustering crate exists offline, and the client
+//! counts here (N <= a few hundred) make the O(N^2) neighborhood queries
+//! irrelevant.
+//!
+//! Semantics follow the original paper: `eps`-neighborhoods *include* the
+//! point itself; a point is a core point iff its neighborhood has at
+//! least `min_pts` members; clusters grow by expanding core points;
+//! non-core points reachable from a core point become border points;
+//! everything else is labelled [`NOISE`].
+
+/// Label for unclustered (noise) points.
+pub const NOISE: isize = -1;
+
+#[derive(Debug, Clone, Copy)]
+pub struct DbscanParams {
+    /// neighborhood radius on the symmetrized eq.-3 distance
+    pub eps: f64,
+    /// minimum neighborhood size (incl. self) to be a core point
+    pub min_pts: usize,
+}
+
+impl Default for DbscanParams {
+    fn default() -> Self {
+        // the paper's pair structure: two similar clients form a cluster
+        DbscanParams { eps: 0.35, min_pts: 2 }
+    }
+}
+
+/// Cluster a symmetric `dist` matrix. Returns one label per point:
+/// cluster ids 0, 1, ... in discovery order, or [`NOISE`].
+pub fn dbscan(dist: &[Vec<f64>], params: DbscanParams) -> Vec<isize> {
+    let n = dist.len();
+    for (i, row) in dist.iter().enumerate() {
+        assert_eq!(row.len(), n, "distance matrix must be square (row {i})");
+    }
+    let neighbors = |i: usize| -> Vec<usize> {
+        (0..n).filter(|&j| dist[i][j] <= params.eps).collect()
+    };
+
+    let mut labels = vec![NOISE; n];
+    let mut visited = vec![false; n];
+    let mut next_cluster: isize = 0;
+
+    for p in 0..n {
+        if visited[p] {
+            continue;
+        }
+        visited[p] = true;
+        let nbrs = neighbors(p);
+        if nbrs.len() < params.min_pts {
+            continue; // stays noise unless later captured as border point
+        }
+        let cluster = next_cluster;
+        next_cluster += 1;
+        labels[p] = cluster;
+        // expand
+        let mut queue: std::collections::VecDeque<usize> = nbrs.into();
+        while let Some(q) = queue.pop_front() {
+            if labels[q] == NOISE {
+                labels[q] = cluster; // border or core, captured either way
+            }
+            if visited[q] {
+                continue;
+            }
+            visited[q] = true;
+            let qn = neighbors(q);
+            if qn.len() >= params.min_pts {
+                for x in qn {
+                    queue.push_back(x);
+                }
+            }
+        }
+    }
+    labels
+}
+
+/// Adjusted-for-our-tests helper: number of clusters found (excl. noise).
+pub fn n_clusters(labels: &[isize]) -> usize {
+    labels.iter().filter(|&&l| l >= 0).map(|&l| l).max().map(|m| m as usize + 1).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// distances from 1-D points for easy test construction
+    fn dist_1d(xs: &[f64]) -> Vec<Vec<f64>> {
+        xs.iter()
+            .map(|&a| xs.iter().map(|&b| (a - b).abs()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn two_blobs_and_noise() {
+        // blobs {0,1,2} at ~0 and {3,4} at ~10, noise at 100
+        let d = dist_1d(&[0.0, 0.1, 0.2, 10.0, 10.1, 100.0]);
+        let labels = dbscan(&d, DbscanParams { eps: 0.5, min_pts: 2 });
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_ne!(labels[0], labels[3]);
+        assert_eq!(labels[5], NOISE);
+        assert_eq!(n_clusters(&labels), 2);
+    }
+
+    #[test]
+    fn chain_connectivity() {
+        // density-reachable chain: all one cluster even though ends are far
+        let d = dist_1d(&[0.0, 0.4, 0.8, 1.2, 1.6]);
+        let labels = dbscan(&d, DbscanParams { eps: 0.5, min_pts: 2 });
+        assert!(labels.iter().all(|&l| l == 0), "{labels:?}");
+    }
+
+    #[test]
+    fn min_pts_three_rejects_pairs() {
+        let d = dist_1d(&[0.0, 0.1, 5.0, 5.1, 5.2]);
+        let labels = dbscan(&d, DbscanParams { eps: 0.5, min_pts: 3 });
+        assert_eq!(labels[0], NOISE);
+        assert_eq!(labels[1], NOISE);
+        assert_eq!(labels[2], 0);
+        assert_eq!(labels[3], 0);
+        assert_eq!(labels[4], 0);
+    }
+
+    #[test]
+    fn border_point_capture() {
+        // 0,1,2 dense core; 3 within eps of 2 but with only 2 neighbors
+        let d = dist_1d(&[0.0, 0.2, 0.4, 0.85]);
+        let labels = dbscan(&d, DbscanParams { eps: 0.5, min_pts: 3 });
+        assert_eq!(labels[0], 0);
+        assert_eq!(labels[3], 0, "border point must join the cluster");
+    }
+
+    #[test]
+    fn all_noise_and_empty() {
+        let d = dist_1d(&[0.0, 10.0, 20.0]);
+        let labels = dbscan(&d, DbscanParams { eps: 0.5, min_pts: 2 });
+        assert!(labels.iter().all(|&l| l == NOISE));
+        assert_eq!(n_clusters(&labels), 0);
+        assert!(dbscan(&[], DbscanParams::default()).is_empty());
+    }
+
+    #[test]
+    fn permutation_invariance_of_partition() {
+        // relabeling points must produce the same partition structure
+        let xs = [0.0, 0.1, 5.0, 5.1, 9.0, 9.05];
+        let d1 = dist_1d(&xs);
+        let perm = [3usize, 0, 5, 1, 4, 2];
+        let xs2: Vec<f64> = perm.iter().map(|&i| xs[i]).collect();
+        let d2 = dist_1d(&xs2);
+        let p = DbscanParams { eps: 0.5, min_pts: 2 };
+        let l1 = dbscan(&d1, p);
+        let l2 = dbscan(&d2, p);
+        // same-cluster relation must be preserved under the permutation
+        for a in 0..xs.len() {
+            for b in 0..xs.len() {
+                let (pa, pb) = (
+                    perm.iter().position(|&x| x == a).unwrap(),
+                    perm.iter().position(|&x| x == b).unwrap(),
+                );
+                assert_eq!(
+                    l1[a] == l1[b],
+                    l2[pa] == l2[pb],
+                    "pair ({a},{b})"
+                );
+            }
+        }
+    }
+}

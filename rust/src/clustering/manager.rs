@@ -1,0 +1,236 @@
+//! Cluster lifecycle: every client starts as a singleton cluster; every M
+//! rounds DBSCAN labels are folded into persistent cluster state.
+//!
+//! Age-vector carry-over rules (DESIGN.md §5, from the paper's §II):
+//! * a new group inherits the **merged** (elementwise-min by default) age
+//!   vectors of every old cluster whose member set survived intact into
+//!   the group — "when a client is added to an existing cluster, its age
+//!   vector is merged with that of the cluster";
+//! * clients arriving from a *split* cluster contribute nothing — "if a
+//!   client ... is reassigned to a different group, the age vector
+//!   relevant for that client is automatically reset".
+
+use super::dbscan::NOISE;
+use crate::age::AgeVector;
+
+/// How member age vectors combine on cluster formation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeRule {
+    /// freshest-wins (default; an index any member just updated is not
+    /// stale for the cluster)
+    Min,
+    /// stalest-wins (pessimistic ablation)
+    Max,
+}
+
+/// Persistent cluster state across reclustering events.
+#[derive(Debug)]
+pub struct ClusterManager {
+    d: usize,
+    rule: MergeRule,
+    /// client -> cluster id (dense, 0..n_clusters)
+    assignment: Vec<usize>,
+    /// cluster id -> members (sorted)
+    members: Vec<Vec<usize>>,
+    /// cluster id -> age vector
+    ages: Vec<AgeVector>,
+}
+
+/// What a reclustering event did (for logs/metrics).
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct ReclusterEvents {
+    pub merges: usize,
+    pub resets: usize,
+    pub n_clusters: usize,
+}
+
+impl ClusterManager {
+    /// Every client starts as its own cluster (paper §II).
+    pub fn new(n_clients: usize, d: usize, rule: MergeRule) -> Self {
+        ClusterManager {
+            d,
+            rule,
+            assignment: (0..n_clients).collect(),
+            members: (0..n_clients).map(|i| vec![i]).collect(),
+            ages: (0..n_clients).map(|_| AgeVector::new(d)).collect(),
+        }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.assignment.len()
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn cluster_of(&self, client: usize) -> usize {
+        self.assignment[client]
+    }
+
+    pub fn members_of(&self, cluster: usize) -> &[usize] {
+        &self.members[cluster]
+    }
+
+    pub fn age_of_cluster(&self, cluster: usize) -> &AgeVector {
+        &self.ages[cluster]
+    }
+
+    pub fn age_of_client(&self, client: usize) -> &AgeVector {
+        &self.ages[self.assignment[client]]
+    }
+
+    /// eq. (2) for one cluster after a global round: one +1 sweep, then
+    /// reset of every index requested from any member this round.
+    pub fn update_ages(&mut self, cluster: usize, requested_union: &[u32]) {
+        self.ages[cluster].update(requested_union);
+    }
+
+    /// Current assignment as ground-truth-comparable labels.
+    pub fn labels(&self) -> Vec<usize> {
+        self.assignment.clone()
+    }
+
+    /// Fold DBSCAN output into persistent clusters. `labels[i]` is the
+    /// DBSCAN label of client i ([`NOISE`] allowed).
+    pub fn recluster(&mut self, labels: &[isize]) -> ReclusterEvents {
+        assert_eq!(labels.len(), self.n_clients());
+        // group clients by new label; noise -> singleton groups
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        {
+            let mut by_label: std::collections::BTreeMap<isize, Vec<usize>> =
+                std::collections::BTreeMap::new();
+            for (i, &l) in labels.iter().enumerate() {
+                if l == NOISE {
+                    groups.push(vec![i]);
+                } else {
+                    by_label.entry(l).or_default().push(i);
+                }
+            }
+            groups.extend(by_label.into_values());
+        }
+        groups.sort(); // deterministic ids by smallest member
+
+        let mut events = ReclusterEvents { n_clusters: groups.len(), ..Default::default() };
+        let old_members = std::mem::take(&mut self.members);
+        let old_ages = std::mem::take(&mut self.ages);
+        let old_assignment = self.assignment.clone();
+
+        let mut new_ages: Vec<AgeVector> = Vec::with_capacity(groups.len());
+        for group in &groups {
+            // old clusters fully contained in this group carry their vector
+            let group_set: std::collections::HashSet<usize> = group.iter().cloned().collect();
+            let mut carried: Vec<&AgeVector> = Vec::new();
+            let mut seen_old: std::collections::HashSet<usize> = Default::default();
+            for &client in group {
+                let oc = old_assignment[client];
+                if !seen_old.insert(oc) {
+                    continue;
+                }
+                if old_members[oc].iter().all(|m| group_set.contains(m)) {
+                    carried.push(&old_ages[oc]);
+                } else {
+                    events.resets += 1; // split cluster: members arrive reset
+                }
+            }
+            let mut age = match carried.split_first() {
+                Some((first, rest)) => {
+                    let mut a = (*first).clone();
+                    for other in rest {
+                        match self.rule {
+                            MergeRule::Min => a.merge_min(other),
+                            MergeRule::Max => a.merge_max(other),
+                        }
+                        events.merges += 1;
+                    }
+                    a
+                }
+                None => AgeVector::new(self.d),
+            };
+            // ages are indexed per cluster; dimension must be preserved
+            debug_assert_eq!(age.d(), self.d);
+            if carried.is_empty() {
+                age.reset();
+            }
+            new_ages.push(age);
+        }
+
+        for (cid, group) in groups.iter().enumerate() {
+            for &client in group {
+                self.assignment[client] = cid;
+            }
+        }
+        self.members = groups;
+        self.ages = new_ages;
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_as_singletons() {
+        let m = ClusterManager::new(4, 10, MergeRule::Min);
+        assert_eq!(m.n_clusters(), 4);
+        for i in 0..4 {
+            assert_eq!(m.cluster_of(i), i);
+            assert_eq!(m.members_of(i), &[i]);
+        }
+    }
+
+    #[test]
+    fn pairing_merges_age_vectors() {
+        let mut m = ClusterManager::new(4, 6, MergeRule::Min);
+        m.update_ages(0, &[0]); // client 0's vector: idx 0 fresh
+        m.update_ages(1, &[3]); // client 1's vector: idx 3 fresh
+        let ev = m.recluster(&[0, 0, 1, 1]);
+        assert_eq!(ev.n_clusters, 2);
+        assert_eq!(ev.merges, 2); // one per pair
+        assert_eq!(m.cluster_of(0), m.cluster_of(1));
+        // merged min: both 0 and 3 fresh
+        let a = m.age_of_client(0);
+        assert_eq!(a.get(0), 0);
+        assert_eq!(a.get(3), 0);
+        assert_eq!(a.get(1), 1);
+    }
+
+    #[test]
+    fn split_resets() {
+        let mut m = ClusterManager::new(4, 6, MergeRule::Min);
+        m.recluster(&[0, 0, 1, 1]);
+        let c0 = m.cluster_of(0);
+        m.update_ages(c0, &[2]);
+        // now split the pair (0 stays with 2; 1 goes with 3)
+        let ev = m.recluster(&[0, 1, 0, 1]);
+        assert!(ev.resets >= 2, "{ev:?}");
+        // both new clusters start from zeroed vectors
+        assert_eq!(m.age_of_client(0).max_age(), 0);
+        assert_eq!(m.age_of_client(1).max_age(), 0);
+    }
+
+    #[test]
+    fn noise_clients_stay_singletons_and_keep_state() {
+        let mut m = ClusterManager::new(3, 4, MergeRule::Min);
+        m.update_ages(2, &[1]);
+        let before = m.age_of_client(2).clone();
+        let ev = m.recluster(&[0, 0, NOISE]);
+        assert_eq!(ev.n_clusters, 2);
+        // singleton old cluster {2} is fully contained in new group {2}
+        assert_eq!(m.age_of_client(2), &before);
+        assert_ne!(m.cluster_of(0), m.cluster_of(2));
+    }
+
+    #[test]
+    fn stable_reclustering_preserves_everything() {
+        let mut m = ClusterManager::new(4, 4, MergeRule::Min);
+        m.recluster(&[0, 0, 1, 1]);
+        let c = m.cluster_of(0);
+        m.update_ages(c, &[3]);
+        let before = m.age_of_cluster(c).clone();
+        let ev = m.recluster(&[5, 5, 9, 9]); // same partition, new label ids
+        assert_eq!(ev.resets, 0);
+        assert_eq!(m.age_of_client(0), &before);
+    }
+}

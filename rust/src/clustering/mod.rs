@@ -1,0 +1,11 @@
+//! Client clustering: the eq. (3) similarity matrix, a from-scratch
+//! DBSCAN, and the cluster lifecycle manager (merge-on-join /
+//! reset-on-reassignment).
+
+pub mod dbscan;
+pub mod manager;
+pub mod similarity;
+
+pub use dbscan::{dbscan, DbscanParams, NOISE};
+pub use manager::{ClusterManager, MergeRule};
+pub use similarity::{connectivity_matrix, distance_matrix};

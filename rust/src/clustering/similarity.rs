@@ -1,0 +1,100 @@
+//! eq. (3): pairwise frequency-vector similarity.
+//!
+//! The paper's measure is asymmetric —
+//! `d[i1, i2] = <f[i1], f[i2]> / <f[i1], f[i1]>` — i.e. the overlap of
+//! i2's request history with i1's, normalized by i1's own mass. DBSCAN
+//! needs a symmetric distance; we symmetrize by averaging the two
+//! directions and clamp into [0, 1] (DESIGN.md §5).
+
+use crate::age::FrequencyVector;
+
+/// The asymmetric similarity matrix of eq. (3) (the "connectivity matrix"
+/// whose heatmaps are Fig. 2 / Fig. 4).
+pub fn connectivity_matrix(freqs: &[FrequencyVector]) -> Vec<Vec<f64>> {
+    let n = freqs.len();
+    let self_dots: Vec<f64> = freqs.iter().map(|f| f.self_dot()).collect();
+    let mut m = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            if self_dots[i] <= 0.0 {
+                m[i][j] = if i == j { 1.0 } else { 0.0 };
+            } else if i == j {
+                m[i][j] = 1.0;
+            } else {
+                m[i][j] = freqs[i].dot(&freqs[j]) / self_dots[i];
+            }
+        }
+    }
+    m
+}
+
+/// Symmetrized distance for DBSCAN: 1 - clamp(mean(c[i][j], c[j][i])).
+pub fn distance_matrix(connectivity: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let n = connectivity.len();
+    let mut d = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            let s = 0.5 * (connectivity[i][j] + connectivity[j][i]);
+            d[i][j] = (1.0 - s).clamp(0.0, 1.0);
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fv(rounds: &[&[u32]]) -> FrequencyVector {
+        let mut f = FrequencyVector::new();
+        for r in rounds {
+            f.record(r);
+        }
+        f
+    }
+
+    #[test]
+    fn identical_histories_have_similarity_one() {
+        let a = fv(&[&[1, 2, 3], &[1, 2, 3]]);
+        let b = fv(&[&[1, 2, 3], &[1, 2, 3]]);
+        let m = connectivity_matrix(&[a, b]);
+        assert!((m[0][1] - 1.0).abs() < 1e-12);
+        assert!((m[1][0] - 1.0).abs() < 1e-12);
+        let d = distance_matrix(&m);
+        assert!(d[0][1] < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_histories_have_similarity_zero() {
+        let a = fv(&[&[1, 2]]);
+        let b = fv(&[&[8, 9]]);
+        let m = connectivity_matrix(&[a, b]);
+        assert_eq!(m[0][1], 0.0);
+        let d = distance_matrix(&m);
+        assert_eq!(d[0][1], 1.0);
+    }
+
+    #[test]
+    fn asymmetry_normalization() {
+        // a's mass is 4x b's: overlap relative to a is smaller
+        let a = fv(&[&[1, 2], &[1, 2], &[1, 2], &[1, 2]]);
+        let b = fv(&[&[1, 2]]);
+        let m = connectivity_matrix(&[a, b]);
+        // <a,b> = 4*1 + 4*1 = 8; <a,a> = 32; <b,b> = 2
+        assert!((m[0][1] - 8.0 / 32.0).abs() < 1e-12);
+        assert!((m[1][0] - 8.0 / 2.0).abs() < 1e-12);
+        // distance symmetrizes and clamps the >1 direction
+        let d = distance_matrix(&m);
+        assert_eq!(d[0][1], d[1][0]);
+        assert_eq!(d[0][1], 0.0); // mean(0.25, 4.0) > 1 -> clamped
+    }
+
+    #[test]
+    fn empty_history_is_isolated() {
+        let a = FrequencyVector::new();
+        let b = fv(&[&[1]]);
+        let m = connectivity_matrix(&[a, b]);
+        assert_eq!(m[0][0], 1.0);
+        assert_eq!(m[0][1], 0.0);
+    }
+}

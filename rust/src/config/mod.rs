@@ -1,0 +1,425 @@
+//! Experiment configuration: JSON-loadable, with the paper's §III-B
+//! presets. Every example/bench builds on these so "run Fig. 3" is one
+//! preset + one strategy flag.
+
+use crate::clustering::{DbscanParams, MergeRule};
+use crate::coordinator::strategies::StrategyKind;
+use crate::data::partition::Scheme;
+use crate::data::Corpus;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Which compute backend trains the clients.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust MLP (MNIST only; artifact-free)
+    Rust,
+    /// PJRT execution of the AOT HLO artifacts (both models)
+    Xla,
+}
+
+/// What the sparse upload carries (DESIGN.md §5 — the paper's Algorithm 1
+/// says "gradient" but its convergence argument leans on Qsparse-local-SGD
+/// [7], which sparsifies accumulated local *updates*; both readings are
+/// implemented).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Payload {
+    /// sparsified model delta (theta_i after H steps - global theta),
+    /// server applies the mean — the reading that actually converges at
+    /// the paper's hyper-parameters (default)
+    Delta,
+    /// paper-literal: the last local step's gradient, applied by the
+    /// server optimizer (Adam on the aggregated sum)
+    Grad,
+}
+
+/// What "accuracy averaged over all users" (Fig. 3/5) evaluates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalMode {
+    /// mean over clients of their post-local-round model on the test
+    /// samples matching their own label distribution (the paper's
+    /// per-user average)
+    Personal,
+    /// the server's global model on the full test set
+    Global,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// registry name: "mnist" | "cifar"
+    pub model: String,
+    pub corpus: Corpus,
+    pub backend: BackendKind,
+    pub strategy: StrategyKind,
+
+    pub n_clients: usize,
+    pub r: usize,
+    pub k: usize,
+    /// local iterations per global round (paper H)
+    pub h: usize,
+    /// recluster period in global rounds (paper M)
+    pub recluster_every: usize,
+    pub batch: usize,
+    /// number of global rounds to run
+    pub rounds: usize,
+    pub lr_client: f32,
+    pub lr_server: f32,
+    /// server optimizer: "adam" | "sgd"
+    pub server_opt: String,
+
+    pub payload: Payload,
+    pub eval_mode: EvalMode,
+
+    pub partition: Scheme,
+    pub dbscan: DbscanParams,
+    pub merge_rule: MergeRule,
+
+    pub seed: u64,
+    pub train_n: usize,
+    pub test_n: usize,
+    /// evaluate the global model every this many rounds (0 = only at end)
+    pub eval_every: usize,
+    pub data_dir: String,
+    pub artifacts_dir: String,
+}
+
+impl ExperimentConfig {
+    /// The paper's MNIST setup (§III-B): 10 clients, paired labels,
+    /// r=75, k=10, H=4, M=20, Adam 1e-4, batch 256.
+    pub fn mnist_paper() -> Self {
+        ExperimentConfig {
+            model: "mnist".into(),
+            corpus: Corpus::Mnist,
+            backend: BackendKind::Rust,
+            strategy: StrategyKind::RageK,
+            n_clients: 10,
+            r: 75,
+            k: 10,
+            h: 4,
+            recluster_every: 20,
+            batch: 256,
+            rounds: 150,
+            lr_client: 1e-4,
+            // the paper's 1e-4 is the *client* Adam; it leaves the server
+            // update unspecified. Server Adam at 1e-2 is the smallest rate
+            // at which the k-sparse global model trains at all on this
+            // testbed (EXPERIMENTS.md §Interpretation).
+            lr_server: 1e-2,
+            server_opt: "adam".into(),
+            payload: Payload::Grad,
+            eval_mode: EvalMode::Global,
+            partition: Scheme::PaperPairs,
+            dbscan: DbscanParams::default(),
+            merge_rule: MergeRule::Min,
+            seed: 42,
+            train_n: 4000,
+            test_n: 1000,
+            eval_every: 5,
+            data_dir: "data".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// MNIST preset time-scaled for the CPU testbed: client lr 1e-3
+    /// compresses the paper's training horizon ~10x so the Fig. 2/3
+    /// shapes land within ~100 rounds (documented in EXPERIMENTS.md).
+    pub fn mnist_scaled() -> Self {
+        let mut c = Self::mnist_paper();
+        c.lr_client = 1e-3;
+        c
+    }
+
+    /// The paper's CIFAR10 setup (§III-B): 6 clients, 3/3/4 label blocks,
+    /// r=2500, k=100, H=100, M=200, Adam 1e-4. Batch/rounds are reduced
+    /// for the CPU testbed (documented in EXPERIMENTS.md); pass the real
+    /// values to reproduce at paper scale on capable hardware.
+    pub fn cifar_paper() -> Self {
+        ExperimentConfig {
+            model: "cifar".into(),
+            corpus: Corpus::Cifar10,
+            backend: BackendKind::Xla,
+            strategy: StrategyKind::RageK,
+            n_clients: 6,
+            r: 2500,
+            k: 100,
+            h: 8,               // paper: 100
+            recluster_every: 8, // paper: 200; scaled with H
+            batch: 64,          // paper: 256
+            rounds: 30,
+            lr_client: 1e-3, // paper: 1e-4; time-scaled like mnist_scaled
+            lr_server: 1e-2, // see mnist_paper note
+            server_opt: "adam".into(),
+            payload: Payload::Grad,
+            eval_mode: EvalMode::Global,
+            partition: Scheme::PaperPairs,
+            dbscan: DbscanParams::default(),
+            merge_rule: MergeRule::Min,
+            seed: 42,
+            train_n: 1800,
+            test_n: 600,
+            eval_every: 5,
+            data_dir: "data".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// Small fast config for tests/CI.
+    pub fn mnist_smoke() -> Self {
+        let mut c = Self::mnist_scaled();
+        c.n_clients = 4;
+        c.rounds = 12;
+        c.batch = 32;
+        c.recluster_every = 4;
+        c.train_n = 400;
+        c.test_n = 200;
+        c.r = 40;
+        c.k = 8;
+        c.eval_every = 3;
+        c
+    }
+
+    pub fn d(&self) -> usize {
+        match self.model.as_str() {
+            "mnist" => 39760,
+            "cifar" => 2515338,
+            _ => 0,
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        match self.corpus {
+            Corpus::Mnist => 784,
+            Corpus::Cifar10 => 3072,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.k > self.r {
+            bail!("k ({}) must be <= r ({})", self.k, self.r);
+        }
+        if self.r > self.d() {
+            bail!("r ({}) must be <= d ({})", self.r, self.d());
+        }
+        if self.n_clients == 0 || self.rounds == 0 || self.h == 0 {
+            bail!("n_clients, rounds and h must be positive");
+        }
+        if self.partition == Scheme::PaperPairs && self.n_clients % 2 != 0 {
+            bail!("PaperPairs partitioning needs an even client count");
+        }
+        if self.backend == BackendKind::Rust && self.model != "mnist" {
+            bail!("the pure-Rust backend only implements the MNIST MLP");
+        }
+        if !matches!(self.server_opt.as_str(), "adam" | "sgd") {
+            bail!("server_opt must be adam or sgd");
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- JSON
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            (
+                "backend",
+                Json::Str(match self.backend {
+                    BackendKind::Rust => "rust".into(),
+                    BackendKind::Xla => "xla".into(),
+                }),
+            ),
+            ("strategy", Json::Str(match self.strategy {
+                StrategyKind::RageK => "ragek",
+                StrategyKind::RageKIndependent => "ragek-indep",
+                StrategyKind::RTopK => "rtopk",
+                StrategyKind::TopK => "topk",
+                StrategyKind::RandK => "randk",
+                StrategyKind::Dense => "dense",
+            }.into())),
+            ("n_clients", Json::Num(self.n_clients as f64)),
+            ("r", Json::Num(self.r as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("h", Json::Num(self.h as f64)),
+            ("recluster_every", Json::Num(self.recluster_every as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("lr_client", Json::Num(self.lr_client as f64)),
+            ("lr_server", Json::Num(self.lr_server as f64)),
+            ("server_opt", Json::Str(self.server_opt.clone())),
+            ("payload", Json::Str(match self.payload {
+                Payload::Delta => "delta".into(),
+                Payload::Grad => "grad".into(),
+            })),
+            ("eval_mode", Json::Str(match self.eval_mode {
+                EvalMode::Personal => "personal".into(),
+                EvalMode::Global => "global".into(),
+            })),
+            ("partition", Json::Str(match &self.partition {
+                Scheme::PaperPairs => "paper-pairs".to_string(),
+                Scheme::Dirichlet { alpha } => format!("dirichlet:{alpha}"),
+                Scheme::Iid => "iid".to_string(),
+            })),
+            ("dbscan_eps", Json::Num(self.dbscan.eps)),
+            ("dbscan_min_pts", Json::Num(self.dbscan.min_pts as f64)),
+            ("merge_rule", Json::Str(match self.merge_rule {
+                MergeRule::Min => "min".into(),
+                MergeRule::Max => "max".into(),
+            })),
+            ("seed", Json::Num(self.seed as f64)),
+            ("train_n", Json::Num(self.train_n as f64)),
+            ("test_n", Json::Num(self.test_n as f64)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("data_dir", Json::Str(self.data_dir.clone())),
+            ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
+        ])
+    }
+
+    /// Load overrides on top of the model's paper preset.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let model = j.get("model").and_then(Json::as_str).unwrap_or("mnist");
+        let mut c = match model {
+            "mnist" => Self::mnist_paper(),
+            "cifar" => Self::cifar_paper(),
+            other => bail!("unknown model {other:?}"),
+        };
+        if let Some(s) = j.get("backend").and_then(Json::as_str) {
+            c.backend = match s {
+                "rust" => BackendKind::Rust,
+                "xla" => BackendKind::Xla,
+                other => bail!("unknown backend {other:?}"),
+            };
+        }
+        if let Some(s) = j.get("strategy").and_then(Json::as_str) {
+            c.strategy =
+                StrategyKind::parse(s).with_context(|| format!("unknown strategy {s:?}"))?;
+        }
+        macro_rules! num {
+            ($field:ident, $key:literal, $ty:ty) => {
+                if let Some(x) = j.get($key).and_then(Json::as_f64) {
+                    c.$field = x as $ty;
+                }
+            };
+        }
+        num!(n_clients, "n_clients", usize);
+        num!(r, "r", usize);
+        num!(k, "k", usize);
+        num!(h, "h", usize);
+        num!(recluster_every, "recluster_every", usize);
+        num!(batch, "batch", usize);
+        num!(rounds, "rounds", usize);
+        num!(lr_client, "lr_client", f32);
+        num!(lr_server, "lr_server", f32);
+        num!(seed, "seed", u64);
+        num!(train_n, "train_n", usize);
+        num!(test_n, "test_n", usize);
+        num!(eval_every, "eval_every", usize);
+        if let Some(s) = j.get("server_opt").and_then(Json::as_str) {
+            c.server_opt = s.to_string();
+        }
+        if let Some(s) = j.get("payload").and_then(Json::as_str) {
+            c.payload = match s {
+                "delta" => Payload::Delta,
+                "grad" => Payload::Grad,
+                other => bail!("unknown payload {other:?}"),
+            };
+        }
+        if let Some(s) = j.get("eval_mode").and_then(Json::as_str) {
+            c.eval_mode = match s {
+                "personal" => EvalMode::Personal,
+                "global" => EvalMode::Global,
+                other => bail!("unknown eval_mode {other:?}"),
+            };
+        }
+        if let Some(s) = j.get("partition").and_then(Json::as_str) {
+            c.partition = if s == "paper-pairs" {
+                Scheme::PaperPairs
+            } else if s == "iid" {
+                Scheme::Iid
+            } else if let Some(a) = s.strip_prefix("dirichlet:") {
+                Scheme::Dirichlet { alpha: a.parse().context("dirichlet alpha")? }
+            } else {
+                bail!("unknown partition {s:?}")
+            };
+        }
+        if let Some(x) = j.get("dbscan_eps").and_then(Json::as_f64) {
+            c.dbscan.eps = x;
+        }
+        if let Some(x) = j.get("dbscan_min_pts").and_then(Json::as_usize) {
+            c.dbscan.min_pts = x;
+        }
+        if let Some(s) = j.get("merge_rule").and_then(Json::as_str) {
+            c.merge_rule = match s {
+                "min" => MergeRule::Min,
+                "max" => MergeRule::Max,
+                other => bail!("unknown merge_rule {other:?}"),
+            };
+        }
+        if let Some(s) = j.get("data_dir").and_then(Json::as_str) {
+            c.data_dir = s.to_string();
+        }
+        if let Some(s) = j.get("artifacts_dir").and_then(Json::as_str) {
+            c.artifacts_dir = s.to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid_and_match_paper() {
+        let m = ExperimentConfig::mnist_paper();
+        m.validate().unwrap();
+        assert_eq!((m.n_clients, m.r, m.k, m.h, m.recluster_every), (10, 75, 10, 4, 20));
+        assert_eq!(m.d(), 39760);
+        let c = ExperimentConfig::cifar_paper();
+        c.validate().unwrap();
+        assert_eq!((c.n_clients, c.r, c.k), (6, 2500, 100));
+        assert_eq!(c.d(), 2515338);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::mnist_paper();
+        cfg.strategy = StrategyKind::RTopK;
+        cfg.partition = Scheme::Dirichlet { alpha: 0.25 };
+        cfg.rounds = 7;
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.strategy, StrategyKind::RTopK);
+        assert_eq!(back.partition, Scheme::Dirichlet { alpha: 0.25 });
+        assert_eq!(back.rounds, 7);
+        assert_eq!(back.batch, cfg.batch);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = ExperimentConfig::mnist_paper();
+        c.k = c.r + 1;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::mnist_paper();
+        c.n_clients = 7; // odd with PaperPairs
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::cifar_paper();
+        c.backend = BackendKind::Rust; // no rust CNN
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::mnist_paper();
+        c.server_opt = "adagrad".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_enums() {
+        let j = Json::parse(r#"{"model": "mnist", "strategy": "bogus"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"model": "vgg"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+}

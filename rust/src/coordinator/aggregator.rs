@@ -1,0 +1,129 @@
+//! Sparse-gradient aggregation: g~ = sum_i g~_i (Algorithm 1 line 10).
+//!
+//! Two materializations, matching the two server-apply artifacts:
+//! * [`Aggregate::to_dense`] — a dense f32[d] update (`apply_dense`);
+//! * [`Aggregate::to_padded_pairs`] — fixed-width (idx, val) arrays padded
+//!   with (0, 0.0) no-ops (`apply_sparse`, whose K_total is baked at AOT
+//!   time).
+
+use crate::sparse::SparseVec;
+
+/// One global round's collected client updates.
+#[derive(Debug, Default)]
+pub struct Aggregate {
+    parts: Vec<SparseVec>,
+    total_entries: usize,
+}
+
+impl Aggregate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, update: SparseVec) {
+        self.total_entries += update.len();
+        self.parts.push(update);
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.total_entries
+    }
+
+    /// Sum into a dense vector, scaling each client's update by `scale`
+    /// (the paper sums; pass 1/N for averaging ablations).
+    pub fn to_dense(&self, d: usize, scale: f32) -> Vec<f32> {
+        let mut out = vec![0.0f32; d];
+        for p in &self.parts {
+            p.add_into(&mut out, scale);
+        }
+        out
+    }
+
+    /// Concatenated (idx, val) pairs padded/truncated to exactly
+    /// `k_total` entries; padding entries are (0, 0.0) which scatter-add
+    /// treats as no-ops. Values are pre-scaled by `scale`.
+    pub fn to_padded_pairs(&self, k_total: usize, scale: f32) -> (Vec<i32>, Vec<f32>) {
+        let mut idx = Vec::with_capacity(k_total);
+        let mut val = Vec::with_capacity(k_total);
+        'outer: for p in &self.parts {
+            for (&i, &v) in p.idx.iter().zip(&p.val) {
+                if idx.len() == k_total {
+                    break 'outer;
+                }
+                idx.push(i as i32);
+                val.push(v * scale);
+            }
+        }
+        idx.resize(k_total, 0);
+        val.resize(k_total, 0.0);
+        (idx, val)
+    }
+
+    /// Union of updated indices this round (the per-cluster eq. (2) input
+    /// is built from the per-client requested sets, not from here, but
+    /// metrics use this to report coverage).
+    pub fn updated_indices(&self) -> std::collections::HashSet<u32> {
+        self.parts.iter().flat_map(|p| p.idx.iter().cloned()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_with_duplicates() {
+        let mut agg = Aggregate::new();
+        agg.push(SparseVec::new(vec![1, 2], vec![1.0, 2.0]));
+        agg.push(SparseVec::new(vec![2, 3], vec![10.0, 30.0]));
+        let dense = agg.to_dense(5, 1.0);
+        assert_eq!(dense, vec![0.0, 1.0, 12.0, 30.0, 0.0]);
+        assert_eq!(agg.n_clients(), 2);
+        assert_eq!(agg.total_entries(), 4);
+    }
+
+    #[test]
+    fn scaling_is_linear() {
+        let mut agg = Aggregate::new();
+        agg.push(SparseVec::new(vec![0], vec![4.0]));
+        assert_eq!(agg.to_dense(2, 0.25)[0], 1.0);
+    }
+
+    #[test]
+    fn padded_pairs_roundtrip_to_dense() {
+        let mut agg = Aggregate::new();
+        agg.push(SparseVec::new(vec![1, 4], vec![1.0, 2.0]));
+        agg.push(SparseVec::new(vec![1], vec![5.0]));
+        let (idx, val) = agg.to_padded_pairs(6, 1.0);
+        assert_eq!(idx.len(), 6);
+        // scatter them manually
+        let mut dense = vec![0.0f32; 5];
+        for (&i, &v) in idx.iter().zip(&val) {
+            dense[i as usize] += v;
+        }
+        assert_eq!(dense, agg.to_dense(5, 1.0));
+    }
+
+    #[test]
+    fn truncation_drops_overflow() {
+        let mut agg = Aggregate::new();
+        agg.push(SparseVec::new(vec![0, 1, 2], vec![1.0, 1.0, 1.0]));
+        let (idx, val) = agg.to_padded_pairs(2, 1.0);
+        assert_eq!(idx, vec![0, 1]);
+        assert_eq!(val, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn updated_indices_union() {
+        let mut agg = Aggregate::new();
+        agg.push(SparseVec::new(vec![1, 2], vec![1.0, 1.0]));
+        agg.push(SparseVec::new(vec![2, 9], vec![1.0, 1.0]));
+        let u = agg.updated_indices();
+        assert_eq!(u.len(), 3);
+        assert!(u.contains(&9));
+    }
+}

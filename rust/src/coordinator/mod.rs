@@ -1,0 +1,18 @@
+//! The parameter-server coordinator — the paper's system contribution.
+//!
+//! * [`selection`] — Algorithm 2's PS side: age-ranked choice of k indices
+//!   out of each client's top-r report, with disjoint assignment across
+//!   the members of a cluster.
+//! * [`strategies`] — the pluggable sparsification policies: rAge-k and
+//!   the baselines it is evaluated against (rTop-k, top-k, rand-k, dense).
+//! * [`aggregator`] — g~ = sum_i g~_i and its dense/sparse materialization.
+//! * [`server`] — the PS state machine gluing age vectors, frequency
+//!   vectors, clustering and selection into the per-round protocol.
+
+pub mod aggregator;
+pub mod selection;
+pub mod server;
+pub mod strategies;
+
+pub use server::ParameterServer;
+pub use strategies::StrategyKind;

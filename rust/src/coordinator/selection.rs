@@ -1,0 +1,187 @@
+//! Algorithm 2, PS side: given a client's top-r index report (magnitude-
+//! ordered) and the cluster age vector, request the k **oldest** of the
+//! reported indices.
+//!
+//! Tie-breaking matches `jax.lax.top_k` over `age[top_ind]`: equal ages
+//! resolve to the earlier report position, i.e. the larger |gradient|
+//! (python/tests/test_ragek_semantics.py pins the same contract).
+
+use crate::age::AgeVector;
+
+/// Pick `k` indices from `report` (positions ordered by |g| desc) with the
+/// highest age. Returns them ordered by (age desc, report rank asc).
+pub fn select_oldest_k(age: &AgeVector, report: &[u32], k: usize) -> Vec<u32> {
+    assert!(k <= report.len(), "k={k} > r={}", report.len());
+    let mut pos: Vec<usize> = (0..report.len()).collect();
+    pos.sort_by(|&a, &b| {
+        let (aa, ab) = (age.get(report[a] as usize), age.get(report[b] as usize));
+        ab.cmp(&aa).then_with(|| a.cmp(&b))
+    });
+    pos.truncate(k);
+    pos.into_iter().map(|p| report[p]).collect()
+}
+
+/// Cluster-coordinated selection (paper §I: "the merged vectors can be
+/// used by the PS to strategically choose a **disjoint** set of indices to
+/// request updates on from each individual client within the same
+/// cluster").
+///
+/// Clients are processed in the given order against one shared age
+/// vector; indices already assigned to a sibling this round are skipped.
+/// If a report has fewer than k unassigned indices left, the remainder is
+/// filled with already-assigned indices (graceful overlap) so every client
+/// still uploads exactly k values.
+pub fn select_disjoint(
+    age: &AgeVector,
+    reports: &[&[u32]],
+    k: usize,
+) -> Vec<Vec<u32>> {
+    let mut taken: std::collections::HashSet<u32> = Default::default();
+    let mut out = Vec::with_capacity(reports.len());
+    for report in reports {
+        assert!(k <= report.len(), "k={k} > r={}", report.len());
+        let mut pos: Vec<usize> = (0..report.len()).collect();
+        pos.sort_by(|&a, &b| {
+            let (aa, ab) = (age.get(report[a] as usize), age.get(report[b] as usize));
+            ab.cmp(&aa).then_with(|| a.cmp(&b))
+        });
+        let mut sel: Vec<u32> = Vec::with_capacity(k);
+        // first pass: unassigned indices in age order
+        for &p in &pos {
+            if sel.len() == k {
+                break;
+            }
+            let j = report[p];
+            if !taken.contains(&j) && !sel.contains(&j) {
+                sel.push(j);
+            }
+        }
+        // fallback: allow overlap to fill up to k
+        for &p in &pos {
+            if sel.len() == k {
+                break;
+            }
+            let j = report[p];
+            if !sel.contains(&j) {
+                sel.push(j);
+            }
+        }
+        for &j in &sel {
+            taken.insert(j);
+        }
+        out.push(sel);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn age_from(ages: &[u32]) -> AgeVector {
+        // build an AgeVector with the given raw ages via repeated updates
+        let mut a = AgeVector::new(ages.len());
+        let maxage = ages.iter().cloned().max().unwrap_or(0);
+        for round in 0..maxage {
+            // an index with target age t must be last reset at maxage - t
+            let resets: Vec<u32> = (0..ages.len() as u32)
+                .filter(|&j| maxage - ages[j as usize] > round)
+                .collect();
+            a.update(&resets);
+        }
+        // indices with age == maxage were never reset; their age equals
+        // rounds elapsed which is maxage. verify:
+        for (j, &want) in ages.iter().enumerate() {
+            assert_eq!(a.get(j), want, "setup failed at {j}");
+        }
+        a
+    }
+
+    #[test]
+    fn picks_oldest_with_magnitude_tiebreak() {
+        let age = age_from(&[5, 0, 2, 2, 9]);
+        // report ordered by |g| desc: indices 1 (age 0), 2 (2), 3 (2), 4 (9)
+        let sel = select_oldest_k(&age, &[1, 2, 3, 4], 2);
+        assert_eq!(sel, vec![4, 2]); // oldest first; tie 2-vs-3 -> rank
+    }
+
+    #[test]
+    fn k_equals_r_returns_whole_report() {
+        let age = age_from(&[1, 1, 1]);
+        let sel = select_oldest_k(&age, &[2, 0, 1], 3);
+        assert_eq!(sel.len(), 3);
+        let set: std::collections::HashSet<u32> = sel.into_iter().collect();
+        assert_eq!(set, [0u32, 1, 2].into_iter().collect());
+    }
+
+    #[test]
+    fn uniform_age_degenerates_to_topk() {
+        let age = AgeVector::new(10);
+        let sel = select_oldest_k(&age, &[7, 3, 9, 1], 2);
+        assert_eq!(sel, vec![7, 3]); // report rank order = |g| order
+    }
+
+    #[test]
+    fn disjoint_assignment_covers_more_indices() {
+        let age = AgeVector::new(8);
+        let r1: &[u32] = &[0, 1, 2, 3];
+        let r2: &[u32] = &[0, 1, 2, 3];
+        let sels = select_disjoint(&age, &[r1, r2], 2);
+        assert_eq!(sels[0], vec![0, 1]);
+        assert_eq!(sels[1], vec![2, 3], "sibling must get disjoint indices");
+        let all: std::collections::HashSet<u32> =
+            sels.iter().flatten().cloned().collect();
+        assert_eq!(all.len(), 4);
+    }
+
+    #[test]
+    fn disjoint_falls_back_to_overlap_when_exhausted() {
+        let age = AgeVector::new(4);
+        let r1: &[u32] = &[0, 1];
+        let r2: &[u32] = &[0, 1];
+        let sels = select_disjoint(&age, &[r1, r2], 2);
+        assert_eq!(sels[0], vec![0, 1]);
+        assert_eq!(sels[1], vec![0, 1]); // nothing left: overlap allowed
+    }
+
+    #[test]
+    fn disjoint_respects_age_priority() {
+        let age = age_from(&[0, 9, 0, 9]);
+        let r: &[u32] = &[0, 1, 2, 3];
+        let sels = select_disjoint(&age, &[r, r], 2);
+        assert_eq!(sels[0], vec![1, 3]); // the two old ones
+        assert_eq!(sels[1], vec![0, 2]); // freshest remain for sibling
+    }
+
+    #[test]
+    fn selection_properties_hold_randomly() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        for _ in 0..50 {
+            let d = 50 + rng.below(200);
+            let r = 5 + rng.below(20);
+            let k = 1 + rng.below(r.min(10));
+            let mut age = AgeVector::new(d);
+            for _ in 0..rng.below(30) {
+                let take = rng.below(8) + 1;
+                let sel: Vec<u32> =
+                    rng.choose_k(d, take).into_iter().map(|x| x as u32).collect();
+                age.update(&sel);
+            }
+            let report: Vec<u32> =
+                rng.choose_k(d, r).into_iter().map(|x| x as u32).collect();
+            let sel = select_oldest_k(&age, &report, k);
+            // property 1: k distinct indices, all from the report
+            assert_eq!(sel.len(), k);
+            let set: std::collections::HashSet<u32> = sel.iter().cloned().collect();
+            assert_eq!(set.len(), k);
+            assert!(sel.iter().all(|j| report.contains(j)));
+            // property 2: no unselected report index is strictly older
+            let min_sel = sel.iter().map(|&j| age.get(j as usize)).min().unwrap();
+            for &j in &report {
+                if !set.contains(&j) {
+                    assert!(age.get(j as usize) <= min_sel);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! The parameter-server state machine: owns the per-cluster age vectors,
+//! per-client frequency vectors, and the M-periodic DBSCAN reclustering —
+//! Algorithms 1 + 2 of the paper from the PS's point of view.
+
+use crate::age::FrequencyVector;
+use crate::clustering::{
+    connectivity_matrix, dbscan, distance_matrix, ClusterManager, DbscanParams, MergeRule,
+};
+use crate::coordinator::selection::{select_disjoint, select_oldest_k};
+use crate::coordinator::strategies::StrategyKind;
+
+/// PS configuration subset (see `config::ExperimentConfig` for the full
+/// experiment config this is derived from).
+#[derive(Debug, Clone)]
+pub struct PsConfig {
+    pub d: usize,
+    pub n_clients: usize,
+    pub k: usize,
+    pub strategy: StrategyKind,
+    /// recluster every M global rounds (0 disables clustering)
+    pub recluster_every: usize,
+    pub dbscan: DbscanParams,
+    pub merge_rule: MergeRule,
+}
+
+#[derive(Debug)]
+pub struct ParameterServer {
+    cfg: PsConfig,
+    clusters: ClusterManager,
+    freqs: Vec<FrequencyVector>,
+    round: usize,
+    /// reclustering events log: (round, n_clusters)
+    pub recluster_log: Vec<(usize, usize)>,
+}
+
+impl ParameterServer {
+    pub fn new(cfg: PsConfig) -> Self {
+        let clusters = ClusterManager::new(cfg.n_clients, cfg.d, cfg.merge_rule);
+        let freqs = (0..cfg.n_clients).map(|_| FrequencyVector::new()).collect();
+        ParameterServer { cfg, clusters, freqs, round: 0, recluster_log: Vec::new() }
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    pub fn config(&self) -> &PsConfig {
+        &self.cfg
+    }
+
+    pub fn clusters(&self) -> &ClusterManager {
+        &self.clusters
+    }
+
+    /// Algorithm 2, PS side: map each client's top-r report to the k
+    /// indices the PS requests. Only meaningful for the rAge-k kinds.
+    /// Reports are magnitude-ordered index lists, one per client.
+    pub fn select_requests(&self, reports: &[Vec<u32>]) -> Vec<Vec<u32>> {
+        assert_eq!(reports.len(), self.cfg.n_clients);
+        assert!(self.cfg.strategy.needs_report());
+        let disjoint = self.cfg.strategy == StrategyKind::RageK;
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); reports.len()];
+        for cluster in 0..self.clusters.n_clusters() {
+            let members = self.clusters.members_of(cluster).to_vec();
+            let age = self.clusters.age_of_cluster(cluster);
+            if disjoint && members.len() > 1 {
+                let member_reports: Vec<&[u32]> =
+                    members.iter().map(|&m| reports[m].as_slice()).collect();
+                let sels = select_disjoint(age, &member_reports, self.cfg.k);
+                for (m, sel) in members.iter().zip(sels) {
+                    out[*m] = sel;
+                }
+            } else {
+                for &m in &members {
+                    out[m] = select_oldest_k(age, &reports[m], self.cfg.k);
+                }
+            }
+        }
+        out
+    }
+
+    /// Commit a completed round: frequency bookkeeping for every client
+    /// and the eq. (2) sweep for every cluster (union of its members'
+    /// requested indices). `requested[i]` is what client i uploaded.
+    pub fn record_round(&mut self, requested: &[Vec<u32>]) {
+        assert_eq!(requested.len(), self.cfg.n_clients);
+        for (f, req) in self.freqs.iter_mut().zip(requested) {
+            f.record(req);
+        }
+        if self.cfg.strategy.uses_age() {
+            for cluster in 0..self.clusters.n_clusters() {
+                let mut union: Vec<u32> = Vec::new();
+                for &m in self.clusters.members_of(cluster) {
+                    union.extend_from_slice(&requested[m]);
+                }
+                union.sort_unstable();
+                union.dedup();
+                self.clusters.update_ages(cluster, &union);
+            }
+        }
+        self.round += 1;
+    }
+
+    /// The eq. (3) connectivity matrix (Fig. 2 / Fig. 4 heatmap payload).
+    pub fn connectivity(&self) -> Vec<Vec<f64>> {
+        connectivity_matrix(&self.freqs)
+    }
+
+    /// Run the M-periodic clustering step if due. Returns the new number
+    /// of clusters when reclustering ran.
+    pub fn maybe_recluster(&mut self) -> Option<usize> {
+        if !self.cfg.strategy.uses_age()
+            || self.cfg.recluster_every == 0
+            || self.round == 0
+            || self.round % self.cfg.recluster_every != 0
+        {
+            return None;
+        }
+        Some(self.force_recluster())
+    }
+
+    /// Unconditional clustering pass (used by `maybe_recluster` and the
+    /// clustering examples/benches).
+    pub fn force_recluster(&mut self) -> usize {
+        let conn = self.connectivity();
+        let dist = distance_matrix(&conn);
+        let labels = dbscan(&dist, self.cfg.dbscan);
+        let ev = self.clusters.recluster(&labels);
+        self.recluster_log.push((self.round, ev.n_clusters));
+        crate::debug!(
+            "recluster @round {}: {} clusters ({} merges, {} resets)",
+            self.round,
+            ev.n_clusters,
+            ev.merges,
+            ev.resets
+        );
+        ev.n_clusters
+    }
+
+    pub fn frequency(&self, client: usize) -> &FrequencyVector {
+        &self.freqs[client]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ps(n: usize, d: usize, k: usize, strategy: StrategyKind, m: usize) -> ParameterServer {
+        ParameterServer::new(PsConfig {
+            d,
+            n_clients: n,
+            k,
+            strategy,
+            recluster_every: m,
+            dbscan: DbscanParams::default(),
+            merge_rule: MergeRule::Min,
+        })
+    }
+
+    #[test]
+    fn requests_come_from_reports() {
+        let server = ps(2, 100, 2, StrategyKind::RageK, 10);
+        let reports = vec![vec![5u32, 7, 9, 11], vec![20u32, 22, 24, 26]];
+        let req = server.select_requests(&reports);
+        assert_eq!(req[0].len(), 2);
+        assert!(req[0].iter().all(|j| reports[0].contains(j)));
+        assert!(req[1].iter().all(|j| reports[1].contains(j)));
+    }
+
+    #[test]
+    fn fresh_ages_select_top_magnitude() {
+        let server = ps(1, 50, 3, StrategyKind::RageK, 10);
+        let req = server.select_requests(&[vec![9, 1, 5, 30, 2]]);
+        assert_eq!(req[0], vec![9, 1, 5]); // all ages 0 -> rank order
+    }
+
+    #[test]
+    fn age_rotation_across_rounds() {
+        let mut server = ps(1, 50, 2, StrategyKind::RageK, 0);
+        let report = vec![10u32, 11, 12, 13];
+        let r1 = server.select_requests(&[report.clone()]);
+        server.record_round(&r1);
+        let r2 = server.select_requests(&[report.clone()]);
+        server.record_round(&r2);
+        // round 1 takes {10,11}; their age resets; round 2 must take {12,13}
+        assert_eq!(r1[0], vec![10, 11]);
+        assert_eq!(r2[0], vec![12, 13]);
+    }
+
+    #[test]
+    fn clustered_pair_gets_disjoint_requests() {
+        let mut server = ps(2, 100, 2, StrategyKind::RageK, 1);
+        // identical request histories -> similarity 1 -> same cluster
+        let same = vec![vec![1u32, 2, 3, 4], vec![1u32, 2, 3, 4]];
+        let req = server.select_requests(&same);
+        server.record_round(&req);
+        let n = server.maybe_recluster().unwrap();
+        assert_eq!(n, 1, "identical clients must cluster");
+        let req2 = server.select_requests(&same);
+        let s0: std::collections::HashSet<_> = req2[0].iter().collect();
+        assert!(req2[1].iter().all(|j| !s0.contains(j)), "{req2:?}");
+    }
+
+    #[test]
+    fn independent_variant_overlaps() {
+        let mut server = ps(2, 100, 2, StrategyKind::RageKIndependent, 1);
+        let same = vec![vec![1u32, 2, 3, 4], vec![1u32, 2, 3, 4]];
+        let req = server.select_requests(&same);
+        server.record_round(&req);
+        server.maybe_recluster();
+        let req2 = server.select_requests(&same);
+        assert_eq!(req2[0], req2[1], "independent members share the oldest picks");
+    }
+
+    #[test]
+    fn dissimilar_clients_stay_separate() {
+        let mut server = ps(2, 100, 2, StrategyKind::RageK, 1);
+        for _ in 0..3 {
+            let reports = vec![vec![1u32, 2, 3, 4], vec![50u32, 51, 52, 53]];
+            let req = server.select_requests(&reports);
+            server.record_round(&req);
+        }
+        server.force_recluster();
+        assert_eq!(server.clusters().n_clusters(), 2);
+    }
+
+    #[test]
+    fn recluster_cadence() {
+        let mut server = ps(2, 10, 1, StrategyKind::RageK, 3);
+        let reports = vec![vec![1u32, 2], vec![1u32, 2]];
+        for round in 1..=7 {
+            let req = server.select_requests(&reports);
+            server.record_round(&req);
+            let did = server.maybe_recluster().is_some();
+            assert_eq!(did, round % 3 == 0, "round {round}");
+        }
+        assert_eq!(server.recluster_log.len(), 2);
+    }
+}

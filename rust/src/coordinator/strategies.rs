@@ -1,0 +1,194 @@
+//! Sparsification strategies: rAge-k and the baselines the paper compares
+//! against (§III-C evaluates rTop-k at identical (r, k); top-k, rand-k
+//! and dense are standard additions exercised by the ablation benches).
+//!
+//! A strategy is split along the wire protocol:
+//! * **PS-side** strategies (rAge-k) need the client's top-r index report
+//!   and answer with a request (`needs_report() == true`);
+//! * **client-side** strategies (rTop-k, top-k, rand-k, dense) decide
+//!   locally; no report/request messages are exchanged.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// The paper's algorithm: PS picks the k oldest of the reported
+    /// top-r, disjointly across cluster members.
+    RageK,
+    /// Ablation: rAge-k without the disjoint coordination (each member
+    /// selected independently against the shared age vector).
+    RageKIndependent,
+    /// rTop-k (Barnes et al.): client uniformly samples k of its top-r.
+    RTopK,
+    /// Plain top-k sparsification (k largest |g|).
+    TopK,
+    /// k uniformly random coordinates of the full gradient.
+    RandK,
+    /// No compression (upper-bound baseline).
+    Dense,
+}
+
+impl StrategyKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "ragek" | "rage-k" => StrategyKind::RageK,
+            "ragek-indep" | "ragek_independent" => StrategyKind::RageKIndependent,
+            "rtopk" | "rtop-k" => StrategyKind::RTopK,
+            "topk" | "top-k" => StrategyKind::TopK,
+            "randk" | "rand-k" => StrategyKind::RandK,
+            "dense" => StrategyKind::Dense,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::RageK => "rAge-k",
+            StrategyKind::RageKIndependent => "rAge-k(indep)",
+            StrategyKind::RTopK => "rTop-k",
+            StrategyKind::TopK => "top-k",
+            StrategyKind::RandK => "rand-k",
+            StrategyKind::Dense => "dense",
+        }
+    }
+
+    /// Does the PS receive a top-r index report and answer with a request?
+    pub fn needs_report(&self) -> bool {
+        matches!(self, StrategyKind::RageK | StrategyKind::RageKIndependent)
+    }
+
+    /// Does the client need its *full* gradient (vs just the top-r)?
+    pub fn needs_dense_grad(&self) -> bool {
+        matches!(self, StrategyKind::RandK | StrategyKind::Dense)
+    }
+
+    /// Does the PS run age/frequency/clustering state for this strategy?
+    pub fn uses_age(&self) -> bool {
+        self.needs_report()
+    }
+
+    /// Uplink bytes one client spends per global round (DESIGN.md §6):
+    /// report (4r) if any + sparse update (8 per entry).
+    pub fn uplink_bytes(&self, d: usize, r: usize, k: usize) -> usize {
+        match self {
+            StrategyKind::RageK | StrategyKind::RageKIndependent => 4 * r + 8 * k,
+            StrategyKind::RTopK | StrategyKind::TopK | StrategyKind::RandK => 8 * k,
+            StrategyKind::Dense => 4 * d,
+        }
+    }
+
+    /// Extra downlink bytes per client per round beyond the model
+    /// broadcast: the index request (4k) for PS-side strategies.
+    pub fn request_bytes(&self, k: usize) -> usize {
+        if self.needs_report() {
+            4 * k
+        } else {
+            0
+        }
+    }
+}
+
+/// Client-side selection for the non-age strategies. `report` is the
+/// magnitude-ordered top-r index list; returns the indices to upload.
+pub fn client_select(
+    kind: StrategyKind,
+    rng: &mut Rng,
+    report: &[u32],
+    d: usize,
+    k: usize,
+) -> Vec<u32> {
+    match kind {
+        StrategyKind::RTopK => {
+            // uniform k-subset of the top-r (the rTop-k algorithm)
+            rng.choose_k(report.len(), k).into_iter().map(|p| report[p]).collect()
+        }
+        StrategyKind::TopK => report[..k].to_vec(),
+        StrategyKind::RandK => rng.choose_k(d, k).into_iter().map(|j| j as u32).collect(),
+        StrategyKind::Dense => (0..d as u32).collect(),
+        StrategyKind::RageK | StrategyKind::RageKIndependent => {
+            unreachable!("rAge-k selection happens at the PS")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for (s, k) in [
+            ("ragek", StrategyKind::RageK),
+            ("rtopk", StrategyKind::RTopK),
+            ("topk", StrategyKind::TopK),
+            ("randk", StrategyKind::RandK),
+            ("dense", StrategyKind::Dense),
+            ("ragek-indep", StrategyKind::RageKIndependent),
+        ] {
+            assert_eq!(StrategyKind::parse(s), Some(k));
+        }
+        assert_eq!(StrategyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let d = 39760;
+        assert_eq!(StrategyKind::RageK.uplink_bytes(d, 75, 10), 4 * 75 + 80);
+        assert_eq!(StrategyKind::RTopK.uplink_bytes(d, 75, 10), 80);
+        assert_eq!(StrategyKind::Dense.uplink_bytes(d, 0, 0), 4 * d);
+        assert_eq!(StrategyKind::RageK.request_bytes(10), 40);
+        assert_eq!(StrategyKind::TopK.request_bytes(10), 0);
+    }
+
+    #[test]
+    fn rtopk_is_subset_of_report() {
+        let mut rng = Rng::new(0);
+        let report: Vec<u32> = (100..175).collect();
+        for _ in 0..20 {
+            let sel = client_select(StrategyKind::RTopK, &mut rng, &report, 1000, 10);
+            assert_eq!(sel.len(), 10);
+            let set: std::collections::HashSet<_> = sel.iter().collect();
+            assert_eq!(set.len(), 10);
+            assert!(sel.iter().all(|j| report.contains(j)));
+        }
+    }
+
+    #[test]
+    fn rtopk_actually_explores() {
+        // across many rounds, selections must not always equal the top-k
+        let mut rng = Rng::new(1);
+        let report: Vec<u32> = (0..75).collect();
+        let mut varied = false;
+        for _ in 0..10 {
+            let sel = client_select(StrategyKind::RTopK, &mut rng, &report, 1000, 10);
+            if sel.iter().any(|&j| j >= 10) {
+                varied = true;
+            }
+        }
+        assert!(varied);
+    }
+
+    #[test]
+    fn topk_takes_prefix() {
+        let mut rng = Rng::new(0);
+        let report: Vec<u32> = vec![9, 4, 7, 1, 3];
+        let sel = client_select(StrategyKind::TopK, &mut rng, &report, 100, 3);
+        assert_eq!(sel, vec![9, 4, 7]);
+    }
+
+    #[test]
+    fn randk_distinct_in_range() {
+        let mut rng = Rng::new(2);
+        let sel = client_select(StrategyKind::RandK, &mut rng, &[], 50, 20);
+        let set: std::collections::HashSet<_> = sel.iter().collect();
+        assert_eq!(set.len(), 20);
+        assert!(sel.iter().all(|&j| j < 50));
+    }
+
+    #[test]
+    fn dense_selects_everything() {
+        let mut rng = Rng::new(2);
+        let sel = client_select(StrategyKind::Dense, &mut rng, &[], 7, 0);
+        assert_eq!(sel, (0..7).collect::<Vec<u32>>());
+    }
+}

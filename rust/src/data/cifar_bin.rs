@@ -1,0 +1,111 @@
+//! CIFAR-10 binary-batch parser (`data_batch_1.bin` .. `data_batch_5.bin`,
+//! `test_batch.bin`; 1 label byte + 3072 CHW pixel bytes per record).
+//! Pixels are converted to NHWC f32 in [0, 1] to match the CNN graph.
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const REC: usize = 1 + 3072;
+const H: usize = 32;
+const W: usize = 32;
+const C: usize = 3;
+
+/// Parse one binary batch file's bytes.
+pub fn parse_batch(bytes: &[u8]) -> Result<Dataset> {
+    if bytes.is_empty() || bytes.len() % REC != 0 {
+        bail!("cifar: file size {} not a multiple of {REC}", bytes.len());
+    }
+    let n = bytes.len() / REC;
+    let mut x = Vec::with_capacity(n * 3072);
+    let mut y = Vec::with_capacity(n);
+    for rec in bytes.chunks_exact(REC) {
+        let label = rec[0];
+        if label > 9 {
+            bail!("cifar: label {label} out of range");
+        }
+        y.push(label);
+        let px = &rec[1..];
+        // stored CHW planes (R, G, B); emit HWC
+        for yy in 0..H {
+            for xx in 0..W {
+                for c in 0..C {
+                    x.push(px[c * H * W + yy * W + xx] as f32 / 255.0);
+                }
+            }
+        }
+    }
+    Ok(Dataset { x, y, dim: 3072, num_classes: 10 })
+}
+
+fn append(dst: &mut Dataset, src: Dataset) {
+    dst.x.extend(src.x);
+    dst.y.extend(src.y);
+}
+
+/// Load the canonical CIFAR-10 binary layout from a directory (accepts
+/// files directly in `dir` or under `dir/cifar-10-batches-bin/`).
+pub fn load_cifar_dir(dir: &str) -> Result<(Dataset, Dataset)> {
+    let base = Path::new(dir);
+    let root = if base.join("data_batch_1.bin").exists() {
+        base.to_path_buf()
+    } else {
+        base.join("cifar-10-batches-bin")
+    };
+    let read = |name: &str| -> Result<Dataset> {
+        let p = root.join(name);
+        let bytes = std::fs::read(&p).with_context(|| format!("reading {p:?}"))?;
+        parse_batch(&bytes)
+    };
+    let mut train = read("data_batch_1.bin")?;
+    for i in 2..=5 {
+        append(&mut train, read(&format!("data_batch_{i}.bin"))?);
+    }
+    let test = read("test_batch.bin")?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(label: u8, fill: u8) -> Vec<u8> {
+        let mut r = vec![label];
+        r.extend(std::iter::repeat(fill).take(3072));
+        r
+    }
+
+    #[test]
+    fn parse_two_records() {
+        let mut bytes = record(3, 255);
+        bytes.extend(record(9, 0));
+        let ds = parse_batch(&bytes).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.y, vec![3, 9]);
+        assert_eq!(ds.dim, 3072);
+        assert!((ds.x[0] - 1.0).abs() < 1e-6);
+        assert_eq!(ds.x[3072], 0.0);
+    }
+
+    #[test]
+    fn chw_to_hwc_transpose() {
+        // R plane = 30, G = 60, B = 90: first HWC pixel must be [30,60,90]/255
+        let mut r = vec![1u8];
+        for (plane, v) in [30u8, 60, 90].iter().enumerate() {
+            let _ = plane;
+            r.extend(std::iter::repeat(*v).take(1024));
+        }
+        let ds = parse_batch(&r).unwrap();
+        for (i, want) in [30.0, 60.0, 90.0].iter().enumerate() {
+            assert!((ds.x[i] - want / 255.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_sizes_and_labels() {
+        assert!(parse_batch(&[0u8; 100]).is_err());
+        assert!(parse_batch(&[]).is_err());
+        let bad = record(11, 0);
+        assert!(parse_batch(&bad).is_err());
+    }
+}

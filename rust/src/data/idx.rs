@@ -1,0 +1,150 @@
+//! MNIST IDX format parser (the real-data path; used when the canonical
+//! `train-images-idx3-ubyte` etc. files are dropped under `data/`).
+//! Supports the raw and `.gz` forms (flate2 is in the offline registry).
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// Parse an IDX payload (magic, dims, u8 data).
+pub fn parse_idx(bytes: &[u8]) -> Result<(Vec<usize>, Vec<u8>)> {
+    if bytes.len() < 4 {
+        bail!("idx: truncated header");
+    }
+    if bytes[0] != 0 || bytes[1] != 0 {
+        bail!("idx: bad magic {:02x}{:02x}", bytes[0], bytes[1]);
+    }
+    if bytes[2] != 0x08 {
+        bail!("idx: only u8 payloads supported (type 0x{:02x})", bytes[2]);
+    }
+    let ndim = bytes[3] as usize;
+    let mut off = 4;
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        if off + 4 > bytes.len() {
+            bail!("idx: truncated dims");
+        }
+        dims.push(u32::from_be_bytes(bytes[off..off + 4].try_into().unwrap()) as usize);
+        off += 4;
+    }
+    let total: usize = dims.iter().product();
+    if bytes.len() - off < total {
+        bail!("idx: payload shorter than dims imply ({} < {total})", bytes.len() - off);
+    }
+    Ok((dims, bytes[off..off + total].to_vec()))
+}
+
+fn read_maybe_gz(path: &Path) -> Result<Vec<u8>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if raw.len() >= 2 && raw[0] == 0x1f && raw[1] == 0x8b {
+        let mut out = Vec::new();
+        flate2::read::GzDecoder::new(&raw[..])
+            .read_to_end(&mut out)
+            .context("gunzip")?;
+        Ok(out)
+    } else {
+        Ok(raw)
+    }
+}
+
+fn find_file(dir: &Path, stem: &str) -> Result<Vec<u8>> {
+    for cand in [stem.to_string(), format!("{stem}.gz")] {
+        let p = dir.join(&cand);
+        if p.exists() {
+            return read_maybe_gz(&p);
+        }
+    }
+    bail!("{stem}[.gz] not found in {dir:?}")
+}
+
+/// Build a `Dataset` from IDX image + label payloads.
+pub fn dataset_from_idx(images: &[u8], labels: &[u8]) -> Result<Dataset> {
+    let (idim, ibytes) = parse_idx(images)?;
+    let (ldim, lbytes) = parse_idx(labels)?;
+    if idim.len() != 3 || ldim.len() != 1 || idim[0] != ldim[0] {
+        bail!("idx: unexpected shapes {idim:?} / {ldim:?}");
+    }
+    let dim = idim[1] * idim[2];
+    let x: Vec<f32> = ibytes.iter().map(|&b| b as f32 / 255.0).collect();
+    Ok(Dataset { x, y: lbytes, dim, num_classes: 10 })
+}
+
+/// Load the canonical MNIST 4-file layout from a directory.
+pub fn load_mnist_dir(dir: &str) -> Result<(Dataset, Dataset)> {
+    let dir = Path::new(dir);
+    let train = dataset_from_idx(
+        &find_file(dir, "train-images-idx3-ubyte")?,
+        &find_file(dir, "train-labels-idx1-ubyte")?,
+    )?;
+    let test = dataset_from_idx(
+        &find_file(dir, "t10k-images-idx3-ubyte")?,
+        &find_file(dir, "t10k-labels-idx1-ubyte")?,
+    )?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_idx_images(n: usize, h: usize, w: usize) -> Vec<u8> {
+        let mut b = vec![0, 0, 0x08, 3];
+        for d in [n, h, w] {
+            b.extend_from_slice(&(d as u32).to_be_bytes());
+        }
+        b.extend((0..n * h * w).map(|i| (i % 251) as u8));
+        b
+    }
+
+    fn make_idx_labels(n: usize) -> Vec<u8> {
+        let mut b = vec![0, 0, 0x08, 1];
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend((0..n).map(|i| (i % 10) as u8));
+        b
+    }
+
+    #[test]
+    fn parse_synthetic_idx() {
+        let img = make_idx_images(3, 4, 5);
+        let (dims, data) = parse_idx(&img).unwrap();
+        assert_eq!(dims, vec![3, 4, 5]);
+        assert_eq!(data.len(), 60);
+        let ds = dataset_from_idx(&img, &make_idx_labels(3)).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim, 20);
+        assert_eq!(ds.y, vec![0, 1, 2]);
+        assert!((ds.x[1] - 1.0 / 255.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_idx(&[]).is_err());
+        assert!(parse_idx(&[1, 2, 3, 4]).is_err()); // bad magic
+        assert!(parse_idx(&[0, 0, 0x0d, 1, 0, 0, 0, 1, 9]).is_err()); // f32 type
+        let mut img = make_idx_images(2, 2, 2);
+        img.truncate(img.len() - 1); // short payload
+        assert!(parse_idx(&img).is_err());
+    }
+
+    #[test]
+    fn mismatched_counts_rejected() {
+        let img = make_idx_images(3, 2, 2);
+        let lab = make_idx_labels(4);
+        assert!(dataset_from_idx(&img, &lab).is_err());
+    }
+
+    #[test]
+    fn gz_roundtrip() {
+        use std::io::Write;
+        let img = make_idx_images(2, 3, 3);
+        let tmp = std::env::temp_dir().join("ragek_idx_test.gz");
+        let f = std::fs::File::create(&tmp).unwrap();
+        let mut enc = flate2::write::GzEncoder::new(f, flate2::Compression::fast());
+        enc.write_all(&img).unwrap();
+        enc.finish().unwrap();
+        let back = read_maybe_gz(&tmp).unwrap();
+        assert_eq!(back, img);
+        std::fs::remove_file(&tmp).ok();
+    }
+}

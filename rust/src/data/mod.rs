@@ -1,0 +1,201 @@
+//! Datasets and non-iid partitioning.
+//!
+//! The testbed has no network access, so the paper's MNIST/CIFAR10
+//! downloads are substituted with seeded **synthetic** counterparts
+//! ([`synth`]) that keep the properties rAge-k actually depends on
+//! (DESIGN.md §3): same tensor shapes, 10 classes, learnable to high
+//! accuracy, and label-dependent gradient support so frequency vectors
+//! cluster clients by label set. Real-format parsers ([`idx`],
+//! [`cifar_bin`]) are provided — drop the canonical files under `data/`
+//! and [`load_dataset`] picks them up instead.
+
+pub mod cifar_bin;
+pub mod idx;
+pub mod partition;
+pub mod synth;
+
+use crate::util::rng::Rng;
+
+/// An in-memory labelled image dataset with flat f32 samples.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// row-major [n, dim] samples, values roughly in [0, 1]
+    pub x: Vec<f32>,
+    /// labels in [0, num_classes)
+    pub y: Vec<u8>,
+    pub dim: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Subset by sample indices (copies).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.sample(i));
+            y.push(self.y[i]);
+        }
+        Dataset { x, y, dim: self.dim, num_classes: self.num_classes }
+    }
+
+    /// Indices of all samples whose label is in `labels`.
+    pub fn indices_with_labels(&self, labels: &[u8]) -> Vec<usize> {
+        (0..self.len()).filter(|&i| labels.contains(&self.y[i])).collect()
+    }
+}
+
+/// Cycling mini-batch iterator with per-epoch reshuffling.
+#[derive(Debug)]
+pub struct BatchIter {
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        BatchIter { order, cursor: 0, rng }
+    }
+
+    /// Next batch of `b` indices (wraps + reshuffles at epoch end; with
+    /// fewer than `b` samples, indices repeat within the batch).
+    pub fn next_batch(&mut self, b: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(b);
+        while out.len() < b {
+            if self.cursor >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+/// Gather a batch into contiguous (x, y) buffers for the backend call.
+pub fn gather_batch(ds: &Dataset, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+    let mut x = Vec::with_capacity(idx.len() * ds.dim);
+    let mut y = Vec::with_capacity(idx.len());
+    for &i in idx {
+        x.extend_from_slice(ds.sample(i));
+        y.push(ds.y[i] as i32);
+    }
+    (x, y)
+}
+
+/// Which corpus an experiment uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Corpus {
+    Mnist,
+    Cifar10,
+}
+
+/// Load (train, test): real files under `data_dir` when present
+/// (MNIST IDX / CIFAR-10 binary batches), otherwise the synthetic
+/// counterpart (documented substitution — DESIGN.md §3).
+pub fn load_dataset(
+    corpus: Corpus,
+    data_dir: &str,
+    seed: u64,
+    train_n: usize,
+    test_n: usize,
+) -> (Dataset, Dataset) {
+    match corpus {
+        Corpus::Mnist => {
+            if let Ok(pair) = idx::load_mnist_dir(data_dir) {
+                crate::info!("data: using real MNIST from {data_dir}");
+                return pair;
+            }
+            crate::info!("data: real MNIST not found under {data_dir}; using synthetic-MNIST");
+            (
+                synth::synthetic_mnist(seed, train_n),
+                synth::synthetic_mnist(seed ^ 0x5eed, test_n),
+            )
+        }
+        Corpus::Cifar10 => {
+            if let Ok(pair) = cifar_bin::load_cifar_dir(data_dir) {
+                crate::info!("data: using real CIFAR-10 from {data_dir}");
+                return pair;
+            }
+            crate::info!("data: real CIFAR-10 not found under {data_dir}; using synthetic-CIFAR");
+            (
+                synth::synthetic_cifar(seed, train_n),
+                synth::synthetic_cifar(seed ^ 0x5eed, test_n),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            x: (0..12).map(|i| i as f32).collect(),
+            y: vec![0, 1, 2],
+            dim: 4,
+            num_classes: 3,
+        }
+    }
+
+    #[test]
+    fn subset_and_sample() {
+        let d = tiny();
+        assert_eq!(d.sample(1), &[4.0, 5.0, 6.0, 7.0]);
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.y, vec![2, 0]);
+        assert_eq!(s.sample(0), &[8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn label_filter() {
+        let d = tiny();
+        assert_eq!(d.indices_with_labels(&[0, 2]), vec![0, 2]);
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let mut it = BatchIter::new(10, 0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..5 {
+            for i in it.next_batch(2) {
+                seen.insert(i);
+            }
+        }
+        assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    fn batch_iter_small_dataset_repeats() {
+        let mut it = BatchIter::new(3, 1);
+        let b = it.next_batch(8);
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|&i| i < 3));
+    }
+
+    #[test]
+    fn gather_batch_layout() {
+        let d = tiny();
+        let (x, y) = gather_batch(&d, &[1, 0]);
+        assert_eq!(x, vec![4.0, 5.0, 6.0, 7.0, 0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![1, 0]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Non-iid client partitioning.
+//!
+//! [`Scheme::PaperPairs`] is the paper's §III-C construction: clients are
+//! paired, each pair owning a disjoint label subset (MNIST: 10 clients /
+//! 5 pairs x 2 labels; CIFAR: 6 clients / 3 pairs x 3-4 labels). The pairs
+//! are the ground-truth clusters DBSCAN must rediscover (Fig. 2/4).
+//! Dirichlet and IID schemes are included for ablations.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scheme {
+    /// The paper's paired-label construction for `n_clients`.
+    PaperPairs,
+    /// Label-distribution skew: per-client class proportions drawn from
+    /// Dirichlet(alpha) (alpha -> 0 extreme non-iid, alpha -> inf iid).
+    Dirichlet { alpha: f64 },
+    /// Uniform random split.
+    Iid,
+}
+
+/// The labels assigned to each client under [`Scheme::PaperPairs`]:
+/// clients 2p and 2p+1 share label block p. Label blocks split
+/// `num_classes` as evenly as possible, remainder going to the last block
+/// (the paper's CIFAR split is 3/3/4).
+pub fn paper_pair_labels(n_clients: usize, num_classes: usize) -> Vec<Vec<u8>> {
+    assert!(n_clients % 2 == 0, "PaperPairs needs an even client count");
+    let n_pairs = n_clients / 2;
+    let base = num_classes / n_pairs;
+    let mut blocks: Vec<Vec<u8>> = Vec::with_capacity(n_pairs);
+    let mut next = 0u8;
+    for p in 0..n_pairs {
+        let take = if p + 1 == n_pairs { num_classes as u8 - next } else { base as u8 };
+        blocks.push((next..next + take).collect());
+        next += take;
+    }
+    (0..n_clients).map(|i| blocks[i / 2].clone()).collect()
+}
+
+/// Ground-truth cluster id per client under [`Scheme::PaperPairs`]
+/// (client i belongs to pair i/2) — what Fig. 2/4 should recover.
+pub fn paper_pair_truth(n_clients: usize) -> Vec<usize> {
+    (0..n_clients).map(|i| i / 2).collect()
+}
+
+/// Split `ds` into per-client sample-index lists. Every sample is assigned
+/// to at most one client; PaperPairs splits each label's samples evenly
+/// between the two clients of its pair.
+pub fn partition(ds: &Dataset, n_clients: usize, scheme: &Scheme, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed ^ 0x9a97);
+    match scheme {
+        Scheme::PaperPairs => {
+            let labels = paper_pair_labels(n_clients, ds.num_classes);
+            let mut out = vec![Vec::new(); n_clients];
+            for class in 0..ds.num_classes as u8 {
+                let holders: Vec<usize> = (0..n_clients)
+                    .filter(|&i| labels[i].contains(&class))
+                    .collect();
+                let mut samples = ds.indices_with_labels(&[class]);
+                rng.shuffle(&mut samples);
+                for (j, s) in samples.into_iter().enumerate() {
+                    out[holders[j % holders.len()]].push(s);
+                }
+            }
+            out
+        }
+        Scheme::Dirichlet { alpha } => {
+            let mut out = vec![Vec::new(); n_clients];
+            for class in 0..ds.num_classes as u8 {
+                let mut samples = ds.indices_with_labels(&[class]);
+                rng.shuffle(&mut samples);
+                let props = dirichlet(&mut rng, n_clients, *alpha);
+                // cumulative cut points over this class's samples
+                let n = samples.len();
+                let mut start = 0usize;
+                let mut acc = 0.0f64;
+                for (i, p) in props.iter().enumerate() {
+                    acc += p;
+                    let end = if i + 1 == n_clients { n } else { (acc * n as f64) as usize };
+                    for &s in &samples[start..end.min(n)] {
+                        out[i].push(s);
+                    }
+                    start = end.min(n);
+                }
+            }
+            out
+        }
+        Scheme::Iid => {
+            let mut all: Vec<usize> = (0..ds.len()).collect();
+            rng.shuffle(&mut all);
+            let mut out = vec![Vec::new(); n_clients];
+            for (j, s) in all.into_iter().enumerate() {
+                out[j % n_clients].push(s);
+            }
+            out
+        }
+    }
+}
+
+/// Sample from Dirichlet(alpha * 1) via normalized Gamma(alpha) draws
+/// (Marsaglia–Tsang for alpha >= 1, boosted for alpha < 1).
+fn dirichlet(rng: &mut Rng, n: usize, alpha: f64) -> Vec<f64> {
+    let mut g: Vec<f64> = (0..n).map(|_| gamma(rng, alpha)).collect();
+    let sum: f64 = g.iter().sum();
+    if sum <= 0.0 {
+        return vec![1.0 / n as f64; n];
+    }
+    for x in g.iter_mut() {
+        *x /= sum;
+    }
+    g
+}
+
+fn gamma(rng: &mut Rng, alpha: f64) -> f64 {
+    if alpha < 1.0 {
+        // Gamma(a) = Gamma(a + 1) * U^(1/a)
+        let u: f64 = rng.uniform().max(1e-300);
+        return gamma(rng, alpha + 1.0) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.gaussian();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u: f64 = rng.uniform();
+        if u < 1.0 - 0.0331 * x.powi(4) || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::synthetic_mnist;
+
+    #[test]
+    fn paper_labels_mnist_layout() {
+        let labels = paper_pair_labels(10, 10);
+        assert_eq!(labels[0], vec![0, 1]);
+        assert_eq!(labels[1], vec![0, 1]);
+        assert_eq!(labels[8], vec![8, 9]);
+        assert_eq!(labels[9], vec![8, 9]);
+    }
+
+    #[test]
+    fn paper_labels_cifar_layout() {
+        // 6 clients / 3 pairs over 10 classes -> 3/3/4 (paper §III-C)
+        let labels = paper_pair_labels(6, 10);
+        assert_eq!(labels[0], vec![0, 1, 2]);
+        assert_eq!(labels[2], vec![3, 4, 5]);
+        assert_eq!(labels[4], vec![6, 7, 8, 9]);
+        assert_eq!(labels[4], labels[5]);
+    }
+
+    #[test]
+    fn paper_partition_respects_labels_and_covers() {
+        let ds = synthetic_mnist(0, 400);
+        let parts = partition(&ds, 10, &Scheme::PaperPairs, 1);
+        let labels = paper_pair_labels(10, 10);
+        let mut seen = vec![false; ds.len()];
+        for (i, part) in parts.iter().enumerate() {
+            assert!(!part.is_empty());
+            for &s in part {
+                assert!(labels[i].contains(&ds.y[s]));
+                assert!(!seen[s], "sample {s} assigned twice");
+                seen[s] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "every sample must be assigned");
+    }
+
+    #[test]
+    fn pair_members_get_balanced_shares() {
+        let ds = synthetic_mnist(0, 400);
+        let parts = partition(&ds, 10, &Scheme::PaperPairs, 1);
+        for p in 0..5 {
+            let a = parts[2 * p].len() as i64;
+            let b = parts[2 * p + 1].len() as i64;
+            assert!((a - b).abs() <= 2, "pair {p}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn iid_partition_covers_evenly() {
+        let ds = synthetic_mnist(0, 100);
+        let parts = partition(&ds, 4, &Scheme::Iid, 0);
+        assert!(parts.iter().all(|p| p.len() == 25));
+    }
+
+    #[test]
+    fn dirichlet_partition_covers_all() {
+        let ds = synthetic_mnist(0, 300);
+        let parts = partition(&ds, 5, &Scheme::Dirichlet { alpha: 0.3 }, 2);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 300);
+    }
+
+    #[test]
+    fn dirichlet_low_alpha_is_skewed() {
+        let mut rng = Rng::new(0);
+        let p = dirichlet(&mut rng, 10, 0.05);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let maxp = p.iter().cloned().fold(0.0, f64::max);
+        assert!(maxp > 0.5, "alpha=0.05 should concentrate: max {maxp}");
+        let u = dirichlet(&mut rng, 10, 1000.0);
+        let maxu = u.iter().cloned().fold(0.0, f64::max);
+        assert!(maxu < 0.2, "alpha=1000 should be near-uniform: max {maxu}");
+    }
+}

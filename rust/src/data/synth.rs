@@ -1,0 +1,225 @@
+//! Synthetic MNIST/CIFAR counterparts (the documented no-network
+//! substitution, DESIGN.md §3).
+//!
+//! Each class c gets a fixed smooth template: a sum of `BUMPS` 2-D
+//! Gaussian bumps whose positions/widths/amplitudes are drawn from a
+//! class-keyed RNG (same template across runs and across train/test).
+//! A sample is `clip(intensity * template + noise)`, with a small random
+//! translation — enough variation that a linear model cannot trivially
+//! memorize, while a 2-layer MLP reaches high accuracy in a few hundred
+//! steps (mirroring MNIST's difficulty scale).
+//!
+//! What matters for rAge-k: gradients of clients holding different label
+//! subsets live on different coordinates (distinct templates + distinct
+//! output-layer rows), which is exactly the signal the frequency-vector
+//! clustering (eq. 3) keys on.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+const BUMPS: usize = 6;
+
+struct Template {
+    /// [h * w] grayscale template in [0, 1]
+    img: Vec<f32>,
+    h: usize,
+    w: usize,
+}
+
+fn class_template(corpus_tag: u64, class: u8, h: usize, w: usize) -> Template {
+    let mut rng = Rng::new(corpus_tag ^ (0xC1A55 + class as u64 * 7919));
+    let mut img = vec![0.0f32; h * w];
+    for _ in 0..BUMPS {
+        let cy = rng.uniform_in(0.15, 0.85) * h as f32;
+        let cx = rng.uniform_in(0.15, 0.85) * w as f32;
+        let sy = rng.uniform_in(0.06, 0.18) * h as f32;
+        let sx = rng.uniform_in(0.06, 0.18) * w as f32;
+        let amp = rng.uniform_in(0.4, 1.0);
+        for y in 0..h {
+            for x in 0..w {
+                let dy = (y as f32 - cy) / sy;
+                let dx = (x as f32 - cx) / sx;
+                img[y * w + x] += amp * (-(dy * dy + dx * dx) / 2.0).exp();
+            }
+        }
+    }
+    let max = img.iter().cloned().fold(f32::MIN, f32::max).max(1e-6);
+    for v in img.iter_mut() {
+        *v /= max;
+    }
+    Template { img, h, w }
+}
+
+fn render_sample(t: &Template, rng: &mut Rng, channels: usize, out: &mut Vec<f32>) {
+    // random +-2 pixel translation, per-sample intensity, pixel noise
+    let dy = rng.below(5) as isize - 2;
+    let dx = rng.below(5) as isize - 2;
+    let intensity = rng.uniform_in(0.7, 1.2);
+    let (h, w) = (t.h, t.w);
+    for c in 0..channels {
+        // per-channel gain keeps RGB channels correlated but not identical
+        let gain = if channels == 1 { 1.0 } else { 0.8 + 0.2 * c as f32 / 2.0 };
+        for y in 0..h {
+            for x in 0..w {
+                let sy = y as isize + dy;
+                let sx = x as isize + dx;
+                let base = if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                    t.img[sy as usize * w + sx as usize]
+                } else {
+                    0.0
+                };
+                let noise = rng.gaussian() as f32 * 0.08;
+                out.push((intensity * gain * base + noise).clamp(0.0, 1.0));
+            }
+        }
+    }
+}
+
+fn synthesize(
+    corpus_tag: u64,
+    seed: u64,
+    n: usize,
+    h: usize,
+    w: usize,
+    channels: usize,
+) -> Dataset {
+    let num_classes = 10;
+    let templates: Vec<Template> = (0..num_classes)
+        .map(|c| class_template(corpus_tag, c as u8, h, w))
+        .collect();
+    let dim = h * w * channels;
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = (i % num_classes) as u8; // balanced classes
+        render_sample(&templates[class as usize], &mut rng, channels, &mut x);
+        y.push(class);
+    }
+    Dataset { x, y, dim, num_classes }
+}
+
+/// 28x28x1 synthetic-MNIST (dim 784).
+pub fn synthetic_mnist(seed: u64, n: usize) -> Dataset {
+    synthesize(0x31415, seed, n, 28, 28, 1)
+}
+
+/// 32x32x3 synthetic-CIFAR (dim 3072; HWC layout to match the CNN graph).
+pub fn synthetic_cifar(seed: u64, n: usize) -> Dataset {
+    // note: the CNN reshapes [B, 3072] -> [B, 32, 32, 3]; render channels
+    // as the fastest-varying axis to match NHWC.
+    let ds = synthesize_nhwc(0x27182, seed, n, 32, 32, 3);
+    ds
+}
+
+fn synthesize_nhwc(
+    corpus_tag: u64,
+    seed: u64,
+    n: usize,
+    h: usize,
+    w: usize,
+    channels: usize,
+) -> Dataset {
+    let chw = synthesize(corpus_tag, seed, n, h, w, channels);
+    if channels == 1 {
+        return chw;
+    }
+    // transpose each sample CHW -> HWC
+    let dim = h * w * channels;
+    let mut x = vec![0.0f32; chw.x.len()];
+    for s in 0..n {
+        let src = &chw.x[s * dim..(s + 1) * dim];
+        let dst = &mut x[s * dim..(s + 1) * dim];
+        for c in 0..channels {
+            for y in 0..h {
+                for xx in 0..w {
+                    dst[(y * w + xx) * channels + c] = src[c * h * w + y * w + xx];
+                }
+            }
+        }
+    }
+    Dataset { x, y: chw.y, dim, num_classes: chw.num_classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let d = synthetic_mnist(0, 50);
+        assert_eq!(d.dim, 784);
+        assert_eq!(d.len(), 50);
+        assert!(d.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let c = synthetic_cifar(0, 20);
+        assert_eq!(c.dim, 3072);
+        assert_eq!(c.num_classes, 10);
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let d = synthetic_mnist(1, 100);
+        let mut counts = [0usize; 10];
+        for &y in &d.y {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = synthetic_mnist(7, 10);
+        let b = synthetic_mnist(7, 10);
+        assert_eq!(a.x, b.x);
+        let c = synthetic_mnist(8, 10);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn templates_are_class_distinct() {
+        // distance between class means must dominate within-class spread
+        let d = synthetic_mnist(3, 200);
+        let mut means = vec![vec![0.0f64; 784]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..d.len() {
+            let c = d.y[i] as usize;
+            counts[c] += 1;
+            for (m, &v) in means[c].iter_mut().zip(d.sample(i)) {
+                *m += v as f64;
+            }
+        }
+        for (c, m) in means.iter_mut().enumerate() {
+            for v in m.iter_mut() {
+                *v /= counts[c] as f64;
+            }
+        }
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+        };
+        let d01 = dist(&means[0], &means[1]);
+        assert!(d01 > 1.0, "class means too close: {d01}");
+    }
+
+    #[test]
+    fn train_test_share_templates() {
+        // different seeds, same class templates: per-class means correlate
+        let tr = synthetic_mnist(1, 300);
+        let te = synthetic_mnist(2, 300);
+        let mean_of = |d: &Dataset, cls: u8| -> Vec<f64> {
+            let idx = d.indices_with_labels(&[cls]);
+            let mut m = vec![0.0f64; d.dim];
+            for &i in &idx {
+                for (mm, &v) in m.iter_mut().zip(d.sample(i)) {
+                    *mm += v as f64;
+                }
+            }
+            m.iter().map(|v| v / idx.len() as f64).collect()
+        };
+        let a = mean_of(&tr, 4);
+        let b = mean_of(&te, 4);
+        let dot: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(dot / (na * nb) > 0.95, "cosine {}", dot / (na * nb));
+    }
+}

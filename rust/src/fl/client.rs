@@ -1,0 +1,139 @@
+//! A simulated FL client: local shard, batch schedule, local model state.
+
+use crate::backend::{Backend, ClientState, LocalRoundOut};
+use crate::data::{gather_batch, BatchIter, Dataset};
+use crate::sparse::SparseVec;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// One client: its data shard and training state. The compute itself goes
+/// through the shared [`Backend`] (clients are logically independent; the
+/// simulator multiplexes them over one backend instance).
+#[derive(Debug)]
+pub struct Client {
+    pub id: usize,
+    shard: Dataset,
+    batches: BatchIter,
+    pub state: ClientState,
+    /// client-local RNG (rTop-k's random k-subset etc.)
+    pub rng: Rng,
+}
+
+impl Client {
+    pub fn new(id: usize, shard: Dataset, init_params: Vec<f32>, seed: u64) -> Self {
+        let n = shard.len();
+        Client {
+            id,
+            shard,
+            batches: BatchIter::new(n, seed ^ (id as u64).wrapping_mul(0x9E37)),
+            state: ClientState::new(init_params),
+            rng: Rng::new(seed ^ 0xC11E47 ^ (id as u64) << 17),
+        }
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.shard.len()
+    }
+
+    /// Labels present in this client's shard (diagnostics / ground truth).
+    pub fn label_set(&self) -> Vec<u8> {
+        let mut set: Vec<u8> = self.shard.y.to_vec();
+        set.sort_unstable();
+        set.dedup();
+        set
+    }
+
+    /// Draw the H batches for one global round as contiguous buffers.
+    pub fn draw_round_batches(&mut self, h: usize, b: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(h * b * self.shard.dim);
+        let mut ys = Vec::with_capacity(h * b);
+        for _ in 0..h {
+            let idx = self.batches.next_batch(b);
+            let (x, y) = gather_batch(&self.shard, &idx);
+            xs.extend(x);
+            ys.extend(y);
+        }
+        (xs, ys)
+    }
+
+    /// Run the local round (Algorithm 1 lines 4-7).
+    pub fn local_round(
+        &mut self,
+        backend: &mut dyn Backend,
+        h: usize,
+        b: usize,
+    ) -> Result<LocalRoundOut> {
+        let (xs, ys) = self.draw_round_batches(h, b);
+        backend.local_round(&mut self.state, &xs, &ys, h, b)
+    }
+
+    /// Build the sparse upload for a set of requested indices, taking
+    /// values from the top-r report (requested ⊆ report for the
+    /// report-based strategies).
+    pub fn answer_request(report: &SparseVec, requested: &[u32]) -> SparseVec {
+        let lookup: std::collections::HashMap<u32, f32> =
+            report.idx.iter().cloned().zip(report.val.iter().cloned()).collect();
+        let mut idx = Vec::with_capacity(requested.len());
+        let mut val = Vec::with_capacity(requested.len());
+        for &j in requested {
+            if let Some(&v) = lookup.get(&j) {
+                idx.push(j);
+                val.push(v);
+            }
+        }
+        SparseVec::new(idx, val)
+    }
+
+    /// Sparse upload from a dense gradient (rand-k / dense strategies).
+    pub fn gather_from_grad(grad: &[f32], requested: &[u32]) -> SparseVec {
+        SparseVec::new(
+            requested.to_vec(),
+            requested.iter().map(|&j| grad[j as usize]).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::synthetic_mnist;
+
+    #[test]
+    fn batches_have_expected_shape() {
+        let ds = synthetic_mnist(0, 64);
+        let mut c = Client::new(0, ds, vec![0.0; 10], 1);
+        let (xs, ys) = c.draw_round_batches(3, 8);
+        assert_eq!(xs.len(), 3 * 8 * 784);
+        assert_eq!(ys.len(), 24);
+    }
+
+    #[test]
+    fn label_set_sorted_unique() {
+        let ds = synthetic_mnist(0, 50);
+        let shard = ds.subset(&ds.indices_with_labels(&[3, 7]));
+        let c = Client::new(1, shard, vec![], 0);
+        assert_eq!(c.label_set(), vec![3, 7]);
+    }
+
+    #[test]
+    fn answer_request_pulls_report_values() {
+        let report = SparseVec::new(vec![5, 9, 2], vec![1.5, -2.0, 0.25]);
+        let ans = Client::answer_request(&report, &[9, 2]);
+        assert_eq!(ans.idx, vec![9, 2]);
+        assert_eq!(ans.val, vec![-2.0, 0.25]);
+    }
+
+    #[test]
+    fn answer_request_skips_unknown() {
+        let report = SparseVec::new(vec![5], vec![1.0]);
+        let ans = Client::answer_request(&report, &[5, 77]);
+        assert_eq!(ans.idx, vec![5]);
+    }
+
+    #[test]
+    fn gather_from_grad() {
+        let grad = vec![0.0f32, 1.0, 2.0, 3.0];
+        let s = Client::gather_from_grad(&grad, &[3, 0]);
+        assert_eq!(s.val, vec![3.0, 0.0]);
+    }
+}

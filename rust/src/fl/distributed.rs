@@ -1,0 +1,254 @@
+//! Multi-process deployment: the PS and each client as separate OS
+//! processes speaking the length-prefixed TCP protocol of
+//! [`crate::fl::transport`] — the same per-round message flow the
+//! in-process simulator models, now with real sockets.
+//!
+//! * [`run_server`] — binds, waits for `n_clients` joins, then drives the
+//!   rAge-k round loop (select -> request -> aggregate -> apply ->
+//!   age/frequency bookkeeping -> M-periodic DBSCAN).
+//! * [`run_worker`] — owns one client's shard (derived from the shared
+//!   seed + its id, so no data ever crosses the wire), local Adam state
+//!   and error-feedback memory.
+//!
+//! Both ends use the same `ExperimentConfig`; run e.g.:
+//!
+//! ```sh
+//! ragek serve  --clients 4 --port 7700 --rounds 40 &
+//! for i in 0 1 2 3; do ragek worker --connect 127.0.0.1:7700 --id $i & done
+//! ```
+
+use crate::backend::{make_backend, ClientState, GlobalState};
+use crate::config::{ExperimentConfig, Payload};
+use crate::coordinator::aggregator::Aggregate;
+use crate::coordinator::server::{ParameterServer, PsConfig};
+use crate::coordinator::strategies::client_select;
+use crate::data::{load_dataset, partition::partition};
+use crate::fl::client::Client;
+use crate::fl::transport::{recv, send, Msg};
+use crate::sparse::{topk_abs_sparse, SparseVec};
+use anyhow::{bail, Context, Result};
+use std::net::{TcpListener, TcpStream};
+
+/// PS-side summary of a distributed run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub rounds: usize,
+    pub final_accuracy: f32,
+    pub cluster_labels: Vec<usize>,
+}
+
+/// Run the parameter server until `cfg.rounds` rounds complete.
+pub fn run_server(cfg: &ExperimentConfig, port: u16) -> Result<ServeReport> {
+    cfg.validate()?;
+    if cfg.payload != Payload::Delta {
+        bail!("distributed mode implements the Delta payload");
+    }
+    let listener =
+        TcpListener::bind(("0.0.0.0", port)).with_context(|| format!("binding :{port}"))?;
+    crate::info!("serve: waiting for {} clients on :{port}", cfg.n_clients);
+
+    let mut streams: Vec<Option<TcpStream>> = (0..cfg.n_clients).map(|_| None).collect();
+    let mut joined = 0;
+    while joined < cfg.n_clients {
+        let (mut s, peer) = listener.accept()?;
+        match recv(&mut s)? {
+            Msg::Join { client_id } => {
+                let id = client_id as usize;
+                if id >= cfg.n_clients || streams[id].is_some() {
+                    bail!("bad/duplicate client id {id} from {peer}");
+                }
+                crate::info!("serve: client {id} joined from {peer}");
+                streams[id] = Some(s);
+                joined += 1;
+            }
+            other => bail!("expected Join, got {other:?}"),
+        }
+    }
+    let mut streams: Vec<TcpStream> = streams.into_iter().map(|s| s.unwrap()).collect();
+
+    // PS state: global model + age/frequency/cluster machinery + test set
+    let mut backend = make_backend(cfg)?;
+    let mut global = GlobalState::new(backend.init_params()?);
+    let mut ps = ParameterServer::new(PsConfig {
+        d: cfg.d(),
+        n_clients: cfg.n_clients,
+        k: cfg.k,
+        strategy: cfg.strategy,
+        recluster_every: cfg.recluster_every,
+        dbscan: cfg.dbscan,
+        merge_rule: cfg.merge_rule,
+    });
+    let (_, test) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
+
+    for round in 1..=cfg.rounds as u32 {
+        for s in streams.iter_mut() {
+            send(s, &Msg::Model { round, params: global.params.clone() })?;
+        }
+        let mut reports: Vec<SparseVec> = Vec::with_capacity(cfg.n_clients);
+        for s in streams.iter_mut() {
+            match recv(s)? {
+                Msg::Report { report, round: r, .. } if r == round => reports.push(report),
+                other => bail!("round {round}: expected Report, got {other:?}"),
+            }
+        }
+        let requested: Vec<Vec<u32>> = if cfg.strategy.needs_report() {
+            let idx: Vec<Vec<u32>> = reports.iter().map(|r| r.idx.clone()).collect();
+            ps.select_requests(&idx)
+        } else {
+            // client-side strategies select themselves; PS echoes back the
+            // report prefix so the wire flow stays uniform
+            reports.iter().map(|r| r.idx[..cfg.k.min(r.len())].to_vec()).collect()
+        };
+        let mut agg = Aggregate::new();
+        for (s, req) in streams.iter_mut().zip(&requested) {
+            send(s, &Msg::Request { round, indices: req.clone() })?;
+            match recv(s)? {
+                Msg::Update { update, round: r, .. } if r == round => agg.push(update),
+                other => bail!("round {round}: expected Update, got {other:?}"),
+            }
+        }
+        let update = agg.to_dense(cfg.d(), 1.0 / cfg.n_clients as f32);
+        for (p, &u) in global.params.iter_mut().zip(&update) {
+            *p += u;
+        }
+        ps.record_round(&requested);
+        ps.maybe_recluster();
+
+        if cfg.eval_every > 0 && round as usize % cfg.eval_every == 0 {
+            let (acc, loss) = eval_global(backend.as_mut(), &global.params, &test, cfg.batch)?;
+            crate::info!(
+                "serve: round {round}/{}: acc {:.2}% loss {loss:.4} clusters {}",
+                cfg.rounds,
+                acc * 100.0,
+                ps.clusters().n_clusters()
+            );
+        }
+    }
+    for s in streams.iter_mut() {
+        send(s, &Msg::Shutdown)?;
+    }
+    let (acc, _) = eval_global(backend.as_mut(), &global.params, &test, cfg.batch)?;
+    Ok(ServeReport {
+        rounds: cfg.rounds,
+        final_accuracy: acc,
+        cluster_labels: ps.clusters().labels(),
+    })
+}
+
+fn eval_global(
+    backend: &mut dyn crate::backend::Backend,
+    params: &[f32],
+    test: &crate::data::Dataset,
+    batch: usize,
+) -> Result<(f32, f32)> {
+    let n_batches = (test.len() / batch).max(1);
+    let mut loss_sum = 0.0f32;
+    let mut correct = 0usize;
+    for i in 0..n_batches {
+        let idx: Vec<usize> =
+            (i * batch..(i + 1) * batch).map(|j| j % test.len()).collect();
+        let (x, y) = crate::data::gather_batch(test, &idx);
+        let (ls, c) = backend.eval(params, &x, &y)?;
+        loss_sum += ls;
+        correct += c;
+    }
+    let n = (n_batches * batch) as f32;
+    Ok((correct as f32 / n, loss_sum / n))
+}
+
+/// Run one worker process until the PS sends Shutdown.
+pub fn run_worker(cfg: &ExperimentConfig, addr: &str, id: usize) -> Result<()> {
+    cfg.validate()?;
+    if id >= cfg.n_clients {
+        bail!("worker id {id} >= n_clients {}", cfg.n_clients);
+    }
+    let mut backend = make_backend(cfg)?;
+    // derive this worker's shard exactly like the simulator does: same
+    // seed -> same partition, no data on the wire
+    let (train, _) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
+    let shards = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed);
+    let mut client = Client::new(id, train.subset(&shards[id]), backend.init_params()?, cfg.seed);
+    let mut memory = vec![0.0f32; cfg.d()];
+
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    send(&mut stream, &Msg::Join { client_id: id as u32 })?;
+    crate::info!("worker {id}: joined {addr}");
+
+    loop {
+        let (round, params) = match recv(&mut stream)? {
+            Msg::Model { round, params } => (round, params),
+            Msg::Shutdown => break,
+            other => bail!("expected Model/Shutdown, got {other:?}"),
+        };
+        client.state = ClientState::new(params.clone());
+        let out = client.local_round(backend.as_mut(), cfg.h, cfg.batch)?;
+        // error-feedback fold + report (Delta payload)
+        for (m, (p, g)) in memory.iter_mut().zip(client.state.params.iter().zip(&params)) {
+            *m += p - g;
+        }
+        let report = topk_abs_sparse(&memory, cfg.r);
+        send(
+            &mut stream,
+            &Msg::Report {
+                client_id: id as u32,
+                round,
+                report: report.clone(),
+                mean_loss: out.mean_loss,
+            },
+        )?;
+        let requested = match recv(&mut stream)? {
+            Msg::Request { indices, round: r } if r == round => indices,
+            other => bail!("expected Request, got {other:?}"),
+        };
+        let update = if cfg.strategy.needs_report() {
+            Client::answer_request(&report, &requested)
+        } else {
+            let sel = client_select(cfg.strategy, &mut client.rng, &report.idx, cfg.d(), cfg.k);
+            Client::gather_from_grad(&memory, &sel)
+        };
+        for &j in &update.idx {
+            memory[j as usize] = 0.0;
+        }
+        send(&mut stream, &Msg::Update { client_id: id as u32, round, update })?;
+    }
+    crate::info!("worker {id}: shutdown");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn distributed_round_trip_localhost() {
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.payload = Payload::Delta; // distributed mode implements Delta
+        cfg.rounds = 3;
+        cfg.n_clients = 2;
+        cfg.train_n = 200;
+        cfg.test_n = 64;
+        cfg.eval_every = 0;
+        // pick an ephemeral port by binding first
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = probe.local_addr().unwrap().port();
+        drop(probe);
+
+        let server_cfg = cfg.clone();
+        let server = std::thread::spawn(move || run_server(&server_cfg, port).unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let mut workers = Vec::new();
+        for id in 0..cfg.n_clients {
+            let wcfg = cfg.clone();
+            let addr = format!("127.0.0.1:{port}");
+            workers.push(std::thread::spawn(move || run_worker(&wcfg, &addr, id).unwrap()));
+        }
+        let report = server.join().unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(report.rounds, 3);
+        assert_eq!(report.cluster_labels.len(), 2);
+    }
+}

@@ -1,0 +1,206 @@
+//! Training metrics: accuracy/loss curves (Fig. 3/5 payloads) and
+//! byte-accurate communication accounting (DESIGN.md §6).
+
+use crate::util::json::Json;
+use crate::util::plot;
+
+/// Cumulative communication counters (bytes).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    /// client -> PS: top-r index reports (rAge-k only)
+    pub report_up: u64,
+    /// client -> PS: sparse value uploads
+    pub update_up: u64,
+    /// PS -> client: index requests (rAge-k only)
+    pub request_down: u64,
+    /// PS -> client: global model broadcasts
+    pub broadcast_down: u64,
+}
+
+impl CommStats {
+    pub fn uplink(&self) -> u64 {
+        self.report_up + self.update_up
+    }
+
+    pub fn downlink(&self) -> u64 {
+        self.request_down + self.broadcast_down
+    }
+
+    pub fn total(&self) -> u64 {
+        self.uplink() + self.downlink()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("report_up", Json::Num(self.report_up as f64)),
+            ("update_up", Json::Num(self.update_up as f64)),
+            ("request_down", Json::Num(self.request_down as f64)),
+            ("broadcast_down", Json::Num(self.broadcast_down as f64)),
+            ("uplink", Json::Num(self.uplink() as f64)),
+            ("downlink", Json::Num(self.downlink() as f64)),
+        ])
+    }
+}
+
+/// One global round's record.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// mean local training loss across clients this round
+    pub train_loss: f32,
+    /// global-model test accuracy/loss (None between eval points)
+    pub test_acc: Option<f32>,
+    pub test_loss: Option<f32>,
+    pub n_clusters: usize,
+    pub uplink_cum: u64,
+}
+
+/// Full training history (one per strategy run).
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub name: String,
+    pub rounds: Vec<RoundRecord>,
+    pub comm: CommStats,
+    pub wall_secs: f64,
+}
+
+impl History {
+    pub fn new(name: &str) -> Self {
+        History { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn final_accuracy(&self) -> f32 {
+        self.rounds.iter().rev().find_map(|r| r.test_acc).unwrap_or(0.0)
+    }
+
+    /// First round at which test accuracy reached `target` (the Fig. 5
+    /// "80% by iteration 400" style metric).
+    pub fn rounds_to_accuracy(&self, target: f32) -> Option<usize> {
+        self.rounds
+            .iter()
+            .find(|r| r.test_acc.map(|a| a >= target).unwrap_or(false))
+            .map(|r| r.round)
+    }
+
+    /// Uplink bytes spent when `target` accuracy was first reached.
+    pub fn uplink_to_accuracy(&self, target: f32) -> Option<u64> {
+        self.rounds
+            .iter()
+            .find(|r| r.test_acc.map(|a| a >= target).unwrap_or(false))
+            .map(|r| r.uplink_cum)
+    }
+
+    pub fn acc_series(&self) -> Vec<f64> {
+        self.rounds.iter().filter_map(|r| r.test_acc.map(|a| a as f64)).collect()
+    }
+
+    pub fn loss_series(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.train_loss as f64).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("final_accuracy", Json::Num(self.final_accuracy() as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("comm", self.comm.to_json()),
+            (
+                "rounds",
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::Num(r.round as f64)),
+                                ("train_loss", Json::Num(r.train_loss as f64)),
+                                (
+                                    "test_acc",
+                                    r.test_acc.map(|a| Json::Num(a as f64)).unwrap_or(Json::Null),
+                                ),
+                                (
+                                    "test_loss",
+                                    r.test_loss.map(|a| Json::Num(a as f64)).unwrap_or(Json::Null),
+                                ),
+                                ("n_clusters", Json::Num(r.n_clusters as f64)),
+                                ("uplink_cum", Json::Num(r.uplink_cum as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// CSV with one row per round.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,train_loss,test_acc,test_loss,n_clusters,uplink_cum\n");
+        for r in &self.rounds {
+            s.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.round,
+                r.train_loss,
+                r.test_acc.map(|a| a.to_string()).unwrap_or_default(),
+                r.test_loss.map(|a| a.to_string()).unwrap_or_default(),
+                r.n_clusters,
+                r.uplink_cum
+            ));
+        }
+        s
+    }
+
+    /// Terminal chart of the accuracy curves of several runs.
+    pub fn chart_accuracy(histories: &[&History], width: usize, height: usize) -> String {
+        let series: Vec<(_, Vec<f64>)> =
+            histories.iter().map(|h| (h.name.as_str(), h.acc_series())).collect();
+        let refs: Vec<(&str, &[f64])> =
+            series.iter().map(|(n, v)| (*n, v.as_slice())).collect();
+        plot::line_chart(&refs, width, height)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn history() -> History {
+        let mut h = History::new("test");
+        for (i, acc) in [(0usize, None), (5, Some(0.4f32)), (10, Some(0.8)), (15, Some(0.9))] {
+            h.rounds.push(RoundRecord {
+                round: i,
+                train_loss: 1.0 / (i + 1) as f32,
+                test_acc: acc,
+                test_loss: acc.map(|a| 1.0 - a),
+                n_clusters: 10 - i / 2,
+                uplink_cum: (i as u64 + 1) * 100,
+            });
+        }
+        h
+    }
+
+    #[test]
+    fn accuracy_queries() {
+        let h = history();
+        assert_eq!(h.final_accuracy(), 0.9);
+        assert_eq!(h.rounds_to_accuracy(0.75), Some(10));
+        assert_eq!(h.rounds_to_accuracy(0.99), None);
+        assert_eq!(h.uplink_to_accuracy(0.75), Some(1100));
+    }
+
+    #[test]
+    fn comm_totals() {
+        let c = CommStats { report_up: 10, update_up: 20, request_down: 5, broadcast_down: 40 };
+        assert_eq!(c.uplink(), 30);
+        assert_eq!(c.downlink(), 45);
+        assert_eq!(c.total(), 75);
+    }
+
+    #[test]
+    fn csv_and_json_shapes() {
+        let h = history();
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().count(), 5);
+        let j = h.to_json();
+        assert_eq!(j.at(&["rounds"]).as_arr().unwrap().len(), 4);
+        assert_eq!(j.at(&["final_accuracy"]).as_f64(), Some(0.9f32 as f64));
+    }
+}

@@ -1,0 +1,13 @@
+//! The federated-learning runtime: clients, the end-to-end trainer
+//! (Algorithm 1), metrics with byte-accurate communication accounting,
+//! and the in-process / TCP transports.
+
+pub mod client;
+pub mod distributed;
+pub mod metrics;
+pub mod trainer;
+pub mod transport;
+
+pub use client::Client;
+pub use metrics::{CommStats, History, RoundRecord};
+pub use trainer::{Trainer, TrainReport};

@@ -1,0 +1,286 @@
+//! Wire transport for the multi-process deployment: a length-prefixed
+//! binary protocol over TCP (std::net only; the offline registry has no
+//! tokio) plus in-memory encode/decode used by tests.
+//!
+//! The message set mirrors the paper's protocol exactly — join, model
+//! broadcast, top-r report, index request, sparse update — so the byte
+//! accounting of DESIGN.md §6 corresponds 1:1 to real frames.
+//!
+//! Frame layout: `u32 magic | u32 payload_len | u8 tag | payload`,
+//! little-endian throughout.
+
+use crate::sparse::SparseVec;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Protocol magic ("rAgk").
+pub const MAGIC: u32 = 0x7241_676b;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// client -> PS: hello
+    Join { client_id: u32 },
+    /// PS -> client: global model broadcast for a round
+    Model { round: u32, params: Vec<f32> },
+    /// client -> PS: top-r report (indices by |g| desc + signed values)
+    Report { client_id: u32, round: u32, report: SparseVec, mean_loss: f32 },
+    /// PS -> client: the k requested indices
+    Request { round: u32, indices: Vec<u32> },
+    /// client -> PS: sparse update for the requested indices
+    Update { client_id: u32, round: u32, update: SparseVec },
+    /// PS -> client: training finished
+    Shutdown,
+}
+
+// ------------------------------------------------------------- encoding
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u32(&mut self, x: u32) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f32(&mut self, x: f32) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u32s(&mut self, xs: &[u32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.u32(x);
+        }
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+    fn sparse(&mut self, s: &SparseVec) {
+        self.u32s(&s.idx);
+        self.f32s(&s.val);
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn u32(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.b.len() {
+            bail!("truncated frame");
+        }
+        let v = u32::from_le_bytes(self.b[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        if self.pos + n * 4 > self.b.len() {
+            bail!("truncated u32 array (n = {n})");
+        }
+        (0..n).map(|_| self.u32()).collect()
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        if self.pos + n * 4 > self.b.len() {
+            bail!("truncated f32 array (n = {n})");
+        }
+        (0..n).map(|_| self.f32()).collect()
+    }
+    fn sparse(&mut self) -> Result<SparseVec> {
+        let idx = self.u32s()?;
+        let val = self.f32s()?;
+        if idx.len() != val.len() {
+            bail!("sparse vec length mismatch");
+        }
+        Ok(SparseVec::new(idx, val))
+    }
+    fn done(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            bail!("{} trailing bytes in frame", self.b.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Join { .. } => 1,
+            Msg::Model { .. } => 2,
+            Msg::Report { .. } => 3,
+            Msg::Request { .. } => 4,
+            Msg::Update { .. } => 5,
+            Msg::Shutdown => 6,
+        }
+    }
+
+    /// Serialize to a full frame (incl. magic + length header).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc(Vec::new());
+        match self {
+            Msg::Join { client_id } => e.u32(*client_id),
+            Msg::Model { round, params } => {
+                e.u32(*round);
+                e.f32s(params);
+            }
+            Msg::Report { client_id, round, report, mean_loss } => {
+                e.u32(*client_id);
+                e.u32(*round);
+                e.sparse(report);
+                e.f32(*mean_loss);
+            }
+            Msg::Request { round, indices } => {
+                e.u32(*round);
+                e.u32s(indices);
+            }
+            Msg::Update { client_id, round, update } => {
+                e.u32(*client_id);
+                e.u32(*round);
+                e.sparse(update);
+            }
+            Msg::Shutdown => {}
+        }
+        let payload = e.0;
+        let mut frame = Vec::with_capacity(9 + payload.len());
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.extend_from_slice(&(payload.len() as u32 + 1).to_le_bytes());
+        frame.push(self.tag());
+        frame.extend_from_slice(&payload);
+        frame
+    }
+
+    /// Decode a payload (tag + body, no header).
+    pub fn decode(tagged: &[u8]) -> Result<Msg> {
+        if tagged.is_empty() {
+            bail!("empty frame");
+        }
+        let mut d = Dec { b: &tagged[1..], pos: 0 };
+        let msg = match tagged[0] {
+            1 => Msg::Join { client_id: d.u32()? },
+            2 => Msg::Model { round: d.u32()?, params: d.f32s()? },
+            3 => Msg::Report {
+                client_id: d.u32()?,
+                round: d.u32()?,
+                report: d.sparse()?,
+                mean_loss: d.f32()?,
+            },
+            4 => Msg::Request { round: d.u32()?, indices: d.u32s()? },
+            5 => Msg::Update { client_id: d.u32()?, round: d.u32()?, update: d.sparse()? },
+            6 => Msg::Shutdown,
+            t => bail!("unknown message tag {t}"),
+        };
+        d.done()?;
+        Ok(msg)
+    }
+
+    /// Wire size of the encoded frame in bytes.
+    pub fn wire_bytes(&self) -> usize {
+        self.encode().len()
+    }
+}
+
+/// Write one message to a TCP stream.
+pub fn send(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
+    stream.write_all(&msg.encode()).context("send frame")
+}
+
+/// Read one message from a TCP stream (blocking).
+pub fn recv(stream: &mut TcpStream) -> Result<Msg> {
+    let mut header = [0u8; 8];
+    stream.read_exact(&mut header).context("recv header")?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("bad magic {magic:#x}");
+    }
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    if len == 0 || len > 512 << 20 {
+        bail!("implausible frame length {len}");
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload).context("recv payload")?;
+    Msg::decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Msg) {
+        let frame = m.encode();
+        assert_eq!(&frame[0..4], &MAGIC.to_le_bytes());
+        let len = u32::from_le_bytes(frame[4..8].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - 8);
+        let back = Msg::decode(&frame[8..]).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Join { client_id: 3 });
+        roundtrip(Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] });
+        roundtrip(Msg::Report {
+            client_id: 1,
+            round: 2,
+            report: SparseVec::new(vec![5, 900, 39000], vec![0.5, -0.25, 1e-9]),
+            mean_loss: 2.25,
+        });
+        roundtrip(Msg::Request { round: 9, indices: vec![1, 2, 3] });
+        roundtrip(Msg::Update {
+            client_id: 0,
+            round: 1,
+            update: SparseVec::new(vec![], vec![]),
+        });
+        roundtrip(Msg::Shutdown);
+    }
+
+    #[test]
+    fn rejects_corrupt_frames() {
+        assert!(Msg::decode(&[]).is_err());
+        assert!(Msg::decode(&[99]).is_err());
+        // truncated body
+        let frame = Msg::Request { round: 1, indices: vec![1, 2, 3] }.encode();
+        assert!(Msg::decode(&frame[8..frame.len() - 2]).is_err());
+        // trailing garbage
+        let mut long = frame[8..].to_vec();
+        long.push(0);
+        assert!(Msg::decode(&long).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let m = recv(&mut s).unwrap();
+            send(&mut s, &m).unwrap(); // echo
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let msg = Msg::Model { round: 5, params: vec![0.5; 1000] };
+        send(&mut stream, &msg).unwrap();
+        let back = recv(&mut stream).unwrap();
+        assert_eq!(msg, back);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn wire_bytes_accounting_matches_design() {
+        // sparse update of k entries: 8k payload + 8 list headers
+        let k = 10;
+        let m = Msg::Update {
+            client_id: 0,
+            round: 0,
+            update: SparseVec::new(vec![0; k], vec![0.0; k]),
+        };
+        // header(8) + tag(1) + client(4) + round(4) + 2 lens(8) + 8k
+        assert_eq!(m.wire_bytes(), 8 + 1 + 4 + 4 + 8 + 8 * k);
+    }
+}

@@ -1,0 +1,51 @@
+//! # ragek — communication-efficient federated learning with the age factor
+//!
+//! A production-grade reproduction of *"rAge-k: Communication-Efficient
+//! Federated Learning Using Age Factor"* (Mortaheb, Kaswan, Ulukus, 2024)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the parameter-server coordinator: per-cluster
+//!   [`age::AgeVector`]s implementing the eq. (2) protocol, per-client
+//!   [`age::FrequencyVector`]s, the eq. (3) similarity matrix, a from-scratch
+//!   [`clustering::dbscan`] implementation, the rAge-k index
+//!   [`coordinator::selection`] (including disjoint assignment inside a
+//!   cluster), sparse aggregation, server-side optimizers, baselines
+//!   (rTop-k / top-k / rand-k / dense), the end-to-end [`fl`] round loop
+//!   with byte-accurate communication accounting, and both in-process and
+//!   TCP transports.
+//! * **Layer 2** — JAX model graphs AOT-lowered to HLO text
+//!   (`python/compile`), executed from [`runtime`] via the PJRT C API.
+//! * **Layer 1** — Pallas kernels (top-r scan, age sweep, tiled matmul)
+//!   lowered into the same artifacts.
+//!
+//! Python never runs on the request path: `make artifacts` is build-time
+//! only, and `backend::RustBackend` even allows training the MNIST MLP with
+//! no artifacts at all (it doubles as the numerics oracle for the runtime
+//! integration tests).
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use ragek::config::ExperimentConfig;
+//! use ragek::fl::trainer::Trainer;
+//!
+//! let cfg = ExperimentConfig::mnist_paper();
+//! let mut trainer = Trainer::from_config(&cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final accuracy: {:.2}%", report.final_accuracy * 100.0);
+//! ```
+
+pub mod age;
+pub mod backend;
+pub mod bench;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fl;
+pub mod nn;
+pub mod optimizer;
+pub mod runtime;
+pub mod sparse;
+pub mod testing;
+pub mod util;

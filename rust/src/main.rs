@@ -1,0 +1,274 @@
+//! `ragek` CLI — train / evaluate / cluster / serve with the rAge-k stack.
+//!
+//! ```text
+//! ragek train   --model mnist --strategy ragek --rounds 150
+//! ragek compare --model mnist --rounds 100          # rAge-k vs rTop-k
+//! ragek cluster --model mnist --rounds 60           # Fig. 2 heatmaps
+//! ragek info                                        # artifact manifest
+//! ```
+
+use anyhow::{bail, Result};
+use ragek::config::{BackendKind, ExperimentConfig};
+use ragek::coordinator::strategies::StrategyKind;
+use ragek::fl::trainer::Trainer;
+use ragek::util::argparse::{ArgError, ArgSpec};
+use ragek::util::{logging, plot};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn train_spec(cmd: &str, about: &str) -> ArgSpec {
+    ArgSpec::new(cmd, about)
+        .opt("model", "mnist", "model/dataset: mnist | cifar")
+        .opt("strategy", "ragek", "ragek | ragek-indep | rtopk | topk | randk | dense")
+        .opt("backend", "auto", "rust | xla | auto")
+        .opt("rounds", "0", "global rounds (0 = preset default)")
+        .opt("clients", "0", "number of clients (0 = preset)")
+        .opt("seed", "42", "experiment seed")
+        .opt("config", "", "JSON config file (overrides preset)")
+        .opt("out", "results", "output directory")
+        .flag("verbose", "debug logging")
+}
+
+fn build_config(a: &ragek::util::argparse::Args) -> Result<ExperimentConfig> {
+    let mut cfg = if !a.get("config").is_empty() {
+        ExperimentConfig::load(a.get("config"))?
+    } else {
+        match a.get("model") {
+            "mnist" => ExperimentConfig::mnist_scaled(),
+            "cifar" => ExperimentConfig::cifar_paper(),
+            other => bail!("unknown model {other:?}"),
+        }
+    };
+    if let Some(s) = StrategyKind::parse(a.get("strategy")) {
+        cfg.strategy = s;
+    } else {
+        bail!("unknown strategy {:?}", a.get("strategy"));
+    }
+    match a.get("backend") {
+        "rust" => cfg.backend = BackendKind::Rust,
+        "xla" => cfg.backend = BackendKind::Xla,
+        "auto" => {} // preset default
+        other => bail!("unknown backend {other:?}"),
+    }
+    let rounds = a.get_usize("rounds")?;
+    if rounds > 0 {
+        cfg.rounds = rounds;
+    }
+    let clients = a.get_usize("clients")?;
+    if clients > 0 {
+        cfg.n_clients = clients;
+    }
+    cfg.seed = a.get_usize("seed")? as u64;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first().map(String::as_str) else {
+        print_global_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd {
+        "train" => cmd_train(rest),
+        "compare" => cmd_compare(rest),
+        "cluster" => cmd_cluster(rest),
+        "serve" => cmd_serve(rest),
+        "worker" => cmd_worker(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_global_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `ragek help`)"),
+    }
+}
+
+fn print_global_help() {
+    println!(
+        "ragek — communication-efficient federated learning with the age factor\n\n\
+         Commands:\n\
+         \x20 train    run one FL training experiment\n\
+         \x20 compare  run rAge-k vs rTop-k side by side (Fig. 3 / Fig. 5)\n\
+         \x20 cluster  run and dump connectivity heatmaps (Fig. 2 / Fig. 4)\n\
+         \x20 serve    run the PS for a multi-process deployment (TCP)\n\
+         \x20 worker   run one client process against a serve PS\n\
+         \x20 info     print the artifact manifest\n\n\
+         `ragek <command> --help` for options."
+    );
+}
+
+fn parse_or_help(spec: ArgSpec, rest: &[String]) -> Result<Option<ragek::util::argparse::Args>> {
+    match spec.parse(rest) {
+        Ok(a) => Ok(Some(a)),
+        Err(ArgError::HelpRequested) => {
+            println!("{}", spec.usage());
+            Ok(None)
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let Some(a) = parse_or_help(train_spec("ragek train", "run one FL experiment"), rest)?
+    else {
+        return Ok(());
+    };
+    if a.get_flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    let cfg = build_config(&a)?;
+    ragek::info!(
+        "training {} with {} (backend {:?}, {} clients, {} rounds)",
+        cfg.model,
+        cfg.strategy.name(),
+        cfg.backend,
+        cfg.n_clients,
+        cfg.rounds
+    );
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let report = trainer.run()?;
+    println!(
+        "final accuracy {:.2}%  uplink {:.2} MiB  clusters {:?}",
+        report.final_accuracy * 100.0,
+        report.history.comm.uplink() as f64 / (1 << 20) as f64,
+        report.cluster_labels
+    );
+    let outdir = std::path::Path::new(a.get("out"));
+    std::fs::create_dir_all(outdir)?;
+    let stem = format!("train_{}_{}", cfg.model, cfg.strategy.name().replace('/', "-"));
+    std::fs::write(outdir.join(format!("{stem}.json")), report.history.to_json().to_pretty())?;
+    std::fs::write(outdir.join(format!("{stem}.csv")), report.history.to_csv())?;
+    println!("wrote {}/{stem}.{{json,csv}}", outdir.display());
+    Ok(())
+}
+
+fn cmd_compare(rest: &[String]) -> Result<()> {
+    let Some(a) = parse_or_help(
+        train_spec("ragek compare", "rAge-k vs rTop-k at equal (r, k)"),
+        rest,
+    )?
+    else {
+        return Ok(());
+    };
+    if a.get_flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    let mut histories = Vec::new();
+    for strategy in [StrategyKind::RageK, StrategyKind::RTopK] {
+        let mut cfg = build_config(&a)?;
+        cfg.strategy = strategy;
+        let mut trainer = Trainer::from_config(&cfg)?;
+        let report = trainer.run()?;
+        histories.push(report.history);
+    }
+    let refs: Vec<&ragek::fl::metrics::History> = histories.iter().collect();
+    println!("\naccuracy over rounds:");
+    println!("{}", ragek::fl::metrics::History::chart_accuracy(&refs, 70, 16));
+    for h in &histories {
+        println!(
+            "{:<12} final acc {:.2}%  uplink {:.2} MiB",
+            h.name,
+            h.final_accuracy() * 100.0,
+            h.comm.uplink() as f64 / (1 << 20) as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cluster(rest: &[String]) -> Result<()> {
+    let Some(a) = parse_or_help(
+        train_spec("ragek cluster", "dump connectivity heatmaps (Fig. 2 / Fig. 4)"),
+        rest,
+    )?
+    else {
+        return Ok(());
+    };
+    if a.get_flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    let cfg = build_config(&a)?;
+    let mut trainer = Trainer::from_config(&cfg)?;
+    // snapshot cadence mirroring Fig. 2 (1, 21, 41, 61) scaled to the run
+    let quarter = (cfg.rounds / 4).max(1);
+    trainer.heatmap_rounds = vec![1, quarter + 1, 2 * quarter + 1, 3 * quarter + 1]
+        .into_iter()
+        .filter(|&r| r <= cfg.rounds)
+        .collect();
+    let report = trainer.run()?;
+    for (round, m) in &report.heatmaps {
+        println!("\nconnectivity at round {round}:");
+        println!("{}", plot::heatmap(m, true));
+    }
+    if let Some(truth) = &report.truth_labels {
+        println!("ground-truth pairs: {truth:?}");
+    }
+    println!("final clusters:      {:?}", report.cluster_labels);
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let spec = train_spec("ragek serve", "parameter server for multi-process FL")
+        .opt("port", "7700", "TCP port to listen on");
+    let Some(a) = parse_or_help(spec, rest)? else {
+        return Ok(());
+    };
+    if a.get_flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    let mut cfg = build_config(&a)?;
+    cfg.payload = ragek::config::Payload::Delta; // distributed mode is Delta-only
+    let report = ragek::fl::distributed::run_server(&cfg, a.get_usize("port")? as u16)?;
+    println!(
+        "serve: {} rounds done, final acc {:.2}%, clusters {:?}",
+        report.rounds,
+        report.final_accuracy * 100.0,
+        report.cluster_labels
+    );
+    Ok(())
+}
+
+fn cmd_worker(rest: &[String]) -> Result<()> {
+    let spec = train_spec("ragek worker", "one client process for multi-process FL")
+        .opt("connect", "127.0.0.1:7700", "PS address")
+        .opt("id", "0", "client id (0..n_clients)");
+    let Some(a) = parse_or_help(spec, rest)? else {
+        return Ok(());
+    };
+    if a.get_flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    let mut cfg = build_config(&a)?;
+    cfg.payload = ragek::config::Payload::Delta; // match cmd_serve
+    ragek::fl::distributed::run_worker(&cfg, a.get("connect"), a.get_usize("id")?)
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("ragek info", "print the artifact manifest")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let Some(a) = parse_or_help(spec, rest)? else {
+        return Ok(());
+    };
+    let path = std::path::Path::new(a.get("artifacts")).join("manifest.json");
+    let manifest = ragek::runtime::Manifest::load(&path)?;
+    for (name, m) in &manifest.models {
+        println!(
+            "model {name}: d={} batch={} r={} k={} h_scan={} (lr {})",
+            m.d, m.batch, m.r, m.k, m.h_scan, m.lr
+        );
+        for (aname, art) in &m.artifacts {
+            println!("  {aname:<14} {} ({} in, {} out)", art.file, art.inputs.len(), art.outputs.len());
+        }
+    }
+    Ok(())
+}

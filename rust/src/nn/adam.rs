@@ -1,0 +1,105 @@
+//! Adam optimizer over flat parameter vectors; constants mirror
+//! `python/compile/models/common.py` (b1=0.9, b2=0.999, eps=1e-8) so the
+//! Rust backend and the HLO artifacts take bit-comparable steps.
+
+pub const B1: f32 = 0.9;
+pub const B2: f32 = 0.999;
+pub const EPS: f32 = 1e-8;
+
+/// Flat Adam state (m, v, step count t).
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+}
+
+impl AdamState {
+    pub fn new(d: usize) -> Self {
+        AdamState { m: vec![0.0; d], v: vec![0.0; d], t: 0.0 }
+    }
+
+    /// One bias-corrected step: `params -= lr * mhat / (sqrt(vhat) + eps)`.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1.0;
+        let bc1 = 1.0 - B1.powf(self.t);
+        let bc2 = 1.0 - B2.powf(self.t);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * g;
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + EPS);
+        }
+    }
+
+    /// Sparse step: only the coordinates in `idx` carry gradient; all
+    /// other coordinates still receive the moment decay (exactly what the
+    /// dense step does with g = 0 there). Used by the server optimizer on
+    /// aggregated sparse updates when `sparse_moment_decay` is enabled;
+    /// the default server path materializes dense (matching the
+    /// `apply_sparse` artifact) — see `optimizer::ServerOpt`.
+    pub fn step_sparse_exact(
+        &mut self,
+        params: &mut [f32],
+        idx: &[u32],
+        val: &[f32],
+        lr: f32,
+    ) {
+        let mut grad = vec![0.0f32; params.len()];
+        for (&i, &v) in idx.iter().zip(val) {
+            grad[i as usize] += v;
+        }
+        self.step(params, &grad, lr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_moves_by_lr_sign() {
+        // bias-corrected first step ~= lr * sign(g)
+        let mut p = vec![1.0f32, -2.0, 0.5];
+        let g = vec![0.3f32, -0.7, 0.0];
+        let mut st = AdamState::new(3);
+        st.step(&mut p, &g, 0.01);
+        assert!((p[0] - (1.0 - 0.01)).abs() < 1e-5);
+        assert!((p[1] - (-2.0 + 0.01)).abs() < 1e-5);
+        assert_eq!(p[2], 0.5);
+        assert_eq!(st.t, 1.0);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (x - 3)^2 -> x = 3
+        let mut p = vec![0.0f32];
+        let mut st = AdamState::new(1);
+        for _ in 0..4000 {
+            let g = vec![2.0 * (p[0] - 3.0)];
+            st.step(&mut p, &g, 0.01);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "got {}", p[0]);
+    }
+
+    #[test]
+    fn sparse_exact_matches_dense() {
+        let mut p1 = vec![1.0f32; 6];
+        let mut p2 = p1.clone();
+        let mut s1 = AdamState::new(6);
+        let mut s2 = AdamState::new(6);
+        let mut dense = vec![0.0f32; 6];
+        dense[2] = 0.5;
+        dense[4] = -1.0;
+        for _ in 0..3 {
+            s1.step(&mut p1, &dense, 0.01);
+            s2.step_sparse_exact(&mut p2, &[2, 4], &[0.5, -1.0], 0.01);
+        }
+        assert_eq!(p1, p2);
+        assert_eq!(s1.m, s2.m);
+    }
+}

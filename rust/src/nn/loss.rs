@@ -1,0 +1,113 @@
+//! Softmax cross-entropy (mean over batch) + eval statistics, numerically
+//! stable (log-sum-exp), mirroring `python/compile/models/common.py`.
+
+/// logits: [b, c] row-major. Returns (mean loss, dlogits [b, c]) where
+/// dlogits is the gradient of the *mean* loss.
+pub fn xent_mean_with_grad(logits: &[f32], y: &[i32], c: usize) -> (f32, Vec<f32>) {
+    let b = y.len();
+    assert_eq!(logits.len(), b * c);
+    let mut dlogits = vec![0.0f32; b * c];
+    let mut loss = 0.0f64;
+    for i in 0..b {
+        let row = &logits[i * c..(i + 1) * c];
+        let maxv = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - maxv).exp();
+        }
+        let lse = maxv + sum.ln();
+        let yi = y[i] as usize;
+        assert!(yi < c, "label {yi} out of range");
+        loss += (lse - row[yi]) as f64;
+        let drow = &mut dlogits[i * c..(i + 1) * c];
+        for (j, &v) in row.iter().enumerate() {
+            let p = (v - lse).exp();
+            drow[j] = (p - if j == yi { 1.0 } else { 0.0 }) / b as f32;
+        }
+    }
+    ((loss / b as f64) as f32, dlogits)
+}
+
+/// (summed loss, correct count) over a batch — same contract as the
+/// `eval_batch` artifact.
+pub fn eval_stats(logits: &[f32], y: &[i32], c: usize) -> (f32, usize) {
+    let b = y.len();
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = &logits[i * c..(i + 1) * c];
+        let maxv = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut sum = 0.0f32;
+        let mut argmax = 0usize;
+        let mut best = f32::MIN;
+        for (j, &v) in row.iter().enumerate() {
+            sum += (v - maxv).exp();
+            if v > best {
+                best = v;
+                argmax = j;
+            }
+        }
+        let lse = maxv + sum.ln();
+        loss_sum += (lse - row[y[i] as usize]) as f64;
+        if argmax == y[i] as usize {
+            correct += 1;
+        }
+    }
+    (loss_sum as f32, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_loss_is_log_c() {
+        let logits = vec![0.0f32; 3 * 10];
+        let y = vec![0, 5, 9];
+        let (loss, dl) = xent_mean_with_grad(&logits, &y, 10);
+        assert!((loss - (10.0f32).ln()).abs() < 1e-6);
+        // gradient rows sum to zero
+        for i in 0..3 {
+            let s: f32 = dl[i * 10..(i + 1) * 10].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        let (b, c) = (4, 6);
+        let mut logits = vec![0.0f32; b * c];
+        rng.fill_gaussian(&mut logits, 2.0);
+        let y: Vec<i32> = (0..b as i32).collect();
+        let (_, grad) = xent_mean_with_grad(&logits, &y, c);
+        let eps = 1e-2f32;
+        for j in [0, 7, 13, 23] {
+            let mut lp = logits.clone();
+            lp[j] += eps;
+            let mut lm = logits.clone();
+            lm[j] -= eps;
+            let (fp, _) = xent_mean_with_grad(&lp, &y, c);
+            let (fm, _) = xent_mean_with_grad(&lm, &y, c);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((grad[j] - fd).abs() < 1e-3, "j={j}: {} vs {fd}", grad[j]);
+        }
+    }
+
+    #[test]
+    fn stable_for_huge_logits() {
+        let logits = vec![1e4f32, -1e4, 0.0, 0.0];
+        let (loss, _) = xent_mean_with_grad(&logits, &[0, 1], 2);
+        assert!(loss.is_finite());
+        let (ls, correct) = eval_stats(&logits, &[0, 1], 2);
+        assert!(ls.is_finite());
+        assert_eq!(correct, 1); // row 2 predicts class 0, label 1
+    }
+
+    #[test]
+    fn eval_counts_correct() {
+        let logits = vec![2.0f32, 1.0, 0.0, 5.0];
+        let (_, correct) = eval_stats(&logits, &[0, 1], 2);
+        assert_eq!(correct, 2);
+    }
+}

@@ -1,0 +1,173 @@
+//! Network 1 of Table I in pure Rust: FC(784,50) -> ReLU -> FC(50,10),
+//! flat 39,760-parameter vector with hand-written backprop.
+//!
+//! Parameter layout matches `python/compile/models/mlp.py` exactly
+//! (w1 | b1 | w2 | b2, row-major), so parameters, gradients and Adam
+//! states are interchangeable with the HLO artifacts.
+
+use super::loss::{eval_stats, xent_mean_with_grad};
+use super::{matmul, matmul_nt, matmul_tn};
+use crate::util::rng::Rng;
+
+pub const IN: usize = 784;
+pub const HID: usize = 50;
+pub const OUT: usize = 10;
+pub const D: usize = IN * HID + HID + HID * OUT + OUT; // 39,760
+
+const W1: usize = 0;
+const B1O: usize = IN * HID;
+const W2: usize = B1O + HID;
+const B2O: usize = W2 + HID * OUT;
+
+/// He-normal init (fan-in) over a flat vector. (Statistically equivalent
+/// to the python init; for *identical* params across stacks use the
+/// `mnist_init.bin` dump from `make artifacts`.)
+pub fn init(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut p = vec![0.0f32; D];
+    rng.fill_gaussian(&mut p[W1..B1O], (2.0f32 / IN as f32).sqrt());
+    // b1 zeros
+    rng.fill_gaussian(&mut p[W2..B2O], (2.0f32 / HID as f32).sqrt());
+    // b2 zeros
+    p
+}
+
+/// Forward pass: logits [b, 10]. `x` is [b, 784] row-major.
+pub fn forward(params: &[f32], x: &[f32], b: usize) -> Vec<f32> {
+    let (logits, _) = forward_cached(params, x, b);
+    logits
+}
+
+/// Forward keeping the post-ReLU hidden activations for backprop.
+fn forward_cached(params: &[f32], x: &[f32], b: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(params.len(), D);
+    assert_eq!(x.len(), b * IN);
+    let mut h = vec![0.0f32; b * HID];
+    matmul(x, &params[W1..B1O], b, IN, HID, &mut h);
+    for i in 0..b {
+        for j in 0..HID {
+            let v = h[i * HID + j] + params[B1O + j];
+            h[i * HID + j] = if v > 0.0 { v } else { 0.0 };
+        }
+    }
+    let mut logits = vec![0.0f32; b * OUT];
+    matmul(&h, &params[W2..B2O], b, HID, OUT, &mut logits);
+    for i in 0..b {
+        for j in 0..OUT {
+            logits[i * OUT + j] += params[B2O + j];
+        }
+    }
+    (logits, h)
+}
+
+/// Loss + flat gradient of the mean cross-entropy.
+pub fn loss_and_grad(params: &[f32], x: &[f32], y: &[i32]) -> (f32, Vec<f32>) {
+    let b = y.len();
+    let (logits, h) = forward_cached(params, x, b);
+    let (loss, dlogits) = xent_mean_with_grad(&logits, y, OUT);
+
+    let mut grad = vec![0.0f32; D];
+    // dw2 = h^T @ dlogits ; db2 = col-sums of dlogits
+    matmul_tn(&h, &dlogits, b, HID, OUT, &mut grad[W2..B2O]);
+    for i in 0..b {
+        for j in 0..OUT {
+            grad[B2O + j] += dlogits[i * OUT + j];
+        }
+    }
+    // dh = dlogits @ w2^T, masked by relu
+    let mut dh = vec![0.0f32; b * HID];
+    // w2 is [HID, OUT]; need dlogits [b, OUT] @ w2^T [OUT, HID]
+    matmul_nt(&dlogits, &params[W2..B2O], b, OUT, HID, &mut dh);
+    for (dhv, &hv) in dh.iter_mut().zip(&h) {
+        if hv <= 0.0 {
+            *dhv = 0.0;
+        }
+    }
+    // dw1 = x^T @ dh ; db1 = col-sums of dh
+    matmul_tn(x, &dh, b, IN, HID, &mut grad[W1..B1O]);
+    for i in 0..b {
+        for j in 0..HID {
+            grad[B1O + j] += dh[i * HID + j];
+        }
+    }
+    (loss, grad)
+}
+
+/// (summed loss, correct count) over a batch.
+pub fn evaluate(params: &[f32], x: &[f32], y: &[i32]) -> (f32, usize) {
+    let logits = forward(params, x, y.len());
+    eval_stats(&logits, y, OUT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn d_matches_table1() {
+        assert_eq!(D, 39760);
+    }
+
+    #[test]
+    fn forward_shape_and_finite() {
+        let p = init(0);
+        let x = vec![0.5f32; 3 * IN];
+        let logits = forward(&p, &x, 3);
+        assert_eq!(logits.len(), 30);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut rng = Rng::new(1);
+        let p = init(1);
+        let b = 3;
+        let mut x = vec![0.0f32; b * IN];
+        rng.fill_gaussian(&mut x, 0.5);
+        let y = vec![1, 7, 3];
+        let (_, grad) = loss_and_grad(&p, &x, &y);
+        let eps = 1e-2f32;
+        // spot-check coordinates in every parameter block
+        for j in [5usize, 39_000, B1O + 3, W2 + 17, B2O + 9] {
+            let mut pp = p.clone();
+            pp[j] += eps;
+            let (fp, _) = loss_and_grad(&pp, &x, &y);
+            let mut pm = p.clone();
+            pm[j] -= eps;
+            let (fm, _) = loss_and_grad(&pm, &x, &y);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (grad[j] - fd).abs() < 2e-3,
+                "coord {j}: analytic {} vs fd {fd}",
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn learns_a_toy_task() {
+        let mut rng = Rng::new(2);
+        let mut p = init(0);
+        let b = 32;
+        let mut x = vec![0.0f32; b * IN];
+        let mut y = vec![0i32; b];
+        for i in 0..b {
+            let cls = (i % 2) as i32;
+            y[i] = cls;
+            x[i * IN + (cls as usize) * 400 + 10] = 4.0;
+            for j in 0..IN {
+                x[i * IN + j] += rng.gaussian() as f32 * 0.02;
+            }
+        }
+        let mut adam = crate::nn::adam::AdamState::new(D);
+        let (loss0, _) = loss_and_grad(&p, &x, &y);
+        for _ in 0..200 {
+            let (_, g) = loss_and_grad(&p, &x, &y);
+            adam.step(&mut p, &g, 1e-3);
+        }
+        let (loss1, _) = loss_and_grad(&p, &x, &y);
+        assert!(loss1 < loss0 * 0.2, "{loss0} -> {loss1}");
+        let (_, correct) = evaluate(&p, &x, &y);
+        assert_eq!(correct, b);
+    }
+}

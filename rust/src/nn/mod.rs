@@ -1,0 +1,124 @@
+//! Pure-Rust neural-net substrate: the MNIST MLP (Network 1 of Table I)
+//! with hand-written backprop, the Adam optimizer, and the softmax
+//! cross-entropy loss.
+//!
+//! This is the artifact-free compute backend (`backend::RustBackend`) —
+//! it trains the paper's MNIST experiments with no Python anywhere, keeps
+//! the test suite independent of `make artifacts`, and doubles as the
+//! numerics oracle the PJRT runtime is validated against (constants here
+//! mirror `python/compile/models/common.py` exactly).
+
+pub mod adam;
+pub mod loss;
+pub mod mlp;
+
+/// Basic row-major matmul helpers shared by the MLP fwd/bwd passes.
+/// (ikj loop order for cache-friendliness; hot enough to matter in the
+/// simulator but not worth SIMD intrinsics — see EXPERIMENTS.md §Perf.)
+pub(crate) fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            // no zero-skip branch here: it defeats autovectorization of
+            // the inner FMA loop, a net loss even on relu-sparse inputs
+            // (EXPERIMENTS.md §Perf)
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out = a^T @ b where a is [m, k] (so out is [k, n]).
+pub(crate) fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), k * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out = a @ b^T where b is [n, k], a is [m, k] (out [m, n]).
+pub(crate) fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_2x2() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 1.0, 1.0, 1.0];
+        let mut out = [0.0f32; 4];
+        matmul(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, [3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transposed_variants_agree() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        let (m, k, n) = (5, 7, 3);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        rng.fill_gaussian(&mut a, 1.0);
+        rng.fill_gaussian(&mut b, 1.0);
+        let mut want = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut want);
+
+        // a^T path: at is [k, m]; (a^T)^T @ b  via matmul_tn(at ...)
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let mut got = vec![0.0f32; m * n];
+        matmul_tn(&at, &b, k, m, n, &mut got);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+
+        // b^T path
+        let mut bt = vec![0.0f32; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                bt[j * k + i] = b[i * n + j];
+            }
+        }
+        let mut got2 = vec![0.0f32; m * n];
+        matmul_nt(&a, &bt, m, k, n, &mut got2);
+        for (x, y) in got2.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

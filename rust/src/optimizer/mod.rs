@@ -1,0 +1,87 @@
+//! Server-side optimizer applied to the aggregated update g~ (Algorithm 1
+//! line 11 — "update global model theta^t based on g~"; the paper does
+//! not pin the server rule, so it is pluggable: Adam matches the client
+//! optimizer and is the default, SGD is the ablation).
+
+use crate::nn::adam::AdamState;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServerOptKind {
+    Sgd { lr: f32 },
+    Adam { lr: f32 },
+}
+
+/// Stateful server optimizer over the flat global parameter vector.
+#[derive(Debug)]
+pub enum ServerOpt {
+    Sgd { lr: f32 },
+    Adam { lr: f32, state: AdamState },
+}
+
+impl ServerOpt {
+    pub fn new(kind: ServerOptKind, d: usize) -> Self {
+        match kind {
+            ServerOptKind::Sgd { lr } => ServerOpt::Sgd { lr },
+            ServerOptKind::Adam { lr } => ServerOpt::Adam { lr, state: AdamState::new(d) },
+        }
+    }
+
+    /// Apply a dense aggregated update as the "gradient".
+    pub fn apply_dense(&mut self, params: &mut [f32], update: &[f32]) {
+        match self {
+            ServerOpt::Sgd { lr } => {
+                for (p, &u) in params.iter_mut().zip(update) {
+                    *p -= *lr * u;
+                }
+            }
+            ServerOpt::Adam { lr, state } => state.step(params, update, *lr),
+        }
+    }
+
+    /// Adam state access for the XLA-backed path (`apply_*` artifacts own
+    /// the state tensors; the trainer keeps them in sync through here).
+    pub fn adam_state_mut(&mut self) -> Option<&mut AdamState> {
+        match self {
+            ServerOpt::Adam { state, .. } => Some(state),
+            ServerOpt::Sgd { .. } => None,
+        }
+    }
+
+    pub fn kind(&self) -> ServerOptKind {
+        match self {
+            ServerOpt::Sgd { lr } => ServerOptKind::Sgd { lr: *lr },
+            ServerOpt::Adam { lr, .. } => ServerOptKind::Adam { lr: *lr },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step() {
+        let mut opt = ServerOpt::new(ServerOptKind::Sgd { lr: 0.1 }, 3);
+        let mut p = vec![1.0f32, 2.0, 3.0];
+        opt.apply_dense(&mut p, &[1.0, 0.0, -1.0]);
+        assert_eq!(p, vec![0.9, 2.0, 3.1]);
+    }
+
+    #[test]
+    fn adam_matches_raw_state() {
+        let mut opt = ServerOpt::new(ServerOptKind::Adam { lr: 0.01 }, 2);
+        let mut p1 = vec![1.0f32, -1.0];
+        let mut p2 = p1.clone();
+        let g = vec![0.5f32, 0.25];
+        opt.apply_dense(&mut p1, &g);
+        let mut st = AdamState::new(2);
+        st.step(&mut p2, &g, 0.01);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        let opt = ServerOpt::new(ServerOptKind::Adam { lr: 0.5 }, 1);
+        assert_eq!(opt.kind(), ServerOptKind::Adam { lr: 0.5 });
+    }
+}

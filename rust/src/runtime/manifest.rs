@@ -1,0 +1,192 @@
+//! `artifacts/manifest.json` schema: what the AOT exporter promises about
+//! every HLO artifact (interface shapes/dtypes, model hyper-parameters,
+//! initial-parameter dump). The runtime type-checks calls against this.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorIface {
+    /// "f32" | "i32"
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorIface>,
+    pub outputs: Vec<TensorIface>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub d: usize,
+    pub batch: usize,
+    pub h_scan: usize,
+    pub r: usize,
+    pub k: usize,
+    pub n_clients: usize,
+    pub k_total: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub lr: f64,
+    pub init_params: String,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+fn iface(j: &Json) -> Result<TensorIface> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("iface not an array"))?;
+    if arr.len() != 2 {
+        bail!("iface must be [dtype, shape]");
+    }
+    let dtype = arr[0].as_str().ok_or_else(|| anyhow!("dtype"))?.to_string();
+    let shape = arr[1]
+        .as_arr()
+        .ok_or_else(|| anyhow!("shape"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("dim")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorIface { dtype, shape })
+}
+
+impl Manifest {
+    pub fn parse(j: &Json) -> Result<Manifest> {
+        let fmt = j.get("format").and_then(Json::as_usize).unwrap_or(0);
+        if fmt != 1 {
+            bail!("unsupported manifest format {fmt}");
+        }
+        let mut models = BTreeMap::new();
+        let mobj = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+        for (name, mj) in mobj {
+            let need = |key: &str| -> Result<usize> {
+                mj.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("model {name}: missing {key}"))
+            };
+            let mut artifacts = BTreeMap::new();
+            let aobj = mj
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("model {name}: missing artifacts"))?;
+            for (aname, aj) in aobj {
+                let inputs = aj
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{aname}: inputs"))?
+                    .iter()
+                    .map(iface)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = aj
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{aname}: outputs"))?
+                    .iter()
+                    .map(iface)
+                    .collect::<Result<Vec<_>>>()?;
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactMeta {
+                        file: aj
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{aname}: file"))?
+                            .to_string(),
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    d: need("d")?,
+                    batch: need("batch")?,
+                    h_scan: need("h_scan")?,
+                    r: need("r")?,
+                    k: need("k")?,
+                    n_clients: need("n_clients")?,
+                    k_total: need("k_total")?,
+                    input_dim: need("input_dim")?,
+                    num_classes: need("num_classes")?,
+                    lr: mj.get("lr").and_then(Json::as_f64).unwrap_or(1e-4),
+                    init_params: mj
+                        .get("init_params")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("model {name}: init_params"))?
+                        .to_string(),
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { models })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::parse(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "models": {
+        "mnist": {
+          "d": 39760, "batch": 256, "h_scan": 4, "r": 75, "k": 10,
+          "n_clients": 10, "k_total": 100, "input_dim": 784,
+          "num_classes": 10, "lr": 0.0001, "init_seed": 42,
+          "init_params": "mnist_init.bin",
+          "artifacts": {
+            "eval_batch": {
+              "file": "mnist_eval_batch.hlo.txt",
+              "inputs": [["f32", [39760]], ["f32", [256, 784]], ["i32", [256]]],
+              "outputs": [["f32", []], ["f32", []]]
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&Json::parse(SAMPLE).unwrap()).unwrap();
+        let mm = &m.models["mnist"];
+        assert_eq!(mm.d, 39760);
+        assert_eq!(mm.k_total, 100);
+        let a = &mm.artifacts["eval_batch"];
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].shape, vec![256, 784]);
+        assert_eq!(a.inputs[2].dtype, "i32");
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let j = Json::parse(r#"{"format": 9, "models": {}}"#).unwrap();
+        assert!(Manifest::parse(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let j = Json::parse(r#"{"format": 1, "models": {"m": {"d": 5}}}"#).unwrap();
+        assert!(Manifest::parse(&j).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Sparse vectors and top-k selection — the L3 hot-path primitives.
+//!
+//! Tie-breaking contract everywhere: **value descending, index ascending**
+//! (what `jax.lax.top_k` implements), so the Rust coordinator, the jnp
+//! oracles and the HLO artifacts agree exactly (cross-checked in
+//! `rust/tests/integration_runtime.rs`).
+
+/// A sparse gradient: parallel (indices, values), indices unique unless
+/// produced by aggregation with `merge = false`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SparseVec {
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn new(idx: Vec<u32>, val: Vec<f32>) -> Self {
+        assert_eq!(idx.len(), val.len());
+        SparseVec { idx, val }
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Materialize into a dense vector of length `d`, accumulating
+    /// duplicate indices.
+    pub fn to_dense(&self, d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; d];
+        self.add_into(&mut out, 1.0);
+        out
+    }
+
+    /// `dense += scale * self`.
+    pub fn add_into(&self, dense: &mut [f32], scale: f32) {
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            dense[i as usize] += scale * v;
+        }
+    }
+
+    /// Wire size in bytes (4B index + 4B value per entry) — the uplink
+    /// cost model of DESIGN.md §6.
+    pub fn wire_bytes(&self) -> usize {
+        self.len() * 8
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.val.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+/// Exact top-k indices of `score` (value desc, index asc), k <= len.
+/// O(n log k) via a bounded min-heap; the k = n case short-circuits to a
+/// sort. Returns indices ordered by descending score.
+pub fn topk_indices(score: &[f32], k: usize) -> Vec<u32> {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    assert!(k <= score.len(), "topk: k={k} > n={}", score.len());
+    if k == 0 {
+        return Vec::new();
+    }
+
+    // Heap entry ordered so the heap root is the *worst* kept element:
+    // smallest value, then largest index.
+    #[derive(PartialEq)]
+    struct Entry(f32, u32);
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, o: &Self) -> Ordering {
+            // reversed: BinaryHeap is a max-heap, we want min-by-(val, -idx)
+            o.0.partial_cmp(&self.0)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| self.1.cmp(&o.1))
+        }
+    }
+
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(k + 1);
+    for (i, &v) in score.iter().enumerate() {
+        let e = Entry(v, i as u32);
+        if heap.len() < k {
+            heap.push(e);
+        } else if let Some(worst) = heap.peek() {
+            // keep e if it beats the worst kept: higher value, or equal
+            // value with lower index
+            let beats = v > worst.0 || (v == worst.0 && (i as u32) < worst.1);
+            if beats {
+                heap.pop();
+                heap.push(e);
+            }
+        }
+    }
+    let mut kept: Vec<Entry> = heap.into_vec();
+    kept.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.1.cmp(&b.1))
+    });
+    kept.into_iter().map(|e| e.1).collect()
+}
+
+/// Top-k by |value| of a dense gradient -> SparseVec carrying the *signed*
+/// values (the client-side top-k / top-r primitive).
+pub fn topk_abs_sparse(g: &[f32], k: usize) -> SparseVec {
+    let abs: Vec<f32> = g.iter().map(|v| v.abs()).collect();
+    let idx = topk_indices(&abs, k);
+    let val = idx.iter().map(|&i| g[i as usize]).collect();
+    SparseVec { idx, val }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oracle_topk(score: &[f32], k: usize) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..score.len() as u32).collect();
+        order.sort_by(|&a, &b| {
+            score[b as usize]
+                .partial_cmp(&score[a as usize])
+                .unwrap()
+                .then_with(|| a.cmp(&b))
+        });
+        order.truncate(k);
+        order
+    }
+
+    #[test]
+    fn matches_sort_oracle() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        for _ in 0..50 {
+            let n = 1 + rng.below(200);
+            let k = rng.below(n + 1);
+            let mut score = vec![0.0f32; n];
+            for v in score.iter_mut() {
+                // coarse quantization to force ties
+                *v = (rng.gaussian() * 3.0).round() as f32;
+            }
+            assert_eq!(topk_indices(&score, k), oracle_topk(&score, k));
+        }
+    }
+
+    #[test]
+    fn tie_break_low_index_wins() {
+        let score = [1.0f32, 5.0, 5.0, 5.0, 0.0];
+        assert_eq!(topk_indices(&score, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn topk_abs_keeps_signed_values() {
+        let g = [0.1f32, -9.0, 3.0, -0.5];
+        let s = topk_abs_sparse(&g, 2);
+        assert_eq!(s.idx, vec![1, 2]);
+        assert_eq!(s.val, vec![-9.0, 3.0]);
+    }
+
+    #[test]
+    fn dense_roundtrip_and_duplicates() {
+        let s = SparseVec::new(vec![1, 3, 1], vec![2.0, -1.0, 0.5]);
+        let d = s.to_dense(5);
+        assert_eq!(d, vec![0.0, 2.5, 0.0, -1.0, 0.0]);
+        assert_eq!(s.wire_bytes(), 24);
+    }
+
+    #[test]
+    fn add_into_scales() {
+        let s = SparseVec::new(vec![0, 2], vec![1.0, 1.0]);
+        let mut dense = vec![1.0f32; 3];
+        s.add_into(&mut dense, 0.5);
+        assert_eq!(dense, vec![1.5, 1.0, 1.5]);
+    }
+
+    #[test]
+    fn empty_and_full_k() {
+        assert!(topk_indices(&[1.0, 2.0], 0).is_empty());
+        assert_eq!(topk_indices(&[1.0, 2.0], 2), vec![1, 0]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Mini property-testing substrate (proptest is not in the offline
+//! registry): seeded generators + a `prop_check` runner that reports the
+//! failing case and its seed for reproduction.
+
+use crate::util::rng::Rng;
+
+/// Generation context handed to property bodies.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        self.rng.fill_gaussian(&mut v, std);
+        v
+    }
+
+    pub fn vec_u32_distinct(&mut self, n: usize, k: usize) -> Vec<u32> {
+        self.rng.choose_k(n, k).into_iter().map(|x| x as u32).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+}
+
+/// Run `body` over `cases` generated cases; panics with the case number
+/// and seed on the first failure (re-run with `RAGEK_PROP_SEED=<seed>`).
+pub fn prop_check(name: &str, cases: usize, mut body: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let base_seed: u64 = std::env::var("RAGEK_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xA9E5_EED);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        if let Err(msg) = body(&mut g) {
+            panic!("property '{name}' failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        prop_check("sum-commutes", 50, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} + {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn reports_failure() {
+        prop_check("always-fails", 5, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        prop_check("gen-bounds", 100, |g| {
+            let x = g.usize_in(3, 9);
+            if !(3..=9).contains(&x) {
+                return Err(format!("usize_in out of range: {x}"));
+            }
+            let v = g.vec_u32_distinct(50, 10);
+            let set: std::collections::HashSet<_> = v.iter().collect();
+            if set.len() != 10 {
+                return Err("duplicates".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,246 @@
+//! CLI argument parsing substrate (no clap offline): subcommands, typed
+//! options with defaults, flags, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// One declared option or flag.
+#[derive(Debug, Clone)]
+struct Decl {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative parser for one (sub)command.
+#[derive(Debug, Default)]
+pub struct ArgSpec {
+    program: String,
+    about: String,
+    decls: Vec<Decl>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl ArgSpec {
+    pub fn new(program: &str, about: &str) -> Self {
+        ArgSpec { program: program.into(), about: about.into(), decls: vec![] }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.decls.push(Decl {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>` (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.decls.push(Decl {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.decls.push(Decl {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for d in &self.decls {
+            let left = if d.is_flag {
+                format!("  --{}", d.name)
+            } else {
+                format!("  --{} <v>", d.name)
+            };
+            let def = match (&d.default, d.is_flag) {
+                (Some(v), false) => format!(" [default: {v}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{left:<26} {}{def}\n", d.help));
+        }
+        s.push_str("  --help                     show this message\n");
+        s
+    }
+
+    /// Parse a token list (not including argv[0] / the subcommand).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args, ArgError> {
+        let mut args = Args::default();
+        for d in &self.decls {
+            if let Some(def) = &d.default {
+                args.values.insert(d.name.clone(), def.clone());
+            }
+            if d.is_flag {
+                args.flags.insert(d.name.clone(), false);
+            }
+        }
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(ArgError::HelpRequested);
+            }
+            if let Some(name) = tok.strip_prefix("--") {
+                // --name=value form
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let decl = self
+                    .decls
+                    .iter()
+                    .find(|d| d.name == name)
+                    .ok_or_else(|| ArgError::Unknown(name.to_string()))?;
+                if decl.is_flag {
+                    args.flags.insert(name.to_string(), true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| ArgError::MissingValue(name.to_string()))?,
+                    };
+                    args.values.insert(name.to_string(), v);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        // check required
+        for d in &self.decls {
+            if !d.is_flag && !args.values.contains_key(&d.name) {
+                return Err(ArgError::MissingValue(d.name.clone()));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, ArgError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| ArgError::Invalid(name.into(), self.get(name).into()))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, ArgError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| ArgError::Invalid(name.into(), self.get(name).into()))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "about")
+            .opt("iters", "100", "iteration count")
+            .opt("strategy", "ragek", "selection strategy")
+            .flag("verbose", "log more")
+            .req("model", "model name")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = spec()
+            .parse(&toks(&["--model", "mnist", "--iters=250", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("iters").unwrap(), 250);
+        assert_eq!(a.get("strategy"), "ragek");
+        assert_eq!(a.get("model"), "mnist");
+        assert!(!a.get_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn flags_and_equals_form() {
+        let a = spec()
+            .parse(&toks(&["--verbose", "--model=cifar"]))
+            .unwrap();
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.get("model"), "cifar");
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(matches!(
+            spec().parse(&toks(&["--iters", "5"])),
+            Err(ArgError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            spec().parse(&toks(&["--model", "m", "--nope", "1"])),
+            Err(ArgError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn help_requested() {
+        assert!(matches!(
+            spec().parse(&toks(&["--help"])),
+            Err(ArgError::HelpRequested)
+        ));
+        assert!(spec().usage().contains("--iters"));
+    }
+
+    #[test]
+    fn invalid_numeric_value() {
+        let a = spec().parse(&toks(&["--model", "m", "--iters", "abc"])).unwrap();
+        assert!(matches!(a.get_usize("iters"), Err(ArgError::Invalid(..))));
+    }
+}

@@ -1,0 +1,171 @@
+//! ASCII rendering of the paper's figures: heatmaps (Fig. 2/4 connectivity
+//! matrices) and line charts (Fig. 3/5 accuracy & loss curves) straight in
+//! the terminal, plus CSV dumps for external plotting.
+
+/// Render a square matrix as an ASCII heatmap with a shade ramp.
+/// Values are normalized to [0, max] across the matrix.
+pub fn heatmap(m: &[Vec<f64>], labels: bool) -> String {
+    const RAMP: [char; 10] = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let n = m.len();
+    let maxv = m
+        .iter()
+        .flat_map(|r| r.iter())
+        .cloned()
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    let mut s = String::new();
+    if labels {
+        s.push_str("    ");
+        for j in 0..n {
+            s.push_str(&format!("{j:>3}"));
+        }
+        s.push('\n');
+    }
+    for (i, row) in m.iter().enumerate() {
+        if labels {
+            s.push_str(&format!("{i:>3} "));
+        }
+        for &v in row {
+            let t = (v / maxv).clamp(0.0, 1.0);
+            let c = RAMP[((t * (RAMP.len() - 1) as f64).round() as usize).min(RAMP.len() - 1)];
+            s.push(' ');
+            s.push(c);
+            s.push(c);
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Render one or more named series as an ASCII line chart.
+pub fn line_chart(series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    const MARKS: [char; 6] = ['o', 'x', '+', '*', '^', '~'];
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut maxlen = 0usize;
+    for (_, ys) in series {
+        for &y in ys.iter() {
+            if y.is_finite() {
+                lo = lo.min(y);
+                hi = hi.max(y);
+            }
+        }
+        maxlen = maxlen.max(ys.len());
+    }
+    if !lo.is_finite() || maxlen < 2 {
+        return String::from("(no data)\n");
+    }
+    if (hi - lo).abs() < 1e-12 {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let x = i * (width - 1) / (maxlen - 1).max(1);
+            let t = (y - lo) / (hi - lo);
+            let row = height - 1 - ((t * (height - 1) as f64).round() as usize).min(height - 1);
+            grid[row][x] = mark;
+        }
+    }
+    let mut s = String::new();
+    for (ri, row) in grid.iter().enumerate() {
+        let label = if ri == 0 {
+            format!("{hi:>9.3} |")
+        } else if ri == height - 1 {
+            format!("{lo:>9.3} |")
+        } else {
+            format!("{:>9} |", "")
+        };
+        s.push_str(&label);
+        s.extend(row.iter());
+        s.push('\n');
+    }
+    s.push_str(&format!("{:>10}+{}\n", "", "-".repeat(width)));
+    let mut legend = format!("{:>11}", "");
+    for (si, (name, _)) in series.iter().enumerate() {
+        legend.push_str(&format!("{} = {}   ", MARKS[si % MARKS.len()], name));
+    }
+    s.push_str(&legend);
+    s.push('\n');
+    s
+}
+
+/// CSV dump: header + one row per index across all series (ragged series
+/// padded with empty cells).
+pub fn to_csv(columns: &[(&str, &[f64])]) -> String {
+    let mut s = String::new();
+    s.push_str("step");
+    for (name, _) in columns {
+        s.push(',');
+        s.push_str(name);
+    }
+    s.push('\n');
+    let maxlen = columns.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
+    for i in 0..maxlen {
+        s.push_str(&i.to_string());
+        for (_, v) in columns {
+            s.push(',');
+            if let Some(x) = v.get(i) {
+                s.push_str(&format!("{x}"));
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// CSV for a matrix (used for the Fig. 2/4 heatmap dumps).
+pub fn matrix_csv(m: &[Vec<f64>]) -> String {
+    let mut s = String::new();
+    for row in m {
+        let cells: Vec<String> = row.iter().map(|x| format!("{x:.6}")).collect();
+        s.push_str(&cells.join(","));
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heatmap_shape() {
+        let m = vec![vec![1.0, 0.0], vec![0.5, 1.0]];
+        let out = heatmap(&m, true);
+        assert_eq!(out.lines().count(), 3); // header + 2 rows
+        assert!(out.contains('@')); // max value shade
+    }
+
+    #[test]
+    fn line_chart_renders_all_series() {
+        let a: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..50).map(|i| 50.0 - i as f64).collect();
+        let out = line_chart(&[("up", &a), ("down", &b)], 40, 10);
+        assert!(out.contains("o = up"));
+        assert!(out.contains("x = down"));
+        assert!(out.lines().count() >= 12);
+    }
+
+    #[test]
+    fn csv_layout() {
+        let a = [1.0, 2.0];
+        let b = [3.0];
+        let csv = to_csv(&[("a", &a), ("b", &b)]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,a,b");
+        assert_eq!(lines[1], "0,1,3");
+        assert_eq!(lines[2], "1,2,");
+    }
+
+    #[test]
+    fn degenerate_chart_no_panic() {
+        assert!(line_chart(&[("e", &[])], 10, 5).contains("no data"));
+        let flat = [2.0, 2.0, 2.0];
+        let _ = line_chart(&[("flat", &flat)], 10, 5);
+    }
+}

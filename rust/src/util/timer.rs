@@ -1,0 +1,71 @@
+//! Scoped wall-clock timing + a cumulative per-phase profile, used by the
+//! perf pass (EXPERIMENTS.md §Perf) to attribute global-round time to
+//! selection / aggregation / clustering / compute.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Cumulative profile: phase name -> (total seconds, calls).
+#[derive(Debug, Default)]
+pub struct Profile {
+    inner: Mutex<BTreeMap<String, (f64, u64)>>,
+}
+
+impl Profile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` under `phase`.
+    pub fn time<T>(&self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&self, phase: &str, secs: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(phase.to_string()).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    pub fn snapshot(&self) -> Vec<(String, f64, u64)> {
+        let m = self.inner.lock().unwrap();
+        let mut v: Vec<_> = m.iter().map(|(k, (s, n))| (k.clone(), *s, *n)).collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
+        let total: f64 = snap.iter().map(|e| e.1).sum();
+        let mut s = format!("{:<28} {:>10} {:>8} {:>7}\n", "phase", "total(s)", "calls", "share");
+        for (name, secs, calls) in snap {
+            let share = if total > 0.0 { secs / total * 100.0 } else { 0.0 };
+            s.push_str(&format!("{name:<28} {secs:>10.4} {calls:>8} {share:>6.1}%\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let p = Profile::new();
+        let x = p.time("a", || 21 * 2);
+        assert_eq!(x, 42);
+        p.time("a", || ());
+        p.time("b", || ());
+        let snap = p.snapshot();
+        assert_eq!(snap.len(), 2);
+        let a = snap.iter().find(|e| e.0 == "a").unwrap();
+        assert_eq!(a.2, 2);
+        assert!(p.report().contains("calls"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Clustering integration: the full eq. (3) + DBSCAN pipeline must
+//! rediscover the planted client pairs from nothing but request
+//! histories (the Fig. 2 claim).
+
+use ragek::config::ExperimentConfig;
+use ragek::coordinator::strategies::StrategyKind;
+use ragek::data::partition::paper_pair_truth;
+use ragek::fl::trainer::Trainer;
+
+fn rand_index(a: &[usize], b: &[usize]) -> f64 {
+    let n = a.len();
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if (a[i] == a[j]) == (b[i] == b[j]) {
+                agree += 1;
+            }
+            total += 1;
+        }
+    }
+    agree as f64 / total as f64
+}
+
+#[test]
+fn recovers_planted_pairs_on_mnist() {
+    let mut cfg = ExperimentConfig::mnist_scaled();
+    cfg.rounds = 44; // two reclustering windows (M = 20)
+    cfg.train_n = 2000;
+    cfg.test_n = 256;
+    cfg.eval_every = 0;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    let truth = paper_pair_truth(cfg.n_clients);
+    let ri = rand_index(&report.cluster_labels, &truth);
+    assert!(
+        ri >= 0.9,
+        "clustering must recover the pairs: labels {:?} truth {truth:?} (rand {ri:.3})",
+        report.cluster_labels
+    );
+}
+
+#[test]
+fn connectivity_matrix_develops_pair_structure() {
+    let mut cfg = ExperimentConfig::mnist_scaled();
+    cfg.rounds = 30;
+    cfg.train_n = 1500;
+    cfg.test_n = 256;
+    cfg.eval_every = 0;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.heatmap_rounds = vec![30];
+    let report = t.run().unwrap();
+    let (_, m) = &report.heatmaps[0];
+    // mean within-pair similarity must dominate cross-pair similarity
+    let mut within = Vec::new();
+    let mut across = Vec::new();
+    for i in 0..10 {
+        for j in 0..10 {
+            if i == j {
+                continue;
+            }
+            if i / 2 == j / 2 {
+                within.push(m[i][j]);
+            } else {
+                across.push(m[i][j]);
+            }
+        }
+    }
+    let mw = within.iter().sum::<f64>() / within.len() as f64;
+    let ma = across.iter().sum::<f64>() / across.len() as f64;
+    assert!(
+        mw > ma * 1.5,
+        "within-pair similarity {mw:.3} must dominate cross-pair {ma:.3}"
+    );
+}
+
+#[test]
+fn no_reclustering_without_age_strategy() {
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.strategy = StrategyKind::RTopK;
+    cfg.rounds = 8;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    // rTop-k has no PS-side age state: everyone stays a singleton
+    assert_eq!(report.cluster_labels, (0..cfg.n_clients).collect::<Vec<_>>());
+}
+
+#[test]
+fn iid_clients_may_all_cluster_together() {
+    // with iid data all clients look alike: DBSCAN should put them in few
+    // clusters (usually one) — and the run must stay healthy regardless
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.partition = ragek::data::partition::Scheme::Iid;
+    cfg.rounds = 12;
+    cfg.recluster_every = 4;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    let distinct: std::collections::HashSet<_> = report.cluster_labels.iter().collect();
+    assert!(
+        distinct.len() <= cfg.n_clients,
+        "cluster count in range: {:?}",
+        report.cluster_labels
+    );
+}

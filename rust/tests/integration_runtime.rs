@@ -1,0 +1,202 @@
+//! Cross-layer numerics: the PJRT-executed HLO artifacts vs the pure-Rust
+//! oracle, on identical inputs (the `mnist_init.bin` parameters dumped at
+//! AOT time). Skips cleanly when `make artifacts` has not run.
+
+use ragek::backend::{Backend, ClientState, GlobalState, RustBackend, XlaBackend};
+use ragek::coordinator::aggregator::Aggregate;
+use ragek::nn::mlp;
+use ragek::runtime::{lit_f32, lit_i32, to_f32, to_i32, Runtime};
+use ragek::sparse::SparseVec;
+use ragek::util::rng::Rng;
+
+const ART: &str = "artifacts";
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(ART).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn batch(b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; b * 784];
+    for v in x.iter_mut() {
+        *v = rng.uniform() as f32;
+    }
+    let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+    (x, y)
+}
+
+#[test]
+fn manifest_matches_table1() {
+    require_artifacts!();
+    let rt = Runtime::load_one(ART, "mnist", "eval_batch").unwrap();
+    assert_eq!(rt.model().d, 39760);
+    assert_eq!(rt.model().r, 75);
+    assert_eq!(rt.model().k, 10);
+    let init = rt.init_params().unwrap();
+    assert_eq!(init.len(), 39760);
+}
+
+#[test]
+fn eval_matches_rust_oracle() {
+    require_artifacts!();
+    let mut xla = XlaBackend::new(ART, "mnist", 75).unwrap();
+    let params = xla.init_params().unwrap();
+    let b = xla.runtime().model().batch;
+    let (x, y) = batch(b, 3);
+    let (xl_loss, xl_correct) = xla.eval(&params, &x, &y).unwrap();
+    let (rs_loss, rs_correct) = mlp::evaluate(&params, &x, &y);
+    assert_eq!(xl_correct, rs_correct, "correct counts must agree exactly");
+    let rel = (xl_loss - rs_loss).abs() / rs_loss.abs().max(1e-6);
+    assert!(rel < 1e-3, "loss mismatch: xla {xl_loss} vs rust {rs_loss}");
+}
+
+#[test]
+fn local_round_matches_rust_backend() {
+    require_artifacts!();
+    let mut xla = XlaBackend::new(ART, "mnist", 75).unwrap();
+    let m = xla.runtime().model().clone();
+    let (h, b) = (m.h_scan, m.batch);
+    let params = xla.init_params().unwrap();
+
+    let mut rng = Rng::new(11);
+    let mut xs = vec![0.0f32; h * b * 784];
+    for v in xs.iter_mut() {
+        *v = rng.uniform() as f32;
+    }
+    let ys: Vec<i32> = (0..h * b).map(|i| (i % 10) as i32).collect();
+
+    let mut st_x = ClientState::new(params.clone());
+    let out_x = xla.local_round(&mut st_x, &xs, &ys, h, b).unwrap();
+
+    let mut rust = RustBackend::new(75, m.lr as f32, 0);
+    let mut st_r = ClientState::new(params);
+    let out_r = rust.local_round(&mut st_r, &xs, &ys, h, b).unwrap();
+
+    // parameters after H Adam steps agree to float tolerance
+    let max_diff = st_x
+        .params
+        .iter()
+        .zip(&st_r.params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 5e-5, "param divergence {max_diff}");
+    assert!((out_x.mean_loss - out_r.mean_loss).abs() < 1e-3);
+
+    // top-r reports: indices are tie-break sensitive; require high overlap
+    // and identical leading entries
+    let set_x: std::collections::HashSet<_> = out_x.report.idx.iter().collect();
+    let overlap = out_r.report.idx.iter().filter(|i| set_x.contains(i)).count();
+    assert!(
+        overlap >= 70,
+        "top-75 reports overlap only {overlap}/75: gradients diverged"
+    );
+    assert_eq!(out_x.report.idx[..10], out_r.report.idx[..10]);
+}
+
+#[test]
+fn ragek_select_artifact_matches_rust_selection() {
+    require_artifacts!();
+    let rt = Runtime::load_one(ART, "mnist", "ragek_select").unwrap();
+    let m = rt.model().clone();
+    let d = m.d;
+    let mut rng = Rng::new(5);
+    let mut grad = vec![0.0f32; d];
+    rng.fill_gaussian(&mut grad, 1.0);
+    // build an age vector with structure: old ages on a band of indices
+    let mut age_rust = ragek::age::AgeVector::new(d);
+    for round in 0..20 {
+        let sel: Vec<u32> = (0..d as u32).filter(|j| j % 20 != round % 20).collect();
+        age_rust.update(&sel);
+    }
+    let age_i32: Vec<i32> = age_rust.as_slice().iter().map(|&a| a as i32).collect();
+
+    let outs = rt
+        .call(
+            "ragek_select",
+            &[
+                lit_f32(&grad, &[d as i64]).unwrap(),
+                lit_i32(&age_i32, &[d as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let sel_idx: Vec<u32> = to_i32(&outs[0]).unwrap().into_iter().map(|i| i as u32).collect();
+    let sel_val = to_f32(&outs[1]).unwrap();
+    let new_age = to_i32(&outs[2]).unwrap();
+
+    // rust mirror: top-r by |g|, then k oldest
+    let report = ragek::sparse::topk_abs_sparse(&grad, m.r);
+    let rust_sel =
+        ragek::coordinator::selection::select_oldest_k(&age_rust, &report.idx, m.k);
+    let mut a = sel_idx.clone();
+    let mut b = rust_sel.clone();
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b, "selected index sets must agree");
+    for (j, v) in sel_idx.iter().zip(&sel_val) {
+        assert!((grad[*j as usize] - v).abs() < 1e-6);
+    }
+    // eq. (2) on the artifact side
+    let sel_set: std::collections::HashSet<u32> = sel_idx.into_iter().collect();
+    for j in (0..d).step_by(997) {
+        let want = if sel_set.contains(&(j as u32)) {
+            0
+        } else {
+            age_rust.get(j) as i32 + 1
+        };
+        assert_eq!(new_age[j], want, "age mismatch at {j}");
+    }
+}
+
+#[test]
+fn apply_sparse_matches_rust_adam() {
+    require_artifacts!();
+    let mut xla = XlaBackend::new(ART, "mnist", 75).unwrap();
+    let params = xla.init_params().unwrap();
+    let d = params.len();
+    let mut rng = Rng::new(9);
+    let idx: Vec<u32> = rng.choose_k(d, 40).into_iter().map(|x| x as u32).collect();
+    let val: Vec<f32> = (0..40).map(|_| rng.gaussian() as f32).collect();
+    let mut agg = Aggregate::new();
+    agg.push(SparseVec::new(idx, val));
+
+    let mut gx = GlobalState::new(params.clone());
+    xla.server_apply(&mut gx, &agg, 1.0, 1e-4).unwrap();
+
+    let mut rust = RustBackend::new(75, 1e-4, 0);
+    let mut gr = GlobalState::new(params);
+    rust.server_apply(&mut gr, &agg, 1.0, 1e-4).unwrap();
+
+    let max_diff = gx
+        .params
+        .iter()
+        .zip(&gr.params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-6, "server apply divergence {max_diff}");
+    assert_eq!(gx.adam.t, gr.adam.t);
+}
+
+#[test]
+fn xla_end_to_end_smoke_training() {
+    require_artifacts!();
+    use ragek::config::{BackendKind, ExperimentConfig};
+    let mut cfg = ExperimentConfig::mnist_scaled();
+    cfg.backend = BackendKind::Xla;
+    cfg.rounds = 3;
+    cfg.train_n = 600;
+    cfg.test_n = 256;
+    cfg.eval_every = 3;
+    let mut t = ragek::fl::trainer::Trainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.history.rounds.len(), 3);
+    assert!(report.history.rounds.iter().all(|r| r.train_loss.is_finite()));
+}

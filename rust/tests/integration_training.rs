@@ -1,0 +1,154 @@
+//! End-to-end training integration: Algorithm 1 over the full stack
+//! (synthetic non-iid data -> clients -> PS -> aggregation -> server
+//! optimizer) on the artifact-free Rust backend.
+
+use ragek::config::ExperimentConfig;
+use ragek::coordinator::strategies::StrategyKind;
+use ragek::fl::trainer::Trainer;
+
+fn smoke(strategy: StrategyKind, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.strategy = strategy;
+    cfg.rounds = rounds;
+    cfg
+}
+
+#[test]
+fn ragek_converges_on_noniid_mnist() {
+    let mut cfg = smoke(StrategyKind::RageK, 40);
+    cfg.eval_every = 10;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    let first = report.history.rounds.first().unwrap().train_loss;
+    let last = report.history.rounds.last().unwrap().train_loss;
+    // global-model improvement shows up in the client-side train loss
+    // slowly (clients resync to global each round; only k=8 coords flow
+    // up per client per round at smoke scale)
+    assert!(last < first * 0.95, "train loss: {first} -> {last}");
+    // global-model accuracy well above the 10% chance level at smoke scale
+    assert!(
+        report.final_accuracy > 0.35,
+        "global accuracy too low: {}",
+        report.final_accuracy
+    );
+}
+
+#[test]
+fn every_strategy_trains_without_error() {
+    for strategy in [
+        StrategyKind::RageK,
+        StrategyKind::RageKIndependent,
+        StrategyKind::RTopK,
+        StrategyKind::TopK,
+        StrategyKind::RandK,
+    ] {
+        let cfg = smoke(strategy, 6);
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.history.rounds.len(), 6, "{strategy:?}");
+        assert!(report.history.rounds.iter().all(|r| r.train_loss.is_finite()));
+    }
+}
+
+#[test]
+fn dense_strategy_uploads_full_gradient() {
+    let mut cfg = smoke(StrategyKind::Dense, 3);
+    cfg.eval_every = 0;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    // uplink = rounds * n_clients * 8 bytes * d (sparse-pair encoding of
+    // all d coords)
+    let expect = 3 * cfg.n_clients as u64 * 8 * cfg.d() as u64;
+    assert_eq!(report.history.comm.update_up, expect);
+}
+
+#[test]
+fn comm_accounting_matches_design_formulas() {
+    let rounds = 5usize;
+    let cfg = smoke(StrategyKind::RageK, rounds);
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    let (n, r, k, d) = (
+        cfg.n_clients as u64,
+        cfg.r as u64,
+        cfg.k as u64,
+        cfg.d() as u64,
+    );
+    let rounds = rounds as u64;
+    let comm = report.history.comm;
+    assert_eq!(comm.report_up, rounds * n * 4 * r);
+    assert_eq!(comm.update_up, rounds * n * 8 * k);
+    assert_eq!(comm.request_down, rounds * n * 4 * k);
+    assert_eq!(comm.broadcast_down, rounds * n * 4 * d);
+
+    // rTop-k at the same (r, k): no report, no request
+    let cfg2 = smoke(StrategyKind::RTopK, 5);
+    let mut t2 = Trainer::from_config(&cfg2).unwrap();
+    let report2 = t2.run().unwrap();
+    assert_eq!(report2.history.comm.report_up, 0);
+    assert_eq!(report2.history.comm.request_down, 0);
+    assert_eq!(report2.history.comm.update_up, rounds * n * 8 * k);
+}
+
+#[test]
+fn training_is_deterministic_in_seed() {
+    let run = |seed: u64| {
+        let mut cfg = smoke(StrategyKind::RageK, 6);
+        cfg.seed = seed;
+        cfg.eval_every = 3;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let r = t.run().unwrap();
+        (
+            r.history.rounds.iter().map(|x| x.train_loss).collect::<Vec<_>>(),
+            r.final_accuracy,
+        )
+    };
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(a, b, "same seed must reproduce exactly");
+    let c = run(8);
+    assert_ne!(a.0, c.0, "different seed must differ");
+}
+
+#[test]
+fn ragek_beats_rtopk_on_noniid_split() {
+    // the paper's headline claim (Fig. 3), at smoke scale with a fixed
+    // budget: rAge-k's clustered coordination should reach at least
+    // rTop-k's accuracy (ties allowed at this tiny scale)
+    let mut accs = Vec::new();
+    for strategy in [StrategyKind::RageK, StrategyKind::RTopK] {
+        let mut cfg = smoke(strategy, 30);
+        cfg.eval_every = 30;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        accs.push(t.run().unwrap().final_accuracy);
+    }
+    assert!(
+        accs[0] >= accs[1] - 0.05,
+        "rAge-k {:.3} should not trail rTop-k {:.3} materially",
+        accs[0],
+        accs[1]
+    );
+}
+
+#[test]
+fn sgd_server_opt_works() {
+    let mut cfg = smoke(StrategyKind::RageK, 6);
+    cfg.server_opt = "sgd".into();
+    cfg.lr_server = 0.05;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    assert!(report.history.rounds.iter().all(|r| r.train_loss.is_finite()));
+}
+
+#[test]
+fn dirichlet_and_iid_partitions_train() {
+    use ragek::data::partition::Scheme;
+    for scheme in [Scheme::Iid, Scheme::Dirichlet { alpha: 0.5 }] {
+        let mut cfg = smoke(StrategyKind::RageK, 4);
+        cfg.partition = scheme;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.history.rounds.len(), 4);
+        assert!(report.truth_labels.is_none());
+    }
+}

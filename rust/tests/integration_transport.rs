@@ -1,0 +1,117 @@
+//! TCP transport integration: a miniature PS <-> clients exchange over
+//! real sockets running one full rAge-k protocol round with the actual
+//! frame encoding.
+
+use ragek::fl::transport::{recv, send, Msg};
+use ragek::sparse::SparseVec;
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+
+#[test]
+fn one_protocol_round_over_tcp() {
+    let n_clients = 3usize;
+    let d = 64usize;
+    let k = 2usize;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // ---- PS thread
+    let ps = thread::spawn(move || -> Vec<SparseVec> {
+        let mut streams: Vec<TcpStream> = Vec::new();
+        for _ in 0..n_clients {
+            let (mut s, _) = listener.accept().unwrap();
+            match recv(&mut s).unwrap() {
+                Msg::Join { client_id } => assert!((client_id as usize) < n_clients),
+                other => panic!("expected Join, got {other:?}"),
+            }
+            streams.push(s);
+        }
+        // broadcast model
+        let params = vec![0.5f32; d];
+        for s in streams.iter_mut() {
+            send(s, &Msg::Model { round: 1, params: params.clone() }).unwrap();
+        }
+        // collect reports, answer with requests (oldest-k := first k here)
+        let mut updates = Vec::new();
+        for s in streams.iter_mut() {
+            let report = match recv(s).unwrap() {
+                Msg::Report { report, round: 1, .. } => report,
+                other => panic!("expected Report, got {other:?}"),
+            };
+            let indices: Vec<u32> = report.idx[..k].to_vec();
+            send(s, &Msg::Request { round: 1, indices }).unwrap();
+            match recv(s).unwrap() {
+                Msg::Update { update, round: 1, .. } => updates.push(update),
+                other => panic!("expected Update, got {other:?}"),
+            }
+        }
+        for s in streams.iter_mut() {
+            send(s, &Msg::Shutdown).unwrap();
+        }
+        updates
+    });
+
+    // ---- client threads
+    let mut handles = Vec::new();
+    for id in 0..n_clients {
+        handles.push(thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            send(&mut s, &Msg::Join { client_id: id as u32 }).unwrap();
+            let params = match recv(&mut s).unwrap() {
+                Msg::Model { params, round: 1 } => params,
+                other => panic!("expected Model, got {other:?}"),
+            };
+            assert_eq!(params.len(), d);
+            // fake a gradient report: indices 10*id..
+            let idx: Vec<u32> = (0..4u32).map(|j| (10 * id as u32) + j).collect();
+            let val: Vec<f32> = idx.iter().map(|&j| j as f32 * 0.1).collect();
+            let report = SparseVec::new(idx, val);
+            send(
+                &mut s,
+                &Msg::Report { client_id: id as u32, round: 1, report: report.clone(), mean_loss: 1.0 },
+            )
+            .unwrap();
+            let requested = match recv(&mut s).unwrap() {
+                Msg::Request { indices, round: 1 } => indices,
+                other => panic!("expected Request, got {other:?}"),
+            };
+            // answer with values from the report
+            let update = ragek::fl::client::Client::answer_request(&report, &requested);
+            send(&mut s, &Msg::Update { client_id: id as u32, round: 1, update }).unwrap();
+            match recv(&mut s).unwrap() {
+                Msg::Shutdown => {}
+                other => panic!("expected Shutdown, got {other:?}"),
+            }
+        }));
+    }
+
+    let updates = ps.join().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // PS got one k-sparse update per client with the client's own indices
+    assert_eq!(updates.len(), n_clients);
+    let mut firsts: Vec<u32> = updates.iter().map(|u| u.idx[0]).collect();
+    firsts.sort_unstable();
+    assert_eq!(firsts, vec![0, 10, 20]);
+    assert!(updates.iter().all(|u| u.len() == 2));
+}
+
+#[test]
+fn oversized_frame_rejected() {
+    // a frame claiming a 1 GiB payload must be rejected before allocation
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let t = thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        use std::io::Write;
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&ragek::fl::transport::MAGIC.to_le_bytes());
+        frame.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        frame.push(1);
+        s.write_all(&frame).unwrap();
+    });
+    let mut s = TcpStream::connect(addr).unwrap();
+    assert!(recv(&mut s).is_err());
+    t.join().unwrap();
+}

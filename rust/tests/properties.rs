@@ -1,0 +1,268 @@
+//! Cross-module property tests (via the in-repo `testing::prop_check`
+//! substrate — proptest is unavailable offline): coordinator invariants
+//! the paper's protocol depends on.
+
+use ragek::age::AgeVector;
+use ragek::coordinator::aggregator::Aggregate;
+use ragek::coordinator::selection::{select_disjoint, select_oldest_k};
+use ragek::sparse::{topk_abs_sparse, SparseVec};
+use ragek::testing::{prop_check, Gen};
+
+fn random_age(g: &mut Gen, d: usize) -> AgeVector {
+    let mut age = AgeVector::new(d);
+    let rounds = g.usize_in(0, 25);
+    for _ in 0..rounds {
+        let k = g.usize_in(1, (d / 4).max(1));
+        let sel = g.vec_u32_distinct(d, k);
+        age.update(&sel);
+    }
+    age
+}
+
+#[test]
+fn selection_returns_k_distinct_report_members_maximizing_age() {
+    prop_check("selection-invariants", 200, |g| {
+        let d = g.usize_in(20, 500);
+        let r = g.usize_in(2, d.min(40));
+        let k = g.usize_in(1, r);
+        let age = random_age(g, d);
+        let report = g.vec_u32_distinct(d, r);
+        let sel = select_oldest_k(&age, &report, k);
+        if sel.len() != k {
+            return Err(format!("len {} != k {k}", sel.len()));
+        }
+        let set: std::collections::HashSet<_> = sel.iter().collect();
+        if set.len() != k {
+            return Err("duplicates in selection".into());
+        }
+        if !sel.iter().all(|j| report.contains(j)) {
+            return Err("selected index outside report".into());
+        }
+        let min_sel = sel.iter().map(|&j| age.get(j as usize)).min().unwrap();
+        for &j in &report {
+            if !set.contains(&j) && age.get(j as usize) > min_sel {
+                return Err(format!("unselected {j} older than selected minimum"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn disjoint_selection_never_overlaps_until_exhaustion() {
+    prop_check("disjoint-selection", 200, |g| {
+        let d = g.usize_in(50, 400);
+        let r = g.usize_in(4, 30.min(d));
+        let k = g.usize_in(1, r / 2);
+        let n_members = g.usize_in(2, 4);
+        let age = random_age(g, d);
+        let reports: Vec<Vec<u32>> =
+            (0..n_members).map(|_| g.vec_u32_distinct(d, r)).collect();
+        let refs: Vec<&[u32]> = reports.iter().map(|r| r.as_slice()).collect();
+        let sels = select_disjoint(&age, &refs, k);
+
+        // every member uploads exactly k distinct in-report indices
+        for (sel, report) in sels.iter().zip(&reports) {
+            if sel.len() != k {
+                return Err("wrong k".into());
+            }
+            if !sel.iter().all(|j| report.contains(j)) {
+                return Err("outside report".into());
+            }
+        }
+        // union covers min(sum k, union of reports) — i.e. overlap only
+        // when a report is exhausted
+        let union_reports: std::collections::HashSet<u32> =
+            reports.iter().flatten().cloned().collect();
+        let union_sel: std::collections::HashSet<u32> =
+            sels.iter().flatten().cloned().collect();
+        let expected = (n_members * k).min(union_reports.len());
+        // the greedy can fall short only when a *specific* report ran dry;
+        // verify no overlap happened while the report still had unassigned
+        // indices available
+        let mut taken: std::collections::HashSet<u32> = Default::default();
+        for (sel, report) in sels.iter().zip(&reports) {
+            for &j in sel {
+                if taken.contains(&j) {
+                    // overlap is only legal if every report index was taken
+                    let free = report.iter().any(|x| !taken.contains(x));
+                    if free {
+                        return Err(format!("overlapped on {j} while report had free indices"));
+                    }
+                }
+            }
+            for &j in sel {
+                taken.insert(j);
+            }
+        }
+        let _ = (union_sel, expected);
+        Ok(())
+    });
+}
+
+#[test]
+fn eq2_age_update_is_a_partition() {
+    prop_check("eq2-partition", 200, |g| {
+        let d = g.usize_in(1, 2000);
+        let mut age = random_age(g, d);
+        let before: Vec<u32> = age.as_slice().to_vec();
+        let k = g.usize_in(1, d);
+        let sel = g.vec_u32_distinct(d, k);
+        age.update(&sel);
+        let sel_set: std::collections::HashSet<u32> = sel.into_iter().collect();
+        for j in 0..d {
+            let want = if sel_set.contains(&(j as u32)) { 0 } else { before[j] + 1 };
+            if age.get(j) != want {
+                return Err(format!("age[{j}] = {} want {want}", age.get(j)));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn aggregation_is_linear_and_order_invariant() {
+    prop_check("aggregation-linearity", 100, |g| {
+        let d = g.usize_in(10, 300);
+        let n = g.usize_in(1, 6);
+        let parts: Vec<SparseVec> = (0..n)
+            .map(|_| {
+                let k = g.usize_in(1, d.min(20));
+                let idx = g.vec_u32_distinct(d, k);
+                let val = g.vec_f32(k, 2.0);
+                SparseVec::new(idx, val)
+            })
+            .collect();
+
+        let mut agg = Aggregate::new();
+        for p in &parts {
+            agg.push(p.clone());
+        }
+        let dense = agg.to_dense(d, 1.0);
+
+        // order-invariance
+        let mut agg_rev = Aggregate::new();
+        for p in parts.iter().rev() {
+            agg_rev.push(p.clone());
+        }
+        let dense_rev = agg_rev.to_dense(d, 1.0);
+        for (a, b) in dense.iter().zip(&dense_rev) {
+            if (a - b).abs() > 1e-4 {
+                return Err("order dependence".into());
+            }
+        }
+
+        // linearity: agg == sum of individual denses
+        let mut manual = vec![0.0f32; d];
+        for p in &parts {
+            for (m, v) in manual.iter_mut().zip(p.to_dense(d)) {
+                *m += v;
+            }
+        }
+        for (a, b) in dense.iter().zip(&manual) {
+            if (a - b).abs() > 1e-4 {
+                return Err("nonlinear aggregation".into());
+            }
+        }
+
+        // padded-pairs path scatters to the same dense vector
+        let ktot = agg.total_entries() + g.usize_in(0, 5);
+        let (idx, val) = agg.to_padded_pairs(ktot, 1.0);
+        let mut scattered = vec![0.0f32; d];
+        for (&i, &v) in idx.iter().zip(&val) {
+            scattered[i as usize] += v;
+        }
+        for (a, b) in dense.iter().zip(&scattered) {
+            if (a - b).abs() > 1e-4 {
+                return Err("padded pairs mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn topk_abs_is_exact_against_sort() {
+    prop_check("topk-exactness", 200, |g| {
+        let d = g.usize_in(1, 800);
+        let k = g.usize_in(0, d);
+        // quantized values force ties
+        let grad: Vec<f32> = g.vec_f32(d, 2.0).iter().map(|v| v.round()).collect();
+        let got = topk_abs_sparse(&grad, k);
+        let mut order: Vec<u32> = (0..d as u32).collect();
+        order.sort_by(|&a, &b| {
+            grad[b as usize]
+                .abs()
+                .partial_cmp(&grad[a as usize].abs())
+                .unwrap()
+                .then_with(|| a.cmp(&b))
+        });
+        if got.idx != order[..k] {
+            return Err(format!("topk mismatch: {:?} vs {:?}", got.idx, &order[..k]));
+        }
+        for (&i, &v) in got.idx.iter().zip(&got.val) {
+            if grad[i as usize] != v {
+                return Err("value not the signed gradient entry".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partition_covers_every_sample_exactly_once() {
+    use ragek::data::partition::{partition, Scheme};
+    use ragek::data::synth::synthetic_mnist;
+    prop_check("partition-coverage", 12, |g| {
+        let n = g.usize_in(50, 400);
+        let n_clients = g.usize_in(1, 5) * 2;
+        let ds = synthetic_mnist(g.case as u64, n);
+        for scheme in [
+            Scheme::PaperPairs,
+            Scheme::Iid,
+            Scheme::Dirichlet { alpha: 0.4 },
+        ] {
+            let parts = partition(&ds, n_clients, &scheme, g.case as u64);
+            let mut seen = vec![0usize; n];
+            for p in &parts {
+                for &s in p {
+                    seen[s] += 1;
+                }
+            }
+            if seen.iter().any(|&c| c != 1) {
+                return Err(format!("{scheme:?}: sample not covered exactly once"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn frequency_similarity_is_scale_normalized() {
+    use ragek::age::FrequencyVector;
+    use ragek::clustering::connectivity_matrix;
+    prop_check("similarity-normalization", 100, |g| {
+        let d = 200;
+        let k = g.usize_in(1, 20);
+        let rounds = g.usize_in(1, 10);
+        let mut f1 = FrequencyVector::new();
+        let idxs: Vec<Vec<u32>> =
+            (0..rounds).map(|_| g.vec_u32_distinct(d, k)).collect();
+        for idx in &idxs {
+            f1.record(idx);
+        }
+        // f2 records the same history twice as often (scaled client)
+        let mut f2 = FrequencyVector::new();
+        for _ in 0..2 {
+            for idx in &idxs {
+                f2.record(idx);
+            }
+        }
+        let m = connectivity_matrix(&[f1, f2]);
+        // d[1][2] = <f1, 2*f1>/<f1,f1> = 2; d[2][1] = 0.5
+        if (m[0][1] - 2.0).abs() > 1e-9 || (m[1][0] - 0.5).abs() > 1e-9 {
+            return Err(format!("normalization off: {} / {}", m[0][1], m[1][0]));
+        }
+        Ok(())
+    });
+}
