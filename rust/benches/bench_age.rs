@@ -1,8 +1,9 @@
-//! eq. (2) age-sweep cost at the paper's two model sizes, plus merge and
-//! frequency bookkeeping — the d-dimensional PS state the paper adds
-//! over plain rTop-k.
+//! eq. (2) age bookkeeping cost at the paper's two model sizes: the lazy
+//! O(k) epoch-offset update vs the dense O(d) sweep it replaced (the
+//! per-cluster, per-round PS cost the paper adds over plain rTop-k),
+//! plus merge, gather and frequency bookkeeping.
 
-use ragek::age::{AgeVector, FrequencyVector};
+use ragek::age::{AgeVector, DenseAgeVector, FrequencyVector};
 use ragek::bench::Bench;
 
 fn main() {
@@ -13,20 +14,27 @@ fn main() {
         ("cifar d=2.5M   k=100", 2_515_338, 100),
     ] {
         let sel: Vec<u32> = (0..k as u32).map(|i| i * 31 % d as u32).collect();
-        let mut age = AgeVector::new(d);
-        b.run_units(&format!("age.update (eq.2)   {tag}"), Some(d as f64), || {
-            age.update(&sel);
+
+        // the hot path: one eq. (2) update per cluster per round
+        let mut lazy = AgeVector::new(d);
+        b.run_units(&format!("age.update lazy  O(k) {tag}"), Some(k as f64), || {
+            lazy.update(&sel);
+        });
+        let mut dense = DenseAgeVector::new(d);
+        b.run_units(&format!("age.update dense O(d) {tag}"), Some(d as f64), || {
+            dense.update(&sel);
         });
 
-        let other = age.clone();
-        let mut target = age.clone();
-        b.run_units(&format!("age.merge_min       {tag}"), Some(d as f64), || {
+        // merge only happens on (M-periodic) cluster formation
+        let other = lazy.clone();
+        let mut target = lazy.clone();
+        b.run_units(&format!("age.merge_min        {tag}"), Some(d as f64), || {
             target.merge_min(&other);
         });
 
-        b.run_units(&format!("age.gather r=2500   {tag}"), Some(2500.0), || {
+        b.run_units(&format!("age.gather r=2500    {tag}"), Some(2500.0), || {
             let idx: Vec<u32> = (0..2500u32).map(|i| i * 97 % d as u32).collect();
-            std::hint::black_box(age.gather(&idx));
+            std::hint::black_box(lazy.gather(&idx));
         });
     }
 

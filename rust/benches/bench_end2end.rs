@@ -1,7 +1,8 @@
 //! End-to-end global-round latency: the paper's full per-round protocol
 //! (local training x N clients -> reports -> selection -> uploads ->
 //! aggregation -> server apply -> age/frequency bookkeeping) with the
-//! phase breakdown the perf pass optimizes against (EXPERIMENTS.md §Perf).
+//! phase breakdown the perf pass optimizes against (EXPERIMENTS.md §Perf),
+//! plus the parallel-vs-serial client pool comparison at n_clients = 8.
 
 use ragek::bench::Bench;
 use ragek::config::ExperimentConfig;
@@ -27,8 +28,27 @@ fn main() -> anyhow::Result<()> {
             t.run_round().unwrap();
         });
         if strategy == StrategyKind::RageK {
-            println!("\nphase breakdown (rAge-k rounds):\n{}", t.profile.report());
+            println!("\nphase breakdown (rAge-k rounds):\n{}", t.profile().report());
         }
+    }
+
+    // the parallel in-process pool vs the serial simulator at 8 clients:
+    // client rounds are embarrassingly parallel given the broadcast, so
+    // wall-clock should approach serial / min(lanes, 8)
+    for (tag, parallel) in [("serial (1 lane)   ", 1usize), ("parallel (auto)   ", 0usize)] {
+        let mut cfg = ExperimentConfig::mnist_scaled();
+        cfg.strategy = StrategyKind::RageK;
+        cfg.n_clients = 8;
+        cfg.parallel = parallel;
+        cfg.rounds = 1;
+        cfg.train_n = 2000;
+        cfg.test_n = 256;
+        cfg.eval_every = 0;
+        let mut t = Trainer::from_config(&cfg)?;
+        let lanes = t.pool().n_lanes();
+        b.run(&format!("global round n=8 {tag} lanes={lanes}"), || {
+            t.run_round().unwrap();
+        });
     }
 
     // PS-only cost at CIFAR scale (no compute backend in the loop):
@@ -65,7 +85,7 @@ fn main() -> anyhow::Result<()> {
             }
             let update = agg.to_dense(d, 1.0 / n as f32);
             std::hint::black_box(&update);
-            // eq. (2)
+            // eq. (2) — now O(k) lazy instead of the d-dimensional sweep
             let mut union: Vec<u32> = requested.iter().flatten().cloned().collect();
             union.sort_unstable();
             union.dedup();

@@ -1,12 +1,21 @@
 //! PJRT dispatch cost: per-call latency of each MNIST artifact (the
 //! request-path budget of the XLA backend) + the local_round
 //! amortization that motivates the lax.scan export. Skips without
-//! artifacts.
+//! artifacts; needs the `xla-runtime` cargo feature (PJRT bindings).
 
+#[cfg(feature = "xla-runtime")]
 use ragek::bench::Bench;
+#[cfg(feature = "xla-runtime")]
 use ragek::runtime::{lit_f32, lit_i32, lit_scalar, Runtime};
+#[cfg(feature = "xla-runtime")]
 use ragek::util::rng::Rng;
 
+#[cfg(not(feature = "xla-runtime"))]
+fn main() {
+    println!("bench_runtime: built without the `xla-runtime` feature; skipping");
+}
+
+#[cfg(feature = "xla-runtime")]
 fn main() -> anyhow::Result<()> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("bench_runtime: artifacts/ not built (run `make artifacts`); skipping");

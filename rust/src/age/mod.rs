@@ -6,19 +6,142 @@
 //! singleton cluster); on cluster formation member vectors are merged and
 //! on reassignment a client adopts its new cluster's vector (DESIGN.md §5).
 //!
+//! The representation is **lazy**: instead of materializing the d ages and
+//! sweeping all of them every round (O(d) per cluster per round — 2.5M
+//! adds at CIFAR scale), the vector stores the epoch `round` and, per
+//! index, the round of its last reset, so
+//!
+//! ```text
+//! age[j] = round - last_reset[j]
+//! ```
+//!
+//! and the eq. (2) update is one counter bump plus k writes — O(k). The
+//! rare O(d) operations (merge on cluster formation, reset on splits)
+//! rebase both operands onto a common epoch, so the partition invariant
+//! "every age is 0 (just selected) or old+1" holds bit-for-bit against the
+//! dense sweep; [`DenseAgeVector`] keeps that sweep around as the oracle
+//! (`rust/tests/properties.rs` pins lazy ≡ dense, `benches/bench_age.rs`
+//! measures the gap at d = 2.5M).
+//!
 //! [`FrequencyVector`] counts how often each index was requested from a
 //! client (the f^t[i] of eq. (3)); its pairwise dot products drive the
 //! DBSCAN clustering.
 
-/// Per-cluster age vector (eq. 2).
-#[derive(Debug, Clone, PartialEq)]
+/// Per-cluster age vector (eq. 2), lazy epoch-offset representation.
+#[derive(Debug, Clone)]
 pub struct AgeVector {
-    ages: Vec<u32>,
+    /// round at which index j last reset to age 0 (invariant: <= round)
+    last_reset: Vec<u32>,
+    /// rounds elapsed in this vector's epoch
+    round: u32,
+}
+
+/// Equality is on the *ages*, not the internal epoch: two vectors that
+/// went through different merge/rebase histories but agree on every
+/// `age[j]` compare equal.
+impl PartialEq for AgeVector {
+    fn eq(&self, other: &Self) -> bool {
+        self.d() == other.d() && (0..self.d()).all(|j| self.get(j) == other.get(j))
+    }
 }
 
 impl AgeVector {
     pub fn new(d: usize) -> Self {
-        AgeVector { ages: vec![0; d] }
+        AgeVector { last_reset: vec![0; d], round: 0 }
+    }
+
+    pub fn d(&self) -> usize {
+        self.last_reset.len()
+    }
+
+    /// Rounds elapsed in this vector's epoch (diagnostics).
+    pub fn round(&self) -> u32 {
+        self.round
+    }
+
+    pub fn get(&self, j: usize) -> u32 {
+        self.round - self.last_reset[j]
+    }
+
+    /// Dense materialization (oracle comparisons, artifact interop).
+    pub fn to_vec(&self) -> Vec<u32> {
+        self.last_reset.iter().map(|&lr| self.round - lr).collect()
+    }
+
+    /// eq. (2): every index ages by one, except the just-requested
+    /// `selected` indices which reset to 0. Lazily this is one epoch bump
+    /// plus |selected| writes — O(k), not the d-dimensional sweep (see
+    /// `benches/bench_age.rs` for the gap at d = 2.5M).
+    pub fn update(&mut self, selected: &[u32]) {
+        self.round += 1;
+        for &j in selected {
+            self.last_reset[j as usize] = self.round;
+        }
+    }
+
+    /// Merge another cluster's vector into this one. Elementwise **min**:
+    /// age = time since *any* member updated the index, which is the
+    /// coordination-relevant notion (an index one member just refreshed
+    /// is not stale for the cluster). `MergeRule` ablations live in
+    /// `clustering::manager`.
+    pub fn merge_min(&mut self, other: &AgeVector) {
+        self.merge_with(other, u32::min);
+    }
+
+    /// Elementwise max merge (pessimistic alternative, for the ablation).
+    pub fn merge_max(&mut self, other: &AgeVector) {
+        self.merge_with(other, u32::max);
+    }
+
+    /// Merges happen only on (M-periodic) cluster formation, so O(d) is
+    /// fine here; both operands are rebased onto a common epoch that can
+    /// represent every merged age.
+    fn merge_with(&mut self, other: &AgeVector, pick: fn(u32, u32) -> u32) {
+        assert_eq!(self.d(), other.d());
+        let my_round = self.round;
+        let round = my_round.max(other.round);
+        for (j, lr) in self.last_reset.iter_mut().enumerate() {
+            let age = pick(my_round - *lr, other.round - other.last_reset[j]);
+            *lr = round - age;
+        }
+        self.round = round;
+    }
+
+    /// All ages back to 0 (cluster split carry-over rule).
+    pub fn reset(&mut self) {
+        self.last_reset.fill(self.round);
+    }
+
+    /// Ages gathered at `idx` as f32 scores (selection input).
+    pub fn gather(&self, idx: &[u32]) -> Vec<f32> {
+        idx.iter().map(|&j| (self.round - self.last_reset[j as usize]) as f32).collect()
+    }
+
+    pub fn max_age(&self) -> u32 {
+        self.last_reset.iter().map(|&lr| self.round - lr).max().unwrap_or(0)
+    }
+
+    pub fn mean_age(&self) -> f64 {
+        if self.last_reset.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self.last_reset.iter().map(|&lr| (self.round - lr) as f64).sum();
+        sum / self.last_reset.len() as f64
+    }
+}
+
+/// The dense eq. (2) sweep the lazy representation replaced: +1 over all
+/// d entries, then reset of the selected indices. Kept as the numerics
+/// oracle for the lazy/dense equivalence property test and as the O(d)
+/// baseline in `benches/bench_age.rs`. Not used on any hot path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseAgeVector {
+    ages: Vec<u32>,
+}
+
+impl DenseAgeVector {
+    pub fn new(d: usize) -> Self {
+        DenseAgeVector { ages: vec![0; d] }
     }
 
     pub fn d(&self) -> usize {
@@ -33,10 +156,6 @@ impl AgeVector {
         &self.ages
     }
 
-    /// eq. (2): every index ages by one, except the just-requested
-    /// `selected` indices which reset to 0. This is the d-dimensional
-    /// sweep the PS performs per cluster per global round (see
-    /// `benches/bench_age.rs` for its cost at d = 2.5M).
     pub fn update(&mut self, selected: &[u32]) {
         for a in self.ages.iter_mut() {
             *a += 1;
@@ -46,20 +165,14 @@ impl AgeVector {
         }
     }
 
-    /// Merge another cluster's vector into this one. Elementwise **min**:
-    /// age = time since *any* member updated the index, which is the
-    /// coordination-relevant notion (an index one member just refreshed
-    /// is not stale for the cluster). `MergeRule` ablations live in
-    /// `clustering::manager`.
-    pub fn merge_min(&mut self, other: &AgeVector) {
+    pub fn merge_min(&mut self, other: &DenseAgeVector) {
         assert_eq!(self.d(), other.d());
         for (a, &b) in self.ages.iter_mut().zip(&other.ages) {
             *a = (*a).min(b);
         }
     }
 
-    /// Elementwise max merge (pessimistic alternative, for the ablation).
-    pub fn merge_max(&mut self, other: &AgeVector) {
+    pub fn merge_max(&mut self, other: &DenseAgeVector) {
         assert_eq!(self.d(), other.d());
         for (a, &b) in self.ages.iter_mut().zip(&other.ages) {
             *a = (*a).max(b);
@@ -70,20 +183,8 @@ impl AgeVector {
         self.ages.fill(0);
     }
 
-    /// Ages gathered at `idx` as f32 scores (selection input).
-    pub fn gather(&self, idx: &[u32]) -> Vec<f32> {
-        idx.iter().map(|&j| self.ages[j as usize] as f32).collect()
-    }
-
     pub fn max_age(&self) -> u32 {
-        self.ages.iter().cloned().max().unwrap_or(0)
-    }
-
-    pub fn mean_age(&self) -> f64 {
-        if self.ages.is_empty() {
-            return 0.0;
-        }
-        self.ages.iter().map(|&a| a as f64).sum::<f64>() / self.ages.len() as f64
+        self.ages.iter().copied().max().unwrap_or(0)
     }
 }
 
@@ -177,13 +278,60 @@ mod tests {
         b.update(&[3]);
         b.update(&[3]); // b = [2,2,2,0]
         a.merge_min(&b);
-        assert_eq!(a.as_slice(), &[0, 1, 1, 0]);
+        assert_eq!(a.to_vec(), vec![0, 1, 1, 0]);
         let mut c = AgeVector::new(4);
         c.update(&[1]);
         let mut d = AgeVector::new(4);
         d.update(&[2]);
         d.merge_max(&c);
-        assert_eq!(d.as_slice(), &[1, 1, 1, 1]);
+        assert_eq!(d.to_vec(), vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn merge_rebases_across_epochs() {
+        // operands with very different epochs must still merge exactly
+        let mut a = AgeVector::new(3);
+        for _ in 0..20 {
+            a.update(&[0]); // a = [0, 20, 20]
+        }
+        let mut b = AgeVector::new(3);
+        b.update(&[1]); // b = [1, 0, 1]
+        let mut min = a.clone();
+        min.merge_min(&b);
+        assert_eq!(min.to_vec(), vec![0, 0, 1]);
+        let mut max = b; // merge into the *younger* epoch: needs rebasing
+        max.merge_max(&a);
+        assert_eq!(max.to_vec(), vec![1, 20, 20]);
+        // merged vectors keep obeying eq. (2)
+        max.update(&[2]);
+        assert_eq!(max.to_vec(), vec![2, 21, 0]);
+    }
+
+    #[test]
+    fn equality_ignores_epoch() {
+        let mut a = AgeVector::new(3);
+        a.update(&[0, 1, 2]);
+        a.update(&[1]); // ages [1, 0, 1]
+        let mut b = AgeVector::new(3);
+        b.update(&[0, 2]);
+        b.update(&[1]); // ages [1, 0, 1] via a different history
+        assert_eq!(a, b);
+        b.update(&[2]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn reset_zeroes_all_ages() {
+        let mut a = AgeVector::new(5);
+        a.update(&[1]);
+        a.update(&[2]);
+        assert_eq!(a.max_age(), 2);
+        a.reset();
+        assert_eq!(a.max_age(), 0);
+        assert_eq!(a.to_vec(), vec![0; 5]);
+        // and eq. (2) continues from the zeroed state
+        a.update(&[4]);
+        assert_eq!(a.to_vec(), vec![1, 1, 1, 1, 0]);
     }
 
     #[test]
@@ -193,6 +341,7 @@ mod tests {
         a.update(&[4]);
         assert_eq!(a.gather(&[0, 1, 4]), vec![2.0, 1.0, 0.0]);
         assert_eq!(a.max_age(), 2);
+        assert!((a.mean_age() - (2.0 + 1.0 + 2.0 + 2.0 + 0.0) / 5.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,11 +1,17 @@
 //! Compute backends: where client training actually runs.
 //!
 //! * [`RustBackend`] — the pure-Rust MLP (`nn::mlp`): artifact-free,
-//!   fast for the simulator, and the numerics oracle.
-//! * [`XlaBackend`] — executes the AOT HLO artifacts via PJRT
+//!   fast for the simulator, and the numerics oracle. `Send`, stateless
+//!   between calls, and cheap to instantiate — so the in-process pool can
+//!   hold one per worker thread ([`BackendLanes::Parallel`]) and train
+//!   clients concurrently.
+//! * `XlaBackend` — executes the AOT HLO artifacts via PJRT
 //!   ([`crate::runtime`]); the production path, required for the CNN.
+//!   Gated behind the `xla-runtime` cargo feature (the PJRT bindings are
+//!   an optional dependency); a process holds exactly one runtime, so the
+//!   pool drives it serially ([`BackendLanes::Serial`]).
 //!
-//! Both expose the same [`Backend`] trait so the FL trainer, examples and
+//! Both expose the same [`Backend`] trait so the FL engine, examples and
 //! benches are backend-agnostic. Parameter layouts, Adam constants and
 //! the top-r tie-breaking contract are identical across the two (pinned
 //! by `rust/tests/integration_runtime.rs`).
@@ -14,7 +20,6 @@ use crate::config::{BackendKind, ExperimentConfig};
 use crate::coordinator::aggregator::Aggregate;
 use crate::nn::adam::AdamState;
 use crate::nn::mlp;
-use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, to_i32, to_scalar, Runtime};
 use crate::sparse::{topk_abs_sparse, SparseVec};
 use anyhow::{bail, Result};
 
@@ -95,19 +100,80 @@ pub trait Backend {
     ) -> Result<()>;
 }
 
+/// A backend that may cross a thread boundary (one per parallel pool lane).
+pub type SendBackend = Box<dyn Backend + Send>;
+
+/// The client-compute lanes of the in-process pool: either one shared
+/// backend driven serially, or one `Send` backend per lane so clients
+/// train concurrently on scoped threads.
+pub enum BackendLanes {
+    /// A single backend multiplexed over all clients in client order
+    /// (XLA: exactly one PJRT runtime per process).
+    Serial(Box<dyn Backend>),
+    /// One independent backend per worker thread (pure Rust: stateless,
+    /// so per-lane instances are numerically identical to one shared
+    /// instance).
+    Parallel(Vec<SendBackend>),
+}
+
+impl BackendLanes {
+    /// Number of clients that can train concurrently.
+    pub fn n_lanes(&self) -> usize {
+        match self {
+            BackendLanes::Serial(_) => 1,
+            BackendLanes::Parallel(v) => v.len(),
+        }
+    }
+
+    /// The lane used for PS-side work (server apply, eval, init).
+    pub fn primary(&mut self) -> &mut dyn Backend {
+        match self {
+            BackendLanes::Serial(b) => b.as_mut(),
+            BackendLanes::Parallel(v) => v[0].as_mut(),
+        }
+    }
+}
+
 /// Instantiate the backend an experiment config asks for.
 pub fn make_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
     match cfg.backend {
         BackendKind::Rust => Ok(Box::new(RustBackend::new(cfg.r, cfg.lr_client, cfg.seed))),
-        BackendKind::Xla => {
-            let mut be = XlaBackend::new(&cfg.artifacts_dir, &cfg.model, cfg.r)?;
-            // Delta payload recomputes the report from the error-feedback
-            // memory on the Rust side; skip the artifact's d log d top-r
-            // sort (EXPERIMENTS.md §Perf)
-            be.fast_round = cfg.payload == crate::config::Payload::Delta;
-            Ok(Box::new(be))
-        }
+        BackendKind::Xla => make_xla_backend(cfg),
     }
+}
+
+/// Instantiate the client-compute lanes for the in-process pool. `lanes`
+/// is the requested concurrency; backends that cannot be replicated
+/// (XLA) fall back to a single serial lane.
+pub fn make_backend_lanes(cfg: &ExperimentConfig, lanes: usize) -> Result<BackendLanes> {
+    match cfg.backend {
+        BackendKind::Rust => Ok(BackendLanes::Parallel(
+            (0..lanes.max(1))
+                .map(|_| {
+                    Box::new(RustBackend::new(cfg.r, cfg.lr_client, cfg.seed)) as SendBackend
+                })
+                .collect(),
+        )),
+        BackendKind::Xla => Ok(BackendLanes::Serial(make_backend(cfg)?)),
+    }
+}
+
+#[cfg(feature = "xla-runtime")]
+fn make_xla_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
+    let mut be = XlaBackend::new(&cfg.artifacts_dir, &cfg.model, cfg.r)?;
+    // Delta payload recomputes the report from the error-feedback
+    // memory on the Rust side; skip the artifact's d log d top-r
+    // sort (EXPERIMENTS.md §Perf)
+    be.fast_round = cfg.payload == crate::config::Payload::Delta;
+    Ok(Box::new(be))
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+fn make_xla_backend(_cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
+    bail!(
+        "the 'xla' backend executes AOT PJRT artifacts and needs the \
+         `xla-runtime` cargo feature: rebuild with `--features xla-runtime`"
+    )
 }
 
 // ===================================================================== rust
@@ -188,198 +254,214 @@ impl Backend for RustBackend {
 
 // ====================================================================== xla
 
-/// PJRT-backed backend executing the AOT artifacts.
-pub struct XlaBackend {
-    rt: Runtime,
-    r: usize,
-    /// use the report-free `local_round_fast` artifact (Delta payload)
-    pub fast_round: bool,
-}
+#[cfg(feature = "xla-runtime")]
+pub use xla_backend::XlaBackend;
 
-impl std::fmt::Debug for XlaBackend {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("XlaBackend").field("model", &self.rt.model().name).finish()
+#[cfg(feature = "xla-runtime")]
+mod xla_backend {
+    use super::{Aggregate, Backend, ClientState, GlobalState, LocalRoundOut};
+    use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, to_i32, to_scalar, Runtime};
+    use crate::sparse::{topk_abs_sparse, SparseVec};
+    use anyhow::{bail, Result};
+
+    /// PJRT-backed backend executing the AOT artifacts.
+    pub struct XlaBackend {
+        rt: Runtime,
+        r: usize,
+        /// use the report-free `local_round_fast` artifact (Delta payload)
+        pub fast_round: bool,
     }
-}
 
-impl XlaBackend {
-    pub fn new(artifacts_dir: &str, model: &str, r: usize) -> Result<Self> {
-        let rt = Runtime::load(artifacts_dir, model)?;
-        if r != rt.model().r {
-            bail!(
-                "config r = {r} but artifacts were compiled with r = {} — \
-                 re-run `make artifacts` with matching presets",
-                rt.model().r
-            );
+    impl std::fmt::Debug for XlaBackend {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("XlaBackend").field("model", &self.rt.model().name).finish()
         }
-        Ok(XlaBackend { rt, r, fast_round: false })
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.rt
-    }
-
-    /// The r this backend was compiled with (artifact-baked).
-    pub fn r(&self) -> usize {
-        self.r
-    }
-}
-
-impl Backend for XlaBackend {
-    fn d(&self) -> usize {
-        self.rt.model().d
-    }
-
-    fn init_params(&mut self) -> Result<Vec<f32>> {
-        self.rt.init_params()
-    }
-
-    fn local_round(
-        &mut self,
-        state: &mut ClientState,
-        xs: &[f32],
-        ys: &[i32],
-        h: usize,
-        b: usize,
-    ) -> Result<LocalRoundOut> {
-        let m = self.rt.model();
-        let (hs, idim, d) = (m.h_scan, m.input_dim, m.d);
-        if b != m.batch {
-            bail!("xla backend: batch {b} != compiled batch {}", m.batch);
+    impl XlaBackend {
+        pub fn new(artifacts_dir: &str, model: &str, r: usize) -> Result<Self> {
+            let rt = Runtime::load(artifacts_dir, model)?;
+            if r != rt.model().r {
+                bail!(
+                    "config r = {r} but artifacts were compiled with r = {} — \
+                     re-run `make artifacts` with matching presets",
+                    rt.model().r
+                );
+            }
+            Ok(XlaBackend { rt, r, fast_round: false })
         }
-        if h % hs != 0 {
-            bail!("xla backend: h = {h} must be a multiple of h_scan = {hs}");
+
+        pub fn runtime(&self) -> &Runtime {
+            &self.rt
         }
-        let chunks = h / hs;
-        let arts = &self.rt.model().artifacts;
-        let have_fast = arts.contains_key("local_round_fast");
-        let have_grad = arts.contains_key("local_round_grad");
-        let mut loss_acc = 0.0f32;
-        let mut report = SparseVec::default();
-        for c in 0..chunks {
-            // only the LAST chunk's top-r report is consumed (Algorithm 1
-            // sparsifies the final local gradient); earlier chunks — and
-            // all chunks under fast_round — skip it entirely. For the
-            // last chunk, prefer `local_round_grad` (dense gradient out +
-            // Rust-side heap top-r) over the in-graph argsort of
-            // `local_round`: ~200x cheaper on the pinned XLA CPU backend
-            // (EXPERIMENTS.md §Perf).
-            let last = c + 1 == chunks;
-            let artifact = if have_fast && (self.fast_round || !last) {
-                "local_round_fast"
-            } else if have_grad {
-                "local_round_grad"
-            } else {
-                "local_round"
-            };
-            let xs_c = &xs[c * hs * b * idim..(c + 1) * hs * b * idim];
-            let ys_c = &ys[c * hs * b..(c + 1) * hs * b];
+
+        /// The r this backend was compiled with (artifact-baked).
+        pub fn r(&self) -> usize {
+            self.r
+        }
+    }
+
+    impl Backend for XlaBackend {
+        fn d(&self) -> usize {
+            self.rt.model().d
+        }
+
+        fn init_params(&mut self) -> Result<Vec<f32>> {
+            self.rt.init_params()
+        }
+
+        fn local_round(
+            &mut self,
+            state: &mut ClientState,
+            xs: &[f32],
+            ys: &[i32],
+            h: usize,
+            b: usize,
+        ) -> Result<LocalRoundOut> {
+            let m = self.rt.model();
+            let (hs, idim, d) = (m.h_scan, m.input_dim, m.d);
+            if b != m.batch {
+                bail!("xla backend: batch {b} != compiled batch {}", m.batch);
+            }
+            if h % hs != 0 {
+                bail!("xla backend: h = {h} must be a multiple of h_scan = {hs}");
+            }
+            let chunks = h / hs;
+            let arts = &self.rt.model().artifacts;
+            let have_fast = arts.contains_key("local_round_fast");
+            let have_grad = arts.contains_key("local_round_grad");
+            let mut loss_acc = 0.0f32;
+            let mut report = SparseVec::default();
+            for c in 0..chunks {
+                // only the LAST chunk's top-r report is consumed (Algorithm 1
+                // sparsifies the final local gradient); earlier chunks — and
+                // all chunks under fast_round — skip it entirely. For the
+                // last chunk, prefer `local_round_grad` (dense gradient out +
+                // Rust-side heap top-r) over the in-graph argsort of
+                // `local_round`: ~200x cheaper on the pinned XLA CPU backend
+                // (EXPERIMENTS.md §Perf).
+                let last = c + 1 == chunks;
+                let artifact = if have_fast && (self.fast_round || !last) {
+                    "local_round_fast"
+                } else if have_grad {
+                    "local_round_grad"
+                } else {
+                    "local_round"
+                };
+                let xs_c = &xs[c * hs * b * idim..(c + 1) * hs * b * idim];
+                let ys_c = &ys[c * hs * b..(c + 1) * hs * b];
+                let outs = self.rt.call(
+                    artifact,
+                    &[
+                        lit_f32(&state.params, &[d as i64])?,
+                        lit_f32(&state.adam.m, &[d as i64])?,
+                        lit_f32(&state.adam.v, &[d as i64])?,
+                        lit_scalar(state.adam.t),
+                        lit_f32(xs_c, &[hs as i64, b as i64, idim as i64])?,
+                        lit_i32(ys_c, &[hs as i64, b as i64])?,
+                    ],
+                )?;
+                state.params = to_f32(&outs[0])?;
+                state.adam.m = to_f32(&outs[1])?;
+                state.adam.v = to_f32(&outs[2])?;
+                state.adam.t = to_scalar(&outs[3])?;
+                loss_acc += to_scalar(&outs[4])?;
+                if c + 1 == chunks && outs.len() == 6 {
+                    // local_round_grad: dense last gradient out, top-r here
+                    let grad = to_f32(&outs[5])?;
+                    report = topk_abs_sparse(&grad, self.r);
+                } else if c + 1 == chunks && outs.len() > 6 {
+                    // local_round: in-graph (signed g[idx], idx) report,
+                    // ordered by |g| desc — same contract as topk_abs_sparse
+                    let vals = to_f32(&outs[5])?;
+                    let idx: Vec<u32> =
+                        to_i32(&outs[6])?.into_iter().map(|i| i as u32).collect();
+                    report = SparseVec::new(idx, vals);
+                }
+            }
+            Ok(LocalRoundOut { mean_loss: loss_acc / chunks as f32, report })
+        }
+
+        fn dense_grad(
+            &mut self,
+            params: &[f32],
+            x: &[f32],
+            y: &[i32],
+        ) -> Result<(Vec<f32>, f32)> {
+            let m = self.rt.model();
+            let (b, idim, d) = (m.batch, m.input_dim, m.d);
+            if y.len() != b {
+                bail!("dense_grad: batch {} != compiled batch {b}", y.len());
+            }
             let outs = self.rt.call(
-                artifact,
+                "grad",
                 &[
-                    lit_f32(&state.params, &[d as i64])?,
-                    lit_f32(&state.adam.m, &[d as i64])?,
-                    lit_f32(&state.adam.v, &[d as i64])?,
-                    lit_scalar(state.adam.t),
-                    lit_f32(xs_c, &[hs as i64, b as i64, idim as i64])?,
-                    lit_i32(ys_c, &[hs as i64, b as i64])?,
+                    lit_f32(params, &[d as i64])?,
+                    lit_f32(x, &[b as i64, idim as i64])?,
+                    lit_i32(y, &[b as i64])?,
                 ],
             )?;
-            state.params = to_f32(&outs[0])?;
-            state.adam.m = to_f32(&outs[1])?;
-            state.adam.v = to_f32(&outs[2])?;
-            state.adam.t = to_scalar(&outs[3])?;
-            loss_acc += to_scalar(&outs[4])?;
-            if c + 1 == chunks && outs.len() == 6 {
-                // local_round_grad: dense last gradient out, top-r here
-                let grad = to_f32(&outs[5])?;
-                report = topk_abs_sparse(&grad, self.r);
-            } else if c + 1 == chunks && outs.len() > 6 {
-                // local_round: in-graph (signed g[idx], idx) report,
-                // ordered by |g| desc — same contract as topk_abs_sparse
-                let vals = to_f32(&outs[5])?;
-                let idx: Vec<u32> =
-                    to_i32(&outs[6])?.into_iter().map(|i| i as u32).collect();
-                report = SparseVec::new(idx, vals);
+            Ok((to_f32(&outs[0])?, to_scalar(&outs[1])?))
+        }
+
+        fn eval(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, usize)> {
+            let m = self.rt.model();
+            let (b, idim, d) = (m.batch, m.input_dim, m.d);
+            if y.len() != b {
+                bail!("eval: batch {} != compiled batch {b}", y.len());
             }
-        }
-        Ok(LocalRoundOut { mean_loss: loss_acc / chunks as f32, report })
-    }
-
-    fn dense_grad(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f32)> {
-        let m = self.rt.model();
-        let (b, idim, d) = (m.batch, m.input_dim, m.d);
-        if y.len() != b {
-            bail!("dense_grad: batch {} != compiled batch {b}", y.len());
-        }
-        let outs = self.rt.call(
-            "grad",
-            &[
-                lit_f32(params, &[d as i64])?,
-                lit_f32(x, &[b as i64, idim as i64])?,
-                lit_i32(y, &[b as i64])?,
-            ],
-        )?;
-        Ok((to_f32(&outs[0])?, to_scalar(&outs[1])?))
-    }
-
-    fn eval(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, usize)> {
-        let m = self.rt.model();
-        let (b, idim, d) = (m.batch, m.input_dim, m.d);
-        if y.len() != b {
-            bail!("eval: batch {} != compiled batch {b}", y.len());
-        }
-        let outs = self.rt.call(
-            "eval_batch",
-            &[
-                lit_f32(params, &[d as i64])?,
-                lit_f32(x, &[b as i64, idim as i64])?,
-                lit_i32(y, &[b as i64])?,
-            ],
-        )?;
-        Ok((to_scalar(&outs[0])?, to_scalar(&outs[1])? as usize))
-    }
-
-    fn server_apply(
-        &mut self,
-        global: &mut GlobalState,
-        agg: &Aggregate,
-        scale: f32,
-        lr: f32,
-    ) -> Result<()> {
-        let m = self.rt.model();
-        let d = m.d;
-        let _ = lr; // baked into the artifact at AOT time
-        let outs = if agg.total_entries() <= m.k_total {
-            let (idx, val) = agg.to_padded_pairs(m.k_total, scale);
-            self.rt.call(
-                "apply_sparse",
+            let outs = self.rt.call(
+                "eval_batch",
                 &[
-                    lit_f32(&global.params, &[d as i64])?,
-                    lit_f32(&global.adam.m, &[d as i64])?,
-                    lit_f32(&global.adam.v, &[d as i64])?,
-                    lit_scalar(global.adam.t),
-                    lit_i32(&idx, &[m.k_total as i64])?,
-                    lit_f32(&val, &[m.k_total as i64])?,
+                    lit_f32(params, &[d as i64])?,
+                    lit_f32(x, &[b as i64, idim as i64])?,
+                    lit_i32(y, &[b as i64])?,
                 ],
-            )?
-        } else {
-            let update = agg.to_dense(d, scale);
-            self.rt.call(
-                "apply_dense",
-                &[
-                    lit_f32(&global.params, &[d as i64])?,
-                    lit_f32(&global.adam.m, &[d as i64])?,
-                    lit_f32(&global.adam.v, &[d as i64])?,
-                    lit_scalar(global.adam.t),
-                    lit_f32(&update, &[d as i64])?,
-                ],
-            )?
-        };
-        global.params = to_f32(&outs[0])?;
-        global.adam.m = to_f32(&outs[1])?;
-        global.adam.v = to_f32(&outs[2])?;
-        global.adam.t = to_scalar(&outs[3])?;
-        Ok(())
+            )?;
+            Ok((to_scalar(&outs[0])?, to_scalar(&outs[1])? as usize))
+        }
+
+        fn server_apply(
+            &mut self,
+            global: &mut GlobalState,
+            agg: &Aggregate,
+            scale: f32,
+            lr: f32,
+        ) -> Result<()> {
+            let m = self.rt.model();
+            let d = m.d;
+            let _ = lr; // baked into the artifact at AOT time
+            let outs = if agg.total_entries() <= m.k_total {
+                let (idx, val) = agg.to_padded_pairs(m.k_total, scale);
+                self.rt.call(
+                    "apply_sparse",
+                    &[
+                        lit_f32(&global.params, &[d as i64])?,
+                        lit_f32(&global.adam.m, &[d as i64])?,
+                        lit_f32(&global.adam.v, &[d as i64])?,
+                        lit_scalar(global.adam.t),
+                        lit_i32(&idx, &[m.k_total as i64])?,
+                        lit_f32(&val, &[m.k_total as i64])?,
+                    ],
+                )?
+            } else {
+                let update = agg.to_dense(d, scale);
+                self.rt.call(
+                    "apply_dense",
+                    &[
+                        lit_f32(&global.params, &[d as i64])?,
+                        lit_f32(&global.adam.m, &[d as i64])?,
+                        lit_f32(&global.adam.v, &[d as i64])?,
+                        lit_scalar(global.adam.t),
+                        lit_f32(&update, &[d as i64])?,
+                    ],
+                )?
+            };
+            global.params = to_f32(&outs[0])?;
+            global.adam.m = to_f32(&outs[1])?;
+            global.adam.v = to_f32(&outs[2])?;
+            global.adam.t = to_scalar(&outs[3])?;
+            Ok(())
+        }
     }
 }

@@ -79,6 +79,10 @@ pub struct ExperimentConfig {
     pub test_n: usize,
     /// evaluate the global model every this many rounds (0 = only at end)
     pub eval_every: usize,
+    /// in-process client concurrency: lanes of the parallel pool
+    /// (0 = auto-detect from available cores; 1 = serial). Purely a
+    /// throughput knob — results are identical at any setting.
+    pub parallel: usize,
     pub data_dir: String,
     pub artifacts_dir: String,
 }
@@ -115,6 +119,7 @@ impl ExperimentConfig {
             train_n: 4000,
             test_n: 1000,
             eval_every: 5,
+            parallel: 0,
             data_dir: "data".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -158,6 +163,7 @@ impl ExperimentConfig {
             train_n: 1800,
             test_n: 600,
             eval_every: 5,
+            parallel: 0,
             data_dir: "data".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -267,6 +273,7 @@ impl ExperimentConfig {
             ("train_n", Json::Num(self.train_n as f64)),
             ("test_n", Json::Num(self.test_n as f64)),
             ("eval_every", Json::Num(self.eval_every as f64)),
+            ("parallel", Json::Num(self.parallel as f64)),
             ("data_dir", Json::Str(self.data_dir.clone())),
             ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
         ])
@@ -311,6 +318,7 @@ impl ExperimentConfig {
         num!(train_n, "train_n", usize);
         num!(test_n, "test_n", usize);
         num!(eval_every, "eval_every", usize);
+        num!(parallel, "parallel", usize);
         if let Some(s) = j.get("server_opt").and_then(Json::as_str) {
             c.server_opt = s.to_string();
         }
@@ -391,12 +399,14 @@ mod tests {
         cfg.strategy = StrategyKind::RTopK;
         cfg.partition = Scheme::Dirichlet { alpha: 0.25 };
         cfg.rounds = 7;
+        cfg.parallel = 3;
         let j = cfg.to_json();
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.strategy, StrategyKind::RTopK);
         assert_eq!(back.partition, Scheme::Dirichlet { alpha: 0.25 });
         assert_eq!(back.rounds, 7);
         assert_eq!(back.batch, cfg.batch);
+        assert_eq!(back.parallel, 3);
     }
 
     #[test]

@@ -1,0 +1,536 @@
+//! The unified round protocol — Algorithm 1 of the paper, once.
+//!
+//! Historically the per-round flow (broadcast -> local train -> top-r
+//! report -> age-based index request -> sparse upload -> aggregate ->
+//! server apply -> age/frequency bookkeeping -> M-periodic DBSCAN) was
+//! implemented twice: in the in-process simulator and, with drift, in the
+//! TCP server. [`RoundEngine`] is the single implementation; *where* the
+//! clients run is abstracted behind [`ClientPool`]:
+//!
+//! * [`crate::fl::pool::InProcessPool`] — simulated clients in this
+//!   process, trained **in parallel** on scoped threads (one backend lane
+//!   per thread for the pure-Rust backend; a single shared PJRT runtime
+//!   driven serially for XLA).
+//! * [`crate::fl::distributed::TcpClientPool`] — one OS process per
+//!   client, speaking the length-prefixed protocol of
+//!   [`crate::fl::transport`].
+//!
+//! `Trainer::run_round` and `run_server` are thin adapters over
+//! `RoundEngine::run_round`; the *client* side of the protocol is shared
+//! too ([`client_train_phase`] / [`client_update_phase`] are called both
+//! by the in-process pool and by `run_worker`), so the two deployments are
+//! bit-for-bit identical — pinned by `rust/tests/parity.rs`.
+//!
+//! The engine owns everything the PS owns in the paper: index selection
+//! (Algorithm 2), aggregation, the server optimizer step, byte-accurate
+//! communication accounting (DESIGN.md §6), the per-cluster
+//! [`crate::age::AgeVector`]s / per-client frequency vectors, and the
+//! M-periodic reclustering.
+
+use crate::backend::{Backend, GlobalState};
+use crate::config::{ExperimentConfig, Payload};
+use crate::coordinator::aggregator::Aggregate;
+use crate::coordinator::server::{ParameterServer, PsConfig};
+use crate::coordinator::strategies::{client_select, StrategyKind};
+use crate::data::{gather_batch, Dataset};
+use crate::fl::client::Client;
+use crate::fl::metrics::CommStats;
+use crate::sparse::{topk_abs_sparse, SparseVec};
+use crate::util::timer::Profile;
+use anyhow::{ensure, Result};
+
+/// What one client hands the PS after its local round (Algorithm 1
+/// lines 4-7): the top-r report and the mean local training loss.
+#[derive(Debug, Clone)]
+pub struct ClientReport {
+    pub report: SparseVec,
+    pub mean_loss: f32,
+}
+
+/// Where the clients of a round live. Implementations hold the clients'
+/// training state (and, under the Delta payload, their error-feedback
+/// memories) plus the PS-side compute backend; [`RoundEngine`] drives the
+/// protocol through this interface without knowing whether the clients
+/// are threads in this process or sockets to other machines.
+pub trait ClientPool {
+    fn n_clients(&self) -> usize;
+
+    /// Algorithm 1 lines 3-7: broadcast `global`, have every client adopt
+    /// it (local optimizer state persists — `sync_to`, not a reset), run H
+    /// local steps, fold the error-feedback memory under the Delta
+    /// payload, and return the per-client top-r reports.
+    fn train_and_report(&mut self, global: &[f32]) -> Result<Vec<ClientReport>>;
+
+    /// Algorithm 1 line 8: deliver the PS's per-client index requests
+    /// (`None` for client-side strategies — rTop-k/top-k/rand-k/dense
+    /// select locally) and collect the sparse uploads. Sent coordinates
+    /// leave the error-feedback memory.
+    fn exchange(&mut self, requests: Option<&[Vec<u32>]>) -> Result<Vec<SparseVec>>;
+
+    /// The PS-side compute backend (server optimizer apply, evaluation).
+    /// Kept on the pool so a process never holds more than one PJRT
+    /// runtime.
+    fn backend(&mut self) -> &mut dyn Backend;
+}
+
+/// What one engine round reports back to its driver.
+#[derive(Debug)]
+pub struct RoundOutcome {
+    /// mean local training loss across clients
+    pub mean_loss: f32,
+    /// Some(n_clusters) when the M-periodic DBSCAN ran this round
+    pub reclustered: Option<usize>,
+    pub n_clusters: usize,
+}
+
+/// How many rounds of uploaded-index history the engine retains (parity
+/// tests / diagnostics). Bounds PS memory on long deployments: at the
+/// CIFAR scale (n=6, k=100) the full log would otherwise grow by ~5 KB
+/// per round forever.
+pub const UPLOADED_LOG_CAP: usize = 512;
+
+/// The parameter-server side of Algorithm 1, shared by the in-process
+/// simulator and the TCP deployment (see module docs).
+pub struct RoundEngine {
+    cfg: ExperimentConfig,
+    ps: ParameterServer,
+    global: GlobalState,
+    comm: CommStats,
+    profile: Profile,
+    /// per round, per client: the indices actually uploaded — the most
+    /// recent [`UPLOADED_LOG_CAP`] rounds only
+    uploaded_log: Vec<Vec<Vec<u32>>>,
+}
+
+impl RoundEngine {
+    pub fn new(cfg: &ExperimentConfig, init_params: Vec<f32>) -> Self {
+        let ps = ParameterServer::new(PsConfig {
+            d: cfg.d(),
+            n_clients: cfg.n_clients,
+            k: cfg.k,
+            strategy: cfg.strategy,
+            recluster_every: cfg.recluster_every,
+            dbscan: cfg.dbscan,
+            merge_rule: cfg.merge_rule,
+        });
+        RoundEngine {
+            cfg: cfg.clone(),
+            ps,
+            global: GlobalState::new(init_params),
+            comm: CommStats::default(),
+            profile: Profile::new(),
+            uploaded_log: Vec::new(),
+        }
+    }
+
+    pub fn ps(&self) -> &ParameterServer {
+        &self.ps
+    }
+
+    pub fn global_params(&self) -> &[f32] {
+        &self.global.params
+    }
+
+    pub fn comm(&self) -> CommStats {
+        self.comm
+    }
+
+    pub fn profile(&self) -> &Profile {
+        &self.profile
+    }
+
+    /// Rounds completed so far.
+    pub fn round(&self) -> usize {
+        self.ps.round()
+    }
+
+    /// Per-round, per-client uploaded index sets — the most recent
+    /// [`UPLOADED_LOG_CAP`] rounds (parity/diagnostics).
+    pub fn uploaded_log(&self) -> &[Vec<Vec<u32>>] {
+        &self.uploaded_log
+    }
+
+    /// One global round (Algorithm 1 lines 3-16) against `pool`.
+    pub fn run_round(&mut self, pool: &mut dyn ClientPool) -> Result<RoundOutcome> {
+        let n = self.cfg.n_clients;
+        let (k, r, d) = (self.cfg.k, self.cfg.r, self.cfg.d());
+        ensure!(
+            pool.n_clients() == n,
+            "pool has {} clients, config says {n}",
+            pool.n_clients()
+        );
+
+        // ---- broadcast + local training + top-r reports (lines 3-7)
+        let reports =
+            self.profile.time("pool.train", || pool.train_and_report(&self.global.params))?;
+        ensure!(reports.len() == n, "pool returned {} reports for {n} clients", reports.len());
+        let mean_loss = crate::util::mean(
+            &reports.iter().map(|c| c.mean_loss as f64).collect::<Vec<_>>(),
+        ) as f32;
+
+        // ---- index selection (Algorithm 2 at the PS; client-side
+        // strategies select inside the pool during the exchange)
+        let requests: Option<Vec<Vec<u32>>> = if self.cfg.strategy.needs_report() {
+            let idx: Vec<Vec<u32>> = reports.iter().map(|c| c.report.idx.clone()).collect();
+            Some(self.profile.time("ps.select", || self.ps.select_requests(&idx)))
+        } else {
+            None
+        };
+
+        // ---- sparse uploads (line 8)
+        let updates =
+            self.profile.time("pool.exchange", || pool.exchange(requests.as_deref()))?;
+        ensure!(updates.len() == n, "pool returned {} updates for {n} clients", updates.len());
+        // what each client actually uploaded drives the bookkeeping — for
+        // PS-side strategies this equals the request (requested ⊆ report),
+        // for client-side strategies it is the client's own selection
+        let uploaded: Vec<Vec<u32>> = updates.iter().map(|u| u.idx.clone()).collect();
+
+        // ---- communication accounting (DESIGN.md §6)
+        for u in &updates {
+            self.comm.update_up += (u.len() * 8) as u64;
+        }
+        if self.cfg.strategy.needs_report() {
+            self.comm.report_up += (n * r * 4) as u64;
+            self.comm.request_down += (n * k * 4) as u64;
+        }
+        self.comm.broadcast_down += (n * d * 4) as u64;
+
+        // ---- aggregate + server update (lines 9-11)
+        let mut agg = Aggregate::new();
+        for u in updates {
+            agg.push(u);
+        }
+        match self.cfg.payload {
+            Payload::Delta => {
+                // FedAvg-style: apply the mean sparse drift directly
+                let update = agg.to_dense(d, 1.0 / n as f32);
+                self.profile.time("ps.apply", || {
+                    for (p, &u) in self.global.params.iter_mut().zip(&update) {
+                        *p += u;
+                    }
+                });
+            }
+            Payload::Grad if self.cfg.server_opt == "sgd" => {
+                let update = agg.to_dense(d, 1.0);
+                let lr = self.cfg.lr_server;
+                self.profile.time("ps.apply", || {
+                    for (p, &u) in self.global.params.iter_mut().zip(&update) {
+                        *p -= lr * u;
+                    }
+                });
+            }
+            Payload::Grad => {
+                let t0 = std::time::Instant::now();
+                pool.backend().server_apply(&mut self.global, &agg, 1.0, self.cfg.lr_server)?;
+                self.profile.add("ps.apply", t0.elapsed().as_secs_f64());
+            }
+        }
+
+        // ---- age + frequency bookkeeping (Algorithm 2 lines 7-8 / eq. 2)
+        // and the M-periodic clustering (Algorithm 1 lines 13-16)
+        self.profile.time("ps.record", || self.ps.record_round(&uploaded));
+        let reclustered = self.ps.maybe_recluster();
+        self.uploaded_log.push(uploaded);
+        if self.uploaded_log.len() > UPLOADED_LOG_CAP {
+            self.uploaded_log.remove(0);
+        }
+
+        Ok(RoundOutcome {
+            mean_loss,
+            reclustered,
+            n_clusters: self.ps.clusters().n_clusters(),
+        })
+    }
+}
+
+// ================================================== client-side protocol
+
+/// The slice of the experiment config the per-client protocol phases
+/// need; shared by the in-process pool and the TCP worker so both
+/// deployments execute the identical client code path.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseCfg {
+    pub strategy: StrategyKind,
+    pub payload: Payload,
+    pub d: usize,
+    pub r: usize,
+    pub k: usize,
+    pub h: usize,
+    pub batch: usize,
+}
+
+impl PhaseCfg {
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        PhaseCfg {
+            strategy: cfg.strategy,
+            payload: cfg.payload,
+            d: cfg.d(),
+            r: cfg.r,
+            k: cfg.k,
+            h: cfg.h,
+            batch: cfg.batch,
+        }
+    }
+}
+
+/// One client's first half of a round (Algorithm 1 lines 4-7): adopt the
+/// broadcast global model via `sync_to` — the local Adam moments persist
+/// across rounds — run H local steps, and build the top-r report. Under
+/// the Delta payload the round's drift theta_i - theta is folded into the
+/// error-feedback `memory` first and the report is the top-r of the
+/// *accumulated* unsent update — the Qsparse-local-SGD mechanism the
+/// paper's convergence argument relies on (DESIGN.md §5).
+pub fn client_train_phase(
+    client: &mut Client,
+    backend: &mut dyn Backend,
+    memory: Option<&mut Vec<f32>>,
+    global: &[f32],
+    pc: &PhaseCfg,
+) -> Result<ClientReport> {
+    client.state.sync_to(global);
+    let out = client.local_round(backend, pc.h, pc.batch)?;
+    let report = match memory {
+        Some(mem) => {
+            for (m, (p, g)) in mem
+                .iter_mut()
+                .zip(client.state.params.iter().zip(global))
+            {
+                *m += p - g;
+            }
+            topk_abs_sparse(mem, pc.r)
+        }
+        None => out.report,
+    };
+    Ok(ClientReport { report, mean_loss: out.mean_loss })
+}
+
+/// One client's second half of a round (Algorithm 1 line 8): build the
+/// sparse upload for the PS's `request` (PS-side strategies) or for a
+/// locally selected index set (`request == None`; rTop-k / top-k / rand-k
+/// / dense). Sent coordinates leave the error-feedback memory.
+pub fn client_update_phase(
+    client: &mut Client,
+    backend: &mut dyn Backend,
+    mut memory: Option<&mut Vec<f32>>,
+    report: &SparseVec,
+    request: Option<&[u32]>,
+    pc: &PhaseCfg,
+) -> Result<SparseVec> {
+    let selected: Vec<u32> = match request {
+        Some(req) => req.to_vec(),
+        None => client_select(pc.strategy, &mut client.rng, &report.idx, pc.d, pc.k),
+    };
+    let update = if pc.strategy.needs_dense_grad() {
+        // rand-k / dense need coordinates outside the top-r report
+        match memory.as_deref() {
+            Some(mem) => Client::gather_from_grad(mem, &selected),
+            None => {
+                let (xs, ys) = client.draw_round_batches(1, pc.batch);
+                let (grad, _) = backend.dense_grad(&client.state.params, &xs, &ys)?;
+                Client::gather_from_grad(&grad, &selected)
+            }
+        }
+    } else {
+        Client::answer_request(report, &selected)
+    };
+    if let Some(mem) = memory.as_deref_mut() {
+        for &j in &update.idx {
+            mem[j as usize] = 0.0;
+        }
+    }
+    Ok(update)
+}
+
+// =============================================================== eval
+
+/// Batched accuracy/loss of `params` over `indices` of `ds`, shared by
+/// the simulator and the TCP server. The trailing partial batch is padded
+/// with copies of the last sample (the XLA artifacts require a fixed
+/// batch size); one extra backend call on a batch made solely of that
+/// sample isolates its per-sample stats exactly, so the padded duplicates
+/// are subtracted back out and never bias the metric.
+pub fn eval_dataset(
+    backend: &mut dyn Backend,
+    params: &[f32],
+    ds: &Dataset,
+    indices: &[usize],
+    batch: usize,
+) -> Result<(f32, f32)> {
+    ensure!(!indices.is_empty(), "empty eval subset");
+    let n = indices.len();
+    let n_batches = n.div_ceil(batch);
+    let mut loss_sum = 0.0f32;
+    let mut correct = 0usize;
+    for i in 0..n_batches {
+        let idx: Vec<usize> =
+            (i * batch..(i + 1) * batch).map(|j| indices[j.min(n - 1)]).collect();
+        let (x, y) = gather_batch(ds, &idx);
+        let (ls, c) = backend.eval(params, &x, &y)?;
+        loss_sum += ls;
+        correct += c;
+    }
+    let pad = n_batches * batch - n;
+    if pad > 0 {
+        let idx = vec![indices[n - 1]; batch];
+        let (x, y) = gather_batch(ds, &idx);
+        let (ls, c) = backend.eval(params, &x, &y)?;
+        // a batch of `batch` copies of one sample: per-sample correctness
+        // is c / batch (0 or 1), per-sample loss is ls / batch
+        debug_assert_eq!(c % batch, 0, "identical samples must agree");
+        correct -= (c / batch) * pad;
+        loss_sum -= ls / batch as f32 * pad as f32;
+    }
+    Ok((correct as f32 / n as f32, loss_sum / n as f32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    /// A scripted pool: canned reports/uploads, no real training. Lets the
+    /// engine's selection/accounting/bookkeeping be checked in isolation.
+    struct FakePool {
+        n: usize,
+        k: usize,
+        backend: crate::backend::RustBackend,
+        /// requests seen at the last exchange (None = client-side)
+        last_requests: Option<Vec<Vec<u32>>>,
+    }
+
+    impl ClientPool for FakePool {
+        fn n_clients(&self) -> usize {
+            self.n
+        }
+
+        fn train_and_report(&mut self, _global: &[f32]) -> Result<Vec<ClientReport>> {
+            // client i reports indices 10i..10i+r by descending magnitude
+            Ok((0..self.n)
+                .map(|i| {
+                    let idx: Vec<u32> = (0..40u32).map(|j| 10 * i as u32 + j).collect();
+                    let val: Vec<f32> = (0..40).map(|j| 40.0 - j as f32).collect();
+                    ClientReport {
+                        report: SparseVec::new(idx, val),
+                        mean_loss: 1.0,
+                    }
+                })
+                .collect())
+        }
+
+        fn exchange(&mut self, requests: Option<&[Vec<u32>]>) -> Result<Vec<SparseVec>> {
+            self.last_requests = requests.map(|r| r.to_vec());
+            Ok(match requests {
+                Some(reqs) => reqs
+                    .iter()
+                    .map(|req| {
+                        SparseVec::new(req.clone(), req.iter().map(|&j| j as f32).collect())
+                    })
+                    .collect(),
+                None => (0..self.n)
+                    .map(|i| {
+                        let idx: Vec<u32> = (0..self.k as u32).map(|j| 10 * i as u32 + j).collect();
+                        SparseVec::new(idx.clone(), vec![1.0; idx.len()])
+                    })
+                    .collect(),
+            })
+        }
+
+        fn backend(&mut self) -> &mut dyn Backend {
+            &mut self.backend
+        }
+    }
+
+    fn smoke_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.n_clients = 2;
+        cfg.payload = Payload::Delta;
+        cfg
+    }
+
+    #[test]
+    fn engine_round_accounts_and_records() {
+        let cfg = smoke_cfg();
+        let d = cfg.d();
+        let mut pool = FakePool {
+            n: cfg.n_clients,
+            k: cfg.k,
+            backend: crate::backend::RustBackend::new(cfg.r, cfg.lr_client, cfg.seed),
+            last_requests: None,
+        };
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        let out = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out.mean_loss, 1.0);
+        assert_eq!(engine.round(), 1);
+        // rAge-k: requests went out and equal the uploads
+        let reqs = pool.last_requests.clone().unwrap();
+        assert_eq!(engine.uploaded_log().to_vec(), vec![reqs.clone()]);
+        assert!(reqs.iter().all(|r| r.len() == cfg.k));
+        // byte accounting matches the DESIGN.md formulas for one round
+        let comm = engine.comm();
+        let n = cfg.n_clients as u64;
+        assert_eq!(comm.report_up, n * 4 * cfg.r as u64);
+        assert_eq!(comm.update_up, n * 8 * cfg.k as u64);
+        assert_eq!(comm.request_down, n * 4 * cfg.k as u64);
+        assert_eq!(comm.broadcast_down, n * 4 * d as u64);
+        // Delta payload: global moved by the mean of the uploads
+        let mut expect = vec![0.0f32; d];
+        for r in &engine.uploaded_log()[0] {
+            for &j in r {
+                expect[j as usize] += j as f32 / cfg.n_clients as f32;
+            }
+        }
+        for (p, e) in engine.global_params().iter().zip(&expect) {
+            assert!((p - e).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn client_side_strategy_skips_requests() {
+        let mut cfg = smoke_cfg();
+        cfg.strategy = StrategyKind::TopK;
+        let d = cfg.d();
+        let mut pool = FakePool {
+            n: cfg.n_clients,
+            k: cfg.k,
+            backend: crate::backend::RustBackend::new(cfg.r, cfg.lr_client, cfg.seed),
+            last_requests: Some(Vec::new()),
+        };
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        engine.run_round(&mut pool).unwrap();
+        assert!(pool.last_requests.is_none(), "top-k must not receive PS requests");
+        let comm = engine.comm();
+        assert_eq!(comm.report_up, 0);
+        assert_eq!(comm.request_down, 0);
+        // bookkeeping recorded what the clients actually uploaded
+        assert_eq!(engine.uploaded_log()[0][1][0], 10);
+    }
+
+    #[test]
+    fn update_phase_answers_request_from_report() {
+        use crate::data::synth::synthetic_mnist;
+        let cfg = smoke_cfg();
+        let pc = PhaseCfg::from_config(&cfg);
+        let ds = synthetic_mnist(0, 64);
+        let mut client = Client::new(0, ds, vec![0.0; pc.d], 1);
+        let mut backend = crate::backend::RustBackend::new(cfg.r, cfg.lr_client, cfg.seed);
+        let mut memory = vec![0.0f32; pc.d];
+        memory[5] = 2.5;
+        memory[9] = -1.0;
+        let report = SparseVec::new(vec![5, 9], vec![2.5, -1.0]);
+        let up = client_update_phase(
+            &mut client,
+            &mut backend,
+            Some(&mut memory),
+            &report,
+            Some(&[9, 5]),
+            &pc,
+        )
+        .unwrap();
+        assert_eq!(up.idx, vec![9, 5]);
+        assert_eq!(up.val, vec![-1.0, 2.5]);
+        // sent coordinates left the error-feedback memory
+        assert_eq!(memory[5], 0.0);
+        assert_eq!(memory[9], 0.0);
+    }
+}

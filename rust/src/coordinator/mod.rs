@@ -1,5 +1,9 @@
 //! The parameter-server coordinator — the paper's system contribution.
 //!
+//! * [`engine`] — the unified round protocol ([`engine::RoundEngine`]):
+//!   Algorithm 1 implemented once, driven identically by the in-process
+//!   simulator and the TCP deployment through the [`engine::ClientPool`]
+//!   abstraction.
 //! * [`selection`] — Algorithm 2's PS side: age-ranked choice of k indices
 //!   out of each client's top-r report, with disjoint assignment across
 //!   the members of a cluster.
@@ -10,9 +14,11 @@
 //!   vectors, clustering and selection into the per-round protocol.
 
 pub mod aggregator;
+pub mod engine;
 pub mod selection;
 pub mod server;
 pub mod strategies;
 
+pub use engine::{ClientPool, RoundEngine};
 pub use server::ParameterServer;
 pub use strategies::StrategyKind;

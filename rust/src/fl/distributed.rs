@@ -1,14 +1,21 @@
 //! Multi-process deployment: the PS and each client as separate OS
 //! processes speaking the length-prefixed TCP protocol of
-//! [`crate::fl::transport`] — the same per-round message flow the
-//! in-process simulator models, now with real sockets.
+//! [`crate::fl::transport`].
+//!
+//! Both sides are thin adapters over the shared protocol code:
 //!
 //! * [`run_server`] — binds, waits for `n_clients` joins, then drives the
-//!   rAge-k round loop (select -> request -> aggregate -> apply ->
-//!   age/frequency bookkeeping -> M-periodic DBSCAN).
+//!   **same** [`RoundEngine`] the in-process simulator uses, through
+//!   [`TcpClientPool`] (the sockets-backed [`ClientPool`]).
 //! * [`run_worker`] — owns one client's shard (derived from the shared
-//!   seed + its id, so no data ever crosses the wire), local Adam state
-//!   and error-feedback memory.
+//!   seed + its id, so no data ever crosses the wire) and executes the
+//!   same [`client_train_phase`] / [`client_update_phase`] as the
+//!   in-process pool — local Adam state persists across rounds via
+//!   `sync_to`, exactly like the simulator.
+//!
+//! The two deployments are therefore bit-for-bit identical on the same
+//! config + seed (per-round uploaded indices and final global parameters
+//! alike) — pinned by `rust/tests/parity.rs`.
 //!
 //! Both ends use the same `ExperimentConfig`; run e.g.:
 //!
@@ -17,15 +24,16 @@
 //! for i in 0 1 2 3; do ragek worker --connect 127.0.0.1:7700 --id $i & done
 //! ```
 
-use crate::backend::{make_backend, ClientState, GlobalState};
+use crate::backend::{make_backend, Backend};
 use crate::config::{ExperimentConfig, Payload};
-use crate::coordinator::aggregator::Aggregate;
-use crate::coordinator::server::{ParameterServer, PsConfig};
-use crate::coordinator::strategies::client_select;
+use crate::coordinator::engine::{
+    client_train_phase, client_update_phase, eval_dataset, ClientPool, ClientReport, PhaseCfg,
+    RoundEngine,
+};
 use crate::data::{load_dataset, partition::partition};
 use crate::fl::client::Client;
 use crate::fl::transport::{recv, send, Msg};
-use crate::sparse::{topk_abs_sparse, SparseVec};
+use crate::sparse::SparseVec;
 use anyhow::{bail, Context, Result};
 use std::net::{TcpListener, TcpStream};
 
@@ -35,125 +43,149 @@ pub struct ServeReport {
     pub rounds: usize,
     pub final_accuracy: f32,
     pub cluster_labels: Vec<usize>,
+    /// final global model (sim/distributed parity checks)
+    pub final_params: Vec<f32>,
+    /// per round, per client: the uploaded index sets
+    pub uploaded_log: Vec<Vec<Vec<u32>>>,
+}
+
+/// The sockets-backed [`ClientPool`]: one TCP stream per remote worker,
+/// indexed by client id. Owns the PS-side backend (server optimizer
+/// apply + evaluation).
+pub struct TcpClientPool {
+    streams: Vec<TcpStream>,
+    backend: Box<dyn Backend>,
+    round: u32,
+}
+
+impl TcpClientPool {
+    /// Block on an already-bound listener until all `cfg.n_clients`
+    /// workers joined. Binding is the caller's job so tests can bind an
+    /// ephemeral port *before* any worker spawns (joins then queue in the
+    /// accept backlog — no sleeps, no port races).
+    pub fn accept(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Self> {
+        crate::info!(
+            "serve: waiting for {} clients on {:?}",
+            cfg.n_clients,
+            listener.local_addr()
+        );
+        let mut slots: Vec<Option<TcpStream>> = (0..cfg.n_clients).map(|_| None).collect();
+        let mut joined = 0;
+        while joined < cfg.n_clients {
+            let (mut s, peer) = listener.accept()?;
+            match recv(&mut s)? {
+                Msg::Join { client_id } => {
+                    let id = client_id as usize;
+                    if id >= cfg.n_clients || slots[id].is_some() {
+                        bail!("bad/duplicate client id {id} from {peer}");
+                    }
+                    crate::info!("serve: client {id} joined from {peer}");
+                    slots[id] = Some(s);
+                    joined += 1;
+                }
+                other => bail!("expected Join, got {other:?}"),
+            }
+        }
+        Ok(TcpClientPool {
+            streams: slots.into_iter().map(|s| s.unwrap()).collect(),
+            backend: make_backend(cfg)?,
+            round: 0,
+        })
+    }
+
+    /// Tell every worker training is over.
+    pub fn shutdown(&mut self) -> Result<()> {
+        for s in self.streams.iter_mut() {
+            send(s, &Msg::Shutdown)?;
+        }
+        Ok(())
+    }
+}
+
+impl ClientPool for TcpClientPool {
+    fn n_clients(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn train_and_report(&mut self, global: &[f32]) -> Result<Vec<ClientReport>> {
+        self.round += 1;
+        let round = self.round;
+        for s in self.streams.iter_mut() {
+            send(s, &Msg::Model { round, params: global.to_vec() })?;
+        }
+        let mut out = Vec::with_capacity(self.streams.len());
+        for s in self.streams.iter_mut() {
+            match recv(s)? {
+                Msg::Report { report, mean_loss, round: r, .. } if r == round => {
+                    out.push(ClientReport { report, mean_loss });
+                }
+                other => bail!("round {round}: expected Report, got {other:?}"),
+            }
+        }
+        Ok(out)
+    }
+
+    fn exchange(&mut self, requests: Option<&[Vec<u32>]>) -> Result<Vec<SparseVec>> {
+        let round = self.round;
+        let mut updates = Vec::with_capacity(self.streams.len());
+        for (i, s) in self.streams.iter_mut().enumerate() {
+            // client-side strategies select locally; the Request frame
+            // still flows (empty) so the wire flow stays uniform
+            let indices = requests.map(|r| r[i].clone()).unwrap_or_default();
+            send(s, &Msg::Request { round, indices })?;
+            match recv(s)? {
+                Msg::Update { update, round: r, .. } if r == round => updates.push(update),
+                other => bail!("round {round}: expected Update, got {other:?}"),
+            }
+        }
+        Ok(updates)
+    }
+
+    fn backend(&mut self) -> &mut dyn Backend {
+        self.backend.as_mut()
+    }
 }
 
 /// Run the parameter server until `cfg.rounds` rounds complete.
 pub fn run_server(cfg: &ExperimentConfig, port: u16) -> Result<ServeReport> {
-    cfg.validate()?;
-    if cfg.payload != Payload::Delta {
-        bail!("distributed mode implements the Delta payload");
-    }
     let listener =
         TcpListener::bind(("0.0.0.0", port)).with_context(|| format!("binding :{port}"))?;
-    crate::info!("serve: waiting for {} clients on :{port}", cfg.n_clients);
+    run_server_on(cfg, listener)
+}
 
-    let mut streams: Vec<Option<TcpStream>> = (0..cfg.n_clients).map(|_| None).collect();
-    let mut joined = 0;
-    while joined < cfg.n_clients {
-        let (mut s, peer) = listener.accept()?;
-        match recv(&mut s)? {
-            Msg::Join { client_id } => {
-                let id = client_id as usize;
-                if id >= cfg.n_clients || streams[id].is_some() {
-                    bail!("bad/duplicate client id {id} from {peer}");
-                }
-                crate::info!("serve: client {id} joined from {peer}");
-                streams[id] = Some(s);
-                joined += 1;
-            }
-            other => bail!("expected Join, got {other:?}"),
-        }
-    }
-    let mut streams: Vec<TcpStream> = streams.into_iter().map(|s| s.unwrap()).collect();
-
-    // PS state: global model + age/frequency/cluster machinery + test set
-    let mut backend = make_backend(cfg)?;
-    let mut global = GlobalState::new(backend.init_params()?);
-    let mut ps = ParameterServer::new(PsConfig {
-        d: cfg.d(),
-        n_clients: cfg.n_clients,
-        k: cfg.k,
-        strategy: cfg.strategy,
-        recluster_every: cfg.recluster_every,
-        dbscan: cfg.dbscan,
-        merge_rule: cfg.merge_rule,
-    });
+/// [`run_server`] over an already-bound listener (lets tests bind an
+/// ephemeral port before spawning workers).
+pub fn run_server_on(cfg: &ExperimentConfig, listener: TcpListener) -> Result<ServeReport> {
+    cfg.validate()?;
+    let mut pool = TcpClientPool::accept(cfg, listener)?;
+    let init = pool.backend.init_params()?;
+    let mut engine = RoundEngine::new(cfg, init);
     let (_, test) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
+    let test_idx: Vec<usize> = (0..test.len()).collect();
 
-    for round in 1..=cfg.rounds as u32 {
-        for s in streams.iter_mut() {
-            send(s, &Msg::Model { round, params: global.params.clone() })?;
-        }
-        let mut reports: Vec<SparseVec> = Vec::with_capacity(cfg.n_clients);
-        for s in streams.iter_mut() {
-            match recv(s)? {
-                Msg::Report { report, round: r, .. } if r == round => reports.push(report),
-                other => bail!("round {round}: expected Report, got {other:?}"),
-            }
-        }
-        let requested: Vec<Vec<u32>> = if cfg.strategy.needs_report() {
-            let idx: Vec<Vec<u32>> = reports.iter().map(|r| r.idx.clone()).collect();
-            ps.select_requests(&idx)
-        } else {
-            // client-side strategies select themselves; PS echoes back the
-            // report prefix so the wire flow stays uniform
-            reports.iter().map(|r| r.idx[..cfg.k.min(r.len())].to_vec()).collect()
-        };
-        let mut agg = Aggregate::new();
-        for (s, req) in streams.iter_mut().zip(&requested) {
-            send(s, &Msg::Request { round, indices: req.clone() })?;
-            match recv(s)? {
-                Msg::Update { update, round: r, .. } if r == round => agg.push(update),
-                other => bail!("round {round}: expected Update, got {other:?}"),
-            }
-        }
-        let update = agg.to_dense(cfg.d(), 1.0 / cfg.n_clients as f32);
-        for (p, &u) in global.params.iter_mut().zip(&update) {
-            *p += u;
-        }
-        ps.record_round(&requested);
-        ps.maybe_recluster();
-
-        if cfg.eval_every > 0 && round as usize % cfg.eval_every == 0 {
-            let (acc, loss) = eval_global(backend.as_mut(), &global.params, &test, cfg.batch)?;
+    for round in 1..=cfg.rounds {
+        engine.run_round(&mut pool)?;
+        if cfg.eval_every > 0 && round % cfg.eval_every == 0 {
+            let (acc, loss) =
+                eval_dataset(pool.backend(), engine.global_params(), &test, &test_idx, cfg.batch)?;
             crate::info!(
                 "serve: round {round}/{}: acc {:.2}% loss {loss:.4} clusters {}",
                 cfg.rounds,
                 acc * 100.0,
-                ps.clusters().n_clusters()
+                engine.ps().clusters().n_clusters()
             );
         }
     }
-    for s in streams.iter_mut() {
-        send(s, &Msg::Shutdown)?;
-    }
-    let (acc, _) = eval_global(backend.as_mut(), &global.params, &test, cfg.batch)?;
+    pool.shutdown()?;
+    let (acc, _) =
+        eval_dataset(pool.backend(), engine.global_params(), &test, &test_idx, cfg.batch)?;
     Ok(ServeReport {
         rounds: cfg.rounds,
         final_accuracy: acc,
-        cluster_labels: ps.clusters().labels(),
+        cluster_labels: engine.ps().clusters().labels(),
+        final_params: engine.global_params().to_vec(),
+        uploaded_log: engine.uploaded_log().to_vec(),
     })
-}
-
-fn eval_global(
-    backend: &mut dyn crate::backend::Backend,
-    params: &[f32],
-    test: &crate::data::Dataset,
-    batch: usize,
-) -> Result<(f32, f32)> {
-    let n_batches = (test.len() / batch).max(1);
-    let mut loss_sum = 0.0f32;
-    let mut correct = 0usize;
-    for i in 0..n_batches {
-        let idx: Vec<usize> =
-            (i * batch..(i + 1) * batch).map(|j| j % test.len()).collect();
-        let (x, y) = crate::data::gather_batch(test, &idx);
-        let (ls, c) = backend.eval(params, &x, &y)?;
-        loss_sum += ls;
-        correct += c;
-    }
-    let n = (n_batches * batch) as f32;
-    Ok((correct as f32 / n, loss_sum / n))
 }
 
 /// Run one worker process until the PS sends Shutdown.
@@ -162,13 +194,15 @@ pub fn run_worker(cfg: &ExperimentConfig, addr: &str, id: usize) -> Result<()> {
     if id >= cfg.n_clients {
         bail!("worker id {id} >= n_clients {}", cfg.n_clients);
     }
+    let pc = PhaseCfg::from_config(cfg);
     let mut backend = make_backend(cfg)?;
     // derive this worker's shard exactly like the simulator does: same
     // seed -> same partition, no data on the wire
     let (train, _) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
     let shards = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed);
     let mut client = Client::new(id, train.subset(&shards[id]), backend.init_params()?, cfg.seed);
-    let mut memory = vec![0.0f32; cfg.d()];
+    let delta = cfg.payload == Payload::Delta;
+    let mut memory = if delta { vec![0.0f32; cfg.d()] } else { Vec::new() };
 
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
@@ -181,35 +215,33 @@ pub fn run_worker(cfg: &ExperimentConfig, addr: &str, id: usize) -> Result<()> {
             Msg::Shutdown => break,
             other => bail!("expected Model/Shutdown, got {other:?}"),
         };
-        client.state = ClientState::new(params.clone());
-        let out = client.local_round(backend.as_mut(), cfg.h, cfg.batch)?;
-        // error-feedback fold + report (Delta payload)
-        for (m, (p, g)) in memory.iter_mut().zip(client.state.params.iter().zip(&params)) {
-            *m += p - g;
-        }
-        let report = topk_abs_sparse(&memory, cfg.r);
+        // shared phase 1: sync_to (Adam moments persist), H local steps,
+        // EF fold, top-r report — the same code the in-process pool runs
+        let mem = if delta { Some(&mut memory) } else { None };
+        let rep = client_train_phase(&mut client, backend.as_mut(), mem, &params, &pc)?;
         send(
             &mut stream,
             &Msg::Report {
                 client_id: id as u32,
                 round,
-                report: report.clone(),
-                mean_loss: out.mean_loss,
+                report: rep.report.clone(),
+                mean_loss: rep.mean_loss,
             },
         )?;
         let requested = match recv(&mut stream)? {
             Msg::Request { indices, round: r } if r == round => indices,
             other => bail!("expected Request, got {other:?}"),
         };
-        let update = if cfg.strategy.needs_report() {
-            Client::answer_request(&report, &requested)
+        // shared phase 2: answer the PS request, or select locally for
+        // client-side strategies (the PS's echo frame is empty then)
+        let request = if pc.strategy.needs_report() {
+            Some(requested.as_slice())
         } else {
-            let sel = client_select(cfg.strategy, &mut client.rng, &report.idx, cfg.d(), cfg.k);
-            Client::gather_from_grad(&memory, &sel)
+            None
         };
-        for &j in &update.idx {
-            memory[j as usize] = 0.0;
-        }
+        let mem = if delta { Some(&mut memory) } else { None };
+        let update =
+            client_update_phase(&mut client, backend.as_mut(), mem, &rep.report, request, &pc)?;
         send(&mut stream, &Msg::Update { client_id: id as u32, round, update })?;
     }
     crate::info!("worker {id}: shutdown");
@@ -224,31 +256,16 @@ mod tests {
     #[test]
     fn distributed_round_trip_localhost() {
         let mut cfg = ExperimentConfig::mnist_smoke();
-        cfg.payload = Payload::Delta; // distributed mode implements Delta
+        cfg.payload = Payload::Delta;
         cfg.rounds = 3;
         cfg.n_clients = 2;
         cfg.train_n = 200;
         cfg.test_n = 64;
         cfg.eval_every = 0;
-        // pick an ephemeral port by binding first
-        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-        let port = probe.local_addr().unwrap().port();
-        drop(probe);
-
-        let server_cfg = cfg.clone();
-        let server = std::thread::spawn(move || run_server(&server_cfg, port).unwrap());
-        std::thread::sleep(std::time::Duration::from_millis(200));
-        let mut workers = Vec::new();
-        for id in 0..cfg.n_clients {
-            let wcfg = cfg.clone();
-            let addr = format!("127.0.0.1:{port}");
-            workers.push(std::thread::spawn(move || run_worker(&wcfg, &addr, id).unwrap()));
-        }
-        let report = server.join().unwrap();
-        for w in workers {
-            w.join().unwrap();
-        }
+        let report = crate::testing::run_distributed_localhost(&cfg).unwrap();
         assert_eq!(report.rounds, 3);
         assert_eq!(report.cluster_labels.len(), 2);
+        assert_eq!(report.uploaded_log.len(), 3);
+        assert!(report.uploaded_log.iter().all(|r| r.len() == 2));
     }
 }

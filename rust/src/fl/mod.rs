@@ -1,13 +1,17 @@
-//! The federated-learning runtime: clients, the end-to-end trainer
-//! (Algorithm 1), metrics with byte-accurate communication accounting,
-//! and the in-process / TCP transports.
+//! The federated-learning runtime: clients, the in-process parallel
+//! client pool, the end-to-end trainer (a thin adapter over the unified
+//! [`crate::coordinator::engine::RoundEngine`]), metrics with
+//! byte-accurate communication accounting, and the TCP transport /
+//! multi-process deployment driving the very same engine.
 
 pub mod client;
 pub mod distributed;
 pub mod metrics;
+pub mod pool;
 pub mod trainer;
 pub mod transport;
 
 pub use client::Client;
 pub use metrics::{CommStats, History, RoundRecord};
+pub use pool::InProcessPool;
 pub use trainer::{Trainer, TrainReport};

@@ -1,0 +1,270 @@
+//! The in-process [`ClientPool`]: simulated clients living in this
+//! process, trained **in parallel** on scoped threads.
+//!
+//! Parallelism follows the backend's replication story
+//! ([`crate::backend::BackendLanes`]): the pure-Rust backend is stateless
+//! and `Send`, so the pool holds one instance per worker thread and
+//! chunks the clients across lanes; the XLA backend keeps a single PJRT
+//! runtime per process and is driven serially. Either way the numerics
+//! are identical to the sequential simulator — clients are independent
+//! given the broadcast model, and results are collected in client order —
+//! which `parallel_pool_matches_serial` pins.
+//!
+//! The per-client protocol itself ([`client_train_phase`] /
+//! [`client_update_phase`]) is shared with the TCP worker, so this pool
+//! and [`crate::fl::distributed::TcpClientPool`] are two transports for
+//! the same code path.
+
+use crate::backend::{make_backend_lanes, Backend, BackendLanes, SendBackend};
+use crate::config::{ExperimentConfig, Payload};
+use crate::coordinator::engine::{
+    client_train_phase, client_update_phase, ClientPool, ClientReport, PhaseCfg,
+};
+use crate::data::Dataset;
+use crate::fl::client::Client;
+use crate::sparse::SparseVec;
+use anyhow::{ensure, Context, Result};
+
+pub struct InProcessPool {
+    clients: Vec<Client>,
+    lanes: BackendLanes,
+    /// per-client error-feedback memory (Delta payload only; empty
+    /// otherwise) — the unsent accumulated drift of Qsparse-local-SGD [7]
+    memory: Vec<Vec<f32>>,
+    /// phase-1 reports cached for the phase-2 uploads
+    reports: Vec<SparseVec>,
+    pc: PhaseCfg,
+}
+
+impl InProcessPool {
+    /// Build the pool from one data shard per client. Returns the pool
+    /// and the deterministic initial parameters every client started
+    /// from (the engine's initial global model).
+    pub fn new(cfg: &ExperimentConfig, shards: Vec<Dataset>) -> Result<(Self, Vec<f32>)> {
+        ensure!(
+            shards.len() == cfg.n_clients,
+            "{} shards for {} clients",
+            shards.len(),
+            cfg.n_clients
+        );
+        let want = if cfg.parallel == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.parallel
+        };
+        let mut lanes = make_backend_lanes(cfg, want.min(cfg.n_clients).max(1))
+            .context("creating backend lanes")?;
+        let init = lanes.primary().init_params()?;
+        let clients: Vec<Client> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| Client::new(i, shard, init.clone(), cfg.seed))
+            .collect();
+        let memory = match cfg.payload {
+            Payload::Delta => vec![vec![0.0f32; cfg.d()]; cfg.n_clients],
+            Payload::Grad => Vec::new(),
+        };
+        Ok((
+            InProcessPool {
+                clients,
+                lanes,
+                memory,
+                reports: Vec::new(),
+                pc: PhaseCfg::from_config(cfg),
+            },
+            init,
+        ))
+    }
+
+    pub fn clients(&self) -> &[Client] {
+        &self.clients
+    }
+
+    pub fn client_params(&self, i: usize) -> &[f32] {
+        &self.clients[i].state.params
+    }
+
+    /// Number of clients that train concurrently.
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.n_lanes()
+    }
+
+    /// The PS-side backend (lane 0) — evaluation and server apply —
+    /// without needing the [`ClientPool`] trait in scope.
+    pub fn backend_mut(&mut self) -> &mut dyn Backend {
+        self.lanes.primary()
+    }
+}
+
+impl ClientPool for InProcessPool {
+    fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn train_and_report(&mut self, global: &[f32]) -> Result<Vec<ClientReport>> {
+        let pc = self.pc;
+        let delta = pc.payload == Payload::Delta;
+        let outs = match &mut self.lanes {
+            BackendLanes::Serial(be) => {
+                let mut outs = Vec::with_capacity(self.clients.len());
+                for (i, c) in self.clients.iter_mut().enumerate() {
+                    let mem = if delta { Some(&mut self.memory[i]) } else { None };
+                    outs.push(client_train_phase(c, be.as_mut(), mem, global, &pc)?);
+                }
+                outs
+            }
+            BackendLanes::Parallel(lanes) => parallel_map(
+                &mut self.clients,
+                &mut self.memory,
+                lanes,
+                delta,
+                |_, c, be, mem| client_train_phase(c, be, mem, global, &pc),
+            )?,
+        };
+        self.reports = outs.iter().map(|o| o.report.clone()).collect();
+        Ok(outs)
+    }
+
+    fn exchange(&mut self, requests: Option<&[Vec<u32>]>) -> Result<Vec<SparseVec>> {
+        let pc = self.pc;
+        let delta = pc.payload == Payload::Delta;
+        let reports = std::mem::take(&mut self.reports);
+        ensure!(
+            reports.len() == self.clients.len(),
+            "exchange before train_and_report"
+        );
+        if let Some(reqs) = requests {
+            ensure!(reqs.len() == self.clients.len(), "request count mismatch");
+        }
+        match &mut self.lanes {
+            BackendLanes::Serial(be) => {
+                let mut outs = Vec::with_capacity(self.clients.len());
+                for (i, c) in self.clients.iter_mut().enumerate() {
+                    let mem = if delta { Some(&mut self.memory[i]) } else { None };
+                    let req = requests.map(|r| r[i].as_slice());
+                    outs.push(client_update_phase(c, be.as_mut(), mem, &reports[i], req, &pc)?);
+                }
+                Ok(outs)
+            }
+            BackendLanes::Parallel(lanes) => parallel_map(
+                &mut self.clients,
+                &mut self.memory,
+                lanes,
+                delta,
+                |i, c, be, mem| {
+                    let req = requests.map(|r| r[i].as_slice());
+                    client_update_phase(c, be, mem, &reports[i], req, &pc)
+                },
+            ),
+        }
+    }
+
+    fn backend(&mut self) -> &mut dyn Backend {
+        self.lanes.primary()
+    }
+}
+
+/// Run `f` over every client, chunked across the backend lanes on scoped
+/// threads. Results come back in client order; client i's error-feedback
+/// memory rides along when `delta` is set. With a single lane the work
+/// runs inline on the calling thread.
+fn parallel_map<T, F>(
+    clients: &mut [Client],
+    memory: &mut [Vec<f32>],
+    lanes: &mut [SendBackend],
+    delta: bool,
+    f: F,
+) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize, &mut Client, &mut dyn Backend, Option<&mut Vec<f32>>) -> Result<T> + Sync,
+{
+    let n = clients.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    // one Option slot per client so the Grad payload (no memory) chunks
+    // uniformly with the clients
+    let mut slots: Vec<Option<&mut Vec<f32>>> = if delta {
+        memory.iter_mut().map(Some).collect()
+    } else {
+        (0..n).map(|_| None).collect()
+    };
+    let n_lanes = lanes.len().min(n).max(1);
+    if n_lanes == 1 {
+        let be = &mut lanes[0];
+        let mut out = Vec::with_capacity(n);
+        for (i, (c, slot)) in clients.iter_mut().zip(slots.iter_mut()).enumerate() {
+            out.push(f(i, c, be.as_mut(), slot.take())?);
+        }
+        return Ok(out);
+    }
+    let per = n.div_ceil(n_lanes);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(n_lanes);
+        for (chunk_no, ((cchunk, schunk), be)) in clients
+            .chunks_mut(per)
+            .zip(slots.chunks_mut(per))
+            .zip(lanes.iter_mut())
+            .enumerate()
+        {
+            let base = chunk_no * per;
+            handles.push(s.spawn(move || -> Result<Vec<T>> {
+                let mut out = Vec::with_capacity(cchunk.len());
+                for (off, (c, slot)) in cchunk.iter_mut().zip(schunk.iter_mut()).enumerate() {
+                    out.push(f(base + off, c, be.as_mut(), slot.take())?);
+                }
+                Ok(out)
+            }));
+        }
+        let mut all = Vec::with_capacity(n);
+        for h in handles {
+            all.extend(h.join().expect("client worker thread panicked")?);
+        }
+        Ok(all)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::fl::trainer::Trainer;
+
+    /// Parallel lanes must be bit-for-bit identical to the sequential
+    /// simulator: clients are independent given the broadcast model and
+    /// the (stateless) Rust backend is replicated per lane.
+    #[test]
+    fn parallel_pool_matches_serial() {
+        let run = |parallel: usize| {
+            let mut cfg = ExperimentConfig::mnist_smoke();
+            cfg.parallel = parallel;
+            cfg.rounds = 5;
+            let mut t = Trainer::from_config(&cfg).unwrap();
+            for _ in 0..cfg.rounds {
+                t.run_round().unwrap();
+            }
+            (
+                t.global_params().to_vec(),
+                t.engine().uploaded_log().to_vec(),
+            )
+        };
+        let serial = run(1);
+        let parallel = run(4); // mnist_smoke has 4 clients: one lane each
+        assert_eq!(serial.1, parallel.1, "uploaded index sets must match");
+        assert_eq!(serial.0, parallel.0, "global params must match exactly");
+    }
+
+    #[test]
+    fn lane_count_respects_config() {
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.parallel = 2;
+        let t = Trainer::from_config(&cfg).unwrap();
+        assert_eq!(t.pool().n_lanes(), 2);
+        // never more lanes than clients
+        cfg.parallel = 64;
+        let t = Trainer::from_config(&cfg).unwrap();
+        assert_eq!(t.pool().n_lanes(), cfg.n_clients);
+    }
+}

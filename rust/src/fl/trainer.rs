@@ -1,28 +1,21 @@
-//! The end-to-end FL trainer — Algorithm 1 of the paper.
+//! The end-to-end FL trainer — a thin adapter binding the unified round
+//! protocol ([`crate::coordinator::engine::RoundEngine`]) to the parallel
+//! in-process [`InProcessPool`], plus the evaluation/reporting shell the
+//! examples and benches consume.
 //!
-//! Per global round: broadcast the global model, run H local Adam steps
-//! on every client, collect top-r reports, select the k requested indices
-//! per client (strategy-dependent), upload the sparse updates, aggregate
-//! g~ = sum_i g~_i, apply the server optimizer, update ages/frequencies,
-//! and every M rounds run the DBSCAN reclustering.
+//! All protocol logic (selection, aggregation, error feedback, server
+//! apply, communication accounting, age/frequency bookkeeping, M-periodic
+//! DBSCAN) lives in the engine and is shared bit-for-bit with the TCP
+//! deployment (`fl::distributed`); see `rust/tests/parity.rs`.
 
-use crate::backend::{make_backend, Backend, GlobalState};
-use crate::config::{EvalMode, ExperimentConfig, Payload};
-use crate::coordinator::aggregator::Aggregate;
-use crate::coordinator::server::{ParameterServer, PsConfig};
-use crate::coordinator::strategies::client_select;
-use crate::data::{gather_batch, load_dataset, partition::partition, Dataset};
-use crate::fl::client::Client;
+use crate::config::{EvalMode, ExperimentConfig};
+use crate::coordinator::engine::{eval_dataset, RoundEngine};
+use crate::coordinator::server::ParameterServer;
+use crate::data::{load_dataset, partition::partition, Dataset};
 use crate::fl::metrics::{History, RoundRecord};
+use crate::fl::pool::InProcessPool;
 use crate::util::timer::Profile;
 use anyhow::{Context, Result};
-
-/// Whose parameters an eval pass reads.
-#[derive(Debug, Clone, Copy)]
-enum ParamsSrc {
-    Global,
-    Client(usize),
-}
 
 /// Everything a finished run reports (the examples/benches render these
 /// into the paper's figures).
@@ -41,66 +34,39 @@ pub struct TrainReport {
 
 pub struct Trainer {
     cfg: ExperimentConfig,
-    backend: Box<dyn Backend>,
-    ps: ParameterServer,
-    clients: Vec<Client>,
-    global: GlobalState,
+    engine: RoundEngine,
+    pool: InProcessPool,
     test: Dataset,
     /// per-client test indices matching the client's label set
     /// (EvalMode::Personal)
     personal_test: Vec<Vec<usize>>,
-    /// per-client error-feedback memory (Payload::Delta): unsent
-    /// accumulated drift, the mechanism of Qsparse-local-SGD [7] that
-    /// makes k << d sparsification converge (DESIGN.md §5)
-    memory: Vec<Vec<f32>>,
     /// rounds at which to snapshot the connectivity heatmap
     pub heatmap_rounds: Vec<usize>,
-    pub profile: Profile,
-    history_comm: crate::fl::metrics::CommStats,
 }
 
 impl Trainer {
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
         cfg.validate()?;
-        let mut backend = make_backend(cfg).context("creating backend")?;
         let (train, test) =
             load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
-        let shards = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed);
-        let init = backend.init_params()?;
-        let clients: Vec<Client> = shards
+        let shards: Vec<Dataset> = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed)
             .into_iter()
-            .enumerate()
-            .map(|(i, idx)| Client::new(i, train.subset(&idx), init.clone(), cfg.seed))
+            .map(|idx| train.subset(&idx))
             .collect();
-        let personal_test: Vec<Vec<usize>> = clients
+        let (pool, init) = InProcessPool::new(cfg, shards).context("creating client pool")?;
+        let personal_test: Vec<Vec<usize>> = pool
+            .clients()
             .iter()
             .map(|c| test.indices_with_labels(&c.label_set()))
             .collect();
-        let ps = ParameterServer::new(PsConfig {
-            d: cfg.d(),
-            n_clients: cfg.n_clients,
-            k: cfg.k,
-            strategy: cfg.strategy,
-            recluster_every: cfg.recluster_every,
-            dbscan: cfg.dbscan,
-            merge_rule: cfg.merge_rule,
-        });
-        let memory = match cfg.payload {
-            Payload::Delta => vec![vec![0.0f32; cfg.d()]; cfg.n_clients],
-            Payload::Grad => Vec::new(),
-        };
+        let engine = RoundEngine::new(cfg, init);
         Ok(Trainer {
             cfg: cfg.clone(),
-            memory,
-            global: GlobalState::new(init),
-            backend,
-            ps,
-            clients,
+            engine,
+            pool,
             test,
             personal_test,
             heatmap_rounds: Vec::new(),
-            profile: Profile::new(),
-            history_comm: Default::default(),
         })
     }
 
@@ -108,43 +74,32 @@ impl Trainer {
         &self.cfg
     }
 
+    /// The shared round protocol this trainer drives.
+    pub fn engine(&self) -> &RoundEngine {
+        &self.engine
+    }
+
+    pub fn pool(&self) -> &InProcessPool {
+        &self.pool
+    }
+
     pub fn server(&self) -> &ParameterServer {
-        &self.ps
+        self.engine.ps()
     }
 
     pub fn global_params(&self) -> &[f32] {
-        &self.global.params
+        self.engine.global_params()
     }
 
-    /// Evaluate `params` over a test index list, batched (indices cycle
-    /// to fill the fixed batch size the XLA artifacts require).
-    fn eval_on(&mut self, params_src: ParamsSrc, indices: &[usize]) -> Result<(f32, f32)> {
-        anyhow::ensure!(!indices.is_empty(), "empty eval subset");
-        let b = self.cfg.batch;
-        let n_batches = (indices.len() + b - 1) / b;
-        let params: Vec<f32> = match params_src {
-            ParamsSrc::Global => self.global.params.clone(),
-            ParamsSrc::Client(c) => self.clients[c].state.params.clone(),
-        };
-        let mut loss_sum = 0.0f32;
-        let mut correct = 0usize;
-        let mut counted = 0usize;
-        for i in 0..n_batches {
-            let idx: Vec<usize> =
-                (i * b..(i + 1) * b).map(|j| indices[j % indices.len()]).collect();
-            let (x, y) = gather_batch(&self.test, &idx);
-            let (ls, c) = self.backend.eval(&params, &x, &y)?;
-            loss_sum += ls;
-            correct += c;
-            counted += b;
-        }
-        Ok((correct as f32 / counted as f32, loss_sum / counted as f32))
+    pub fn profile(&self) -> &Profile {
+        self.engine.profile()
     }
 
     /// Global-model accuracy/loss over the full test set.
     pub fn eval_global(&mut self) -> Result<(f32, f32)> {
+        let params = self.engine.global_params().to_vec();
         let idx: Vec<usize> = (0..self.test.len()).collect();
-        self.eval_on(ParamsSrc::Global, &idx)
+        eval_dataset(self.pool.backend_mut(), &params, &self.test, &idx, self.cfg.batch)
     }
 
     /// The paper's Fig. 3/5 metric: mean over clients of their own model
@@ -152,9 +107,11 @@ impl Trainer {
     pub fn eval_personal(&mut self) -> Result<(f32, f32)> {
         let mut accs = Vec::new();
         let mut losses = Vec::new();
-        for c in 0..self.clients.len() {
+        for c in 0..self.pool.clients().len() {
+            let params = self.pool.client_params(c).to_vec();
             let idx = self.personal_test[c].clone();
-            let (a, l) = self.eval_on(ParamsSrc::Client(c), &idx)?;
+            let (a, l) =
+                eval_dataset(self.pool.backend_mut(), &params, &self.test, &idx, self.cfg.batch)?;
             accs.push(a as f64);
             losses.push(l as f64);
         }
@@ -171,131 +128,7 @@ impl Trainer {
     /// One global round (Algorithm 1 lines 3-16). Returns the mean local
     /// training loss.
     pub fn run_round(&mut self) -> Result<f32> {
-        let cfg = &self.cfg;
-        let (h, b, k, d) = (cfg.h, cfg.batch, cfg.k, cfg.d());
-        let n = self.clients.len();
-
-        // ---- local training + reports (lines 4-7)
-        let mut reports = Vec::with_capacity(n);
-        let mut losses = Vec::with_capacity(n);
-        for client in self.clients.iter_mut() {
-            client.state.sync_to(&self.global.params);
-            let out = self
-                .profile
-                .time("client.local_round", || client.local_round(self.backend.as_mut(), h, b))?;
-            losses.push(out.mean_loss);
-            reports.push(out.report);
-        }
-
-        // ---- payload: under Delta each client folds this round's drift
-        // theta_i - theta into its error-feedback memory and reports the
-        // top-r of the *accumulated* unsent update — the Qsparse-local-
-        // SGD [7] mechanism the paper's convergence argument relies on
-        // (DESIGN.md §5). Values in the report are the accumulated drift,
-        // so whatever subset the PS requests carries the full unsent mass
-        // on those coordinates.
-        if cfg.payload == Payload::Delta {
-            for (i, client) in self.clients.iter().enumerate() {
-                let mem = &mut self.memory[i];
-                for (m, (p, g)) in mem
-                    .iter_mut()
-                    .zip(client.state.params.iter().zip(&self.global.params))
-                {
-                    *m += p - g;
-                }
-                reports[i] = self
-                    .profile
-                    .time("client.ef_topr", || crate::sparse::topk_abs_sparse(mem, cfg.r));
-            }
-        }
-
-        // ---- index selection (Algorithm 2 at the PS, or client-side)
-        let requested: Vec<Vec<u32>> = if cfg.strategy.needs_report() {
-            let idx_reports: Vec<Vec<u32>> = reports.iter().map(|r| r.idx.clone()).collect();
-            self.profile.time("ps.select", || self.ps.select_requests(&idx_reports))
-        } else {
-            let mut out = Vec::with_capacity(n);
-            for (client, report) in self.clients.iter_mut().zip(&reports) {
-                out.push(client_select(cfg.strategy, &mut client.rng, &report.idx, d, k));
-            }
-            out
-        };
-
-        // ---- sparse uploads (line 8)
-        let mut agg = Aggregate::new();
-        for i in 0..n {
-            let update = if cfg.strategy.needs_dense_grad() {
-                // rand-k / dense need coordinates outside the top-r report
-                let dense: Vec<f32> = match cfg.payload {
-                    Payload::Delta => self.memory[i].clone(),
-                    Payload::Grad => {
-                        let (xs, ys) = self.clients[i].draw_round_batches(1, b);
-                        self.profile.time("client.dense_grad", || {
-                            self.backend.dense_grad(&self.clients[i].state.params, &xs, &ys)
-                        })?
-                        .0
-                    }
-                };
-                Client::gather_from_grad(&dense, &requested[i])
-            } else {
-                Client::answer_request(&reports[i], &requested[i])
-            };
-            agg.push(update);
-        }
-
-        // ---- error feedback: sent coordinates leave the memory
-        if cfg.payload == Payload::Delta {
-            for i in 0..n {
-                for &j in &requested[i] {
-                    self.memory[i][j as usize] = 0.0;
-                }
-            }
-        }
-
-        // ---- communication accounting (DESIGN.md §6)
-        {
-            let comm = &mut self.history_comm;
-            for req in &requested {
-                comm.update_up += (req.len() * 8) as u64;
-            }
-            if cfg.strategy.needs_report() {
-                comm.report_up += (n * cfg.r * 4) as u64;
-                comm.request_down += (n * k * 4) as u64;
-            }
-            comm.broadcast_down += (n * d * 4) as u64;
-        }
-
-        // ---- aggregate + server update (lines 9-11)
-        match cfg.payload {
-            Payload::Delta => {
-                // FedAvg-style: apply the mean sparse drift directly
-                let update = agg.to_dense(d, 1.0 / n as f32);
-                self.profile.time("ps.apply", || {
-                    for (p, &u) in self.global.params.iter_mut().zip(&update) {
-                        *p += u;
-                    }
-                });
-            }
-            Payload::Grad if cfg.server_opt == "sgd" => {
-                let update = agg.to_dense(d, 1.0);
-                let lr = cfg.lr_server;
-                self.profile.time("ps.apply", || {
-                    for (p, &u) in self.global.params.iter_mut().zip(&update) {
-                        *p -= lr * u;
-                    }
-                });
-            }
-            Payload::Grad => {
-                self.profile.time("ps.apply", || {
-                    self.backend.server_apply(&mut self.global, &agg, 1.0, cfg.lr_server)
-                })?;
-            }
-        }
-
-        // ---- age + frequency bookkeeping (Algorithm 2 lines 7-8 / eq. 2)
-        self.profile.time("ps.record", || self.ps.record_round(&requested));
-
-        Ok(crate::util::mean(&losses.iter().map(|&x| x as f64).collect::<Vec<_>>()) as f32)
+        Ok(self.engine.run_round(&mut self.pool)?.mean_loss)
     }
 
     /// Run the configured number of rounds, producing the full report.
@@ -310,17 +143,14 @@ impl Trainer {
 
             // heatmap snapshots (Fig. 2 / Fig. 4)
             if self.heatmap_rounds.contains(&round) {
-                heatmaps.push((round, self.ps.connectivity()));
+                heatmaps.push((round, self.engine.ps().connectivity()));
             }
-
-            // M-periodic clustering (Algorithm 1 lines 13-16)
-            self.ps.maybe_recluster();
 
             let eval_due = self.cfg.eval_every > 0 && round % self.cfg.eval_every == 0;
             let (test_acc, test_loss) = if eval_due || round == total {
                 let t_eval = std::time::Instant::now();
                 let (a, l) = self.eval_configured()?;
-                self.profile.add("ps.eval", t_eval.elapsed().as_secs_f64());
+                self.engine.profile().add("ps.eval", t_eval.elapsed().as_secs_f64());
                 (Some(a), Some(l))
             } else {
                 (None, None)
@@ -331,8 +161,8 @@ impl Trainer {
                 train_loss,
                 test_acc,
                 test_loss,
-                n_clusters: self.ps.clusters().n_clusters(),
-                uplink_cum: self.history_comm.uplink(),
+                n_clusters: self.engine.ps().clusters().n_clusters(),
+                uplink_cum: self.engine.comm().uplink(),
             });
 
             if let Some(acc) = test_acc {
@@ -340,18 +170,18 @@ impl Trainer {
                     "[{}] round {round}/{total}: loss {train_loss:.4} acc {:.2}% clusters {}",
                     self.cfg.strategy.name(),
                     acc * 100.0,
-                    self.ps.clusters().n_clusters()
+                    self.engine.ps().clusters().n_clusters()
                 );
             }
         }
 
-        history.comm = self.history_comm;
+        history.comm = self.engine.comm();
         history.wall_secs = t0.elapsed().as_secs_f64();
         let final_accuracy = history.final_accuracy();
         Ok(TrainReport {
             history,
             heatmaps,
-            cluster_labels: self.ps.clusters().labels(),
+            cluster_labels: self.engine.ps().clusters().labels(),
             truth_labels: match self.cfg.partition {
                 crate::data::partition::Scheme::PaperPairs => Some(
                     crate::data::partition::paper_pair_truth(self.cfg.n_clients),
@@ -359,7 +189,7 @@ impl Trainer {
                 _ => None,
             },
             final_accuracy,
-            profile: self.profile.snapshot(),
+            profile: self.engine.profile().snapshot(),
         })
     }
 }
@@ -379,5 +209,33 @@ mod tests {
         let last = report.history.rounds.last().unwrap().train_loss;
         assert!(last < first, "loss must decrease: {first} -> {last}");
         assert!(report.history.comm.uplink() > 0);
+    }
+
+    #[test]
+    fn eval_is_unbiased_by_batch_padding() {
+        // a subset whose size is not a batch multiple must produce the
+        // same accuracy as evaluating it at batch sizes that divide it
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.rounds = 2;
+        cfg.test_n = 150; // 150 % 32 != 0: the trailing batch is padded
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        t.run_round().unwrap();
+        let (acc_padded, _) = t.eval_global().unwrap();
+
+        // the same model at batch 25 (divides 150) needs no padding at all
+        let params = t.global_params().to_vec();
+        let idx: Vec<usize> = (0..150).collect();
+        let (acc_exact, _) = crate::coordinator::engine::eval_dataset(
+            t.pool.backend_mut(),
+            &params,
+            &t.test,
+            &idx,
+            25,
+        )
+        .unwrap();
+        assert!(
+            (acc_padded - acc_exact).abs() < 1e-6,
+            "padded eval {acc_padded} != exact eval {acc_exact}"
+        );
     }
 }

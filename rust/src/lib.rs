@@ -5,14 +5,17 @@
 //! as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the parameter-server coordinator: per-cluster
-//!   [`age::AgeVector`]s implementing the eq. (2) protocol, per-client
+//!   [`age::AgeVector`]s implementing the eq. (2) protocol lazily (O(k)
+//!   updates instead of the d-dimensional sweep), per-client
 //!   [`age::FrequencyVector`]s, the eq. (3) similarity matrix, a from-scratch
 //!   [`clustering::dbscan`] implementation, the rAge-k index
 //!   [`coordinator::selection`] (including disjoint assignment inside a
 //!   cluster), sparse aggregation, server-side optimizers, baselines
-//!   (rTop-k / top-k / rand-k / dense), the end-to-end [`fl`] round loop
-//!   with byte-accurate communication accounting, and both in-process and
-//!   TCP transports.
+//!   (rTop-k / top-k / rand-k / dense), and the round protocol implemented
+//!   **once** in [`coordinator::engine::RoundEngine`] with byte-accurate
+//!   communication accounting — driven identically by the parallel
+//!   in-process pool ([`fl::pool::InProcessPool`], scoped-thread client
+//!   training) and the TCP deployment ([`fl::distributed`]).
 //! * **Layer 2** — JAX model graphs AOT-lowered to HLO text
 //!   (`python/compile`), executed from [`runtime`] via the PJRT C API.
 //! * **Layer 1** — Pallas kernels (top-r scan, age sweep, tiled matmul)

@@ -33,6 +33,7 @@ fn train_spec(cmd: &str, about: &str) -> ArgSpec {
         .opt("backend", "auto", "rust | xla | auto")
         .opt("rounds", "0", "global rounds (0 = preset default)")
         .opt("clients", "0", "number of clients (0 = preset)")
+        .opt("parallel", "", "in-process client lanes (empty = preset, 0 = auto, 1 = serial)")
         .opt("seed", "42", "experiment seed")
         .opt("config", "", "JSON config file (overrides preset)")
         .opt("out", "results", "output directory")
@@ -67,6 +68,9 @@ fn build_config(a: &ragek::util::argparse::Args) -> Result<ExperimentConfig> {
     let clients = a.get_usize("clients")?;
     if clients > 0 {
         cfg.n_clients = clients;
+    }
+    if !a.get("parallel").is_empty() {
+        cfg.parallel = a.get_usize("parallel")?;
     }
     cfg.seed = a.get_usize("seed")? as u64;
     cfg.validate()?;
@@ -227,7 +231,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         logging::set_level(logging::Level::Debug);
     }
     let mut cfg = build_config(&a)?;
-    cfg.payload = ragek::config::Payload::Delta; // distributed mode is Delta-only
+    // deployment default: the Delta payload (must match the workers')
+    cfg.payload = ragek::config::Payload::Delta;
     let report = ragek::fl::distributed::run_server(&cfg, a.get_usize("port")? as u16)?;
     println!(
         "serve: {} rounds done, final acc {:.2}%, clusters {:?}",
@@ -249,7 +254,7 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
         logging::set_level(logging::Level::Debug);
     }
     let mut cfg = build_config(&a)?;
-    cfg.payload = ragek::config::Payload::Delta; // match cmd_serve
+    cfg.payload = ragek::config::Payload::Delta; // must match cmd_serve
     ragek::fl::distributed::run_worker(&cfg, a.get("connect"), a.get_usize("id")?)
 }
 

@@ -1,0 +1,202 @@
+//! PJRT execution of the AOT HLO-text artifacts via the `xla` crate —
+//! compiled only under the `xla-runtime` cargo feature (the bindings are
+//! an optional dependency; everything else in the crate, including the
+//! pure-Rust backend and the whole coordinator, builds without them).
+
+use super::read_f32_file;
+use super::{Manifest, ModelManifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// A loaded PJRT runtime for one model's artifact set. Artifacts compile
+/// **lazily on first call** — the CNN graphs take seconds each to compile
+/// single-core, and most drivers touch only 3-4 of the 9 artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    model: ModelManifest,
+    executables: std::sync::Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// cumulative (calls, seconds) per artifact — perf-pass instrumentation
+    pub stats: crate::util::timer::Profile,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("model", &self.model.name)
+            .field(
+                "loaded",
+                &self.executables.lock().unwrap().keys().cloned().collect::<Vec<_>>(),
+            )
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over `model`'s artifact set (lazy
+    /// compilation — see struct docs).
+    pub fn load(artifacts_dir: &str, model_name: &str) -> Result<Self> {
+        let dir = PathBuf::from(artifacts_dir);
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let model = manifest
+            .models
+            .get(model_name)
+            .ok_or_else(|| anyhow!("model {model_name:?} not in manifest"))?
+            .clone();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            model,
+            executables: std::sync::Mutex::new(HashMap::new()),
+            stats: crate::util::timer::Profile::new(),
+        })
+    }
+
+    /// Back-compat alias: load + eagerly compile one artifact.
+    pub fn load_one(artifacts_dir: &str, model_name: &str, artifact: &str) -> Result<Self> {
+        let rt = Self::load(artifacts_dir, model_name)?;
+        rt.ensure_compiled(artifact)?;
+        Ok(rt)
+    }
+
+    /// Compile `name` if it is not resident yet.
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        {
+            if self.executables.lock().unwrap().contains_key(name) {
+                return Ok(());
+            }
+        }
+        let meta = self
+            .model
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        let path = self.dir.join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf-8")?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.stats.add(&format!("compile.{name}"), secs);
+        crate::debug!("runtime: compiled {name} in {secs:.2}s");
+        self.executables.lock().unwrap().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn model(&self) -> &ModelManifest {
+        &self.model
+    }
+
+    /// Initial parameters dumped by the exporter (raw LE f32).
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join(&self.model.init_params);
+        read_f32_file(&path, self.model.d)
+    }
+
+    /// Execute `name` with the given inputs; shapes are checked against
+    /// the manifest; the 1-tuple result is decomposed into output
+    /// literals.
+    pub fn call(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let meta = self
+            .model
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: got {} inputs, manifest says {}",
+                inputs.len(),
+                meta.inputs.len()
+            );
+        }
+        for (i, (lit, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            let n = lit.element_count();
+            let expect: usize = want.shape.iter().product();
+            if n != expect {
+                bail!("{name}: input {i} has {n} elements, manifest says {expect}");
+            }
+        }
+        self.ensure_compiled(name)?;
+        let guard = self.executables.lock().unwrap();
+        let exe = guard
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not compiled"))?;
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetching result: {e}"))?;
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("{name}: untuple: {e}"))?;
+        self.stats.add(name, t0.elapsed().as_secs_f64());
+        if outs.len() != meta.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest says {}",
+                outs.len(),
+                meta.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------- literal helpers
+
+/// f32 slice -> literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = shape.iter().product();
+    if data.len() as i64 != expect {
+        bail!("lit_f32: {} values for shape {shape:?}", data.len());
+    }
+    if shape.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data)
+        .reshape(shape)
+        .map_err(|e| anyhow!("reshape {shape:?}: {e}"))
+}
+
+/// i32 slice -> literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = shape.iter().product();
+    if data.len() as i64 != expect {
+        bail!("lit_i32: {} values for shape {shape:?}", data.len());
+    }
+    if shape.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data)
+        .reshape(shape)
+        .map_err(|e| anyhow!("reshape {shape:?}: {e}"))
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// literal -> Vec<f32>.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
+}
+
+/// literal -> Vec<i32>.
+pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))
+}
+
+/// literal -> f32 scalar.
+pub fn to_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar: {e}"))
+}

@@ -35,6 +35,33 @@ impl Gen {
     }
 }
 
+/// Run a full multi-process-style deployment on localhost threads: bind
+/// an ephemeral port, start the PS on it, connect `cfg.n_clients`
+/// workers, return the PS report. The listener is bound **before** any
+/// worker spawns, so worker joins queue in the accept backlog — no
+/// sleeps, no port races. Shared by the transport integration and
+/// sim/distributed parity tests.
+pub fn run_distributed_localhost(
+    cfg: &crate::config::ExperimentConfig,
+) -> anyhow::Result<crate::fl::distributed::ServeReport> {
+    use crate::fl::distributed::{run_server_on, run_worker};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let port = listener.local_addr()?.port();
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || run_server_on(&server_cfg, listener));
+    let mut workers = Vec::new();
+    for id in 0..cfg.n_clients {
+        let wcfg = cfg.clone();
+        let addr = format!("127.0.0.1:{port}");
+        workers.push(std::thread::spawn(move || run_worker(&wcfg, &addr, id)));
+    }
+    let report = server.join().expect("server thread panicked")?;
+    for w in workers {
+        w.join().expect("worker thread panicked")?;
+    }
+    Ok(report)
+}
+
 /// Run `body` over `cases` generated cases; panics with the case number
 /// and seed on the first failure (re-run with `RAGEK_PROP_SEED=<seed>`).
 pub fn prop_check(name: &str, cases: usize, mut body: impl FnMut(&mut Gen) -> Result<(), String>) {

@@ -1,6 +1,9 @@
 //! Cross-layer numerics: the PJRT-executed HLO artifacts vs the pure-Rust
 //! oracle, on identical inputs (the `mnist_init.bin` parameters dumped at
-//! AOT time). Skips cleanly when `make artifacts` has not run.
+//! AOT time). Skips cleanly when `make artifacts` has not run, and is
+//! compiled only under the `xla-runtime` feature (PJRT bindings).
+
+#![cfg(feature = "xla-runtime")]
 
 use ragek::backend::{Backend, ClientState, GlobalState, RustBackend, XlaBackend};
 use ragek::coordinator::aggregator::Aggregate;
@@ -117,7 +120,7 @@ fn ragek_select_artifact_matches_rust_selection() {
         let sel: Vec<u32> = (0..d as u32).filter(|j| j % 20 != round % 20).collect();
         age_rust.update(&sel);
     }
-    let age_i32: Vec<i32> = age_rust.as_slice().iter().map(|&a| a as i32).collect();
+    let age_i32: Vec<i32> = age_rust.to_vec().into_iter().map(|a| a as i32).collect();
 
     let outs = rt
         .call(

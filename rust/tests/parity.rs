@@ -1,0 +1,63 @@
+//! Sim/distributed parity: the in-process simulator and the TCP
+//! deployment are two transports over the same `RoundEngine` + client
+//! phase functions, so the same config + seed must produce **identical**
+//! per-round uploaded index sets and bit-identical final global
+//! parameters. This is the regression net for the historical drift
+//! between `fl::trainer` and `fl::distributed` (e.g. the worker once
+//! reset its Adam moments every round).
+
+use ragek::config::{ExperimentConfig, Payload};
+use ragek::coordinator::strategies::StrategyKind;
+use ragek::fl::distributed::ServeReport;
+use ragek::fl::trainer::Trainer;
+use ragek::testing::run_distributed_localhost;
+
+fn parity_cfg(strategy: StrategyKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.strategy = strategy;
+    cfg.payload = Payload::Delta; // what the CLI deploys
+    cfg.rounds = 4;
+    cfg.n_clients = 2;
+    cfg.train_n = 200;
+    cfg.test_n = 64;
+    cfg.eval_every = 0;
+    cfg.recluster_every = 2; // exercise reclustering inside the window
+    cfg
+}
+
+fn run_sim(cfg: &ExperimentConfig) -> (Vec<Vec<Vec<u32>>>, Vec<f32>) {
+    let mut t = Trainer::from_config(cfg).unwrap();
+    for _ in 0..cfg.rounds {
+        t.run_round().unwrap();
+    }
+    (t.engine().uploaded_log().to_vec(), t.global_params().to_vec())
+}
+
+fn run_tcp(cfg: &ExperimentConfig) -> ServeReport {
+    run_distributed_localhost(cfg).unwrap()
+}
+
+#[test]
+fn ragek_sim_and_tcp_are_identical() {
+    let cfg = parity_cfg(StrategyKind::RageK);
+    let (sim_log, sim_params) = run_sim(&cfg);
+    let report = run_tcp(&cfg);
+    assert_eq!(
+        report.uploaded_log, sim_log,
+        "per-round requested/uploaded indices must match across transports"
+    );
+    // identical float ops in identical order on both paths -> bit-exact
+    assert_eq!(report.final_params, sim_params, "final global params must match exactly");
+}
+
+#[test]
+fn client_side_strategy_sim_and_tcp_are_identical() {
+    // rTop-k selects *client-side* (from the client's own seeded RNG);
+    // parity additionally proves the RNG streams line up across
+    // deployments
+    let cfg = parity_cfg(StrategyKind::RTopK);
+    let (sim_log, sim_params) = run_sim(&cfg);
+    let report = run_tcp(&cfg);
+    assert_eq!(report.uploaded_log, sim_log);
+    assert_eq!(report.final_params, sim_params);
+}

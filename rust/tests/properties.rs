@@ -2,7 +2,7 @@
 //! substrate — proptest is unavailable offline): coordinator invariants
 //! the paper's protocol depends on.
 
-use ragek::age::AgeVector;
+use ragek::age::{AgeVector, DenseAgeVector};
 use ragek::coordinator::aggregator::Aggregate;
 use ragek::coordinator::selection::{select_disjoint, select_oldest_k};
 use ragek::sparse::{topk_abs_sparse, SparseVec};
@@ -105,7 +105,7 @@ fn eq2_age_update_is_a_partition() {
     prop_check("eq2-partition", 200, |g| {
         let d = g.usize_in(1, 2000);
         let mut age = random_age(g, d);
-        let before: Vec<u32> = age.as_slice().to_vec();
+        let before: Vec<u32> = age.to_vec();
         let k = g.usize_in(1, d);
         let sel = g.vec_u32_distinct(d, k);
         age.update(&sel);
@@ -115,6 +115,74 @@ fn eq2_age_update_is_a_partition() {
             if age.get(j) != want {
                 return Err(format!("age[{j}] = {} want {want}", age.get(j)));
             }
+        }
+        Ok(())
+    });
+}
+
+/// The lazy epoch-offset [`AgeVector`] must agree with the dense eq. (2)
+/// sweep ([`DenseAgeVector`]) under arbitrary interleavings of the
+/// operations the PS performs over a vector's lifetime: per-round
+/// updates, min/max merges on cluster formation (operands at *different*
+/// epochs, exactly what reclustering produces), and resets on splits.
+#[test]
+fn lazy_age_matches_dense_oracle() {
+    prop_check("lazy-age-oracle", 150, |g| {
+        let d = g.usize_in(1, 400);
+        let mut lazy = AgeVector::new(d);
+        let mut dense = DenseAgeVector::new(d);
+        let ops = g.usize_in(1, 30);
+        for _ in 0..ops {
+            match g.usize_in(0, 4) {
+                0 | 1 => {
+                    // eq. (2) round update (the common case)
+                    let k = g.usize_in(1, d);
+                    let sel = g.vec_u32_distinct(d, k);
+                    lazy.update(&sel);
+                    dense.update(&sel);
+                }
+                2 | 3 => {
+                    // merge with a sibling that lived through its own
+                    // (different-length) history
+                    let mut other_lazy = AgeVector::new(d);
+                    let mut other_dense = DenseAgeVector::new(d);
+                    for _ in 0..g.usize_in(0, 8) {
+                        let k = g.usize_in(1, d);
+                        let sel = g.vec_u32_distinct(d, k);
+                        other_lazy.update(&sel);
+                        other_dense.update(&sel);
+                    }
+                    if g.bool() {
+                        lazy.merge_min(&other_lazy);
+                        dense.merge_min(&other_dense);
+                    } else {
+                        lazy.merge_max(&other_lazy);
+                        dense.merge_max(&other_dense);
+                    }
+                }
+                _ => {
+                    // cluster-split reset
+                    lazy.reset();
+                    dense.reset();
+                }
+            }
+            if lazy.to_vec() != dense.as_slice() {
+                return Err(format!(
+                    "lazy {:?} != dense {:?}",
+                    lazy.to_vec(),
+                    dense.as_slice()
+                ));
+            }
+            if lazy.max_age() != dense.max_age() {
+                return Err("max_age mismatch".into());
+            }
+        }
+        // gather (the selection input) agrees on a random index subset
+        let k = g.usize_in(1, d);
+        let idx = g.vec_u32_distinct(d, k);
+        let want: Vec<f32> = idx.iter().map(|&j| dense.get(j as usize) as f32).collect();
+        if lazy.gather(&idx) != want {
+            return Err("gather mismatch".into());
         }
         Ok(())
     });
