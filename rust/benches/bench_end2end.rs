@@ -51,6 +51,59 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // cohort scaling: wall-clock per round should track the cohort size,
+    // not n — only ceil(p * n) clients train/upload per round
+    for (tag, participation) in [
+        ("p=1.0 (cohort 8)", 1.0f64),
+        ("p=0.5 (cohort 4)", 0.5),
+        ("p=0.25 (cohort 2)", 0.25),
+    ] {
+        let mut cfg = ExperimentConfig::mnist_scaled();
+        cfg.strategy = StrategyKind::RageK;
+        cfg.n_clients = 8;
+        cfg.participation = participation;
+        cfg.rounds = 1;
+        cfg.train_n = 2000;
+        cfg.test_n = 256;
+        cfg.eval_every = 0;
+        let mut t = Trainer::from_config(&cfg)?;
+        b.run(&format!("global round n=8 {tag}"), || {
+            t.run_round().unwrap();
+        });
+    }
+
+    // regression check, not a timing: the engine's accounting must scale
+    // broadcast_down with the cohort (m), never with n. (The TCP-side
+    // zero-copy/Sit pins — model_encodes == rounds, wire broadcast bytes
+    // — live in rust/tests/parity.rs, which runs real sockets.)
+    {
+        let rounds = 4usize;
+        let mut cfg = ExperimentConfig::mnist_scaled();
+        cfg.strategy = StrategyKind::RageK;
+        cfg.n_clients = 8;
+        cfg.participation = 0.5;
+        cfg.rounds = rounds;
+        cfg.train_n = 800;
+        cfg.test_n = 128;
+        cfg.eval_every = 0;
+        let mut t = Trainer::from_config(&cfg)?;
+        for _ in 0..rounds {
+            t.run_round()?;
+        }
+        let (m, d) = (cfg.cohort_size() as u64, cfg.d() as u64);
+        assert_eq!(m, 4);
+        let comm = t.engine().comm();
+        assert_eq!(
+            comm.broadcast_down,
+            rounds as u64 * m * 4 * d,
+            "broadcast_down must scale with the cohort, not n"
+        );
+        println!(
+            "cohort regression check OK: broadcast_down {} B over {rounds} rounds = {m}/8 of full",
+            comm.broadcast_down
+        );
+    }
+
     // PS-only cost at CIFAR scale (no compute backend in the loop):
     // selection + ages + aggregation for 6 clients at d=2.5M
     {

@@ -3,6 +3,7 @@
 //! preset + one strategy flag.
 
 use crate::clustering::{DbscanParams, MergeRule};
+use crate::coordinator::scheduler::SchedulerKind;
 use crate::coordinator::strategies::StrategyKind;
 use crate::data::partition::Scheme;
 use crate::data::Corpus;
@@ -53,6 +54,14 @@ pub struct ExperimentConfig {
     pub strategy: StrategyKind,
 
     pub n_clients: usize,
+    /// fraction of clients polled per round (0 < p <= 1; 1.0 = everyone).
+    /// The per-round cohort has ceil(p * n_clients) members; off-cohort
+    /// clients skip the round entirely and their cluster ages keep
+    /// growing per eq. (2).
+    pub participation: f64,
+    /// cohort policy under partial participation (ignored at p = 1.0,
+    /// where every policy selects all clients)
+    pub scheduler: SchedulerKind,
     pub r: usize,
     pub k: usize,
     /// local iterations per global round (paper H)
@@ -97,6 +106,8 @@ impl ExperimentConfig {
             backend: BackendKind::Rust,
             strategy: StrategyKind::RageK,
             n_clients: 10,
+            participation: 1.0,
+            scheduler: SchedulerKind::RoundRobin,
             r: 75,
             k: 10,
             h: 4,
@@ -145,6 +156,8 @@ impl ExperimentConfig {
             backend: BackendKind::Xla,
             strategy: StrategyKind::RageK,
             n_clients: 6,
+            participation: 1.0,
+            scheduler: SchedulerKind::RoundRobin,
             r: 2500,
             k: 100,
             h: 8,               // paper: 100
@@ -199,6 +212,13 @@ impl ExperimentConfig {
         }
     }
 
+    /// Clients polled per round: ceil(participation * n), clamped to
+    /// [1, n] so a round always has at least one participant.
+    pub fn cohort_size(&self) -> usize {
+        let m = (self.participation * self.n_clients as f64).ceil() as usize;
+        m.clamp(1, self.n_clients)
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.k > self.r {
             bail!("k ({}) must be <= r ({})", self.k, self.r);
@@ -208,6 +228,9 @@ impl ExperimentConfig {
         }
         if self.n_clients == 0 || self.rounds == 0 || self.h == 0 {
             bail!("n_clients, rounds and h must be positive");
+        }
+        if !(self.participation > 0.0 && self.participation <= 1.0) {
+            bail!("participation ({}) must be in (0, 1]", self.participation);
         }
         if self.partition == Scheme::PaperPairs && self.n_clients % 2 != 0 {
             bail!("PaperPairs partitioning needs an even client count");
@@ -241,6 +264,8 @@ impl ExperimentConfig {
                 StrategyKind::Dense => "dense",
             }.into())),
             ("n_clients", Json::Num(self.n_clients as f64)),
+            ("participation", Json::Num(self.participation)),
+            ("scheduler", Json::Str(self.scheduler.name().into())),
             ("r", Json::Num(self.r as f64)),
             ("k", Json::Num(self.k as f64)),
             ("h", Json::Num(self.h as f64)),
@@ -306,6 +331,11 @@ impl ExperimentConfig {
             };
         }
         num!(n_clients, "n_clients", usize);
+        num!(participation, "participation", f64);
+        if let Some(s) = j.get("scheduler").and_then(Json::as_str) {
+            c.scheduler = SchedulerKind::parse(s)
+                .with_context(|| format!("unknown scheduler {s:?}"))?;
+        }
         num!(r, "r", usize);
         num!(k, "k", usize);
         num!(h, "h", usize);
@@ -400,6 +430,8 @@ mod tests {
         cfg.partition = Scheme::Dirichlet { alpha: 0.25 };
         cfg.rounds = 7;
         cfg.parallel = 3;
+        cfg.participation = 0.3;
+        cfg.scheduler = SchedulerKind::AgeDebt;
         let j = cfg.to_json();
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.strategy, StrategyKind::RTopK);
@@ -407,6 +439,20 @@ mod tests {
         assert_eq!(back.rounds, 7);
         assert_eq!(back.batch, cfg.batch);
         assert_eq!(back.parallel, 3);
+        assert_eq!(back.participation, 0.3);
+        assert_eq!(back.scheduler, SchedulerKind::AgeDebt);
+    }
+
+    #[test]
+    fn cohort_size_rounds_up_and_clamps() {
+        let mut cfg = ExperimentConfig::mnist_paper(); // 10 clients
+        assert_eq!(cfg.cohort_size(), 10);
+        cfg.participation = 0.5;
+        assert_eq!(cfg.cohort_size(), 5);
+        cfg.participation = 0.31; // ceil(3.1) = 4
+        assert_eq!(cfg.cohort_size(), 4);
+        cfg.participation = 0.01; // never below one client
+        assert_eq!(cfg.cohort_size(), 1);
     }
 
     #[test]
@@ -423,6 +469,13 @@ mod tests {
         let mut c = ExperimentConfig::mnist_paper();
         c.server_opt = "adagrad".into();
         assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::mnist_paper();
+        c.participation = 0.0;
+        assert!(c.validate().is_err());
+        c.participation = 1.5;
+        assert!(c.validate().is_err());
+        c.participation = 0.2;
+        assert!(c.validate().is_ok());
     }
 
     #[test]
@@ -430,6 +483,8 @@ mod tests {
         let j = Json::parse(r#"{"model": "mnist", "strategy": "bogus"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"model": "vgg"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"model": "mnist", "scheduler": "fifo"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
     }
 }

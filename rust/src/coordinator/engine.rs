@@ -30,6 +30,7 @@
 use crate::backend::{Backend, GlobalState};
 use crate::config::{ExperimentConfig, Payload};
 use crate::coordinator::aggregator::Aggregate;
+use crate::coordinator::scheduler::{CohortScheduler, ScheduleCtx};
 use crate::coordinator::server::{ParameterServer, PsConfig};
 use crate::coordinator::strategies::{client_select, StrategyKind};
 use crate::data::{gather_batch, Dataset};
@@ -38,6 +39,7 @@ use crate::fl::metrics::CommStats;
 use crate::sparse::{topk_abs_sparse, SparseVec};
 use crate::util::timer::Profile;
 use anyhow::{ensure, Result};
+use std::collections::VecDeque;
 
 /// What one client hands the PS after its local round (Algorithm 1
 /// lines 4-7): the top-r report and the mean local training loss.
@@ -55,17 +57,23 @@ pub struct ClientReport {
 pub trait ClientPool {
     fn n_clients(&self) -> usize;
 
-    /// Algorithm 1 lines 3-7: broadcast `global`, have every client adopt
-    /// it (local optimizer state persists — `sync_to`, not a reset), run H
-    /// local steps, fold the error-feedback memory under the Delta
-    /// payload, and return the per-client top-r reports.
-    fn train_and_report(&mut self, global: &[f32]) -> Result<Vec<ClientReport>>;
+    /// Algorithm 1 lines 3-7 for the round's **cohort** (sorted, distinct
+    /// client ids): broadcast `global` to the cohort, have each member
+    /// adopt it (local optimizer state persists — `sync_to`, not a
+    /// reset), run H local steps, fold the error-feedback memory under
+    /// the Delta payload, and return the top-r reports **in cohort
+    /// order**. Off-cohort clients must not train, upload, or receive the
+    /// model (the TCP pool sends them a lightweight `Sit` frame instead).
+    fn train_and_report(&mut self, global: &[f32], cohort: &[usize])
+        -> Result<Vec<ClientReport>>;
 
-    /// Algorithm 1 line 8: deliver the PS's per-client index requests
-    /// (`None` for client-side strategies — rTop-k/top-k/rand-k/dense
-    /// select locally) and collect the sparse uploads. Sent coordinates
-    /// leave the error-feedback memory.
-    fn exchange(&mut self, requests: Option<&[Vec<u32>]>) -> Result<Vec<SparseVec>>;
+    /// Algorithm 1 line 8 for the cohort: deliver the PS's index requests
+    /// (`requests[p]` is for client `cohort[p]`; `None` for client-side
+    /// strategies — rTop-k/top-k/rand-k/dense select locally) and collect
+    /// the sparse uploads in cohort order. Sent coordinates leave the
+    /// error-feedback memory.
+    fn exchange(&mut self, requests: Option<&[Vec<u32>]>, cohort: &[usize])
+        -> Result<Vec<SparseVec>>;
 
     /// The PS-side compute backend (server optimizer apply, evaluation).
     /// Kept on the pool so a process never holds more than one PJRT
@@ -73,14 +81,29 @@ pub trait ClientPool {
     fn backend(&mut self) -> &mut dyn Backend;
 }
 
+/// Inverse cohort map: client id -> position into the cohort-aligned
+/// reports/requests/uploads, with `usize::MAX` marking clients that sit
+/// the round out. Shared by the pools and the PS so every layer agrees
+/// on the alignment (cohorts are sorted, distinct ids in `0..n`).
+pub fn cohort_positions(n: usize, cohort: &[usize]) -> Vec<usize> {
+    let mut pos = vec![usize::MAX; n];
+    for (p, &c) in cohort.iter().enumerate() {
+        pos[c] = p;
+    }
+    pos
+}
+
 /// What one engine round reports back to its driver.
 #[derive(Debug)]
 pub struct RoundOutcome {
-    /// mean local training loss across clients
+    /// mean local training loss across this round's cohort
     pub mean_loss: f32,
     /// Some(n_clusters) when the M-periodic DBSCAN ran this round
     pub reclustered: Option<usize>,
     pub n_clusters: usize,
+    /// the clients that participated (sorted; all of them at
+    /// participation = 1.0)
+    pub cohort: Vec<usize>,
 }
 
 /// How many rounds of uploaded-index history the engine retains (parity
@@ -97,9 +120,16 @@ pub struct RoundEngine {
     global: GlobalState,
     comm: CommStats,
     profile: Profile,
-    /// per round, per client: the indices actually uploaded — the most
-    /// recent [`UPLOADED_LOG_CAP`] rounds only
-    uploaded_log: Vec<Vec<Vec<u32>>>,
+    /// per round, per client: the indices actually uploaded (empty for
+    /// off-cohort clients) — the most recent [`UPLOADED_LOG_CAP`] rounds
+    /// only, as a ring (push_back/pop_front; a Vec here cost an O(cap)
+    /// memmove every round once the cap was hit)
+    uploaded_log: VecDeque<Vec<Vec<u32>>>,
+    /// the cohort policy for partial participation
+    scheduler: Box<dyn CohortScheduler>,
+    /// per client: global rounds since it last participated (the poll
+    /// debt the age-debt scheduler consumes)
+    since_polled: Vec<u32>,
 }
 
 impl RoundEngine {
@@ -119,7 +149,9 @@ impl RoundEngine {
             global: GlobalState::new(init_params),
             comm: CommStats::default(),
             profile: Profile::new(),
-            uploaded_log: Vec::new(),
+            uploaded_log: VecDeque::new(),
+            scheduler: cfg.scheduler.build(cfg.seed),
+            since_polled: vec![0; cfg.n_clients],
         }
     }
 
@@ -144,13 +176,17 @@ impl RoundEngine {
         self.ps.round()
     }
 
-    /// Per-round, per-client uploaded index sets — the most recent
+    /// Per-round, per-client uploaded index sets (empty entries for
+    /// clients that sat the round out) — the most recent
     /// [`UPLOADED_LOG_CAP`] rounds (parity/diagnostics).
-    pub fn uploaded_log(&self) -> &[Vec<Vec<u32>>] {
+    pub fn uploaded_log(&self) -> &VecDeque<Vec<Vec<u32>>> {
         &self.uploaded_log
     }
 
-    /// One global round (Algorithm 1 lines 3-16) against `pool`.
+    /// One global round (Algorithm 1 lines 3-16) against `pool`, scoped
+    /// to a scheduler-selected cohort of `cfg.cohort_size()` clients.
+    /// At `participation = 1.0` the cohort is every client and the round
+    /// is bit-for-bit the pre-cohort protocol.
     pub fn run_round(&mut self, pool: &mut dyn ClientPool) -> Result<RoundOutcome> {
         let n = self.cfg.n_clients;
         let (k, r, d) = (self.cfg.k, self.cfg.r, self.cfg.d());
@@ -160,10 +196,32 @@ impl RoundEngine {
             pool.n_clients()
         );
 
+        // ---- cohort selection (partial participation)
+        let m = self.cfg.cohort_size();
+        let cohort = self.scheduler.select(&ScheduleCtx {
+            round: self.ps.round(),
+            n,
+            m,
+            ps: &self.ps,
+            since_polled: &self.since_polled,
+        });
+        ensure!(
+            cohort.len() == m
+                && cohort.windows(2).all(|w| w[0] < w[1])
+                && cohort.iter().all(|&c| c < n),
+            "scheduler {} returned an invalid cohort {cohort:?} (want {m} sorted ids < {n})",
+            self.scheduler.name()
+        );
+
         // ---- broadcast + local training + top-r reports (lines 3-7)
-        let reports =
-            self.profile.time("pool.train", || pool.train_and_report(&self.global.params))?;
-        ensure!(reports.len() == n, "pool returned {} reports for {n} clients", reports.len());
+        let reports = self
+            .profile
+            .time("pool.train", || pool.train_and_report(&self.global.params, &cohort))?;
+        ensure!(
+            reports.len() == m,
+            "pool returned {} reports for a cohort of {m}",
+            reports.len()
+        );
         let mean_loss = crate::util::mean(
             &reports.iter().map(|c| c.mean_loss as f64).collect::<Vec<_>>(),
         ) as f32;
@@ -172,29 +230,41 @@ impl RoundEngine {
         // strategies select inside the pool during the exchange)
         let requests: Option<Vec<Vec<u32>>> = if self.cfg.strategy.needs_report() {
             let idx: Vec<Vec<u32>> = reports.iter().map(|c| c.report.idx.clone()).collect();
-            Some(self.profile.time("ps.select", || self.ps.select_requests(&idx)))
+            Some(self
+                .profile
+                .time("ps.select", || self.ps.select_requests_cohort(&cohort, &idx)))
         } else {
             None
         };
 
         // ---- sparse uploads (line 8)
-        let updates =
-            self.profile.time("pool.exchange", || pool.exchange(requests.as_deref()))?;
-        ensure!(updates.len() == n, "pool returned {} updates for {n} clients", updates.len());
+        let updates = self
+            .profile
+            .time("pool.exchange", || pool.exchange(requests.as_deref(), &cohort))?;
+        ensure!(
+            updates.len() == m,
+            "pool returned {} updates for a cohort of {m}",
+            updates.len()
+        );
         // what each client actually uploaded drives the bookkeeping — for
         // PS-side strategies this equals the request (requested ⊆ report),
-        // for client-side strategies it is the client's own selection
-        let uploaded: Vec<Vec<u32>> = updates.iter().map(|u| u.idx.clone()).collect();
+        // for client-side strategies it is the client's own selection.
+        // Off-cohort clients get an empty entry: a frequency no-op, and a
+        // cluster whose members all sat out ages uniformly (eq. 2).
+        let mut uploaded: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (p, &c) in cohort.iter().enumerate() {
+            uploaded[c] = updates[p].idx.clone();
+        }
 
-        // ---- communication accounting (DESIGN.md §6)
+        // ---- communication accounting (DESIGN.md §6, cohort-scoped)
         for u in &updates {
             self.comm.update_up += (u.len() * 8) as u64;
         }
         if self.cfg.strategy.needs_report() {
-            self.comm.report_up += (n * r * 4) as u64;
-            self.comm.request_down += (n * k * 4) as u64;
+            self.comm.report_up += (m * r * 4) as u64;
+            self.comm.request_down += (m * k * 4) as u64;
         }
-        self.comm.broadcast_down += (n * d * 4) as u64;
+        self.comm.broadcast_down += (m * d * 4) as u64;
 
         // ---- aggregate + server update (lines 9-11)
         let mut agg = Aggregate::new();
@@ -203,8 +273,9 @@ impl RoundEngine {
         }
         match self.cfg.payload {
             Payload::Delta => {
-                // FedAvg-style: apply the mean sparse drift directly
-                let update = agg.to_dense(d, 1.0 / n as f32);
+                // FedAvg-style: apply the mean sparse drift directly,
+                // averaged over the clients that actually uploaded
+                let update = agg.to_dense(d, 1.0 / m as f32);
                 self.profile.time("ps.apply", || {
                     for (p, &u) in self.global.params.iter_mut().zip(&update) {
                         *p += u;
@@ -212,7 +283,11 @@ impl RoundEngine {
                 });
             }
             Payload::Grad if self.cfg.server_opt == "sgd" => {
-                let update = agg.to_dense(d, 1.0);
+                // unbiased cohort estimate of the full-participation sum:
+                // scale the m-client aggregate by n/m (exactly 1.0 at full
+                // participation), so the server step magnitude does not
+                // shrink with the participation knob
+                let update = agg.to_dense(d, n as f32 / m as f32);
                 let lr = self.cfg.lr_server;
                 self.profile.time("ps.apply", || {
                     for (p, &u) in self.global.params.iter_mut().zip(&update) {
@@ -222,7 +297,8 @@ impl RoundEngine {
             }
             Payload::Grad => {
                 let t0 = std::time::Instant::now();
-                pool.backend().server_apply(&mut self.global, &agg, 1.0, self.cfg.lr_server)?;
+                let scale = n as f32 / m as f32; // see the sgd branch note
+                pool.backend().server_apply(&mut self.global, &agg, scale, self.cfg.lr_server)?;
                 self.profile.add("ps.apply", t0.elapsed().as_secs_f64());
             }
         }
@@ -231,15 +307,22 @@ impl RoundEngine {
         // and the M-periodic clustering (Algorithm 1 lines 13-16)
         self.profile.time("ps.record", || self.ps.record_round(&uploaded));
         let reclustered = self.ps.maybe_recluster();
-        self.uploaded_log.push(uploaded);
+        self.uploaded_log.push_back(uploaded);
         if self.uploaded_log.len() > UPLOADED_LOG_CAP {
-            self.uploaded_log.remove(0);
+            self.uploaded_log.pop_front();
+        }
+        for s in self.since_polled.iter_mut() {
+            *s = s.saturating_add(1);
+        }
+        for &c in &cohort {
+            self.since_polled[c] = 0;
         }
 
         Ok(RoundOutcome {
             mean_loss,
             reclustered,
             n_clusters: self.ps.clusters().n_clusters(),
+            cohort,
         })
     }
 }
@@ -404,10 +487,16 @@ mod tests {
             self.n
         }
 
-        fn train_and_report(&mut self, _global: &[f32]) -> Result<Vec<ClientReport>> {
+        fn train_and_report(
+            &mut self,
+            _global: &[f32],
+            cohort: &[usize],
+        ) -> Result<Vec<ClientReport>> {
+            assert!(cohort.iter().all(|&c| c < self.n));
             // client i reports indices 10i..10i+r by descending magnitude
-            Ok((0..self.n)
-                .map(|i| {
+            Ok(cohort
+                .iter()
+                .map(|&i| {
                     let idx: Vec<u32> = (0..40u32).map(|j| 10 * i as u32 + j).collect();
                     let val: Vec<f32> = (0..40).map(|j| 40.0 - j as f32).collect();
                     ClientReport {
@@ -418,7 +507,11 @@ mod tests {
                 .collect())
         }
 
-        fn exchange(&mut self, requests: Option<&[Vec<u32>]>) -> Result<Vec<SparseVec>> {
+        fn exchange(
+            &mut self,
+            requests: Option<&[Vec<u32>]>,
+            cohort: &[usize],
+        ) -> Result<Vec<SparseVec>> {
             self.last_requests = requests.map(|r| r.to_vec());
             Ok(match requests {
                 Some(reqs) => reqs
@@ -427,8 +520,9 @@ mod tests {
                         SparseVec::new(req.clone(), req.iter().map(|&j| j as f32).collect())
                     })
                     .collect(),
-                None => (0..self.n)
-                    .map(|i| {
+                None => cohort
+                    .iter()
+                    .map(|&i| {
                         let idx: Vec<u32> = (0..self.k as u32).map(|j| 10 * i as u32 + j).collect();
                         SparseVec::new(idx.clone(), vec![1.0; idx.len()])
                     })
@@ -461,10 +555,14 @@ mod tests {
         let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
         let out = engine.run_round(&mut pool).unwrap();
         assert_eq!(out.mean_loss, 1.0);
+        assert_eq!(out.cohort, vec![0, 1], "full participation polls everyone");
         assert_eq!(engine.round(), 1);
         // rAge-k: requests went out and equal the uploads
         let reqs = pool.last_requests.clone().unwrap();
-        assert_eq!(engine.uploaded_log().to_vec(), vec![reqs.clone()]);
+        assert_eq!(
+            engine.uploaded_log().iter().cloned().collect::<Vec<_>>(),
+            vec![reqs.clone()]
+        );
         assert!(reqs.iter().all(|r| r.len() == cfg.k));
         // byte accounting matches the DESIGN.md formulas for one round
         let comm = engine.comm();
@@ -483,6 +581,57 @@ mod tests {
         for (p, e) in engine.global_params().iter().zip(&expect) {
             assert!((p - e).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn partial_participation_scopes_the_round_to_the_cohort() {
+        let mut cfg = smoke_cfg();
+        cfg.n_clients = 4;
+        cfg.participation = 0.5; // m = 2 with the default round-robin
+        let d = cfg.d();
+        let mut pool = FakePool {
+            n: cfg.n_clients,
+            k: cfg.k,
+            backend: crate::backend::RustBackend::new(cfg.r, cfg.lr_client, cfg.seed),
+            last_requests: None,
+        };
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+
+        let out1 = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out1.cohort, vec![0, 1]);
+        assert_eq!(out1.mean_loss, 1.0);
+        let out2 = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out2.cohort, vec![2, 3], "round-robin rotates the window");
+
+        // uploads recorded only for cohort members; absentees are empty
+        let log = engine.uploaded_log();
+        assert_eq!(log[0][0].len(), cfg.k);
+        assert_eq!(log[0][1].len(), cfg.k);
+        assert!(log[0][2].is_empty() && log[0][3].is_empty());
+        assert!(log[1][0].is_empty() && log[1][1].is_empty());
+        assert_eq!(log[1][2].len(), cfg.k);
+
+        // byte accounting scales with the cohort (m = 2), not n = 4
+        let comm = engine.comm();
+        let (m, rounds) = (2u64, 2u64);
+        assert_eq!(comm.report_up, rounds * m * 4 * cfg.r as u64);
+        assert_eq!(comm.update_up, rounds * m * 8 * cfg.k as u64);
+        assert_eq!(comm.request_down, rounds * m * 4 * cfg.k as u64);
+        assert_eq!(comm.broadcast_down, rounds * m * 4 * d as u64);
+
+        // eq. (2) under absence: client 0 uploaded index 0 in round 1 and
+        // sat out round 2, so that index aged exactly once; index 9 (never
+        // uploaded) aged both rounds
+        let a0 = engine.ps().clusters().age_of_client(0);
+        assert_eq!(a0.get(0), 1);
+        assert_eq!(a0.get(9), 2);
+
+        // Delta payload: the global moved by the mean over the m = 2
+        // uploaders. Round 1: clients 0/1 upload indices 0..8 / 10..18
+        // (value = index); round 2: clients 2/3 upload 20..28 / 30..38.
+        assert!((engine.global_params()[10] - 10.0 / 2.0).abs() < 1e-6);
+        assert!((engine.global_params()[20] - 20.0 / 2.0).abs() < 1e-6);
+        assert_eq!(engine.global_params()[9], 0.0);
     }
 
     #[test]

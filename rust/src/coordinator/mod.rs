@@ -4,6 +4,9 @@
 //!   Algorithm 1 implemented once, driven identically by the in-process
 //!   simulator and the TCP deployment through the [`engine::ClientPool`]
 //!   abstraction.
+//! * [`scheduler`] — cohort selection under partial participation:
+//!   round-robin, seeded uniform random, and the age-debt policy that
+//!   polls the stalest clients first.
 //! * [`selection`] — Algorithm 2's PS side: age-ranked choice of k indices
 //!   out of each client's top-r report, with disjoint assignment across
 //!   the members of a cluster.
@@ -15,10 +18,12 @@
 
 pub mod aggregator;
 pub mod engine;
+pub mod scheduler;
 pub mod selection;
 pub mod server;
 pub mod strategies;
 
 pub use engine::{ClientPool, RoundEngine};
+pub use scheduler::{CohortScheduler, SchedulerKind};
 pub use server::ParameterServer;
 pub use strategies::StrategyKind;

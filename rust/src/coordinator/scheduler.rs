@@ -1,0 +1,284 @@
+//! Cohort scheduling for partial participation: which clients the PS
+//! polls each round.
+//!
+//! Under `participation < 1.0` the engine selects a **cohort** of
+//! `ceil(participation * n)` clients per round and drives the protocol
+//! only for them; everyone else skips the round entirely (no broadcast,
+//! no training, no upload) and their cluster's age vector simply keeps
+//! growing per eq. (2) — absent clients are *maximally stale*, which is
+//! exactly the signal the [`AgeDebt`] policy feeds back into selection.
+//! This is the cross-device regime of "Timely Communication in Federated
+//! Learning" (Buyukates & Ulukus) and "Balancing Client Participation in
+//! Federated Learning Using AoI" (Javani & Wang): age debt drives who
+//! participates next.
+//!
+//! Policies are pluggable behind [`CohortScheduler`]; all three return
+//! the cohort **sorted ascending** so uploads/requests stay in stable
+//! client order (the determinism the sim/TCP parity tests pin). At
+//! `participation = 1.0` every policy degenerates to "all clients", so
+//! full-participation runs are bit-for-bit identical to the
+//! pre-scheduler engine.
+
+use crate::coordinator::server::ParameterServer;
+use crate::util::rng::Rng;
+
+/// Which cohort policy the engine runs (config/CLI surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Deterministic rotation: a sliding window over client ids. The
+    /// default — with full participation it is the identity schedule.
+    RoundRobin,
+    /// Uniformly random m-subset per round (seeded from the experiment
+    /// seed; deterministic across transports).
+    UniformRandom,
+    /// Age-aware: rank clients by the staleness of their cluster's age
+    /// vector (`max_age + mean_age`) plus the rounds since the client
+    /// itself was last polled; oldest first.
+    AgeDebt,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "round-robin" | "roundrobin" | "rr" => SchedulerKind::RoundRobin,
+            "random" | "uniform" | "uniform-random" => SchedulerKind::UniformRandom,
+            "age-debt" | "agedebt" | "age" => SchedulerKind::AgeDebt,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::RoundRobin => "round-robin",
+            SchedulerKind::UniformRandom => "random",
+            SchedulerKind::AgeDebt => "age-debt",
+        }
+    }
+
+    /// Instantiate the policy. `seed` feeds the stochastic policies so
+    /// both transports of the same experiment draw identical cohorts.
+    pub fn build(self, seed: u64) -> Box<dyn CohortScheduler> {
+        match self {
+            SchedulerKind::RoundRobin => Box::new(RoundRobin { cursor: 0 }),
+            SchedulerKind::UniformRandom => {
+                // offset the stream tag so the scheduler never aliases the
+                // client RNGs forked from the same experiment seed
+                Box::new(UniformRandom { rng: Rng::new(seed ^ 0x5EED_5C4E_D01E_u64) })
+            }
+            SchedulerKind::AgeDebt => Box::new(AgeDebt),
+        }
+    }
+}
+
+/// Everything a policy may look at when picking the round's cohort.
+pub struct ScheduleCtx<'a> {
+    /// rounds completed so far (the cohort is for round `round + 1`)
+    pub round: usize,
+    /// total number of clients
+    pub n: usize,
+    /// cohort size to return (1 <= m <= n)
+    pub m: usize,
+    /// PS state: cluster membership and per-cluster age vectors
+    pub ps: &'a ParameterServer,
+    /// per client: global rounds since it last participated
+    pub since_polled: &'a [u32],
+}
+
+/// A cohort policy. Must return exactly `ctx.m` distinct client ids in
+/// `0..ctx.n`, **sorted ascending** (the engine validates this).
+pub trait CohortScheduler: Send {
+    fn name(&self) -> &'static str;
+    fn select(&mut self, ctx: &ScheduleCtx) -> Vec<usize>;
+}
+
+/// Sliding-window rotation over client ids.
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl CohortScheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn select(&mut self, ctx: &ScheduleCtx) -> Vec<usize> {
+        let mut out: Vec<usize> = (0..ctx.m).map(|i| (self.cursor + i) % ctx.n).collect();
+        self.cursor = (self.cursor + ctx.m) % ctx.n;
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Seeded uniform m-subset per round.
+pub struct UniformRandom {
+    rng: Rng,
+}
+
+impl CohortScheduler for UniformRandom {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn select(&mut self, ctx: &ScheduleCtx) -> Vec<usize> {
+        let mut out = self.rng.choose_k(ctx.n, ctx.m);
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Oldest-first: clients whose cluster ages are stalest — plus the
+/// client's own time since last poll — go first. Ties resolve to the
+/// smaller client id, so the policy is fully deterministic.
+pub struct AgeDebt;
+
+impl CohortScheduler for AgeDebt {
+    fn name(&self) -> &'static str {
+        "age-debt"
+    }
+
+    /// Score = cluster staleness (`max_age + mean_age`, the eq. 2
+    /// signal) + the client's own rounds-since-last-poll. The cluster
+    /// term costs an O(d) sweep, so it is memoized per **cluster** —
+    /// members share the age vector — keeping the round's scheduling
+    /// cost at O(n_clusters * d), not O(n * d). For strategies that keep
+    /// no age state the term is zero and the policy degenerates to
+    /// longest-unpolled-first.
+    fn select(&mut self, ctx: &ScheduleCtx) -> Vec<usize> {
+        let clusters = ctx.ps.clusters();
+        let mut cluster_term: Vec<Option<f64>> = vec![None; clusters.n_clusters()];
+        let scores: Vec<f64> = (0..ctx.n)
+            .map(|i| {
+                let cid = clusters.cluster_of(i);
+                let term = *cluster_term[cid].get_or_insert_with(|| {
+                    let age = clusters.age_of_cluster(cid);
+                    age.max_age() as f64 + age.mean_age()
+                });
+                term + ctx.since_polled[i] as f64
+            })
+            .collect();
+        let mut ids: Vec<usize> = (0..ctx.n).collect();
+        ids.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a]).expect("age scores are finite").then(a.cmp(&b))
+        });
+        ids.truncate(ctx.m);
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::{DbscanParams, MergeRule};
+    use crate::coordinator::server::PsConfig;
+    use crate::coordinator::strategies::StrategyKind;
+
+    fn ps(n: usize) -> ParameterServer {
+        ParameterServer::new(PsConfig {
+            d: 32,
+            n_clients: n,
+            k: 2,
+            strategy: StrategyKind::RageK,
+            recluster_every: 0,
+            dbscan: DbscanParams::default(),
+            merge_rule: MergeRule::Min,
+        })
+    }
+
+    fn ctx<'a>(ps: &'a ParameterServer, since: &'a [u32], m: usize) -> ScheduleCtx<'a> {
+        ScheduleCtx { round: 0, n: since.len(), m, ps, since_polled: since }
+    }
+
+    #[test]
+    fn round_robin_rotates_and_covers_everyone() {
+        let server = ps(5);
+        let since = [0u32; 5];
+        let mut s = RoundRobin { cursor: 0 };
+        let c1 = s.select(&ctx(&server, &since, 2));
+        let c2 = s.select(&ctx(&server, &since, 2));
+        let c3 = s.select(&ctx(&server, &since, 2));
+        assert_eq!(c1, vec![0, 1]);
+        assert_eq!(c2, vec![2, 3]);
+        assert_eq!(c3, vec![0, 4]); // wraps — sorted ascending
+        let all: std::collections::HashSet<usize> =
+            c1.into_iter().chain(c2).chain(c3).collect();
+        assert_eq!(all.len(), 5, "3 windows of 2 cover all 5 clients");
+    }
+
+    #[test]
+    fn uniform_random_is_seeded_sorted_and_distinct() {
+        let server = ps(8);
+        let since = [0u32; 8];
+        let draw = |seed: u64| {
+            let mut s = SchedulerKind::UniformRandom.build(seed);
+            (0..4).map(|_| s.select(&ctx(&server, &since, 3))).collect::<Vec<_>>()
+        };
+        let a = draw(7);
+        let b = draw(7);
+        assert_eq!(a, b, "same seed, same cohorts");
+        for cohort in &a {
+            assert_eq!(cohort.len(), 3);
+            assert!(cohort.windows(2).all(|w| w[0] < w[1]), "sorted + distinct: {cohort:?}");
+            assert!(cohort.iter().all(|&c| c < 8));
+        }
+        assert_ne!(draw(8), a, "different seed must differ");
+    }
+
+    #[test]
+    fn age_debt_polls_longest_unpolled_first() {
+        // fresh PS: every cluster age is zero, so poll debt decides alone
+        let server = ps(4);
+        let since = [3u32, 9, 1, 9];
+        let mut s = AgeDebt;
+        assert_eq!(s.select(&ctx(&server, &since, 1)), vec![1], "tie 1-vs-3 -> smaller id");
+        assert_eq!(s.select(&ctx(&server, &since, 2)), vec![1, 3]);
+        assert_eq!(s.select(&ctx(&server, &since, 3)), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn age_debt_prefers_stale_clusters() {
+        // age clients 0/1's clusters to zero every round while 2/3 go
+        // unserved: their age debt dominates equal poll debt
+        let mut server = ps(4);
+        for _ in 0..6 {
+            let req = server.select_requests(&[
+                vec![1, 2, 3],
+                vec![4, 5, 6],
+                vec![7, 8, 9],
+                vec![10, 11, 12],
+            ]);
+            // clients 2 and 3 never actually upload
+            server.record_round(&[req[0].clone(), req[1].clone(), Vec::new(), Vec::new()]);
+        }
+        let since = [0u32; 4];
+        let mut s = AgeDebt;
+        assert_eq!(s.select(&ctx(&server, &since, 2)), vec![2, 3]);
+    }
+
+    #[test]
+    fn full_participation_is_the_identity_for_every_policy() {
+        let server = ps(6);
+        let since = [2u32, 0, 5, 1, 0, 7];
+        for kind in
+            [SchedulerKind::RoundRobin, SchedulerKind::UniformRandom, SchedulerKind::AgeDebt]
+        {
+            let mut s = kind.build(42);
+            assert_eq!(
+                s.select(&ctx(&server, &since, 6)),
+                (0..6).collect::<Vec<_>>(),
+                "{} at m = n must select everyone in order",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in
+            [SchedulerKind::RoundRobin, SchedulerKind::UniformRandom, SchedulerKind::AgeDebt]
+        {
+            assert_eq!(SchedulerKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(SchedulerKind::parse("fifo"), None);
+    }
+}

@@ -56,23 +56,49 @@ impl ParameterServer {
     /// indices the PS requests. Only meaningful for the rAge-k kinds.
     /// Reports are magnitude-ordered index lists, one per client.
     pub fn select_requests(&self, reports: &[Vec<u32>]) -> Vec<Vec<u32>> {
-        assert_eq!(reports.len(), self.cfg.n_clients);
+        let cohort: Vec<usize> = (0..self.cfg.n_clients).collect();
+        self.select_requests_cohort(&cohort, reports)
+    }
+
+    /// [`Self::select_requests`] scoped to a participation cohort:
+    /// `reports[p]` is the report of client `cohort[p]` and the returned
+    /// requests are aligned the same way. Inside a cluster only the
+    /// *participating* members coordinate disjointly this round — an
+    /// absent sibling uploads nothing, so there is nothing to be disjoint
+    /// from. With the full cohort this is exactly the old behavior.
+    pub fn select_requests_cohort(
+        &self,
+        cohort: &[usize],
+        reports: &[Vec<u32>],
+    ) -> Vec<Vec<u32>> {
+        assert_eq!(cohort.len(), reports.len());
         assert!(self.cfg.strategy.needs_report());
+        // client id -> cohort position (MAX = off-cohort)
+        let pos = crate::coordinator::engine::cohort_positions(self.cfg.n_clients, cohort);
         let disjoint = self.cfg.strategy == StrategyKind::RageK;
-        let mut out: Vec<Vec<u32>> = vec![Vec::new(); reports.len()];
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); cohort.len()];
         for cluster in 0..self.clusters.n_clusters() {
-            let members = self.clusters.members_of(cluster).to_vec();
+            let members: Vec<usize> = self
+                .clusters
+                .members_of(cluster)
+                .iter()
+                .copied()
+                .filter(|&m| pos[m] != usize::MAX)
+                .collect();
+            if members.is_empty() {
+                continue; // cluster sits this round; its ages keep growing
+            }
             let age = self.clusters.age_of_cluster(cluster);
             if disjoint && members.len() > 1 {
                 let member_reports: Vec<&[u32]> =
-                    members.iter().map(|&m| reports[m].as_slice()).collect();
+                    members.iter().map(|&m| reports[pos[m]].as_slice()).collect();
                 let sels = select_disjoint(age, &member_reports, self.cfg.k);
                 for (m, sel) in members.iter().zip(sels) {
-                    out[*m] = sel;
+                    out[pos[*m]] = sel;
                 }
             } else {
                 for &m in &members {
-                    out[m] = select_oldest_k(age, &reports[m], self.cfg.k);
+                    out[pos[m]] = select_oldest_k(age, &reports[pos[m]], self.cfg.k);
                 }
             }
         }
@@ -81,7 +107,12 @@ impl ParameterServer {
 
     /// Commit a completed round: frequency bookkeeping for every client
     /// and the eq. (2) sweep for every cluster (union of its members'
-    /// requested indices). `requested[i]` is what client i uploaded.
+    /// requested indices). `requested[i]` is what client i uploaded —
+    /// **empty for clients off this round's cohort**, which is exactly
+    /// right: an empty record is a frequency no-op, and a cluster whose
+    /// members all sat out gets an empty union, so `update_ages` bumps
+    /// its epoch and every index ages by one (absent clients' staleness
+    /// keeps growing, the signal the age-debt scheduler consumes).
     pub fn record_round(&mut self, requested: &[Vec<u32>]) {
         assert_eq!(requested.len(), self.cfg.n_clients);
         for (f, req) in self.freqs.iter_mut().zip(requested) {

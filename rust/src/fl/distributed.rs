@@ -27,15 +27,18 @@
 use crate::backend::{make_backend, Backend};
 use crate::config::{ExperimentConfig, Payload};
 use crate::coordinator::engine::{
-    client_train_phase, client_update_phase, eval_dataset, ClientPool, ClientReport, PhaseCfg,
-    RoundEngine,
+    client_train_phase, client_update_phase, cohort_positions, eval_dataset, ClientPool,
+    ClientReport, PhaseCfg, RoundEngine,
 };
 use crate::data::{load_dataset, partition::partition};
 use crate::fl::client::Client;
-use crate::fl::transport::{recv, send, Msg};
+use crate::fl::metrics::CommStats;
+use crate::fl::transport::{encode_model_frame, recv, send, Msg};
 use crate::sparse::SparseVec;
 use anyhow::{bail, Context, Result};
+use std::io::Write;
 use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
 
 /// PS-side summary of a distributed run.
 #[derive(Debug)]
@@ -45,17 +48,35 @@ pub struct ServeReport {
     pub cluster_labels: Vec<usize>,
     /// final global model (sim/distributed parity checks)
     pub final_params: Vec<f32>,
-    /// per round, per client: the uploaded index sets
+    /// per round, per client: the uploaded index sets (empty entries for
+    /// clients off that round's cohort)
     pub uploaded_log: Vec<Vec<Vec<u32>>>,
+    /// the engine's byte-accurate communication accounting
+    pub comm: CommStats,
+    /// how many times the PS serialized a `Model` frame — the zero-copy
+    /// broadcast pin: exactly one per round, however many workers
+    pub model_encodes: u64,
 }
 
 /// The sockets-backed [`ClientPool`]: one TCP stream per remote worker,
 /// indexed by client id. Owns the PS-side backend (server optimizer
 /// apply + evaluation).
+///
+/// Broadcast/collect is **concurrent** — one scoped thread per cohort
+/// stream, so a slow worker overlaps with its peers instead of
+/// serializing the round in client order — and the model broadcast is
+/// **zero-copy**: the
+/// `Model` frame is encoded once per round into an `Arc<[u8]>` and the
+/// same bytes are written to every cohort stream. Workers outside the
+/// round's cohort receive a 13-byte [`Msg::Sit`] frame instead of the
+/// d-vector, so downlink scales with the cohort, not with n.
 pub struct TcpClientPool {
     streams: Vec<TcpStream>,
     backend: Box<dyn Backend>,
     round: u32,
+    /// `Model` frame serializations so far (one per round — pinned by
+    /// tests via [`ServeReport::model_encodes`])
+    model_encodes: u64,
 }
 
 impl TcpClientPool {
@@ -73,24 +94,50 @@ impl TcpClientPool {
         let mut joined = 0;
         while joined < cfg.n_clients {
             let (mut s, peer) = listener.accept()?;
-            match recv(&mut s)? {
-                Msg::Join { client_id } => {
+            match recv(&mut s) {
+                Ok(Msg::Join { client_id }) => {
                     let id = client_id as usize;
                     if id >= cfg.n_clients || slots[id].is_some() {
+                        let _ = send(&mut s, &Msg::Shutdown);
+                        Self::shutdown_joined(&mut slots);
                         bail!("bad/duplicate client id {id} from {peer}");
                     }
                     crate::info!("serve: client {id} joined from {peer}");
                     slots[id] = Some(s);
                     joined += 1;
                 }
-                other => bail!("expected Join, got {other:?}"),
+                Ok(other) => {
+                    let _ = send(&mut s, &Msg::Shutdown);
+                    Self::shutdown_joined(&mut slots);
+                    bail!("expected Join, got {other:?}");
+                }
+                Err(e) => {
+                    Self::shutdown_joined(&mut slots);
+                    return Err(e.context(format!("recv Join from {peer}")));
+                }
             }
         }
         Ok(TcpClientPool {
             streams: slots.into_iter().map(|s| s.unwrap()).collect(),
             backend: make_backend(cfg)?,
             round: 0,
+            model_encodes: 0,
         })
+    }
+
+    /// Error path of [`Self::accept`]: a bad join must not leave every
+    /// already-accepted worker blocked on a model broadcast that will
+    /// never come — tell them training is over (best effort; a worker
+    /// that died anyway is no reason to skip the rest).
+    fn shutdown_joined(slots: &mut [Option<TcpStream>]) {
+        for s in slots.iter_mut().flatten() {
+            let _ = send(s, &Msg::Shutdown);
+        }
+    }
+
+    /// `Model` frame serializations so far (exactly one per round).
+    pub fn model_encodes(&self) -> u64 {
+        self.model_encodes
     }
 
     /// Tell every worker training is over.
@@ -107,38 +154,84 @@ impl ClientPool for TcpClientPool {
         self.streams.len()
     }
 
-    fn train_and_report(&mut self, global: &[f32]) -> Result<Vec<ClientReport>> {
+    fn train_and_report(
+        &mut self,
+        global: &[f32],
+        cohort: &[usize],
+    ) -> Result<Vec<ClientReport>> {
         self.round += 1;
         let round = self.round;
-        for s in self.streams.iter_mut() {
-            send(s, &Msg::Model { round, params: global.to_vec() })?;
-        }
-        let mut out = Vec::with_capacity(self.streams.len());
-        for s in self.streams.iter_mut() {
-            match recv(s)? {
-                Msg::Report { report, mean_loss, round: r, .. } if r == round => {
-                    out.push(ClientReport { report, mean_loss });
-                }
-                other => bail!("round {round}: expected Report, got {other:?}"),
+        let pos = cohort_positions(self.streams.len(), cohort);
+        // off-cohort first, inline: a 13-byte Sit per absent worker keeps
+        // its round counter in sync without the d-vector — no point
+        // spawning a thread for a tiny recv-less write (in the
+        // cross-device regime most streams are off-cohort)
+        for (i, stream) in self.streams.iter_mut().enumerate() {
+            if pos[i] == usize::MAX {
+                send(stream, &Msg::Sit { round })?;
             }
         }
-        Ok(out)
+        // zero-copy broadcast: serialize the d-vector frame once, write
+        // the same bytes to every cohort stream
+        let frame: Arc<[u8]> = encode_model_frame(round, global).into();
+        self.model_encodes += 1;
+        // one thread per cohort stream: a slow worker's local training
+        // overlaps its peers' instead of serializing the round in client
+        // order
+        std::thread::scope(|scope| -> Result<Vec<ClientReport>> {
+            let mut handles = Vec::with_capacity(cohort.len());
+            for (i, stream) in self.streams.iter_mut().enumerate() {
+                if pos[i] == usize::MAX {
+                    continue;
+                }
+                let frame = Arc::clone(&frame);
+                handles.push(scope.spawn(move || -> Result<ClientReport> {
+                    stream.write_all(&frame).context("send model frame")?;
+                    match recv(stream)? {
+                        Msg::Report { report, mean_loss, round: r, .. } if r == round => {
+                            Ok(ClientReport { report, mean_loss })
+                        }
+                        other => bail!("round {round}: expected Report, got {other:?}"),
+                    }
+                }));
+            }
+            // joining in stream order = ascending client id = cohort order
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("stream thread panicked"))
+                .collect()
+        })
     }
 
-    fn exchange(&mut self, requests: Option<&[Vec<u32>]>) -> Result<Vec<SparseVec>> {
+    fn exchange(
+        &mut self,
+        requests: Option<&[Vec<u32>]>,
+        cohort: &[usize],
+    ) -> Result<Vec<SparseVec>> {
         let round = self.round;
-        let mut updates = Vec::with_capacity(self.streams.len());
-        for (i, s) in self.streams.iter_mut().enumerate() {
-            // client-side strategies select locally; the Request frame
-            // still flows (empty) so the wire flow stays uniform
-            let indices = requests.map(|r| r[i].clone()).unwrap_or_default();
-            send(s, &Msg::Request { round, indices })?;
-            match recv(s)? {
-                Msg::Update { update, round: r, .. } if r == round => updates.push(update),
-                other => bail!("round {round}: expected Update, got {other:?}"),
+        let pos = cohort_positions(self.streams.len(), cohort);
+        std::thread::scope(|scope| -> Result<Vec<SparseVec>> {
+            let mut handles = Vec::with_capacity(cohort.len());
+            for (i, stream) in self.streams.iter_mut().enumerate() {
+                if pos[i] == usize::MAX {
+                    continue; // off-cohort workers already got their Sit
+                }
+                // client-side strategies select locally; the Request frame
+                // still flows (empty) so the wire flow stays uniform
+                let indices = requests.map(|r| r[pos[i]].clone()).unwrap_or_default();
+                handles.push(scope.spawn(move || -> Result<SparseVec> {
+                    send(stream, &Msg::Request { round, indices })?;
+                    match recv(stream)? {
+                        Msg::Update { update, round: r, .. } if r == round => Ok(update),
+                        other => bail!("round {round}: expected Update, got {other:?}"),
+                    }
+                }));
             }
-        }
-        Ok(updates)
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("stream thread panicked"))
+                .collect()
+        })
     }
 
     fn backend(&mut self) -> &mut dyn Backend {
@@ -184,7 +277,9 @@ pub fn run_server_on(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Se
         final_accuracy: acc,
         cluster_labels: engine.ps().clusters().labels(),
         final_params: engine.global_params().to_vec(),
-        uploaded_log: engine.uploaded_log().to_vec(),
+        uploaded_log: engine.uploaded_log().iter().cloned().collect(),
+        comm: engine.comm(),
+        model_encodes: pool.model_encodes(),
     })
 }
 
@@ -212,8 +307,11 @@ pub fn run_worker(cfg: &ExperimentConfig, addr: &str, id: usize) -> Result<()> {
     loop {
         let (round, params) = match recv(&mut stream)? {
             Msg::Model { round, params } => (round, params),
+            // off-cohort this round (partial participation): no broadcast,
+            // no training, no upload — just wait for the next frame
+            Msg::Sit { .. } => continue,
             Msg::Shutdown => break,
-            other => bail!("expected Model/Shutdown, got {other:?}"),
+            other => bail!("expected Model/Sit/Shutdown, got {other:?}"),
         };
         // shared phase 1: sync_to (Adam moments persist), H local steps,
         // EF fold, top-r report — the same code the in-process pool runs
@@ -267,5 +365,9 @@ mod tests {
         assert_eq!(report.cluster_labels.len(), 2);
         assert_eq!(report.uploaded_log.len(), 3);
         assert!(report.uploaded_log.iter().all(|r| r.len() == 2));
+        // zero-copy broadcast: one Model serialization per round, shared
+        // across both workers
+        assert_eq!(report.model_encodes, 3);
+        assert_eq!(report.comm.broadcast_down, 3 * 2 * 4 * cfg.d() as u64);
     }
 }

@@ -18,7 +18,7 @@
 use crate::backend::{make_backend_lanes, Backend, BackendLanes, SendBackend};
 use crate::config::{ExperimentConfig, Payload};
 use crate::coordinator::engine::{
-    client_train_phase, client_update_phase, ClientPool, ClientReport, PhaseCfg,
+    client_train_phase, client_update_phase, cohort_positions, ClientPool, ClientReport, PhaseCfg,
 };
 use crate::data::Dataset;
 use crate::fl::client::Client;
@@ -101,62 +101,48 @@ impl ClientPool for InProcessPool {
         self.clients.len()
     }
 
-    fn train_and_report(&mut self, global: &[f32]) -> Result<Vec<ClientReport>> {
+    fn train_and_report(
+        &mut self,
+        global: &[f32],
+        cohort: &[usize],
+    ) -> Result<Vec<ClientReport>> {
         let pc = self.pc;
         let delta = pc.payload == Payload::Delta;
-        let outs = match &mut self.lanes {
-            BackendLanes::Serial(be) => {
-                let mut outs = Vec::with_capacity(self.clients.len());
-                for (i, c) in self.clients.iter_mut().enumerate() {
-                    let mem = if delta { Some(&mut self.memory[i]) } else { None };
-                    outs.push(client_train_phase(c, be.as_mut(), mem, global, &pc)?);
-                }
-                outs
-            }
-            BackendLanes::Parallel(lanes) => parallel_map(
-                &mut self.clients,
-                &mut self.memory,
-                lanes,
-                delta,
-                |_, c, be, mem| client_train_phase(c, be, mem, global, &pc),
-            )?,
-        };
+        let outs = cohort_map(
+            &mut self.clients,
+            &mut self.memory,
+            &mut self.lanes,
+            delta,
+            cohort,
+            |_, c, be, mem| client_train_phase(c, be, mem, global, &pc),
+        )?;
         self.reports = outs.iter().map(|o| o.report.clone()).collect();
         Ok(outs)
     }
 
-    fn exchange(&mut self, requests: Option<&[Vec<u32>]>) -> Result<Vec<SparseVec>> {
+    fn exchange(
+        &mut self,
+        requests: Option<&[Vec<u32>]>,
+        cohort: &[usize],
+    ) -> Result<Vec<SparseVec>> {
         let pc = self.pc;
         let delta = pc.payload == Payload::Delta;
         let reports = std::mem::take(&mut self.reports);
-        ensure!(
-            reports.len() == self.clients.len(),
-            "exchange before train_and_report"
-        );
+        ensure!(reports.len() == cohort.len(), "exchange before train_and_report");
         if let Some(reqs) = requests {
-            ensure!(reqs.len() == self.clients.len(), "request count mismatch");
+            ensure!(reqs.len() == cohort.len(), "request count mismatch");
         }
-        match &mut self.lanes {
-            BackendLanes::Serial(be) => {
-                let mut outs = Vec::with_capacity(self.clients.len());
-                for (i, c) in self.clients.iter_mut().enumerate() {
-                    let mem = if delta { Some(&mut self.memory[i]) } else { None };
-                    let req = requests.map(|r| r[i].as_slice());
-                    outs.push(client_update_phase(c, be.as_mut(), mem, &reports[i], req, &pc)?);
-                }
-                Ok(outs)
-            }
-            BackendLanes::Parallel(lanes) => parallel_map(
-                &mut self.clients,
-                &mut self.memory,
-                lanes,
-                delta,
-                |i, c, be, mem| {
-                    let req = requests.map(|r| r[i].as_slice());
-                    client_update_phase(c, be, mem, &reports[i], req, &pc)
-                },
-            ),
-        }
+        cohort_map(
+            &mut self.clients,
+            &mut self.memory,
+            &mut self.lanes,
+            delta,
+            cohort,
+            |p, c, be, mem| {
+                let req = requests.map(|r| r[p].as_slice());
+                client_update_phase(c, be, mem, &reports[p], req, &pc)
+            },
+        )
     }
 
     fn backend(&mut self) -> &mut dyn Backend {
@@ -164,15 +150,19 @@ impl ClientPool for InProcessPool {
     }
 }
 
-/// Run `f` over every client, chunked across the backend lanes on scoped
-/// threads. Results come back in client order; client i's error-feedback
-/// memory rides along when `delta` is set. With a single lane the work
-/// runs inline on the calling thread.
-fn parallel_map<T, F>(
+/// Run `f` over the cohort's clients, chunked across the backend lanes on
+/// scoped threads. `f` receives the client's **cohort position** (its
+/// index into the cohort-aligned reports/requests) and results come back
+/// in cohort order; a member's error-feedback memory rides along when
+/// `delta` is set. Off-cohort clients are untouched — no training, no
+/// state change. With a single lane (or the serial backend) the work runs
+/// inline on the calling thread; numerics are identical either way.
+fn cohort_map<T, F>(
     clients: &mut [Client],
     memory: &mut [Vec<f32>],
-    lanes: &mut [SendBackend],
+    lanes: &mut BackendLanes,
     delta: bool,
+    cohort: &[usize],
     f: F,
 ) -> Result<Vec<T>>
 where
@@ -180,45 +170,62 @@ where
     F: Fn(usize, &mut Client, &mut dyn Backend, Option<&mut Vec<f32>>) -> Result<T> + Sync,
 {
     let n = clients.len();
-    if n == 0 {
+    let m = cohort.len();
+    if m == 0 {
         return Ok(Vec::new());
     }
-    // one Option slot per client so the Grad payload (no memory) chunks
+    debug_assert!(cohort.windows(2).all(|w| w[0] < w[1]) && cohort[m - 1] < n);
+    let pos = cohort_positions(n, cohort);
+    // one Option slot per client so the Grad payload (no memory) pairs
     // uniformly with the clients
-    let mut slots: Vec<Option<&mut Vec<f32>>> = if delta {
+    let slots: Vec<Option<&mut Vec<f32>>> = if delta {
         memory.iter_mut().map(Some).collect()
     } else {
         (0..n).map(|_| None).collect()
     };
-    let n_lanes = lanes.len().min(n).max(1);
+    // cohort members with their cohort position, in cohort order
+    let mut work: Vec<(usize, &mut Client, Option<&mut Vec<f32>>)> = clients
+        .iter_mut()
+        .zip(slots)
+        .enumerate()
+        .filter(|(i, _)| pos[*i] != usize::MAX)
+        .enumerate()
+        .map(|(p, (_i, (c, slot)))| (p, c, slot))
+        .collect();
+
+    let lanes: &mut [SendBackend] = match lanes {
+        BackendLanes::Serial(be) => {
+            let mut out = Vec::with_capacity(m);
+            for (p, c, slot) in work.iter_mut() {
+                out.push(f(*p, c, be.as_mut(), slot.take())?);
+            }
+            return Ok(out);
+        }
+        BackendLanes::Parallel(lanes) => lanes,
+    };
+    let n_lanes = lanes.len().min(m).max(1);
     if n_lanes == 1 {
         let be = &mut lanes[0];
-        let mut out = Vec::with_capacity(n);
-        for (i, (c, slot)) in clients.iter_mut().zip(slots.iter_mut()).enumerate() {
-            out.push(f(i, c, be.as_mut(), slot.take())?);
+        let mut out = Vec::with_capacity(m);
+        for (p, c, slot) in work.iter_mut() {
+            out.push(f(*p, c, be.as_mut(), slot.take())?);
         }
         return Ok(out);
     }
-    let per = n.div_ceil(n_lanes);
+    let per = m.div_ceil(n_lanes);
     std::thread::scope(|s| {
         let f = &f;
         let mut handles = Vec::with_capacity(n_lanes);
-        for (chunk_no, ((cchunk, schunk), be)) in clients
-            .chunks_mut(per)
-            .zip(slots.chunks_mut(per))
-            .zip(lanes.iter_mut())
-            .enumerate()
-        {
-            let base = chunk_no * per;
+        for (chunk, be) in work.chunks_mut(per).zip(lanes.iter_mut()) {
             handles.push(s.spawn(move || -> Result<Vec<T>> {
-                let mut out = Vec::with_capacity(cchunk.len());
-                for (off, (c, slot)) in cchunk.iter_mut().zip(schunk.iter_mut()).enumerate() {
-                    out.push(f(base + off, c, be.as_mut(), slot.take())?);
+                let mut out = Vec::with_capacity(chunk.len());
+                for (p, c, slot) in chunk.iter_mut() {
+                    out.push(f(*p, c, be.as_mut(), slot.take())?);
                 }
                 Ok(out)
             }));
         }
-        let mut all = Vec::with_capacity(n);
+        let mut all = Vec::with_capacity(m);
         for h in handles {
             all.extend(h.join().expect("client worker thread panicked")?);
         }
@@ -247,13 +254,61 @@ mod tests {
             }
             (
                 t.global_params().to_vec(),
-                t.engine().uploaded_log().to_vec(),
+                t.engine().uploaded_log().iter().cloned().collect::<Vec<_>>(),
             )
         };
         let serial = run(1);
         let parallel = run(4); // mnist_smoke has 4 clients: one lane each
         assert_eq!(serial.1, parallel.1, "uploaded index sets must match");
         assert_eq!(serial.0, parallel.0, "global params must match exactly");
+    }
+
+    /// Lane parallelism stays a pure throughput knob under partial
+    /// participation: the cohort's members chunk across lanes but train
+    /// the same numerics in the same collection order.
+    #[test]
+    fn partial_participation_parallel_matches_serial() {
+        let run = |parallel: usize| {
+            let mut cfg = ExperimentConfig::mnist_smoke();
+            cfg.parallel = parallel;
+            cfg.participation = 0.5; // 4 clients -> cohort of 2
+            cfg.rounds = 6;
+            let mut t = Trainer::from_config(&cfg).unwrap();
+            for _ in 0..cfg.rounds {
+                t.run_round().unwrap();
+            }
+            (
+                t.global_params().to_vec(),
+                t.engine().uploaded_log().iter().cloned().collect::<Vec<_>>(),
+            )
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(serial.1, parallel.1);
+        assert_eq!(serial.0, parallel.0);
+    }
+
+    /// Off-cohort clients must not train, sync, or otherwise move.
+    #[test]
+    fn off_cohort_clients_are_untouched() {
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.participation = 0.5; // 4 clients -> round-robin cohort {0, 1}
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let before: Vec<Vec<f32>> =
+            (0..cfg.n_clients).map(|i| t.pool().client_params(i).to_vec()).collect();
+        t.run_round().unwrap();
+        assert_ne!(
+            before[0],
+            t.pool().client_params(0).to_vec(),
+            "cohort member 0 must have trained"
+        );
+        for i in [2, 3] {
+            assert_eq!(
+                before[i],
+                t.pool().client_params(i).to_vec(),
+                "client {i} sat the round out"
+            );
+        }
     }
 
     #[test]

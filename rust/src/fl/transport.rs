@@ -31,6 +31,10 @@ pub enum Msg {
     Update { client_id: u32, round: u32, update: SparseVec },
     /// PS -> client: training finished
     Shutdown,
+    /// PS -> client: you are **off-cohort** this round — no model
+    /// broadcast, no training, just keep the round counter in sync and
+    /// wait for the next frame (partial participation).
+    Sit { round: u32 },
 }
 
 // ------------------------------------------------------------- encoding
@@ -118,6 +122,7 @@ impl Msg {
             Msg::Request { .. } => 4,
             Msg::Update { .. } => 5,
             Msg::Shutdown => 6,
+            Msg::Sit { .. } => 7,
         }
     }
 
@@ -146,6 +151,7 @@ impl Msg {
                 e.sparse(update);
             }
             Msg::Shutdown => {}
+            Msg::Sit { round } => e.u32(*round),
         }
         let payload = e.0;
         let mut frame = Vec::with_capacity(9 + payload.len());
@@ -174,16 +180,58 @@ impl Msg {
             4 => Msg::Request { round: d.u32()?, indices: d.u32s()? },
             5 => Msg::Update { client_id: d.u32()?, round: d.u32()?, update: d.sparse()? },
             6 => Msg::Shutdown,
+            7 => Msg::Sit { round: d.u32()? },
             t => bail!("unknown message tag {t}"),
         };
         d.done()?;
         Ok(msg)
     }
 
-    /// Wire size of the encoded frame in bytes.
+    /// Wire size of the encoded frame in bytes, computed arithmetically —
+    /// no re-encoding (the old implementation allocated a full frame copy,
+    /// a d-vector for `Model`, just to return a length). Pinned equal to
+    /// `encode().len()` for every variant by `wire_bytes_never_encodes`.
     pub fn wire_bytes(&self) -> usize {
-        self.encode().len()
+        // magic(4) + payload_len(4) + tag(1)
+        const HEADER: usize = 9;
+        // every length-prefixed list costs 4 (count) + 4 per element
+        fn list(n: usize) -> usize {
+            4 + 4 * n
+        }
+        fn sparse(s: &SparseVec) -> usize {
+            list(s.idx.len()) + list(s.val.len())
+        }
+        HEADER
+            + match self {
+                Msg::Join { .. } => 4,
+                Msg::Model { params, .. } => 4 + list(params.len()),
+                Msg::Report { report, .. } => 4 + 4 + sparse(report) + 4,
+                Msg::Request { indices, .. } => 4 + list(indices.len()),
+                Msg::Update { update, .. } => 4 + 4 + sparse(update),
+                Msg::Shutdown => 0,
+                Msg::Sit { .. } => 4,
+            }
     }
+}
+
+/// Encode a `Model` broadcast frame straight from a parameter slice —
+/// byte-identical to `Msg::Model { round, params: params.to_vec() }
+/// .encode()` but without materializing the intermediate d-vector copy.
+/// The PS encodes **one** such frame per round and writes it to every
+/// cohort stream (the zero-copy broadcast); pinned byte-identical by
+/// `model_frame_helper_matches_encode`.
+pub fn encode_model_frame(round: u32, params: &[f32]) -> Vec<u8> {
+    let payload_len = 1 + 4 + 4 + 4 * params.len(); // tag + round + list
+    let mut frame = Vec::with_capacity(8 + payload_len);
+    frame.extend_from_slice(&MAGIC.to_le_bytes());
+    frame.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    frame.push(2); // Msg::Model's tag
+    frame.extend_from_slice(&round.to_le_bytes());
+    frame.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for &x in params {
+        frame.extend_from_slice(&x.to_le_bytes());
+    }
+    frame
 }
 
 /// Write one message to a TCP stream.
@@ -238,6 +286,48 @@ mod tests {
             update: SparseVec::new(vec![], vec![]),
         });
         roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Sit { round: 11 });
+    }
+
+    /// One frame of every variant (empty and non-empty payloads where it
+    /// matters): the arithmetic size must equal the encoded length.
+    fn every_variant() -> Vec<Msg> {
+        vec![
+            Msg::Join { client_id: 3 },
+            Msg::Model { round: 7, params: vec![] },
+            Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] },
+            Msg::Report {
+                client_id: 1,
+                round: 2,
+                report: SparseVec::new(vec![5, 900], vec![0.5, -0.25]),
+                mean_loss: 2.25,
+            },
+            Msg::Request { round: 9, indices: vec![1, 2, 3] },
+            Msg::Request { round: 9, indices: vec![] },
+            Msg::Update {
+                client_id: 0,
+                round: 1,
+                update: SparseVec::new(vec![4, 8, 15], vec![0.1, 0.2, 0.3]),
+            },
+            Msg::Update { client_id: 0, round: 1, update: SparseVec::new(vec![], vec![]) },
+            Msg::Shutdown,
+            Msg::Sit { round: 4 },
+        ]
+    }
+
+    #[test]
+    fn wire_bytes_never_encodes() {
+        for m in every_variant() {
+            assert_eq!(m.wire_bytes(), m.encode().len(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn model_frame_helper_matches_encode() {
+        for params in [vec![], vec![0.5f32], vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0]] {
+            let via_msg = Msg::Model { round: 3, params: params.clone() }.encode();
+            assert_eq!(encode_model_frame(3, &params), via_msg);
+        }
     }
 
     #[test]
@@ -282,5 +372,8 @@ mod tests {
         };
         // header(8) + tag(1) + client(4) + round(4) + 2 lens(8) + 8k
         assert_eq!(m.wire_bytes(), 8 + 1 + 4 + 4 + 8 + 8 * k);
+        // the Sit control frame is a fixed 13 bytes — cheap enough to keep
+        // off-cohort workers in sync every round (DESIGN.md §6)
+        assert_eq!(Msg::Sit { round: 1 }.wire_bytes(), 8 + 1 + 4);
     }
 }

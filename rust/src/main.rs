@@ -9,6 +9,7 @@
 
 use anyhow::{bail, Result};
 use ragek::config::{BackendKind, ExperimentConfig};
+use ragek::coordinator::scheduler::SchedulerKind;
 use ragek::coordinator::strategies::StrategyKind;
 use ragek::fl::trainer::Trainer;
 use ragek::util::argparse::{ArgError, ArgSpec};
@@ -33,6 +34,8 @@ fn train_spec(cmd: &str, about: &str) -> ArgSpec {
         .opt("backend", "auto", "rust | xla | auto")
         .opt("rounds", "0", "global rounds (0 = preset default)")
         .opt("clients", "0", "number of clients (0 = preset)")
+        .opt("participation", "", "fraction of clients polled per round (empty = preset)")
+        .opt("scheduler", "", "cohort policy: round-robin | random | age-debt (empty = preset)")
         .opt("parallel", "", "in-process client lanes (empty = preset, 0 = auto, 1 = serial)")
         .opt("seed", "42", "experiment seed")
         .opt("config", "", "JSON config file (overrides preset)")
@@ -71,6 +74,13 @@ fn build_config(a: &ragek::util::argparse::Args) -> Result<ExperimentConfig> {
     }
     if !a.get("parallel").is_empty() {
         cfg.parallel = a.get_usize("parallel")?;
+    }
+    if !a.get("participation").is_empty() {
+        cfg.participation = a.get_f64("participation")?;
+    }
+    if !a.get("scheduler").is_empty() {
+        cfg.scheduler = SchedulerKind::parse(a.get("scheduler"))
+            .ok_or_else(|| anyhow::anyhow!("unknown scheduler {:?}", a.get("scheduler")))?;
     }
     cfg.seed = a.get_usize("seed")? as u64;
     cfg.validate()?;

@@ -97,6 +97,36 @@ fn one_protocol_round_over_tcp() {
     assert!(updates.iter().all(|u| u.len() == 2));
 }
 
+/// A bad/duplicate Join must not leave already-accepted workers hung:
+/// the PS sends them (and the offender) Shutdown before bailing.
+#[test]
+fn accept_shuts_down_joined_workers_on_bad_join() {
+    use ragek::config::ExperimentConfig;
+    use ragek::fl::distributed::TcpClientPool;
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.n_clients = 2;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let accept = thread::spawn(move || TcpClientPool::accept(&cfg, listener));
+
+    // worker 0 joins correctly...
+    let mut good = TcpStream::connect(addr).unwrap();
+    good.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    send(&mut good, &Msg::Join { client_id: 0 }).unwrap();
+    // ...then a second connection claims the same id (loopback accept
+    // order is connection order, so the good join lands first)
+    let mut bad = TcpStream::connect(addr).unwrap();
+    bad.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    send(&mut bad, &Msg::Join { client_id: 0 }).unwrap();
+
+    let err = accept.join().unwrap();
+    assert!(err.is_err(), "duplicate join must fail the accept loop");
+    // the already-joined worker was released, not left hanging
+    assert_eq!(recv(&mut good).unwrap(), Msg::Shutdown);
+    // and the offender heard the same
+    assert_eq!(recv(&mut bad).unwrap(), Msg::Shutdown);
+}
+
 #[test]
 fn oversized_frame_rejected() {
     // a frame claiming a 1 GiB payload must be rejected before allocation

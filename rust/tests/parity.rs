@@ -30,7 +30,10 @@ fn run_sim(cfg: &ExperimentConfig) -> (Vec<Vec<Vec<u32>>>, Vec<f32>) {
     for _ in 0..cfg.rounds {
         t.run_round().unwrap();
     }
-    (t.engine().uploaded_log().to_vec(), t.global_params().to_vec())
+    (
+        t.engine().uploaded_log().iter().cloned().collect(),
+        t.global_params().to_vec(),
+    )
 }
 
 fn run_tcp(cfg: &ExperimentConfig) -> ServeReport {
@@ -60,4 +63,57 @@ fn client_side_strategy_sim_and_tcp_are_identical() {
     let report = run_tcp(&cfg);
     assert_eq!(report.uploaded_log, sim_log);
     assert_eq!(report.final_params, sim_params);
+}
+
+/// Partial participation: both transports must draw the same cohorts
+/// (same scheduler, same seed), skip the same clients, and stay
+/// bit-for-bit identical — and the TCP downlink must prove the broadcast
+/// was cohort-scoped and encoded once per round.
+#[test]
+fn partial_participation_sim_and_tcp_are_identical() {
+    let mut cfg = parity_cfg(StrategyKind::RageK);
+    cfg.n_clients = 4;
+    cfg.participation = 0.5; // cohort of 2, default round-robin
+    cfg.rounds = 6;
+    let m = cfg.cohort_size() as u64;
+    assert_eq!(m, 2);
+    let (sim_log, sim_params) = run_sim(&cfg);
+    let report = run_tcp(&cfg);
+    assert_eq!(report.uploaded_log, sim_log, "cohorts/uploads must match across transports");
+    assert_eq!(report.final_params, sim_params, "final global params must match exactly");
+    // each round exactly the cohort uploaded; everyone else sat out
+    for round in &report.uploaded_log {
+        assert_eq!(round.len(), cfg.n_clients);
+        assert_eq!(round.iter().filter(|u| !u.is_empty()).count(), m as usize);
+    }
+    // zero-copy, cohort-scoped broadcast: one Model encode per round and
+    // downlink bytes scale with m = 2, not n = 4
+    assert_eq!(report.model_encodes, cfg.rounds as u64);
+    assert_eq!(report.comm.broadcast_down, cfg.rounds as u64 * m * 4 * cfg.d() as u64);
+}
+
+/// The age-debt scheduler is deterministic PS state, so it too must agree
+/// across transports.
+#[test]
+fn age_debt_scheduler_sim_and_tcp_are_identical() {
+    let mut cfg = parity_cfg(StrategyKind::RageK);
+    cfg.n_clients = 4;
+    cfg.participation = 0.5;
+    cfg.scheduler = ragek::coordinator::scheduler::SchedulerKind::AgeDebt;
+    cfg.rounds = 5;
+    let (sim_log, sim_params) = run_sim(&cfg);
+    let report = run_tcp(&cfg);
+    assert_eq!(report.uploaded_log, sim_log);
+    assert_eq!(report.final_params, sim_params);
+    // age debt rotates participation: over 5 rounds of cohort 2 every
+    // client must have been polled at least once
+    let mut polled = vec![false; cfg.n_clients];
+    for round in &report.uploaded_log {
+        for (i, u) in round.iter().enumerate() {
+            if !u.is_empty() {
+                polled[i] = true;
+            }
+        }
+    }
+    assert!(polled.iter().all(|&p| p), "age debt must eventually poll everyone: {polled:?}");
 }

@@ -188,6 +188,71 @@ fn lazy_age_matches_dense_oracle() {
     });
 }
 
+/// Partial participation and eq. (2): a cluster whose clients all sat a
+/// round out must age **uniformly by exactly +1** — absence is pure
+/// staleness, never a reset — while participating clients' requested
+/// indices reset to 0 and their other indices age by +1.
+#[test]
+fn off_cohort_cluster_ages_grow_monotonically() {
+    use ragek::clustering::{DbscanParams, MergeRule};
+    use ragek::coordinator::server::{ParameterServer, PsConfig};
+    use ragek::coordinator::strategies::StrategyKind;
+    prop_check("off-cohort-age-growth", 60, |g| {
+        let n = g.usize_in(2, 6);
+        let d = g.usize_in(20, 120);
+        let k = g.usize_in(1, 4);
+        // recluster_every = 0: clusters stay singletons, so per-client
+        // and per-cluster age vectors coincide
+        let mut ps = ParameterServer::new(PsConfig {
+            d,
+            n_clients: n,
+            k,
+            strategy: StrategyKind::RageK,
+            recluster_every: 0,
+            dbscan: DbscanParams::default(),
+            merge_rule: MergeRule::Min,
+        });
+        let rounds = g.usize_in(1, 12);
+        for _ in 0..rounds {
+            let m = g.usize_in(1, n);
+            let mut cohort = g.rng.choose_k(n, m);
+            cohort.sort_unstable();
+            let r = k + g.usize_in(0, 6);
+            let reports: Vec<Vec<u32>> =
+                cohort.iter().map(|_| g.vec_u32_distinct(d, r)).collect();
+            let before: Vec<Vec<u32>> =
+                (0..n).map(|i| ps.clusters().age_of_client(i).to_vec()).collect();
+
+            let requests = ps.select_requests_cohort(&cohort, &reports);
+            let mut uploaded: Vec<Vec<u32>> = vec![Vec::new(); n];
+            for (p, &c) in cohort.iter().enumerate() {
+                uploaded[c] = requests[p].clone();
+            }
+            ps.record_round(&uploaded);
+
+            for i in 0..n {
+                let after = ps.clusters().age_of_client(i).to_vec();
+                let sel: std::collections::HashSet<u32> =
+                    uploaded[i].iter().copied().collect();
+                for j in 0..d {
+                    let want = if sel.contains(&(j as u32)) {
+                        0 // requested this round: reset per eq. (2)
+                    } else {
+                        before[i][j] + 1 // everything else ages, absent or not
+                    };
+                    if after[j] != want {
+                        return Err(format!(
+                            "client {i} (cohort {cohort:?}): age[{j}] = {} want {want}",
+                            after[j]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn aggregation_is_linear_and_order_invariant() {
     prop_check("aggregation-linearity", 100, |g| {
