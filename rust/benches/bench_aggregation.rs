@@ -43,6 +43,11 @@ fn main() {
         b.run_units(&format!("to_padded_pairs   {tag}"), Some((n * k) as f64), || {
             std::hint::black_box(agg.to_padded_pairs(n * k, 1.0));
         });
+        // coverage-diagnostic union (sorted concat+dedup; formerly a
+        // per-call HashSet)
+        b.run_units(&format!("updated_indices   {tag}"), Some((n * k) as f64), || {
+            std::hint::black_box(agg.updated_indices());
+        });
     }
     b.save();
 }

@@ -104,6 +104,43 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // wire-codec regression check, not a timing: on the standard rAge-k
+    // scenario the packed v2 codec must cut the actual uplink frame
+    // bytes at least in half (the §6 protocol counters stay
+    // codec-independent, so they must agree exactly across codecs)
+    {
+        use ragek::fl::codec::Codec;
+        let run = |codec: Codec| -> ragek::fl::metrics::CommStats {
+            let mut cfg = ExperimentConfig::mnist_scaled();
+            cfg.strategy = StrategyKind::RageK;
+            cfg.codec = codec;
+            cfg.rounds = 2;
+            cfg.train_n = 800;
+            cfg.test_n = 128;
+            cfg.eval_every = 0;
+            let mut t = Trainer::from_config(&cfg).unwrap();
+            for _ in 0..cfg.rounds {
+                t.run_round().unwrap();
+            }
+            t.engine().comm()
+        };
+        let raw = run(Codec::Raw);
+        let packed = run(Codec::Packed);
+        assert_eq!(raw.uplink(), packed.uplink(), "§6 counters are codec-independent");
+        assert_eq!(raw.downlink(), packed.downlink());
+        let ratio = raw.wire_up as f64 / packed.wire_up as f64;
+        assert!(
+            ratio >= 2.0,
+            "packed codec must at least halve uplink wire bytes (got {ratio:.2}x: {} -> {})",
+            raw.wire_up,
+            packed.wire_up
+        );
+        println!(
+            "codec regression check OK: uplink {} B (raw) -> {} B (packed), {ratio:.2}x",
+            raw.wire_up, packed.wire_up
+        );
+    }
+
     // PS-only cost at CIFAR scale (no compute backend in the loop):
     // selection + ages + aggregation for 6 clients at d=2.5M
     {

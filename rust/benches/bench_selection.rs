@@ -42,6 +42,20 @@ fn main() {
         b.run_units(&format!("ps.select_disjoint x2 {tag}"), Some(2.0 * r as f64), || {
             std::hint::black_box(select_disjoint(&age, &reports, k));
         });
+
+        // a 6-member cluster with heavy report overlap: the regime where
+        // the old HashSet + O(k) sel.contains scans dominated and the
+        // stamp-vector rewrite pays off (overlap forces the fallback
+        // pass, the former quadratic corner)
+        let shared = topk_abs_sparse(&grad, r); // everyone reports the same set
+        let big: Vec<&[u32]> = (0..6).map(|_| shared.idx.as_slice()).collect();
+        b.run_units(
+            &format!("ps.select_disjoint x6 overlapped {tag}"),
+            Some(6.0 * r as f64),
+            || {
+                std::hint::black_box(select_disjoint(&age, &big, k));
+            },
+        );
     }
     b.save();
 }

@@ -7,6 +7,7 @@ use crate::coordinator::scheduler::SchedulerKind;
 use crate::coordinator::strategies::StrategyKind;
 use crate::data::partition::Scheme;
 use crate::data::Corpus;
+use crate::fl::codec::Codec;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
@@ -62,6 +63,13 @@ pub struct ExperimentConfig {
     /// cohort policy under partial participation (ignored at p = 1.0,
     /// where every policy selects all clients)
     pub scheduler: SchedulerKind,
+    /// wire codec: `raw` (v1, 8 B per sparse entry) | `packed` (v2,
+    /// delta+varint indices, lossless) | `packed-f16` (v2 + binary16
+    /// update values, lossy). Negotiated at `Join` time — PS and workers
+    /// must agree. Affects frame bytes (`CommStats::wire_*`), never the
+    /// protocol semantics; `packed` runs are bit-for-bit identical to
+    /// `raw` (rust/tests/parity.rs).
+    pub codec: Codec,
     pub r: usize,
     pub k: usize,
     /// local iterations per global round (paper H)
@@ -108,6 +116,7 @@ impl ExperimentConfig {
             n_clients: 10,
             participation: 1.0,
             scheduler: SchedulerKind::RoundRobin,
+            codec: Codec::Raw,
             r: 75,
             k: 10,
             h: 4,
@@ -158,6 +167,7 @@ impl ExperimentConfig {
             n_clients: 6,
             participation: 1.0,
             scheduler: SchedulerKind::RoundRobin,
+            codec: Codec::Raw,
             r: 2500,
             k: 100,
             h: 8,               // paper: 100
@@ -266,6 +276,7 @@ impl ExperimentConfig {
             ("n_clients", Json::Num(self.n_clients as f64)),
             ("participation", Json::Num(self.participation)),
             ("scheduler", Json::Str(self.scheduler.name().into())),
+            ("codec", Json::Str(self.codec.name().into())),
             ("r", Json::Num(self.r as f64)),
             ("k", Json::Num(self.k as f64)),
             ("h", Json::Num(self.h as f64)),
@@ -335,6 +346,10 @@ impl ExperimentConfig {
         if let Some(s) = j.get("scheduler").and_then(Json::as_str) {
             c.scheduler = SchedulerKind::parse(s)
                 .with_context(|| format!("unknown scheduler {s:?}"))?;
+        }
+        if let Some(s) = j.get("codec").and_then(Json::as_str) {
+            c.codec =
+                Codec::parse(s).with_context(|| format!("unknown codec {s:?}"))?;
         }
         num!(r, "r", usize);
         num!(k, "k", usize);
@@ -432,6 +447,7 @@ mod tests {
         cfg.parallel = 3;
         cfg.participation = 0.3;
         cfg.scheduler = SchedulerKind::AgeDebt;
+        cfg.codec = Codec::PackedF16;
         let j = cfg.to_json();
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.strategy, StrategyKind::RTopK);
@@ -441,6 +457,7 @@ mod tests {
         assert_eq!(back.parallel, 3);
         assert_eq!(back.participation, 0.3);
         assert_eq!(back.scheduler, SchedulerKind::AgeDebt);
+        assert_eq!(back.codec, Codec::PackedF16);
     }
 
     #[test]
@@ -486,5 +503,9 @@ mod tests {
         assert!(ExperimentConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"model": "mnist", "scheduler": "fifo"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"model": "mnist", "codec": "zstd"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"model": "mnist", "codec": "packed"}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().codec, Codec::Packed);
     }
 }

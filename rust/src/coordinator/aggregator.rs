@@ -63,11 +63,26 @@ impl Aggregate {
         (idx, val)
     }
 
-    /// Union of updated indices this round (the per-cluster eq. (2) input
-    /// is built from the per-client requested sets, not from here, but
-    /// metrics use this to report coverage).
-    pub fn updated_indices(&self) -> std::collections::HashSet<u32> {
-        self.parts.iter().flat_map(|p| p.idx.iter().cloned()).collect()
+    /// Union of updated indices this round, **sorted ascending** — a
+    /// coverage diagnostic for ablations/benches (`bench_aggregation`
+    /// exercises it); the hot path never calls it: the per-cluster
+    /// eq. (2) input is built from the per-client requested sets in
+    /// `ParameterServer::record_round`.
+    ///
+    /// Concatenate + sort + dedup instead of the former per-call
+    /// `HashSet`: the parts are small (k entries each) and arrive in
+    /// request order — (age desc, magnitude rank asc), deliberately
+    /// preserved by the wire codec for bit-for-bit parity — so a pure
+    /// k-way sorted merge is not available and one O(T log T) sort of
+    /// the concatenation is the cheap, allocation-light union.
+    pub fn updated_indices(&self) -> Vec<u32> {
+        let mut all: Vec<u32> = Vec::with_capacity(self.total_entries);
+        for p in &self.parts {
+            all.extend_from_slice(&p.idx);
+        }
+        all.sort_unstable();
+        all.dedup();
+        all
     }
 }
 
@@ -118,12 +133,12 @@ mod tests {
     }
 
     #[test]
-    fn updated_indices_union() {
+    fn updated_indices_union_is_sorted() {
         let mut agg = Aggregate::new();
-        agg.push(SparseVec::new(vec![1, 2], vec![1.0, 1.0]));
-        agg.push(SparseVec::new(vec![2, 9], vec![1.0, 1.0]));
-        let u = agg.updated_indices();
-        assert_eq!(u.len(), 3);
-        assert!(u.contains(&9));
+        // request order (age desc, rank asc) — deliberately not sorted
+        agg.push(SparseVec::new(vec![2, 1], vec![1.0, 1.0]));
+        agg.push(SparseVec::new(vec![9, 2], vec![1.0, 1.0]));
+        assert_eq!(agg.updated_indices(), vec![1, 2, 9]);
+        assert!(Aggregate::new().updated_indices().is_empty());
     }
 }

@@ -36,6 +36,7 @@ use crate::coordinator::strategies::{client_select, StrategyKind};
 use crate::data::{gather_batch, Dataset};
 use crate::fl::client::Client;
 use crate::fl::metrics::CommStats;
+use crate::fl::transport as wire;
 use crate::sparse::{topk_abs_sparse, SparseVec};
 use crate::util::timer::Profile;
 use anyhow::{ensure, Result};
@@ -265,6 +266,34 @@ impl RoundEngine {
             self.comm.request_down += (m * k * 4) as u64;
         }
         self.comm.broadcast_down += (m * d * 4) as u64;
+
+        // ---- exact wire accounting: the frame bytes this round costs
+        // under the active codec, mirrored frame for frame from the TCP
+        // deployment (model + request + sit down; report + update up) and
+        // pinned equal to the observed socket bytes by
+        // rust/tests/parity.rs. The in-process pool has no wire, so for
+        // the simulator these are the bytes the same round *would* cost.
+        let codec = self.cfg.codec;
+        self.comm.wire_down += ((n - m) * wire::SIT_FRAME_BYTES) as u64
+            + (m * wire::model_frame_bytes(d)) as u64;
+        for rep in &reports {
+            self.comm.wire_up += wire::report_frame_bytes(codec, &rep.report.idx) as u64;
+        }
+        match &requests {
+            // the Request frame flows even for client-side strategies
+            // (empty), keeping the wire flow uniform — count it the same
+            Some(reqs) => {
+                for req in reqs {
+                    self.comm.wire_down += wire::request_frame_bytes(codec, req) as u64;
+                }
+            }
+            None => {
+                self.comm.wire_down += (m * wire::request_frame_bytes(codec, &[])) as u64;
+            }
+        }
+        for u in &updates {
+            self.comm.wire_up += wire::update_frame_bytes(codec, &u.idx) as u64;
+        }
 
         // ---- aggregate + server update (lines 9-11)
         let mut agg = Aggregate::new();
@@ -571,6 +600,14 @@ mod tests {
         assert_eq!(comm.update_up, n * 8 * cfg.k as u64);
         assert_eq!(comm.request_down, n * 4 * cfg.k as u64);
         assert_eq!(comm.broadcast_down, n * 4 * d as u64);
+        // exact raw-codec wire bytes: header 9 + fields, per frame (the
+        // FakePool reports carry 40 indices, requests/updates cfg.k = 8)
+        assert_eq!(comm.wire_up, n * ((9 + 12 + 2 * (4 + 4 * 40)) + (9 + 8 + 2 * (4 + 4 * 8))));
+        assert_eq!(
+            comm.wire_down,
+            n * ((9 + 8 + 4 * d as u64) + (9 + 4 + 4 + 4 * 8)),
+            "model + request frames for the full cohort"
+        );
         // Delta payload: global moved by the mean of the uploads
         let mut expect = vec![0.0f32; d];
         for r in &engine.uploaded_log()[0] {

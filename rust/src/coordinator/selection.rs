@@ -31,16 +31,36 @@ pub fn select_oldest_k(age: &AgeVector, report: &[u32], k: usize) -> Vec<u32> {
 /// If a report has fewer than k unassigned indices left, the remainder is
 /// filled with already-assigned indices (graceful overlap) so every client
 /// still uploads exactly k values.
+///
+/// Assignment state is a client-stamped marker vector keyed by index (one
+/// allocation per call, sized by the age vector's dimension d — never by
+/// the reported indices, which on the TCP path are remote input),
+/// replacing the former `HashSet` + O(k) `sel.contains` scans:
+/// `stamp[j] == 0` means unassigned, any other value names 1 + the
+/// position of the client that took `j` — so "taken by anyone" is a zero
+/// test and "in *my* selection" compares against the current client's
+/// stamp. Out-of-range report indices are rejected up front. Output is
+/// pinned identical to the set-based reference by
+/// `matches_reference_implementation_randomly`.
 pub fn select_disjoint(
     age: &AgeVector,
     reports: &[&[u32]],
     k: usize,
 ) -> Vec<Vec<u32>> {
-    let mut taken: std::collections::HashSet<u32> = Default::default();
-    let mut out = Vec::with_capacity(reports.len());
+    let d = age.d();
     for report in reports {
+        for &j in report.iter() {
+            assert!((j as usize) < d, "report index {j} out of range (d = {d})");
+        }
+    }
+    let mut stamp: Vec<u32> = vec![0; d];
+    let mut pos: Vec<usize> = Vec::new();
+    let mut out = Vec::with_capacity(reports.len());
+    for (c, report) in reports.iter().enumerate() {
         assert!(k <= report.len(), "k={k} > r={}", report.len());
-        let mut pos: Vec<usize> = (0..report.len()).collect();
+        let s = c as u32 + 1;
+        pos.clear();
+        pos.extend(0..report.len());
         pos.sort_by(|&a, &b| {
             let (aa, ab) = (age.get(report[a] as usize), age.get(report[b] as usize));
             ab.cmp(&aa).then_with(|| a.cmp(&b))
@@ -52,22 +72,22 @@ pub fn select_disjoint(
                 break;
             }
             let j = report[p];
-            if !taken.contains(&j) && !sel.contains(&j) {
+            if stamp[j as usize] == 0 {
+                stamp[j as usize] = s;
                 sel.push(j);
             }
         }
-        // fallback: allow overlap to fill up to k
+        // fallback: allow overlap with *siblings* to fill up to k (never
+        // a duplicate within this client's own selection)
         for &p in &pos {
             if sel.len() == k {
                 break;
             }
             let j = report[p];
-            if !sel.contains(&j) {
+            if stamp[j as usize] != s {
+                stamp[j as usize] = s;
                 sel.push(j);
             }
-        }
-        for &j in &sel {
-            taken.insert(j);
         }
         out.push(sel);
     }
@@ -151,6 +171,88 @@ mod tests {
         let sels = select_disjoint(&age, &[r, r], 2);
         assert_eq!(sels[0], vec![1, 3]); // the two old ones
         assert_eq!(sels[1], vec![0, 2]); // freshest remain for sibling
+    }
+
+    /// The pre-stamp-vector `select_disjoint`: a `HashSet` of taken
+    /// indices plus linear `sel.contains` scans. Kept as the behavioral
+    /// oracle for the marker-based implementation.
+    fn select_disjoint_reference(
+        age: &AgeVector,
+        reports: &[&[u32]],
+        k: usize,
+    ) -> Vec<Vec<u32>> {
+        let mut taken: std::collections::HashSet<u32> = Default::default();
+        let mut out = Vec::with_capacity(reports.len());
+        for report in reports {
+            assert!(k <= report.len(), "k={k} > r={}", report.len());
+            let mut pos: Vec<usize> = (0..report.len()).collect();
+            pos.sort_by(|&a, &b| {
+                let (aa, ab) = (age.get(report[a] as usize), age.get(report[b] as usize));
+                ab.cmp(&aa).then_with(|| a.cmp(&b))
+            });
+            let mut sel: Vec<u32> = Vec::with_capacity(k);
+            for &p in &pos {
+                if sel.len() == k {
+                    break;
+                }
+                let j = report[p];
+                if !taken.contains(&j) && !sel.contains(&j) {
+                    sel.push(j);
+                }
+            }
+            for &p in &pos {
+                if sel.len() == k {
+                    break;
+                }
+                let j = report[p];
+                if !sel.contains(&j) {
+                    sel.push(j);
+                }
+            }
+            for &j in &sel {
+                taken.insert(j);
+            }
+            out.push(sel);
+        }
+        out
+    }
+
+    /// The stamp-vector rewrite must reproduce the set-based original
+    /// exactly — over random cluster sizes, ages, overlap degrees, and
+    /// the overlap-fallback regime (k close to r with heavy sharing).
+    #[test]
+    fn matches_reference_implementation_randomly() {
+        crate::testing::prop_check("disjoint-matches-reference", 150, |g| {
+            let d = g.usize_in(10, 400);
+            let members = g.usize_in(1, 6);
+            let r = g.usize_in(2, d.min(40));
+            let k = g.usize_in(1, r);
+            let mut age = AgeVector::new(d);
+            for _ in 0..g.usize_in(0, 25) {
+                let take = g.usize_in(1, 8.min(d));
+                age.update(&g.vec_u32_distinct(d, take));
+            }
+            // heavy index sharing across members so the fallback path runs
+            let pool_size = g.usize_in(r, (2 * r).min(d));
+            let pool = g.vec_u32_distinct(d, pool_size);
+            let reports: Vec<Vec<u32>> = (0..members)
+                .map(|_| {
+                    // each member reports r of the shared pool, shuffled
+                    let order = g.rng.choose_k(pool.len(), pool.len());
+                    let mut rep: Vec<u32> =
+                        order.into_iter().map(|p| pool[p]).collect();
+                    rep.truncate(r);
+                    rep
+                })
+                .collect();
+            let refs: Vec<&[u32]> = reports.iter().map(|r| r.as_slice()).collect();
+            let fast = select_disjoint(&age, &refs, k);
+            let slow = select_disjoint_reference(&age, &refs, k);
+            if fast != slow {
+                return Err(format!("stamp {fast:?} != reference {slow:?}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,675 @@
+//! The v2 packed wire codec: delta+varint sparse index blocks, f16 value
+//! mode, bulk f32 (de)serialization, and reusable frame buffers.
+//!
+//! The raw (v1) frame format spends 8 B per sparse entry (u32 index +
+//! f32 value) and encodes dense payloads one element at a time. rAge-k's
+//! age-based selection produces index sets drawn from a top-r report —
+//! sorted they are clustered and small-gapped, which delta + LEB128
+//! coding compresses to ~1–2 B per index. This module holds everything
+//! codec-shaped; the frame *layouts* (which field goes where per message)
+//! live in [`crate::fl::transport`].
+//!
+//! Pieces:
+//!
+//! * [`Codec`] — the negotiated wire format (`raw` | `packed` |
+//!   `packed-f16`), carried as a protocol-version byte in the `Join`
+//!   frame and checked by the PS at accept time.
+//! * LEB128 varints for `u32` with strict overlong/truncation rejection.
+//! * [`write_index_block`]/`Dec::index_block` — the order-preserving
+//!   sparse index encoding: indices are sorted and delta+varint coded,
+//!   then the original order is restored by a varint rank per position
+//!   (ranks are a permutation of `0..n`, so their total size is
+//!   data-independent; see [`index_block_bytes`]).
+//! * IEEE 754 binary16 conversions for the lossy `packed-f16` value mode
+//!   (round-to-nearest-even, subnormals and specials handled).
+//! * Bulk `f32`/`u32` slice writers and readers — chunked
+//!   `to_le_bytes`/`from_le_bytes` over byte windows instead of the old
+//!   per-element `Enc::f32` loop with a bounds check per element.
+//! * [`FrameBuf`] — per-stream encode scratch + recv payload buffer so
+//!   steady-state rounds perform no per-frame transport allocations.
+
+use anyhow::{bail, Result};
+
+// ================================================================= Codec
+
+/// The wire format both ends of a stream agreed on at `Join` time.
+///
+/// `Raw` is the v1 format (4 B per index, 4 B per value, per-element
+/// lists). `Packed` keeps every decoded value bit-identical to `Raw`
+/// (lossless; indices delta+varint coded, report values never shipped —
+/// the PS protocol does not consume them). `PackedF16` additionally
+/// stores sparse *update* values as binary16 (lossy, ~2^-11 relative
+/// error; index streams stay lossless).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    #[default]
+    Raw,
+    Packed,
+    PackedF16,
+}
+
+impl Codec {
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Raw => "raw",
+            Codec::Packed => "packed",
+            Codec::PackedF16 => "packed-f16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s {
+            "raw" => Some(Codec::Raw),
+            "packed" => Some(Codec::Packed),
+            "packed-f16" => Some(Codec::PackedF16),
+            _ => None,
+        }
+    }
+
+    /// The protocol-version byte carried in the `Join` frame.
+    pub fn wire_id(self) -> u8 {
+        match self {
+            Codec::Raw => 0,
+            Codec::Packed => 1,
+            Codec::PackedF16 => 2,
+        }
+    }
+
+    pub fn from_wire_id(b: u8) -> Option<Codec> {
+        match b {
+            0 => Some(Codec::Raw),
+            1 => Some(Codec::Packed),
+            2 => Some(Codec::PackedF16),
+            _ => None,
+        }
+    }
+
+    /// Sparse index lists are delta+varint coded (not 4 B raw).
+    pub fn packs_indices(self) -> bool {
+        self != Codec::Raw
+    }
+
+    /// Sparse update values ship as binary16.
+    pub fn f16_values(self) -> bool {
+        self == Codec::PackedF16
+    }
+}
+
+// ================================================================ varint
+
+/// Encoded size of `x` as a LEB128 varint (1–5 bytes).
+pub fn varint_len(x: u32) -> usize {
+    if x < 1 << 7 {
+        1
+    } else if x < 1 << 14 {
+        2
+    } else if x < 1 << 21 {
+        3
+    } else if x < 1 << 28 {
+        4
+    } else {
+        5
+    }
+}
+
+/// Append `x` as a LEB128 varint.
+pub fn write_varint(out: &mut Vec<u8>, mut x: u32) {
+    loop {
+        let b = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+// ============================================================== binary16
+
+/// f32 -> IEEE 754 binary16 bits, round-to-nearest-even. Overflow maps to
+/// signed infinity, underflow to signed zero; NaN stays NaN.
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = ((x >> 23) & 0xff) as i32;
+    let mut man = x & 0x007f_ffff;
+    if exp == 255 {
+        // infinity / NaN: keep the top mantissa bits, force NaN to stay NaN
+        let m = (man >> 13) as u16;
+        return sign | 0x7c00 | if man != 0 && m == 0 { 1 } else { m };
+    }
+    let e = exp - 127 + 15; // rebias to binary16
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> +-inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // below half the smallest subnormal -> +-0
+        }
+        // subnormal half: shift the (implicit-1) mantissa into place
+        man |= 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half_man = man >> shift;
+        let round_bit = 1u32 << (shift - 1);
+        let rem = man & ((round_bit << 1) - 1);
+        let mut h = half_man;
+        if rem > round_bit || (rem == round_bit && half_man & 1 == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    let half_man = man >> 13;
+    let rem = man & 0x1fff;
+    let mut h = ((e as u32) << 10) | half_man;
+    if rem > 0x1000 || (rem == 0x1000 && half_man & 1 == 1) {
+        h += 1; // may carry into the exponent — that rounding to inf is correct
+    }
+    sign | h as u16
+}
+
+/// IEEE 754 binary16 bits -> f32 (exact; every f16 is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN
+    } else if exp != 0 {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    } else if man == 0 {
+        sign // +-0
+    } else {
+        // subnormal: normalize (value = man * 2^-24)
+        let mut e: i32 = 127 - 15 + 1;
+        let mut m = man;
+        while m & 0x0400 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        sign | ((e as u32) << 23) | ((m & 0x03ff) << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ====================================================== bulk primitives
+
+/// Append `x` little-endian.
+pub fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append `x` little-endian.
+pub fn put_f32(out: &mut Vec<u8>, x: f32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append `xs` as contiguous little-endian f32 words (no length prefix):
+/// the buffer is grown once and filled through fixed 4-byte windows, so
+/// the per-element capacity/bounds checks of the old `Enc::f32` loop
+/// vanish and the loop vectorizes.
+pub fn put_f32s_bulk(out: &mut Vec<u8>, xs: &[f32]) {
+    let start = out.len();
+    out.resize(start + 4 * xs.len(), 0);
+    for (w, &x) in out[start..].chunks_exact_mut(4).zip(xs) {
+        w.copy_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append `xs` as contiguous little-endian u32 words (no length prefix).
+pub fn put_u32s_bulk(out: &mut Vec<u8>, xs: &[u32]) {
+    let start = out.len();
+    out.resize(start + 4 * xs.len(), 0);
+    for (w, &x) in out[start..].chunks_exact_mut(4).zip(xs) {
+        w.copy_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append `xs` as contiguous binary16 words (no length prefix).
+pub fn put_f16s_bulk(out: &mut Vec<u8>, xs: &[f32]) {
+    let start = out.len();
+    out.resize(start + 2 * xs.len(), 0);
+    for (w, &x) in out[start..].chunks_exact_mut(2).zip(xs) {
+        w.copy_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+}
+
+// ============================================================== decoding
+
+/// Byte-slice decoder shared by every frame layout: strict bounds checks,
+/// varints with overlong rejection, and bulk array reads.
+pub struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Dec { b, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("truncated frame ({} bytes left, {n} needed)", self.remaining());
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// LEB128 varint. Rejects truncation and overlong encodings (more
+    /// than 5 bytes, or 5th-byte bits beyond a u32).
+    pub fn varint(&mut self) -> Result<u32> {
+        let mut x = 0u32;
+        for shift in [0u32, 7, 14, 21, 28] {
+            let b = self.u8()?;
+            if shift == 28 && b & 0xf0 != 0 {
+                bail!("overlong varint");
+            }
+            x |= ((b & 0x7f) as u32) << shift;
+            if b & 0x80 == 0 {
+                return Ok(x);
+            }
+        }
+        unreachable!("the 5th byte either returned or bailed");
+    }
+
+    /// Length-prefixed raw u32 list (the v1 format).
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        Ok(bytes.chunks_exact(4).map(|w| u32::from_le_bytes(w.try_into().unwrap())).collect())
+    }
+
+    /// Length-prefixed raw f32 list (the v1 format).
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::new();
+        self.f32s_bulk_into(n, &mut out)?;
+        Ok(out)
+    }
+
+    /// `n` contiguous little-endian f32 words into a reused buffer.
+    pub fn f32s_bulk_into(&mut self, n: usize, out: &mut Vec<f32>) -> Result<()> {
+        let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        out.clear();
+        out.extend(bytes.chunks_exact(4).map(|w| f32::from_le_bytes(w.try_into().unwrap())));
+        Ok(())
+    }
+
+    /// `n` contiguous binary16 words, widened to f32.
+    pub fn f16s_bulk(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(2).unwrap_or(usize::MAX))?;
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|w| f16_bits_to_f32(u16::from_le_bytes(w.try_into().unwrap())))
+            .collect())
+    }
+
+    /// Decode a packed index block (see [`write_index_block`]): the
+    /// original-order index list is reconstructed exactly. Rejects delta
+    /// overflow past `u32::MAX` and out-of-range ranks.
+    pub fn index_block(&mut self) -> Result<Vec<u32>> {
+        let n = self.varint()? as usize;
+        // deltas and ranks each need >= 1 byte per entry
+        if n > self.remaining() / 2 {
+            bail!("index block claims {n} entries with {} bytes left", self.remaining());
+        }
+        let mut sorted = Vec::with_capacity(n);
+        let mut prev = 0u32;
+        for j in 0..n {
+            let delta = self.varint()?;
+            let v = if j == 0 {
+                delta
+            } else {
+                match prev.checked_add(delta) {
+                    Some(v) => v,
+                    None => bail!("index delta overflows u32"),
+                }
+            };
+            sorted.push(v);
+            prev = v;
+        }
+        let mut idx = Vec::with_capacity(n);
+        for _ in 0..n {
+            let r = self.varint()? as usize;
+            if r >= n {
+                bail!("index rank {r} out of range (n = {n})");
+            }
+            idx.push(sorted[r]);
+        }
+        Ok(idx)
+    }
+
+    /// Every byte consumed?
+    pub fn done(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            bail!("{} trailing bytes in frame", self.b.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+// ==================================================== packed index block
+
+/// Sort scratch reused across frames so steady-state encoding never
+/// allocates: `perm` holds the sort permutation, `inv` its inverse (the
+/// per-position ranks that restore original order on decode).
+#[derive(Debug, Default)]
+pub struct IndexScratch {
+    perm: Vec<u32>,
+    inv: Vec<u32>,
+}
+
+/// Append the packed encoding of `idx` (order-preserving, lossless):
+///
+/// ```text
+/// varint n | varint idx_sorted[0] | varint gap ... | varint rank[0] ...
+/// ```
+///
+/// where `rank[p]` is the sorted-array position of the index at original
+/// position `p`. Sorted top-r/requested index sets are clustered, so the
+/// gaps are mostly 1-byte varints; the ranks are a permutation of `0..n`
+/// whose encoded size depends only on `n` (1 byte each up to n = 128).
+pub fn write_index_block(out: &mut Vec<u8>, idx: &[u32], scratch: &mut IndexScratch) {
+    let n = idx.len();
+    write_varint(out, n as u32);
+    scratch.perm.clear();
+    scratch.perm.extend(0..n as u32);
+    // stable order for duplicate indices -> exact roundtrip either way
+    scratch.perm.sort_unstable_by_key(|&p| (idx[p as usize], p));
+    let mut prev = 0u32;
+    for (j, &p) in scratch.perm.iter().enumerate() {
+        let v = idx[p as usize];
+        write_varint(out, if j == 0 { v } else { v - prev });
+        prev = v;
+    }
+    scratch.inv.clear();
+    scratch.inv.resize(n, 0);
+    for (j, &p) in scratch.perm.iter().enumerate() {
+        scratch.inv[p as usize] = j as u32;
+    }
+    for &r in &scratch.inv {
+        write_varint(out, r);
+    }
+}
+
+/// Exact encoded size of [`write_index_block`] without materializing it.
+/// The rank half is data-independent (a permutation of `0..n`), so only
+/// the sorted gaps need computing — used by `Msg::wire_bytes` and the
+/// engine's exact wire accounting.
+pub fn index_block_bytes(idx: &[u32]) -> usize {
+    let mut sorted = idx.to_vec();
+    sorted.sort_unstable();
+    let mut b = varint_len(idx.len() as u32);
+    let mut prev = 0u32;
+    for (j, &v) in sorted.iter().enumerate() {
+        b += varint_len(if j == 0 { v } else { v - prev });
+        prev = v;
+    }
+    for r in 0..idx.len() as u32 {
+        b += varint_len(r);
+    }
+    b
+}
+
+// ============================================================== FrameBuf
+
+/// Per-stream transport buffers: the encode scratch (one full outgoing
+/// frame), the recv payload buffer, and the index-sort scratch. A stream
+/// that sends/receives the same frame shapes every round stops allocating
+/// after its first round — [`FrameBuf::grows`] counts capacity-growth
+/// events so tests can pin the steady state.
+#[derive(Debug, Default)]
+pub struct FrameBuf {
+    /// outgoing frame bytes (header + payload), reused across sends
+    pub(crate) buf: Vec<u8>,
+    /// incoming payload bytes (tag + body), reused across recvs
+    pub(crate) payload: Vec<u8>,
+    pub(crate) scratch: IndexScratch,
+    grows: u64,
+    last_recv: usize,
+}
+
+impl FrameBuf {
+    pub fn new() -> Self {
+        FrameBuf::default()
+    }
+
+    /// Capacity-growth events across both buffers since creation.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Wire size (header + payload) of the most recent received frame.
+    pub fn last_recv_frame_len(&self) -> usize {
+        self.last_recv
+    }
+
+    pub(crate) fn note_growth(&mut self, buf_cap_before: usize, payload_cap_before: usize) {
+        if self.buf.capacity() > buf_cap_before || self.payload.capacity() > payload_cap_before {
+            self.grows += 1;
+        }
+    }
+
+    pub(crate) fn set_last_recv(&mut self, frame_len: usize) {
+        self.last_recv = frame_len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn varint_roundtrips_at_boundaries() {
+        let cases = [
+            0u32, 1, 127, 128, 255, 16383, 16384,
+            (1 << 21) - 1, 1 << 21, (1 << 28) - 1, 1 << 28, u32::MAX,
+        ];
+        for x in cases {
+            let mut b = Vec::new();
+            write_varint(&mut b, x);
+            assert_eq!(b.len(), varint_len(x), "len for {x}");
+            let mut d = Dec::new(&b);
+            assert_eq!(d.varint().unwrap(), x);
+            d.done().unwrap();
+        }
+    }
+
+    #[test]
+    fn varint_rejects_truncated_and_overlong() {
+        // truncated: continuation bit set, stream ends
+        assert!(Dec::new(&[]).varint().is_err());
+        assert!(Dec::new(&[0x80]).varint().is_err());
+        assert!(Dec::new(&[0xff, 0xff]).varint().is_err());
+        // overlong: a 6th byte would be needed
+        assert!(Dec::new(&[0x80, 0x80, 0x80, 0x80, 0x80, 0x01]).varint().is_err());
+        // 5th byte carries bits beyond a u32 (or a continuation bit)
+        assert!(Dec::new(&[0xff, 0xff, 0xff, 0xff, 0x10]).varint().is_err());
+        assert!(Dec::new(&[0xff, 0xff, 0xff, 0xff, 0xff]).varint().is_err());
+        // the largest valid 5-byte varint is u32::MAX
+        let mut d = Dec::new(&[0xff, 0xff, 0xff, 0xff, 0x0f]);
+        assert_eq!(d.varint().unwrap(), u32::MAX);
+    }
+
+    fn roundtrip_block(idx: &[u32]) {
+        let mut out = Vec::new();
+        let mut scratch = IndexScratch::default();
+        write_index_block(&mut out, idx, &mut scratch);
+        assert_eq!(out.len(), index_block_bytes(idx), "size formula for {idx:?}");
+        let mut d = Dec::new(&out);
+        assert_eq!(d.index_block().unwrap(), idx, "roundtrip for {idx:?}");
+        d.done().unwrap();
+    }
+
+    #[test]
+    fn index_block_roundtrips_edge_cases() {
+        roundtrip_block(&[]);
+        roundtrip_block(&[0]);
+        roundtrip_block(&[u32::MAX]);
+        roundtrip_block(&[u32::MAX, 0, u32::MAX - 1]);
+        roundtrip_block(&[5, 4, 3, 2, 1, 0]);
+        roundtrip_block(&[7, 7, 7]); // duplicates survive exactly
+        roundtrip_block(&[1000, 2, 999, 3, 998]);
+    }
+
+    #[test]
+    fn index_block_roundtrips_randomly() {
+        crate::testing::prop_check("index-block-roundtrip", 200, |g| {
+            let n = g.usize_in(0, 300);
+            let magnitude_order: Vec<u32> = if g.bool() {
+                // distinct, out-of-order (report-shaped)
+                g.rng.choose_k(40_000, n).into_iter().map(|x| x as u32).collect()
+            } else {
+                // arbitrary, duplicates allowed, full u32 range
+                (0..n).map(|_| (g.rng.below(1 << 16) as u32) << g.rng.below(17) as u32).collect()
+            };
+            let mut out = Vec::new();
+            let mut scratch = IndexScratch::default();
+            write_index_block(&mut out, &magnitude_order, &mut scratch);
+            if out.len() != index_block_bytes(&magnitude_order) {
+                return Err("size formula mismatch".into());
+            }
+            let mut d = Dec::new(&out);
+            let back = d.index_block().map_err(|e| e.to_string())?;
+            if back != magnitude_order {
+                return Err(format!("roundtrip mismatch: {magnitude_order:?} -> {back:?}"));
+            }
+            d.done().map_err(|e| e.to_string())
+        });
+    }
+
+    #[test]
+    fn index_block_rejects_adversarial_input() {
+        // deltas that overflow u32: [n=2, first=MAX, gap=1]
+        let mut b = Vec::new();
+        write_varint(&mut b, 2);
+        write_varint(&mut b, u32::MAX);
+        write_varint(&mut b, 1);
+        write_varint(&mut b, 0);
+        write_varint(&mut b, 1);
+        assert!(Dec::new(&b).index_block().is_err(), "delta overflow must be rejected");
+
+        // rank out of range: [n=1, idx=5, rank=1]
+        let mut b = Vec::new();
+        write_varint(&mut b, 1);
+        write_varint(&mut b, 5);
+        write_varint(&mut b, 1);
+        assert!(Dec::new(&b).index_block().is_err(), "rank >= n must be rejected");
+
+        // absurd count with a tiny body must fail before allocating
+        let mut b = Vec::new();
+        write_varint(&mut b, u32::MAX);
+        b.push(0);
+        assert!(Dec::new(&b).index_block().is_err());
+
+        // truncated mid-block
+        let mut b = Vec::new();
+        let mut scratch = IndexScratch::default();
+        write_index_block(&mut b, &[3, 9, 27], &mut scratch);
+        assert!(Dec::new(&b[..b.len() - 1]).index_block().is_err());
+    }
+
+    #[test]
+    fn f16_handles_specials() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        let nan = f16_bits_to_f32(f32_to_f16_bits(f32::NAN));
+        assert!(nan.is_nan());
+        // largest finite f16 and first overflow
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff);
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00, "midpoint rounds to even -> inf");
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00);
+        // smallest subnormal and underflow
+        assert_eq!(f16_bits_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-26)), 0x0000, "underflow to zero");
+        assert_eq!(f32_to_f16_bits(-2.0f32.powi(-26)), 0x8000);
+    }
+
+    #[test]
+    fn f16_bits_roundtrip_exactly() {
+        // every non-NaN f16 must survive f16 -> f32 -> f16 bit-for-bit
+        for h in 0..=u16::MAX {
+            let is_nan = h & 0x7c00 == 0x7c00 && h & 0x03ff != 0;
+            if is_nan {
+                assert!(f16_bits_to_f32(h).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)), h, "bits {h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_tolerance_bound_holds() {
+        let mut rng = Rng::new(7);
+        for _ in 0..2000 {
+            let x = rng.uniform_in(-1e4, 1e4);
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            let tol = x.abs() * 2.0f32.powi(-11) + 2.0f32.powi(-24);
+            assert!((x - y).abs() <= tol, "{x} -> {y} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn bulk_f32_roundtrip() {
+        let xs = vec![0.0f32, -1.5, f32::MIN_POSITIVE, 3.25e-9, -2.0e30];
+        let mut b = Vec::new();
+        put_f32s_bulk(&mut b, &xs);
+        assert_eq!(b.len(), 4 * xs.len());
+        let mut d = Dec::new(&b);
+        let mut out = Vec::new();
+        d.f32s_bulk_into(xs.len(), &mut out).unwrap();
+        assert_eq!(out, xs);
+        d.done().unwrap();
+    }
+
+    #[test]
+    fn f16_block_roundtrip_within_tolerance() {
+        let xs = vec![0.125f32, -0.5, 1.0, -2.0e-3, 3.0e3];
+        let mut b = Vec::new();
+        put_f16s_bulk(&mut b, &xs);
+        assert_eq!(b.len(), 2 * xs.len());
+        let back = Dec::new(&b).f16s_bulk(xs.len()).unwrap();
+        for (&x, &y) in xs.iter().zip(&back) {
+            assert!((x - y).abs() <= x.abs() * 2.0f32.powi(-11));
+        }
+        // exactly-representable values survive bit-for-bit
+        assert_eq!(back[0], 0.125);
+        assert_eq!(back[1], -0.5);
+        assert_eq!(back[2], 1.0);
+    }
+
+    #[test]
+    fn codec_parse_and_wire_ids() {
+        for c in [Codec::Raw, Codec::Packed, Codec::PackedF16] {
+            assert_eq!(Codec::parse(c.name()), Some(c));
+            assert_eq!(Codec::from_wire_id(c.wire_id()), Some(c));
+        }
+        assert_eq!(Codec::parse("zstd"), None);
+        assert_eq!(Codec::from_wire_id(9), None);
+        assert!(Codec::Packed.packs_indices() && !Codec::Raw.packs_indices());
+        assert!(Codec::PackedF16.f16_values() && !Codec::Packed.f16_values());
+    }
+}

@@ -5,6 +5,15 @@ use crate::util::json::Json;
 use crate::util::plot;
 
 /// Cumulative communication counters (bytes).
+///
+/// The four protocol counters measure the *information content* of the
+/// paper's protocol (DESIGN.md §6 formulas: 4 B per index, 4 B per
+/// value) and are deliberately codec-independent, so strategy
+/// comparisons stay comparable across wire formats. The `wire_*`
+/// counters measure the **exact frame bytes** the negotiated
+/// [`crate::fl::codec::Codec`] puts on the sockets (headers, varints,
+/// Sit frames included) — pinned equal to the observed socket byte
+/// counts by `rust/tests/parity.rs`.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommStats {
     /// client -> PS: top-r index reports (rAge-k only)
@@ -15,6 +24,12 @@ pub struct CommStats {
     pub request_down: u64,
     /// PS -> client: global model broadcasts
     pub broadcast_down: u64,
+    /// exact uplink frame bytes under the active codec (report + update
+    /// frames, headers included)
+    pub wire_up: u64,
+    /// exact downlink frame bytes under the active codec (model +
+    /// request + sit frames, headers included)
+    pub wire_down: u64,
 }
 
 impl CommStats {
@@ -30,6 +45,11 @@ impl CommStats {
         self.uplink() + self.downlink()
     }
 
+    /// Exact bytes on the wire in both directions under the active codec.
+    pub fn wire_total(&self) -> u64 {
+        self.wire_up + self.wire_down
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("report_up", Json::Num(self.report_up as f64)),
@@ -38,6 +58,8 @@ impl CommStats {
             ("broadcast_down", Json::Num(self.broadcast_down as f64)),
             ("uplink", Json::Num(self.uplink() as f64)),
             ("downlink", Json::Num(self.downlink() as f64)),
+            ("wire_up", Json::Num(self.wire_up as f64)),
+            ("wire_down", Json::Num(self.wire_down as f64)),
         ])
     }
 }
@@ -188,10 +210,18 @@ mod tests {
 
     #[test]
     fn comm_totals() {
-        let c = CommStats { report_up: 10, update_up: 20, request_down: 5, broadcast_down: 40 };
+        let c = CommStats {
+            report_up: 10,
+            update_up: 20,
+            request_down: 5,
+            broadcast_down: 40,
+            wire_up: 33,
+            wire_down: 50,
+        };
         assert_eq!(c.uplink(), 30);
         assert_eq!(c.downlink(), 45);
         assert_eq!(c.total(), 75);
+        assert_eq!(c.wire_total(), 83);
     }
 
     #[test]

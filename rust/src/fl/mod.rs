@@ -1,10 +1,13 @@
 //! The federated-learning runtime: clients, the in-process parallel
 //! client pool, the end-to-end trainer (a thin adapter over the unified
 //! [`crate::coordinator::engine::RoundEngine`]), metrics with
-//! byte-accurate communication accounting, and the TCP transport /
-//! multi-process deployment driving the very same engine.
+//! byte-accurate communication accounting, the versioned wire
+//! [`codec`] (raw v1 | packed v2 delta-varint | packed-f16), and the
+//! TCP transport / multi-process deployment driving the very same
+//! engine.
 
 pub mod client;
+pub mod codec;
 pub mod distributed;
 pub mod metrics;
 pub mod pool;
@@ -12,6 +15,7 @@ pub mod trainer;
 pub mod transport;
 
 pub use client::Client;
+pub use codec::Codec;
 pub use metrics::{CommStats, History, RoundRecord};
 pub use pool::InProcessPool;
 pub use trainer::{Trainer, TrainReport};

@@ -7,8 +7,35 @@
 //! accounting of DESIGN.md §6 corresponds 1:1 to real frames.
 //!
 //! Frame layout: `u32 magic | u32 payload_len | u8 tag | payload`,
-//! little-endian throughout.
+//! little-endian throughout. The *payload* layout is versioned by the
+//! [`Codec`] negotiated at `Join` time (the Join frame itself carries a
+//! protocol-version byte and is identical under every codec):
+//!
+//! * [`Codec::Raw`] — the v1 format: 4 B per index, 4 B per value,
+//!   length-prefixed lists. `Report` ships its values even though the PS
+//!   only consumes the indices.
+//! * [`Codec::Packed`] — v2: sparse index lists are sorted and
+//!   delta+LEB128 coded with a varint rank per position restoring the
+//!   original (magnitude/selection) order exactly; `Report` values are
+//!   not transmitted (the PS protocol never reads them — decoded reports
+//!   carry zeros); everything else decodes bit-identically to raw.
+//! * [`Codec::PackedF16`] — v2 with `Update` values stored as binary16
+//!   (lossy; indices stay lossless).
+//!
+//! Dense `Model` payloads are encoded/decoded with bulk byte-window
+//! copies in every codec ([`crate::fl::codec::put_f32s_bulk`]) — the
+//! frame bytes are identical across codecs, so the zero-copy broadcast
+//! shares one encode per round regardless of the negotiated format.
+//!
+//! Every frame size is available arithmetically (no encoding) through
+//! [`Msg::wire_bytes`] and the `*_frame_bytes` helpers; both are pinned
+//! equal to `encode().len()` for every variant in every codec by
+//! `wire_bytes_never_encodes`.
 
+use crate::fl::codec::{
+    index_block_bytes, put_f16s_bulk, put_f32, put_f32s_bulk, put_u32, put_u32s_bulk,
+    write_index_block, Codec, Dec, FrameBuf, IndexScratch,
+};
 use crate::sparse::SparseVec;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -17,13 +44,23 @@ use std::net::TcpStream;
 /// Protocol magic ("rAgk").
 pub const MAGIC: u32 = 0x7241_676b;
 
+/// magic(4) + payload_len(4) + tag(1)
+pub const HEADER_BYTES: usize = 9;
+
+/// The `Model` frame's tag byte (the worker hot loop peeks at it to
+/// decode the broadcast straight into a reused parameter buffer).
+pub const TAG_MODEL: u8 = 2;
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
-    /// client -> PS: hello
-    Join { client_id: u32 },
+    /// client -> PS: hello + the wire codec this worker is configured
+    /// for (protocol-version negotiation; the PS rejects mismatches)
+    Join { client_id: u32, codec: Codec },
     /// PS -> client: global model broadcast for a round
     Model { round: u32, params: Vec<f32> },
-    /// client -> PS: top-r report (indices by |g| desc + signed values)
+    /// client -> PS: top-r report (indices by |g| desc + signed values;
+    /// packed codecs transmit the indices only — the PS never reads the
+    /// values, so they decode as zeros)
     Report { client_id: u32, round: u32, report: SparseVec, mean_loss: f32 },
     /// PS -> client: the k requested indices
     Request { round: u32, indices: Vec<u32> },
@@ -37,87 +74,62 @@ pub enum Msg {
     Sit { round: u32 },
 }
 
+// ------------------------------------------------------ frame-size math
+
+fn list4(n: usize) -> usize {
+    4 + 4 * n
+}
+
+/// Wire size of a `Model` frame (codec-independent: the broadcast is
+/// dense f32 in every format).
+pub fn model_frame_bytes(d: usize) -> usize {
+    HEADER_BYTES + 4 + list4(d)
+}
+
+/// Wire size of the fixed `Sit` control frame.
+pub const SIT_FRAME_BYTES: usize = HEADER_BYTES + 4;
+
+/// Wire size of a `Report` frame carrying these indices (raw also ships
+/// an equal-length value list; packed ships indices only).
+pub fn report_frame_bytes(codec: Codec, idx: &[u32]) -> usize {
+    HEADER_BYTES
+        + 4
+        + 4
+        + 4
+        + if codec.packs_indices() {
+            index_block_bytes(idx)
+        } else {
+            list4(idx.len()) + list4(idx.len())
+        }
+}
+
+/// Wire size of a `Request` frame carrying these indices.
+pub fn request_frame_bytes(codec: Codec, indices: &[u32]) -> usize {
+    HEADER_BYTES
+        + 4
+        + if codec.packs_indices() { index_block_bytes(indices) } else { list4(indices.len()) }
+}
+
+/// Wire size of an `Update` frame carrying these indices plus one value
+/// per index (f32 raw/packed, f16 in packed-f16).
+pub fn update_frame_bytes(codec: Codec, idx: &[u32]) -> usize {
+    HEADER_BYTES
+        + 4
+        + 4
+        + match codec {
+            Codec::Raw => list4(idx.len()) + list4(idx.len()),
+            Codec::Packed => index_block_bytes(idx) + 4 * idx.len(),
+            Codec::PackedF16 => index_block_bytes(idx) + 2 * idx.len(),
+        }
+}
+
 // ------------------------------------------------------------- encoding
-
-struct Enc(Vec<u8>);
-
-impl Enc {
-    fn u32(&mut self, x: u32) {
-        self.0.extend_from_slice(&x.to_le_bytes());
-    }
-    fn f32(&mut self, x: f32) {
-        self.0.extend_from_slice(&x.to_le_bytes());
-    }
-    fn u32s(&mut self, xs: &[u32]) {
-        self.u32(xs.len() as u32);
-        for &x in xs {
-            self.u32(x);
-        }
-    }
-    fn f32s(&mut self, xs: &[f32]) {
-        self.u32(xs.len() as u32);
-        for &x in xs {
-            self.f32(x);
-        }
-    }
-    fn sparse(&mut self, s: &SparseVec) {
-        self.u32s(&s.idx);
-        self.f32s(&s.val);
-    }
-}
-
-struct Dec<'a> {
-    b: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Dec<'a> {
-    fn u32(&mut self) -> Result<u32> {
-        if self.pos + 4 > self.b.len() {
-            bail!("truncated frame");
-        }
-        let v = u32::from_le_bytes(self.b[self.pos..self.pos + 4].try_into().unwrap());
-        self.pos += 4;
-        Ok(v)
-    }
-    fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_bits(self.u32()?))
-    }
-    fn u32s(&mut self) -> Result<Vec<u32>> {
-        let n = self.u32()? as usize;
-        if self.pos + n * 4 > self.b.len() {
-            bail!("truncated u32 array (n = {n})");
-        }
-        (0..n).map(|_| self.u32()).collect()
-    }
-    fn f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.u32()? as usize;
-        if self.pos + n * 4 > self.b.len() {
-            bail!("truncated f32 array (n = {n})");
-        }
-        (0..n).map(|_| self.f32()).collect()
-    }
-    fn sparse(&mut self) -> Result<SparseVec> {
-        let idx = self.u32s()?;
-        let val = self.f32s()?;
-        if idx.len() != val.len() {
-            bail!("sparse vec length mismatch");
-        }
-        Ok(SparseVec::new(idx, val))
-    }
-    fn done(&self) -> Result<()> {
-        if self.pos != self.b.len() {
-            bail!("{} trailing bytes in frame", self.b.len() - self.pos);
-        }
-        Ok(())
-    }
-}
 
 impl Msg {
     fn tag(&self) -> u8 {
         match self {
             Msg::Join { .. } => 1,
-            Msg::Model { .. } => 2,
+            Msg::Model { .. } => TAG_MODEL,
             Msg::Report { .. } => 3,
             Msg::Request { .. } => 4,
             Msg::Update { .. } => 5,
@@ -126,59 +138,121 @@ impl Msg {
         }
     }
 
-    /// Serialize to a full frame (incl. magic + length header).
-    pub fn encode(&self) -> Vec<u8> {
-        let mut e = Enc(Vec::new());
-        match self {
-            Msg::Join { client_id } => e.u32(*client_id),
-            Msg::Model { round, params } => {
-                e.u32(*round);
-                e.f32s(params);
-            }
-            Msg::Report { client_id, round, report, mean_loss } => {
-                e.u32(*client_id);
-                e.u32(*round);
-                e.sparse(report);
-                e.f32(*mean_loss);
-            }
-            Msg::Request { round, indices } => {
-                e.u32(*round);
-                e.u32s(indices);
-            }
-            Msg::Update { client_id, round, update } => {
-                e.u32(*client_id);
-                e.u32(*round);
-                e.sparse(update);
-            }
-            Msg::Shutdown => {}
-            Msg::Sit { round } => e.u32(*round),
-        }
-        let payload = e.0;
-        let mut frame = Vec::with_capacity(9 + payload.len());
-        frame.extend_from_slice(&MAGIC.to_le_bytes());
-        frame.extend_from_slice(&(payload.len() as u32 + 1).to_le_bytes());
-        frame.push(self.tag());
-        frame.extend_from_slice(&payload);
-        frame
+    /// Serialize to a full frame (incl. magic + length header),
+    /// allocating fresh buffers — tests and one-off control frames.
+    pub fn encode(&self, codec: Codec) -> Vec<u8> {
+        let mut out = Vec::new();
+        let mut scratch = IndexScratch::default();
+        self.encode_into(codec, &mut out, &mut scratch);
+        out
     }
 
-    /// Decode a payload (tag + body, no header).
-    pub fn decode(tagged: &[u8]) -> Result<Msg> {
+    /// Serialize into a reused buffer (cleared first); the index-sort
+    /// scratch is reused too, so steady-state encoding allocates nothing.
+    pub fn encode_into(&self, codec: Codec, out: &mut Vec<u8>, scratch: &mut IndexScratch) {
+        frame_start(out, self.tag());
+        match self {
+            Msg::Join { client_id, codec: joined } => {
+                put_u32(out, *client_id);
+                out.push(joined.wire_id());
+            }
+            Msg::Model { round, params } => write_model_payload(out, *round, params),
+            Msg::Report { client_id, round, report, mean_loss } => write_report_payload(
+                codec, out, scratch, *client_id, *round, &report.idx, &report.val, *mean_loss,
+            ),
+            Msg::Request { round, indices } => {
+                write_request_payload(codec, out, scratch, *round, indices)
+            }
+            Msg::Update { client_id, round, update } => {
+                put_u32(out, *client_id);
+                put_u32(out, *round);
+                if codec.packs_indices() {
+                    write_index_block(out, &update.idx, scratch);
+                    if codec.f16_values() {
+                        put_f16s_bulk(out, &update.val);
+                    } else {
+                        put_f32s_bulk(out, &update.val);
+                    }
+                } else {
+                    put_u32(out, update.idx.len() as u32);
+                    put_u32s_bulk(out, &update.idx);
+                    put_u32(out, update.val.len() as u32);
+                    put_f32s_bulk(out, &update.val);
+                }
+            }
+            Msg::Shutdown => {}
+            Msg::Sit { round } => put_u32(out, *round),
+        }
+        frame_finish(out);
+    }
+
+    /// Decode a payload (tag + body, no header) under the stream's codec.
+    /// `Join`, `Shutdown`, and `Sit` are codec-independent.
+    pub fn decode(tagged: &[u8], codec: Codec) -> Result<Msg> {
         if tagged.is_empty() {
             bail!("empty frame");
         }
-        let mut d = Dec { b: &tagged[1..], pos: 0 };
+        let mut d = Dec::new(&tagged[1..]);
         let msg = match tagged[0] {
-            1 => Msg::Join { client_id: d.u32()? },
-            2 => Msg::Model { round: d.u32()?, params: d.f32s()? },
-            3 => Msg::Report {
-                client_id: d.u32()?,
-                round: d.u32()?,
-                report: d.sparse()?,
-                mean_loss: d.f32()?,
-            },
-            4 => Msg::Request { round: d.u32()?, indices: d.u32s()? },
-            5 => Msg::Update { client_id: d.u32()?, round: d.u32()?, update: d.sparse()? },
+            1 => {
+                let client_id = d.u32()?;
+                let b = d.u8()?;
+                let joined = Codec::from_wire_id(b)
+                    .with_context(|| format!("unknown codec wire id {b}"))?;
+                Msg::Join { client_id, codec: joined }
+            }
+            TAG_MODEL => {
+                let round = d.u32()?;
+                let params = d.f32s()?;
+                Msg::Model { round, params }
+            }
+            3 => {
+                let client_id = d.u32()?;
+                let round = d.u32()?;
+                let (report, mean_loss) = if codec.packs_indices() {
+                    let mean_loss = d.f32()?;
+                    let idx = d.index_block()?;
+                    let val = vec![0.0f32; idx.len()];
+                    (SparseVec::new(idx, val), mean_loss)
+                } else {
+                    let idx = d.u32s()?;
+                    let val = d.f32s()?;
+                    if idx.len() != val.len() {
+                        bail!("sparse vec length mismatch");
+                    }
+                    (SparseVec::new(idx, val), d.f32()?)
+                };
+                Msg::Report { client_id, round, report, mean_loss }
+            }
+            4 => {
+                let round = d.u32()?;
+                let indices =
+                    if codec.packs_indices() { d.index_block()? } else { d.u32s()? };
+                Msg::Request { round, indices }
+            }
+            5 => {
+                let client_id = d.u32()?;
+                let round = d.u32()?;
+                let update = if codec.packs_indices() {
+                    let idx = d.index_block()?;
+                    let val = if codec.f16_values() {
+                        d.f16s_bulk(idx.len())?
+                    } else {
+                        let mut v = Vec::new();
+                        d.f32s_bulk_into(idx.len(), &mut v)?;
+                        v
+                    };
+                    SparseVec::new(idx, val)
+                } else {
+                    let idx = d.u32s()?;
+                    let val = d.f32s()?;
+                    if idx.len() != val.len() {
+                        bail!("sparse vec length mismatch");
+                    }
+                    SparseVec::new(idx, val)
+                };
+                Msg::Update { client_id, round, update }
+            }
             6 => Msg::Shutdown,
             7 => Msg::Sit { round: d.u32()? },
             t => bail!("unknown message tag {t}"),
@@ -188,59 +262,214 @@ impl Msg {
     }
 
     /// Wire size of the encoded frame in bytes, computed arithmetically —
-    /// no re-encoding (the old implementation allocated a full frame copy,
-    /// a d-vector for `Model`, just to return a length). Pinned equal to
-    /// `encode().len()` for every variant by `wire_bytes_never_encodes`.
-    pub fn wire_bytes(&self) -> usize {
-        // magic(4) + payload_len(4) + tag(1)
-        const HEADER: usize = 9;
-        // every length-prefixed list costs 4 (count) + 4 per element
-        fn list(n: usize) -> usize {
-            4 + 4 * n
+    /// no frame is materialized. Pinned equal to `encode(codec).len()` for
+    /// every variant in every codec by `wire_bytes_never_encodes`.
+    pub fn wire_bytes(&self, codec: Codec) -> usize {
+        match self {
+            Msg::Join { .. } => HEADER_BYTES + 5,
+            Msg::Model { params, .. } => model_frame_bytes(params.len()),
+            Msg::Report { report, .. } => report_frame_bytes(codec, &report.idx),
+            Msg::Request { indices, .. } => request_frame_bytes(codec, indices),
+            Msg::Update { update, .. } => update_frame_bytes(codec, &update.idx),
+            Msg::Shutdown => HEADER_BYTES,
+            Msg::Sit { .. } => SIT_FRAME_BYTES,
         }
-        fn sparse(s: &SparseVec) -> usize {
-            list(s.idx.len()) + list(s.val.len())
-        }
-        HEADER
-            + match self {
-                Msg::Join { .. } => 4,
-                Msg::Model { params, .. } => 4 + list(params.len()),
-                Msg::Report { report, .. } => 4 + 4 + sparse(report) + 4,
-                Msg::Request { indices, .. } => 4 + list(indices.len()),
-                Msg::Update { update, .. } => 4 + 4 + sparse(update),
-                Msg::Shutdown => 0,
-                Msg::Sit { .. } => 4,
-            }
     }
 }
 
-/// Encode a `Model` broadcast frame straight from a parameter slice —
-/// byte-identical to `Msg::Model { round, params: params.to_vec() }
-/// .encode()` but without materializing the intermediate d-vector copy.
-/// The PS encodes **one** such frame per round and writes it to every
-/// cohort stream (the zero-copy broadcast); pinned byte-identical by
-/// `model_frame_helper_matches_encode`.
+/// Open a frame: magic + length placeholder (backpatched by
+/// [`frame_finish`]) + tag, into a cleared reused buffer.
+fn frame_start(out: &mut Vec<u8>, tag: u8) {
+    out.clear();
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&[0u8; 4]);
+    out.push(tag);
+}
+
+/// Backpatch the payload length written as a placeholder by
+/// [`frame_start`].
+fn frame_finish(out: &mut Vec<u8>) {
+    let len = (out.len() - 8) as u32;
+    out[4..8].copy_from_slice(&len.to_le_bytes());
+}
+
+/// `Model` payload body (round + length-prefixed bulk f32), shared by
+/// `Msg::encode_into` and [`encode_model_frame_into`] so the zero-copy
+/// broadcast helper stays byte-identical to the generic encoder.
+fn write_model_payload(out: &mut Vec<u8>, round: u32, params: &[f32]) {
+    put_u32(out, round);
+    put_u32(out, params.len() as u32);
+    put_f32s_bulk(out, params);
+}
+
+/// `Report` payload body — the single definition of the Report layout,
+/// shared by `Msg::encode_into` and the borrowed-parts hot path
+/// [`send_report`], so the two encoders cannot drift.
+#[allow(clippy::too_many_arguments)]
+fn write_report_payload(
+    codec: Codec,
+    out: &mut Vec<u8>,
+    scratch: &mut IndexScratch,
+    client_id: u32,
+    round: u32,
+    idx: &[u32],
+    val: &[f32],
+    mean_loss: f32,
+) {
+    put_u32(out, client_id);
+    put_u32(out, round);
+    if codec.packs_indices() {
+        put_f32(out, mean_loss);
+        write_index_block(out, idx, scratch);
+    } else {
+        put_u32(out, idx.len() as u32);
+        put_u32s_bulk(out, idx);
+        put_u32(out, val.len() as u32);
+        put_f32s_bulk(out, val);
+        put_f32(out, mean_loss);
+    }
+}
+
+/// `Request` payload body — the single definition of the Request layout,
+/// shared by `Msg::encode_into` and [`send_request`].
+fn write_request_payload(
+    codec: Codec,
+    out: &mut Vec<u8>,
+    scratch: &mut IndexScratch,
+    round: u32,
+    indices: &[u32],
+) {
+    put_u32(out, round);
+    if codec.packs_indices() {
+        write_index_block(out, indices, scratch);
+    } else {
+        put_u32(out, indices.len() as u32);
+        put_u32s_bulk(out, indices);
+    }
+}
+
+/// Encode a `Model` broadcast frame straight from a parameter slice into
+/// a reusable buffer — byte-identical to `Msg::Model { round, params }
+/// .encode(codec)` for every codec, without materializing the
+/// intermediate d-vector copy. The PS encodes **one** such frame per
+/// round and writes the same bytes to every cohort stream (the zero-copy
+/// broadcast); pinned byte-identical by `model_frame_helper_matches_encode`.
+pub fn encode_model_frame_into(round: u32, params: &[f32], out: &mut Vec<u8>) {
+    // clear before reserving: `reserve` is relative to the current
+    // length, and a buffer still holding last round's frame would
+    // otherwise double its capacity on every reuse
+    out.clear();
+    out.reserve(model_frame_bytes(params.len()));
+    frame_start(out, TAG_MODEL);
+    write_model_payload(out, round, params);
+    frame_finish(out);
+}
+
+/// Allocating convenience over [`encode_model_frame_into`].
 pub fn encode_model_frame(round: u32, params: &[f32]) -> Vec<u8> {
-    let payload_len = 1 + 4 + 4 + 4 * params.len(); // tag + round + list
-    let mut frame = Vec::with_capacity(8 + payload_len);
-    frame.extend_from_slice(&MAGIC.to_le_bytes());
-    frame.extend_from_slice(&(payload_len as u32).to_le_bytes());
-    frame.push(2); // Msg::Model's tag
-    frame.extend_from_slice(&round.to_le_bytes());
-    frame.extend_from_slice(&(params.len() as u32).to_le_bytes());
-    for &x in params {
-        frame.extend_from_slice(&x.to_le_bytes());
+    let mut out = Vec::new();
+    encode_model_frame_into(round, params, &mut out);
+    out
+}
+
+/// Decode a `Model` payload (tag + body) straight into a reused parameter
+/// buffer, returning the round — the worker hot loop's allocation-free
+/// path for the biggest frame of every round.
+pub fn decode_model_into(tagged: &[u8], params: &mut Vec<f32>) -> Result<u32> {
+    if tagged.first() != Some(&TAG_MODEL) {
+        bail!("not a Model frame");
     }
-    frame
+    let mut d = Dec::new(&tagged[1..]);
+    let round = d.u32()?;
+    let n = d.u32()? as usize;
+    d.f32s_bulk_into(n, params)?;
+    d.done()?;
+    Ok(round)
 }
 
-/// Write one message to a TCP stream.
-pub fn send(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
-    stream.write_all(&msg.encode()).context("send frame")
+// ------------------------------------------------------------ TCP plumbing
+
+/// Write one message to a TCP stream (allocating; joins, shutdowns,
+/// tests — the round hot path uses [`send_frame`]).
+pub fn send(stream: &mut TcpStream, msg: &Msg, codec: Codec) -> Result<()> {
+    stream.write_all(&msg.encode(codec)).context("send frame")
 }
 
-/// Read one message from a TCP stream (blocking).
-pub fn recv(stream: &mut TcpStream) -> Result<Msg> {
+/// Read one message from a TCP stream (allocating; see [`recv_frame`]).
+pub fn recv(stream: &mut TcpStream, codec: Codec) -> Result<Msg> {
+    let mut fb = FrameBuf::new();
+    recv_frame(stream, codec, &mut fb)
+}
+
+/// Write one message through the stream's reused [`FrameBuf`]; returns
+/// the frame's wire size. Steady-state sends allocate nothing.
+pub fn send_frame(
+    stream: &mut TcpStream,
+    msg: &Msg,
+    codec: Codec,
+    fb: &mut FrameBuf,
+) -> Result<usize> {
+    let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
+    msg.encode_into(codec, &mut fb.buf, &mut fb.scratch);
+    fb.note_growth(bc, pc);
+    stream.write_all(&fb.buf).context("send frame")?;
+    Ok(fb.buf.len())
+}
+
+/// Encode a `Report` frame from borrowed parts through the stream's
+/// [`FrameBuf`] — the worker's per-round hot path, avoiding the r-entry
+/// report clone a `Msg::Report` would need; returns the wire size.
+pub fn send_report(
+    stream: &mut TcpStream,
+    codec: Codec,
+    fb: &mut FrameBuf,
+    client_id: u32,
+    round: u32,
+    report: &SparseVec,
+    mean_loss: f32,
+) -> Result<usize> {
+    let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
+    frame_start(&mut fb.buf, 3); // Msg::Report's tag
+    write_report_payload(
+        codec,
+        &mut fb.buf,
+        &mut fb.scratch,
+        client_id,
+        round,
+        &report.idx,
+        &report.val,
+        mean_loss,
+    );
+    frame_finish(&mut fb.buf);
+    fb.note_growth(bc, pc);
+    stream.write_all(&fb.buf).context("send report frame")?;
+    Ok(fb.buf.len())
+}
+
+/// Encode a `Request` frame from a borrowed index slice through the
+/// stream's [`FrameBuf`] (the PS's per-stream hot path); returns the wire
+/// size.
+pub fn send_request(
+    stream: &mut TcpStream,
+    codec: Codec,
+    fb: &mut FrameBuf,
+    round: u32,
+    indices: &[u32],
+) -> Result<usize> {
+    let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
+    frame_start(&mut fb.buf, 4); // Msg::Request's tag
+    write_request_payload(codec, &mut fb.buf, &mut fb.scratch, round, indices);
+    frame_finish(&mut fb.buf);
+    fb.note_growth(bc, pc);
+    stream.write_all(&fb.buf).context("send request frame")?;
+    Ok(fb.buf.len())
+}
+
+/// Read one frame's payload (tag + body) into the stream's reused
+/// [`FrameBuf`]; steady-state receives allocate nothing. The worker hot
+/// loop peeks at the tag to route `Model` frames into
+/// [`decode_model_into`] without building a `Msg`.
+pub fn recv_payload<'a>(stream: &mut TcpStream, fb: &'a mut FrameBuf) -> Result<&'a [u8]> {
     let mut header = [0u8; 8];
     stream.read_exact(&mut header).context("recv header")?;
     let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
@@ -251,58 +480,141 @@ pub fn recv(stream: &mut TcpStream) -> Result<Msg> {
     if len == 0 || len > 512 << 20 {
         bail!("implausible frame length {len}");
     }
-    let mut payload = vec![0u8; len];
-    stream.read_exact(&mut payload).context("recv payload")?;
-    Msg::decode(&payload)
+    let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
+    fb.payload.resize(len, 0);
+    fb.note_growth(bc, pc);
+    stream.read_exact(&mut fb.payload).context("recv payload")?;
+    fb.set_last_recv(8 + len);
+    Ok(&fb.payload)
+}
+
+/// Read one message through the stream's reused [`FrameBuf`].
+pub fn recv_frame(stream: &mut TcpStream, codec: Codec, fb: &mut FrameBuf) -> Result<Msg> {
+    let payload = recv_payload(stream, fb)?;
+    Msg::decode(payload, codec)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn roundtrip(m: Msg) {
-        let frame = m.encode();
+    const ALL: [Codec; 3] = [Codec::Raw, Codec::Packed, Codec::PackedF16];
+
+    fn roundtrip(m: Msg, codec: Codec) {
+        let frame = m.encode(codec);
         assert_eq!(&frame[0..4], &MAGIC.to_le_bytes());
         let len = u32::from_le_bytes(frame[4..8].try_into().unwrap()) as usize;
         assert_eq!(len, frame.len() - 8);
-        let back = Msg::decode(&frame[8..]).unwrap();
-        assert_eq!(m, back);
+        let back = Msg::decode(&frame[8..], codec).unwrap();
+        assert_eq!(m, back, "codec {codec:?}");
     }
 
     #[test]
-    fn all_messages_roundtrip() {
-        roundtrip(Msg::Join { client_id: 3 });
-        roundtrip(Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] });
-        roundtrip(Msg::Report {
-            client_id: 1,
-            round: 2,
-            report: SparseVec::new(vec![5, 900, 39000], vec![0.5, -0.25, 1e-9]),
-            mean_loss: 2.25,
-        });
-        roundtrip(Msg::Request { round: 9, indices: vec![1, 2, 3] });
-        roundtrip(Msg::Update {
+    fn all_messages_roundtrip_raw() {
+        roundtrip(Msg::Join { client_id: 3, codec: Codec::Raw }, Codec::Raw);
+        roundtrip(Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] }, Codec::Raw);
+        roundtrip(
+            Msg::Report {
+                client_id: 1,
+                round: 2,
+                report: SparseVec::new(vec![5, 900, 39000], vec![0.5, -0.25, 1e-9]),
+                mean_loss: 2.25,
+            },
+            Codec::Raw,
+        );
+        roundtrip(Msg::Request { round: 9, indices: vec![1, 2, 3] }, Codec::Raw);
+        roundtrip(
+            Msg::Update { client_id: 0, round: 1, update: SparseVec::new(vec![], vec![]) },
+            Codec::Raw,
+        );
+        roundtrip(Msg::Shutdown, Codec::Raw);
+        roundtrip(Msg::Sit { round: 11 }, Codec::Raw);
+    }
+
+    #[test]
+    fn all_messages_roundtrip_packed() {
+        for codec in [Codec::Packed, Codec::PackedF16] {
+            // Join carries the *worker's* codec field under any frame codec
+            roundtrip(Msg::Join { client_id: 3, codec: Codec::PackedF16 }, codec);
+            roundtrip(Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] }, codec);
+            // report values are not transmitted: they decode as zeros
+            let m = Msg::Report {
+                client_id: 1,
+                round: 2,
+                report: SparseVec::new(vec![39000, 5, 900], vec![0.5, -0.25, 1e-9]),
+                mean_loss: 2.25,
+            };
+            let back = Msg::decode(&m.encode(codec)[8..], codec).unwrap();
+            match back {
+                Msg::Report { client_id: 1, round: 2, report, mean_loss } => {
+                    assert_eq!(report.idx, vec![39000, 5, 900], "order must survive");
+                    assert_eq!(report.val, vec![0.0; 3]);
+                    assert_eq!(mean_loss, 2.25);
+                }
+                other => panic!("bad decode: {other:?}"),
+            }
+            // request order survives the sorted encoding
+            roundtrip(Msg::Request { round: 9, indices: vec![30, 1, 2000, 2] }, codec);
+            roundtrip(Msg::Request { round: 9, indices: vec![] }, codec);
+            roundtrip(
+                Msg::Update { client_id: 0, round: 1, update: SparseVec::new(vec![], vec![]) },
+                codec,
+            );
+            roundtrip(Msg::Shutdown, codec);
+            roundtrip(Msg::Sit { round: 11 }, codec);
+        }
+        // lossless packed: update values bit-exact
+        roundtrip(
+            Msg::Update {
+                client_id: 4,
+                round: 6,
+                update: SparseVec::new(vec![80, 4, 15], vec![1e-9, -2.5, 3.25]),
+            },
+            Codec::Packed,
+        );
+    }
+
+    #[test]
+    fn packed_f16_update_values_round_within_tolerance() {
+        let vals = vec![0.5f32, -0.125, 3.0e3, -2.0e-3];
+        let m = Msg::Update {
             client_id: 0,
             round: 1,
-            update: SparseVec::new(vec![], vec![]),
-        });
-        roundtrip(Msg::Shutdown);
-        roundtrip(Msg::Sit { round: 11 });
+            update: SparseVec::new(vec![9, 2, 77, 5], vals.clone()),
+        };
+        let back = Msg::decode(&m.encode(Codec::PackedF16)[8..], Codec::PackedF16).unwrap();
+        match back {
+            Msg::Update { update, .. } => {
+                assert_eq!(update.idx, vec![9, 2, 77, 5], "indices stay lossless");
+                for (&x, &y) in vals.iter().zip(&update.val) {
+                    assert!((x - y).abs() <= x.abs() * 2.0f32.powi(-11), "{x} -> {y}");
+                }
+            }
+            other => panic!("bad decode: {other:?}"),
+        }
     }
 
     /// One frame of every variant (empty and non-empty payloads where it
-    /// matters): the arithmetic size must equal the encoded length.
+    /// matters): the arithmetic size must equal the encoded length, in
+    /// every codec.
     fn every_variant() -> Vec<Msg> {
         vec![
-            Msg::Join { client_id: 3 },
+            Msg::Join { client_id: 3, codec: Codec::Packed },
             Msg::Model { round: 7, params: vec![] },
             Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] },
             Msg::Report {
                 client_id: 1,
                 round: 2,
-                report: SparseVec::new(vec![5, 900], vec![0.5, -0.25]),
+                report: SparseVec::new(vec![900, 5], vec![0.5, -0.25]),
                 mean_loss: 2.25,
             },
-            Msg::Request { round: 9, indices: vec![1, 2, 3] },
+            Msg::Report {
+                client_id: 1,
+                round: 2,
+                report: SparseVec::new(vec![], vec![]),
+                mean_loss: 0.5,
+            },
+            Msg::Request { round: 9, indices: vec![1, 200_000, 3] },
             Msg::Request { round: 9, indices: vec![] },
             Msg::Update {
                 client_id: 0,
@@ -317,53 +629,219 @@ mod tests {
 
     #[test]
     fn wire_bytes_never_encodes() {
-        for m in every_variant() {
-            assert_eq!(m.wire_bytes(), m.encode().len(), "{m:?}");
+        for codec in ALL {
+            for m in every_variant() {
+                assert_eq!(m.wire_bytes(codec), m.encode(codec).len(), "{codec:?} {m:?}");
+            }
         }
+    }
+
+    #[test]
+    fn frame_size_helpers_match_wire_bytes() {
+        let idx = vec![40u32, 4, 400, 44];
+        let val = vec![1.0f32; 4];
+        for codec in ALL {
+            let report = Msg::Report {
+                client_id: 0,
+                round: 0,
+                report: SparseVec::new(idx.clone(), val.clone()),
+                mean_loss: 0.0,
+            };
+            assert_eq!(report.wire_bytes(codec), report_frame_bytes(codec, &idx));
+            let req = Msg::Request { round: 0, indices: idx.clone() };
+            assert_eq!(req.wire_bytes(codec), request_frame_bytes(codec, &idx));
+            let up = Msg::Update {
+                client_id: 0,
+                round: 0,
+                update: SparseVec::new(idx.clone(), val.clone()),
+            };
+            assert_eq!(up.wire_bytes(codec), update_frame_bytes(codec, &idx));
+        }
+        let model = Msg::Model { round: 0, params: vec![0.0; 9] };
+        assert_eq!(model.wire_bytes(Codec::Raw), model_frame_bytes(9));
+        assert_eq!(Msg::Sit { round: 0 }.wire_bytes(Codec::Packed), SIT_FRAME_BYTES);
+    }
+
+    #[test]
+    fn packed_shrinks_sparse_frames() {
+        // a report-shaped index set: top-75 of d = 39760, arbitrary order
+        let idx: Vec<u32> = (0..75u32).map(|i| (i * 523 + 17 * (i % 7)) % 39760).collect();
+        let val = vec![1.0f32; idx.len()];
+        let m = Msg::Report {
+            client_id: 0,
+            round: 0,
+            report: SparseVec::new(idx.clone(), val),
+            mean_loss: 0.0,
+        };
+        let raw = m.wire_bytes(Codec::Raw);
+        let packed = m.wire_bytes(Codec::Packed);
+        assert!(
+            packed * 2 <= raw,
+            "packed report must at least halve the raw frame: {packed} vs {raw}"
+        );
+        let up = Msg::Update {
+            client_id: 0,
+            round: 0,
+            update: SparseVec::new(idx[..10].to_vec(), vec![1.0; 10]),
+        };
+        assert!(up.wire_bytes(Codec::Packed) < up.wire_bytes(Codec::Raw));
+        assert!(up.wire_bytes(Codec::PackedF16) < up.wire_bytes(Codec::Packed));
     }
 
     #[test]
     fn model_frame_helper_matches_encode() {
         for params in [vec![], vec![0.5f32], vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0]] {
-            let via_msg = Msg::Model { round: 3, params: params.clone() }.encode();
-            assert_eq!(encode_model_frame(3, &params), via_msg);
+            for codec in ALL {
+                let via_msg = Msg::Model { round: 3, params: params.clone() }.encode(codec);
+                assert_eq!(encode_model_frame(3, &params), via_msg, "{codec:?}");
+            }
         }
     }
 
     #[test]
-    fn rejects_corrupt_frames() {
-        assert!(Msg::decode(&[]).is_err());
-        assert!(Msg::decode(&[99]).is_err());
-        // truncated body
-        let frame = Msg::Request { round: 1, indices: vec![1, 2, 3] }.encode();
-        assert!(Msg::decode(&frame[8..frame.len() - 2]).is_err());
-        // trailing garbage
-        let mut long = frame[8..].to_vec();
-        long.push(0);
-        assert!(Msg::decode(&long).is_err());
+    fn decode_model_into_reuses_buffer() {
+        let params = vec![0.25f32; 100];
+        let frame = encode_model_frame(9, &params);
+        let mut buf = Vec::new();
+        assert_eq!(decode_model_into(&frame[8..], &mut buf).unwrap(), 9);
+        assert_eq!(buf, params);
+        let cap = buf.capacity();
+        // a second same-shape decode must not reallocate
+        assert_eq!(decode_model_into(&frame[8..], &mut buf).unwrap(), 9);
+        assert_eq!(buf.capacity(), cap);
+        // non-model frames are refused
+        let sit = Msg::Sit { round: 1 }.encode(Codec::Raw);
+        assert!(decode_model_into(&sit[8..], &mut buf).is_err());
     }
 
     #[test]
-    fn tcp_roundtrip() {
+    fn rejects_corrupt_frames() {
+        for codec in ALL {
+            assert!(Msg::decode(&[], codec).is_err());
+            assert!(Msg::decode(&[99], codec).is_err());
+            // truncated body
+            let frame = Msg::Request { round: 1, indices: vec![1, 2, 3] }.encode(codec);
+            assert!(Msg::decode(&frame[8..frame.len() - 2], codec).is_err());
+            // trailing garbage
+            let mut long = frame[8..].to_vec();
+            long.push(0);
+            assert!(Msg::decode(&long, codec).is_err());
+        }
+        // unknown codec byte in a Join
+        let mut join = Msg::Join { client_id: 0, codec: Codec::Raw }.encode(Codec::Raw);
+        let n = join.len();
+        join[n - 1] = 77;
+        assert!(Msg::decode(&join[8..], Codec::Raw).is_err());
+        // packed update whose value block is truncated
+        let up = Msg::Update {
+            client_id: 0,
+            round: 1,
+            update: SparseVec::new(vec![1, 2], vec![1.0, 2.0]),
+        };
+        let frame = up.encode(Codec::Packed);
+        assert!(Msg::decode(&frame[8..frame.len() - 3], Codec::Packed).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip_all_codecs() {
+        use std::net::TcpListener;
+        for codec in ALL {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let handle = std::thread::spawn(move || {
+                let (mut s, _) = listener.accept().unwrap();
+                let mut fb = FrameBuf::new();
+                let m = recv_frame(&mut s, codec, &mut fb).unwrap();
+                send_frame(&mut s, &m, codec, &mut fb).unwrap(); // echo
+            });
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let msg = Msg::Model { round: 5, params: vec![0.5; 1000] };
+            send(&mut stream, &msg, codec).unwrap();
+            let back = recv(&mut stream, codec).unwrap();
+            assert_eq!(msg, back);
+            handle.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn frame_buf_stops_growing_in_steady_state() {
         use std::net::TcpListener;
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
+        let codec = Codec::Packed;
+        let rounds = 8u32;
         let handle = std::thread::spawn(move || {
             let (mut s, _) = listener.accept().unwrap();
-            let m = recv(&mut s).unwrap();
-            send(&mut s, &m).unwrap(); // echo
+            let mut fb = FrameBuf::new();
+            let mut grows_after_round = Vec::new();
+            for _ in 0..rounds {
+                let m = recv_frame(&mut s, codec, &mut fb).unwrap();
+                send_frame(&mut s, &m, codec, &mut fb).unwrap();
+                grows_after_round.push(fb.grows());
+            }
+            grows_after_round
         });
         let mut stream = TcpStream::connect(addr).unwrap();
-        let msg = Msg::Model { round: 5, params: vec![0.5; 1000] };
-        send(&mut stream, &msg).unwrap();
-        let back = recv(&mut stream).unwrap();
-        assert_eq!(msg, back);
+        let mut fb = FrameBuf::new();
+        for round in 0..rounds {
+            let msg = Msg::Update {
+                client_id: 1,
+                round,
+                update: SparseVec::new(
+                    (0..20u32).map(|i| (i * 317 + round * 7) % 39760).collect(),
+                    vec![0.5; 20],
+                ),
+            };
+            send_frame(&mut stream, &msg, codec, &mut fb).unwrap();
+            let back = recv_frame(&mut stream, codec, &mut fb).unwrap();
+            assert_eq!(msg, back);
+        }
+        let grows = handle.join().unwrap();
+        // all buffer growth happens in the first rounds; after the
+        // high-water mark every send/recv reuses capacity exactly
+        assert_eq!(grows[2], *grows.last().unwrap(), "no growth after round 3: {grows:?}");
+    }
+
+    #[test]
+    fn send_helpers_match_generic_encoding() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let codec = Codec::Packed;
+        let report = SparseVec::new(vec![500, 2, 39000], vec![1.5, -0.5, 0.25]);
+        let rep2 = report.clone();
+        let handle = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut fb = FrameBuf::new();
+            let n = send_report(&mut s, codec, &mut fb, 7, 3, &rep2, 1.25).unwrap();
+            assert_eq!(n, report_frame_bytes(codec, &rep2.idx));
+            let n = send_request(&mut s, codec, &mut fb, 3, &[9, 1, 4]).unwrap();
+            assert_eq!(n, request_frame_bytes(codec, &[9, 1, 4]));
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let got = recv(&mut stream, codec).unwrap();
+        let want = Msg::Report { client_id: 7, round: 3, report, mean_loss: 1.25 };
+        // packed report values are zeroed on decode; compare the rest
+        match (got, want) {
+            (
+                Msg::Report { client_id: a, round: b, report: r1, mean_loss: l1 },
+                Msg::Report { client_id: c, round: d, report: r2, mean_loss: l2 },
+            ) => {
+                assert_eq!((a, b, l1), (c, d, l2));
+                assert_eq!(r1.idx, r2.idx);
+            }
+            other => panic!("bad frames: {other:?}"),
+        }
+        assert_eq!(
+            recv(&mut stream, codec).unwrap(),
+            Msg::Request { round: 3, indices: vec![9, 1, 4] }
+        );
         handle.join().unwrap();
     }
 
     #[test]
     fn wire_bytes_accounting_matches_design() {
-        // sparse update of k entries: 8k payload + 8 list headers
+        // raw sparse update of k entries: 8k payload + 8 list headers
         let k = 10;
         let m = Msg::Update {
             client_id: 0,
@@ -371,9 +849,10 @@ mod tests {
             update: SparseVec::new(vec![0; k], vec![0.0; k]),
         };
         // header(8) + tag(1) + client(4) + round(4) + 2 lens(8) + 8k
-        assert_eq!(m.wire_bytes(), 8 + 1 + 4 + 4 + 8 + 8 * k);
+        assert_eq!(m.wire_bytes(Codec::Raw), 8 + 1 + 4 + 4 + 8 + 8 * k);
         // the Sit control frame is a fixed 13 bytes — cheap enough to keep
         // off-cohort workers in sync every round (DESIGN.md §6)
-        assert_eq!(Msg::Sit { round: 1 }.wire_bytes(), 8 + 1 + 4);
+        assert_eq!(Msg::Sit { round: 1 }.wire_bytes(Codec::Raw), 8 + 1 + 4);
+        assert_eq!(SIT_FRAME_BYTES, 13);
     }
 }

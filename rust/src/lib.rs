@@ -15,7 +15,11 @@
 //!   **once** in [`coordinator::engine::RoundEngine`] with byte-accurate
 //!   communication accounting — driven identically by the parallel
 //!   in-process pool ([`fl::pool::InProcessPool`], scoped-thread client
-//!   training) and the TCP deployment ([`fl::distributed`]).
+//!   training) and the TCP deployment ([`fl::distributed`]), whose wire
+//!   format is versioned by [`fl::codec::Codec`] (raw v1 | packed v2
+//!   delta-varint sparse frames, lossless | packed-f16) with per-stream
+//!   reused frame buffers (no per-frame buffer allocations in steady
+//!   state).
 //! * **Layer 2** — JAX model graphs AOT-lowered to HLO text
 //!   (`python/compile`), executed from [`runtime`] via the PJRT C API.
 //! * **Layer 1** — Pallas kernels (top-r scan, age sweep, tiled matmul)

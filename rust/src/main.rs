@@ -36,6 +36,7 @@ fn train_spec(cmd: &str, about: &str) -> ArgSpec {
         .opt("clients", "0", "number of clients (0 = preset)")
         .opt("participation", "", "fraction of clients polled per round (empty = preset)")
         .opt("scheduler", "", "cohort policy: round-robin | random | age-debt (empty = preset)")
+        .opt("codec", "", "wire codec: raw | packed | packed-f16 (empty = preset)")
         .opt("parallel", "", "in-process client lanes (empty = preset, 0 = auto, 1 = serial)")
         .opt("seed", "42", "experiment seed")
         .opt("config", "", "JSON config file (overrides preset)")
@@ -81,6 +82,10 @@ fn build_config(a: &ragek::util::argparse::Args) -> Result<ExperimentConfig> {
     if !a.get("scheduler").is_empty() {
         cfg.scheduler = SchedulerKind::parse(a.get("scheduler"))
             .ok_or_else(|| anyhow::anyhow!("unknown scheduler {:?}", a.get("scheduler")))?;
+    }
+    if !a.get("codec").is_empty() {
+        cfg.codec = ragek::fl::codec::Codec::parse(a.get("codec"))
+            .ok_or_else(|| anyhow::anyhow!("unknown codec {:?}", a.get("codec")))?;
     }
     cfg.seed = a.get_usize("seed")? as u64;
     cfg.validate()?;

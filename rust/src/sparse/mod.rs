@@ -42,8 +42,12 @@ impl SparseVec {
         }
     }
 
-    /// Wire size in bytes (4B index + 4B value per entry) — the uplink
-    /// cost model of DESIGN.md §6.
+    /// Wire size in bytes under the **raw** v1 codec (4 B index + 4 B
+    /// value per entry) — the protocol-semantic uplink cost model of
+    /// DESIGN.md §6. The packed v2 codec ships the same entries as
+    /// delta+varint index blocks (~1–2 B per index; see
+    /// `fl::codec::index_block_bytes`) plus f32 or f16 values; exact
+    /// per-frame sizes live in `fl::transport::update_frame_bytes`.
     pub fn wire_bytes(&self) -> usize {
         self.len() * 8
     }

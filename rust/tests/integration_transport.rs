@@ -1,14 +1,14 @@
 //! TCP transport integration: a miniature PS <-> clients exchange over
 //! real sockets running one full rAge-k protocol round with the actual
-//! frame encoding.
+//! frame encoding — under the raw v1 codec and the packed v2 codec.
 
+use ragek::fl::codec::Codec;
 use ragek::fl::transport::{recv, send, Msg};
 use ragek::sparse::SparseVec;
 use std::net::{TcpListener, TcpStream};
 use std::thread;
 
-#[test]
-fn one_protocol_round_over_tcp() {
+fn one_protocol_round(codec: Codec) {
     let n_clients = 3usize;
     let d = 64usize;
     let k = 2usize;
@@ -20,8 +20,11 @@ fn one_protocol_round_over_tcp() {
         let mut streams: Vec<TcpStream> = Vec::new();
         for _ in 0..n_clients {
             let (mut s, _) = listener.accept().unwrap();
-            match recv(&mut s).unwrap() {
-                Msg::Join { client_id } => assert!((client_id as usize) < n_clients),
+            match recv(&mut s, codec).unwrap() {
+                Msg::Join { client_id, codec: joined } => {
+                    assert!((client_id as usize) < n_clients);
+                    assert_eq!(joined, codec, "workers advertise the negotiated codec");
+                }
                 other => panic!("expected Join, got {other:?}"),
             }
             streams.push(s);
@@ -29,24 +32,24 @@ fn one_protocol_round_over_tcp() {
         // broadcast model
         let params = vec![0.5f32; d];
         for s in streams.iter_mut() {
-            send(s, &Msg::Model { round: 1, params: params.clone() }).unwrap();
+            send(s, &Msg::Model { round: 1, params: params.clone() }, codec).unwrap();
         }
         // collect reports, answer with requests (oldest-k := first k here)
         let mut updates = Vec::new();
         for s in streams.iter_mut() {
-            let report = match recv(s).unwrap() {
+            let report = match recv(s, codec).unwrap() {
                 Msg::Report { report, round: 1, .. } => report,
                 other => panic!("expected Report, got {other:?}"),
             };
             let indices: Vec<u32> = report.idx[..k].to_vec();
-            send(s, &Msg::Request { round: 1, indices }).unwrap();
-            match recv(s).unwrap() {
+            send(s, &Msg::Request { round: 1, indices }, codec).unwrap();
+            match recv(s, codec).unwrap() {
                 Msg::Update { update, round: 1, .. } => updates.push(update),
                 other => panic!("expected Update, got {other:?}"),
             }
         }
         for s in streams.iter_mut() {
-            send(s, &Msg::Shutdown).unwrap();
+            send(s, &Msg::Shutdown, codec).unwrap();
         }
         updates
     });
@@ -56,8 +59,8 @@ fn one_protocol_round_over_tcp() {
     for id in 0..n_clients {
         handles.push(thread::spawn(move || {
             let mut s = TcpStream::connect(addr).unwrap();
-            send(&mut s, &Msg::Join { client_id: id as u32 }).unwrap();
-            let params = match recv(&mut s).unwrap() {
+            send(&mut s, &Msg::Join { client_id: id as u32, codec }, codec).unwrap();
+            let params = match recv(&mut s, codec).unwrap() {
                 Msg::Model { params, round: 1 } => params,
                 other => panic!("expected Model, got {other:?}"),
             };
@@ -69,16 +72,17 @@ fn one_protocol_round_over_tcp() {
             send(
                 &mut s,
                 &Msg::Report { client_id: id as u32, round: 1, report: report.clone(), mean_loss: 1.0 },
+                codec,
             )
             .unwrap();
-            let requested = match recv(&mut s).unwrap() {
+            let requested = match recv(&mut s, codec).unwrap() {
                 Msg::Request { indices, round: 1 } => indices,
                 other => panic!("expected Request, got {other:?}"),
             };
             // answer with values from the report
             let update = ragek::fl::client::Client::answer_request(&report, &requested);
-            send(&mut s, &Msg::Update { client_id: id as u32, round: 1, update }).unwrap();
-            match recv(&mut s).unwrap() {
+            send(&mut s, &Msg::Update { client_id: id as u32, round: 1, update }, codec).unwrap();
+            match recv(&mut s, codec).unwrap() {
                 Msg::Shutdown => {}
                 other => panic!("expected Shutdown, got {other:?}"),
             }
@@ -97,6 +101,16 @@ fn one_protocol_round_over_tcp() {
     assert!(updates.iter().all(|u| u.len() == 2));
 }
 
+#[test]
+fn one_protocol_round_over_tcp_raw() {
+    one_protocol_round(Codec::Raw);
+}
+
+#[test]
+fn one_protocol_round_over_tcp_packed() {
+    one_protocol_round(Codec::Packed);
+}
+
 /// A bad/duplicate Join must not leave already-accepted workers hung:
 /// the PS sends them (and the offender) Shutdown before bailing.
 #[test]
@@ -112,19 +126,48 @@ fn accept_shuts_down_joined_workers_on_bad_join() {
     // worker 0 joins correctly...
     let mut good = TcpStream::connect(addr).unwrap();
     good.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
-    send(&mut good, &Msg::Join { client_id: 0 }).unwrap();
+    send(&mut good, &Msg::Join { client_id: 0, codec: Codec::Raw }, Codec::Raw).unwrap();
     // ...then a second connection claims the same id (loopback accept
     // order is connection order, so the good join lands first)
     let mut bad = TcpStream::connect(addr).unwrap();
     bad.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
-    send(&mut bad, &Msg::Join { client_id: 0 }).unwrap();
+    send(&mut bad, &Msg::Join { client_id: 0, codec: Codec::Raw }, Codec::Raw).unwrap();
 
     let err = accept.join().unwrap();
     assert!(err.is_err(), "duplicate join must fail the accept loop");
     // the already-joined worker was released, not left hanging
-    assert_eq!(recv(&mut good).unwrap(), Msg::Shutdown);
+    assert_eq!(recv(&mut good, Codec::Raw).unwrap(), Msg::Shutdown);
     // and the offender heard the same
-    assert_eq!(recv(&mut bad).unwrap(), Msg::Shutdown);
+    assert_eq!(recv(&mut bad, Codec::Raw).unwrap(), Msg::Shutdown);
+}
+
+/// Codec negotiation: a worker joining with a different wire codec than
+/// the PS is configured for must be rejected (and every already-joined
+/// worker released), not left speaking an incompatible format.
+#[test]
+fn accept_rejects_codec_mismatch() {
+    use ragek::config::ExperimentConfig;
+    use ragek::fl::distributed::TcpClientPool;
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.n_clients = 2;
+    assert_eq!(cfg.codec, Codec::Raw, "preset default");
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let accept = thread::spawn(move || TcpClientPool::accept(&cfg, listener));
+
+    let mut good = TcpStream::connect(addr).unwrap();
+    good.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    send(&mut good, &Msg::Join { client_id: 0, codec: Codec::Raw }, Codec::Raw).unwrap();
+    // worker 1 was (mis)configured for the packed codec
+    let mut bad = TcpStream::connect(addr).unwrap();
+    bad.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    send(&mut bad, &Msg::Join { client_id: 1, codec: Codec::Packed }, Codec::Raw).unwrap();
+
+    let err = accept.join().unwrap();
+    assert!(err.is_err(), "codec mismatch must fail the accept loop");
+    assert!(format!("{:#}", err.err().unwrap()).contains("codec"));
+    assert_eq!(recv(&mut good, Codec::Raw).unwrap(), Msg::Shutdown);
+    assert_eq!(recv(&mut bad, Codec::Raw).unwrap(), Msg::Shutdown);
 }
 
 #[test]
@@ -142,6 +185,6 @@ fn oversized_frame_rejected() {
         s.write_all(&frame).unwrap();
     });
     let mut s = TcpStream::connect(addr).unwrap();
-    assert!(recv(&mut s).is_err());
+    assert!(recv(&mut s, Codec::Raw).is_err());
     t.join().unwrap();
 }

@@ -8,6 +8,7 @@
 
 use ragek::config::{ExperimentConfig, Payload};
 use ragek::coordinator::strategies::StrategyKind;
+use ragek::fl::codec::Codec;
 use ragek::fl::distributed::ServeReport;
 use ragek::fl::trainer::Trainer;
 use ragek::testing::run_distributed_localhost;
@@ -90,6 +91,65 @@ fn partial_participation_sim_and_tcp_are_identical() {
     // downlink bytes scale with m = 2, not n = 4
     assert_eq!(report.model_encodes, cfg.rounds as u64);
     assert_eq!(report.comm.broadcast_down, cfg.rounds as u64 * m * 4 * cfg.d() as u64);
+}
+
+/// The packed v2 codec is lossless: a TCP run negotiating `packed` must
+/// be bit-for-bit identical to the raw TCP run *and* the simulator —
+/// identical per-round uploaded index sets (decoded indices identical in
+/// content and order) and bit-identical final global parameters — while
+/// putting strictly fewer bytes on the wire.
+#[test]
+fn packed_codec_tcp_is_bit_identical_to_raw() {
+    let cfg = parity_cfg(StrategyKind::RageK);
+    let (sim_log, sim_params) = run_sim(&cfg);
+    let raw = run_tcp(&cfg);
+    let mut pcfg = cfg.clone();
+    pcfg.codec = Codec::Packed;
+    let packed = run_tcp(&pcfg);
+    assert_eq!(packed.uploaded_log, sim_log, "packed uploads must match the simulator");
+    assert_eq!(packed.final_params, sim_params, "packed params must match bit-for-bit");
+    assert_eq!(packed.uploaded_log, raw.uploaded_log);
+    assert_eq!(packed.final_params, raw.final_params);
+    // the engine's arithmetic wire accounting is exact under BOTH codecs:
+    // it equals the bytes observed crossing the PS sockets
+    for rep in [&raw, &packed] {
+        assert_eq!(rep.comm.wire_up, rep.wire_up_observed, "uplink accounting must be exact");
+        assert_eq!(rep.comm.wire_down, rep.wire_down_observed, "downlink accounting must be exact");
+    }
+    // and the packed format strictly shrinks the sparse-frame traffic
+    // (the >= 2x pin on the standard scenario lives in bench_end2end)
+    assert!(packed.comm.wire_up < raw.comm.wire_up);
+    assert!(packed.comm.wire_down < raw.comm.wire_down);
+    // §6 protocol counters are codec-independent by design
+    assert_eq!(packed.comm.uplink(), raw.comm.uplink());
+    assert_eq!(packed.comm.downlink(), raw.comm.downlink());
+}
+
+/// `packed-f16` is lossy in the update *values* only: round 1 (identical
+/// f32 broadcast in, indices lossless) must select identical uploads, and
+/// the whole run must stay close to the lossless one — but the index
+/// streams and the protocol flow never diverge structurally.
+#[test]
+fn packed_f16_stays_close_and_round_one_is_identical() {
+    let cfg = parity_cfg(StrategyKind::RageK);
+    let (sim_log, sim_params) = run_sim(&cfg);
+    let mut fcfg = cfg.clone();
+    fcfg.codec = Codec::PackedF16;
+    let f16 = run_tcp(&fcfg);
+    // round 1: same broadcast, same reports, same age state -> the
+    // requested/uploaded index sets are identical; f16 only touches the
+    // uploaded values
+    assert_eq!(f16.uploaded_log[0], sim_log[0], "round-1 indices must be identical");
+    assert_eq!(f16.comm.wire_up, f16.wire_up_observed, "f16 wire accounting must be exact");
+    // values drift within f16 tolerance, compounded over 4 smoke rounds:
+    // the run must stay finite and near the lossless trajectory
+    assert_eq!(f16.final_params.len(), sim_params.len());
+    let mut max_diff = 0f32;
+    for (a, b) in f16.final_params.iter().zip(&sim_params) {
+        assert!(a.is_finite());
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 0.1, "f16 drift too large: {max_diff}");
 }
 
 /// The age-debt scheduler is deterministic PS state, so it too must agree
