@@ -141,6 +141,67 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // hierarchical topology (DESIGN.md §7): sharded-vs-flat wall-clock.
+    // The shared bench::sharding scenario runs one *serial* client lane
+    // per shard, so the only parallelism left is the shard level itself —
+    // drive_comparison asserts the threaded shard driver beats the serial
+    // sum of the shard collects on a multi-core host.
+    {
+        use ragek::bench::sharding;
+        let rounds = 3usize;
+        let mut flat = Trainer::from_config(&sharding::scenario(0, rounds))?;
+        let flat_wall = b
+            .run_once(&format!("{rounds} rounds n=8 flat (serial lanes)"), || {
+                for _ in 0..rounds {
+                    flat.run_round().unwrap();
+                }
+            })
+            .mean();
+        let (serial_sum, parallel_wall, sharded_comm) =
+            sharding::drive_comparison(&mut b, rounds)?;
+
+        // bytes/round roll-up is topology-independent (the root <-> shard
+        // hop is in-process): identical §6 counters flat vs sharded
+        let flat_comm = flat.comm();
+        assert_eq!(flat_comm.uplink(), sharded_comm.uplink(), "§7 roll-up: uplink mismatch");
+        assert_eq!(flat_comm.downlink(), sharded_comm.downlink());
+        assert_eq!(flat_comm.wire_up, sharded_comm.wire_up);
+        assert_eq!(flat_comm.wire_down, sharded_comm.wire_down);
+        println!(
+            "sharding wall-clock: flat {flat_wall:.3}s, sharded x4 serial {serial_sum:.3}s, \
+             sharded x4 parallel {parallel_wall:.3}s; bytes/round identical"
+        );
+    }
+
+    // sharded wire pin over real sockets: the rolled-up wire accounting
+    // must equal the bytes observed on the shard PS sockets
+    {
+        use ragek::clustering::MergeRule;
+        use ragek::config::Payload;
+        use ragek::coordinator::topology::Topology;
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.n_clients = 4;
+        cfg.payload = Payload::Delta;
+        cfg.rounds = 2;
+        cfg.train_n = 200;
+        cfg.test_n = 64;
+        cfg.eval_every = 0;
+        cfg.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+        let report = ragek::testing::run_distributed_localhost(&cfg)?;
+        assert_eq!(
+            report.comm.wire_up, report.wire_up_observed,
+            "rolled-up uplink accounting must equal observed socket bytes"
+        );
+        assert_eq!(
+            report.comm.wire_down, report.wire_down_observed,
+            "rolled-up downlink accounting must equal observed socket bytes"
+        );
+        println!(
+            "sharded wire pin OK: up {} B, down {} B across 2 shard PS pools",
+            report.wire_up_observed, report.wire_down_observed
+        );
+    }
+
     // PS-only cost at CIFAR scale (no compute backend in the loop):
     // selection + ages + aggregation for 6 clients at d=2.5M
     {

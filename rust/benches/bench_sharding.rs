@@ -1,0 +1,68 @@
+//! Hierarchical-topology perf: shard-count scaling of the two-level
+//! round driver (DESIGN.md §7) on the standard 8-client MNIST scenario
+//! (`ragek::bench::sharding` — shared with `bench_end2end` so the config
+//! and thresholds cannot drift apart).
+//!
+//! Measures wall-clock per round for flat vs sharded x{1, 2, 4} under
+//! the parallel shard driver, the serial-vs-parallel shard-drive gap at 4
+//! shards, and prints the deterministic aggregate bytes/round table — the
+//! §6/§7 counters are **identical across topologies** (the root <-> shard
+//! hop is in-process, zero wire bytes), which this bench asserts and
+//! `BENCH_sharding.json` records as the committed baseline.
+
+use ragek::bench::{sharding, Bench};
+use ragek::fl::metrics::CommStats;
+use ragek::fl::trainer::Trainer;
+
+const ROUNDS: usize = 3;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("sharding");
+
+    // ---- shard-count scaling under the production (parallel) driver
+    let mut comms: Vec<(String, CommStats)> = Vec::new();
+    for shards in [0usize, 1, 2, 4] {
+        let cfg = sharding::scenario(shards, ROUNDS);
+        let label = match shards {
+            0 => "flat".to_string(),
+            s => format!("sharded x{s}"),
+        };
+        let mut t = Trainer::from_config(&cfg)?;
+        b.run_once(&format!("{ROUNDS} rounds n=8 {label} (parallel driver)"), || {
+            for _ in 0..ROUNDS {
+                t.run_round().unwrap();
+            }
+        });
+        comms.push((label, t.comm()));
+    }
+
+    // ---- deterministic aggregate bytes/round: identical at every shard
+    // count (the committed BENCH_sharding.json table)
+    println!("\naggregate bytes/round (raw codec, full participation, n=8):");
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>12}",
+        "topology", "uplink", "downlink", "wire_up", "wire_down"
+    );
+    let flat = comms[0].1;
+    for (label, comm) in &comms {
+        println!(
+            "{label:<12} {:>12} {:>12} {:>12} {:>12}",
+            comm.uplink() / ROUNDS as u64,
+            comm.downlink() / ROUNDS as u64,
+            comm.wire_up / ROUNDS as u64,
+            comm.wire_down / ROUNDS as u64
+        );
+        assert_eq!(
+            (comm.uplink(), comm.downlink(), comm.wire_up, comm.wire_down),
+            (flat.uplink(), flat.downlink(), flat.wire_up, flat.wire_down),
+            "{label}: sharding must add zero protocol/wire bytes (§7 roll-up)"
+        );
+    }
+
+    // ---- serial sum vs parallel shard drive at 4 shards (asserts the
+    // parallelism floor on multi-core hosts)
+    sharding::drive_comparison(&mut b, ROUNDS)?;
+
+    b.save();
+    Ok(())
+}

@@ -134,6 +134,74 @@ impl BackendLanes {
     }
 }
 
+/// Abstraction over a pool's lane storage, so
+/// [`crate::fl::pool::InProcessPool`] can be generic over it:
+/// [`BackendLanes`] supports every backend but is `!Send` (the XLA serial
+/// lane pins its PJRT runtime to the constructing thread), while a bare
+/// `Vec<SendBackend>` — all-parallel lanes — makes the whole pool `Send`,
+/// which is what lets a sharded topology drive one pool per shard on
+/// scoped threads.
+pub trait Lanes {
+    /// Number of clients that can train concurrently.
+    fn n_lanes(&self) -> usize;
+
+    /// The lane used for PS-side work (server apply, eval, init).
+    fn primary(&mut self) -> &mut dyn Backend;
+
+    /// Per-thread `Send` lanes when replication is available; `None`
+    /// means the single [`Self::primary`] backend must be driven
+    /// serially.
+    fn parallel(&mut self) -> Option<&mut [SendBackend]>;
+}
+
+impl Lanes for BackendLanes {
+    fn n_lanes(&self) -> usize {
+        BackendLanes::n_lanes(self)
+    }
+
+    fn primary(&mut self) -> &mut dyn Backend {
+        BackendLanes::primary(self)
+    }
+
+    fn parallel(&mut self) -> Option<&mut [SendBackend]> {
+        match self {
+            BackendLanes::Serial(_) => None,
+            BackendLanes::Parallel(v) => Some(v.as_mut_slice()),
+        }
+    }
+}
+
+impl Lanes for Vec<SendBackend> {
+    fn n_lanes(&self) -> usize {
+        self.len()
+    }
+
+    fn primary(&mut self) -> &mut dyn Backend {
+        self[0].as_mut()
+    }
+
+    fn parallel(&mut self) -> Option<&mut [SendBackend]> {
+        Some(self.as_mut_slice())
+    }
+}
+
+/// All-parallel `Send` lanes for backends that replicate (the pure-Rust
+/// backend). Errors for XLA: a process holds exactly one PJRT runtime, so
+/// an XLA pool cannot cross threads — use [`make_backend_lanes`] and a
+/// flat topology there.
+pub fn make_send_lanes(cfg: &ExperimentConfig, lanes: usize) -> Result<Vec<SendBackend>> {
+    match cfg.backend {
+        BackendKind::Rust => Ok((0..lanes.max(1))
+            .map(|_| Box::new(RustBackend::new(cfg.r, cfg.lr_client, cfg.seed)) as SendBackend)
+            .collect()),
+        BackendKind::Xla => bail!(
+            "the xla backend keeps a single non-Send PJRT runtime per process and \
+             cannot be replicated across shard threads (ROADMAP: XLA lane \
+             replication); run sharded topologies with the rust backend"
+        ),
+    }
+}
+
 /// Instantiate the backend an experiment config asks for.
 pub fn make_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
     match cfg.backend {

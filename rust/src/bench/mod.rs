@@ -189,6 +189,80 @@ impl Bench {
     }
 }
 
+/// The shared sharded-topology bench scenario (used by `bench_end2end`
+/// and `bench_sharding`, so the config and the parallelism threshold
+/// cannot drift apart).
+pub mod sharding {
+    use super::Bench;
+    use crate::clustering::MergeRule;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::strategies::StrategyKind;
+    use crate::coordinator::topology::Topology;
+    use crate::fl::metrics::CommStats;
+    use crate::fl::trainer::build_sharded_inprocess;
+    use anyhow::Result;
+
+    /// The standard multi-core scenario: 8 MNIST clients, **one serial
+    /// client lane per shard** so the shard level is the only
+    /// parallelism left. `shards = 0` = flat.
+    pub fn scenario(shards: usize, rounds: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::mnist_scaled();
+        cfg.strategy = StrategyKind::RageK;
+        cfg.n_clients = 8;
+        cfg.parallel = 1;
+        cfg.rounds = rounds;
+        cfg.train_n = 2000;
+        cfg.test_n = 256;
+        cfg.eval_every = 0;
+        if shards > 0 {
+            cfg.topology = Topology::Sharded { shards, root_merge: MergeRule::Min };
+        }
+        cfg
+    }
+
+    /// Time the serial-vs-parallel shard drive at 4 shards and — on any
+    /// host with >= 2 cores — assert the scoped-thread driver beats the
+    /// serial sum of the shard collects by at least 10%. Returns
+    /// `(serial_secs, parallel_secs, parallel_run_comm)` so callers can
+    /// also pin the zero-extra-bytes roll-up.
+    pub fn drive_comparison(b: &mut Bench, rounds: usize) -> Result<(f64, f64, CommStats)> {
+        let cfg4 = scenario(4, rounds);
+        let (mut e_ser, mut p_ser) = build_sharded_inprocess(&cfg4)?;
+        let serial = b
+            .run_once(&format!("{rounds} rounds n=8 sharded x4, serial shard drive"), || {
+                for _ in 0..rounds {
+                    e_ser.run_round_serial(&mut p_ser).unwrap();
+                }
+            })
+            .mean();
+        let (mut e_par, mut p_par) = build_sharded_inprocess(&cfg4)?;
+        let parallel = b
+            .run_once(&format!("{rounds} rounds n=8 sharded x4, parallel shard drive"), || {
+                for _ in 0..rounds {
+                    e_par.run_round(&mut p_par).unwrap();
+                }
+            })
+            .mean();
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        println!(
+            "shard drive: serial sum {serial:.3}s vs parallel {parallel:.3}s \
+             ({:.2}x on {cores} cores)",
+            serial / parallel
+        );
+        // hard gate only where one shard thread per core leaves ample
+        // margin (4 shards; expected ~0.3x there) — a loaded 2-core
+        // runner's single sample is too noisy to fail the build on
+        if cores >= 4 {
+            assert!(
+                parallel < serial * 0.9,
+                "shard rounds must execute in parallel: parallel {parallel:.3}s vs \
+                 serial sum {serial:.3}s on {cores} cores"
+            );
+        }
+        Ok((serial, parallel, e_par.comm()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

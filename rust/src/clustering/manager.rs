@@ -91,6 +91,48 @@ impl ClusterManager {
         self.assignment.clone()
     }
 
+    /// Partition the clients into `shards` balanced groups **without
+    /// splitting any cluster** — the assignment a hierarchical topology
+    /// uses so every cluster's disjoint-selection coordination stays
+    /// inside one shard engine. Deterministic: clusters are taken in id
+    /// order (ids are ordered by smallest member) and each shard is
+    /// filled to its balanced target before the next opens, so with
+    /// singleton clusters (the initial state) the result is exactly the
+    /// contiguous balanced slices of `0..n`. Member lists within a shard
+    /// come out sorted. Requires `1 <= shards <= n_clusters`.
+    pub fn shard_slices(&self, shards: usize) -> Vec<Vec<usize>> {
+        let n = self.n_clients();
+        assert!(
+            shards >= 1 && shards <= self.n_clusters(),
+            "need 1 <= shards ({shards}) <= n_clusters ({})",
+            self.n_clusters()
+        );
+        // balanced targets: the first n % shards shards take one extra
+        let base = n / shards;
+        let target = |s: usize| base + usize::from(s < n % shards);
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        let mut s = 0;
+        for (ci, cluster) in self.members.iter().enumerate() {
+            // advance when the current shard met its target — or when the
+            // remaining clusters are exactly one per still-empty shard
+            // (oversized clusters may have overfilled earlier shards), so
+            // no shard is ever left without clients
+            let clusters_left = self.members.len() - ci;
+            let empty_after = shards - s - 1;
+            if s + 1 < shards
+                && !out[s].is_empty()
+                && (out[s].len() >= target(s) || clusters_left == empty_after)
+            {
+                s += 1;
+            }
+            out[s].extend_from_slice(cluster);
+        }
+        for slice in &mut out {
+            slice.sort_unstable();
+        }
+        out
+    }
+
     /// Fold DBSCAN output into persistent clusters. `labels[i]` is the
     /// DBSCAN label of client i ([`NOISE`] allowed).
     pub fn recluster(&mut self, labels: &[isize]) -> ReclusterEvents {
@@ -220,6 +262,45 @@ mod tests {
         // singleton old cluster {2} is fully contained in new group {2}
         assert_eq!(m.age_of_client(2), &before);
         assert_ne!(m.cluster_of(0), m.cluster_of(2));
+    }
+
+    #[test]
+    fn shard_slices_singletons_are_contiguous_and_balanced() {
+        let m = ClusterManager::new(10, 4, MergeRule::Min);
+        assert_eq!(
+            m.shard_slices(3),
+            vec![vec![0, 1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]],
+            "singleton clusters shard into contiguous balanced slices"
+        );
+        assert_eq!(m.shard_slices(1), vec![(0..10).collect::<Vec<_>>()]);
+    }
+
+    #[test]
+    fn shard_slices_never_split_clusters() {
+        let mut m = ClusterManager::new(6, 4, MergeRule::Min);
+        m.recluster(&[0, 0, 0, 0, 1, 2]); // clusters {0..3}, {4}, {5}
+        let slices = m.shard_slices(3);
+        // the big cluster overfills shard 0; the rest spread one each
+        assert_eq!(slices, vec![vec![0, 1, 2, 3], vec![4], vec![5]]);
+        for slices in [m.shard_slices(2), m.shard_slices(3)] {
+            // disjoint cover of all clients, no cluster split across shards
+            let mut seen = vec![false; 6];
+            for slice in &slices {
+                assert!(!slice.is_empty(), "no shard may be empty: {slices:?}");
+                for &c in slice {
+                    assert!(!seen[c]);
+                    seen[c] = true;
+                }
+                for &c in slice {
+                    let cluster = m.cluster_of(c);
+                    assert!(
+                        m.members_of(cluster).iter().all(|mm| slice.contains(mm)),
+                        "cluster {cluster} split across shards: {slices:?}"
+                    );
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use crate::clustering::{DbscanParams, MergeRule};
 use crate::coordinator::scheduler::SchedulerKind;
 use crate::coordinator::strategies::StrategyKind;
+use crate::coordinator::topology::Topology;
 use crate::data::partition::Scheme;
 use crate::data::Corpus;
 use crate::fl::codec::Codec;
@@ -63,6 +64,18 @@ pub struct ExperimentConfig {
     /// cohort policy under partial participation (ignored at p = 1.0,
     /// where every policy selects all clients)
     pub scheduler: SchedulerKind,
+    /// PS layout: one monolithic engine (`Flat`, the default) or a
+    /// two-level hierarchy of shard engines under a root aggregator
+    /// (DESIGN.md §7). `Sharded { shards: 1 }` is pinned bit-for-bit
+    /// identical to `Flat`. Config/CLI knob `shards` (0 = flat).
+    pub topology: Topology,
+    /// PS-side socket read/write timeout in milliseconds (0 = none, the
+    /// default). With a deadline set, a hung worker surfaces as a clean
+    /// per-stream error instead of wedging the collect phase forever;
+    /// the worker side never sets timeouts (off-cohort workers block
+    /// across whole rounds by design). Must comfortably exceed the local
+    /// training time of one round.
+    pub io_timeout_ms: u64,
     /// wire codec: `raw` (v1, 8 B per sparse entry) | `packed` (v2,
     /// delta+varint indices, lossless) | `packed-f16` (v2 + binary16
     /// update values, lossy). Negotiated at `Join` time — PS and workers
@@ -98,7 +111,9 @@ pub struct ExperimentConfig {
     pub eval_every: usize,
     /// in-process client concurrency: lanes of the parallel pool
     /// (0 = auto-detect from available cores; 1 = serial). Purely a
-    /// throughput knob — results are identical at any setting.
+    /// throughput knob — results are identical at any setting. Under a
+    /// sharded topology this is **per shard** (auto divides the cores by
+    /// the shard count, so `0` fills the machine exactly once).
     pub parallel: usize,
     pub data_dir: String,
     pub artifacts_dir: String,
@@ -116,6 +131,8 @@ impl ExperimentConfig {
             n_clients: 10,
             participation: 1.0,
             scheduler: SchedulerKind::RoundRobin,
+            topology: Topology::Flat,
+            io_timeout_ms: 0,
             codec: Codec::Raw,
             r: 75,
             k: 10,
@@ -167,6 +184,8 @@ impl ExperimentConfig {
             n_clients: 6,
             participation: 1.0,
             scheduler: SchedulerKind::RoundRobin,
+            topology: Topology::Flat,
+            io_timeout_ms: 0,
             codec: Codec::Raw,
             r: 2500,
             k: 100,
@@ -242,6 +261,19 @@ impl ExperimentConfig {
         if !(self.participation > 0.0 && self.participation <= 1.0) {
             bail!("participation ({}) must be in (0, 1]", self.participation);
         }
+        if self.topology.n_shards() > self.n_clients {
+            bail!(
+                "topology wants {} shards but there are only {} clients",
+                self.topology.n_shards(),
+                self.n_clients
+            );
+        }
+        if self.topology.n_shards() > 1 && self.backend == BackendKind::Xla {
+            // a process holds exactly one PJRT runtime; N shard pools in
+            // the PS process would instantiate N (ROADMAP: XLA lane
+            // replication)
+            bail!("sharded topologies require the rust backend (one PJRT runtime per process)");
+        }
         if self.partition == Scheme::PaperPairs && self.n_clients % 2 != 0 {
             bail!("PaperPairs partitioning needs an even client count");
         }
@@ -276,6 +308,12 @@ impl ExperimentConfig {
             ("n_clients", Json::Num(self.n_clients as f64)),
             ("participation", Json::Num(self.participation)),
             ("scheduler", Json::Str(self.scheduler.name().into())),
+            ("shards", Json::Num(self.topology.shards_knob() as f64)),
+            ("root_merge", Json::Str(match self.topology.root_merge() {
+                MergeRule::Min => "min".into(),
+                MergeRule::Max => "max".into(),
+            })),
+            ("io_timeout_ms", Json::Num(self.io_timeout_ms as f64)),
             ("codec", Json::Str(self.codec.name().into())),
             ("r", Json::Num(self.r as f64)),
             ("k", Json::Num(self.k as f64)),
@@ -347,6 +385,22 @@ impl ExperimentConfig {
             c.scheduler = SchedulerKind::parse(s)
                 .with_context(|| format!("unknown scheduler {s:?}"))?;
         }
+        // like every other knob, absent keys keep the preset's topology;
+        // either key alone updates just its half
+        if j.get("shards").is_some() || j.get("root_merge").is_some() {
+            let root_merge = match j.get("root_merge").and_then(Json::as_str) {
+                None => c.topology.root_merge(),
+                Some("min") => MergeRule::Min,
+                Some("max") => MergeRule::Max,
+                Some(other) => bail!("unknown root_merge {other:?}"),
+            };
+            let shards = j
+                .get("shards")
+                .and_then(Json::as_usize)
+                .unwrap_or_else(|| c.topology.shards_knob());
+            c.topology = Topology::from_shards(shards, root_merge);
+        }
+        num!(io_timeout_ms, "io_timeout_ms", u64);
         if let Some(s) = j.get("codec").and_then(Json::as_str) {
             c.codec =
                 Codec::parse(s).with_context(|| format!("unknown codec {s:?}"))?;
@@ -448,6 +502,8 @@ mod tests {
         cfg.participation = 0.3;
         cfg.scheduler = SchedulerKind::AgeDebt;
         cfg.codec = Codec::PackedF16;
+        cfg.topology = Topology::Sharded { shards: 3, root_merge: MergeRule::Max };
+        cfg.io_timeout_ms = 1500;
         let j = cfg.to_json();
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.strategy, StrategyKind::RTopK);
@@ -458,6 +514,10 @@ mod tests {
         assert_eq!(back.participation, 0.3);
         assert_eq!(back.scheduler, SchedulerKind::AgeDebt);
         assert_eq!(back.codec, Codec::PackedF16);
+        assert_eq!(back.topology, cfg.topology);
+        assert_eq!(back.io_timeout_ms, 1500);
+        // the default stays flat
+        assert_eq!(ExperimentConfig::mnist_paper().topology, Topology::Flat);
     }
 
     #[test]
@@ -493,6 +553,17 @@ mod tests {
         assert!(c.validate().is_err());
         c.participation = 0.2;
         assert!(c.validate().is_ok());
+        // more shards than clients is rejected; equal is fine
+        c.topology = Topology::Sharded { shards: 11, root_merge: MergeRule::Min };
+        assert!(c.validate().is_err());
+        c.topology = Topology::Sharded { shards: 10, root_merge: MergeRule::Min };
+        assert!(c.validate().is_ok());
+        // sharding needs replicable backends: one PJRT runtime per process
+        let mut c = ExperimentConfig::cifar_paper(); // backend = xla
+        c.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+        assert!(c.validate().is_err());
+        c.topology = Topology::Sharded { shards: 1, root_merge: MergeRule::Min };
+        assert!(c.validate().is_ok(), "a single shard never replicates the runtime");
     }
 
     #[test]
@@ -507,5 +578,12 @@ mod tests {
         assert!(ExperimentConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"model": "mnist", "codec": "packed"}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&j).unwrap().codec, Codec::Packed);
+        let j = Json::parse(r#"{"model": "mnist", "root_merge": "avg"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"model": "mnist", "shards": 2}"#).unwrap();
+        assert_eq!(
+            ExperimentConfig::from_json(&j).unwrap().topology,
+            Topology::Sharded { shards: 2, root_merge: MergeRule::Min }
+        );
     }
 }

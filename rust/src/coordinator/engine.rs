@@ -58,6 +58,20 @@ pub struct ClientReport {
 pub trait ClientPool {
     fn n_clients(&self) -> usize;
 
+    /// Per-client reachability, indexed by client id (`true` = the pool
+    /// believes a round driven at this client would succeed). The default
+    /// is all-true; transports that observe failures (e.g. a TCP stream
+    /// that errored or timed out) report those clients `false` so
+    /// availability-aware schedulers stop spending cohort slots on them.
+    ///
+    /// Note the stock `run_server` loop still aborts on the round that
+    /// *discovers* a failure — this signal pays off for drivers that
+    /// retry or tolerate failed rounds (the ROADMAP's drop-and-continue
+    /// item); the scheduler-side consumption is in place and tested.
+    fn available(&self) -> Vec<bool> {
+        vec![true; self.n_clients()]
+    }
+
     /// Algorithm 1 lines 3-7 for the round's **cohort** (sorted, distinct
     /// client ids): broadcast `global` to the cohort, have each member
     /// adopt it (local optimizer state persists — `sync_to`, not a
@@ -105,6 +119,25 @@ pub struct RoundOutcome {
     /// the clients that participated (sorted; all of them at
     /// participation = 1.0)
     pub cohort: Vec<usize>,
+}
+
+/// Everything one engine's collect phases produced *before* the server
+/// update: the raw material a flat round applies directly and a sharded
+/// topology hands to its root aggregator
+/// ([`crate::coordinator::topology::ShardedEngine`]) for the global merge.
+/// Client ids here are engine-local (the owning engine's `0..n`).
+#[derive(Debug)]
+pub struct ShardRound {
+    /// the round's cohort (sorted, distinct local ids)
+    pub cohort: Vec<usize>,
+    /// sum over the cohort of per-client mean local losses (f64 terms in
+    /// cohort order, exactly the summation `util::mean` performs — so
+    /// `loss_sum / cohort.len()` reproduces the flat mean bit-for-bit)
+    pub loss_sum: f64,
+    /// the cohort's sparse uploads, in cohort order
+    pub updates: Vec<SparseVec>,
+    /// per client (all `n`, empty off-cohort): the indices it uploaded
+    pub uploaded: Vec<Vec<u32>>,
 }
 
 /// How many rounds of uploaded-index history the engine retains (parity
@@ -184,11 +217,58 @@ impl RoundEngine {
         &self.uploaded_log
     }
 
+    /// Overwrite the engine's working copy of the global model (the
+    /// vector the next round broadcasts). Under a sharded topology the
+    /// root aggregator owns the authoritative model and re-broadcasts it
+    /// into each shard engine every round; the flat path never calls this.
+    pub fn set_global(&mut self, params: &[f32]) {
+        self.global.params.copy_from_slice(params);
+    }
+
     /// One global round (Algorithm 1 lines 3-16) against `pool`, scoped
     /// to a scheduler-selected cohort of `cfg.cohort_size()` clients.
     /// At `participation = 1.0` the cohort is every client and the round
     /// is bit-for-bit the pre-cohort protocol.
+    ///
+    /// This is the flat composition of the three phase functions the
+    /// sharded topology re-uses: [`Self::collect_round`] (broadcast,
+    /// local training, selection, uploads, wire accounting),
+    /// [`merge_and_apply`] (aggregate + server update), and
+    /// [`Self::finish_round`] (age/frequency bookkeeping + M-periodic
+    /// reclustering).
     pub fn run_round(&mut self, pool: &mut dyn ClientPool) -> Result<RoundOutcome> {
+        let sr = self.collect_round(pool)?;
+        let mean_loss = (sr.loss_sum / sr.cohort.len() as f64) as f32;
+        let mut agg = Aggregate::new();
+        for u in sr.updates {
+            agg.push(u);
+        }
+        merge_and_apply(
+            &self.cfg,
+            pool.backend(),
+            &mut self.global,
+            &agg,
+            sr.cohort.len(),
+            self.cfg.n_clients,
+            &self.profile,
+        )?;
+        let reclustered = self.finish_round(sr.uploaded, &sr.cohort);
+        Ok(RoundOutcome {
+            mean_loss,
+            reclustered,
+            n_clusters: self.ps.clusters().n_clusters(),
+            cohort: sr.cohort,
+        })
+    }
+
+    /// Phases 1-3 of a round: cohort selection, broadcast + local
+    /// training + top-r reports, PS index selection, sparse uploads, and
+    /// the full (§6 + exact wire) communication accounting — everything
+    /// up to but excluding the server update and bookkeeping. The caller
+    /// decides where the returned [`ShardRound`] is applied: locally
+    /// ([`Self::run_round`]) or merged with sibling shards at a root
+    /// aggregator.
+    pub fn collect_round(&mut self, pool: &mut dyn ClientPool) -> Result<ShardRound> {
         let n = self.cfg.n_clients;
         let (k, r, d) = (self.cfg.k, self.cfg.r, self.cfg.d());
         ensure!(
@@ -199,12 +279,19 @@ impl RoundEngine {
 
         // ---- cohort selection (partial participation)
         let m = self.cfg.cohort_size();
+        let available = pool.available();
+        ensure!(
+            available.len() == n,
+            "pool reported availability for {} of {n} clients",
+            available.len()
+        );
         let cohort = self.scheduler.select(&ScheduleCtx {
             round: self.ps.round(),
             n,
             m,
             ps: &self.ps,
             since_polled: &self.since_polled,
+            available: &available,
         });
         ensure!(
             cohort.len() == m
@@ -223,9 +310,7 @@ impl RoundEngine {
             "pool returned {} reports for a cohort of {m}",
             reports.len()
         );
-        let mean_loss = crate::util::mean(
-            &reports.iter().map(|c| c.mean_loss as f64).collect::<Vec<_>>(),
-        ) as f32;
+        let loss_sum: f64 = reports.iter().map(|c| c.mean_loss as f64).sum();
 
         // ---- index selection (Algorithm 2 at the PS; client-side
         // strategies select inside the pool during the exchange)
@@ -295,45 +380,15 @@ impl RoundEngine {
             self.comm.wire_up += wire::update_frame_bytes(codec, &u.idx) as u64;
         }
 
-        // ---- aggregate + server update (lines 9-11)
-        let mut agg = Aggregate::new();
-        for u in updates {
-            agg.push(u);
-        }
-        match self.cfg.payload {
-            Payload::Delta => {
-                // FedAvg-style: apply the mean sparse drift directly,
-                // averaged over the clients that actually uploaded
-                let update = agg.to_dense(d, 1.0 / m as f32);
-                self.profile.time("ps.apply", || {
-                    for (p, &u) in self.global.params.iter_mut().zip(&update) {
-                        *p += u;
-                    }
-                });
-            }
-            Payload::Grad if self.cfg.server_opt == "sgd" => {
-                // unbiased cohort estimate of the full-participation sum:
-                // scale the m-client aggregate by n/m (exactly 1.0 at full
-                // participation), so the server step magnitude does not
-                // shrink with the participation knob
-                let update = agg.to_dense(d, n as f32 / m as f32);
-                let lr = self.cfg.lr_server;
-                self.profile.time("ps.apply", || {
-                    for (p, &u) in self.global.params.iter_mut().zip(&update) {
-                        *p -= lr * u;
-                    }
-                });
-            }
-            Payload::Grad => {
-                let t0 = std::time::Instant::now();
-                let scale = n as f32 / m as f32; // see the sgd branch note
-                pool.backend().server_apply(&mut self.global, &agg, scale, self.cfg.lr_server)?;
-                self.profile.add("ps.apply", t0.elapsed().as_secs_f64());
-            }
-        }
+        Ok(ShardRound { cohort, loss_sum, updates, uploaded })
+    }
 
-        // ---- age + frequency bookkeeping (Algorithm 2 lines 7-8 / eq. 2)
-        // and the M-periodic clustering (Algorithm 1 lines 13-16)
+    /// Phase 5 of a round: commit the round's uploads to the age and
+    /// frequency bookkeeping (Algorithm 2 lines 7-8 / eq. 2), run the
+    /// M-periodic clustering (Algorithm 1 lines 13-16), and update the
+    /// uploaded-index log and poll-debt counters. Returns
+    /// `Some(n_clusters)` when reclustering ran.
+    pub fn finish_round(&mut self, uploaded: Vec<Vec<u32>>, cohort: &[usize]) -> Option<usize> {
         self.profile.time("ps.record", || self.ps.record_round(&uploaded));
         let reclustered = self.ps.maybe_recluster();
         self.uploaded_log.push_back(uploaded);
@@ -343,17 +398,62 @@ impl RoundEngine {
         for s in self.since_polled.iter_mut() {
             *s = s.saturating_add(1);
         }
-        for &c in &cohort {
+        for &c in cohort {
             self.since_polled[c] = 0;
         }
-
-        Ok(RoundOutcome {
-            mean_loss,
-            reclustered,
-            n_clusters: self.ps.clusters().n_clusters(),
-            cohort,
-        })
+        reclustered
     }
+}
+
+/// Phase 4 of a round — Algorithm 1 lines 9-11, shared by the flat engine
+/// and the sharded root aggregator: materialize the aggregated update and
+/// step the global model. `uploaders` is how many clients contributed to
+/// `agg` (the whole-fleet count at the root) and `n_clients` the total
+/// client count behind it, so the Grad scale `n/m` stays the unbiased
+/// full-participation estimate at every level of the topology.
+pub fn merge_and_apply(
+    cfg: &ExperimentConfig,
+    backend: &mut dyn Backend,
+    global: &mut GlobalState,
+    agg: &Aggregate,
+    uploaders: usize,
+    n_clients: usize,
+    profile: &Profile,
+) -> Result<()> {
+    ensure!(uploaders > 0, "a round must have at least one uploader");
+    let d = global.params.len();
+    match cfg.payload {
+        Payload::Delta => {
+            // FedAvg-style: apply the mean sparse drift directly,
+            // averaged over the clients that actually uploaded
+            let update = agg.to_dense(d, 1.0 / uploaders as f32);
+            profile.time("ps.apply", || {
+                for (p, &u) in global.params.iter_mut().zip(&update) {
+                    *p += u;
+                }
+            });
+        }
+        Payload::Grad if cfg.server_opt == "sgd" => {
+            // unbiased cohort estimate of the full-participation sum:
+            // scale the m-client aggregate by n/m (exactly 1.0 at full
+            // participation), so the server step magnitude does not
+            // shrink with the participation knob
+            let update = agg.to_dense(d, n_clients as f32 / uploaders as f32);
+            let lr = cfg.lr_server;
+            profile.time("ps.apply", || {
+                for (p, &u) in global.params.iter_mut().zip(&update) {
+                    *p -= lr * u;
+                }
+            });
+        }
+        Payload::Grad => {
+            let t0 = std::time::Instant::now();
+            let scale = n_clients as f32 / uploaders as f32; // see the sgd branch note
+            backend.server_apply(global, agg, scale, cfg.lr_server)?;
+            profile.add("ps.apply", t0.elapsed().as_secs_f64());
+        }
+    }
+    Ok(())
 }
 
 // ================================================== client-side protocol

@@ -15,6 +15,9 @@
 //! * [`aggregator`] — g~ = sum_i g~_i and its dense/sparse materialization.
 //! * [`server`] — the PS state machine gluing age vectors, frequency
 //!   vectors, clustering and selection into the per-round protocol.
+//! * [`topology`] — the hierarchical multi-PS layer: shard engines over
+//!   disjoint client slices plus a root aggregator merging their
+//!   aggregates and age vectors ([`topology::ShardedEngine`]).
 
 pub mod aggregator;
 pub mod engine;
@@ -22,8 +25,10 @@ pub mod scheduler;
 pub mod selection;
 pub mod server;
 pub mod strategies;
+pub mod topology;
 
 pub use engine::{ClientPool, RoundEngine};
 pub use scheduler::{CohortScheduler, SchedulerKind};
 pub use server::ParameterServer;
 pub use strategies::StrategyKind;
+pub use topology::{ShardedEngine, Topology};

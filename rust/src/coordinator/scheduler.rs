@@ -82,6 +82,12 @@ pub struct ScheduleCtx<'a> {
     pub ps: &'a ParameterServer,
     /// per client: global rounds since it last participated
     pub since_polled: &'a [u32],
+    /// per client: the pool's reachability report
+    /// ([`crate::coordinator::engine::ClientPool::available`]). All-true
+    /// for transports that never observe failures; availability-aware
+    /// policies deprioritize `false` clients (a dead TCP stream would
+    /// burn a cohort slot on a round that cannot complete).
+    pub available: &'a [bool],
 }
 
 /// A cohort policy. Must return exactly `ctx.m` distinct client ids in
@@ -143,6 +149,17 @@ impl CohortScheduler for AgeDebt {
     /// cost at O(n_clusters * d), not O(n * d). For strategies that keep
     /// no age state the term is zero and the policy degenerates to
     /// longest-unpolled-first.
+    ///
+    /// Clients the pool flags unavailable rank strictly below every
+    /// available client regardless of debt — a dead stream's staleness
+    /// otherwise grows without bound and would monopolize cohort slots
+    /// on rounds that cannot complete. They are still *selectable*: when
+    /// fewer than m clients are available the cohort fills with the
+    /// stalest unavailable ones rather than shrinking below m (a driver
+    /// with a reconnect/retry path can use that to probe them; the stock
+    /// server loop currently aborts on a failed round — drop-and-continue
+    /// is the ROADMAP item). With an all-true report the ranking is
+    /// unchanged.
     fn select(&mut self, ctx: &ScheduleCtx) -> Vec<usize> {
         let clusters = ctx.ps.clusters();
         let mut cluster_term: Vec<Option<f64>> = vec![None; clusters.n_clusters()];
@@ -158,7 +175,10 @@ impl CohortScheduler for AgeDebt {
             .collect();
         let mut ids: Vec<usize> = (0..ctx.n).collect();
         ids.sort_by(|&a, &b| {
-            scores[b].partial_cmp(&scores[a]).expect("age scores are finite").then(a.cmp(&b))
+            ctx.available[b]
+                .cmp(&ctx.available[a])
+                .then(scores[b].partial_cmp(&scores[a]).expect("age scores are finite"))
+                .then(a.cmp(&b))
         });
         ids.truncate(ctx.m);
         ids.sort_unstable();
@@ -185,8 +205,17 @@ mod tests {
         })
     }
 
+    static ALL_UP: [bool; 8] = [true; 8];
+
     fn ctx<'a>(ps: &'a ParameterServer, since: &'a [u32], m: usize) -> ScheduleCtx<'a> {
-        ScheduleCtx { round: 0, n: since.len(), m, ps, since_polled: since }
+        ScheduleCtx {
+            round: 0,
+            n: since.len(),
+            m,
+            ps,
+            since_polled: since,
+            available: &ALL_UP[..since.len()],
+        }
     }
 
     #[test]
@@ -253,6 +282,37 @@ mod tests {
         let since = [0u32; 4];
         let mut s = AgeDebt;
         assert_eq!(s.select(&ctx(&server, &since, 2)), vec![2, 3]);
+    }
+
+    #[test]
+    fn age_debt_skips_unavailable_clients() {
+        // client 1 has by far the largest poll debt, but its stream is
+        // dead: the cohort must come from the available clients
+        let server = ps(4);
+        let since = [3u32, 99, 1, 9];
+        let avail = [true, false, true, true];
+        let mut s = AgeDebt;
+        let c = s.select(&ScheduleCtx {
+            round: 0,
+            n: 4,
+            m: 2,
+            ps: &server,
+            since_polled: &since,
+            available: &avail,
+        });
+        assert_eq!(c, vec![0, 3], "dead client 1 must not take a slot");
+        // with only one client up, the cohort falls back to filling from
+        // the stalest unavailable clients rather than shrinking below m
+        let avail = [false, false, true, false];
+        let c = s.select(&ScheduleCtx {
+            round: 0,
+            n: 4,
+            m: 2,
+            ps: &server,
+            since_polled: &since,
+            available: &avail,
+        });
+        assert_eq!(c, vec![1, 2], "available client first, then the stalest dead one");
     }
 
     #[test]

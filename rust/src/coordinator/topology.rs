@@ -1,0 +1,480 @@
+//! Hierarchical (multi-PS) aggregation: shard the round protocol behind a
+//! topology layer.
+//!
+//! The paper's PS is a single aggregation point; at fleet scale it is the
+//! bottleneck for both compute (selection, clustering) and connections.
+//! [`ShardedEngine`] splits the fleet into N **shard engines** — each a
+//! full [`RoundEngine`] owning a disjoint, cluster-aligned slice of the
+//! clients and driving its own [`ClientPool`] cohort round — plus a
+//! **root aggregator** that:
+//!
+//! 1. re-broadcasts the authoritative global model into every shard,
+//! 2. runs all shard collect phases in parallel on scoped threads (the
+//!    same pattern as the in-process pool's client lanes),
+//! 3. merges the shard [`Aggregate`]s and applies **one** server update
+//!    ([`merge_and_apply`], the exact code path the flat engine runs),
+//! 4. lets each shard commit its own age/frequency bookkeeping and
+//!    M-periodic reclustering.
+//!
+//! Age semantics survive sharding exactly: each shard's per-cluster
+//! [`AgeVector`]s evolve under eq. (2) locally, and the root can combine
+//! them at any time with [`AgeVector::merge_min`]/[`merge_max`] — the
+//! lazy representation rebases epochs on merge, so the root's fleet-wide
+//! staleness view equals the dense oracle bit-for-bit
+//! (`rust/tests/parity.rs`, `rust/tests/properties.rs`).
+//!
+//! [`Topology::Flat`] and `Sharded { shards: 1 }` are **bit-for-bit
+//! identical**: shard 0 keeps the experiment seed, the slice is the
+//! identity, the root applies the same aggregate with the same scale to
+//! the same server-optimizer state, and the per-shard wire accounting
+//! rolls up to the flat numbers (pinned in `rust/tests/parity.rs`).
+//!
+//! [`AgeVector`]: crate::age::AgeVector
+//! [`AgeVector::merge_min`]: crate::age::AgeVector::merge_min
+//! [`merge_max`]: crate::age::AgeVector::merge_max
+
+use crate::age::AgeVector;
+use crate::backend::{Backend, GlobalState};
+use crate::clustering::MergeRule;
+use crate::config::ExperimentConfig;
+use crate::coordinator::aggregator::Aggregate;
+use crate::coordinator::engine::{
+    merge_and_apply, ClientPool, RoundEngine, RoundOutcome, ShardRound, UPLOADED_LOG_CAP,
+};
+use crate::fl::metrics::CommStats;
+use crate::util::timer::Profile;
+use anyhow::{ensure, Result};
+use std::collections::VecDeque;
+
+/// How the round protocol is laid out across parameter servers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// One monolithic PS (the paper's setup): a single [`RoundEngine`]
+    /// owns every client.
+    Flat,
+    /// Two-level: `shards` shard engines under one root aggregator.
+    /// `root_merge` is how the root combines shard age vectors into its
+    /// fleet-wide staleness view ([`ShardedEngine::merged_ages`]).
+    Sharded { shards: usize, root_merge: MergeRule },
+}
+
+impl Topology {
+    /// Parse the config/CLI surface: `0` = flat (the default), `n >= 1` =
+    /// sharded with n shards (`1` runs the sharded code path pinned
+    /// bit-for-bit to flat).
+    pub fn from_shards(shards: usize, root_merge: MergeRule) -> Self {
+        if shards == 0 {
+            Topology::Flat
+        } else {
+            Topology::Sharded { shards, root_merge }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Flat => "flat",
+            Topology::Sharded { .. } => "sharded",
+        }
+    }
+
+    /// Number of shard engines this topology runs (1 for flat).
+    pub fn n_shards(&self) -> usize {
+        match self {
+            Topology::Flat => 1,
+            Topology::Sharded { shards, .. } => *shards,
+        }
+    }
+
+    /// The `shards` config/CLI encoding (0 = flat).
+    pub fn shards_knob(&self) -> usize {
+        match self {
+            Topology::Flat => 0,
+            Topology::Sharded { shards, .. } => *shards,
+        }
+    }
+
+    pub fn root_merge(&self) -> MergeRule {
+        match self {
+            Topology::Flat => MergeRule::Min,
+            Topology::Sharded { root_merge, .. } => *root_merge,
+        }
+    }
+}
+
+/// The static client -> shard assignment: contiguous balanced slices of
+/// `0..n`, which is exactly [`crate::clustering::ClusterManager::shard_slices`] over the
+/// initial all-singleton clustering (pinned by a test). Both the root PS
+/// and every remote worker compute this independently from (n, shards),
+/// so no assignment ever crosses the wire.
+pub fn client_shards(n: usize, shards: usize) -> Vec<Vec<usize>> {
+    assert!(shards >= 1 && shards <= n, "need 1 <= shards ({shards}) <= n ({n})");
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        out.push((start..start + len).collect());
+        start += len;
+    }
+    out
+}
+
+/// Map a global client id to its `(shard, local_id)` under
+/// [`client_shards`].
+pub fn locate(n: usize, shards: usize, global_id: usize) -> (usize, usize) {
+    assert!(global_id < n);
+    let base = n / shards;
+    let extra = n % shards;
+    let big = (base + 1) * extra; // clients living in the `base+1` shards
+    if global_id < big {
+        (global_id / (base + 1), global_id % (base + 1))
+    } else {
+        (extra + (global_id - big) / base, (global_id - big) % base)
+    }
+}
+
+/// Shard-local experiment config: the slice's client count, the flat
+/// topology (a shard engine never nests), and a per-shard seed offset so
+/// the stochastic schedulers of different shards draw independent
+/// streams. Shard 0 keeps the experiment seed unchanged — the
+/// `Sharded { shards: 1 } == Flat` pin depends on it.
+fn shard_config(cfg: &ExperimentConfig, shard: usize, n_local: usize) -> ExperimentConfig {
+    let mut c = cfg.clone();
+    c.n_clients = n_local;
+    c.topology = Topology::Flat;
+    c.seed = cfg.seed ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    c
+}
+
+/// The two-level round driver: N shard [`RoundEngine`]s + the root
+/// aggregator state (authoritative global model, server-optimizer
+/// moments, root profile, global uploaded-index log).
+pub struct ShardedEngine {
+    cfg: ExperimentConfig,
+    engines: Vec<RoundEngine>,
+    /// shard -> sorted global client ids (disjoint cover of `0..n`)
+    slices: Vec<Vec<usize>>,
+    global: GlobalState,
+    root_merge: MergeRule,
+    profile: Profile,
+    /// per round, per **global** client id: the uploaded indices (ring of
+    /// the last [`UPLOADED_LOG_CAP`] rounds, like the flat engine's)
+    uploaded_log: VecDeque<Vec<Vec<u32>>>,
+    rounds_done: usize,
+}
+
+impl ShardedEngine {
+    /// Build the topology from the global config (`cfg.topology` decides
+    /// the shard count; `Flat` behaves as one shard). `init_params` seeds
+    /// both the root model and every shard's broadcast copy.
+    pub fn new(cfg: &ExperimentConfig, init_params: Vec<f32>) -> Result<Self> {
+        let shards = cfg.topology.n_shards();
+        ensure!(
+            shards >= 1 && shards <= cfg.n_clients,
+            "topology wants {shards} shards for {} clients",
+            cfg.n_clients
+        );
+        let slices = client_shards(cfg.n_clients, shards);
+        let engines: Vec<RoundEngine> = slices
+            .iter()
+            .enumerate()
+            .map(|(s, slice)| {
+                RoundEngine::new(&shard_config(cfg, s, slice.len()), init_params.clone())
+            })
+            .collect();
+        Ok(ShardedEngine {
+            cfg: cfg.clone(),
+            engines,
+            slices,
+            global: GlobalState::new(init_params),
+            root_merge: cfg.topology.root_merge(),
+            profile: Profile::new(),
+            uploaded_log: VecDeque::new(),
+            rounds_done: 0,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The shard engines, in shard order (diagnostics, per-shard stats).
+    pub fn shards(&self) -> &[RoundEngine] {
+        &self.engines
+    }
+
+    /// shard -> sorted global client ids.
+    pub fn slices(&self) -> &[Vec<usize>] {
+        &self.slices
+    }
+
+    pub fn global_params(&self) -> &[f32] {
+        &self.global.params
+    }
+
+    pub fn profile(&self) -> &Profile {
+        &self.profile
+    }
+
+    pub fn round(&self) -> usize {
+        self.rounds_done
+    }
+
+    /// Per-round, per-global-client uploaded index sets (the sharded
+    /// counterpart of [`RoundEngine::uploaded_log`]).
+    pub fn uploaded_log(&self) -> &VecDeque<Vec<Vec<u32>>> {
+        &self.uploaded_log
+    }
+
+    /// Rolled-up communication accounting: the field-wise sum of the
+    /// shard engines' counters (DESIGN.md §7 — the root <-> shard hop is
+    /// in-process and contributes zero wire bytes, so the roll-up still
+    /// equals the bytes observed on the shard PS sockets).
+    pub fn comm(&self) -> CommStats {
+        let mut total = CommStats::default();
+        for e in &self.engines {
+            total.absorb(&e.comm());
+        }
+        total
+    }
+
+    /// Total cluster count across shards (clusters never span shards).
+    pub fn n_clusters(&self) -> usize {
+        self.engines.iter().map(|e| e.ps().clusters().n_clusters()).sum()
+    }
+
+    /// Global cluster labels: shard-local cluster ids offset so ids are
+    /// unique fleet-wide, indexed by global client id.
+    pub fn cluster_labels(&self) -> Vec<usize> {
+        let mut labels = vec![0usize; self.cfg.n_clients];
+        let mut offset = 0;
+        for (engine, slice) in self.engines.iter().zip(&self.slices) {
+            let local = engine.ps().clusters().labels();
+            for (l, &g) in local.iter().zip(slice) {
+                labels[g] = offset + l;
+            }
+            offset += engine.ps().clusters().n_clusters();
+        }
+        labels
+    }
+
+    /// The root's fleet-wide staleness view: every shard's per-cluster
+    /// age vector combined under the topology's `root_merge` rule. The
+    /// lazy vectors rebase epochs on merge, so this equals the dense
+    /// elementwise min/max over all cluster vectors exactly — O(d *
+    /// n_clusters), intended for scheduling/diagnostics cadence, not the
+    /// per-round hot path.
+    pub fn merged_ages(&self) -> AgeVector {
+        let mut acc: Option<AgeVector> = None;
+        for engine in &self.engines {
+            let clusters = engine.ps().clusters();
+            for c in 0..clusters.n_clusters() {
+                let v = clusters.age_of_cluster(c);
+                match &mut acc {
+                    None => acc = Some(v.clone()),
+                    Some(a) => match self.root_merge {
+                        MergeRule::Min => a.merge_min(v),
+                        MergeRule::Max => a.merge_max(v),
+                    },
+                }
+            }
+        }
+        acc.unwrap_or_else(|| AgeVector::new(self.cfg.d()))
+    }
+
+    /// One global round across every shard, with the shard collect phases
+    /// running **in parallel on scoped threads** (`P: Send`; in-process
+    /// pools built via [`crate::fl::pool::SendPool`] qualify, as does any
+    /// `Send` transport). Results are merged in shard order, so the round
+    /// is deterministic regardless of thread interleaving.
+    pub fn run_round<P: ClientPool + Send>(&mut self, pools: &mut [P]) -> Result<RoundOutcome> {
+        self.check_pools(pools)?;
+        let params = &self.global.params;
+        let srs: Vec<ShardRound> = if self.engines.len() == 1 {
+            let e = &mut self.engines[0];
+            e.set_global(params);
+            vec![e.collect_round(&mut pools[0])?]
+        } else {
+            self.profile.time("root.collect", || {
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = self
+                        .engines
+                        .iter_mut()
+                        .zip(pools.iter_mut())
+                        .map(|(e, p)| {
+                            s.spawn(move || -> Result<ShardRound> {
+                                e.set_global(params);
+                                e.collect_round(p)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("shard thread panicked"))
+                        .collect::<Result<Vec<_>>>()
+                })
+            })?
+        };
+        let (pool0, _) = pools.split_first_mut().expect("checked non-empty");
+        self.apply_and_finish(srs, pool0.backend())
+    }
+
+    /// [`Self::run_round`] with the shard collect phases driven serially
+    /// in shard order — for pools that cannot cross threads (e.g. a
+    /// TCP pool whose PS backend is a single PJRT runtime). Produces
+    /// results identical to the parallel driver: shards are independent
+    /// and merged in shard order either way.
+    pub fn run_round_serial<P: ClientPool>(&mut self, pools: &mut [P]) -> Result<RoundOutcome> {
+        self.check_pools(pools)?;
+        let params = &self.global.params;
+        let srs: Vec<ShardRound> = self
+            .engines
+            .iter_mut()
+            .zip(pools.iter_mut())
+            .map(|(e, p)| {
+                e.set_global(params);
+                e.collect_round(p)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let (pool0, _) = pools.split_first_mut().expect("checked non-empty");
+        self.apply_and_finish(srs, pool0.backend())
+    }
+
+    fn check_pools<P: ClientPool>(&self, pools: &[P]) -> Result<()> {
+        ensure!(
+            pools.len() == self.engines.len(),
+            "{} pools for {} shards",
+            pools.len(),
+            self.engines.len()
+        );
+        for (s, (pool, slice)) in pools.iter().zip(&self.slices).enumerate() {
+            ensure!(
+                pool.n_clients() == slice.len(),
+                "shard {s}: pool has {} clients, slice has {}",
+                pool.n_clients(),
+                slice.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// The root half of a round: merge the shard aggregates (shard order,
+    /// so `Sharded { shards: 1 }` pushes the identical update sequence
+    /// the flat engine does), apply one server update to the root model,
+    /// then let every shard commit its bookkeeping.
+    fn apply_and_finish(
+        &mut self,
+        srs: Vec<ShardRound>,
+        backend: &mut dyn Backend,
+    ) -> Result<RoundOutcome> {
+        let n = self.cfg.n_clients;
+        let m_total: usize = srs.iter().map(|sr| sr.cohort.len()).sum();
+        let loss_sum: f64 = srs.iter().map(|sr| sr.loss_sum).sum();
+        let mean_loss = (loss_sum / m_total as f64) as f32;
+
+        let mut agg = Aggregate::new();
+        let mut uploaded_global: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut cohort_global: Vec<usize> = Vec::with_capacity(m_total);
+        let mut finish = Vec::with_capacity(srs.len());
+        for (sr, slice) in srs.into_iter().zip(&self.slices) {
+            for u in sr.updates {
+                agg.push(u);
+            }
+            for (local, up) in sr.uploaded.iter().enumerate() {
+                if !up.is_empty() {
+                    uploaded_global[slice[local]] = up.clone();
+                }
+            }
+            cohort_global.extend(sr.cohort.iter().map(|&c| slice[c]));
+            finish.push((sr.uploaded, sr.cohort));
+        }
+        // slices are contiguous ascending, so shard-order concatenation
+        // is already sorted; keep the sort as a cheap invariant guard for
+        // future non-contiguous (cluster-aligned) assignments
+        cohort_global.sort_unstable();
+
+        merge_and_apply(
+            &self.cfg,
+            backend,
+            &mut self.global,
+            &agg,
+            m_total,
+            n,
+            &self.profile,
+        )?;
+
+        let mut reclustered_any = false;
+        for (engine, (uploaded, cohort)) in self.engines.iter_mut().zip(finish) {
+            if engine.finish_round(uploaded, &cohort).is_some() {
+                reclustered_any = true;
+            }
+        }
+        self.uploaded_log.push_back(uploaded_global);
+        if self.uploaded_log.len() > UPLOADED_LOG_CAP {
+            self.uploaded_log.pop_front();
+        }
+        self.rounds_done += 1;
+
+        Ok(RoundOutcome {
+            mean_loss,
+            reclustered: reclustered_any.then(|| self.n_clusters()),
+            n_clusters: self.n_clusters(),
+            cohort: cohort_global,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::ClusterManager;
+
+    #[test]
+    fn client_shards_cover_disjointly_and_balanced() {
+        for (n, s) in [(10, 3), (8, 2), (6, 6), (7, 1), (5, 4)] {
+            let slices = client_shards(n, s);
+            assert_eq!(slices.len(), s);
+            let all: Vec<usize> = slices.iter().flatten().copied().collect();
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "contiguous disjoint cover");
+            let max = slices.iter().map(Vec::len).max().unwrap();
+            let min = slices.iter().map(Vec::len).min().unwrap();
+            assert!(max - min <= 1, "balanced: {slices:?}");
+        }
+    }
+
+    #[test]
+    fn client_shards_match_singleton_cluster_slices() {
+        // the static assignment IS the cluster-aligned assignment over
+        // the initial all-singleton clustering
+        for (n, s) in [(10, 3), (8, 2), (5, 5), (9, 4)] {
+            let manager = ClusterManager::new(n, 1, MergeRule::Min);
+            assert_eq!(client_shards(n, s), manager.shard_slices(s));
+        }
+    }
+
+    #[test]
+    fn locate_inverts_client_shards() {
+        for (n, s) in [(10, 3), (8, 2), (6, 6), (7, 1), (5, 4), (9, 4)] {
+            let slices = client_shards(n, s);
+            for g in 0..n {
+                let (shard, local) = locate(n, s, g);
+                assert_eq!(slices[shard][local], g, "n={n} s={s} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn topology_knob_roundtrip() {
+        assert_eq!(Topology::from_shards(0, MergeRule::Min), Topology::Flat);
+        assert_eq!(
+            Topology::from_shards(3, MergeRule::Max),
+            Topology::Sharded { shards: 3, root_merge: MergeRule::Max }
+        );
+        for t in [Topology::Flat, Topology::from_shards(2, MergeRule::Min)] {
+            assert_eq!(Topology::from_shards(t.shards_knob(), t.root_merge()), t);
+        }
+        assert_eq!(Topology::Flat.n_shards(), 1);
+        assert_eq!(Topology::from_shards(1, MergeRule::Min).n_shards(), 1);
+    }
+}

@@ -89,6 +89,10 @@ pub struct ServeReport {
 struct WorkerConn {
     stream: TcpStream,
     fb: FrameBuf,
+    /// a round-path send/recv on this stream failed (timeout, reset, bad
+    /// frame): reported through [`ClientPool::available`] so
+    /// availability-aware scheduling stops spending cohort slots here
+    dead: bool,
 }
 
 /// Sparse frames are remote input: every index must address the model.
@@ -152,6 +156,15 @@ impl TcpClientPool {
         let mut joined = 0;
         while joined < cfg.n_clients {
             let (mut s, peer) = listener.accept()?;
+            // the straggler seed (`io_timeout_ms`): with a deadline set, a
+            // hung worker fails its stream's read/write instead of wedging
+            // the PS collect phase forever — applied before the Join recv
+            // so even a connect-and-stall client cannot block accept
+            if cfg.io_timeout_ms > 0 {
+                let dl = Some(std::time::Duration::from_millis(cfg.io_timeout_ms));
+                s.set_read_timeout(dl).context("set_read_timeout")?;
+                s.set_write_timeout(dl).context("set_write_timeout")?;
+            }
             match recv(&mut s, cfg.codec) {
                 Ok(Msg::Join { client_id, codec }) => {
                     let id = client_id as usize;
@@ -187,7 +200,7 @@ impl TcpClientPool {
         Ok(TcpClientPool {
             conns: slots
                 .into_iter()
-                .map(|s| WorkerConn { stream: s.unwrap(), fb: FrameBuf::new() })
+                .map(|s| WorkerConn { stream: s.unwrap(), fb: FrameBuf::new(), dead: false })
                 .collect(),
             backend: make_backend(cfg)?,
             round: 0,
@@ -225,19 +238,75 @@ impl TcpClientPool {
         self.conns.iter().map(|wc| wc.fb.grows()).sum()
     }
 
-    /// Tell every worker training is over.
+    /// Tell every worker training is over (dead streams are skipped —
+    /// there is nobody listening).
     pub fn shutdown(&mut self) -> Result<()> {
         let codec = self.codec;
-        for wc in self.conns.iter_mut() {
+        for wc in self.conns.iter_mut().filter(|wc| !wc.dead) {
             send_frame(&mut wc.stream, &Msg::Shutdown, codec, &mut wc.fb)?;
         }
         Ok(())
     }
 }
 
+/// One stream's first round half: write the broadcast frame, collect the
+/// worker's `Report` (bounds-checked), return it with the received frame
+/// size.
+fn stream_broadcast_collect(
+    wc: &mut WorkerConn,
+    frame: &[u8],
+    codec: Codec,
+    round: u32,
+    d: usize,
+) -> Result<(ClientReport, usize)> {
+    wc.stream.write_all(frame).context("send model frame")?;
+    match recv_frame(&mut wc.stream, codec, &mut wc.fb)? {
+        Msg::Report { report, mean_loss, round: r, .. } if r == round => {
+            // reports are remote input: reject indices outside the model
+            // before they reach selection/aggregation
+            check_indices(&report.idx, d, "report")?;
+            let up = wc.fb.last_recv_frame_len();
+            Ok((ClientReport { report, mean_loss }, up))
+        }
+        other => bail!("round {round}: expected Report, got {other:?}"),
+    }
+}
+
+/// One stream's second round half: send the index request, collect the
+/// worker's `Update` (bounds-checked), return it with the (sent,
+/// received) frame sizes.
+fn stream_request_collect(
+    wc: &mut WorkerConn,
+    indices: &[u32],
+    codec: Codec,
+    round: u32,
+    d: usize,
+) -> Result<(SparseVec, usize, usize)> {
+    let down = send_request(&mut wc.stream, codec, &mut wc.fb, round, indices)?;
+    match recv_frame(&mut wc.stream, codec, &mut wc.fb)? {
+        Msg::Update { update, round: r, .. } if r == round => {
+            // updates scatter-add into the global model: reject
+            // out-of-range remote indices here, not as a panic inside
+            // aggregation
+            check_indices(&update.idx, d, "update")?;
+            Ok((update, down, wc.fb.last_recv_frame_len()))
+        }
+        other => bail!("round {round}: expected Update, got {other:?}"),
+    }
+}
+
 impl ClientPool for TcpClientPool {
     fn n_clients(&self) -> usize {
         self.conns.len()
+    }
+
+    /// Streams that errored (timed out, reset, sent a bad frame) report
+    /// as unavailable, so the age-debt scheduler stops spending cohort
+    /// slots on clients whose rounds cannot complete. Consumed by drivers
+    /// that outlive a failed round (the stock `run_server` loop aborts on
+    /// the discovering round; drop-and-continue is the ROADMAP item).
+    fn available(&self) -> Vec<bool> {
+        self.conns.iter().map(|wc| !wc.dead).collect()
     }
 
     fn train_and_report(
@@ -257,7 +326,11 @@ impl ClientPool for TcpClientPool {
         // cross-device regime most streams are off-cohort)
         for (i, wc) in self.conns.iter_mut().enumerate() {
             if pos[i] == usize::MAX {
-                let n = send_frame(&mut wc.stream, &Msg::Sit { round }, codec, &mut wc.fb)?;
+                let sent = send_frame(&mut wc.stream, &Msg::Sit { round }, codec, &mut wc.fb);
+                if sent.is_err() {
+                    wc.dead = true; // every failed round-path I/O is reported
+                }
+                let n = sent.with_context(|| format!("client {i} Sit (round {round})"))?;
                 self.wire_down += n as u64;
             }
         }
@@ -284,18 +357,11 @@ impl ClientPool for TcpClientPool {
                 }
                 let frame = Arc::clone(&frame);
                 handles.push(scope.spawn(move || -> Result<(ClientReport, usize)> {
-                    wc.stream.write_all(&frame).context("send model frame")?;
-                    match recv_frame(&mut wc.stream, codec, &mut wc.fb)? {
-                        Msg::Report { report, mean_loss, round: r, .. } if r == round => {
-                            // reports are remote input: reject indices
-                            // outside the model before they reach
-                            // selection/aggregation
-                            check_indices(&report.idx, d, "report")?;
-                            let up = wc.fb.last_recv_frame_len();
-                            Ok((ClientReport { report, mean_loss }, up))
-                        }
-                        other => bail!("round {round}: expected Report, got {other:?}"),
+                    let out = stream_broadcast_collect(wc, &frame, codec, round, d);
+                    if out.is_err() {
+                        wc.dead = true;
                     }
+                    out.with_context(|| format!("client {i} stream (round {round})"))
                 }));
             }
             // joining in stream order = ascending client id = cohort order
@@ -332,17 +398,11 @@ impl ClientPool for TcpClientPool {
                 let indices: &[u32] =
                     requests.map(|r| r[pos[i]].as_slice()).unwrap_or(&[]);
                 handles.push(scope.spawn(move || -> Result<(SparseVec, usize, usize)> {
-                    let down = send_request(&mut wc.stream, codec, &mut wc.fb, round, indices)?;
-                    match recv_frame(&mut wc.stream, codec, &mut wc.fb)? {
-                        Msg::Update { update, round: r, .. } if r == round => {
-                            // updates scatter-add into the global model:
-                            // reject out-of-range remote indices here,
-                            // not as a panic inside aggregation
-                            check_indices(&update.idx, d, "update")?;
-                            Ok((update, down, wc.fb.last_recv_frame_len()))
-                        }
-                        other => bail!("round {round}: expected Update, got {other:?}"),
+                    let out = stream_request_collect(wc, indices, codec, round, d);
+                    if out.is_err() {
+                        wc.dead = true;
                     }
+                    out.with_context(|| format!("client {i} stream (round {round})"))
                 }));
             }
             handles
@@ -364,11 +424,25 @@ impl ClientPool for TcpClientPool {
     }
 }
 
-/// Run the parameter server until `cfg.rounds` rounds complete.
+/// Run the parameter server until `cfg.rounds` rounds complete. Under a
+/// sharded topology, shard `s`'s listener binds `port + s` and workers
+/// connect to their shard's port (they compute their shard from the
+/// shared config — see [`run_worker`]).
 pub fn run_server(cfg: &ExperimentConfig, port: u16) -> Result<ServeReport> {
-    let listener =
-        TcpListener::bind(("0.0.0.0", port)).with_context(|| format!("binding :{port}"))?;
-    run_server_on(cfg, listener)
+    if cfg.topology == crate::coordinator::topology::Topology::Flat {
+        let listener =
+            TcpListener::bind(("0.0.0.0", port)).with_context(|| format!("binding :{port}"))?;
+        return run_server_on(cfg, listener);
+    }
+    let listeners = (0..cfg.topology.n_shards())
+        .map(|s| {
+            let p = port
+                .checked_add(s as u16)
+                .ok_or_else(|| anyhow::anyhow!("shard {s} port {port}+{s} exceeds 65535"))?;
+            TcpListener::bind(("0.0.0.0", p)).with_context(|| format!("binding :{p} (shard {s})"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    run_sharded_server_on(cfg, listeners)
 }
 
 /// [`run_server`] over an already-bound listener (lets tests bind an
@@ -412,7 +486,109 @@ pub fn run_server_on(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Se
     })
 }
 
-/// Run one worker process until the PS sends Shutdown.
+/// [`run_server`] for a sharded topology over pre-bound listeners, one
+/// per shard in shard order (lets tests bind ephemeral ports before
+/// spawning workers). Each shard's [`TcpClientPool`] accepts its slice's
+/// workers (joining with **shard-local** ids) and is driven by the shared
+/// [`ShardedEngine`]; the root applies one merged server update per round
+/// and re-broadcasts through the shards.
+///
+/// Shard collect phases run serially here — [`TcpClientPool`] owns a
+/// non-`Send` PS backend, so it cannot cross shard threads. The per-shard
+/// pools still overlap their own workers (thread per stream), and every
+/// worker of every shard trains concurrently in its own process; only the
+/// PS-side frame pumping serializes across shards.
+pub fn run_sharded_server_on(
+    cfg: &ExperimentConfig,
+    listeners: Vec<TcpListener>,
+) -> Result<ServeReport> {
+    use crate::coordinator::topology::{client_shards, ShardedEngine};
+    cfg.validate()?;
+    let shards = cfg.topology.n_shards();
+    ensure_listeners(shards, listeners.len())?;
+    let slices = client_shards(cfg.n_clients, shards);
+    let mut pools: Vec<TcpClientPool> = Vec::with_capacity(shards);
+    for ((s, listener), slice) in listeners.into_iter().enumerate().zip(&slices) {
+        let mut shard_cfg = cfg.clone();
+        shard_cfg.n_clients = slice.len();
+        crate::info!("serve: accepting shard {s} ({} clients)", slice.len());
+        pools.push(TcpClientPool::accept(&shard_cfg, listener)?);
+    }
+    let init = pools[0].backend.init_params()?;
+    let mut engine = ShardedEngine::new(cfg, init)?;
+    let (_, test) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
+    let test_idx: Vec<usize> = (0..test.len()).collect();
+
+    for round in 1..=cfg.rounds {
+        engine.run_round_serial(&mut pools)?;
+        if cfg.eval_every > 0 && round % cfg.eval_every == 0 {
+            let (acc, loss) = eval_dataset(
+                pools[0].backend(),
+                engine.global_params(),
+                &test,
+                &test_idx,
+                cfg.batch,
+            )?;
+            crate::info!(
+                "serve: round {round}/{}: acc {:.2}% loss {loss:.4} clusters {} ({} shards)",
+                cfg.rounds,
+                acc * 100.0,
+                engine.n_clusters(),
+                engine.n_shards()
+            );
+        }
+    }
+    for pool in &mut pools {
+        pool.shutdown()?;
+    }
+    let (acc, _) = eval_dataset(
+        pools[0].backend(),
+        engine.global_params(),
+        &test,
+        &test_idx,
+        cfg.batch,
+    )?;
+    // roll the per-shard transport observations up next to the engine's
+    // rolled-up accounting: the wire pins hold shard-wise, so they hold
+    // for the sums
+    let mut wire_up_observed = 0;
+    let mut wire_down_observed = 0;
+    let mut model_encodes = 0;
+    let mut frame_grows = 0;
+    for pool in &pools {
+        let (up, down) = pool.wire_observed();
+        wire_up_observed += up;
+        wire_down_observed += down;
+        model_encodes += pool.model_encodes();
+        frame_grows += pool.frame_grows();
+    }
+    Ok(ServeReport {
+        rounds: cfg.rounds,
+        final_accuracy: acc,
+        cluster_labels: engine.cluster_labels(),
+        final_params: engine.global_params().to_vec(),
+        uploaded_log: engine.uploaded_log().iter().cloned().collect(),
+        comm: engine.comm(),
+        model_encodes,
+        wire_up_observed,
+        wire_down_observed,
+        frame_grows,
+    })
+}
+
+fn ensure_listeners(shards: usize, got: usize) -> Result<()> {
+    if got != shards {
+        bail!("sharded server needs {shards} listeners, got {got}");
+    }
+    Ok(())
+}
+
+/// Run one worker process until the PS sends Shutdown. Under a sharded
+/// topology the worker joins its shard's PS with its **shard-local** id
+/// (computed from the shared config via
+/// [`crate::coordinator::topology::locate`] — nothing crosses the wire);
+/// `addr` must already point at that shard's listener (the CLI derives
+/// `port + shard` from the base port).
 pub fn run_worker(cfg: &ExperimentConfig, addr: &str, id: usize) -> Result<()> {
     cfg.validate()?;
     if id >= cfg.n_clients {
@@ -429,9 +605,21 @@ pub fn run_worker(cfg: &ExperimentConfig, addr: &str, id: usize) -> Result<()> {
     let delta = cfg.payload == Payload::Delta;
     let mut memory = if delta { vec![0.0f32; cfg.d()] } else { Vec::new() };
 
+    // under a sharded topology the shard PS indexes streams by
+    // shard-local slot; the worker derives its slot from the shared
+    // config exactly like the PS does (data/RNG stay keyed by the global
+    // id, so training is topology-independent)
+    let n_shards = cfg.topology.n_shards();
+    let join_id = if n_shards > 1 {
+        let (shard, local) = crate::coordinator::topology::locate(cfg.n_clients, n_shards, id);
+        crate::info!("worker {id}: shard {shard}, local slot {local}");
+        local
+    } else {
+        id
+    };
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
-    send(&mut stream, &Msg::Join { client_id: id as u32, codec }, codec)?;
+    send(&mut stream, &Msg::Join { client_id: join_id as u32, codec }, codec)?;
     crate::info!("worker {id}: joined {addr} (codec {})", codec.name());
 
     // steady-state transport buffers: one FrameBuf for every frame in and

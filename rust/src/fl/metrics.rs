@@ -33,6 +33,18 @@ pub struct CommStats {
 }
 
 impl CommStats {
+    /// Field-wise accumulate `other` into `self` — the sharded topology's
+    /// roll-up: the root's counters are the sum of its shard engines'
+    /// (DESIGN.md §7; the root <-> shard hop is in-process, zero bytes).
+    pub fn absorb(&mut self, other: &CommStats) {
+        self.report_up += other.report_up;
+        self.update_up += other.update_up;
+        self.request_down += other.request_down;
+        self.broadcast_down += other.broadcast_down;
+        self.wire_up += other.wire_up;
+        self.wire_down += other.wire_down;
+    }
+
     pub fn uplink(&self) -> u64 {
         self.report_up + self.update_up
     }

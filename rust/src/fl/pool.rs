@@ -15,7 +15,9 @@
 //! and [`crate::fl::distributed::TcpClientPool`] are two transports for
 //! the same code path.
 
-use crate::backend::{make_backend_lanes, Backend, BackendLanes, SendBackend};
+use crate::backend::{
+    make_backend_lanes, make_send_lanes, Backend, BackendLanes, Lanes, SendBackend,
+};
 use crate::config::{ExperimentConfig, Payload};
 use crate::coordinator::engine::{
     client_train_phase, client_update_phase, cohort_positions, ClientPool, ClientReport, PhaseCfg,
@@ -25,9 +27,14 @@ use crate::fl::client::Client;
 use crate::sparse::SparseVec;
 use anyhow::{ensure, Context, Result};
 
-pub struct InProcessPool {
+/// An in-process pool whose lanes are all-parallel [`SendBackend`]s: the
+/// pool itself is `Send`, so a sharded topology can drive one per shard
+/// on scoped threads.
+pub type SendPool = InProcessPool<Vec<SendBackend>>;
+
+pub struct InProcessPool<L = BackendLanes> {
     clients: Vec<Client>,
-    lanes: BackendLanes,
+    lanes: L,
     /// per-client error-feedback memory (Delta payload only; empty
     /// otherwise) — the unsent accumulated drift of Qsparse-local-SGD [7]
     memory: Vec<Vec<f32>>,
@@ -36,29 +43,70 @@ pub struct InProcessPool {
     pc: PhaseCfg,
 }
 
+/// Requested lane count: config override or auto-detected cores, never
+/// exceeding the client count. Under a sharded topology every shard pool
+/// trains concurrently on its own scoped thread, so the auto budget is
+/// the cores *divided by the shard count* — `parallel = 0` then fills the
+/// machine exactly once instead of `shards ×` oversubscribing it (an
+/// explicit `parallel` stays per-shard, as documented on the knob).
+fn lane_count(cfg: &ExperimentConfig, n_clients: usize) -> usize {
+    let want = if cfg.parallel == 0 {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        (cores / cfg.topology.n_shards()).max(1)
+    } else {
+        cfg.parallel
+    };
+    want.min(n_clients).max(1)
+}
+
 impl InProcessPool {
     /// Build the pool from one data shard per client. Returns the pool
     /// and the deterministic initial parameters every client started
     /// from (the engine's initial global model).
     pub fn new(cfg: &ExperimentConfig, shards: Vec<Dataset>) -> Result<(Self, Vec<f32>)> {
+        let lanes = make_backend_lanes(cfg, lane_count(cfg, cfg.n_clients))
+            .context("creating backend lanes")?;
+        let ids: Vec<usize> = (0..cfg.n_clients).collect();
+        Self::with_lanes(cfg, shards, &ids, lanes)
+    }
+}
+
+impl InProcessPool<Vec<SendBackend>> {
+    /// Build a `Send` pool over one **shard** of a sharded topology:
+    /// `ids[i]` is the *global* client id behind local slot `i` (global
+    /// ids seed the per-client RNG streams, so a client's trajectory is
+    /// identical whether it trains under a flat or a sharded topology).
+    /// `cfg` is the shard-local config (`n_clients` = `ids.len()`).
+    pub fn new_send(
+        cfg: &ExperimentConfig,
+        shards: Vec<Dataset>,
+        ids: &[usize],
+    ) -> Result<(Self, Vec<f32>)> {
+        let lanes = make_send_lanes(cfg, lane_count(cfg, cfg.n_clients))
+            .context("creating send backend lanes")?;
+        InProcessPool::with_lanes(cfg, shards, ids, lanes)
+    }
+}
+
+impl<L: Lanes> InProcessPool<L> {
+    fn with_lanes(
+        cfg: &ExperimentConfig,
+        shards: Vec<Dataset>,
+        ids: &[usize],
+        mut lanes: L,
+    ) -> Result<(Self, Vec<f32>)> {
         ensure!(
-            shards.len() == cfg.n_clients,
-            "{} shards for {} clients",
+            shards.len() == cfg.n_clients && ids.len() == cfg.n_clients,
+            "{} shards / {} ids for {} clients",
             shards.len(),
+            ids.len(),
             cfg.n_clients
         );
-        let want = if cfg.parallel == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            cfg.parallel
-        };
-        let mut lanes = make_backend_lanes(cfg, want.min(cfg.n_clients).max(1))
-            .context("creating backend lanes")?;
         let init = lanes.primary().init_params()?;
         let clients: Vec<Client> = shards
             .into_iter()
-            .enumerate()
-            .map(|(i, shard)| Client::new(i, shard, init.clone(), cfg.seed))
+            .zip(ids)
+            .map(|(shard, &id)| Client::new(id, shard, init.clone(), cfg.seed))
             .collect();
         let memory = match cfg.payload {
             Payload::Delta => vec![vec![0.0f32; cfg.d()]; cfg.n_clients],
@@ -96,7 +144,7 @@ impl InProcessPool {
     }
 }
 
-impl ClientPool for InProcessPool {
+impl<L: Lanes> ClientPool for InProcessPool<L> {
     fn n_clients(&self) -> usize {
         self.clients.len()
     }
@@ -157,10 +205,10 @@ impl ClientPool for InProcessPool {
 /// `delta` is set. Off-cohort clients are untouched — no training, no
 /// state change. With a single lane (or the serial backend) the work runs
 /// inline on the calling thread; numerics are identical either way.
-fn cohort_map<T, F>(
+fn cohort_map<T, F, L>(
     clients: &mut [Client],
     memory: &mut [Vec<f32>],
-    lanes: &mut BackendLanes,
+    lanes: &mut L,
     delta: bool,
     cohort: &[usize],
     f: F,
@@ -168,6 +216,7 @@ fn cohort_map<T, F>(
 where
     T: Send,
     F: Fn(usize, &mut Client, &mut dyn Backend, Option<&mut Vec<f32>>) -> Result<T> + Sync,
+    L: Lanes,
 {
     let n = clients.len();
     let m = cohort.len();
@@ -193,44 +242,37 @@ where
         .map(|(p, (_i, (c, slot)))| (p, c, slot))
         .collect();
 
-    let lanes: &mut [SendBackend] = match lanes {
-        BackendLanes::Serial(be) => {
-            let mut out = Vec::with_capacity(m);
-            for (p, c, slot) in work.iter_mut() {
-                out.push(f(*p, c, be.as_mut(), slot.take())?);
-            }
-            return Ok(out);
-        }
-        BackendLanes::Parallel(lanes) => lanes,
-    };
-    let n_lanes = lanes.len().min(m).max(1);
-    if n_lanes == 1 {
-        let be = &mut lanes[0];
-        let mut out = Vec::with_capacity(m);
-        for (p, c, slot) in work.iter_mut() {
-            out.push(f(*p, c, be.as_mut(), slot.take())?);
-        }
-        return Ok(out);
-    }
-    let per = m.div_ceil(n_lanes);
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut handles = Vec::with_capacity(n_lanes);
-        for (chunk, be) in work.chunks_mut(per).zip(lanes.iter_mut()) {
-            handles.push(s.spawn(move || -> Result<Vec<T>> {
-                let mut out = Vec::with_capacity(chunk.len());
-                for (p, c, slot) in chunk.iter_mut() {
-                    out.push(f(*p, c, be.as_mut(), slot.take())?);
+    if let Some(lanes) = lanes.parallel() {
+        let n_lanes = lanes.len().min(m).max(1);
+        if n_lanes > 1 {
+            let per = m.div_ceil(n_lanes);
+            return std::thread::scope(|s| {
+                let f = &f;
+                let mut handles = Vec::with_capacity(n_lanes);
+                for (chunk, be) in work.chunks_mut(per).zip(lanes.iter_mut()) {
+                    handles.push(s.spawn(move || -> Result<Vec<T>> {
+                        let mut out = Vec::with_capacity(chunk.len());
+                        for (p, c, slot) in chunk.iter_mut() {
+                            out.push(f(*p, c, be.as_mut(), slot.take())?);
+                        }
+                        Ok(out)
+                    }));
                 }
-                Ok(out)
-            }));
+                let mut all = Vec::with_capacity(m);
+                for h in handles {
+                    all.extend(h.join().expect("client worker thread panicked")?);
+                }
+                Ok(all)
+            });
         }
-        let mut all = Vec::with_capacity(m);
-        for h in handles {
-            all.extend(h.join().expect("client worker thread panicked")?);
-        }
-        Ok(all)
-    })
+    }
+    // single lane (or a non-replicable serial backend): run inline
+    let be = lanes.primary();
+    let mut out = Vec::with_capacity(m);
+    for (p, c, slot) in work.iter_mut() {
+        out.push(f(*p, c, &mut *be, slot.take())?);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

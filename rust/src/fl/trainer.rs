@@ -1,21 +1,27 @@
 //! The end-to-end FL trainer — a thin adapter binding the unified round
-//! protocol ([`crate::coordinator::engine::RoundEngine`]) to the parallel
-//! in-process [`InProcessPool`], plus the evaluation/reporting shell the
-//! examples and benches consume.
+//! protocol to the parallel in-process pools, plus the
+//! evaluation/reporting shell the examples and benches consume.
 //!
-//! All protocol logic (selection, aggregation, error feedback, server
-//! apply, communication accounting, age/frequency bookkeeping, M-periodic
-//! DBSCAN) lives in the engine and is shared bit-for-bit with the TCP
-//! deployment (`fl::distributed`); see `rust/tests/parity.rs`.
+//! The `topology` knob decides the driver: a flat run binds one
+//! [`RoundEngine`] to one [`InProcessPool`]; a sharded run builds one
+//! `Send` pool per shard ([`SendPool`]) and drives them through the
+//! [`ShardedEngine`] root aggregator, shard rounds in parallel on scoped
+//! threads (DESIGN.md §7). All protocol logic lives in the engines and is
+//! shared bit-for-bit with the TCP deployment (`fl::distributed`); see
+//! `rust/tests/parity.rs` — including the `Flat ≡ Sharded { shards: 1 }`
+//! pin.
 
-use crate::config::{EvalMode, ExperimentConfig};
+use crate::backend::Backend;
+use crate::config::{BackendKind, EvalMode, ExperimentConfig};
 use crate::coordinator::engine::{eval_dataset, RoundEngine};
 use crate::coordinator::server::ParameterServer;
+use crate::coordinator::topology::{client_shards, locate, ShardedEngine, Topology};
 use crate::data::{load_dataset, partition::partition, Dataset};
-use crate::fl::metrics::{History, RoundRecord};
-use crate::fl::pool::InProcessPool;
+use crate::fl::metrics::{CommStats, History, RoundRecord};
+use crate::fl::pool::{InProcessPool, SendPool};
 use crate::util::timer::Profile;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
 
 /// Everything a finished run reports (the examples/benches render these
 /// into the paper's figures).
@@ -23,8 +29,10 @@ use anyhow::{Context, Result};
 pub struct TrainReport {
     pub history: History,
     /// (round, eq.-3 connectivity matrix) snapshots for Fig. 2 / Fig. 4
+    /// (flat topology only — a sharded PS has per-shard matrices)
     pub heatmaps: Vec<(usize, Vec<Vec<f64>>)>,
-    /// final cluster assignment per client
+    /// final cluster assignment per client (fleet-wide unique ids under
+    /// a sharded topology)
     pub cluster_labels: Vec<usize>,
     /// ground-truth pair labels (when the partition scheme defines them)
     pub truth_labels: Option<Vec<usize>>,
@@ -32,15 +40,66 @@ pub struct TrainReport {
     pub profile: Vec<(String, f64, u64)>,
 }
 
+/// Which engine/pool pair drives the rounds.
+enum Driver {
+    Flat { engine: RoundEngine, pool: InProcessPool },
+    Sharded { engine: ShardedEngine, pools: Vec<SendPool> },
+}
+
+/// Build the sharded in-process driver: one `Send` pool per shard over
+/// the cluster-aligned client slices, plus the root [`ShardedEngine`].
+/// Shared by [`Trainer::from_config`] and the sharding bench (which needs
+/// direct engine access to time the serial vs parallel shard drivers).
+pub fn build_sharded_inprocess(
+    cfg: &ExperimentConfig,
+) -> Result<(ShardedEngine, Vec<SendPool>)> {
+    cfg.validate()?;
+    let (train, _) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
+    let shards: Vec<Dataset> = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed)
+        .into_iter()
+        .map(|idx| train.subset(&idx))
+        .collect();
+    build_sharded_pools(cfg, shards)
+}
+
+fn build_sharded_pools(
+    cfg: &ExperimentConfig,
+    shards: Vec<Dataset>,
+) -> Result<(ShardedEngine, Vec<SendPool>)> {
+    if cfg.backend != BackendKind::Rust {
+        bail!(
+            "sharded topologies need per-shard Send backends (rust only — \
+             ROADMAP: XLA lane replication); run the xla backend flat"
+        );
+    }
+    let n_shards = cfg.topology.n_shards();
+    let slices = client_shards(cfg.n_clients, n_shards);
+    let mut by_shard: Vec<Vec<Dataset>> = (0..n_shards).map(|_| Vec::new()).collect();
+    for (id, ds) in shards.into_iter().enumerate() {
+        by_shard[locate(cfg.n_clients, n_shards, id).0].push(ds);
+    }
+    let mut pools = Vec::with_capacity(n_shards);
+    let mut init: Option<Vec<f32>> = None;
+    for (slice, data) in slices.iter().zip(by_shard) {
+        let mut shard_cfg = cfg.clone();
+        shard_cfg.n_clients = slice.len();
+        let (pool, pool_init) =
+            SendPool::new_send(&shard_cfg, data, slice).context("creating shard client pool")?;
+        init.get_or_insert(pool_init);
+        pools.push(pool);
+    }
+    let engine = ShardedEngine::new(cfg, init.expect("at least one shard"))?;
+    Ok((engine, pools))
+}
+
 pub struct Trainer {
     cfg: ExperimentConfig,
-    engine: RoundEngine,
-    pool: InProcessPool,
+    driver: Driver,
     test: Dataset,
     /// per-client test indices matching the client's label set
     /// (EvalMode::Personal)
     personal_test: Vec<Vec<usize>>,
-    /// rounds at which to snapshot the connectivity heatmap
+    /// rounds at which to snapshot the connectivity heatmap (flat only)
     pub heatmap_rounds: Vec<usize>,
 }
 
@@ -53,17 +112,38 @@ impl Trainer {
             .into_iter()
             .map(|idx| train.subset(&idx))
             .collect();
-        let (pool, init) = InProcessPool::new(cfg, shards).context("creating client pool")?;
-        let personal_test: Vec<Vec<usize>> = pool
-            .clients()
-            .iter()
-            .map(|c| test.indices_with_labels(&c.label_set()))
-            .collect();
-        let engine = RoundEngine::new(cfg, init);
+
+        let driver = match cfg.topology {
+            Topology::Flat => {
+                let (pool, init) =
+                    InProcessPool::new(cfg, shards).context("creating client pool")?;
+                Driver::Flat { engine: RoundEngine::new(cfg, init), pool }
+            }
+            Topology::Sharded { .. } => {
+                let (engine, pools) = build_sharded_pools(cfg, shards)?;
+                Driver::Sharded { engine, pools }
+            }
+        };
+
+        let mut personal_test = vec![Vec::new(); cfg.n_clients];
+        match &driver {
+            Driver::Flat { pool, .. } => {
+                for c in pool.clients() {
+                    personal_test[c.id] = test.indices_with_labels(&c.label_set());
+                }
+            }
+            Driver::Sharded { pools, .. } => {
+                for pool in pools {
+                    for c in pool.clients() {
+                        personal_test[c.id] = test.indices_with_labels(&c.label_set());
+                    }
+                }
+            }
+        }
+
         Ok(Trainer {
             cfg: cfg.clone(),
-            engine,
-            pool,
+            driver,
             test,
             personal_test,
             heatmap_rounds: Vec::new(),
@@ -74,32 +154,122 @@ impl Trainer {
         &self.cfg
     }
 
-    /// The shared round protocol this trainer drives.
+    /// The flat round engine. Panics under a sharded topology — use
+    /// [`Self::sharded`] / the topology-agnostic accessors
+    /// ([`Self::comm`], [`Self::uploaded_log`], [`Self::n_clusters`])
+    /// there.
     pub fn engine(&self) -> &RoundEngine {
-        &self.engine
+        match &self.driver {
+            Driver::Flat { engine, .. } => engine,
+            Driver::Sharded { .. } => {
+                panic!("Trainer::engine() is flat-topology only; use Trainer::sharded()")
+            }
+        }
     }
 
+    /// The sharded engine (None under the flat topology).
+    pub fn sharded(&self) -> Option<&ShardedEngine> {
+        match &self.driver {
+            Driver::Flat { .. } => None,
+            Driver::Sharded { engine, .. } => Some(engine),
+        }
+    }
+
+    /// The flat in-process pool. Panics under a sharded topology — use
+    /// [`Self::client_params`] for per-client state there.
     pub fn pool(&self) -> &InProcessPool {
-        &self.pool
+        match &self.driver {
+            Driver::Flat { pool, .. } => pool,
+            Driver::Sharded { .. } => {
+                panic!("Trainer::pool() is flat-topology only; use Trainer::client_params()")
+            }
+        }
     }
 
+    /// The flat parameter server (see [`Self::engine`] for the sharded
+    /// contract).
     pub fn server(&self) -> &ParameterServer {
-        self.engine.ps()
+        self.engine().ps()
     }
 
     pub fn global_params(&self) -> &[f32] {
-        self.engine.global_params()
+        match &self.driver {
+            Driver::Flat { engine, .. } => engine.global_params(),
+            Driver::Sharded { engine, .. } => engine.global_params(),
+        }
+    }
+
+    /// A client's current local parameters, by **global** id under every
+    /// topology.
+    pub fn client_params(&self, i: usize) -> &[f32] {
+        match &self.driver {
+            Driver::Flat { pool, .. } => pool.client_params(i),
+            Driver::Sharded { engine, pools, .. } => {
+                let (shard, local) = locate(self.cfg.n_clients, engine.n_shards(), i);
+                pools[shard].client_params(local)
+            }
+        }
+    }
+
+    /// Cumulative communication accounting (the shard roll-up under a
+    /// sharded topology — DESIGN.md §7).
+    pub fn comm(&self) -> CommStats {
+        match &self.driver {
+            Driver::Flat { engine, .. } => engine.comm(),
+            Driver::Sharded { engine, .. } => engine.comm(),
+        }
+    }
+
+    /// Per-round, per-global-client uploaded index sets under every
+    /// topology.
+    pub fn uploaded_log(&self) -> &VecDeque<Vec<Vec<u32>>> {
+        match &self.driver {
+            Driver::Flat { engine, .. } => engine.uploaded_log(),
+            Driver::Sharded { engine, .. } => engine.uploaded_log(),
+        }
+    }
+
+    /// Fleet-wide cluster count (sum over shards when sharded).
+    pub fn n_clusters(&self) -> usize {
+        match &self.driver {
+            Driver::Flat { engine, .. } => engine.ps().clusters().n_clusters(),
+            Driver::Sharded { engine, .. } => engine.n_clusters(),
+        }
+    }
+
+    fn cluster_labels(&self) -> Vec<usize> {
+        match &self.driver {
+            Driver::Flat { engine, .. } => engine.ps().clusters().labels(),
+            Driver::Sharded { engine, .. } => engine.cluster_labels(),
+        }
     }
 
     pub fn profile(&self) -> &Profile {
-        self.engine.profile()
+        match &self.driver {
+            Driver::Flat { engine, .. } => engine.profile(),
+            Driver::Sharded { engine, .. } => engine.profile(),
+        }
+    }
+
+    /// The PS-side compute backend (field-disjoint from `test`/`cfg`, so
+    /// eval can borrow both).
+    fn backend_mut(&mut self) -> &mut dyn Backend {
+        Self::driver_backend(&mut self.driver)
+    }
+
+    fn driver_backend(driver: &mut Driver) -> &mut dyn Backend {
+        match driver {
+            Driver::Flat { pool, .. } => pool.backend_mut(),
+            Driver::Sharded { pools, .. } => pools[0].backend_mut(),
+        }
     }
 
     /// Global-model accuracy/loss over the full test set.
     pub fn eval_global(&mut self) -> Result<(f32, f32)> {
-        let params = self.engine.global_params().to_vec();
+        let params = self.global_params().to_vec();
         let idx: Vec<usize> = (0..self.test.len()).collect();
-        eval_dataset(self.pool.backend_mut(), &params, &self.test, &idx, self.cfg.batch)
+        let backend = Self::driver_backend(&mut self.driver);
+        eval_dataset(backend, &params, &self.test, &idx, self.cfg.batch)
     }
 
     /// The paper's Fig. 3/5 metric: mean over clients of their own model
@@ -107,11 +277,11 @@ impl Trainer {
     pub fn eval_personal(&mut self) -> Result<(f32, f32)> {
         let mut accs = Vec::new();
         let mut losses = Vec::new();
-        for c in 0..self.pool.clients().len() {
-            let params = self.pool.client_params(c).to_vec();
+        for c in 0..self.cfg.n_clients {
+            let params = self.client_params(c).to_vec();
             let idx = self.personal_test[c].clone();
-            let (a, l) =
-                eval_dataset(self.pool.backend_mut(), &params, &self.test, &idx, self.cfg.batch)?;
+            let backend = Self::driver_backend(&mut self.driver);
+            let (a, l) = eval_dataset(backend, &params, &self.test, &idx, self.cfg.batch)?;
             accs.push(a as f64);
             losses.push(l as f64);
         }
@@ -128,7 +298,10 @@ impl Trainer {
     /// One global round (Algorithm 1 lines 3-16). Returns the mean local
     /// training loss.
     pub fn run_round(&mut self) -> Result<f32> {
-        Ok(self.engine.run_round(&mut self.pool)?.mean_loss)
+        match &mut self.driver {
+            Driver::Flat { engine, pool } => Ok(engine.run_round(pool)?.mean_loss),
+            Driver::Sharded { engine, pools } => Ok(engine.run_round(pools)?.mean_loss),
+        }
     }
 
     /// Run the configured number of rounds, producing the full report.
@@ -141,16 +314,19 @@ impl Trainer {
         for round in 1..=total {
             let train_loss = self.run_round()?;
 
-            // heatmap snapshots (Fig. 2 / Fig. 4)
+            // heatmap snapshots (Fig. 2 / Fig. 4) — the fleet-wide eq. (3)
+            // matrix only exists on a flat PS
             if self.heatmap_rounds.contains(&round) {
-                heatmaps.push((round, self.engine.ps().connectivity()));
+                if let Driver::Flat { engine, .. } = &self.driver {
+                    heatmaps.push((round, engine.ps().connectivity()));
+                }
             }
 
             let eval_due = self.cfg.eval_every > 0 && round % self.cfg.eval_every == 0;
             let (test_acc, test_loss) = if eval_due || round == total {
                 let t_eval = std::time::Instant::now();
                 let (a, l) = self.eval_configured()?;
-                self.engine.profile().add("ps.eval", t_eval.elapsed().as_secs_f64());
+                self.profile().add("ps.eval", t_eval.elapsed().as_secs_f64());
                 (Some(a), Some(l))
             } else {
                 (None, None)
@@ -161,8 +337,8 @@ impl Trainer {
                 train_loss,
                 test_acc,
                 test_loss,
-                n_clusters: self.engine.ps().clusters().n_clusters(),
-                uplink_cum: self.engine.comm().uplink(),
+                n_clusters: self.n_clusters(),
+                uplink_cum: self.comm().uplink(),
             });
 
             if let Some(acc) = test_acc {
@@ -170,18 +346,18 @@ impl Trainer {
                     "[{}] round {round}/{total}: loss {train_loss:.4} acc {:.2}% clusters {}",
                     self.cfg.strategy.name(),
                     acc * 100.0,
-                    self.engine.ps().clusters().n_clusters()
+                    self.n_clusters()
                 );
             }
         }
 
-        history.comm = self.engine.comm();
+        history.comm = self.comm();
         history.wall_secs = t0.elapsed().as_secs_f64();
         let final_accuracy = history.final_accuracy();
         Ok(TrainReport {
             history,
             heatmaps,
-            cluster_labels: self.engine.ps().clusters().labels(),
+            cluster_labels: self.cluster_labels(),
             truth_labels: match self.cfg.partition {
                 crate::data::partition::Scheme::PaperPairs => Some(
                     crate::data::partition::paper_pair_truth(self.cfg.n_clients),
@@ -189,7 +365,7 @@ impl Trainer {
                 _ => None,
             },
             final_accuracy,
-            profile: self.engine.profile().snapshot(),
+            profile: self.profile().snapshot(),
         })
     }
 }
@@ -212,6 +388,23 @@ mod tests {
     }
 
     #[test]
+    fn sharded_smoke_training_reduces_loss() {
+        use crate::clustering::MergeRule;
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.rounds = 8;
+        cfg.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        assert!(t.sharded().is_some());
+        let report = t.run().unwrap();
+        let first = report.history.rounds.first().unwrap().train_loss;
+        let last = report.history.rounds.last().unwrap().train_loss;
+        assert!(last < first, "sharded loss must decrease: {first} -> {last}");
+        // two shard engines, clusters counted fleet-wide
+        assert_eq!(report.cluster_labels.len(), cfg.n_clients);
+        assert!(report.history.comm.uplink() > 0);
+    }
+
+    #[test]
     fn eval_is_unbiased_by_batch_padding() {
         // a subset whose size is not a batch multiple must produce the
         // same accuracy as evaluating it at batch sizes that divide it
@@ -226,7 +419,7 @@ mod tests {
         let params = t.global_params().to_vec();
         let idx: Vec<usize> = (0..150).collect();
         let (acc_exact, _) = crate::coordinator::engine::eval_dataset(
-            t.pool.backend_mut(),
+            Trainer::driver_backend(&mut t.driver),
             &params,
             &t.test,
             &idx,

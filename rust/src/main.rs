@@ -36,6 +36,9 @@ fn train_spec(cmd: &str, about: &str) -> ArgSpec {
         .opt("clients", "0", "number of clients (0 = preset)")
         .opt("participation", "", "fraction of clients polled per round (empty = preset)")
         .opt("scheduler", "", "cohort policy: round-robin | random | age-debt (empty = preset)")
+        .opt("shards", "", "PS topology: 0 = flat (default), N >= 1 = N shard engines")
+        .opt("root-merge", "", "root age-vector merge under sharding: min | max (empty = min)")
+        .opt("io-timeout-ms", "", "PS-side socket read/write deadline in ms (empty/0 = none)")
         .opt("codec", "", "wire codec: raw | packed | packed-f16 (empty = preset)")
         .opt("parallel", "", "in-process client lanes (empty = preset, 0 = auto, 1 = serial)")
         .opt("seed", "42", "experiment seed")
@@ -82,6 +85,23 @@ fn build_config(a: &ragek::util::argparse::Args) -> Result<ExperimentConfig> {
     if !a.get("scheduler").is_empty() {
         cfg.scheduler = SchedulerKind::parse(a.get("scheduler"))
             .ok_or_else(|| anyhow::anyhow!("unknown scheduler {:?}", a.get("scheduler")))?;
+    }
+    let root_merge = match a.get("root-merge") {
+        "" | "min" => ragek::clustering::MergeRule::Min,
+        "max" => ragek::clustering::MergeRule::Max,
+        other => bail!("unknown root-merge {other:?} (want min | max)"),
+    };
+    if !a.get("shards").is_empty() {
+        cfg.topology =
+            ragek::coordinator::topology::Topology::from_shards(a.get_usize("shards")?, root_merge);
+    } else if !a.get("root-merge").is_empty() {
+        cfg.topology = ragek::coordinator::topology::Topology::from_shards(
+            cfg.topology.shards_knob(),
+            root_merge,
+        );
+    }
+    if !a.get("io-timeout-ms").is_empty() {
+        cfg.io_timeout_ms = a.get_usize("io-timeout-ms")? as u64;
     }
     if !a.get("codec").is_empty() {
         cfg.codec = ragek::fl::codec::Codec::parse(a.get("codec"))
@@ -238,7 +258,7 @@ fn cmd_cluster(rest: &[String]) -> Result<()> {
 
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let spec = train_spec("ragek serve", "parameter server for multi-process FL")
-        .opt("port", "7700", "TCP port to listen on");
+        .opt("port", "7700", "TCP port to listen on (shard s listens on port + s when sharded)");
     let Some(a) = parse_or_help(spec, rest)? else {
         return Ok(());
     };
@@ -260,7 +280,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 
 fn cmd_worker(rest: &[String]) -> Result<()> {
     let spec = train_spec("ragek worker", "one client process for multi-process FL")
-        .opt("connect", "127.0.0.1:7700", "PS address")
+        .opt("connect", "127.0.0.1:7700", "PS base address (the worker adds its shard offset)")
         .opt("id", "0", "client id (0..n_clients)");
     let Some(a) = parse_or_help(spec, rest)? else {
         return Ok(());
@@ -270,7 +290,25 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
     }
     let mut cfg = build_config(&a)?;
     cfg.payload = ragek::config::Payload::Delta; // must match cmd_serve
-    ragek::fl::distributed::run_worker(&cfg, a.get("connect"), a.get_usize("id")?)
+    let id = a.get_usize("id")?;
+    // under a sharded topology the worker talks to its shard's PS at
+    // base_port + shard (mirroring cmd_serve's bind layout)
+    let shards = cfg.topology.n_shards();
+    let addr = if shards > 1 {
+        let (shard, _) = ragek::coordinator::topology::locate(cfg.n_clients, shards, id);
+        let (host, port) = a
+            .get("connect")
+            .rsplit_once(':')
+            .ok_or_else(|| anyhow::anyhow!("--connect must be host:port"))?;
+        let port = port
+            .parse::<u16>()?
+            .checked_add(shard as u16)
+            .ok_or_else(|| anyhow::anyhow!("shard {shard} port offset exceeds 65535"))?;
+        format!("{host}:{port}")
+    } else {
+        a.get("connect").to_string()
+    };
+    ragek::fl::distributed::run_worker(&cfg, &addr, id)
 }
 
 fn cmd_info(rest: &[String]) -> Result<()> {

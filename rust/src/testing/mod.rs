@@ -36,23 +36,38 @@ impl Gen {
 }
 
 /// Run a full multi-process-style deployment on localhost threads: bind
-/// an ephemeral port, start the PS on it, connect `cfg.n_clients`
-/// workers, return the PS report. The listener is bound **before** any
-/// worker spawns, so worker joins queue in the accept backlog — no
-/// sleeps, no port races. Shared by the transport integration and
-/// sim/distributed parity tests.
+/// an ephemeral port **per shard** (one for the flat topology), start the
+/// PS on them, connect `cfg.n_clients` workers (each to its shard's
+/// port), return the PS report. Listeners are bound **before** any worker
+/// spawns, so worker joins queue in the accept backlog — no sleeps, no
+/// port races. Shared by the transport integration and sim/distributed
+/// parity tests.
 pub fn run_distributed_localhost(
     cfg: &crate::config::ExperimentConfig,
 ) -> anyhow::Result<crate::fl::distributed::ServeReport> {
-    use crate::fl::distributed::{run_server_on, run_worker};
-    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
-    let port = listener.local_addr()?.port();
+    use crate::coordinator::topology::{locate, Topology};
+    use crate::fl::distributed::{run_server_on, run_sharded_server_on, run_worker};
+    let shards = cfg.topology.n_shards();
+    let mut listeners = Vec::with_capacity(shards);
+    let mut ports = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let l = std::net::TcpListener::bind("127.0.0.1:0")?;
+        ports.push(l.local_addr()?.port());
+        listeners.push(l);
+    }
     let server_cfg = cfg.clone();
-    let server = std::thread::spawn(move || run_server_on(&server_cfg, listener));
+    let server = std::thread::spawn(move || {
+        if server_cfg.topology == Topology::Flat {
+            run_server_on(&server_cfg, listeners.pop().expect("one listener"))
+        } else {
+            run_sharded_server_on(&server_cfg, listeners)
+        }
+    });
     let mut workers = Vec::new();
     for id in 0..cfg.n_clients {
         let wcfg = cfg.clone();
-        let addr = format!("127.0.0.1:{port}");
+        let shard = if shards > 1 { locate(cfg.n_clients, shards, id).0 } else { 0 };
+        let addr = format!("127.0.0.1:{}", ports[shard]);
         workers.push(std::thread::spawn(move || run_worker(&wcfg, &addr, id)));
     }
     let report = server.join().expect("server thread panicked")?;

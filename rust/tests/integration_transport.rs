@@ -170,6 +170,98 @@ fn accept_rejects_codec_mismatch() {
     assert_eq!(recv(&mut bad, Codec::Raw).unwrap(), Msg::Shutdown);
 }
 
+/// A worker that joins and then hangs forever (never reports). With
+/// `io_timeout_ms` set, the PS-side read deadline turns the wedged
+/// collect phase into a clean per-stream error naming the client.
+#[test]
+fn stalling_worker_surfaces_clean_timeout_error() {
+    use ragek::config::{ExperimentConfig, Payload};
+    use ragek::fl::distributed::{run_server_on, run_worker};
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.n_clients = 2;
+    cfg.payload = Payload::Delta;
+    cfg.rounds = 1;
+    cfg.train_n = 200;
+    cfg.test_n = 64;
+    cfg.eval_every = 0;
+    cfg.io_timeout_ms = 2000; // >> one local round, << forever
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server_cfg = cfg.clone();
+    let t0 = std::time::Instant::now();
+    let server = thread::spawn(move || run_server_on(&server_cfg, listener));
+
+    // worker 0 is a real, healthy worker
+    let wcfg = cfg.clone();
+    let worker = thread::spawn(move || run_worker(&wcfg, &format!("127.0.0.1:{}", addr.port()), 0));
+    // "worker" 1 joins, swallows frames, and never answers
+    let staller = thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        send(&mut s, &Msg::Join { client_id: 1, codec: Codec::Raw }, Codec::Raw).unwrap();
+        while recv(&mut s, Codec::Raw).is_ok() {}
+    });
+
+    let err = server.join().unwrap();
+    assert!(err.is_err(), "a hung worker must fail the round, not wedge it");
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("client 1"), "error must name the dead stream: {msg}");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(60),
+        "timeout must be bounded by io_timeout_ms, not a hang"
+    );
+    // the healthy worker errors out once the PS closes its stream —
+    // either way it must terminate
+    let _ = worker.join().unwrap();
+    staller.join().unwrap();
+}
+
+/// After a stream times out, the pool reports that client unavailable —
+/// the signal the age-debt scheduler consumes to stop spending cohort
+/// slots on dead clients.
+#[test]
+fn dead_stream_is_reported_unavailable() {
+    use ragek::config::{ExperimentConfig, Payload};
+    use ragek::coordinator::engine::{ClientPool, RoundEngine};
+    use ragek::fl::distributed::{run_worker, TcpClientPool};
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.n_clients = 2;
+    cfg.payload = Payload::Delta;
+    cfg.rounds = 1;
+    cfg.train_n = 200;
+    cfg.test_n = 64;
+    cfg.eval_every = 0;
+    cfg.io_timeout_ms = 2000;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let wcfg = cfg.clone();
+    let worker = thread::spawn(move || run_worker(&wcfg, &format!("127.0.0.1:{}", addr.port()), 0));
+    let staller = thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        send(&mut s, &Msg::Join { client_id: 1, codec: Codec::Raw }, Codec::Raw).unwrap();
+        while recv(&mut s, Codec::Raw).is_ok() {}
+    });
+
+    let mut pool = TcpClientPool::accept(&cfg, listener).unwrap();
+    assert_eq!(pool.available(), vec![true, true], "all streams healthy after accept");
+    let init = {
+        use ragek::backend::Backend;
+        pool.backend().init_params().unwrap()
+    };
+    let mut engine = RoundEngine::new(&cfg, init);
+    let err = engine.run_round(&mut pool);
+    assert!(err.is_err(), "the dead stream must fail the round");
+    assert_eq!(
+        pool.available(),
+        vec![true, false],
+        "the timed-out stream must be flagged dead, the healthy one not"
+    );
+    drop(pool); // closes both streams, releasing the threads
+    let _ = worker.join().unwrap();
+    staller.join().unwrap();
+}
+
 #[test]
 fn oversized_frame_rejected() {
     // a frame claiming a 1 GiB payload must be rejected before allocation

@@ -6,10 +6,14 @@
 //! between `fl::trainer` and `fl::distributed` (e.g. the worker once
 //! reset its Adam moments every round).
 
+use ragek::age::DenseAgeVector;
+use ragek::clustering::MergeRule;
 use ragek::config::{ExperimentConfig, Payload};
 use ragek::coordinator::strategies::StrategyKind;
+use ragek::coordinator::topology::Topology;
 use ragek::fl::codec::Codec;
 use ragek::fl::distributed::ServeReport;
+use ragek::fl::metrics::CommStats;
 use ragek::fl::trainer::Trainer;
 use ragek::testing::run_distributed_localhost;
 
@@ -27,13 +31,22 @@ fn parity_cfg(strategy: StrategyKind) -> ExperimentConfig {
 }
 
 fn run_sim(cfg: &ExperimentConfig) -> (Vec<Vec<Vec<u32>>>, Vec<f32>) {
+    let (log, params, _) = run_sim_comm(cfg);
+    (log, params)
+}
+
+/// Like [`run_sim`] but also returning the communication accounting;
+/// works under every topology (the uploaded log is global-id-indexed in
+/// both drivers).
+fn run_sim_comm(cfg: &ExperimentConfig) -> (Vec<Vec<Vec<u32>>>, Vec<f32>, CommStats) {
     let mut t = Trainer::from_config(cfg).unwrap();
     for _ in 0..cfg.rounds {
         t.run_round().unwrap();
     }
     (
-        t.engine().uploaded_log().iter().cloned().collect(),
+        t.uploaded_log().iter().cloned().collect(),
         t.global_params().to_vec(),
+        t.comm(),
     )
 }
 
@@ -150,6 +163,107 @@ fn packed_f16_stays_close_and_round_one_is_identical() {
         max_diff = max_diff.max((a - b).abs());
     }
     assert!(max_diff < 0.1, "f16 drift too large: {max_diff}");
+}
+
+/// Topology pin 1: `Sharded { shards: 1 }` runs the whole sharded code
+/// path — root re-broadcast into the shard engine, shard collect, root
+/// merge + apply, shard bookkeeping, rolled-up accounting — and must be
+/// **bit-for-bit** the flat engine: identical per-round uploaded index
+/// sets, identical final global parameters, identical (rolled-up)
+/// communication counters.
+#[test]
+fn flat_and_sharded_one_are_identical() {
+    let mut cfg = parity_cfg(StrategyKind::RageK);
+    cfg.n_clients = 4;
+    cfg.participation = 0.5; // exercise cohorts + absence under sharding
+    cfg.rounds = 6;
+    let (flat_log, flat_params, flat_comm) = run_sim_comm(&cfg);
+    let mut scfg = cfg.clone();
+    scfg.topology = Topology::Sharded { shards: 1, root_merge: MergeRule::Min };
+    let (sh_log, sh_params, sh_comm) = run_sim_comm(&scfg);
+    assert_eq!(sh_log, flat_log, "uploaded index sets must match flat exactly");
+    assert_eq!(sh_params, flat_params, "global params must match flat bit-for-bit");
+    assert_eq!(sh_comm, flat_comm, "rolled-up accounting must equal the flat counters");
+}
+
+/// Topology pin 2: a fixed-seed `shards = 2` run is deterministic across
+/// repeats (shard collect phases run on scoped threads — thread
+/// interleaving must not leak into results), and the root's lazy
+/// shard-merged age vector equals the dense eq.-(2) oracle replayed from
+/// the uploaded log.
+#[test]
+fn sharded_two_is_deterministic_with_exact_age_merge() {
+    let mut cfg = parity_cfg(StrategyKind::RageK);
+    cfg.n_clients = 4;
+    cfg.participation = 0.5;
+    cfg.rounds = 6;
+    cfg.recluster_every = 0; // singleton clusters: one age vector per client
+    cfg.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+
+    let run = || {
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        for _ in 0..cfg.rounds {
+            t.run_round().unwrap();
+        }
+        let log: Vec<Vec<Vec<u32>>> = t.uploaded_log().iter().cloned().collect();
+        let merged = t.sharded().expect("sharded driver").merged_ages();
+        (log, t.global_params().to_vec(), merged)
+    };
+    let (log_a, params_a, merged_a) = run();
+    let (log_b, params_b, merged_b) = run();
+    assert_eq!(log_a, log_b, "sharded runs must be deterministic across repeats");
+    assert_eq!(params_a, params_b);
+    assert_eq!(merged_a, merged_b);
+
+    // dense oracle: each client is its own cluster (recluster_every = 0),
+    // so its eq.-(2) vector replays from its uploaded entries — empty on
+    // rounds it sat out, exactly how the PS records absence. The root's
+    // merged lazy vector (rebased across divergent shard epochs) must
+    // equal the elementwise-min of the dense sweeps.
+    let d = cfg.d();
+    let mut dense: Vec<DenseAgeVector> =
+        (0..cfg.n_clients).map(|_| DenseAgeVector::new(d)).collect();
+    for round in &log_a {
+        for (client, uploaded) in round.iter().enumerate() {
+            dense[client].update(uploaded);
+        }
+    }
+    let mut oracle = dense[0].clone();
+    for v in &dense[1..] {
+        oracle.merge_min(v);
+    }
+    assert_eq!(
+        merged_a.to_vec(),
+        oracle.as_slice(),
+        "root-merged lazy ages must equal the dense oracle"
+    );
+    // sanity: the merge actually saw divergent state (some index aged)
+    assert!(merged_a.to_vec().iter().any(|&a| a > 0), "oracle comparison must not be vacuous");
+}
+
+/// Topology pin 3: the sharded in-process driver (parallel shard threads)
+/// and the sharded TCP deployment (serial shard drive, one PS socket pool
+/// per shard, workers joining with shard-local ids) are the same
+/// two-level protocol — identical uploads and bit-identical final
+/// parameters — and the rolled-up wire accounting still equals the bytes
+/// observed on the shard PS sockets.
+#[test]
+fn sharded_sim_and_tcp_are_identical() {
+    let mut cfg = parity_cfg(StrategyKind::RageK);
+    cfg.n_clients = 4;
+    cfg.rounds = 4;
+    cfg.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+    let (sim_log, sim_params, sim_comm) = run_sim_comm(&cfg);
+    let report = run_tcp(&cfg);
+    assert_eq!(report.uploaded_log, sim_log, "shard cohorts/uploads must match across transports");
+    assert_eq!(report.final_params, sim_params, "root params must match bit-for-bit");
+    assert_eq!(report.comm, sim_comm, "rolled-up accounting must agree with the simulator");
+    // per-shard wire pins survive the roll-up
+    assert_eq!(report.comm.wire_up, report.wire_up_observed);
+    assert_eq!(report.comm.wire_down, report.wire_down_observed);
+    // one Model encode per shard per round (each shard pool broadcasts
+    // its cohort's frame exactly once)
+    assert_eq!(report.model_encodes, 2 * cfg.rounds as u64);
 }
 
 /// The age-debt scheduler is deterministic PS state, so it too must agree

@@ -19,6 +19,98 @@ fn random_age(g: &mut Gen, d: usize) -> AgeVector {
     age
 }
 
+/// The invariant hierarchical (multi-PS) aggregation relies on: lazy
+/// age-vector merges are **commutative and associative** across operands
+/// with arbitrarily divergent epochs, and always agree with the
+/// [`DenseAgeVector`] oracle. The root aggregator may therefore combine
+/// shard vectors in any order — `merge(merge(a, b), c)` from a shard that
+/// ran 25 epochs and one that ran 2 is the same fleet-wide staleness
+/// view as any other association.
+#[test]
+fn age_merge_is_commutative_and_associative_across_epochs() {
+    for (rule, dense_rule) in [
+        (
+            AgeVector::merge_min as fn(&mut AgeVector, &AgeVector),
+            DenseAgeVector::merge_min as fn(&mut DenseAgeVector, &DenseAgeVector),
+        ),
+        (AgeVector::merge_max, DenseAgeVector::merge_max),
+    ] {
+        prop_check("age-merge-comm-assoc", 150, |g| {
+            let d = g.usize_in(5, 120);
+            // independently evolved vectors with deliberately divergent
+            // epochs (0..25 rounds each), mirrored into the dense oracle
+            let mut lazies = Vec::new();
+            let mut denses = Vec::new();
+            for _ in 0..3 {
+                let mut lazy = AgeVector::new(d);
+                let mut dense = DenseAgeVector::new(d);
+                for _ in 0..g.usize_in(0, 25) {
+                    let k = g.usize_in(1, (d / 4).max(1));
+                    let sel = g.vec_u32_distinct(d, k);
+                    lazy.update(&sel);
+                    dense.update(&sel);
+                }
+                lazies.push(lazy);
+                denses.push(dense);
+            }
+            let [a, b, c] = &lazies[..] else { unreachable!() };
+
+            // commutativity: a ∪ b == b ∪ a (equality is on ages)
+            let mut ab = a.clone();
+            rule(&mut ab, b);
+            let mut ba = b.clone();
+            rule(&mut ba, a);
+            if ab != ba {
+                return Err(format!(
+                    "merge not commutative: {:?} vs {:?}",
+                    ab.to_vec(),
+                    ba.to_vec()
+                ));
+            }
+
+            // associativity: (a ∪ b) ∪ c == a ∪ (b ∪ c)
+            let mut ab_c = ab.clone();
+            rule(&mut ab_c, c);
+            let mut bc = b.clone();
+            rule(&mut bc, c);
+            let mut a_bc = a.clone();
+            rule(&mut a_bc, &bc);
+            if ab_c != a_bc {
+                return Err(format!(
+                    "merge not associative: {:?} vs {:?}",
+                    ab_c.to_vec(),
+                    a_bc.to_vec()
+                ));
+            }
+
+            // and the whole algebra agrees with the dense oracle
+            let mut oracle = denses[0].clone();
+            dense_rule(&mut oracle, &denses[1]);
+            dense_rule(&mut oracle, &denses[2]);
+            if ab_c.to_vec() != oracle.as_slice() {
+                return Err(format!(
+                    "lazy merge diverged from dense oracle: {:?} vs {:?}",
+                    ab_c.to_vec(),
+                    oracle.as_slice()
+                ));
+            }
+
+            // merged vectors keep obeying eq. (2): one more update shifts
+            // every unselected age by +1 on both representations
+            let k = g.usize_in(1, (d / 4).max(1));
+            let sel = g.vec_u32_distinct(d, k);
+            let mut lazy_next = ab_c.clone();
+            lazy_next.update(&sel);
+            let mut dense_next = oracle.clone();
+            dense_next.update(&sel);
+            if lazy_next.to_vec() != dense_next.as_slice() {
+                return Err("post-merge eq. (2) update diverged from the oracle".into());
+            }
+            Ok(())
+        });
+    }
+}
+
 #[test]
 fn selection_returns_k_distinct_report_members_maximizing_age() {
     prop_check("selection-invariants", 200, |g| {
