@@ -1,0 +1,65 @@
+//! Fleet-membership perf: what mid-round drops cost the round loop.
+//!
+//! Runs the standard 8-client MNIST scenario through the deterministic
+//! chaos harness (`ragek::testing::FlakyPool`) at 0%, 10%, and 30%
+//! per-phase drop rates and reports rounds/sec — the committed
+//! `BENCH_membership.json` baseline. Every round must commit regardless
+//! of the chaos (drop-and-continue: the engine finishes with the
+//! survivors, casualties' ages keep growing per eq. 2), and the clean
+//! run must see zero casualties (the all-answer path pays nothing for
+//! the membership machinery).
+
+use ragek::bench::Bench;
+use ragek::config::ExperimentConfig;
+use ragek::coordinator::engine::RoundEngine;
+use ragek::testing::FlakyPool;
+
+const ROUNDS: usize = 6;
+
+fn scenario() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist_scaled();
+    cfg.n_clients = 8;
+    cfg.parallel = 1;
+    cfg.rounds = ROUNDS;
+    cfg.train_n = 2000;
+    cfg.test_n = 256;
+    cfg.eval_every = 0;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("membership");
+
+    println!("\nrounds/sec under simulated drops (n=8, {ROUNDS} rounds, rejoin after 2):");
+    println!("{:<12} {:>12} {:>12} {:>10}", "drop rate", "rounds/sec", "casualties", "rejoins");
+    for (label, rate) in [("0%", 0.0f32), ("10%", 0.10), ("30%", 0.30)] {
+        let cfg = scenario();
+        let (mut pool, init) = FlakyPool::new(&cfg, rate, 2, 0xC1A05)?;
+        let mut engine = RoundEngine::new(&cfg, init);
+        let mut casualties = 0usize;
+        let mean = b
+            .run_once(&format!("{ROUNDS} rounds n=8, {label} drops"), || {
+                for _ in 0..ROUNDS {
+                    casualties += engine.run_round(&mut pool).unwrap().casualties.len();
+                }
+            })
+            .mean();
+        let rejoins: u32 = (0..cfg.n_clients).map(|i| engine.fleet().generation(i)).sum();
+        println!(
+            "{label:<12} {:>12.2} {casualties:>12} {rejoins:>10}",
+            ROUNDS as f64 / mean
+        );
+        // drop-and-continue: every round commits, chaos or not
+        assert_eq!(engine.round(), ROUNDS, "{label}: every round must commit");
+        if rate <= 0.0 {
+            assert_eq!(casualties, 0, "a clean fleet has no casualties");
+        } else if rate >= 0.30 {
+            // at 30% per phase over 6 rounds x 8 clients the (seeded,
+            // deterministic) plan drops someone with overwhelming margin
+            assert!(casualties > 0, "the chaos plan must bite");
+        }
+    }
+
+    b.save();
+    Ok(())
+}

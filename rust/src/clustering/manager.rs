@@ -56,6 +56,44 @@ impl ClusterManager {
         }
     }
 
+    /// Reconstitute a manager from explicit cluster state — the dynamic
+    /// re-sharding hand-off (DESIGN.md §8): a root aggregator gathers
+    /// shard-local clusters into a fleet-wide manager (and splits the
+    /// result back into per-shard managers) without disturbing the age
+    /// vectors. `groups[c]` are the (sorted) members of cluster `c`;
+    /// groups must disjointly cover `0..n_clients` and come ordered by
+    /// smallest member, matching [`Self::recluster`]'s id convention.
+    pub fn from_parts(
+        n_clients: usize,
+        d: usize,
+        rule: MergeRule,
+        groups: Vec<Vec<usize>>,
+        ages: Vec<AgeVector>,
+    ) -> Self {
+        assert_eq!(groups.len(), ages.len(), "one age vector per cluster");
+        let mut assignment = vec![usize::MAX; n_clients];
+        for (cid, group) in groups.iter().enumerate() {
+            assert!(!group.is_empty(), "empty cluster {cid}");
+            assert!(group.windows(2).all(|w| w[0] < w[1]), "members must be sorted");
+            for &m in group {
+                assert!(m < n_clients && assignment[m] == usize::MAX, "member {m} misassigned");
+                assignment[m] = cid;
+            }
+        }
+        assert!(
+            assignment.iter().all(|&c| c != usize::MAX),
+            "groups must cover every client"
+        );
+        assert!(
+            groups.windows(2).all(|w| w[0][0] < w[1][0]),
+            "clusters must be ordered by smallest member"
+        );
+        for age in &ages {
+            assert_eq!(age.d(), d, "age dimension mismatch");
+        }
+        ClusterManager { d, rule, assignment, members: groups, ages }
+    }
+
     pub fn n_clients(&self) -> usize {
         self.assignment.len()
     }
@@ -300,6 +338,21 @@ mod tests {
                 }
             }
             assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn from_parts_reconstitutes_cluster_state() {
+        let mut m = ClusterManager::new(4, 6, MergeRule::Min);
+        m.recluster(&[0, 0, 1, 1]);
+        m.update_ages(m.cluster_of(0), &[2]);
+        let groups = vec![m.members_of(0).to_vec(), m.members_of(1).to_vec()];
+        let ages = vec![m.age_of_cluster(0).clone(), m.age_of_cluster(1).clone()];
+        let back = ClusterManager::from_parts(4, 6, MergeRule::Min, groups, ages);
+        assert_eq!(back.n_clusters(), 2);
+        for c in 0..4 {
+            assert_eq!(back.cluster_of(c), m.cluster_of(c));
+            assert_eq!(back.age_of_client(c), m.age_of_client(c));
         }
     }
 

@@ -9,3 +9,17 @@ pub mod similarity;
 pub use dbscan::{dbscan, DbscanParams, NOISE};
 pub use manager::{ClusterManager, MergeRule};
 pub use similarity::{connectivity_matrix, distance_matrix};
+
+use crate::age::FrequencyVector;
+
+/// The full frequency -> labels pipeline of Algorithm 1's reclustering
+/// step: eq.-(3) connectivity, symmetrized distance, DBSCAN. The
+/// **single** definition shared by the flat PS
+/// (`ParameterServer::force_recluster`) and the sharded root
+/// (`ShardedEngine`'s fleet-wide recluster), so the
+/// `Flat == Sharded(1)` parity is structural, not comment-enforced.
+pub fn recluster_labels(freqs: &[FrequencyVector], params: DbscanParams) -> Vec<isize> {
+    let conn = connectivity_matrix(freqs);
+    let dist = distance_matrix(&conn);
+    dbscan(&dist, params)
+}

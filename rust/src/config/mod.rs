@@ -71,11 +71,19 @@ pub struct ExperimentConfig {
     pub topology: Topology,
     /// PS-side socket read/write timeout in milliseconds (0 = none, the
     /// default). With a deadline set, a hung worker surfaces as a clean
-    /// per-stream error instead of wedging the collect phase forever;
-    /// the worker side never sets timeouts (off-cohort workers block
-    /// across whole rounds by design). Must comfortably exceed the local
-    /// training time of one round.
+    /// per-stream casualty (the round finishes with the survivors)
+    /// instead of wedging the collect phase forever; the worker side
+    /// never sets timeouts (off-cohort workers block across whole rounds
+    /// by design). Must comfortably exceed the local training time of
+    /// one round.
     pub io_timeout_ms: u64,
+    /// Dynamic re-sharding (sharded topologies only, default on): at
+    /// each root recluster boundary, re-partition the fleet across shard
+    /// pools with `ClusterManager::shard_slices` so the assignment
+    /// tracks the evolving clustering (DESIGN.md §8). Off = keep the
+    /// static contiguous assignment (clusters spanning shards are then
+    /// split per shard with cloned age vectors).
+    pub reshard: bool,
     /// wire codec: `raw` (v1, 8 B per sparse entry) | `packed` (v2,
     /// delta+varint indices, lossless) | `packed-f16` (v2 + binary16
     /// update values, lossy). Negotiated at `Join` time — PS and workers
@@ -133,6 +141,7 @@ impl ExperimentConfig {
             scheduler: SchedulerKind::RoundRobin,
             topology: Topology::Flat,
             io_timeout_ms: 0,
+            reshard: true,
             codec: Codec::Raw,
             r: 75,
             k: 10,
@@ -186,6 +195,7 @@ impl ExperimentConfig {
             scheduler: SchedulerKind::RoundRobin,
             topology: Topology::Flat,
             io_timeout_ms: 0,
+            reshard: true,
             codec: Codec::Raw,
             r: 2500,
             k: 100,
@@ -314,6 +324,7 @@ impl ExperimentConfig {
                 MergeRule::Max => "max".into(),
             })),
             ("io_timeout_ms", Json::Num(self.io_timeout_ms as f64)),
+            ("reshard", Json::Bool(self.reshard)),
             ("codec", Json::Str(self.codec.name().into())),
             ("r", Json::Num(self.r as f64)),
             ("k", Json::Num(self.k as f64)),
@@ -401,6 +412,9 @@ impl ExperimentConfig {
             c.topology = Topology::from_shards(shards, root_merge);
         }
         num!(io_timeout_ms, "io_timeout_ms", u64);
+        if let Some(b) = j.get("reshard").and_then(Json::as_bool) {
+            c.reshard = b;
+        }
         if let Some(s) = j.get("codec").and_then(Json::as_str) {
             c.codec =
                 Codec::parse(s).with_context(|| format!("unknown codec {s:?}"))?;
@@ -504,6 +518,7 @@ mod tests {
         cfg.codec = Codec::PackedF16;
         cfg.topology = Topology::Sharded { shards: 3, root_merge: MergeRule::Max };
         cfg.io_timeout_ms = 1500;
+        cfg.reshard = false;
         let j = cfg.to_json();
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.strategy, StrategyKind::RTopK);
@@ -516,6 +531,8 @@ mod tests {
         assert_eq!(back.codec, Codec::PackedF16);
         assert_eq!(back.topology, cfg.topology);
         assert_eq!(back.io_timeout_ms, 1500);
+        assert!(!back.reshard);
+        assert!(ExperimentConfig::mnist_paper().reshard, "re-sharding defaults on");
         // the default stays flat
         assert_eq!(ExperimentConfig::mnist_paper().topology, Topology::Flat);
     }

@@ -21,6 +21,19 @@
 //! by the in-process pool and by `run_worker`), so the two deployments are
 //! bit-for-bit identical — pinned by `rust/tests/parity.rs`.
 //!
+//! **Fleet membership** (DESIGN.md §8): the engine owns a
+//! [`Fleet`] registry tracking every client's lifecycle
+//! (`Active | Suspect | Dead | Rejoining`, with rejoin generations). A
+//! pool reports per-client outcomes — [`ClientPool::train_and_report`] /
+//! [`ClientPool::exchange`] return `None` for a client whose round-path
+//! I/O failed — and [`RoundEngine::collect_round`] returns a
+//! [`PartialRound`] (survivor reports + casualty list) instead of `Err`:
+//! the round finishes with the survivors, a casualty's uploaded record
+//! stays empty so its cluster's eq.-(2) ages keep growing exactly as for
+//! an off-cohort client, and the scheduler consumes the live membership.
+//! With no failures every client stays Active and the protocol is
+//! bit-for-bit the all-answer path.
+//!
 //! The engine owns everything the PS owns in the paper: index selection
 //! (Algorithm 2), aggregation, the server optimizer step, byte-accurate
 //! communication accounting (DESIGN.md §6), the per-cluster
@@ -28,12 +41,15 @@
 //! M-periodic reclustering.
 
 use crate::backend::{Backend, GlobalState};
+use crate::clustering::ClusterManager;
 use crate::config::{ExperimentConfig, Payload};
 use crate::coordinator::aggregator::Aggregate;
+use crate::coordinator::fleet::{Fleet, MemberRecord};
 use crate::coordinator::scheduler::{CohortScheduler, ScheduleCtx};
 use crate::coordinator::server::{ParameterServer, PsConfig};
 use crate::coordinator::strategies::{client_select, StrategyKind};
 use crate::data::{gather_batch, Dataset};
+use crate::age::FrequencyVector;
 use crate::fl::client::Client;
 use crate::fl::metrics::CommStats;
 use crate::fl::transport as wire;
@@ -55,21 +71,35 @@ pub struct ClientReport {
 /// memories) plus the PS-side compute backend; [`RoundEngine`] drives the
 /// protocol through this interface without knowing whether the clients
 /// are threads in this process or sockets to other machines.
+///
+/// The per-client `Option` returns are the fleet-membership contract: a
+/// pool must **not** fail the whole round because one client's round-path
+/// I/O failed — it reports that client `None` (a casualty) and the engine
+/// finishes the round with the survivors. The outer `Result` is reserved
+/// for unrecoverable pool-level errors (protocol misuse, a poisoned
+/// backend), which still abort.
 pub trait ClientPool {
     fn n_clients(&self) -> usize;
 
-    /// Per-client reachability, indexed by client id (`true` = the pool
-    /// believes a round driven at this client would succeed). The default
-    /// is all-true; transports that observe failures (e.g. a TCP stream
-    /// that errored or timed out) report those clients `false` so
-    /// availability-aware schedulers stop spending cohort slots on them.
-    ///
-    /// Note the stock `run_server` loop still aborts on the round that
-    /// *discovers* a failure — this signal pays off for drivers that
-    /// retry or tolerate failed rounds (the ROADMAP's drop-and-continue
-    /// item); the scheduler-side consumption is in place and tested.
-    fn available(&self) -> Vec<bool> {
+    /// Per-client transport reachability, indexed by client id (`true` =
+    /// the pool believes a round driven at this client could succeed).
+    /// The default is all-true; transports that observe failures (e.g. a
+    /// TCP stream that errored or timed out) report those clients `false`
+    /// so the engine's [`Fleet`] degrades them
+    /// (`Active -> Suspect -> Dead`) and fleet-aware schedulers stop
+    /// spending cohort slots on them.
+    fn health(&self) -> Vec<bool> {
         vec![true; self.n_clients()]
+    }
+
+    /// Re-admissions since the last round: client ids whose recovered
+    /// worker reconnected (the TCP `Rejoin` frame) or was re-admitted at
+    /// the pool level (simulated chaos). `global` is the current global
+    /// model so the transport can resync the rejoined worker. The engine
+    /// moves each returned id to `Rejoining` and bumps its generation.
+    fn poll_rejoins(&mut self, global: &[f32]) -> Result<Vec<usize>> {
+        let _ = global;
+        Ok(Vec::new())
     }
 
     /// Algorithm 1 lines 3-7 for the round's **cohort** (sorted, distinct
@@ -77,18 +107,22 @@ pub trait ClientPool {
     /// adopt it (local optimizer state persists — `sync_to`, not a
     /// reset), run H local steps, fold the error-feedback memory under
     /// the Delta payload, and return the top-r reports **in cohort
-    /// order**. Off-cohort clients must not train, upload, or receive the
-    /// model (the TCP pool sends them a lightweight `Sit` frame instead).
+    /// order** — `None` for members that dropped mid-phase. Off-cohort
+    /// clients must not train, upload, or receive the model (the TCP pool
+    /// sends them a lightweight `Sit` frame instead; dead streams are
+    /// skipped entirely).
     fn train_and_report(&mut self, global: &[f32], cohort: &[usize])
-        -> Result<Vec<ClientReport>>;
+        -> Result<Vec<Option<ClientReport>>>;
 
-    /// Algorithm 1 line 8 for the cohort: deliver the PS's index requests
-    /// (`requests[p]` is for client `cohort[p]`; `None` for client-side
-    /// strategies — rTop-k/top-k/rand-k/dense select locally) and collect
-    /// the sparse uploads in cohort order. Sent coordinates leave the
-    /// error-feedback memory.
+    /// Algorithm 1 line 8 for the phase-1 survivors: deliver the PS's
+    /// index requests (`requests[p]` is for client `cohort[p]`; `None`
+    /// for client-side strategies — rTop-k/top-k/rand-k/dense select
+    /// locally) and collect the sparse uploads in cohort order (`None`
+    /// per dropped member). `cohort` may be a subset of the cohort passed
+    /// to [`Self::train_and_report`] (phase-1 casualties are excluded).
+    /// Sent coordinates leave the error-feedback memory.
     fn exchange(&mut self, requests: Option<&[Vec<u32>]>, cohort: &[usize])
-        -> Result<Vec<SparseVec>>;
+        -> Result<Vec<Option<SparseVec>>>;
 
     /// The PS-side compute backend (server optimizer apply, evaluation).
     /// Kept on the pool so a process never holds more than one PJRT
@@ -97,46 +131,114 @@ pub trait ClientPool {
 }
 
 /// Inverse cohort map: client id -> position into the cohort-aligned
-/// reports/requests/uploads, with `usize::MAX` marking clients that sit
-/// the round out. Shared by the pools and the PS so every layer agrees
-/// on the alignment (cohorts are sorted, distinct ids in `0..n`).
-pub fn cohort_positions(n: usize, cohort: &[usize]) -> Vec<usize> {
-    let mut pos = vec![usize::MAX; n];
-    for (p, &c) in cohort.iter().enumerate() {
-        pos[c] = p;
+/// reports/requests/uploads. Shared by the pools and the PS so every
+/// layer agrees on the alignment (cohorts are sorted, distinct ids in
+/// `0..n`).
+///
+/// Stamp-versioned (the `select_disjoint` trick): `set` is O(m) in the
+/// cohort size — no O(n) clear or reallocation per round — so a reused
+/// map costs nothing for the off-cohort majority of a large fleet.
+/// Property-pinned against the naive rebuild-a-`Vec` implementation in
+/// `rust/tests/properties.rs`.
+#[derive(Debug, Default)]
+pub struct CohortMap {
+    /// client id -> cohort position, valid only where `stamp` is current
+    pos: Vec<usize>,
+    stamp: Vec<u32>,
+    cur: u32,
+}
+
+impl CohortMap {
+    pub fn new() -> Self {
+        Self::default()
     }
-    pos
+
+    /// Re-key the map to `cohort` over id space `0..n`. O(m) once the
+    /// buffers reached `n` capacity.
+    pub fn set(&mut self, n: usize, cohort: &[usize]) {
+        if self.pos.len() < n {
+            self.pos.resize(n, usize::MAX);
+            self.stamp.resize(n, 0);
+        }
+        self.cur = self.cur.wrapping_add(1);
+        if self.cur == 0 {
+            // stamp wrapped: invalidate everything once per 2^32 rounds
+            self.stamp.fill(0);
+            self.cur = 1;
+        }
+        for (p, &c) in cohort.iter().enumerate() {
+            self.pos[c] = p;
+            self.stamp[c] = self.cur;
+        }
+    }
+
+    /// The client's position in the current cohort, or `usize::MAX` if it
+    /// sits the round out (the sentinel the pools branch on).
+    pub fn slot(&self, client: usize) -> usize {
+        if client < self.pos.len() && self.stamp[client] == self.cur {
+            self.pos[client]
+        } else {
+            usize::MAX
+        }
+    }
+
+    /// `slot` as an `Option` for callers that prefer it.
+    pub fn get(&self, client: usize) -> Option<usize> {
+        match self.slot(client) {
+            usize::MAX => None,
+            p => Some(p),
+        }
+    }
 }
 
 /// What one engine round reports back to its driver.
 #[derive(Debug)]
 pub struct RoundOutcome {
-    /// mean local training loss across this round's cohort
+    /// mean local training loss across this round's survivors (NaN on a
+    /// round every scheduled client dropped out of)
     pub mean_loss: f32,
     /// Some(n_clusters) when the M-periodic DBSCAN ran this round
     pub reclustered: Option<usize>,
     pub n_clusters: usize,
-    /// the clients that participated (sorted; all of them at
-    /// participation = 1.0)
+    /// the clients that completed the round (sorted; all of them at
+    /// participation = 1.0 with a healthy fleet)
     pub cohort: Vec<usize>,
+    /// scheduled clients that dropped mid-round (sorted; empty on a
+    /// healthy fleet) — their cluster ages kept growing per eq. (2)
+    pub casualties: Vec<usize>,
 }
 
 /// Everything one engine's collect phases produced *before* the server
 /// update: the raw material a flat round applies directly and a sharded
 /// topology hands to its root aggregator
-/// ([`crate::coordinator::topology::ShardedEngine`]) for the global merge.
-/// Client ids here are engine-local (the owning engine's `0..n`).
+/// ([`crate::coordinator::topology::ShardedEngine`]) for the global
+/// merge. Client ids here are engine-local (the owning engine's `0..n`).
+///
+/// This is the membership redesign's core type: a round that loses
+/// clients mid-flight returns a `PartialRound` with those clients in
+/// `casualties` instead of an `Err` — the driver applies the survivors'
+/// aggregate, the casualties' `uploaded` entries stay empty (their
+/// clusters' eq.-(2) ages keep growing, exactly like off-cohort
+/// absence), and training continues.
 #[derive(Debug)]
-pub struct ShardRound {
-    /// the round's cohort (sorted, distinct local ids)
+pub struct PartialRound {
+    /// the scheduled cohort (sorted, distinct local ids) — purely
+    /// informational: it is exactly the sorted union of `survivors` and
+    /// `casualties`, and no driver consumes it today
     pub cohort: Vec<usize>,
-    /// sum over the cohort of per-client mean local losses (f64 terms in
-    /// cohort order, exactly the summation `util::mean` performs — so
-    /// `loss_sum / cohort.len()` reproduces the flat mean bit-for-bit)
+    /// cohort members that completed both phases (sorted)
+    pub survivors: Vec<usize>,
+    /// cohort members that dropped mid-round (sorted)
+    pub casualties: Vec<usize>,
+    /// sum over the survivors of per-client mean local losses (f64 terms
+    /// in survivor order, exactly the summation `util::mean` performs —
+    /// so `loss_sum / survivors.len()` reproduces the flat mean
+    /// bit-for-bit)
     pub loss_sum: f64,
-    /// the cohort's sparse uploads, in cohort order
+    /// the survivors' sparse uploads, in survivor order
     pub updates: Vec<SparseVec>,
-    /// per client (all `n`, empty off-cohort): the indices it uploaded
+    /// per client (all `n`, empty for non-uploaders): the indices it
+    /// uploaded
     pub uploaded: Vec<Vec<u32>>,
 }
 
@@ -164,6 +266,8 @@ pub struct RoundEngine {
     /// per client: global rounds since it last participated (the poll
     /// debt the age-debt scheduler consumes)
     since_polled: Vec<u32>,
+    /// per-client lifecycle registry (DESIGN.md §8)
+    fleet: Fleet,
 }
 
 impl RoundEngine {
@@ -186,6 +290,7 @@ impl RoundEngine {
             uploaded_log: VecDeque::new(),
             scheduler: cfg.scheduler.build(cfg.seed),
             since_polled: vec![0; cfg.n_clients],
+            fleet: Fleet::new(cfg.n_clients),
         }
     }
 
@@ -203,6 +308,11 @@ impl RoundEngine {
 
     pub fn profile(&self) -> &Profile {
         &self.profile
+    }
+
+    /// The engine's live membership registry.
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
     }
 
     /// Rounds completed so far.
@@ -225,10 +335,51 @@ impl RoundEngine {
         self.global.params.copy_from_slice(params);
     }
 
+    /// Snapshot this engine's per-client membership state (frequency
+    /// vector, poll debt, fleet record) in local-id order — the material
+    /// a dynamic re-shard hands between shard engines.
+    pub fn membership_parts(&self) -> Vec<(FrequencyVector, u32, MemberRecord)> {
+        (0..self.cfg.n_clients)
+            .map(|c| (self.ps.frequency(c).clone(), self.since_polled[c], *self.fleet.record(c)))
+            .collect()
+    }
+
+    /// Install a re-sharded client set: `clusters` is this engine's new
+    /// cluster state (local ids = positions in the new slice) and `parts`
+    /// the per-client membership state in the same order. Resizes the
+    /// engine to `parts.len()` clients; accounting, the global-model
+    /// copy, the round counter, and the uploaded-index log are preserved
+    /// (historical log entries keep their old width — they describe the
+    /// old assignment).
+    pub fn install_membership(
+        &mut self,
+        clusters: ClusterManager,
+        parts: Vec<(FrequencyVector, u32, MemberRecord)>,
+    ) {
+        assert_eq!(clusters.n_clients(), parts.len());
+        let n = parts.len();
+        let mut freqs = Vec::with_capacity(n);
+        let mut since = Vec::with_capacity(n);
+        let mut records = Vec::with_capacity(n);
+        for (f, s, r) in parts {
+            freqs.push(f);
+            since.push(s);
+            records.push(r);
+        }
+        self.cfg.n_clients = n;
+        self.ps.install(clusters, freqs);
+        self.since_polled = since;
+        self.fleet = Fleet::from_records(records);
+    }
+
     /// One global round (Algorithm 1 lines 3-16) against `pool`, scoped
     /// to a scheduler-selected cohort of `cfg.cohort_size()` clients.
-    /// At `participation = 1.0` the cohort is every client and the round
-    /// is bit-for-bit the pre-cohort protocol.
+    /// At `participation = 1.0` with a healthy fleet the cohort is every
+    /// client and the round is bit-for-bit the pre-cohort protocol.
+    ///
+    /// A mid-round client failure no longer aborts: the round finishes
+    /// with the survivors (see [`PartialRound`]); the server update is
+    /// skipped only when *every* scheduled client dropped.
     ///
     /// This is the flat composition of the three phase functions the
     /// sharded topology re-uses: [`Self::collect_round`] (broadcast,
@@ -237,38 +388,47 @@ impl RoundEngine {
     /// [`Self::finish_round`] (age/frequency bookkeeping + M-periodic
     /// reclustering).
     pub fn run_round(&mut self, pool: &mut dyn ClientPool) -> Result<RoundOutcome> {
-        let sr = self.collect_round(pool)?;
-        let mean_loss = (sr.loss_sum / sr.cohort.len() as f64) as f32;
-        let mut agg = Aggregate::new();
-        for u in sr.updates {
-            agg.push(u);
+        let pr = self.collect_round(pool)?;
+        let PartialRound { survivors, casualties, loss_sum, updates, uploaded, .. } = pr;
+        let mean_loss = if survivors.is_empty() {
+            f32::NAN
+        } else {
+            (loss_sum / survivors.len() as f64) as f32
+        };
+        if !survivors.is_empty() {
+            let mut agg = Aggregate::new();
+            for u in updates {
+                agg.push(u);
+            }
+            merge_and_apply(
+                &self.cfg,
+                pool.backend(),
+                &mut self.global,
+                &agg,
+                survivors.len(),
+                self.cfg.n_clients,
+                &self.profile,
+            )?;
         }
-        merge_and_apply(
-            &self.cfg,
-            pool.backend(),
-            &mut self.global,
-            &agg,
-            sr.cohort.len(),
-            self.cfg.n_clients,
-            &self.profile,
-        )?;
-        let reclustered = self.finish_round(sr.uploaded, &sr.cohort);
+        let reclustered = self.finish_round(uploaded, &survivors);
         Ok(RoundOutcome {
             mean_loss,
             reclustered,
             n_clusters: self.ps.clusters().n_clusters(),
-            cohort: sr.cohort,
+            cohort: survivors,
+            casualties,
         })
     }
 
-    /// Phases 1-3 of a round: cohort selection, broadcast + local
-    /// training + top-r reports, PS index selection, sparse uploads, and
-    /// the full (§6 + exact wire) communication accounting — everything
-    /// up to but excluding the server update and bookkeeping. The caller
-    /// decides where the returned [`ShardRound`] is applied: locally
+    /// Phases 1-3 of a round: membership intake (rejoins + transport
+    /// health), cohort selection, broadcast + local training + top-r
+    /// reports, PS index selection, sparse uploads, and the full (§6 +
+    /// exact wire) communication accounting — everything up to but
+    /// excluding the server update and bookkeeping. The caller decides
+    /// where the returned [`PartialRound`] is applied: locally
     /// ([`Self::run_round`]) or merged with sibling shards at a root
     /// aggregator.
-    pub fn collect_round(&mut self, pool: &mut dyn ClientPool) -> Result<ShardRound> {
+    pub fn collect_round(&mut self, pool: &mut dyn ClientPool) -> Result<PartialRound> {
         let n = self.cfg.n_clients;
         let (k, r, d) = (self.cfg.k, self.cfg.r, self.cfg.d());
         ensure!(
@@ -277,21 +437,35 @@ impl RoundEngine {
             pool.n_clients()
         );
 
-        // ---- cohort selection (partial participation)
-        let m = self.cfg.cohort_size();
-        let available = pool.available();
+        // ---- membership intake: re-admissions, then transport health
+        let rejoined = pool.poll_rejoins(&self.global.params)?;
+        for &c in &rejoined {
+            ensure!(c < n, "pool re-admitted unknown client {c} (n = {n})");
+            self.fleet.rejoin(c);
+            crate::info!(
+                "round {}: client {c} rejoined (generation {})",
+                self.ps.round() + 1,
+                self.fleet.generation(c)
+            );
+        }
+        let health = pool.health();
         ensure!(
-            available.len() == n,
-            "pool reported availability for {} of {n} clients",
-            available.len()
+            health.len() == n,
+            "pool reported health for {} of {n} clients",
+            health.len()
         );
+        self.fleet.observe_health(&health);
+
+        // ---- cohort selection (partial participation, fleet-aware)
+        let m = self.cfg.cohort_size();
+        let states = self.fleet.states();
         let cohort = self.scheduler.select(&ScheduleCtx {
             round: self.ps.round(),
             n,
             m,
             ps: &self.ps,
             since_polled: &self.since_polled,
-            available: &available,
+            fleet: &states,
         });
         ensure!(
             cohort.len() == m
@@ -302,65 +476,119 @@ impl RoundEngine {
         );
 
         // ---- broadcast + local training + top-r reports (lines 3-7)
-        let reports = self
+        let phase1 = self
             .profile
             .time("pool.train", || pool.train_and_report(&self.global.params, &cohort))?;
         ensure!(
-            reports.len() == m,
-            "pool returned {} reports for a cohort of {m}",
-            reports.len()
+            phase1.len() == m,
+            "pool returned {} report slots for a cohort of {m}",
+            phase1.len()
         );
-        let loss_sum: f64 = reports.iter().map(|c| c.mean_loss as f64).sum();
+        let mut casualties: Vec<usize> = Vec::new();
+        // phase-1 survivors and their reports, in (sorted) cohort order
+        let mut alive: Vec<usize> = Vec::with_capacity(m);
+        let mut reports: Vec<ClientReport> = Vec::with_capacity(m);
+        for (&c, rep) in cohort.iter().zip(phase1) {
+            match rep {
+                Some(rep) => {
+                    alive.push(c);
+                    reports.push(rep);
+                }
+                None => casualties.push(c),
+            }
+        }
 
-        // ---- index selection (Algorithm 2 at the PS; client-side
-        // strategies select inside the pool during the exchange)
+        // ---- index selection (Algorithm 2 at the PS, over the phase-1
+        // survivors; client-side strategies select inside the pool)
         let requests: Option<Vec<Vec<u32>>> = if self.cfg.strategy.needs_report() {
             let idx: Vec<Vec<u32>> = reports.iter().map(|c| c.report.idx.clone()).collect();
             Some(self
                 .profile
-                .time("ps.select", || self.ps.select_requests_cohort(&cohort, &idx)))
+                .time("ps.select", || self.ps.select_requests_cohort(&alive, &idx)))
         } else {
             None
         };
 
-        // ---- sparse uploads (line 8)
-        let updates = self
-            .profile
-            .time("pool.exchange", || pool.exchange(requests.as_deref(), &cohort))?;
+        // ---- sparse uploads (line 8), again tolerating casualties
+        let phase2 = if alive.is_empty() {
+            Vec::new()
+        } else {
+            self.profile
+                .time("pool.exchange", || pool.exchange(requests.as_deref(), &alive))?
+        };
         ensure!(
-            updates.len() == m,
-            "pool returned {} updates for a cohort of {m}",
-            updates.len()
+            phase2.len() == alive.len(),
+            "pool returned {} update slots for {} survivors",
+            phase2.len(),
+            alive.len()
         );
         // what each client actually uploaded drives the bookkeeping — for
         // PS-side strategies this equals the request (requested ⊆ report),
         // for client-side strategies it is the client's own selection.
-        // Off-cohort clients get an empty entry: a frequency no-op, and a
-        // cluster whose members all sat out ages uniformly (eq. 2).
+        // Non-uploaders (off-cohort or casualty) get an empty entry: a
+        // frequency no-op, and a cluster whose members all sat out ages
+        // uniformly (eq. 2).
+        let mut survivors: Vec<usize> = Vec::with_capacity(alive.len());
+        let mut updates: Vec<SparseVec> = Vec::with_capacity(alive.len());
+        let mut loss_sum = 0.0f64;
         let mut uploaded: Vec<Vec<u32>> = vec![Vec::new(); n];
-        for (p, &c) in cohort.iter().enumerate() {
-            uploaded[c] = updates[p].idx.clone();
+        for ((&c, up), rep) in alive.iter().zip(phase2).zip(&reports) {
+            match up {
+                Some(u) => {
+                    uploaded[c] = u.idx.clone();
+                    loss_sum += rep.mean_loss as f64;
+                    updates.push(u);
+                    survivors.push(c);
+                }
+                None => casualties.push(c),
+            }
+        }
+        casualties.sort_unstable();
+
+        // ---- fleet bookkeeping for this round's outcomes
+        for &c in &casualties {
+            self.fleet.casualty(c);
+            crate::info!(
+                "round {}: client {c} dropped mid-round -> {}",
+                self.ps.round() + 1,
+                self.fleet.state(c).name()
+            );
+        }
+        for &c in &survivors {
+            self.fleet.survived(c);
         }
 
-        // ---- communication accounting (DESIGN.md §6, cohort-scoped)
+        // ---- communication accounting (DESIGN.md §6, cohort-scoped).
+        // Broadcast/Sit frames count for the streams the pool actually
+        // writes (cohort members / off-cohort clients whose transport was
+        // reachable at round start); report/request/update frames count
+        // per phase survivor. On a casualty-free round this is exactly
+        // the classical cohort accounting.
+        let m_bcast = cohort.iter().filter(|&&c| health[c]).count();
+        let m1 = alive.len();
         for u in &updates {
             self.comm.update_up += (u.len() * 8) as u64;
         }
         if self.cfg.strategy.needs_report() {
-            self.comm.report_up += (m * r * 4) as u64;
-            self.comm.request_down += (m * k * 4) as u64;
+            self.comm.report_up += (m1 * r * 4) as u64;
+            self.comm.request_down += (m1 * k * 4) as u64;
         }
-        self.comm.broadcast_down += (m * d * 4) as u64;
+        self.comm.broadcast_down += (m_bcast * d * 4) as u64;
 
         // ---- exact wire accounting: the frame bytes this round costs
         // under the active codec, mirrored frame for frame from the TCP
         // deployment (model + request + sit down; report + update up) and
-        // pinned equal to the observed socket bytes by
-        // rust/tests/parity.rs. The in-process pool has no wire, so for
-        // the simulator these are the bytes the same round *would* cost.
+        // pinned equal to the observed socket bytes on casualty-free
+        // rounds by rust/tests/parity.rs (a stream that dies mid-frame
+        // leaves the observed count short by that partial frame — see
+        // DESIGN.md §8). The in-process pool has no wire, so for the
+        // simulator these are the bytes the same round *would* cost.
         let codec = self.cfg.codec;
-        self.comm.wire_down += ((n - m) * wire::SIT_FRAME_BYTES) as u64
-            + (m * wire::model_frame_bytes(d)) as u64;
+        // off-cohort reachable streams = all reachable minus the cohort's
+        // reachable members (no O(n) membership mask needed)
+        let sits = health.iter().filter(|&&h| h).count() - m_bcast;
+        self.comm.wire_down += (sits * wire::SIT_FRAME_BYTES) as u64
+            + (m_bcast * wire::model_frame_bytes(d)) as u64;
         for rep in &reports {
             self.comm.wire_up += wire::report_frame_bytes(codec, &rep.report.idx) as u64;
         }
@@ -373,22 +601,24 @@ impl RoundEngine {
                 }
             }
             None => {
-                self.comm.wire_down += (m * wire::request_frame_bytes(codec, &[])) as u64;
+                self.comm.wire_down += (m1 * wire::request_frame_bytes(codec, &[])) as u64;
             }
         }
         for u in &updates {
             self.comm.wire_up += wire::update_frame_bytes(codec, &u.idx) as u64;
         }
 
-        Ok(ShardRound { cohort, loss_sum, updates, uploaded })
+        Ok(PartialRound { cohort, survivors, casualties, loss_sum, updates, uploaded })
     }
 
     /// Phase 5 of a round: commit the round's uploads to the age and
     /// frequency bookkeeping (Algorithm 2 lines 7-8 / eq. 2), run the
     /// M-periodic clustering (Algorithm 1 lines 13-16), and update the
-    /// uploaded-index log and poll-debt counters. Returns
-    /// `Some(n_clusters)` when reclustering ran.
-    pub fn finish_round(&mut self, uploaded: Vec<Vec<u32>>, cohort: &[usize]) -> Option<usize> {
+    /// uploaded-index log and poll-debt counters. `survivors` are the
+    /// clients that completed the round — casualties keep accruing poll
+    /// debt exactly like off-cohort clients. Returns `Some(n_clusters)`
+    /// when reclustering ran.
+    pub fn finish_round(&mut self, uploaded: Vec<Vec<u32>>, survivors: &[usize]) -> Option<usize> {
         self.profile.time("ps.record", || self.ps.record_round(&uploaded));
         let reclustered = self.ps.maybe_recluster();
         self.uploaded_log.push_back(uploaded);
@@ -398,7 +628,7 @@ impl RoundEngine {
         for s in self.since_polled.iter_mut() {
             *s = s.saturating_add(1);
         }
-        for &c in cohort {
+        for &c in survivors {
             self.since_polled[c] = 0;
         }
         reclustered
@@ -600,15 +830,34 @@ pub fn eval_dataset(
 mod tests {
     use super::*;
     use crate::config::ExperimentConfig;
+    use crate::coordinator::fleet::Membership;
+    use std::collections::HashSet;
 
     /// A scripted pool: canned reports/uploads, no real training. Lets the
-    /// engine's selection/accounting/bookkeeping be checked in isolation.
+    /// engine's selection/accounting/bookkeeping be checked in isolation —
+    /// including casualty handling (`fail_phase1` / `fail_phase2` clients
+    /// answer `None`).
     struct FakePool {
         n: usize,
         k: usize,
         backend: crate::backend::RustBackend,
         /// requests seen at the last exchange (None = client-side)
         last_requests: Option<Vec<Vec<u32>>>,
+        fail_phase1: HashSet<usize>,
+        fail_phase2: HashSet<usize>,
+    }
+
+    impl FakePool {
+        fn healthy(cfg: &ExperimentConfig) -> Self {
+            FakePool {
+                n: cfg.n_clients,
+                k: cfg.k,
+                backend: crate::backend::RustBackend::new(cfg.r, cfg.lr_client, cfg.seed),
+                last_requests: None,
+                fail_phase1: HashSet::new(),
+                fail_phase2: HashSet::new(),
+            }
+        }
     }
 
     impl ClientPool for FakePool {
@@ -620,18 +869,21 @@ mod tests {
             &mut self,
             _global: &[f32],
             cohort: &[usize],
-        ) -> Result<Vec<ClientReport>> {
+        ) -> Result<Vec<Option<ClientReport>>> {
             assert!(cohort.iter().all(|&c| c < self.n));
             // client i reports indices 10i..10i+r by descending magnitude
             Ok(cohort
                 .iter()
                 .map(|&i| {
+                    if self.fail_phase1.contains(&i) {
+                        return None;
+                    }
                     let idx: Vec<u32> = (0..40u32).map(|j| 10 * i as u32 + j).collect();
                     let val: Vec<f32> = (0..40).map(|j| 40.0 - j as f32).collect();
-                    ClientReport {
+                    Some(ClientReport {
                         report: SparseVec::new(idx, val),
                         mean_loss: 1.0,
-                    }
+                    })
                 })
                 .collect())
         }
@@ -640,20 +892,31 @@ mod tests {
             &mut self,
             requests: Option<&[Vec<u32>]>,
             cohort: &[usize],
-        ) -> Result<Vec<SparseVec>> {
+        ) -> Result<Vec<Option<SparseVec>>> {
             self.last_requests = requests.map(|r| r.to_vec());
             Ok(match requests {
-                Some(reqs) => reqs
+                Some(reqs) => cohort
                     .iter()
-                    .map(|req| {
-                        SparseVec::new(req.clone(), req.iter().map(|&j| j as f32).collect())
+                    .zip(reqs)
+                    .map(|(&i, req)| {
+                        if self.fail_phase2.contains(&i) {
+                            return None;
+                        }
+                        Some(SparseVec::new(
+                            req.clone(),
+                            req.iter().map(|&j| j as f32).collect(),
+                        ))
                     })
                     .collect(),
                 None => cohort
                     .iter()
                     .map(|&i| {
-                        let idx: Vec<u32> = (0..self.k as u32).map(|j| 10 * i as u32 + j).collect();
-                        SparseVec::new(idx.clone(), vec![1.0; idx.len()])
+                        if self.fail_phase2.contains(&i) {
+                            return None;
+                        }
+                        let idx: Vec<u32> =
+                            (0..self.k as u32).map(|j| 10 * i as u32 + j).collect();
+                        Some(SparseVec::new(idx.clone(), vec![1.0; idx.len()]))
                     })
                     .collect(),
             })
@@ -675,16 +938,12 @@ mod tests {
     fn engine_round_accounts_and_records() {
         let cfg = smoke_cfg();
         let d = cfg.d();
-        let mut pool = FakePool {
-            n: cfg.n_clients,
-            k: cfg.k,
-            backend: crate::backend::RustBackend::new(cfg.r, cfg.lr_client, cfg.seed),
-            last_requests: None,
-        };
+        let mut pool = FakePool::healthy(&cfg);
         let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
         let out = engine.run_round(&mut pool).unwrap();
         assert_eq!(out.mean_loss, 1.0);
         assert_eq!(out.cohort, vec![0, 1], "full participation polls everyone");
+        assert!(out.casualties.is_empty());
         assert_eq!(engine.round(), 1);
         // rAge-k: requests went out and equal the uploads
         let reqs = pool.last_requests.clone().unwrap();
@@ -726,12 +985,7 @@ mod tests {
         cfg.n_clients = 4;
         cfg.participation = 0.5; // m = 2 with the default round-robin
         let d = cfg.d();
-        let mut pool = FakePool {
-            n: cfg.n_clients,
-            k: cfg.k,
-            backend: crate::backend::RustBackend::new(cfg.r, cfg.lr_client, cfg.seed),
-            last_requests: None,
-        };
+        let mut pool = FakePool::healthy(&cfg);
         let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
 
         let out1 = engine.run_round(&mut pool).unwrap();
@@ -776,12 +1030,8 @@ mod tests {
         let mut cfg = smoke_cfg();
         cfg.strategy = StrategyKind::TopK;
         let d = cfg.d();
-        let mut pool = FakePool {
-            n: cfg.n_clients,
-            k: cfg.k,
-            backend: crate::backend::RustBackend::new(cfg.r, cfg.lr_client, cfg.seed),
-            last_requests: Some(Vec::new()),
-        };
+        let mut pool = FakePool::healthy(&cfg);
+        pool.last_requests = Some(Vec::new());
         let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
         engine.run_round(&mut pool).unwrap();
         assert!(pool.last_requests.is_none(), "top-k must not receive PS requests");
@@ -790,6 +1040,137 @@ mod tests {
         assert_eq!(comm.request_down, 0);
         // bookkeeping recorded what the clients actually uploaded
         assert_eq!(engine.uploaded_log()[0][1][0], 10);
+    }
+
+    /// The membership tentpole at engine granularity: a client failing
+    /// phase 1 becomes a casualty, the round completes with the survivor,
+    /// the casualty's ages keep growing per eq. (2), and the fleet walks
+    /// Active -> Suspect -> Dead -> (survival) back to Active.
+    #[test]
+    fn casualties_do_not_abort_the_round() {
+        let cfg = smoke_cfg();
+        let d = cfg.d();
+        let mut pool = FakePool::healthy(&cfg);
+        pool.fail_phase1.insert(1);
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+
+        let out = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out.cohort, vec![0], "the survivor finishes the round");
+        assert_eq!(out.casualties, vec![1]);
+        assert_eq!(out.mean_loss, 1.0, "mean loss is over the survivors");
+        assert_eq!(engine.fleet().state(1), Membership::Suspect);
+        assert_eq!(engine.fleet().state(0), Membership::Active);
+        // the casualty uploaded nothing: empty log entry, ages grew
+        assert!(engine.uploaded_log()[0][1].is_empty());
+        assert_eq!(engine.ps().clusters().age_of_client(1).get(0), 1);
+        // accounting: exactly one report/request/update flowed
+        let comm = engine.comm();
+        assert_eq!(comm.report_up, 4 * cfg.r as u64);
+        assert_eq!(comm.update_up, 8 * cfg.k as u64);
+
+        // a second failed round writes the client off...
+        let out = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out.casualties, vec![1]);
+        assert_eq!(engine.fleet().state(1), Membership::Dead);
+        // ...and a clean round brings it back to Active
+        pool.fail_phase1.clear();
+        let out = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out.cohort, vec![0, 1]);
+        assert!(out.casualties.is_empty());
+        assert_eq!(engine.fleet().state(1), Membership::Active);
+    }
+
+    /// A phase-2 drop (report received, update lost) is also a casualty:
+    /// its report must not reach the aggregate or the bookkeeping.
+    #[test]
+    fn phase_two_casualty_uploads_nothing() {
+        let cfg = smoke_cfg();
+        let d = cfg.d();
+        let mut pool = FakePool::healthy(&cfg);
+        pool.fail_phase2.insert(0);
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        let out = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out.cohort, vec![1]);
+        assert_eq!(out.casualties, vec![0]);
+        assert!(engine.uploaded_log()[0][0].is_empty());
+        assert_eq!(engine.uploaded_log()[0][1].len(), cfg.k);
+        // the request frame still flowed to the phase-1 survivor; only
+        // one update came back
+        let comm = engine.comm();
+        assert_eq!(comm.request_down, 2 * 4 * cfg.k as u64);
+        assert_eq!(comm.update_up, 8 * cfg.k as u64);
+        assert_eq!(engine.fleet().state(0), Membership::Suspect);
+    }
+
+    /// Losing every scheduled client skips the server update but still
+    /// commits the eq.-(2) bookkeeping (ages grow) — training resumes
+    /// when anyone comes back.
+    #[test]
+    fn all_casualty_round_skips_apply_but_ages_grow() {
+        let cfg = smoke_cfg();
+        let d = cfg.d();
+        let mut pool = FakePool::healthy(&cfg);
+        pool.fail_phase1.extend([0, 1]);
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        let out = engine.run_round(&mut pool).unwrap();
+        assert!(out.cohort.is_empty());
+        assert_eq!(out.casualties, vec![0, 1]);
+        assert!(out.mean_loss.is_nan());
+        assert_eq!(engine.round(), 1, "the round still counts");
+        assert!(engine.global_params().iter().all(|&p| p == 0.0), "no server update");
+        assert_eq!(engine.ps().clusters().age_of_client(0).get(0), 1);
+    }
+
+    /// A pool-level rejoin moves the fleet to Rejoining with a bumped
+    /// generation; surviving the round promotes to Active.
+    #[test]
+    fn rejoin_is_admitted_and_promoted_on_survival() {
+        struct RejoiningPool {
+            inner: FakePool,
+            pending: Vec<usize>,
+        }
+        impl ClientPool for RejoiningPool {
+            fn n_clients(&self) -> usize {
+                self.inner.n_clients()
+            }
+            fn poll_rejoins(&mut self, _global: &[f32]) -> Result<Vec<usize>> {
+                Ok(std::mem::take(&mut self.pending))
+            }
+            fn train_and_report(
+                &mut self,
+                global: &[f32],
+                cohort: &[usize],
+            ) -> Result<Vec<Option<ClientReport>>> {
+                self.inner.train_and_report(global, cohort)
+            }
+            fn exchange(
+                &mut self,
+                requests: Option<&[Vec<u32>]>,
+                cohort: &[usize],
+            ) -> Result<Vec<Option<SparseVec>>> {
+                self.inner.exchange(requests, cohort)
+            }
+            fn backend(&mut self) -> &mut dyn Backend {
+                self.inner.backend()
+            }
+        }
+
+        let cfg = smoke_cfg();
+        let d = cfg.d();
+        let mut pool = RejoiningPool { inner: FakePool::healthy(&cfg), pending: Vec::new() };
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        // kill client 1 twice -> Dead
+        pool.inner.fail_phase1.insert(1);
+        engine.run_round(&mut pool).unwrap();
+        engine.run_round(&mut pool).unwrap();
+        assert_eq!(engine.fleet().state(1), Membership::Dead);
+        // it rejoins and survives
+        pool.inner.fail_phase1.clear();
+        pool.pending.push(1);
+        let out = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out.cohort, vec![0, 1]);
+        assert_eq!(engine.fleet().state(1), Membership::Active);
+        assert_eq!(engine.fleet().generation(1), 1);
     }
 
     #[test]
@@ -818,5 +1199,24 @@ mod tests {
         // sent coordinates left the error-feedback memory
         assert_eq!(memory[5], 0.0);
         assert_eq!(memory[9], 0.0);
+    }
+
+    #[test]
+    fn cohort_map_reuses_buffers_across_rounds() {
+        let mut map = CohortMap::new();
+        map.set(6, &[1, 4]);
+        assert_eq!(map.slot(1), 0);
+        assert_eq!(map.slot(4), 1);
+        assert_eq!(map.slot(0), usize::MAX);
+        assert_eq!(map.get(5), None);
+        // re-keying invalidates the old cohort without clearing
+        map.set(6, &[0, 2, 5]);
+        assert_eq!(map.get(1), None, "stale entry must not leak");
+        assert_eq!(map.slot(2), 1);
+        assert_eq!(map.slot(5), 2);
+        // growing n mid-stream is fine (re-shard resizes the id space)
+        map.set(8, &[7]);
+        assert_eq!(map.slot(7), 0);
+        assert_eq!(map.get(6), None);
     }
 }

@@ -1,0 +1,304 @@
+//! Fleet membership: the per-client lifecycle the round protocol runs
+//! against.
+//!
+//! The paper's age vectors exist precisely so the PS can keep training
+//! when some clients are silent — eq. (2) ages of unpolled clusters keep
+//! growing and steer future index requests. [`Fleet`] is the registry
+//! that makes that operational: every client carries a [`Membership`]
+//! state and a **generation** counter, the scheduler ranks cohorts by
+//! live state (Dead last, Suspect penalized), and a round that loses a
+//! client finishes with the survivors instead of erroring
+//! ([`crate::coordinator::engine::RoundEngine::collect_round`] returns a
+//! `PartialRound` carrying the casualty list).
+//!
+//! State machine (deterministic — every transition is unit-tested):
+//!
+//! ```text
+//!             casualty                casualty / unreachable
+//!   Active ------------> Suspect -----------------------------> Dead
+//!     ^  ^                  |                                    |
+//!     |  '----- survived ---'                                    | Rejoin frame /
+//!     |                                                          | pool re-admission
+//!     '------- survived ------- Rejoining <----------------------'
+//!                                   |                 (generation += 1)
+//!                                   '---- casualty / unreachable --> Dead
+//! ```
+//!
+//! * **casualty** — the client was scheduled this round and failed to
+//!   deliver (timeout, reset, bad frame, simulated drop).
+//! * **unreachable** — the transport reports the client's stream gone
+//!   ([`crate::coordinator::engine::ClientPool::health`]).
+//! * **survived** — the client completed a round end to end.
+//! * **rejoin** — a recovered worker re-admitted itself (the TCP `Rejoin`
+//!   frame, or a pool-level re-admission in the simulator); the
+//!   generation counter bumps so stale duplicates are detectable.
+//!
+//! With no failures every client stays `Active` forever and the fleet is
+//! invisible — the all-answer path is bit-for-bit the pre-fleet protocol
+//! (pinned by `rust/tests/parity.rs`).
+
+/// One client's lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Membership {
+    /// Reachable and completing rounds.
+    Active,
+    /// Failed its last scheduled round (or the transport degraded) but
+    /// not yet written off — penalized by the scheduler, recovered by
+    /// surviving a round.
+    Suspect,
+    /// Unreachable; only a rejoin brings it back. Its clusters' eq.-(2)
+    /// ages keep growing the whole time.
+    Dead,
+    /// Re-admitted after death; treated as live by the scheduler and
+    /// promoted to `Active` by its first completed round.
+    Rejoining,
+}
+
+impl Membership {
+    /// Scheduler tier: live states first, Suspect after every live
+    /// client, Dead last (see `coordinator::scheduler::AgeDebt`).
+    pub fn schedule_tier(self) -> u8 {
+        match self {
+            Membership::Active | Membership::Rejoining => 0,
+            Membership::Suspect => 1,
+            Membership::Dead => 2,
+        }
+    }
+
+    /// A state the pool can plausibly complete a round from.
+    pub fn is_live(self) -> bool {
+        self != Membership::Dead
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Membership::Active => "active",
+            Membership::Suspect => "suspect",
+            Membership::Dead => "dead",
+            Membership::Rejoining => "rejoining",
+        }
+    }
+}
+
+/// One client's fleet record. Plain data so a sharded topology can hand
+/// records between shard engines on a re-shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemberRecord {
+    pub state: Membership,
+    /// admission generation: 0 for the original join, +1 per accepted
+    /// rejoin — lets the PS refuse stale duplicate rejoins and tells
+    /// diagnostics how flappy a client is
+    pub generation: u32,
+    /// total rounds this client was scheduled for and failed
+    pub casualties: u32,
+}
+
+impl Default for MemberRecord {
+    fn default() -> Self {
+        MemberRecord { state: Membership::Active, generation: 0, casualties: 0 }
+    }
+}
+
+/// The membership registry one engine schedules against (client ids are
+/// the engine's local `0..n`).
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    members: Vec<MemberRecord>,
+}
+
+impl Fleet {
+    /// Everyone starts Active at generation 0.
+    pub fn new(n: usize) -> Self {
+        Fleet { members: vec![MemberRecord::default(); n] }
+    }
+
+    /// Rebuild from records (re-shard hand-off).
+    pub fn from_records(members: Vec<MemberRecord>) -> Self {
+        Fleet { members }
+    }
+
+    pub fn n(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn state(&self, i: usize) -> Membership {
+        self.members[i].state
+    }
+
+    pub fn generation(&self, i: usize) -> u32 {
+        self.members[i].generation
+    }
+
+    pub fn record(&self, i: usize) -> &MemberRecord {
+        &self.members[i]
+    }
+
+    /// Per-client states, in id order (the scheduler's view).
+    pub fn states(&self) -> Vec<Membership> {
+        self.members.iter().map(|m| m.state).collect()
+    }
+
+    /// Clients not written off (Active, Suspect, or Rejoining).
+    pub fn n_live(&self) -> usize {
+        self.members.iter().filter(|m| m.state.is_live()).count()
+    }
+
+    /// Drain the records (re-shard hand-off), leaving an empty fleet.
+    pub fn take_records(&mut self) -> Vec<MemberRecord> {
+        std::mem::take(&mut self.members)
+    }
+
+    /// The client was scheduled this round and failed to deliver:
+    /// Active -> Suspect; Suspect / Rejoining -> Dead.
+    pub fn casualty(&mut self, i: usize) {
+        let m = &mut self.members[i];
+        m.casualties += 1;
+        m.state = match m.state {
+            Membership::Active => Membership::Suspect,
+            _ => Membership::Dead,
+        };
+    }
+
+    /// The client completed a round end to end: any state -> Active.
+    pub fn survived(&mut self, i: usize) {
+        self.members[i].state = Membership::Active;
+    }
+
+    /// A recovered worker was re-admitted: -> Rejoining, generation += 1.
+    pub fn rejoin(&mut self, i: usize) {
+        let m = &mut self.members[i];
+        m.generation += 1;
+        m.state = Membership::Rejoining;
+    }
+
+    /// Fold the transport's reachability report in: an unreachable
+    /// client degrades one step (Active -> Suspect, Suspect / Rejoining
+    /// -> Dead); a reachable one is left as-is (promotion back to Active
+    /// requires *surviving* a round, not merely an open socket).
+    pub fn observe_health(&mut self, health: &[bool]) {
+        assert_eq!(health.len(), self.members.len());
+        for (m, &up) in self.members.iter_mut().zip(health) {
+            if !up {
+                m.state = match m.state {
+                    Membership::Active => Membership::Suspect,
+                    _ => Membership::Dead,
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_active_generation_zero() {
+        let f = Fleet::new(3);
+        assert_eq!(f.n(), 3);
+        assert_eq!(f.n_live(), 3);
+        for i in 0..3 {
+            assert_eq!(f.state(i), Membership::Active);
+            assert_eq!(f.generation(i), 0);
+        }
+    }
+
+    #[test]
+    fn active_casualty_becomes_suspect() {
+        let mut f = Fleet::new(2);
+        f.casualty(0);
+        assert_eq!(f.state(0), Membership::Suspect);
+        assert_eq!(f.record(0).casualties, 1);
+        assert_eq!(f.state(1), Membership::Active, "other clients untouched");
+        assert_eq!(f.n_live(), 2, "a suspect is still live");
+    }
+
+    #[test]
+    fn suspect_casualty_becomes_dead() {
+        let mut f = Fleet::new(1);
+        f.casualty(0);
+        f.casualty(0);
+        assert_eq!(f.state(0), Membership::Dead);
+        assert_eq!(f.record(0).casualties, 2);
+        assert_eq!(f.n_live(), 0);
+    }
+
+    #[test]
+    fn suspect_survival_recovers_to_active() {
+        let mut f = Fleet::new(1);
+        f.casualty(0);
+        f.survived(0);
+        assert_eq!(f.state(0), Membership::Active);
+    }
+
+    #[test]
+    fn rejoin_bumps_generation_and_survival_completes_it() {
+        let mut f = Fleet::new(1);
+        f.casualty(0);
+        f.casualty(0);
+        assert_eq!(f.state(0), Membership::Dead);
+        f.rejoin(0);
+        assert_eq!(f.state(0), Membership::Rejoining);
+        assert_eq!(f.generation(0), 1);
+        f.survived(0);
+        assert_eq!(f.state(0), Membership::Active);
+        assert_eq!(f.generation(0), 1, "survival keeps the generation");
+    }
+
+    #[test]
+    fn rejoining_casualty_goes_straight_to_dead() {
+        let mut f = Fleet::new(1);
+        f.casualty(0);
+        f.casualty(0);
+        f.rejoin(0);
+        f.casualty(0);
+        assert_eq!(f.state(0), Membership::Dead, "a flapping rejoiner is not given slack");
+    }
+
+    #[test]
+    fn unreachable_health_degrades_one_step() {
+        let mut f = Fleet::new(3);
+        f.casualty(1); // suspect
+        f.observe_health(&[false, false, true]);
+        assert_eq!(f.state(0), Membership::Suspect, "active degrades to suspect");
+        assert_eq!(f.state(1), Membership::Dead, "suspect degrades to dead");
+        assert_eq!(f.state(2), Membership::Active, "healthy stays put");
+        // a rejoining client whose stream died again is written off
+        f.rejoin(1);
+        f.observe_health(&[true, false, true]);
+        assert_eq!(f.state(1), Membership::Dead);
+    }
+
+    #[test]
+    fn healthy_report_never_promotes() {
+        let mut f = Fleet::new(1);
+        f.casualty(0);
+        f.observe_health(&[true]);
+        assert_eq!(
+            f.state(0),
+            Membership::Suspect,
+            "an open socket alone does not clear suspicion — surviving a round does"
+        );
+    }
+
+    #[test]
+    fn schedule_tiers_order_live_suspect_dead() {
+        assert_eq!(Membership::Active.schedule_tier(), 0);
+        assert_eq!(Membership::Rejoining.schedule_tier(), 0);
+        assert_eq!(Membership::Suspect.schedule_tier(), 1);
+        assert_eq!(Membership::Dead.schedule_tier(), 2);
+        assert!(Membership::Suspect.is_live() && !Membership::Dead.is_live());
+    }
+
+    #[test]
+    fn records_roundtrip_for_handoff() {
+        let mut f = Fleet::new(2);
+        f.casualty(0);
+        f.rejoin(1);
+        let records = f.take_records();
+        let g = Fleet::from_records(records);
+        assert_eq!(g.state(0), Membership::Suspect);
+        assert_eq!(g.state(1), Membership::Rejoining);
+        assert_eq!(g.generation(1), 1);
+    }
+}

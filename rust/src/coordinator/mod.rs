@@ -21,6 +21,7 @@
 
 pub mod aggregator;
 pub mod engine;
+pub mod fleet;
 pub mod scheduler;
 pub mod selection;
 pub mod server;

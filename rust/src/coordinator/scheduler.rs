@@ -12,6 +12,13 @@
 //! Federated Learning Using AoI" (Javani & Wang): age debt drives who
 //! participates next.
 //!
+//! Policies consume the **live fleet membership**
+//! ([`crate::coordinator::fleet::Membership`], via `ScheduleCtx::fleet`)
+//! instead of a boolean reachability bit: [`AgeDebt`] ranks `Dead`
+//! clients last and penalizes `Suspect` ones (a tier below every live
+//! client), while `Rejoining` clients schedule like `Active` so a
+//! re-admitted worker is promptly probed back into service.
+//!
 //! Policies are pluggable behind [`CohortScheduler`]; all three return
 //! the cohort **sorted ascending** so uploads/requests stay in stable
 //! client order (the determinism the sim/TCP parity tests pin). At
@@ -19,6 +26,7 @@
 //! full-participation runs are bit-for-bit identical to the
 //! pre-scheduler engine.
 
+use crate::coordinator::fleet::Membership;
 use crate::coordinator::server::ParameterServer;
 use crate::util::rng::Rng;
 
@@ -33,7 +41,7 @@ pub enum SchedulerKind {
     UniformRandom,
     /// Age-aware: rank clients by the staleness of their cluster's age
     /// vector (`max_age + mean_age`) plus the rounds since the client
-    /// itself was last polled; oldest first.
+    /// itself was last polled; oldest first, fleet state first.
     AgeDebt,
 }
 
@@ -82,12 +90,12 @@ pub struct ScheduleCtx<'a> {
     pub ps: &'a ParameterServer,
     /// per client: global rounds since it last participated
     pub since_polled: &'a [u32],
-    /// per client: the pool's reachability report
-    /// ([`crate::coordinator::engine::ClientPool::available`]). All-true
-    /// for transports that never observe failures; availability-aware
-    /// policies deprioritize `false` clients (a dead TCP stream would
-    /// burn a cohort slot on a round that cannot complete).
-    pub available: &'a [bool],
+    /// per client: the engine's fleet membership state
+    /// ([`crate::coordinator::fleet::Fleet::states`]). All-Active for a
+    /// healthy fleet; fleet-aware policies rank Dead clients last and
+    /// penalize Suspect ones (a dead stream would burn a cohort slot on
+    /// a round that cannot complete).
+    pub fleet: &'a [Membership],
 }
 
 /// A cohort policy. Must return exactly `ctx.m` distinct client ids in
@@ -97,7 +105,10 @@ pub trait CohortScheduler: Send {
     fn select(&mut self, ctx: &ScheduleCtx) -> Vec<usize>;
 }
 
-/// Sliding-window rotation over client ids.
+/// Sliding-window rotation over client ids. Fleet-blind by design: the
+/// rotation periodically probes even Dead clients, which costs a casualty
+/// slot but gives crashed-and-recovered in-process clients a natural
+/// recovery path without a rejoin signal.
 pub struct RoundRobin {
     cursor: usize,
 }
@@ -150,16 +161,18 @@ impl CohortScheduler for AgeDebt {
     /// no age state the term is zero and the policy degenerates to
     /// longest-unpolled-first.
     ///
-    /// Clients the pool flags unavailable rank strictly below every
-    /// available client regardless of debt — a dead stream's staleness
-    /// otherwise grows without bound and would monopolize cohort slots
-    /// on rounds that cannot complete. They are still *selectable*: when
-    /// fewer than m clients are available the cohort fills with the
-    /// stalest unavailable ones rather than shrinking below m (a driver
-    /// with a reconnect/retry path can use that to probe them; the stock
-    /// server loop currently aborts on a failed round — drop-and-continue
-    /// is the ROADMAP item). With an all-true report the ranking is
-    /// unchanged.
+    /// Fleet state ranks before debt
+    /// ([`Membership::schedule_tier`]): every Active/Rejoining client
+    /// outranks every Suspect one, and every Suspect outranks every
+    /// Dead one, regardless of staleness — a dead stream's unbounded
+    /// staleness can no longer monopolize cohort slots on rounds that
+    /// cannot complete, while a re-admitted (Rejoining) worker is
+    /// scheduled like a live one so its first post-rejoin round promotes
+    /// it back to Active. Suspect and Dead clients are still
+    /// *selectable*: when fewer than m clients are live the cohort fills
+    /// with the stalest degraded ones rather than shrinking below m
+    /// (probing them is how a Suspect recovers). With an all-Active
+    /// fleet the ranking is bit-for-bit the pure age-debt order.
     fn select(&mut self, ctx: &ScheduleCtx) -> Vec<usize> {
         let clusters = ctx.ps.clusters();
         let mut cluster_term: Vec<Option<f64>> = vec![None; clusters.n_clusters()];
@@ -175,8 +188,9 @@ impl CohortScheduler for AgeDebt {
             .collect();
         let mut ids: Vec<usize> = (0..ctx.n).collect();
         ids.sort_by(|&a, &b| {
-            ctx.available[b]
-                .cmp(&ctx.available[a])
+            ctx.fleet[a]
+                .schedule_tier()
+                .cmp(&ctx.fleet[b].schedule_tier())
                 .then(scores[b].partial_cmp(&scores[a]).expect("age scores are finite"))
                 .then(a.cmp(&b))
         });
@@ -205,7 +219,7 @@ mod tests {
         })
     }
 
-    static ALL_UP: [bool; 8] = [true; 8];
+    static ALL_ACTIVE: [Membership; 8] = [Membership::Active; 8];
 
     fn ctx<'a>(ps: &'a ParameterServer, since: &'a [u32], m: usize) -> ScheduleCtx<'a> {
         ScheduleCtx {
@@ -214,7 +228,7 @@ mod tests {
             m,
             ps,
             since_polled: since,
-            available: &ALL_UP[..since.len()],
+            fleet: &ALL_ACTIVE[..since.len()],
         }
     }
 
@@ -284,35 +298,75 @@ mod tests {
         assert_eq!(s.select(&ctx(&server, &since, 2)), vec![2, 3]);
     }
 
+    fn fleet_ctx<'a>(
+        ps: &'a ParameterServer,
+        since: &'a [u32],
+        fleet: &'a [Membership],
+        m: usize,
+    ) -> ScheduleCtx<'a> {
+        ScheduleCtx { round: 0, n: since.len(), m, ps, since_polled: since, fleet }
+    }
+
+    /// State transition: Active -> Suspect. A suspect is penalized below
+    /// every Active client regardless of its (large) debt.
     #[test]
-    fn age_debt_skips_unavailable_clients() {
-        // client 1 has by far the largest poll debt, but its stream is
-        // dead: the cohort must come from the available clients
+    fn age_debt_penalizes_suspect_clients() {
         let server = ps(4);
         let since = [3u32, 99, 1, 9];
-        let avail = [true, false, true, true];
+        let fleet = [
+            Membership::Active,
+            Membership::Suspect, // highest debt, but penalized
+            Membership::Active,
+            Membership::Active,
+        ];
         let mut s = AgeDebt;
-        let c = s.select(&ScheduleCtx {
-            round: 0,
-            n: 4,
-            m: 2,
-            ps: &server,
-            since_polled: &since,
-            available: &avail,
-        });
-        assert_eq!(c, vec![0, 3], "dead client 1 must not take a slot");
-        // with only one client up, the cohort falls back to filling from
-        // the stalest unavailable clients rather than shrinking below m
-        let avail = [false, false, true, false];
-        let c = s.select(&ScheduleCtx {
-            round: 0,
-            n: 4,
-            m: 2,
-            ps: &server,
-            since_polled: &since,
-            available: &avail,
-        });
-        assert_eq!(c, vec![1, 2], "available client first, then the stalest dead one");
+        let c = s.select(&fleet_ctx(&server, &since, &fleet, 2));
+        assert_eq!(c, vec![0, 3], "suspect client 1 must not outrank active clients");
+        // ...but a suspect still fills the cohort before any Dead client
+        let c = s.select(&fleet_ctx(&server, &since, &fleet, 4));
+        assert_eq!(c, vec![0, 1, 2, 3]);
+    }
+
+    /// State transition: Suspect -> Dead. Dead ranks below Suspect,
+    /// which ranks below Active.
+    #[test]
+    fn age_debt_ranks_dead_last() {
+        let server = ps(4);
+        let since = [3u32, 99, 1, 99];
+        let fleet = [
+            Membership::Active,
+            Membership::Dead, // highest debt, ranked last
+            Membership::Active,
+            Membership::Suspect,
+        ];
+        let mut s = AgeDebt;
+        assert_eq!(s.select(&fleet_ctx(&server, &since, &fleet, 2)), vec![0, 2]);
+        assert_eq!(
+            s.select(&fleet_ctx(&server, &since, &fleet, 3)),
+            vec![0, 2, 3],
+            "the suspect fills before the dead client"
+        );
+        // with only one Active client, the cohort falls back to filling
+        // from suspect then dead rather than shrinking below m
+        let fleet = [Membership::Dead, Membership::Dead, Membership::Active, Membership::Dead];
+        let c = s.select(&fleet_ctx(&server, &since, &fleet, 2));
+        assert_eq!(c, vec![1, 2], "active first, then the stalest dead one");
+    }
+
+    /// State transition: Dead -> Rejoining. A re-admitted client
+    /// schedules like an Active one so its first round promotes it.
+    #[test]
+    fn age_debt_schedules_rejoining_like_active() {
+        let server = ps(3);
+        let since = [0u32, 50, 1];
+        let fleet = [Membership::Active, Membership::Rejoining, Membership::Suspect];
+        let mut s = AgeDebt;
+        assert_eq!(
+            s.select(&fleet_ctx(&server, &since, &fleet, 1)),
+            vec![1],
+            "rejoining client with the highest debt wins a live-tier slot"
+        );
+        assert_eq!(s.select(&fleet_ctx(&server, &since, &fleet, 2)), vec![0, 1]);
     }
 
     #[test]

@@ -4,8 +4,9 @@
 
 use crate::age::FrequencyVector;
 use crate::clustering::{
-    connectivity_matrix, dbscan, distance_matrix, ClusterManager, DbscanParams, MergeRule,
+    connectivity_matrix, recluster_labels, ClusterManager, DbscanParams, MergeRule,
 };
+use crate::coordinator::engine::CohortMap;
 use crate::coordinator::selection::{select_disjoint, select_oldest_k};
 use crate::coordinator::strategies::StrategyKind;
 
@@ -31,13 +32,34 @@ pub struct ParameterServer {
     round: usize,
     /// reclustering events log: (round, n_clusters)
     pub recluster_log: Vec<(usize, usize)>,
+    /// reused client-id -> cohort-position map (stamp-versioned, O(m)
+    /// per selection instead of an O(n) rebuild)
+    cohort_map: CohortMap,
 }
 
 impl ParameterServer {
     pub fn new(cfg: PsConfig) -> Self {
         let clusters = ClusterManager::new(cfg.n_clients, cfg.d, cfg.merge_rule);
         let freqs = (0..cfg.n_clients).map(|_| FrequencyVector::new()).collect();
-        ParameterServer { cfg, clusters, freqs, round: 0, recluster_log: Vec::new() }
+        ParameterServer {
+            cfg,
+            clusters,
+            freqs,
+            round: 0,
+            recluster_log: Vec::new(),
+            cohort_map: CohortMap::new(),
+        }
+    }
+
+    /// Replace this PS's client set (dynamic re-sharding): `clusters` is
+    /// the new cluster state over the new local id space and `freqs` the
+    /// per-client frequency vectors in the same order. The round counter
+    /// and recluster log are preserved.
+    pub fn install(&mut self, clusters: ClusterManager, freqs: Vec<FrequencyVector>) {
+        assert_eq!(clusters.n_clients(), freqs.len());
+        self.cfg.n_clients = freqs.len();
+        self.clusters = clusters;
+        self.freqs = freqs;
     }
 
     pub fn round(&self) -> usize {
@@ -55,7 +77,7 @@ impl ParameterServer {
     /// Algorithm 2, PS side: map each client's top-r report to the k
     /// indices the PS requests. Only meaningful for the rAge-k kinds.
     /// Reports are magnitude-ordered index lists, one per client.
-    pub fn select_requests(&self, reports: &[Vec<u32>]) -> Vec<Vec<u32>> {
+    pub fn select_requests(&mut self, reports: &[Vec<u32>]) -> Vec<Vec<u32>> {
         let cohort: Vec<usize> = (0..self.cfg.n_clients).collect();
         self.select_requests_cohort(&cohort, reports)
     }
@@ -64,17 +86,19 @@ impl ParameterServer {
     /// `reports[p]` is the report of client `cohort[p]` and the returned
     /// requests are aligned the same way. Inside a cluster only the
     /// *participating* members coordinate disjointly this round — an
-    /// absent sibling uploads nothing, so there is nothing to be disjoint
-    /// from. With the full cohort this is exactly the old behavior.
+    /// absent sibling (off-cohort or a mid-round casualty) uploads
+    /// nothing, so there is nothing to be disjoint from. With the full
+    /// cohort this is exactly the old behavior.
     pub fn select_requests_cohort(
-        &self,
+        &mut self,
         cohort: &[usize],
         reports: &[Vec<u32>],
     ) -> Vec<Vec<u32>> {
         assert_eq!(cohort.len(), reports.len());
         assert!(self.cfg.strategy.needs_report());
-        // client id -> cohort position (MAX = off-cohort)
-        let pos = crate::coordinator::engine::cohort_positions(self.cfg.n_clients, cohort);
+        // client id -> cohort position (stamp-reused across rounds)
+        self.cohort_map.set(self.cfg.n_clients, cohort);
+        let pos = &self.cohort_map;
         let disjoint = self.cfg.strategy == StrategyKind::RageK;
         let mut out: Vec<Vec<u32>> = vec![Vec::new(); cohort.len()];
         for cluster in 0..self.clusters.n_clusters() {
@@ -83,7 +107,7 @@ impl ParameterServer {
                 .members_of(cluster)
                 .iter()
                 .copied()
-                .filter(|&m| pos[m] != usize::MAX)
+                .filter(|&m| pos.slot(m) != usize::MAX)
                 .collect();
             if members.is_empty() {
                 continue; // cluster sits this round; its ages keep growing
@@ -91,14 +115,14 @@ impl ParameterServer {
             let age = self.clusters.age_of_cluster(cluster);
             if disjoint && members.len() > 1 {
                 let member_reports: Vec<&[u32]> =
-                    members.iter().map(|&m| reports[pos[m]].as_slice()).collect();
+                    members.iter().map(|&m| reports[pos.slot(m)].as_slice()).collect();
                 let sels = select_disjoint(age, &member_reports, self.cfg.k);
                 for (m, sel) in members.iter().zip(sels) {
-                    out[pos[*m]] = sel;
+                    out[pos.slot(*m)] = sel;
                 }
             } else {
                 for &m in &members {
-                    out[pos[m]] = select_oldest_k(age, &reports[pos[m]], self.cfg.k);
+                    out[pos.slot(m)] = select_oldest_k(age, &reports[pos.slot(m)], self.cfg.k);
                 }
             }
         }
@@ -153,9 +177,7 @@ impl ParameterServer {
     /// Unconditional clustering pass (used by `maybe_recluster` and the
     /// clustering examples/benches).
     pub fn force_recluster(&mut self) -> usize {
-        let conn = self.connectivity();
-        let dist = distance_matrix(&conn);
-        let labels = dbscan(&dist, self.cfg.dbscan);
+        let labels = recluster_labels(&self.freqs, self.cfg.dbscan);
         let ev = self.clusters.recluster(&labels);
         self.recluster_log.push((self.round, ev.n_clusters));
         crate::debug!(
@@ -191,7 +213,7 @@ mod tests {
 
     #[test]
     fn requests_come_from_reports() {
-        let server = ps(2, 100, 2, StrategyKind::RageK, 10);
+        let mut server = ps(2, 100, 2, StrategyKind::RageK, 10);
         let reports = vec![vec![5u32, 7, 9, 11], vec![20u32, 22, 24, 26]];
         let req = server.select_requests(&reports);
         assert_eq!(req[0].len(), 2);
@@ -201,7 +223,7 @@ mod tests {
 
     #[test]
     fn fresh_ages_select_top_magnitude() {
-        let server = ps(1, 50, 3, StrategyKind::RageK, 10);
+        let mut server = ps(1, 50, 3, StrategyKind::RageK, 10);
         let req = server.select_requests(&[vec![9, 1, 5, 30, 2]]);
         assert_eq!(req[0], vec![9, 1, 5]); // all ages 0 -> rank order
     }

@@ -13,34 +13,50 @@
 //!    same pattern as the in-process pool's client lanes),
 //! 3. merges the shard [`Aggregate`]s and applies **one** server update
 //!    ([`merge_and_apply`], the exact code path the flat engine runs),
-//! 4. lets each shard commit its own age/frequency bookkeeping and
-//!    M-periodic reclustering.
+//! 4. lets each shard commit its own age/frequency bookkeeping, then
+//!    runs the M-periodic DBSCAN **fleet-wide at the root** and, at that
+//!    recluster boundary, **re-partitions the fleet** with
+//!    [`ClusterManager::shard_slices`] — client state and transport
+//!    streams are handed off between shard pools through the [`Reshard`]
+//!    trait, so the assignment tracks the evolving clustering instead of
+//!    staying the static contiguous split (DESIGN.md §8).
+//!
+//! Rounds are **partial** end to end: each shard's collect phase returns
+//! a [`PartialRound`] (survivors + casualties), the root applies the
+//! fleet-wide survivor aggregate, and a shard whose entire cohort
+//! dropped simply contributes nothing that round.
 //!
 //! Age semantics survive sharding exactly: each shard's per-cluster
 //! [`AgeVector`]s evolve under eq. (2) locally, and the root can combine
 //! them at any time with [`AgeVector::merge_min`]/[`merge_max`] — the
 //! lazy representation rebases epochs on merge, so the root's fleet-wide
 //! staleness view equals the dense oracle bit-for-bit
-//! (`rust/tests/parity.rs`, `rust/tests/properties.rs`).
+//! (`rust/tests/parity.rs`, `rust/tests/properties.rs`) — including
+//! across a re-shard hand-off, where cluster age vectors move (or, when
+//! there are fewer clusters than shards, are split with cloned vectors)
+//! between shard managers without being rewritten.
 //!
 //! [`Topology::Flat`] and `Sharded { shards: 1 }` are **bit-for-bit
 //! identical**: shard 0 keeps the experiment seed, the slice is the
 //! identity, the root applies the same aggregate with the same scale to
-//! the same server-optimizer state, and the per-shard wire accounting
-//! rolls up to the flat numbers (pinned in `rust/tests/parity.rs`).
+//! the same server-optimizer state, root-level reclustering over one
+//! shard is exactly the flat PS's recluster, and the per-shard wire
+//! accounting rolls up to the flat numbers (pinned in
+//! `rust/tests/parity.rs`).
 //!
 //! [`AgeVector`]: crate::age::AgeVector
 //! [`AgeVector::merge_min`]: crate::age::AgeVector::merge_min
 //! [`merge_max`]: crate::age::AgeVector::merge_max
 
-use crate::age::AgeVector;
+use crate::age::{AgeVector, FrequencyVector};
 use crate::backend::{Backend, GlobalState};
-use crate::clustering::MergeRule;
+use crate::clustering::{recluster_labels, ClusterManager, MergeRule};
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregator::Aggregate;
 use crate::coordinator::engine::{
-    merge_and_apply, ClientPool, RoundEngine, RoundOutcome, ShardRound, UPLOADED_LOG_CAP,
+    merge_and_apply, ClientPool, PartialRound, RoundEngine, RoundOutcome, UPLOADED_LOG_CAP,
 };
+use crate::coordinator::fleet::MemberRecord;
 use crate::fl::metrics::CommStats;
 use crate::util::timer::Profile;
 use anyhow::{ensure, Result};
@@ -101,11 +117,14 @@ impl Topology {
     }
 }
 
-/// The static client -> shard assignment: contiguous balanced slices of
-/// `0..n`, which is exactly [`crate::clustering::ClusterManager::shard_slices`] over the
+/// The **initial** client -> shard assignment: contiguous balanced slices
+/// of `0..n`, which is exactly [`ClusterManager::shard_slices`] over the
 /// initial all-singleton clustering (pinned by a test). Both the root PS
 /// and every remote worker compute this independently from (n, shards),
-/// so no assignment ever crosses the wire.
+/// so no assignment ever crosses the wire at join time; once dynamic
+/// re-sharding moves clients, the authoritative assignment lives in
+/// [`ShardedEngine::slices`] (the workers never need it — their streams
+/// are handed between shard pools PS-side).
 pub fn client_shards(n: usize, shards: usize) -> Vec<Vec<usize>> {
     assert!(shards >= 1 && shards <= n, "need 1 <= shards ({shards}) <= n ({n})");
     let base = n / shards;
@@ -120,8 +139,8 @@ pub fn client_shards(n: usize, shards: usize) -> Vec<Vec<usize>> {
     out
 }
 
-/// Map a global client id to its `(shard, local_id)` under
-/// [`client_shards`].
+/// Map a global client id to its `(shard, local_id)` under the initial
+/// assignment of [`client_shards`] (join-time only; see its docs).
 pub fn locate(n: usize, shards: usize, global_id: usize) -> (usize, usize) {
     assert!(global_id < n);
     let base = n / shards;
@@ -135,16 +154,70 @@ pub fn locate(n: usize, shards: usize, global_id: usize) -> (usize, usize) {
 }
 
 /// Shard-local experiment config: the slice's client count, the flat
-/// topology (a shard engine never nests), and a per-shard seed offset so
-/// the stochastic schedulers of different shards draw independent
-/// streams. Shard 0 keeps the experiment seed unchanged — the
-/// `Sharded { shards: 1 } == Flat` pin depends on it.
+/// topology (a shard engine never nests), a per-shard seed offset so the
+/// stochastic schedulers of different shards draw independent streams,
+/// and **no shard-local reclustering** — the root runs the M-periodic
+/// DBSCAN fleet-wide (see the module docs). Shard 0 keeps the experiment
+/// seed unchanged — the `Sharded { shards: 1 } == Flat` pin depends on
+/// it.
 fn shard_config(cfg: &ExperimentConfig, shard: usize, n_local: usize) -> ExperimentConfig {
     let mut c = cfg.clone();
     c.n_clients = n_local;
     c.topology = Topology::Flat;
+    c.recluster_every = 0; // the root reclusters fleet-wide
     c.seed = cfg.seed ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     c
+}
+
+/// Pool-side client hand-off for dynamic re-sharding: drain every
+/// client's transferable state (simulated client + memory, or a worker's
+/// TCP stream) in local-slot order, and repopulate in the new order. The
+/// [`ShardedEngine`] drives the transfer — pools never see global ids.
+pub trait Reshard {
+    type Carry: Send;
+
+    /// Drain every client's state, in current local-slot order. The pool
+    /// is unusable until [`Self::install_parts`] repopulates it.
+    fn take_parts(&mut self) -> Vec<Self::Carry>;
+
+    /// Repopulate from parts in (new) local-slot order; the pool's
+    /// client count becomes `parts.len()`.
+    fn install_parts(&mut self, parts: Vec<Self::Carry>);
+}
+
+/// Restrict a fleet-wide cluster manager to one shard's slice: members
+/// map to their slice positions (the shard's local ids), clusters keep
+/// their age vectors, and a cluster straddling the slice boundary (only
+/// possible when re-sharding was skipped for want of clusters) is split
+/// with a **cloned** vector per part — merging the parts back under
+/// `min`/`max` reproduces the original vector exactly, so the root's
+/// merged-age view is unaffected (property-pinned in
+/// `rust/tests/properties.rs`).
+pub fn split_cluster_manager(
+    fleet: &ClusterManager,
+    slice: &[usize],
+    d: usize,
+    rule: MergeRule,
+) -> ClusterManager {
+    debug_assert!(slice.windows(2).all(|w| w[0] < w[1]));
+    let mut parts: Vec<(Vec<usize>, AgeVector)> = Vec::new();
+    for c in 0..fleet.n_clusters() {
+        let members: Vec<usize> = fleet
+            .members_of(c)
+            .iter()
+            .filter_map(|&g| slice.binary_search(&g).ok())
+            .collect();
+        if members.is_empty() {
+            continue;
+        }
+        parts.push((members, fleet.age_of_cluster(c).clone()));
+    }
+    // fleet clusters are ordered by smallest *global* member; local ids
+    // must be re-ordered by smallest local member (slices need not be
+    // contiguous after a re-shard)
+    parts.sort_by_key(|(members, _)| members[0]);
+    let (groups, ages): (Vec<_>, Vec<_>) = parts.into_iter().unzip();
+    ClusterManager::from_parts(slice.len(), d, rule, groups, ages)
 }
 
 /// The two-level round driver: N shard [`RoundEngine`]s + the root
@@ -153,7 +226,9 @@ fn shard_config(cfg: &ExperimentConfig, shard: usize, n_local: usize) -> Experim
 pub struct ShardedEngine {
     cfg: ExperimentConfig,
     engines: Vec<RoundEngine>,
-    /// shard -> sorted global client ids (disjoint cover of `0..n`)
+    /// shard -> sorted global client ids (disjoint cover of `0..n`);
+    /// starts as the contiguous [`client_shards`] split and tracks the
+    /// clustering across re-shard events
     slices: Vec<Vec<usize>>,
     global: GlobalState,
     root_merge: MergeRule,
@@ -162,6 +237,11 @@ pub struct ShardedEngine {
     /// the last [`UPLOADED_LOG_CAP`] rounds, like the flat engine's)
     uploaded_log: VecDeque<Vec<Vec<u32>>>,
     rounds_done: usize,
+    /// root-level reclustering events: (round, n_clusters), mirroring
+    /// the flat PS's log
+    pub recluster_log: Vec<(usize, usize)>,
+    /// re-shard events: (round, clients that changed shard)
+    pub reshard_log: Vec<(usize, usize)>,
 }
 
 impl ShardedEngine {
@@ -192,6 +272,8 @@ impl ShardedEngine {
             profile: Profile::new(),
             uploaded_log: VecDeque::new(),
             rounds_done: 0,
+            recluster_log: Vec::new(),
+            reshard_log: Vec::new(),
         })
     }
 
@@ -204,7 +286,7 @@ impl ShardedEngine {
         &self.engines
     }
 
-    /// shard -> sorted global client ids.
+    /// shard -> sorted global client ids (current assignment).
     pub fn slices(&self) -> &[Vec<usize>] {
         &self.slices
     }
@@ -239,7 +321,9 @@ impl ShardedEngine {
         total
     }
 
-    /// Total cluster count across shards (clusters never span shards).
+    /// Total cluster count across shards (a cluster spans shards only
+    /// when a re-shard was skipped for want of clusters; each part then
+    /// counts once per shard).
     pub fn n_clusters(&self) -> usize {
         self.engines.iter().map(|e| e.ps().clusters().n_clusters()).sum()
     }
@@ -287,11 +371,16 @@ impl ShardedEngine {
     /// running **in parallel on scoped threads** (`P: Send`; in-process
     /// pools built via [`crate::fl::pool::SendPool`] qualify, as does any
     /// `Send` transport). Results are merged in shard order, so the round
-    /// is deterministic regardless of thread interleaving.
-    pub fn run_round<P: ClientPool + Send>(&mut self, pools: &mut [P]) -> Result<RoundOutcome> {
+    /// is deterministic regardless of thread interleaving. At recluster
+    /// boundaries the root then reclusters fleet-wide and re-shards (see
+    /// the module docs).
+    pub fn run_round<P>(&mut self, pools: &mut [P]) -> Result<RoundOutcome>
+    where
+        P: ClientPool + Reshard + Send,
+    {
         self.check_pools(pools)?;
         let params = &self.global.params;
-        let srs: Vec<ShardRound> = if self.engines.len() == 1 {
+        let srs: Vec<PartialRound> = if self.engines.len() == 1 {
             let e = &mut self.engines[0];
             e.set_global(params);
             vec![e.collect_round(&mut pools[0])?]
@@ -303,7 +392,7 @@ impl ShardedEngine {
                         .iter_mut()
                         .zip(pools.iter_mut())
                         .map(|(e, p)| {
-                            s.spawn(move || -> Result<ShardRound> {
+                            s.spawn(move || -> Result<PartialRound> {
                                 e.set_global(params);
                                 e.collect_round(p)
                             })
@@ -317,7 +406,9 @@ impl ShardedEngine {
             })?
         };
         let (pool0, _) = pools.split_first_mut().expect("checked non-empty");
-        self.apply_and_finish(srs, pool0.backend())
+        let mut out = self.apply_and_finish(srs, pool0.backend())?;
+        self.maybe_recluster_and_reshard(pools, &mut out)?;
+        Ok(out)
     }
 
     /// [`Self::run_round`] with the shard collect phases driven serially
@@ -325,10 +416,13 @@ impl ShardedEngine {
     /// TCP pool whose PS backend is a single PJRT runtime). Produces
     /// results identical to the parallel driver: shards are independent
     /// and merged in shard order either way.
-    pub fn run_round_serial<P: ClientPool>(&mut self, pools: &mut [P]) -> Result<RoundOutcome> {
+    pub fn run_round_serial<P>(&mut self, pools: &mut [P]) -> Result<RoundOutcome>
+    where
+        P: ClientPool + Reshard,
+    {
         self.check_pools(pools)?;
         let params = &self.global.params;
-        let srs: Vec<ShardRound> = self
+        let srs: Vec<PartialRound> = self
             .engines
             .iter_mut()
             .zip(pools.iter_mut())
@@ -338,7 +432,9 @@ impl ShardedEngine {
             })
             .collect::<Result<Vec<_>>>()?;
         let (pool0, _) = pools.split_first_mut().expect("checked non-empty");
-        self.apply_and_finish(srs, pool0.backend())
+        let mut out = self.apply_and_finish(srs, pool0.backend())?;
+        self.maybe_recluster_and_reshard(pools, &mut out)?;
+        Ok(out)
     }
 
     fn check_pools<P: ClientPool>(&self, pools: &[P]) -> Result<()> {
@@ -361,21 +457,24 @@ impl ShardedEngine {
 
     /// The root half of a round: merge the shard aggregates (shard order,
     /// so `Sharded { shards: 1 }` pushes the identical update sequence
-    /// the flat engine does), apply one server update to the root model,
-    /// then let every shard commit its bookkeeping.
+    /// the flat engine does), apply one server update to the root model
+    /// (skipped when every scheduled client fleet-wide dropped), then let
+    /// every shard commit its bookkeeping.
     fn apply_and_finish(
         &mut self,
-        srs: Vec<ShardRound>,
+        srs: Vec<PartialRound>,
         backend: &mut dyn Backend,
     ) -> Result<RoundOutcome> {
         let n = self.cfg.n_clients;
-        let m_total: usize = srs.iter().map(|sr| sr.cohort.len()).sum();
+        let m_total: usize = srs.iter().map(|sr| sr.survivors.len()).sum();
         let loss_sum: f64 = srs.iter().map(|sr| sr.loss_sum).sum();
-        let mean_loss = (loss_sum / m_total as f64) as f32;
+        let mean_loss =
+            if m_total == 0 { f32::NAN } else { (loss_sum / m_total as f64) as f32 };
 
         let mut agg = Aggregate::new();
         let mut uploaded_global: Vec<Vec<u32>> = vec![Vec::new(); n];
         let mut cohort_global: Vec<usize> = Vec::with_capacity(m_total);
+        let mut casualties_global: Vec<usize> = Vec::new();
         let mut finish = Vec::with_capacity(srs.len());
         for (sr, slice) in srs.into_iter().zip(&self.slices) {
             for u in sr.updates {
@@ -386,29 +485,32 @@ impl ShardedEngine {
                     uploaded_global[slice[local]] = up.clone();
                 }
             }
-            cohort_global.extend(sr.cohort.iter().map(|&c| slice[c]));
-            finish.push((sr.uploaded, sr.cohort));
+            cohort_global.extend(sr.survivors.iter().map(|&c| slice[c]));
+            casualties_global.extend(sr.casualties.iter().map(|&c| slice[c]));
+            finish.push((sr.uploaded, sr.survivors));
         }
-        // slices are contiguous ascending, so shard-order concatenation
-        // is already sorted; keep the sort as a cheap invariant guard for
-        // future non-contiguous (cluster-aligned) assignments
+        // slices are sorted but need not be contiguous after a re-shard,
+        // so shard-order concatenation must be re-sorted
         cohort_global.sort_unstable();
+        casualties_global.sort_unstable();
 
-        merge_and_apply(
-            &self.cfg,
-            backend,
-            &mut self.global,
-            &agg,
-            m_total,
-            n,
-            &self.profile,
-        )?;
+        if m_total > 0 {
+            merge_and_apply(
+                &self.cfg,
+                backend,
+                &mut self.global,
+                &agg,
+                m_total,
+                n,
+                &self.profile,
+            )?;
+        }
 
-        let mut reclustered_any = false;
-        for (engine, (uploaded, cohort)) in self.engines.iter_mut().zip(finish) {
-            if engine.finish_round(uploaded, &cohort).is_some() {
-                reclustered_any = true;
-            }
+        for (engine, (uploaded, survivors)) in self.engines.iter_mut().zip(finish) {
+            // shard-local reclustering is disabled (shard_config); the
+            // root reclusters fleet-wide after this returns
+            let reclustered = engine.finish_round(uploaded, &survivors);
+            debug_assert!(reclustered.is_none());
         }
         self.uploaded_log.push_back(uploaded_global);
         if self.uploaded_log.len() > UPLOADED_LOG_CAP {
@@ -418,10 +520,162 @@ impl ShardedEngine {
 
         Ok(RoundOutcome {
             mean_loss,
-            reclustered: reclustered_any.then(|| self.n_clusters()),
+            reclustered: None,
             n_clusters: self.n_clusters(),
             cohort: cohort_global,
+            casualties: casualties_global,
         })
+    }
+
+    /// Is the root's M-periodic recluster due this round? (Mirrors the
+    /// flat `ParameterServer::maybe_recluster` gating.)
+    fn recluster_due(&self) -> bool {
+        self.cfg.strategy.uses_age()
+            && self.cfg.recluster_every > 0
+            && self.rounds_done > 0
+            && self.rounds_done % self.cfg.recluster_every == 0
+    }
+
+    fn maybe_recluster_and_reshard<P>(
+        &mut self,
+        pools: &mut [P],
+        out: &mut RoundOutcome,
+    ) -> Result<()>
+    where
+        P: ClientPool + Reshard,
+    {
+        if !self.recluster_due() {
+            return Ok(());
+        }
+        let n_clusters = self.recluster_and_reshard(pools)?;
+        out.reclustered = Some(n_clusters);
+        out.n_clusters = self.n_clusters();
+        Ok(())
+    }
+
+    /// Reconstitute the fleet-wide cluster state from the shard managers
+    /// (global ids, cloned age vectors), ordered by smallest member as
+    /// [`ClusterManager`] requires.
+    fn gather_fleet_clusters(&self) -> ClusterManager {
+        let mut parts: Vec<(Vec<usize>, AgeVector)> = Vec::new();
+        for (engine, slice) in self.engines.iter().zip(&self.slices) {
+            let clusters = engine.ps().clusters();
+            for c in 0..clusters.n_clusters() {
+                let members: Vec<usize> =
+                    clusters.members_of(c).iter().map(|&l| slice[l]).collect();
+                parts.push((members, clusters.age_of_cluster(c).clone()));
+            }
+        }
+        parts.sort_by_key(|(members, _)| members[0]);
+        let (groups, ages): (Vec<_>, Vec<_>) = parts.into_iter().unzip();
+        ClusterManager::from_parts(
+            self.cfg.n_clients,
+            self.cfg.d(),
+            self.cfg.merge_rule,
+            groups,
+            ages,
+        )
+    }
+
+    /// The root's recluster boundary: fleet-wide DBSCAN over the
+    /// gathered frequency vectors (exactly the flat PS's connectivity ->
+    /// distance -> DBSCAN -> carry-over sequence, so `Sharded(1)` stays
+    /// bit-for-bit flat), then — when the clustering supports it and
+    /// `cfg.reshard` is on — a re-partition via
+    /// [`ClusterManager::shard_slices`] with client state and pool
+    /// streams handed off to their new shards. Returns the fleet-wide
+    /// cluster count.
+    fn recluster_and_reshard<P>(&mut self, pools: &mut [P]) -> Result<usize>
+    where
+        P: ClientPool + Reshard,
+    {
+        let n = self.cfg.n_clients;
+        let d = self.cfg.d();
+        let nshards = self.engines.len();
+
+        // ---- gather the fleet-wide membership view (global id order)
+        let mut parts: Vec<Option<(FrequencyVector, u32, MemberRecord)>> =
+            (0..n).map(|_| None).collect();
+        for (engine, slice) in self.engines.iter().zip(&self.slices) {
+            for (local, part) in engine.membership_parts().into_iter().enumerate() {
+                parts[slice[local]] = Some(part);
+            }
+        }
+        // borrow the gathered frequency vectors for the DBSCAN without a
+        // second deep clone: take them out of `parts` for the pipeline
+        // call and hand them straight back
+        let freqs: Vec<FrequencyVector> = parts
+            .iter_mut()
+            .map(|p| std::mem::take(&mut p.as_mut().expect("slices cover 0..n").0))
+            .collect();
+
+        // ---- fleet-wide clustering: the exact pipeline the flat PS
+        // runs (shared definition — see `clustering::recluster_labels`)
+        let labels = recluster_labels(&freqs, self.cfg.dbscan);
+        for (p, f) in parts.iter_mut().zip(freqs) {
+            p.as_mut().expect("slices cover 0..n").0 = f;
+        }
+        let mut fleet_mgr = self.gather_fleet_clusters();
+        let ev = fleet_mgr.recluster(&labels);
+        let n_clusters = ev.n_clusters;
+        self.recluster_log.push((self.rounds_done, n_clusters));
+        crate::debug!(
+            "root recluster @round {}: {} clusters ({} merges, {} resets)",
+            self.rounds_done,
+            n_clusters,
+            ev.merges,
+            ev.resets
+        );
+
+        // ---- re-partition: cluster-aligned balanced slices. Skipped
+        // when the clustering has fewer clusters than shards (slices
+        // keep their shape; straddling clusters are split per shard with
+        // cloned age vectors) or when the knob is off.
+        let new_slices = if self.cfg.reshard && n_clusters >= nshards {
+            fleet_mgr.shard_slices(nshards)
+        } else {
+            self.slices.clone()
+        };
+
+        // ---- install the new per-shard cluster/membership state
+        for (s, slice) in new_slices.iter().enumerate() {
+            let manager = split_cluster_manager(&fleet_mgr, slice, d, self.cfg.merge_rule);
+            let shard_parts: Vec<(FrequencyVector, u32, MemberRecord)> = slice
+                .iter()
+                .map(|&g| parts[g].take().expect("slices are disjoint"))
+                .collect();
+            self.engines[s].install_membership(manager, shard_parts);
+        }
+
+        // ---- hand pool-side client state / worker streams to their new
+        // shards (skipped when nothing moved)
+        if new_slices != self.slices {
+            let moved: usize = new_slices
+                .iter()
+                .zip(&self.slices)
+                .map(|(new, old)| new.iter().filter(|&g| !old.contains(g)).count())
+                .sum();
+            crate::info!(
+                "reshard @round {}: {moved} clients change shard (slices {new_slices:?})",
+                self.rounds_done
+            );
+            self.reshard_log.push((self.rounds_done, moved));
+            let mut carries: Vec<Option<P::Carry>> = (0..n).map(|_| None).collect();
+            for (pool, slice) in pools.iter_mut().zip(&self.slices) {
+                for (local, carry) in pool.take_parts().into_iter().enumerate() {
+                    carries[slice[local]] = Some(carry);
+                }
+            }
+            for (pool, slice) in pools.iter_mut().zip(&new_slices) {
+                let pool_parts: Vec<P::Carry> = slice
+                    .iter()
+                    .map(|&g| carries[g].take().expect("slices cover 0..n"))
+                    .collect();
+                pool.install_parts(pool_parts);
+            }
+            self.slices = new_slices;
+        }
+        Ok(n_clusters)
     }
 }
 
@@ -476,5 +730,33 @@ mod tests {
         }
         assert_eq!(Topology::Flat.n_shards(), 1);
         assert_eq!(Topology::from_shards(1, MergeRule::Min).n_shards(), 1);
+    }
+
+    /// Splitting a fleet manager across (non-contiguous) slices keeps
+    /// cluster/age state intact: clusters map to local ids, straddling
+    /// clusters clone their vector, and the merged view is unchanged.
+    #[test]
+    fn split_cluster_manager_preserves_ages_and_membership() {
+        let d = 8;
+        let mut fleet = ClusterManager::new(5, d, MergeRule::Min);
+        fleet.recluster(&[0, 1, 0, 2, 2]); // clusters {0,2}, {1}, {3,4}
+        let c02 = fleet.cluster_of(0);
+        fleet.update_ages(c02, &[3]);
+        fleet.update_ages(fleet.cluster_of(3), &[5]);
+
+        // a non-contiguous split that respects clusters: {0,2} | {1,3,4}
+        let a = split_cluster_manager(&fleet, &[0, 2], d, MergeRule::Min);
+        let b = split_cluster_manager(&fleet, &[1, 3, 4], d, MergeRule::Min);
+        assert_eq!(a.n_clusters(), 1);
+        assert_eq!(a.members_of(0), &[0, 1], "global {{0,2}} -> local slots 0,1");
+        assert_eq!(a.age_of_cluster(0), fleet.age_of_cluster(c02));
+        assert_eq!(b.n_clusters(), 2);
+
+        // a split that cuts cluster {3,4}: both parts carry the vector
+        let c = split_cluster_manager(&fleet, &[0, 2, 3], d, MergeRule::Min);
+        let dm = split_cluster_manager(&fleet, &[1, 4], d, MergeRule::Min);
+        let g34 = fleet.cluster_of(3);
+        assert_eq!(c.age_of_client(2), fleet.age_of_cluster(g34));
+        assert_eq!(dm.age_of_client(1), fleet.age_of_cluster(g34));
     }
 }

@@ -5,7 +5,7 @@
 //! Both sides are thin adapters over the shared protocol code:
 //!
 //! * [`run_server`] — binds, waits for `n_clients` joins (each carrying
-//!   the worker's [`Codec`] as a protocol-version byte; mismatches are
+//!   the protocol version and the worker's [`Codec`]; mismatches are
 //!   rejected at accept time), then drives the **same** [`RoundEngine`]
 //!   the in-process simulator uses, through [`TcpClientPool`] (the
 //!   sockets-backed [`ClientPool`]).
@@ -19,6 +19,17 @@
 //! config + seed (per-round uploaded indices and final global parameters
 //! alike) — pinned by `rust/tests/parity.rs` for the raw **and** the
 //! lossless packed codec.
+//!
+//! **Drop-and-continue** (DESIGN.md §8): a stream that errors or times
+//! out mid-round no longer aborts training — the pool reports that
+//! client `None` (a casualty), flags the stream dead, and the engine
+//! finishes the round with the survivors while the casualty's cluster
+//! ages keep growing per eq. (2). A recovered worker **re-admits**
+//! itself with a [`Msg::Rejoin`] frame (id + generation): between
+//! rounds the PS polls its (now nonblocking) listener, validates the
+//! rejoin, answers with a `Model` frame resyncing the current global
+//! model, and swaps the fresh stream into the dead slot —
+//! [`run_worker_rejoin`] is the worker side.
 //!
 //! Steady-state rounds perform **no per-frame buffer allocations** on
 //! either end: every stream owns a [`FrameBuf`] (encode scratch + recv
@@ -35,21 +46,25 @@
 //! ```sh
 //! ragek serve  --clients 4 --port 7700 --rounds 40 &
 //! for i in 0 1 2 3; do ragek worker --connect 127.0.0.1:7700 --id $i & done
+//! # a crashed worker re-admits itself:
+//! ragek worker --connect 127.0.0.1:7700 --id 2 --rejoin 1
 //! ```
 
 use crate::backend::{make_backend, Backend};
 use crate::config::{ExperimentConfig, Payload};
 use crate::coordinator::engine::{
-    client_train_phase, client_update_phase, cohort_positions, eval_dataset, ClientPool,
-    ClientReport, PhaseCfg, RoundEngine,
+    client_train_phase, client_update_phase, eval_dataset, ClientPool, ClientReport, CohortMap,
+    PhaseCfg, RoundEngine,
 };
+use crate::coordinator::topology::Reshard;
 use crate::data::{load_dataset, partition::partition};
 use crate::fl::client::Client;
 use crate::fl::codec::{Codec, FrameBuf};
 use crate::fl::metrics::CommStats;
 use crate::fl::transport::{
     decode_model_into, encode_model_frame, encode_model_frame_into, recv, recv_frame,
-    recv_payload, send, send_frame, send_report, send_request, Msg, TAG_MODEL,
+    recv_payload, request_frame_bytes, send, send_frame, send_report, send_request, Msg,
+    SIT_FRAME_BYTES, TAG_MODEL,
 };
 use crate::sparse::SparseVec;
 use anyhow::{bail, Context, Result};
@@ -74,15 +89,21 @@ pub struct ServeReport {
     /// broadcast pin: exactly one per round, however many workers
     pub model_encodes: u64,
     /// round-path bytes the PS actually received on its sockets (report +
-    /// update frames) — pinned equal to the engine's `comm.wire_up`
+    /// update frames) — pinned equal to the engine's `comm.wire_up` on
+    /// casualty-free runs
     pub wire_up_observed: u64,
-    /// round-path bytes the PS actually wrote to its sockets (model +
-    /// request + sit frames) — pinned equal to `comm.wire_down`
+    /// round-path bytes the PS wrote (or attempted — a frame is counted
+    /// when its write starts, so a stream dying mid-frame does not skew
+    /// the count) to its sockets — pinned equal to `comm.wire_down`
     pub wire_down_observed: u64,
     /// PS-side [`FrameBuf`] capacity-growth events across all streams —
     /// constant once the first rounds set the high-water mark (the
     /// buffer-reuse steady-state pin)
     pub frame_grows: u64,
+    /// total casualty events (a client dropping mid-round) across the run
+    pub casualties: u64,
+    /// total accepted `Rejoin` re-admissions across the run
+    pub rejoins: u64,
 }
 
 /// One accepted worker stream plus its reused transport buffers.
@@ -90,9 +111,18 @@ struct WorkerConn {
     stream: TcpStream,
     fb: FrameBuf,
     /// a round-path send/recv on this stream failed (timeout, reset, bad
-    /// frame): reported through [`ClientPool::available`] so
-    /// availability-aware scheduling stops spending cohort slots here
+    /// frame): the pool skips it and reports the client unreachable
+    /// through [`ClientPool::health`] until a `Rejoin` replaces the
+    /// stream
     dead: bool,
+}
+
+/// One worker stream's transferable state — what a dynamic re-shard
+/// hands between shard pools (the workers' sockets stay open; only the
+/// PS-side ownership moves).
+pub struct TcpCarry {
+    conn: WorkerConn,
+    last_generation: u32,
 }
 
 /// Sparse frames are remote input: every index must address the model.
@@ -108,7 +138,9 @@ fn check_indices(idx: &[u32], d: usize, what: &str) -> Result<()> {
 
 /// The sockets-backed [`ClientPool`]: one TCP stream per remote worker,
 /// indexed by client id. Owns the PS-side backend (server optimizer
-/// apply + evaluation).
+/// apply + evaluation) and keeps its listener (nonblocking after the
+/// initial joins) so recovered workers can re-admit themselves with a
+/// `Rejoin` frame between rounds.
 ///
 /// Broadcast/collect is **concurrent** — one scoped thread per cohort
 /// stream, so a slow worker overlaps with its peers instead of
@@ -118,9 +150,14 @@ fn check_indices(idx: &[u32], d: usize, what: &str) -> Result<()> {
 /// drop their clones the buffer is re-encoded in place), and the same
 /// bytes are written to every cohort stream. Workers outside the round's
 /// cohort receive a 13-byte [`Msg::Sit`] frame instead of the d-vector,
-/// so downlink scales with the cohort, not with n.
+/// so downlink scales with the cohort, not with n. A stream that fails
+/// is flagged dead and its client reported as a casualty (`None`) — the
+/// round continues with the survivors.
 pub struct TcpClientPool {
     conns: Vec<WorkerConn>,
+    /// the accept listener, nonblocking once every initial join landed —
+    /// polled for `Rejoin` frames between rounds
+    listener: TcpListener,
     backend: Box<dyn Backend>,
     round: u32,
     /// model dimension of the current run (set at the first broadcast;
@@ -128,6 +165,14 @@ pub struct TcpClientPool {
     d: usize,
     /// the wire format every worker negotiated at Join time
     codec: Codec,
+    /// PS-side socket deadline applied to rejoined streams too
+    io_timeout_ms: u64,
+    /// per client: the last admitted `Rejoin` generation (0 = original
+    /// join) — a rejoin must carry a strictly larger one, so a flapping
+    /// worker's stale duplicate connect is refused
+    last_generation: Vec<u32>,
+    /// reused client-id -> cohort-position map
+    cmap: CohortMap,
     /// the reusable broadcast frame (see the struct docs)
     model_frame: Arc<Vec<u8>>,
     /// `Model` frame serializations so far (one per round — pinned by
@@ -135,8 +180,12 @@ pub struct TcpClientPool {
     model_encodes: u64,
     /// round-path bytes received (report/update frames, header included)
     wire_up: u64,
-    /// round-path bytes sent (model/request/sit frames, header included)
+    /// round-path bytes sent — attempted-frame accounting: a frame
+    /// counts when its write starts, so it matches the engine's
+    /// arithmetic mirror even when a stream dies mid-frame
     wire_down: u64,
+    /// accepted rejoins (diagnostics; [`ServeReport::rejoins`])
+    rejoins: u64,
 }
 
 impl TcpClientPool {
@@ -144,7 +193,8 @@ impl TcpClientPool {
     /// workers joined with a matching wire codec. Binding is the caller's
     /// job so tests can bind an ephemeral port *before* any worker spawns
     /// (joins then queue in the accept backlog — no sleeps, no port
-    /// races).
+    /// races). After the last join the listener turns nonblocking and is
+    /// polled for `Rejoin` frames between rounds.
     pub fn accept(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Self> {
         crate::info!(
             "serve: waiting for {} clients on {:?} (codec {})",
@@ -160,11 +210,7 @@ impl TcpClientPool {
             // hung worker fails its stream's read/write instead of wedging
             // the PS collect phase forever — applied before the Join recv
             // so even a connect-and-stall client cannot block accept
-            if cfg.io_timeout_ms > 0 {
-                let dl = Some(std::time::Duration::from_millis(cfg.io_timeout_ms));
-                s.set_read_timeout(dl).context("set_read_timeout")?;
-                s.set_write_timeout(dl).context("set_write_timeout")?;
-            }
+            set_stream_deadline(&s, cfg.io_timeout_ms)?;
             match recv(&mut s, cfg.codec) {
                 Ok(Msg::Join { client_id, codec }) => {
                     let id = client_id as usize;
@@ -197,19 +243,27 @@ impl TcpClientPool {
                 }
             }
         }
+        listener
+            .set_nonblocking(true)
+            .context("switching the join listener to nonblocking rejoin polling")?;
         Ok(TcpClientPool {
             conns: slots
                 .into_iter()
                 .map(|s| WorkerConn { stream: s.unwrap(), fb: FrameBuf::new(), dead: false })
                 .collect(),
+            listener,
             backend: make_backend(cfg)?,
             round: 0,
             d: cfg.d(),
             codec: cfg.codec,
+            io_timeout_ms: cfg.io_timeout_ms,
+            last_generation: vec![0; cfg.n_clients],
+            cmap: CohortMap::new(),
             model_frame: Arc::new(Vec::new()),
             model_encodes: 0,
             wire_up: 0,
             wire_down: 0,
+            rejoins: 0,
         })
     }
 
@@ -228,7 +282,8 @@ impl TcpClientPool {
         self.model_encodes
     }
 
-    /// Round-path bytes actually (received, sent) on the PS sockets.
+    /// Round-path bytes actually (received, attempted-sent) on the PS
+    /// sockets.
     pub fn wire_observed(&self) -> (u64, u64) {
         (self.wire_up, self.wire_down)
     }
@@ -238,15 +293,38 @@ impl TcpClientPool {
         self.conns.iter().map(|wc| wc.fb.grows()).sum()
     }
 
-    /// Tell every worker training is over (dead streams are skipped —
-    /// there is nobody listening).
+    /// Accepted `Rejoin` re-admissions so far.
+    pub fn rejoins(&self) -> u64 {
+        self.rejoins
+    }
+
+    /// Tell every worker training is over (best effort — dead streams
+    /// are skipped, and a stream failing its goodbye is merely marked
+    /// dead), then drain any worker still queued for re-admission so it
+    /// is not left blocking on a resync that will never come.
     pub fn shutdown(&mut self) -> Result<()> {
         let codec = self.codec;
         for wc in self.conns.iter_mut().filter(|wc| !wc.dead) {
-            send_frame(&mut wc.stream, &Msg::Shutdown, codec, &mut wc.fb)?;
+            if send_frame(&mut wc.stream, &Msg::Shutdown, codec, &mut wc.fb).is_err() {
+                wc.dead = true;
+            }
+        }
+        while let Ok((mut s, _)) = self.listener.accept() {
+            let _ = s.set_nonblocking(false);
+            let _ = send(&mut s, &Msg::Shutdown, codec);
         }
         Ok(())
     }
+}
+
+/// Apply the PS-side socket deadline (0 = none).
+fn set_stream_deadline(s: &TcpStream, io_timeout_ms: u64) -> Result<()> {
+    if io_timeout_ms > 0 {
+        let dl = Some(std::time::Duration::from_millis(io_timeout_ms));
+        s.set_read_timeout(dl).context("set_read_timeout")?;
+        s.set_write_timeout(dl).context("set_write_timeout")?;
+    }
+    Ok(())
 }
 
 /// One stream's first round half: write the broadcast frame, collect the
@@ -273,23 +351,23 @@ fn stream_broadcast_collect(
 }
 
 /// One stream's second round half: send the index request, collect the
-/// worker's `Update` (bounds-checked), return it with the (sent,
-/// received) frame sizes.
+/// worker's `Update` (bounds-checked), return it with the received frame
+/// size (the request's size is accounted arithmetically by the caller).
 fn stream_request_collect(
     wc: &mut WorkerConn,
     indices: &[u32],
     codec: Codec,
     round: u32,
     d: usize,
-) -> Result<(SparseVec, usize, usize)> {
-    let down = send_request(&mut wc.stream, codec, &mut wc.fb, round, indices)?;
+) -> Result<(SparseVec, usize)> {
+    send_request(&mut wc.stream, codec, &mut wc.fb, round, indices)?;
     match recv_frame(&mut wc.stream, codec, &mut wc.fb)? {
         Msg::Update { update, round: r, .. } if r == round => {
             // updates scatter-add into the global model: reject
             // out-of-range remote indices here, not as a panic inside
             // aggregation
             check_indices(&update.idx, d, "update")?;
-            Ok((update, down, wc.fb.last_recv_frame_len()))
+            Ok((update, wc.fb.last_recv_frame_len()))
         }
         other => bail!("round {round}: expected Update, got {other:?}"),
     }
@@ -301,43 +379,119 @@ impl ClientPool for TcpClientPool {
     }
 
     /// Streams that errored (timed out, reset, sent a bad frame) report
-    /// as unavailable, so the age-debt scheduler stops spending cohort
-    /// slots on clients whose rounds cannot complete. Consumed by drivers
-    /// that outlive a failed round (the stock `run_server` loop aborts on
-    /// the discovering round; drop-and-continue is the ROADMAP item).
-    fn available(&self) -> Vec<bool> {
+    /// unreachable; the engine's fleet degrades them and the age-debt
+    /// scheduler stops spending cohort slots on clients whose rounds
+    /// cannot complete.
+    fn health(&self) -> Vec<bool> {
         self.conns.iter().map(|wc| !wc.dead).collect()
+    }
+
+    /// Nonblocking accept loop over the kept listener: validate queued
+    /// `Rejoin` frames (known id, matching codec, strictly increasing
+    /// generation), resync each accepted worker with a `Model` frame
+    /// carrying the current global model, and swap the fresh stream into
+    /// the slot. The slot is **not** required to be flagged dead: a
+    /// restarted worker can reconnect before the PS's next round-path
+    /// I/O observes the old stream's death (e.g. a kill between rounds),
+    /// and the strictly-greater generation is itself proof the old
+    /// stream is stale — it is shut down best-effort and displaced.
+    /// Stale/duplicate generations (a flapping worker's leftover
+    /// connect) are the refusals.
+    fn poll_rejoins(&mut self, global: &[f32]) -> Result<Vec<usize>> {
+        let mut admitted = Vec::new();
+        loop {
+            let (mut s, peer) = match self.listener.accept() {
+                Ok(conn) => conn,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(anyhow::Error::new(e).context("polling for rejoins")),
+            };
+            // accepted streams must block on their own I/O (with the
+            // usual deadline); only the accept itself is nonblocking
+            s.set_nonblocking(false).context("rejoin stream blocking mode")?;
+            set_stream_deadline(&s, self.io_timeout_ms)?;
+            let (id, generation) = match recv(&mut s, self.codec) {
+                Ok(Msg::Rejoin { client_id, generation, codec }) => {
+                    let id = client_id as usize;
+                    if codec != self.codec
+                        || id >= self.conns.len()
+                        || generation <= self.last_generation[id]
+                    {
+                        crate::info!(
+                            "serve: refused rejoin from {peer} (client {id} gen {generation})"
+                        );
+                        let _ = send(&mut s, &Msg::Shutdown, self.codec);
+                        continue;
+                    }
+                    if !self.conns[id].dead {
+                        // the PS has not yet observed the old stream's
+                        // death — the fresh, higher-generation handshake
+                        // supersedes it
+                        let wc = &mut self.conns[id];
+                        let _ = send_frame(&mut wc.stream, &Msg::Shutdown, self.codec, &mut wc.fb);
+                        crate::info!("serve: rejoin displaces client {id}'s stale stream");
+                    }
+                    (id, generation)
+                }
+                Ok(other) => {
+                    crate::info!("serve: expected Rejoin from {peer}, got {other:?}");
+                    let _ = send(&mut s, &Msg::Shutdown, self.codec);
+                    continue;
+                }
+                Err(e) => {
+                    crate::info!("serve: bad rejoin handshake from {peer}: {e:#}");
+                    continue;
+                }
+            };
+            // resync: the worker restarted with init params — hand it the
+            // current global model (control frame, excluded from the
+            // round-path wire accounting like Join/Shutdown)
+            let frame = encode_model_frame(self.round, global);
+            if let Err(e) = s.write_all(&frame) {
+                crate::info!("serve: rejoin resync to client {id} failed: {e:#}");
+                continue;
+            }
+            crate::info!("serve: client {id} rejoined from {peer} (generation {generation})");
+            self.conns[id] = WorkerConn { stream: s, fb: FrameBuf::new(), dead: false };
+            self.last_generation[id] = generation;
+            self.rejoins += 1;
+            admitted.push(id);
+        }
+        Ok(admitted)
     }
 
     fn train_and_report(
         &mut self,
         global: &[f32],
         cohort: &[usize],
-    ) -> Result<Vec<ClientReport>> {
+    ) -> Result<Vec<Option<ClientReport>>> {
         self.round += 1;
         self.d = global.len();
         let round = self.round;
         let codec = self.codec;
         let d = self.d;
-        let pos = cohort_positions(self.conns.len(), cohort);
-        // off-cohort first, inline: a 13-byte Sit per absent worker keeps
-        // its round counter in sync without the d-vector — no point
-        // spawning a thread for a tiny recv-less write (in the
-        // cross-device regime most streams are off-cohort)
+        self.cmap.set(self.conns.len(), cohort);
+        // off-cohort first, inline: a 13-byte Sit per absent (reachable)
+        // worker keeps its round counter in sync without the d-vector —
+        // no point spawning a thread for a tiny recv-less write (in the
+        // cross-device regime most streams are off-cohort). A failed Sit
+        // marks the stream dead; the frame still counts as attempted.
+        let cmap = &self.cmap;
+        let mut sit_bytes = 0u64;
         for (i, wc) in self.conns.iter_mut().enumerate() {
-            if pos[i] == usize::MAX {
-                let sent = send_frame(&mut wc.stream, &Msg::Sit { round }, codec, &mut wc.fb);
-                if sent.is_err() {
-                    wc.dead = true; // every failed round-path I/O is reported
-                }
-                let n = sent.with_context(|| format!("client {i} Sit (round {round})"))?;
-                self.wire_down += n as u64;
+            if cmap.slot(i) != usize::MAX || wc.dead {
+                continue;
+            }
+            sit_bytes += SIT_FRAME_BYTES as u64;
+            if let Err(e) = send_frame(&mut wc.stream, &Msg::Sit { round }, codec, &mut wc.fb) {
+                wc.dead = true;
+                crate::info!("serve: client {i} dropped at Sit (round {round}): {e:#}");
             }
         }
+        self.wire_down += sit_bytes;
         // zero-copy broadcast: serialize the d-vector frame once — into
         // the buffer reused from last round when every stream thread has
-        // dropped its handle — and write the same bytes to every cohort
-        // stream
+        // dropped its handle — and write the same bytes to every
+        // reachable cohort stream
         if let Some(buf) = Arc::get_mut(&mut self.model_frame) {
             encode_model_frame_into(round, global, buf);
         } else {
@@ -345,35 +499,55 @@ impl ClientPool for TcpClientPool {
         }
         self.model_encodes += 1;
         let frame = Arc::clone(&self.model_frame);
-        self.wire_down += (cohort.len() * frame.len()) as u64;
-        // one thread per cohort stream: a slow worker's local training
-        // overlaps its peers' instead of serializing the round in client
-        // order
-        let collected = std::thread::scope(|scope| -> Result<Vec<(ClientReport, usize)>> {
-            let mut handles = Vec::with_capacity(cohort.len());
-            for (i, wc) in self.conns.iter_mut().enumerate() {
-                if pos[i] == usize::MAX {
-                    continue;
-                }
-                let frame = Arc::clone(&frame);
-                handles.push(scope.spawn(move || -> Result<(ClientReport, usize)> {
-                    let out = stream_broadcast_collect(wc, &frame, codec, round, d);
-                    if out.is_err() {
-                        wc.dead = true;
+        let attempted = cohort.iter().filter(|&&c| !self.conns[c].dead).count();
+        self.wire_down += (attempted * frame.len()) as u64;
+        // one thread per reachable cohort stream: a slow worker's local
+        // training overlaps its peers' instead of serializing the round
+        // in client order. Already-dead streams answer None immediately.
+        let cmap = &self.cmap;
+        let collected: Vec<Option<(ClientReport, usize)>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(cohort.len());
+                for (i, wc) in self.conns.iter_mut().enumerate() {
+                    if cmap.slot(i) == usize::MAX {
+                        continue;
                     }
-                    out.with_context(|| format!("client {i} stream (round {round})"))
-                }));
-            }
-            // joining in stream order = ascending client id = cohort order
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("stream thread panicked"))
-                .collect()
-        })?;
+                    if wc.dead {
+                        handles.push(None);
+                        continue;
+                    }
+                    let frame = Arc::clone(&frame);
+                    handles.push(Some(scope.spawn(
+                        move || -> Option<(ClientReport, usize)> {
+                            match stream_broadcast_collect(wc, &frame, codec, round, d) {
+                                Ok(out) => Some(out),
+                                Err(e) => {
+                                    wc.dead = true;
+                                    crate::info!(
+                                        "serve: client {i} dropped mid-round {round}: {e:#}"
+                                    );
+                                    None
+                                }
+                            }
+                        },
+                    )));
+                }
+                // joining in stream order = ascending client id = cohort
+                // order
+                handles
+                    .into_iter()
+                    .map(|h| h.and_then(|h| h.join().expect("stream thread panicked")))
+                    .collect()
+            });
         let mut reports = Vec::with_capacity(collected.len());
-        for (rep, up) in collected {
-            self.wire_up += up as u64;
-            reports.push(rep);
+        for slot in collected {
+            match slot {
+                Some((rep, up)) => {
+                    self.wire_up += up as u64;
+                    reports.push(Some(rep));
+                }
+                None => reports.push(None),
+            }
         }
         Ok(reports)
     }
@@ -382,45 +556,96 @@ impl ClientPool for TcpClientPool {
         &mut self,
         requests: Option<&[Vec<u32>]>,
         cohort: &[usize],
-    ) -> Result<Vec<SparseVec>> {
+    ) -> Result<Vec<Option<SparseVec>>> {
         let round = self.round;
         let codec = self.codec;
         let d = self.d;
-        let pos = cohort_positions(self.conns.len(), cohort);
-        let collected = std::thread::scope(|scope| -> Result<Vec<(SparseVec, usize, usize)>> {
+        self.cmap.set(self.conns.len(), cohort);
+        // attempted-frame downlink accounting, computed before the
+        // threads run (the request frame size is arithmetic)
+        let cmap = &self.cmap;
+        for (i, wc) in self.conns.iter().enumerate() {
+            let p = cmap.slot(i);
+            if p == usize::MAX || wc.dead {
+                continue;
+            }
+            let indices: &[u32] = requests.map(|r| r[p].as_slice()).unwrap_or(&[]);
+            self.wire_down += request_frame_bytes(codec, indices) as u64;
+        }
+        let cmap = &self.cmap;
+        let collected: Vec<Option<(SparseVec, usize)>> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(cohort.len());
             for (i, wc) in self.conns.iter_mut().enumerate() {
-                if pos[i] == usize::MAX {
+                let p = cmap.slot(i);
+                if p == usize::MAX {
                     continue; // off-cohort workers already got their Sit
+                }
+                if wc.dead {
+                    handles.push(None);
+                    continue;
                 }
                 // client-side strategies select locally; the Request frame
                 // still flows (empty) so the wire flow stays uniform
-                let indices: &[u32] =
-                    requests.map(|r| r[pos[i]].as_slice()).unwrap_or(&[]);
-                handles.push(scope.spawn(move || -> Result<(SparseVec, usize, usize)> {
-                    let out = stream_request_collect(wc, indices, codec, round, d);
-                    if out.is_err() {
-                        wc.dead = true;
+                let indices: &[u32] = requests.map(|r| r[p].as_slice()).unwrap_or(&[]);
+                handles.push(Some(scope.spawn(move || -> Option<(SparseVec, usize)> {
+                    match stream_request_collect(wc, indices, codec, round, d) {
+                        Ok(out) => Some(out),
+                        Err(e) => {
+                            wc.dead = true;
+                            crate::info!(
+                                "serve: client {i} dropped at exchange (round {round}): {e:#}"
+                            );
+                            None
+                        }
                     }
-                    out.with_context(|| format!("client {i} stream (round {round})"))
-                }));
+                })));
             }
             handles
                 .into_iter()
-                .map(|h| h.join().expect("stream thread panicked"))
+                .map(|h| h.and_then(|h| h.join().expect("stream thread panicked")))
                 .collect()
-        })?;
+        });
         let mut updates = Vec::with_capacity(collected.len());
-        for (update, down, up) in collected {
-            self.wire_down += down as u64;
-            self.wire_up += up as u64;
-            updates.push(update);
+        for slot in collected {
+            match slot {
+                Some((update, up)) => {
+                    self.wire_up += up as u64;
+                    updates.push(Some(update));
+                }
+                None => updates.push(None),
+            }
         }
         Ok(updates)
     }
 
     fn backend(&mut self) -> &mut dyn Backend {
         self.backend.as_mut()
+    }
+}
+
+impl Reshard for TcpClientPool {
+    type Carry = TcpCarry;
+
+    /// Drain the worker streams in local-slot order (dynamic re-shard):
+    /// the sockets stay open, only which shard pool pumps their frames
+    /// changes.
+    fn take_parts(&mut self) -> Vec<TcpCarry> {
+        let conns = std::mem::take(&mut self.conns);
+        let gens = std::mem::take(&mut self.last_generation);
+        conns
+            .into_iter()
+            .zip(gens)
+            .map(|(conn, last_generation)| TcpCarry { conn, last_generation })
+            .collect()
+    }
+
+    fn install_parts(&mut self, parts: Vec<TcpCarry>) {
+        self.conns = Vec::with_capacity(parts.len());
+        self.last_generation = Vec::with_capacity(parts.len());
+        for part in parts {
+            self.conns.push(part.conn);
+            self.last_generation.push(part.last_generation);
+        }
     }
 }
 
@@ -446,7 +671,9 @@ pub fn run_server(cfg: &ExperimentConfig, port: u16) -> Result<ServeReport> {
 }
 
 /// [`run_server`] over an already-bound listener (lets tests bind an
-/// ephemeral port before spawning workers).
+/// ephemeral port before spawning workers). A mid-round worker failure
+/// no longer aborts the run: the round completes with the survivors, the
+/// casualty is logged, and a later `Rejoin` brings the worker back.
 pub fn run_server_on(cfg: &ExperimentConfig, listener: TcpListener) -> Result<ServeReport> {
     cfg.validate()?;
     let mut pool = TcpClientPool::accept(cfg, listener)?;
@@ -454,9 +681,19 @@ pub fn run_server_on(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Se
     let mut engine = RoundEngine::new(cfg, init);
     let (_, test) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
     let test_idx: Vec<usize> = (0..test.len()).collect();
+    let mut casualties = 0u64;
 
     for round in 1..=cfg.rounds {
-        engine.run_round(&mut pool)?;
+        let out = engine.run_round(&mut pool)?;
+        if !out.casualties.is_empty() {
+            casualties += out.casualties.len() as u64;
+            crate::info!(
+                "serve: round {round}/{}: finished with {} survivors, lost {:?}",
+                cfg.rounds,
+                out.cohort.len(),
+                out.casualties
+            );
+        }
         if cfg.eval_every > 0 && round % cfg.eval_every == 0 {
             let (acc, loss) =
                 eval_dataset(pool.backend(), engine.global_params(), &test, &test_idx, cfg.batch)?;
@@ -483,6 +720,8 @@ pub fn run_server_on(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Se
         wire_up_observed,
         wire_down_observed,
         frame_grows: pool.frame_grows(),
+        casualties,
+        rejoins: pool.rejoins(),
     })
 }
 
@@ -491,13 +730,18 @@ pub fn run_server_on(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Se
 /// spawning workers). Each shard's [`TcpClientPool`] accepts its slice's
 /// workers (joining with **shard-local** ids) and is driven by the shared
 /// [`ShardedEngine`]; the root applies one merged server update per round
-/// and re-broadcasts through the shards.
+/// and re-broadcasts through the shards. At recluster boundaries the
+/// root re-partitions the fleet with `ClusterManager::shard_slices` and
+/// worker streams are handed off between the shard pools (the workers'
+/// sockets never notice).
 ///
 /// Shard collect phases run serially here — [`TcpClientPool`] owns a
 /// non-`Send` PS backend, so it cannot cross shard threads. The per-shard
 /// pools still overlap their own workers (thread per stream), and every
 /// worker of every shard trains concurrently in its own process; only the
 /// PS-side frame pumping serializes across shards.
+///
+/// [`ShardedEngine`]: crate::coordinator::topology::ShardedEngine
 pub fn run_sharded_server_on(
     cfg: &ExperimentConfig,
     listeners: Vec<TcpListener>,
@@ -518,9 +762,11 @@ pub fn run_sharded_server_on(
     let mut engine = ShardedEngine::new(cfg, init)?;
     let (_, test) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
     let test_idx: Vec<usize> = (0..test.len()).collect();
+    let mut casualties = 0u64;
 
     for round in 1..=cfg.rounds {
-        engine.run_round_serial(&mut pools)?;
+        let out = engine.run_round_serial(&mut pools)?;
+        casualties += out.casualties.len() as u64;
         if cfg.eval_every > 0 && round % cfg.eval_every == 0 {
             let (acc, loss) = eval_dataset(
                 pools[0].backend(),
@@ -555,12 +801,14 @@ pub fn run_sharded_server_on(
     let mut wire_down_observed = 0;
     let mut model_encodes = 0;
     let mut frame_grows = 0;
+    let mut rejoins = 0;
     for pool in &pools {
         let (up, down) = pool.wire_observed();
         wire_up_observed += up;
         wire_down_observed += down;
         model_encodes += pool.model_encodes();
         frame_grows += pool.frame_grows();
+        rejoins += pool.rejoins();
     }
     Ok(ServeReport {
         rounds: cfg.rounds,
@@ -573,6 +821,8 @@ pub fn run_sharded_server_on(
         wire_up_observed,
         wire_down_observed,
         frame_grows,
+        casualties,
+        rejoins,
     })
 }
 
@@ -590,6 +840,34 @@ fn ensure_listeners(shards: usize, got: usize) -> Result<()> {
 /// `addr` must already point at that shard's listener (the CLI derives
 /// `port + shard` from the base port).
 pub fn run_worker(cfg: &ExperimentConfig, addr: &str, id: usize) -> Result<()> {
+    run_worker_session(cfg, addr, id, 0)
+}
+
+/// [`run_worker`] for a **recovered** worker: instead of a fresh `Join`
+/// it sends a `Rejoin` frame carrying its id and `generation` (its
+/// restart count, >= 1 and strictly increasing across restarts), waits
+/// for the PS's `Model` resync of the current global model, and then
+/// runs the normal round loop. Note the rejoin address derivation
+/// assumes the *static* shard assignment — under an actively re-sharding
+/// topology, rejoin is supported on the flat (single-PS) layout.
+pub fn run_worker_rejoin(
+    cfg: &ExperimentConfig,
+    addr: &str,
+    id: usize,
+    generation: u32,
+) -> Result<()> {
+    if generation == 0 {
+        bail!("a rejoin needs a generation >= 1 (0 is the original join)");
+    }
+    run_worker_session(cfg, addr, id, generation)
+}
+
+fn run_worker_session(
+    cfg: &ExperimentConfig,
+    addr: &str,
+    id: usize,
+    generation: u32,
+) -> Result<()> {
     cfg.validate()?;
     if id >= cfg.n_clients {
         bail!("worker id {id} >= n_clients {}", cfg.n_clients);
@@ -619,13 +897,42 @@ pub fn run_worker(cfg: &ExperimentConfig, addr: &str, id: usize) -> Result<()> {
     };
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
-    send(&mut stream, &Msg::Join { client_id: join_id as u32, codec }, codec)?;
-    crate::info!("worker {id}: joined {addr} (codec {})", codec.name());
 
     // steady-state transport buffers: one FrameBuf for every frame in and
     // out, plus the model broadcast decoded into a reused parameter vector
     let mut fb = FrameBuf::new();
     let mut params: Vec<f32> = Vec::new();
+
+    if generation == 0 {
+        send(&mut stream, &Msg::Join { client_id: join_id as u32, codec }, codec)?;
+        crate::info!("worker {id}: joined {addr} (codec {})", codec.name());
+    } else {
+        send(
+            &mut stream,
+            &Msg::Rejoin { client_id: join_id as u32, generation, codec },
+            codec,
+        )?;
+        // the PS answers an accepted rejoin with the current global model
+        // (or Shutdown if it refused us / training already ended)
+        let payload = recv_payload(&mut stream, &mut fb).context("rejoin resync")?;
+        match payload.first().copied() {
+            Some(TAG_MODEL) => {
+                decode_model_into(payload, &mut params).context("rejoin resync model")?;
+                client.state.sync_to(&params);
+                crate::info!(
+                    "worker {id}: rejoined {addr} (generation {generation}), model resynced"
+                );
+            }
+            _ => match Msg::decode(payload, codec)? {
+                Msg::Shutdown => {
+                    crate::info!("worker {id}: rejoin refused or training over");
+                    return Ok(());
+                }
+                other => bail!("rejoin: expected Model resync or Shutdown, got {other:?}"),
+            },
+        }
+    }
+
     loop {
         let payload = recv_payload(&mut stream, &mut fb)?;
         let round = match payload.first().copied() {
@@ -693,6 +1000,8 @@ mod tests {
         assert_eq!(report.cluster_labels.len(), 2);
         assert_eq!(report.uploaded_log.len(), 3);
         assert!(report.uploaded_log.iter().all(|r| r.len() == 2));
+        assert_eq!(report.casualties, 0);
+        assert_eq!(report.rejoins, 0);
         // zero-copy broadcast: one Model serialization per round, shared
         // across both workers
         assert_eq!(report.model_encodes, 3);

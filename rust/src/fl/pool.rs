@@ -13,14 +13,17 @@
 //! The per-client protocol itself ([`client_train_phase`] /
 //! [`client_update_phase`]) is shared with the TCP worker, so this pool
 //! and [`crate::fl::distributed::TcpClientPool`] are two transports for
-//! the same code path.
+//! the same code path. The in-process clients never fail on their own, so
+//! every report/update slot comes back `Some`; chaos harnesses (e.g.
+//! `testing::FlakyPool`) wrap this pool to simulate drops and rejoins,
+//! using [`InProcessPool::resync_client`] to mimic a restarted worker.
 
 use crate::backend::{
-    make_backend_lanes, make_send_lanes, Backend, BackendLanes, Lanes, SendBackend,
+    make_backend_lanes, make_send_lanes, Backend, BackendLanes, ClientState, Lanes, SendBackend,
 };
 use crate::config::{ExperimentConfig, Payload};
 use crate::coordinator::engine::{
-    client_train_phase, client_update_phase, cohort_positions, ClientPool, ClientReport, PhaseCfg,
+    client_train_phase, client_update_phase, ClientPool, ClientReport, CohortMap, PhaseCfg,
 };
 use crate::data::Dataset;
 use crate::fl::client::Client;
@@ -32,14 +35,28 @@ use anyhow::{ensure, Context, Result};
 /// on scoped threads.
 pub type SendPool = InProcessPool<Vec<SendBackend>>;
 
+/// One simulated client's transferable state — what a dynamic re-shard
+/// hands between shard pools (the in-process counterpart of moving a TCP
+/// stream): the client (data shard, model + optimizer state, RNG) and its
+/// error-feedback memory (empty under the Grad payload).
+pub struct SimClientCarry {
+    pub client: Client,
+    pub memory: Vec<f32>,
+}
+
 pub struct InProcessPool<L = BackendLanes> {
     clients: Vec<Client>,
     lanes: L,
     /// per-client error-feedback memory (Delta payload only; empty
     /// otherwise) — the unsent accumulated drift of Qsparse-local-SGD [7]
     memory: Vec<Vec<f32>>,
-    /// phase-1 reports cached for the phase-2 uploads
+    /// phase-1 reports cached for the phase-2 uploads, with the cohort
+    /// they were trained for (the exchange cohort may be a survivor
+    /// subset of it)
     reports: Vec<SparseVec>,
+    report_cohort: Vec<usize>,
+    /// reused client-id -> cohort-position map (stamp-versioned)
+    cmap: CohortMap,
     pc: PhaseCfg,
 }
 
@@ -118,6 +135,8 @@ impl<L: Lanes> InProcessPool<L> {
                 lanes,
                 memory,
                 reports: Vec::new(),
+                report_cohort: Vec::new(),
+                cmap: CohortMap::new(),
                 pc: PhaseCfg::from_config(cfg),
             },
             init,
@@ -142,6 +161,56 @@ impl<L: Lanes> InProcessPool<L> {
     pub fn backend_mut(&mut self) -> &mut dyn Backend {
         self.lanes.primary()
     }
+
+    /// Mimic a worker-process restart followed by a `Rejoin` resync
+    /// (chaos harnesses): the client's model state is replaced by the
+    /// current global model with **fresh** optimizer moments, and its
+    /// error-feedback memory is cleared — a restarted process remembers
+    /// neither.
+    pub fn resync_client(&mut self, i: usize, global: &[f32]) {
+        self.clients[i].state = ClientState::new(global.to_vec());
+        if let Some(mem) = self.memory.get_mut(i) {
+            mem.fill(0.0);
+        }
+    }
+
+}
+
+impl<L: Lanes> crate::coordinator::topology::Reshard for InProcessPool<L> {
+    type Carry = SimClientCarry;
+
+    /// Drain every client's transferable state in local-slot order (the
+    /// dynamic re-shard hand-off). The pool is unusable until
+    /// `install_parts` repopulates it.
+    fn take_parts(&mut self) -> Vec<SimClientCarry> {
+        let clients = std::mem::take(&mut self.clients);
+        let mut memory = std::mem::take(&mut self.memory);
+        let delta = self.pc.payload == Payload::Delta;
+        clients
+            .into_iter()
+            .enumerate()
+            .map(|(i, client)| SimClientCarry {
+                client,
+                memory: if delta { std::mem::take(&mut memory[i]) } else { Vec::new() },
+            })
+            .collect()
+    }
+
+    /// Repopulate from carries in (new) local-slot order; the pool's
+    /// backend lanes stay put — only the clients move.
+    fn install_parts(&mut self, parts: Vec<SimClientCarry>) {
+        let delta = self.pc.payload == Payload::Delta;
+        self.clients = Vec::with_capacity(parts.len());
+        self.memory = if delta { Vec::with_capacity(parts.len()) } else { Vec::new() };
+        for part in parts {
+            self.clients.push(part.client);
+            if delta {
+                self.memory.push(part.memory);
+            }
+        }
+        self.reports.clear();
+        self.report_cohort.clear();
+    }
 }
 
 impl<L: Lanes> ClientPool for InProcessPool<L> {
@@ -153,44 +222,59 @@ impl<L: Lanes> ClientPool for InProcessPool<L> {
         &mut self,
         global: &[f32],
         cohort: &[usize],
-    ) -> Result<Vec<ClientReport>> {
+    ) -> Result<Vec<Option<ClientReport>>> {
         let pc = self.pc;
         let delta = pc.payload == Payload::Delta;
         let outs = cohort_map(
             &mut self.clients,
             &mut self.memory,
             &mut self.lanes,
+            &mut self.cmap,
             delta,
             cohort,
             |_, c, be, mem| client_train_phase(c, be, mem, global, &pc),
         )?;
         self.reports = outs.iter().map(|o| o.report.clone()).collect();
-        Ok(outs)
+        self.report_cohort = cohort.to_vec();
+        Ok(outs.into_iter().map(Some).collect())
     }
 
     fn exchange(
         &mut self,
         requests: Option<&[Vec<u32>]>,
         cohort: &[usize],
-    ) -> Result<Vec<SparseVec>> {
+    ) -> Result<Vec<Option<SparseVec>>> {
         let pc = self.pc;
         let delta = pc.payload == Payload::Delta;
         let reports = std::mem::take(&mut self.reports);
-        ensure!(reports.len() == cohort.len(), "exchange before train_and_report");
+        let report_cohort = std::mem::take(&mut self.report_cohort);
+        ensure!(reports.len() == report_cohort.len(), "exchange before train_and_report");
         if let Some(reqs) = requests {
             ensure!(reqs.len() == cohort.len(), "request count mismatch");
         }
-        cohort_map(
+        // the exchange cohort may be a survivor subset of the trained
+        // cohort (phase-1 casualties excluded by the engine): map each
+        // member back to its cached report
+        self.cmap.set(self.clients.len(), &report_cohort);
+        let mut report_of = vec![usize::MAX; cohort.len()];
+        for (p, &c) in cohort.iter().enumerate() {
+            let rp = self.cmap.slot(c);
+            ensure!(rp != usize::MAX, "client {c} exchanged without a trained report");
+            report_of[p] = rp;
+        }
+        let outs = cohort_map(
             &mut self.clients,
             &mut self.memory,
             &mut self.lanes,
+            &mut self.cmap,
             delta,
             cohort,
             |p, c, be, mem| {
                 let req = requests.map(|r| r[p].as_slice());
-                client_update_phase(c, be, mem, &reports[p], req, &pc)
+                client_update_phase(c, be, mem, &reports[report_of[p]], req, &pc)
             },
-        )
+        )?;
+        Ok(outs.into_iter().map(Some).collect())
     }
 
     fn backend(&mut self) -> &mut dyn Backend {
@@ -209,6 +293,7 @@ fn cohort_map<T, F, L>(
     clients: &mut [Client],
     memory: &mut [Vec<f32>],
     lanes: &mut L,
+    cmap: &mut CohortMap,
     delta: bool,
     cohort: &[usize],
     f: F,
@@ -224,7 +309,7 @@ where
         return Ok(Vec::new());
     }
     debug_assert!(cohort.windows(2).all(|w| w[0] < w[1]) && cohort[m - 1] < n);
-    let pos = cohort_positions(n, cohort);
+    cmap.set(n, cohort);
     // one Option slot per client so the Grad payload (no memory) pairs
     // uniformly with the clients
     let slots: Vec<Option<&mut Vec<f32>>> = if delta {
@@ -237,7 +322,7 @@ where
         .iter_mut()
         .zip(slots)
         .enumerate()
-        .filter(|(i, _)| pos[*i] != usize::MAX)
+        .filter(|(i, _)| cmap.slot(*i) != usize::MAX)
         .enumerate()
         .map(|(p, (_i, (c, slot)))| (p, c, slot))
         .collect();
@@ -363,5 +448,57 @@ mod tests {
         cfg.parallel = 64;
         let t = Trainer::from_config(&cfg).unwrap();
         assert_eq!(t.pool().n_lanes(), cfg.n_clients);
+    }
+
+    /// The exchange cohort may be a survivor subset of the trained
+    /// cohort: the pool must answer from the right cached reports.
+    #[test]
+    fn exchange_accepts_survivor_subset_of_trained_cohort() {
+        use crate::data::{load_dataset, partition::partition};
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.participation = 1.0;
+        let (train, _) =
+            load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
+        let shards: Vec<Dataset> = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed)
+            .into_iter()
+            .map(|idx| train.subset(&idx))
+            .collect();
+        let (mut pool, init) = InProcessPool::new(&cfg, shards).unwrap();
+        let full: Vec<usize> = (0..cfg.n_clients).collect();
+        let reports = pool.train_and_report(&init, &full).unwrap();
+        assert!(reports.iter().all(Option::is_some));
+        // pretend clients 0 and 2 dropped after phase 1
+        let survivors = vec![1usize, 3];
+        let reqs: Vec<Vec<u32>> = survivors
+            .iter()
+            .map(|&c| reports[c].as_ref().unwrap().report.idx[..cfg.k].to_vec())
+            .collect();
+        let ups = pool.exchange(Some(&reqs), &survivors).unwrap();
+        assert_eq!(ups.len(), 2);
+        for (u, req) in ups.iter().zip(&reqs) {
+            assert_eq!(&u.as_ref().unwrap().idx, req, "upload answers the right request");
+        }
+    }
+
+    /// take/install round-trips the client state (the re-shard hand-off
+    /// primitive): moving every client out and back is a no-op.
+    #[test]
+    fn take_install_roundtrip_preserves_clients() {
+        use crate::coordinator::topology::Reshard;
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.rounds = 2;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        t.run_round().unwrap();
+        let before: Vec<Vec<f32>> =
+            (0..cfg.n_clients).map(|i| t.pool().client_params(i).to_vec()).collect();
+        let pool = t.pool_mut();
+        let parts = pool.take_parts();
+        assert_eq!(parts.len(), cfg.n_clients);
+        pool.install_parts(parts);
+        for (i, b) in before.iter().enumerate() {
+            assert_eq!(&t.pool().client_params(i).to_vec(), b);
+        }
+        // training continues unperturbed
+        t.run_round().unwrap();
     }
 }

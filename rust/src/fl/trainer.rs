@@ -186,6 +186,18 @@ impl Trainer {
         }
     }
 
+    /// Mutable access to the flat in-process pool (chaos harnesses,
+    /// hand-off tests). Panics under a sharded topology like
+    /// [`Self::pool`].
+    pub fn pool_mut(&mut self) -> &mut InProcessPool {
+        match &mut self.driver {
+            Driver::Flat { pool, .. } => pool,
+            Driver::Sharded { .. } => {
+                panic!("Trainer::pool_mut() is flat-topology only")
+            }
+        }
+    }
+
     /// The flat parameter server (see [`Self::engine`] for the sharded
     /// contract).
     pub fn server(&self) -> &ParameterServer {

@@ -44,6 +44,13 @@ use std::net::TcpStream;
 /// Protocol magic ("rAgk").
 pub const MAGIC: u32 = 0x7241_676b;
 
+/// Handshake protocol version, carried in every `Join`/`Rejoin` frame
+/// and checked on decode. v3 added the `Rejoin` re-admission frame and
+/// the version byte itself (v1 = raw-only wire, v2 = negotiated codecs);
+/// a PS refuses handshakes from any other version with a clean error
+/// instead of mis-parsing newer frames.
+pub const PROTOCOL_VERSION: u8 = 3;
+
 /// magic(4) + payload_len(4) + tag(1)
 pub const HEADER_BYTES: usize = 9;
 
@@ -54,8 +61,16 @@ pub const TAG_MODEL: u8 = 2;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
     /// client -> PS: hello + the wire codec this worker is configured
-    /// for (protocol-version negotiation; the PS rejects mismatches)
+    /// for (codec negotiation; the PS rejects mismatches). Carries
+    /// [`PROTOCOL_VERSION`], checked on decode.
     Join { client_id: u32, codec: Codec },
+    /// client -> PS: a recovered worker re-admitting itself after its
+    /// stream died (DESIGN.md §8). `generation` is the worker's
+    /// admission attempt counter (1 for the first rejoin); the PS
+    /// refuses stale or duplicate generations and answers an accepted
+    /// rejoin with a `Model` frame resyncing the current global model.
+    /// Carries [`PROTOCOL_VERSION`] like `Join`.
+    Rejoin { client_id: u32, generation: u32, codec: Codec },
     /// PS -> client: global model broadcast for a round
     Model { round: u32, params: Vec<f32> },
     /// client -> PS: top-r report (indices by |g| desc + signed values;
@@ -135,6 +150,7 @@ impl Msg {
             Msg::Update { .. } => 5,
             Msg::Shutdown => 6,
             Msg::Sit { .. } => 7,
+            Msg::Rejoin { .. } => 8,
         }
     }
 
@@ -154,6 +170,13 @@ impl Msg {
         match self {
             Msg::Join { client_id, codec: joined } => {
                 put_u32(out, *client_id);
+                out.push(PROTOCOL_VERSION);
+                out.push(joined.wire_id());
+            }
+            Msg::Rejoin { client_id, generation, codec: joined } => {
+                put_u32(out, *client_id);
+                put_u32(out, *generation);
+                out.push(PROTOCOL_VERSION);
                 out.push(joined.wire_id());
             }
             Msg::Model { round, params } => write_model_payload(out, *round, params),
@@ -192,14 +215,30 @@ impl Msg {
         if tagged.is_empty() {
             bail!("empty frame");
         }
+        fn check_version(v: u8, what: &str) -> Result<()> {
+            if v != PROTOCOL_VERSION {
+                bail!("{what} carries protocol version {v}, this PS speaks {PROTOCOL_VERSION}");
+            }
+            Ok(())
+        }
         let mut d = Dec::new(&tagged[1..]);
         let msg = match tagged[0] {
             1 => {
                 let client_id = d.u32()?;
+                check_version(d.u8()?, "Join")?;
                 let b = d.u8()?;
                 let joined = Codec::from_wire_id(b)
                     .with_context(|| format!("unknown codec wire id {b}"))?;
                 Msg::Join { client_id, codec: joined }
+            }
+            8 => {
+                let client_id = d.u32()?;
+                let generation = d.u32()?;
+                check_version(d.u8()?, "Rejoin")?;
+                let b = d.u8()?;
+                let joined = Codec::from_wire_id(b)
+                    .with_context(|| format!("unknown codec wire id {b}"))?;
+                Msg::Rejoin { client_id, generation, codec: joined }
             }
             TAG_MODEL => {
                 let round = d.u32()?;
@@ -266,7 +305,8 @@ impl Msg {
     /// every variant in every codec by `wire_bytes_never_encodes`.
     pub fn wire_bytes(&self, codec: Codec) -> usize {
         match self {
-            Msg::Join { .. } => HEADER_BYTES + 5,
+            Msg::Join { .. } => HEADER_BYTES + 6,
+            Msg::Rejoin { .. } => HEADER_BYTES + 10,
             Msg::Model { params, .. } => model_frame_bytes(params.len()),
             Msg::Report { report, .. } => report_frame_bytes(codec, &report.idx),
             Msg::Request { indices, .. } => request_frame_bytes(codec, indices),
@@ -512,6 +552,7 @@ mod tests {
     #[test]
     fn all_messages_roundtrip_raw() {
         roundtrip(Msg::Join { client_id: 3, codec: Codec::Raw }, Codec::Raw);
+        roundtrip(Msg::Rejoin { client_id: 2, generation: 4, codec: Codec::Raw }, Codec::Raw);
         roundtrip(Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] }, Codec::Raw);
         roundtrip(
             Msg::Report {
@@ -536,6 +577,7 @@ mod tests {
         for codec in [Codec::Packed, Codec::PackedF16] {
             // Join carries the *worker's* codec field under any frame codec
             roundtrip(Msg::Join { client_id: 3, codec: Codec::PackedF16 }, codec);
+            roundtrip(Msg::Rejoin { client_id: 1, generation: 1, codec: Codec::Packed }, codec);
             roundtrip(Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] }, codec);
             // report values are not transmitted: they decode as zeros
             let m = Msg::Report {
@@ -600,6 +642,7 @@ mod tests {
     fn every_variant() -> Vec<Msg> {
         vec![
             Msg::Join { client_id: 3, codec: Codec::Packed },
+            Msg::Rejoin { client_id: 3, generation: 2, codec: Codec::Packed },
             Msg::Model { round: 7, params: vec![] },
             Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] },
             Msg::Report {
@@ -732,6 +775,17 @@ mod tests {
         let n = join.len();
         join[n - 1] = 77;
         assert!(Msg::decode(&join[8..], Codec::Raw).is_err());
+        // wrong protocol version in a Join/Rejoin is refused by name
+        for msg in [
+            Msg::Join { client_id: 0, codec: Codec::Raw },
+            Msg::Rejoin { client_id: 0, generation: 1, codec: Codec::Raw },
+        ] {
+            let mut frame = msg.encode(Codec::Raw);
+            let n = frame.len();
+            frame[n - 2] = PROTOCOL_VERSION + 1; // the version byte
+            let err = Msg::decode(&frame[8..], Codec::Raw).unwrap_err();
+            assert!(format!("{err:#}").contains("protocol version"), "{err:#}");
+        }
         // packed update whose value block is truncated
         let up = Msg::Update {
             client_id: 0,

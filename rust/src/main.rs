@@ -39,6 +39,7 @@ fn train_spec(cmd: &str, about: &str) -> ArgSpec {
         .opt("shards", "", "PS topology: 0 = flat (default), N >= 1 = N shard engines")
         .opt("root-merge", "", "root age-vector merge under sharding: min | max (empty = min)")
         .opt("io-timeout-ms", "", "PS-side socket read/write deadline in ms (empty/0 = none)")
+        .opt("reshard", "", "re-partition shards at recluster boundaries: true | false")
         .opt("codec", "", "wire codec: raw | packed | packed-f16 (empty = preset)")
         .opt("parallel", "", "in-process client lanes (empty = preset, 0 = auto, 1 = serial)")
         .opt("seed", "42", "experiment seed")
@@ -102,6 +103,12 @@ fn build_config(a: &ragek::util::argparse::Args) -> Result<ExperimentConfig> {
     }
     if !a.get("io-timeout-ms").is_empty() {
         cfg.io_timeout_ms = a.get_usize("io-timeout-ms")? as u64;
+    }
+    match a.get("reshard") {
+        "" => {}
+        "true" | "on" => cfg.reshard = true,
+        "false" | "off" => cfg.reshard = false,
+        other => bail!("unknown reshard {other:?} (want true | false)"),
     }
     if !a.get("codec").is_empty() {
         cfg.codec = ragek::fl::codec::Codec::parse(a.get("codec"))
@@ -281,7 +288,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 fn cmd_worker(rest: &[String]) -> Result<()> {
     let spec = train_spec("ragek worker", "one client process for multi-process FL")
         .opt("connect", "127.0.0.1:7700", "PS base address (the worker adds its shard offset)")
-        .opt("id", "0", "client id (0..n_clients)");
+        .opt("id", "0", "client id (0..n_clients)")
+        .opt("rejoin", "0", "re-admission generation after a crash (0 = fresh join)");
     let Some(a) = parse_or_help(spec, rest)? else {
         return Ok(());
     };
@@ -308,7 +316,12 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
     } else {
         a.get("connect").to_string()
     };
-    ragek::fl::distributed::run_worker(&cfg, &addr, id)
+    let generation = a.get_usize("rejoin")? as u32;
+    if generation > 0 {
+        ragek::fl::distributed::run_worker_rejoin(&cfg, &addr, id, generation)
+    } else {
+        ragek::fl::distributed::run_worker(&cfg, &addr, id)
+    }
 }
 
 fn cmd_info(rest: &[String]) -> Result<()> {

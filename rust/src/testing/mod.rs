@@ -1,8 +1,174 @@
 //! Mini property-testing substrate (proptest is not in the offline
 //! registry): seeded generators + a `prop_check` runner that reports the
-//! failing case and its seed for reproduction.
+//! failing case and its seed for reproduction — plus the deterministic
+//! membership-chaos harness [`FlakyPool`] shared by the integration
+//! tests and `bench_membership`.
 
+use crate::backend::Backend;
+use crate::config::ExperimentConfig;
+use crate::coordinator::engine::{ClientPool, ClientReport};
+use crate::fl::pool::InProcessPool;
+use crate::sparse::SparseVec;
 use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// A deterministic chaos wrapper over [`InProcessPool`]: scheduled
+/// clients drop with a seeded per-phase probability (mid-round, exactly
+/// like a crashed TCP worker) and re-admit themselves `rejoin_after`
+/// rounds later through [`ClientPool::poll_rejoins`] — the simulator
+/// face of the fleet-membership protocol (DESIGN.md §8). A dropped
+/// client's local state is reset to the current global model on rejoin
+/// ([`InProcessPool::resync_client`]), mimicking a restarted worker
+/// process. All chaos is drawn from its own seeded RNG in cohort order,
+/// so a run is bit-for-bit reproducible.
+pub struct FlakyPool {
+    inner: InProcessPool,
+    chaos: Rng,
+    /// per-phase drop probability for a scheduled live client
+    drop_rate: f32,
+    /// rounds a dropped client stays gone before it rejoins
+    rejoin_after: usize,
+    alive: Vec<bool>,
+    rejoin_at: Vec<Option<usize>>,
+    round: usize,
+}
+
+impl FlakyPool {
+    /// Build over the standard data pipeline (same shards the [`crate::fl::trainer::Trainer`]
+    /// would build). Returns the pool and the initial global params.
+    pub fn new(
+        cfg: &ExperimentConfig,
+        drop_rate: f32,
+        rejoin_after: usize,
+        chaos_seed: u64,
+    ) -> Result<(Self, Vec<f32>)> {
+        use crate::data::{load_dataset, partition::partition};
+        let (train, _) =
+            load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
+        let shards: Vec<crate::data::Dataset> =
+            partition(&train, cfg.n_clients, &cfg.partition, cfg.seed)
+                .into_iter()
+                .map(|idx| train.subset(&idx))
+                .collect();
+        let (inner, init) = InProcessPool::new(cfg, shards)?;
+        let n = cfg.n_clients;
+        Ok((
+            FlakyPool {
+                inner,
+                chaos: Rng::new(chaos_seed ^ 0xF1A_C4A0_5),
+                drop_rate,
+                rejoin_after,
+                alive: vec![true; n],
+                rejoin_at: vec![None; n],
+                round: 0,
+            },
+            init,
+        ))
+    }
+
+    pub fn inner(&self) -> &InProcessPool {
+        &self.inner
+    }
+
+    /// Total clients currently down.
+    pub fn n_down(&self) -> usize {
+        self.alive.iter().filter(|&&a| !a).count()
+    }
+
+    /// Draw the chaos verdict for one scheduled client: `true` = it
+    /// drops this phase (and is queued for a later rejoin).
+    fn drops_now(&mut self, c: usize) -> bool {
+        if self.chaos.uniform_in(0.0, 1.0) < self.drop_rate {
+            self.alive[c] = false;
+            self.rejoin_at[c] = Some(self.round + self.rejoin_after);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl ClientPool for FlakyPool {
+    fn n_clients(&self) -> usize {
+        self.inner.n_clients()
+    }
+
+    fn health(&self) -> Vec<bool> {
+        self.alive.clone()
+    }
+
+    fn poll_rejoins(&mut self, global: &[f32]) -> Result<Vec<usize>> {
+        let mut admitted = Vec::new();
+        for c in 0..self.alive.len() {
+            if let Some(due) = self.rejoin_at[c] {
+                if due <= self.round {
+                    self.rejoin_at[c] = None;
+                    self.alive[c] = true;
+                    self.inner.resync_client(c, global);
+                    admitted.push(c);
+                }
+            }
+        }
+        Ok(admitted)
+    }
+
+    fn train_and_report(
+        &mut self,
+        global: &[f32],
+        cohort: &[usize],
+    ) -> Result<Vec<Option<ClientReport>>> {
+        self.round += 1;
+        // chaos verdicts in cohort order (deterministic given the seed)
+        let mut live = Vec::with_capacity(cohort.len());
+        let mut fate = Vec::with_capacity(cohort.len());
+        for &c in cohort {
+            let up = self.alive[c] && !self.drops_now(c);
+            fate.push(up);
+            if up {
+                live.push(c);
+            }
+        }
+        let mut outs = self.inner.train_and_report(global, &live)?.into_iter();
+        Ok(fate
+            .into_iter()
+            .map(|up| if up { outs.next().expect("one report per live member") } else { None })
+            .collect())
+    }
+
+    fn exchange(
+        &mut self,
+        requests: Option<&[Vec<u32>]>,
+        cohort: &[usize],
+    ) -> Result<Vec<Option<SparseVec>>> {
+        // phase-2 chaos: a client can also die between its report and
+        // its upload, like a TCP stream resetting mid-exchange
+        let mut live = Vec::with_capacity(cohort.len());
+        let mut live_requests = requests.map(|_| Vec::with_capacity(cohort.len()));
+        let mut fate = Vec::with_capacity(cohort.len());
+        for (p, &c) in cohort.iter().enumerate() {
+            let up = self.alive[c] && !self.drops_now(c);
+            fate.push(up);
+            if up {
+                live.push(c);
+                if let (Some(out), Some(reqs)) = (live_requests.as_mut(), requests) {
+                    out.push(reqs[p].clone());
+                }
+            }
+        }
+        let mut outs = self
+            .inner
+            .exchange(live_requests.as_deref(), &live)?
+            .into_iter();
+        Ok(fate
+            .into_iter()
+            .map(|up| if up { outs.next().expect("one update per live member") } else { None })
+            .collect())
+    }
+
+    fn backend(&mut self) -> &mut dyn Backend {
+        self.inner.backend()
+    }
+}
 
 /// Generation context handed to property bodies.
 pub struct Gen {

@@ -1,0 +1,429 @@
+//! Fleet-membership integration: rounds survive drops, absent clients'
+//! eq.-(2) ages keep growing against the dense oracle, recovered workers
+//! re-admit themselves through the `Rejoin` handshake, and recluster
+//! boundaries re-partition the fleet across shard pools (DESIGN.md §8).
+
+use ragek::age::DenseAgeVector;
+use ragek::backend::{Backend, RustBackend};
+use ragek::clustering::MergeRule;
+use ragek::config::{ExperimentConfig, Payload};
+use ragek::coordinator::engine::{ClientPool, ClientReport, RoundEngine};
+use ragek::coordinator::fleet::Membership;
+use ragek::coordinator::topology::{Reshard, ShardedEngine, Topology};
+use ragek::fl::codec::Codec;
+use ragek::fl::transport::{recv, send, Msg};
+use ragek::sparse::SparseVec;
+use ragek::testing::{prop_check, FlakyPool};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+
+fn chaos_cfg(n: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.n_clients = n;
+    cfg.payload = Payload::Delta;
+    cfg.rounds = rounds;
+    cfg.train_n = 200;
+    cfg.test_n = 64;
+    cfg.eval_every = 0;
+    cfg.recluster_every = 0; // singleton clusters: per-client age oracle
+    cfg
+}
+
+/// One chaos run: per-round uploaded logs, final params, per-client ages,
+/// total casualties, and the per-client rejoin generations.
+#[allow(clippy::type_complexity)]
+fn run_chaos(
+    cfg: &ExperimentConfig,
+    drop_rate: f32,
+    rejoin_after: usize,
+    chaos_seed: u64,
+) -> (Vec<Vec<Vec<u32>>>, Vec<f32>, Vec<Vec<u32>>, usize, Vec<u32>) {
+    let (mut pool, init) = FlakyPool::new(cfg, drop_rate, rejoin_after, chaos_seed).unwrap();
+    let mut engine = RoundEngine::new(cfg, init);
+    let mut casualties = 0;
+    for _ in 0..cfg.rounds {
+        let out = engine.run_round(&mut pool).unwrap();
+        casualties += out.casualties.len();
+    }
+    let log: Vec<Vec<Vec<u32>>> = engine.uploaded_log().iter().cloned().collect();
+    let ages: Vec<Vec<u32>> = (0..cfg.n_clients)
+        .map(|i| engine.ps().clusters().age_of_client(i).to_vec())
+        .collect();
+    let generations: Vec<u32> =
+        (0..cfg.n_clients).map(|i| engine.fleet().generation(i)).collect();
+    (log, engine.global_params().to_vec(), ages, casualties, generations)
+}
+
+/// Membership chaos is deterministic: the same seed drops and rejoins
+/// the same clients at the same rounds, producing bit-identical final
+/// parameters and uploaded logs — and the chaos actually bites (some
+/// casualties, some rejoins).
+#[test]
+fn chaos_run_is_deterministic() {
+    let cfg = chaos_cfg(4, 10);
+    let a = run_chaos(&cfg, 0.25, 2, 7);
+    let b = run_chaos(&cfg, 0.25, 2, 7);
+    assert_eq!(a.0, b.0, "uploaded logs must be identical across repeats");
+    assert_eq!(a.1, b.1, "final params must be identical across repeats");
+    assert_eq!(a.2, b.2, "ages must be identical across repeats");
+    assert!(a.3 > 0, "the chaos plan must actually drop someone");
+    assert!(
+        a.4.iter().any(|&g| g >= 1),
+        "at least one client must have rejoined: {:?}",
+        a.4
+    );
+    // with the chaos disabled, the fleet never degrades
+    let clean = run_chaos(&cfg, 0.0, 2, 7);
+    assert_eq!(clean.3, 0, "zero drop rate must produce zero casualties");
+    assert!(clean.4.iter().all(|&g| g == 0), "nobody rejoins on a healthy fleet");
+}
+
+/// Property: however the chaos plays out, every client's eq.-(2) age
+/// vector equals the [`DenseAgeVector`] oracle replayed from the
+/// uploaded log — a dropped round is an empty record, i.e. pure uniform
+/// aging (monotone growth), never a reset.
+#[test]
+fn chaos_ages_match_dense_oracle() {
+    let mut cfg = chaos_cfg(4, 5);
+    cfg.r = 16;
+    cfg.k = 4;
+    prop_check("chaos-age-oracle", 4, |g| {
+        let chaos_seed = 0x5EED + g.case as u64;
+        let drop_rate = 0.1 + 0.1 * (g.case as f32);
+        let (log, _, ages, _, _) = run_chaos(&cfg, drop_rate, 1 + g.case % 3, chaos_seed);
+        let d = cfg.d();
+        let mut dense: Vec<DenseAgeVector> =
+            (0..cfg.n_clients).map(|_| DenseAgeVector::new(d)).collect();
+        for (round, per_client) in log.iter().enumerate() {
+            for (i, uploaded) in per_client.iter().enumerate() {
+                let before_max = dense[i].max_age();
+                dense[i].update(uploaded);
+                if uploaded.is_empty() && dense[i].max_age() != before_max + 1 {
+                    return Err(format!(
+                        "round {round}: absent client {i} must age uniformly by +1"
+                    ));
+                }
+            }
+        }
+        for (i, dense_i) in dense.iter().enumerate() {
+            if ages[i] != dense_i.as_slice() {
+                return Err(format!("client {i}: lazy ages diverged from the dense oracle"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A fully-dead fleet stalls without corrupting state: rounds keep
+/// committing (ages grow), and once everyone rejoins training resumes.
+#[test]
+fn total_outage_recovers_after_rejoin() {
+    let cfg = chaos_cfg(2, 8);
+    // drop rate 1.0: both clients die at round 1, rejoin 2 rounds later,
+    // immediately die again, and so on
+    let (log, params, _, casualties, generations) = run_chaos(&cfg, 1.0, 2, 3);
+    assert_eq!(log.len(), 8, "every round commits");
+    assert!(casualties >= 4);
+    assert!(generations.iter().all(|&g| g >= 1), "everyone rejoined at least once");
+    assert!(params.iter().all(|p| p.is_finite()));
+}
+
+// ====================================================== TCP kill/rejoin
+
+/// A scripted protocol round: answer a `Model` broadcast with a fixed
+/// report and the echoed request — no real training, so the thread is
+/// fast and fully deterministic.
+fn scripted_round(stream: &mut TcpStream, id: u32, round: u32, base: u32) -> anyhow::Result<()> {
+    let idx: Vec<u32> = (0..12u32).map(|j| base + j).collect();
+    let val: Vec<f32> = (0..12).map(|j| 12.0 - j as f32).collect();
+    let report = SparseVec::new(idx, val);
+    send(
+        stream,
+        &Msg::Report { client_id: id, round, report: report.clone(), mean_loss: 1.0 },
+        Codec::Raw,
+    )?;
+    let requested = match recv(stream, Codec::Raw)? {
+        Msg::Request { indices, round: r } if r == round => indices,
+        other => anyhow::bail!("expected Request, got {other:?}"),
+    };
+    let update = ragek::fl::client::Client::answer_request(&report, &requested);
+    send(stream, &Msg::Update { client_id: id, round, update }, Codec::Raw)?;
+    Ok(())
+}
+
+/// Acceptance pin: a worker killed mid-round no longer aborts training —
+/// the round completes with the survivors, the dead client's ages keep
+/// growing, and the reconnecting worker rejoins via the `Rejoin` frame
+/// (model resync included) and contributes to later rounds.
+#[test]
+fn tcp_worker_killed_mid_round_rejoins_and_contributes() {
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.n_clients = 2;
+    cfg.payload = Payload::Delta;
+    cfg.rounds = 6;
+    cfg.train_n = 200;
+    cfg.test_n = 64;
+    cfg.eval_every = 0;
+    cfg.io_timeout_ms = 2000;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server_cfg = cfg.clone();
+    let server = thread::spawn(move || {
+        ragek::fl::distributed::run_server_on(&server_cfg, listener)
+    });
+
+    // worker 0: a real, healthy worker for the whole run
+    let wcfg = cfg.clone();
+    let worker = thread::spawn(move || {
+        ragek::fl::distributed::run_worker(&wcfg, &format!("127.0.0.1:{}", addr.port()), 0)
+    });
+
+    // worker 1: scripted mortal — plays rounds 1-2, is killed mid-round 3
+    // (right after receiving the broadcast), then reconnects with a
+    // Rejoin frame and plays every remaining round
+    let mortal = thread::spawn(move || -> anyhow::Result<()> {
+        let mut s = TcpStream::connect(addr)?;
+        send(&mut s, &Msg::Join { client_id: 1, codec: Codec::Raw }, Codec::Raw)?;
+        loop {
+            match recv(&mut s, Codec::Raw)? {
+                Msg::Model { round, .. } => {
+                    if round >= 3 {
+                        drop(s); // killed mid-round: model received, no report
+                        break;
+                    }
+                    scripted_round(&mut s, 1, round, 100)?;
+                }
+                Msg::Sit { .. } => continue,
+                Msg::Shutdown => return Ok(()),
+                other => anyhow::bail!("unexpected {other:?}"),
+            }
+        }
+        // ---- the comeback: re-admission via the Rejoin handshake
+        let mut s = TcpStream::connect(addr)?;
+        send(
+            &mut s,
+            &Msg::Rejoin { client_id: 1, generation: 1, codec: Codec::Raw },
+            Codec::Raw,
+        )?;
+        // the PS answers with the current global model (the resync)
+        match recv(&mut s, Codec::Raw)? {
+            Msg::Model { .. } => {}
+            Msg::Shutdown => return Ok(()), // refused / run over: nothing to do
+            other => anyhow::bail!("rejoin: expected Model resync, got {other:?}"),
+        }
+        loop {
+            match recv(&mut s, Codec::Raw)? {
+                Msg::Model { round, .. } => scripted_round(&mut s, 1, round, 100)?,
+                Msg::Sit { .. } => continue,
+                Msg::Shutdown => return Ok(()),
+                other => anyhow::bail!("unexpected {other:?}"),
+            }
+        }
+    });
+
+    let report = server.join().unwrap().expect("the kill must not abort the run");
+    let _ = worker.join().unwrap();
+    mortal.join().unwrap().expect("the mortal's script must complete");
+
+    assert_eq!(report.rounds, 6);
+    assert!(report.casualties >= 1, "the kill must be observed as a casualty");
+    assert_eq!(report.rejoins, 1, "exactly one Rejoin must have been admitted");
+    // round 3 (index 2): the kill round — client 1 contributed nothing
+    assert!(report.uploaded_log[2][1].is_empty(), "killed client uploads nothing");
+    assert!(!report.uploaded_log[2][0].is_empty(), "the survivor finished round 3");
+    // after the rejoin, client 1 contributes again
+    let contributed_after = report.uploaded_log[3..]
+        .iter()
+        .any(|round| !round[1].is_empty());
+    assert!(contributed_after, "the rejoined worker must contribute to later rounds");
+    // while client 1 was gone, its (singleton-cluster) ages only grew:
+    // replay the dense oracle over the full log
+    let d = cfg.d();
+    let mut dense = DenseAgeVector::new(d);
+    for round in &report.uploaded_log {
+        let before = dense.max_age();
+        dense.update(&round[1]);
+        if round[1].is_empty() {
+            assert_eq!(dense.max_age(), before + 1, "absence must age uniformly");
+        }
+    }
+}
+
+// ==================================================== dynamic re-shard
+
+/// A scripted, deterministic shard pool: every client reports a fixed
+/// index window keyed by its **global** id — clients 2 and 3 share one
+/// window, so the root's fleet-wide DBSCAN must pair them even though
+/// they start on different shards. Implements [`Reshard`] by moving the
+/// global ids themselves.
+struct ScriptedPool {
+    ids: Vec<usize>,
+    backend: RustBackend,
+    r: usize,
+}
+
+impl ScriptedPool {
+    fn base(g: usize) -> u32 {
+        if g == 2 || g == 3 {
+            500 // the twins: identical request histories
+        } else {
+            100 * g as u32
+        }
+    }
+}
+
+impl ClientPool for ScriptedPool {
+    fn n_clients(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn train_and_report(
+        &mut self,
+        _global: &[f32],
+        cohort: &[usize],
+    ) -> anyhow::Result<Vec<Option<ClientReport>>> {
+        Ok(cohort
+            .iter()
+            .map(|&c| {
+                let base = Self::base(self.ids[c]);
+                let idx: Vec<u32> = (0..self.r as u32).map(|j| base + j).collect();
+                let val: Vec<f32> = (0..self.r).map(|j| (self.r - j) as f32).collect();
+                Some(ClientReport { report: SparseVec::new(idx, val), mean_loss: 1.0 })
+            })
+            .collect())
+    }
+
+    fn exchange(
+        &mut self,
+        requests: Option<&[Vec<u32>]>,
+        cohort: &[usize],
+    ) -> anyhow::Result<Vec<Option<SparseVec>>> {
+        let reqs = requests.expect("rAge-k is PS-side");
+        assert_eq!(reqs.len(), cohort.len());
+        Ok(reqs
+            .iter()
+            .map(|req| Some(SparseVec::new(req.clone(), vec![1.0; req.len()])))
+            .collect())
+    }
+
+    fn backend(&mut self) -> &mut dyn Backend {
+        &mut self.backend
+    }
+}
+
+impl Reshard for ScriptedPool {
+    type Carry = usize;
+
+    fn take_parts(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.ids)
+    }
+
+    fn install_parts(&mut self, parts: Vec<usize>) {
+        self.ids = parts;
+    }
+}
+
+/// Acceptance pin: a recluster event with `shards >= 2` re-partitions
+/// the clients across shard pools via `ClusterManager::shard_slices` —
+/// here the twins (2, 3) start on *different* shards, the fleet-wide
+/// DBSCAN pairs them at the round-2 boundary, and client 3's state is
+/// handed to shard 0 — with the merged age vectors still equal to the
+/// dense oracle after the hand-off.
+#[test]
+fn recluster_reshards_across_pools_with_exact_ages() {
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.n_clients = 6;
+    cfg.payload = Payload::Delta;
+    cfg.participation = 1.0;
+    cfg.recluster_every = 2;
+    cfg.k = 2;
+    cfg.r = 6;
+    cfg.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+    let d = cfg.d();
+
+    let mut engine = ShardedEngine::new(&cfg, vec![0.0; d]).unwrap();
+    assert_eq!(engine.slices(), &[vec![0, 1, 2], vec![3, 4, 5]], "static initial split");
+    let mut pools: Vec<ScriptedPool> = engine
+        .slices()
+        .iter()
+        .map(|slice| ScriptedPool {
+            ids: slice.clone(),
+            backend: RustBackend::new(cfg.r, cfg.lr_client, cfg.seed),
+            r: cfg.r,
+        })
+        .collect();
+
+    // rounds 1-2: static assignment; the round-2 boundary reclusters
+    // fleet-wide and moves client 3 into shard 0 (twins 2+3 cluster,
+    // shard_slices targets 3+3 -> [0,1]+[2,3] overfills shard 0)
+    engine.run_round_serial(&mut pools).unwrap();
+    assert!(engine.reshard_log.is_empty());
+    let out2 = engine.run_round_serial(&mut pools).unwrap();
+    assert_eq!(out2.reclustered, Some(5), "twins merge: 5 fleet-wide clusters");
+    assert_eq!(
+        engine.slices(),
+        &[vec![0, 1, 2, 3], vec![4, 5]],
+        "the recluster boundary must re-partition via shard_slices"
+    );
+    assert_eq!(engine.reshard_log, vec![(2, 1)], "exactly client 3 moved");
+    assert_eq!(pools[0].ids, vec![0, 1, 2, 3], "shard 0 now drives the moved client");
+    assert_eq!(pools[1].ids, vec![4, 5]);
+
+    // rounds 3-4 run over the new assignment (round 4 reclusters again:
+    // same groups, no further movement)
+    engine.run_round_serial(&mut pools).unwrap();
+    let out4 = engine.run_round_serial(&mut pools).unwrap();
+    assert_eq!(out4.reclustered, Some(5));
+    assert_eq!(engine.reshard_log.len(), 1, "a stable clustering must not re-move");
+
+    // ---- dense eq.-(2) oracle across the merge + hand-off:
+    // rounds 1-2 evolve per-client singletons; the boundary merges the
+    // twins (elementwise min); rounds 3-4 update the twin cluster with
+    // the union of their uploads and everyone else per-client.
+    let log: Vec<Vec<Vec<u32>>> = engine.uploaded_log().iter().cloned().collect();
+    assert_eq!(log.len(), 4);
+    let mut dense: Vec<DenseAgeVector> = (0..6).map(|_| DenseAgeVector::new(d)).collect();
+    for round in &log[..2] {
+        for (g, uploaded) in round.iter().enumerate() {
+            dense[g].update(uploaded);
+        }
+    }
+    let mut twins = dense[2].clone();
+    twins.merge_min(&dense[3]);
+    for round in &log[2..] {
+        for g in [0usize, 1, 4, 5] {
+            dense[g].update(&round[g]);
+        }
+        let mut union: Vec<u32> = round[2].clone();
+        union.extend_from_slice(&round[3]);
+        union.sort_unstable();
+        union.dedup();
+        twins.update(&union);
+    }
+    let mut oracle = dense[0].clone();
+    for v in [&dense[1], &twins, &dense[4], &dense[5]] {
+        oracle.merge_min(v);
+    }
+    assert_eq!(
+        engine.merged_ages().to_vec(),
+        oracle.as_slice(),
+        "merged ages must equal the dense oracle after the hand-off"
+    );
+
+    // the twins coordinate disjointly inside their (post-move) cluster
+    let r3 = &log[2];
+    assert!(
+        r3[2].iter().all(|j| !r3[3].contains(j)),
+        "clustered twins must receive disjoint requests: {:?} vs {:?}",
+        r3[2],
+        r3[3]
+    );
+
+    // fleet records rode along with the hand-off: everyone still Active
+    for shard in engine.shards() {
+        for i in 0..shard.fleet().n() {
+            assert_eq!(shard.fleet().state(i), Membership::Active);
+        }
+    }
+}

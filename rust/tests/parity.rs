@@ -266,6 +266,33 @@ fn sharded_sim_and_tcp_are_identical() {
     assert_eq!(report.model_encodes, 2 * cfg.rounds as u64);
 }
 
+/// Topology pin 4: root-level reclustering + dynamic re-sharding run the
+/// identical deterministic sequence on both transports. With PaperPairs
+/// over 6 clients and 2 shards, pair (2,3) straddles the initial
+/// contiguous slices — once the fleet-wide DBSCAN finds the pairs, the
+/// recluster boundary re-partitions via `ClusterManager::shard_slices`
+/// and a worker stream is handed between the shard pools; either way
+/// (pairs found or not) the sim and TCP runs must stay bit-for-bit
+/// identical, with the rolled-up wire accounting still equal to the
+/// observed socket bytes.
+#[test]
+fn resharding_sharded_sim_and_tcp_are_identical() {
+    let mut cfg = parity_cfg(StrategyKind::RageK);
+    cfg.n_clients = 6;
+    cfg.rounds = 8;
+    cfg.recluster_every = 4;
+    cfg.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+    assert!(cfg.reshard, "dynamic re-sharding is on by default");
+    let (sim_log, sim_params, sim_comm) = run_sim_comm(&cfg);
+    let report = run_tcp(&cfg);
+    assert_eq!(report.uploaded_log, sim_log, "uploads must match across the re-shard");
+    assert_eq!(report.final_params, sim_params, "params must match bit-for-bit");
+    assert_eq!(report.comm, sim_comm);
+    assert_eq!(report.comm.wire_up, report.wire_up_observed);
+    assert_eq!(report.comm.wire_down, report.wire_down_observed);
+    assert_eq!(report.casualties, 0, "a clean run has no casualties");
+}
+
 /// The age-debt scheduler is deterministic PS state, so it too must agree
 /// across transports.
 #[test]

@@ -345,6 +345,145 @@ fn off_cohort_cluster_ages_grow_monotonically() {
     });
 }
 
+/// The stamp-versioned [`CohortMap`] must be observationally identical
+/// to the naive rebuild-a-`Vec` inverse map it replaced (the old
+/// `cohort_positions`), across arbitrary re-keyings — including shrinking
+/// and growing `n` mid-stream, which a dynamic re-shard does.
+///
+/// [`CohortMap`]: ragek::coordinator::engine::CohortMap
+#[test]
+fn cohort_map_matches_naive_position_vector() {
+    use ragek::coordinator::engine::CohortMap;
+    // the replaced implementation, verbatim
+    fn naive(n: usize, cohort: &[usize]) -> Vec<usize> {
+        let mut pos = vec![usize::MAX; n];
+        for (p, &c) in cohort.iter().enumerate() {
+            pos[c] = p;
+        }
+        pos
+    }
+    prop_check("cohort-map-oracle", 150, |g| {
+        let mut map = CohortMap::new();
+        let rekeys = g.usize_in(1, 12);
+        for _ in 0..rekeys {
+            let n = g.usize_in(1, 64);
+            let m = g.usize_in(1, n);
+            let mut cohort: Vec<usize> = g.rng.choose_k(n, m);
+            cohort.sort_unstable();
+            map.set(n, &cohort);
+            let want = naive(n, &cohort);
+            for (i, &w) in want.iter().enumerate() {
+                if map.slot(i) != w {
+                    return Err(format!(
+                        "n={n} cohort={cohort:?}: slot({i}) = {} want {w}",
+                        map.slot(i)
+                    ));
+                }
+                let as_opt = if w == usize::MAX { None } else { Some(w) };
+                if map.get(i) != as_opt {
+                    return Err(format!("get({i}) disagrees with slot({i})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The dynamic re-shard hand-off must not lose age information: carving
+/// a fleet-wide [`ClusterManager`] into arbitrary (sorted, disjoint)
+/// slices with `split_cluster_manager` — straddling clusters get cloned
+/// vectors — and merging every per-shard cluster vector back together
+/// yields exactly the merge of the original cluster vectors, checked
+/// against the [`DenseAgeVector`] oracle for both merge rules.
+///
+/// [`ClusterManager`]: ragek::clustering::ClusterManager
+#[test]
+fn reshard_handoff_preserves_merged_ages() {
+    use ragek::clustering::{ClusterManager, MergeRule};
+    use ragek::coordinator::topology::split_cluster_manager;
+    prop_check("reshard-age-handoff", 100, |g| {
+        let n = g.usize_in(2, 12);
+        let d = g.usize_in(4, 60);
+        // random clustering of 0..n: assign each client a group id, then
+        // evolve one (lazy + dense) age vector per group
+        let n_groups = g.usize_in(1, n);
+        let mut assign: Vec<usize> = (0..n).map(|_| g.usize_in(0, n_groups - 1)).collect();
+        for (gid, a) in assign.iter_mut().enumerate().take(n_groups) {
+            *a = gid; // every group non-empty
+        }
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+        for (c, &gid) in assign.iter().enumerate() {
+            groups[gid].push(c);
+        }
+        groups.retain(|grp| !grp.is_empty());
+        groups.sort();
+        let mut ages = Vec::new();
+        let mut dense = Vec::new();
+        for _ in 0..groups.len() {
+            let mut lazy = AgeVector::new(d);
+            let mut dns = DenseAgeVector::new(d);
+            for _ in 0..g.usize_in(0, 10) {
+                let k = g.usize_in(1, d);
+                let sel = g.vec_u32_distinct(d, k);
+                lazy.update(&sel);
+                dns.update(&sel);
+            }
+            ages.push(lazy);
+            dense.push(dns);
+        }
+        let fleet =
+            ClusterManager::from_parts(n, d, MergeRule::Min, groups.clone(), ages.clone());
+
+        // random disjoint sorted slices (NOT cluster-aligned on purpose:
+        // the straddle path must preserve ages too)
+        let n_slices = g.usize_in(1, n);
+        let order = g.rng.choose_k(n, n);
+        let mut slices: Vec<Vec<usize>> = vec![Vec::new(); n_slices];
+        for (i, &c) in order.iter().enumerate() {
+            slices[i % n_slices].push(c);
+        }
+        slices.retain(|s| !s.is_empty());
+        for s in slices.iter_mut() {
+            s.sort_unstable();
+        }
+
+        for rule in [MergeRule::Min, MergeRule::Max] {
+            // merge of every per-shard cluster vector after the hand-off
+            let mut merged: Option<AgeVector> = None;
+            for slice in &slices {
+                let part = split_cluster_manager(&fleet, slice, d, rule);
+                for c in 0..part.n_clusters() {
+                    let v = part.age_of_cluster(c);
+                    match &mut merged {
+                        None => merged = Some(v.clone()),
+                        Some(a) => match rule {
+                            MergeRule::Min => a.merge_min(v),
+                            MergeRule::Max => a.merge_max(v),
+                        },
+                    }
+                }
+            }
+            // dense oracle over the ORIGINAL cluster vectors
+            let mut oracle = dense[0].clone();
+            for v in &dense[1..] {
+                match rule {
+                    MergeRule::Min => oracle.merge_min(v),
+                    MergeRule::Max => oracle.merge_max(v),
+                }
+            }
+            let merged = merged.expect("at least one cluster");
+            if merged.to_vec() != oracle.as_slice() {
+                return Err(format!(
+                    "{rule:?}: hand-off changed the merged ages: {:?} vs {:?}",
+                    merged.to_vec(),
+                    oracle.as_slice()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn aggregation_is_linear_and_order_invariant() {
     prop_check("aggregation-linearity", 100, |g| {
