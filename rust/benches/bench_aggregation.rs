@@ -48,6 +48,14 @@ fn main() {
         b.run_units(&format!("updated_indices   {tag}"), Some((n * k) as f64), || {
             std::hint::black_box(agg.updated_indices());
         });
+        // allocation-free variant on the per-round delta-ring hot path:
+        // the scratch Vec is reused across calls, so steady state is
+        // pure sort+dedup with zero allocator traffic
+        let mut union_scratch: Vec<u32> = Vec::new();
+        b.run_units(&format!("updated_idx_into  {tag}"), Some((n * k) as f64), || {
+            agg.updated_indices_into(&mut union_scratch);
+            std::hint::black_box(union_scratch.len());
+        });
     }
     b.save();
 }

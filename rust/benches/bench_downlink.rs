@@ -1,0 +1,114 @@
+//! Downlink cost: dense model broadcasts vs generation-addressed delta
+//! broadcasts (DESIGN.md §9) on the standard 8-client MNIST scenario
+//! (`ragek::bench::sharding::scenario` — shared with `bench_sharding` so
+//! the config cannot drift).
+//!
+//! Runs the same fixed-seed training schedule once per (topology,
+//! participation, downlink) cell and prints the deterministic aggregate
+//! bytes/round table. Wire accounting is exact frame arithmetic (pinned
+//! equal to `encode().len()` by the transport tests), so the table is
+//! reproducible run to run and `BENCH_downlink.json` records it as the
+//! committed baseline. Asserts, per cell:
+//!
+//! - delta `wire_down` at least 20x below dense (the PR's headline win),
+//! - uplink/`wire_up` byte-identical dense vs delta (downlink-only knob).
+
+use ragek::bench::{sharding, Bench};
+use ragek::config::{Downlink, Payload};
+use ragek::fl::metrics::CommStats;
+use ragek::fl::trainer::Trainer;
+use ragek::util::json::Json;
+
+const ROUNDS: usize = 4;
+
+/// The PR's regression floor for the standard scenario (analytically
+/// ~219x at full participation: 1,272,912 B/round dense vs ~5,808 delta).
+const RATIO_FLOOR: f64 = 20.0;
+
+fn run_cell(
+    shards: usize,
+    participation: f64,
+    downlink: Downlink,
+    b: &mut Bench,
+    label: &str,
+) -> anyhow::Result<CommStats> {
+    let mut cfg = sharding::scenario(shards, ROUNDS);
+    cfg.participation = participation;
+    cfg.downlink = downlink;
+    // the delta downlink needs an index-sparse server apply (grad+adam
+    // moves parameters outside the uploaded union); both cells of a
+    // dense/delta pair share the payload so the comparison is exact
+    cfg.payload = Payload::Delta;
+    let mut t = Trainer::from_config(&cfg)?;
+    b.run_once(label, || {
+        for _ in 0..ROUNDS {
+            t.run_round().unwrap();
+        }
+    });
+    Ok(t.comm())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("downlink");
+
+    let mut table = Vec::new();
+    println!("\naggregate bytes/round (raw codec, n=8, {ROUNDS} rounds):");
+    println!(
+        "{:<24} {:>14} {:>14} {:>8}",
+        "cell", "dense down", "delta down", "ratio"
+    );
+    for (tag, shards, participation) in [
+        ("flat p=1.0", 0usize, 1.0f64),
+        ("flat p=0.5", 0, 0.5),
+        ("sharded-x2 p=1.0", 2, 1.0),
+        ("sharded-x2 p=0.5", 2, 0.5),
+    ] {
+        let dense_label = format!("{ROUNDS} rounds {tag} dense");
+        let dense = run_cell(shards, participation, Downlink::Dense, &mut b, &dense_label)?;
+        let delta_label = format!("{ROUNDS} rounds {tag} delta");
+        let delta = run_cell(shards, participation, Downlink::Delta, &mut b, &delta_label)?;
+        let r = ROUNDS as u64;
+        let ratio = dense.wire_down as f64 / delta.wire_down.max(1) as f64;
+        println!(
+            "{tag:<24} {:>14} {:>14} {:>7.1}x",
+            dense.wire_down / r,
+            delta.wire_down / r,
+            ratio
+        );
+        assert!(
+            ratio >= RATIO_FLOOR,
+            "{tag}: delta downlink ratio {ratio:.1}x regressed below {RATIO_FLOOR}x \
+             (dense {} B vs delta {} B over {ROUNDS} rounds)",
+            dense.wire_down,
+            delta.wire_down
+        );
+        assert_eq!(
+            (dense.uplink(), dense.wire_up),
+            (delta.uplink(), delta.wire_up),
+            "{tag}: the downlink knob must not change a single uplink byte"
+        );
+        table.push(Json::obj(vec![
+            ("cell", Json::Str(tag.to_string())),
+            ("shards", Json::Num(shards as f64)),
+            ("participation", Json::Num(participation)),
+            ("rounds", Json::Num(ROUNDS as f64)),
+            ("dense_wire_down_per_round", Json::Num((dense.wire_down / r) as f64)),
+            ("delta_wire_down_per_round", Json::Num((delta.wire_down / r) as f64)),
+            ("ratio", Json::Num(ratio)),
+            ("wire_up_per_round", Json::Num((dense.wire_up / r) as f64)),
+        ]));
+    }
+    println!("(ratio floor asserted: >= {RATIO_FLOOR}x in every cell)");
+
+    // machine-readable bytes table next to the timing results
+    let dir = std::path::Path::new("results/bench");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let j = Json::obj(vec![("bytes_per_round", Json::Arr(table))]);
+        let path = dir.join("downlink_bytes.json");
+        let _ = std::fs::write(&path, j.to_pretty());
+        println!("  -> {}", path.display());
+    }
+
+    b.save();
+    Ok(())
+}

@@ -36,6 +36,39 @@ pub enum Payload {
     Grad,
 }
 
+/// How the PS ships the global model to cohort members each round
+/// (DESIGN.md §9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Downlink {
+    /// full dense `Model` frame every round (the PR-5 behavior; byte-
+    /// identical wire traffic, the default)
+    #[default]
+    Dense,
+    /// generation-addressed sparse `Delta` frames against each client's
+    /// last-acked model generation, with digest verification and a
+    /// dense fallback when the generation gap is unbridgeable (or the
+    /// dense frame is smaller). Bit-for-bit identical model trajectory
+    /// — only the wire bytes change (pinned in rust/tests/parity.rs).
+    Delta,
+}
+
+impl Downlink {
+    pub fn name(self) -> &'static str {
+        match self {
+            Downlink::Dense => "dense",
+            Downlink::Delta => "delta",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Downlink> {
+        match s {
+            "dense" => Some(Downlink::Dense),
+            "delta" => Some(Downlink::Delta),
+            _ => None,
+        }
+    }
+}
+
 /// What "accuracy averaged over all users" (Fig. 3/5) evaluates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EvalMode {
@@ -91,6 +124,11 @@ pub struct ExperimentConfig {
     /// protocol semantics; `packed` runs are bit-for-bit identical to
     /// `raw` (rust/tests/parity.rs).
     pub codec: Codec,
+    /// downlink broadcast mode: `dense` (full `Model` frame, default) |
+    /// `delta` (generation-addressed sparse broadcasts, DESIGN.md §9).
+    /// Like `codec`, this only changes bytes on the wire — never the
+    /// model trajectory.
+    pub downlink: Downlink,
     pub r: usize,
     pub k: usize,
     /// local iterations per global round (paper H)
@@ -143,6 +181,7 @@ impl ExperimentConfig {
             io_timeout_ms: 0,
             reshard: true,
             codec: Codec::Raw,
+            downlink: Downlink::Dense,
             r: 75,
             k: 10,
             h: 4,
@@ -197,6 +236,7 @@ impl ExperimentConfig {
             io_timeout_ms: 0,
             reshard: true,
             codec: Codec::Raw,
+            downlink: Downlink::Dense,
             r: 2500,
             k: 100,
             h: 8,               // paper: 100
@@ -293,6 +333,19 @@ impl ExperimentConfig {
         if !matches!(self.server_opt.as_str(), "adam" | "sgd") {
             bail!("server_opt must be adam or sgd");
         }
+        if self.downlink == Downlink::Delta
+            && self.payload == Payload::Grad
+            && self.server_opt != "sgd"
+        {
+            // a dense server optimizer (Adam moments) moves parameters
+            // outside the uploaded index union, so the engine's
+            // updated-indices ledger would no longer cover what changed
+            bail!(
+                "downlink=delta with payload=grad requires server_opt=sgd \
+                 (a dense server optimizer changes parameters outside the \
+                 uploaded index union)"
+            );
+        }
         Ok(())
     }
 
@@ -326,6 +379,7 @@ impl ExperimentConfig {
             ("io_timeout_ms", Json::Num(self.io_timeout_ms as f64)),
             ("reshard", Json::Bool(self.reshard)),
             ("codec", Json::Str(self.codec.name().into())),
+            ("downlink", Json::Str(self.downlink.name().into())),
             ("r", Json::Num(self.r as f64)),
             ("k", Json::Num(self.k as f64)),
             ("h", Json::Num(self.h as f64)),
@@ -418,6 +472,10 @@ impl ExperimentConfig {
         if let Some(s) = j.get("codec").and_then(Json::as_str) {
             c.codec =
                 Codec::parse(s).with_context(|| format!("unknown codec {s:?}"))?;
+        }
+        if let Some(s) = j.get("downlink").and_then(Json::as_str) {
+            c.downlink =
+                Downlink::parse(s).with_context(|| format!("unknown downlink {s:?}"))?;
         }
         num!(r, "r", usize);
         num!(k, "k", usize);
@@ -516,6 +574,8 @@ mod tests {
         cfg.participation = 0.3;
         cfg.scheduler = SchedulerKind::AgeDebt;
         cfg.codec = Codec::PackedF16;
+        cfg.downlink = Downlink::Delta;
+        cfg.payload = Payload::Delta; // delta downlink + grad would need server sgd
         cfg.topology = Topology::Sharded { shards: 3, root_merge: MergeRule::Max };
         cfg.io_timeout_ms = 1500;
         cfg.reshard = false;
@@ -529,6 +589,12 @@ mod tests {
         assert_eq!(back.participation, 0.3);
         assert_eq!(back.scheduler, SchedulerKind::AgeDebt);
         assert_eq!(back.codec, Codec::PackedF16);
+        assert_eq!(back.downlink, Downlink::Delta);
+        assert_eq!(
+            ExperimentConfig::mnist_paper().downlink,
+            Downlink::Dense,
+            "the downlink defaults dense"
+        );
         assert_eq!(back.topology, cfg.topology);
         assert_eq!(back.io_timeout_ms, 1500);
         assert!(!back.reshard);
@@ -563,6 +629,17 @@ mod tests {
         let mut c = ExperimentConfig::mnist_paper();
         c.server_opt = "adagrad".into();
         assert!(c.validate().is_err());
+        // delta downlink needs a sparse server update: grad+adam moves
+        // parameters outside the uploaded index union
+        let mut c = ExperimentConfig::mnist_paper(); // payload=grad, adam
+        c.downlink = Downlink::Delta;
+        assert!(c.validate().is_err());
+        c.server_opt = "sgd".into();
+        assert!(c.validate().is_ok());
+        let mut c = ExperimentConfig::mnist_paper();
+        c.downlink = Downlink::Delta;
+        c.payload = Payload::Delta; // mean-drift apply is index-sparse
+        assert!(c.validate().is_ok());
         let mut c = ExperimentConfig::mnist_paper();
         c.participation = 0.0;
         assert!(c.validate().is_err());
@@ -595,6 +672,11 @@ mod tests {
         assert!(ExperimentConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"model": "mnist", "codec": "packed"}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&j).unwrap().codec, Codec::Packed);
+        let j = Json::parse(r#"{"model": "mnist", "downlink": "gzip"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j =
+            Json::parse(r#"{"model": "mnist", "downlink": "delta", "payload": "delta"}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().downlink, Downlink::Delta);
         let j = Json::parse(r#"{"model": "mnist", "root_merge": "avg"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"model": "mnist", "shards": 2}"#).unwrap();

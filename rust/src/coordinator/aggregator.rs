@@ -63,11 +63,20 @@ impl Aggregate {
         (idx, val)
     }
 
-    /// Union of updated indices this round, **sorted ascending** — a
-    /// coverage diagnostic for ablations/benches (`bench_aggregation`
-    /// exercises it); the hot path never calls it: the per-cluster
-    /// eq. (2) input is built from the per-client requested sets in
-    /// `ParameterServer::record_round`.
+    /// Union of updated indices this round, **sorted ascending**. The
+    /// delta downlink (DESIGN.md §9) feeds this into the engine's
+    /// generation ring every round, so the per-round path uses
+    /// [`Aggregate::updated_indices_into`] with a reused buffer; this
+    /// allocating form remains for diagnostics and tests.
+    pub fn updated_indices(&self) -> Vec<u32> {
+        let mut all = Vec::new();
+        self.updated_indices_into(&mut all);
+        all
+    }
+
+    /// Union of updated indices into a caller-owned buffer (cleared
+    /// first) — the hot-path form: steady-state rounds reuse capacity
+    /// and allocate nothing.
     ///
     /// Concatenate + sort + dedup instead of the former per-call
     /// `HashSet`: the parts are small (k entries each) and arrive in
@@ -75,14 +84,14 @@ impl Aggregate {
     /// preserved by the wire codec for bit-for-bit parity — so a pure
     /// k-way sorted merge is not available and one O(T log T) sort of
     /// the concatenation is the cheap, allocation-light union.
-    pub fn updated_indices(&self) -> Vec<u32> {
-        let mut all: Vec<u32> = Vec::with_capacity(self.total_entries);
+    pub fn updated_indices_into(&self, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(self.total_entries);
         for p in &self.parts {
-            all.extend_from_slice(&p.idx);
+            out.extend_from_slice(&p.idx);
         }
-        all.sort_unstable();
-        all.dedup();
-        all
+        out.sort_unstable();
+        out.dedup();
     }
 }
 
@@ -140,5 +149,19 @@ mod tests {
         agg.push(SparseVec::new(vec![9, 2], vec![1.0, 1.0]));
         assert_eq!(agg.updated_indices(), vec![1, 2, 9]);
         assert!(Aggregate::new().updated_indices().is_empty());
+    }
+
+    #[test]
+    fn updated_indices_into_reuses_capacity() {
+        let mut agg = Aggregate::new();
+        agg.push(SparseVec::new(vec![5, 3, 5], vec![1.0, 1.0, 1.0]));
+        agg.push(SparseVec::new(vec![4], vec![1.0]));
+        let mut buf = vec![99u32; 64]; // stale contents must be cleared
+        agg.updated_indices_into(&mut buf);
+        assert_eq!(buf, vec![3, 4, 5]);
+        assert_eq!(buf, agg.updated_indices(), "both forms agree");
+        let cap = buf.capacity();
+        agg.updated_indices_into(&mut buf);
+        assert_eq!(buf.capacity(), cap, "a same-shape reuse must not reallocate");
     }
 }

@@ -42,9 +42,10 @@
 
 use crate::backend::{Backend, GlobalState};
 use crate::clustering::ClusterManager;
-use crate::config::{ExperimentConfig, Payload};
+use crate::config::{Downlink, ExperimentConfig, Payload};
 use crate::coordinator::aggregator::Aggregate;
-use crate::coordinator::fleet::{Fleet, MemberRecord};
+use crate::coordinator::fleet::{Fleet, MemberRecord, ACKED_NONE};
+use crate::fl::codec::params_digest;
 use crate::coordinator::scheduler::{CohortScheduler, ScheduleCtx};
 use crate::coordinator::server::{ParameterServer, PsConfig};
 use crate::coordinator::strategies::{client_select, StrategyKind};
@@ -64,6 +65,43 @@ use std::collections::VecDeque;
 pub struct ClientReport {
     pub report: SparseVec,
     pub mean_loss: f32,
+}
+
+/// How one round's model broadcast reaches each cohort member under the
+/// delta downlink (`Downlink::Delta`, DESIGN.md §9). The engine owns the
+/// generation ledger ([`Fleet::acked_model`]) and the per-round
+/// updated-index ring, decides dense-vs-delta per member, and hands the
+/// pool this plan *before* [`ClientPool::train_and_report`]; the pool
+/// executes it frame for frame, which is what keeps the engine's wire
+/// mirror equal to the observed socket bytes (`rust/tests/parity.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct BroadcastPlan {
+    /// the model generation being broadcast (= the round being played,
+    /// 1-based) — the `round` field of every `Model`/`Delta` frame
+    pub round: u32,
+    /// [`params_digest`] of the broadcast model: a delta receiver proves
+    /// convergence against it, a diverged receiver deterministically
+    /// fails it and falls back to a full resync
+    pub digest: u64,
+    /// per client id: `Some(i)` = send `deltas[i]` as a sparse `Delta`
+    /// frame; `None` = full dense `Model` frame (off-cohort and
+    /// unreachable clients are `None` too — the pool never consults them)
+    pub assign: Vec<Option<usize>>,
+    /// distinct delta payloads this round: (base generation, sorted
+    /// indices changed between that generation and `round`) — one entry
+    /// per distinct base so the pool encodes each delta frame once
+    pub deltas: Vec<(u32, Vec<u32>)>,
+}
+
+impl BroadcastPlan {
+    /// The delta assigned to client `c`: (base generation, changed
+    /// indices), or `None` when `c` gets the dense model.
+    pub fn delta_for(&self, c: usize) -> Option<(u32, &[u32])> {
+        self.assign.get(c).copied().flatten().map(|i| {
+            let (base, idx) = &self.deltas[i];
+            (*base, idx.as_slice())
+        })
+    }
 }
 
 /// Where the clients of a round live. Implementations hold the clients'
@@ -101,6 +139,16 @@ pub trait ClientPool {
         let _ = global;
         Ok(Vec::new())
     }
+
+    /// The engine's broadcast plan for the upcoming
+    /// [`Self::train_and_report`] call (delta downlink, DESIGN.md §9):
+    /// which cohort members receive a sparse `Delta` frame instead of the
+    /// dense model, and the digest the applied result must hash to. Only
+    /// called under `Downlink::Delta` — a transport without a delta path
+    /// can ignore it (the engine still *accounts* dense frames for every
+    /// member the plan marked dense). Called at most once per round,
+    /// always before `train_and_report`.
+    fn set_broadcast_plan(&mut self, _plan: &BroadcastPlan) {}
 
     /// Algorithm 1 lines 3-7 for the round's **cohort** (sorted, distinct
     /// client ids): broadcast `global` to the cohort, have each member
@@ -248,6 +296,14 @@ pub struct PartialRound {
 /// per round forever.
 pub const UPLOADED_LOG_CAP: usize = 512;
 
+/// How many completed rounds of updated-index unions the delta downlink
+/// retains ([`RoundEngine::note_model_update`]). A client whose last
+/// acked generation fell further behind than this gets a dense resync —
+/// at the paper's scales (k·n ≤ a few hundred indices per round) the cap
+/// bounds ring memory to a few hundred KB while covering every gap a
+/// live fleet produces.
+pub const DELTA_RING_CAP: usize = 64;
+
 /// The parameter-server side of Algorithm 1, shared by the in-process
 /// simulator and the TCP deployment (see module docs).
 pub struct RoundEngine {
@@ -268,6 +324,14 @@ pub struct RoundEngine {
     since_polled: Vec<u32>,
     /// per-client lifecycle registry (DESIGN.md §8)
     fleet: Fleet,
+    /// per completed round, newest at the back: the union of indices that
+    /// round's server update touched — the material the delta downlink
+    /// accumulates across a client's generation gap (DESIGN.md §9). Fed
+    /// only under `Downlink::Delta`; capped at [`DELTA_RING_CAP`] with
+    /// slot recycling, so steady-state rounds allocate nothing here.
+    delta_ring: VecDeque<Vec<u32>>,
+    /// scratch for per-base union accumulation in plan construction
+    union_scratch: Vec<u32>,
 }
 
 impl RoundEngine {
@@ -291,6 +355,8 @@ impl RoundEngine {
             scheduler: cfg.scheduler.build(cfg.seed),
             since_polled: vec![0; cfg.n_clients],
             fleet: Fleet::new(cfg.n_clients),
+            delta_ring: VecDeque::new(),
+            union_scratch: Vec::new(),
         }
     }
 
@@ -333,6 +399,109 @@ impl RoundEngine {
     /// into each shard engine every round; the flat path never calls this.
     pub fn set_global(&mut self, params: &[f32]) {
         self.global.params.copy_from_slice(params);
+    }
+
+    /// Record the round that just finished into the delta ring: the union
+    /// of indices its server update touched (`None` = an all-casualty
+    /// round whose update was skipped — an *empty* union, because the
+    /// broadcast model did not move). Call between the server apply and
+    /// [`Self::finish_round`]; the flat [`Self::run_round`] does this
+    /// itself, a sharded topology calls
+    /// [`Self::note_model_update_union`] with the root's fleet-wide
+    /// union instead. No-op under `Downlink::Dense`.
+    pub fn note_model_update(&mut self, agg: Option<&Aggregate>) {
+        if self.cfg.downlink != Downlink::Delta {
+            return;
+        }
+        let mut slot = self.recycled_ring_slot();
+        if let Some(agg) = agg {
+            agg.updated_indices_into(&mut slot);
+        }
+        self.delta_ring.push_back(slot);
+    }
+
+    /// Sharded-topology form of [`Self::note_model_update`]: the root
+    /// aggregator's **fleet-wide** sorted index union for the round just
+    /// applied. Every shard engine re-broadcasts the same root model, so
+    /// every shard's ring must carry the same unions — the root computes
+    /// one union and feeds it to each shard (Flat ≡ Sharded(1) is pinned
+    /// on exactly this). No-op under `Downlink::Dense`.
+    pub fn note_model_update_union(&mut self, union: &[u32]) {
+        if self.cfg.downlink != Downlink::Delta {
+            return;
+        }
+        let mut slot = self.recycled_ring_slot();
+        slot.extend_from_slice(union);
+        self.delta_ring.push_back(slot);
+    }
+
+    /// An empty `Vec<u32>` for the next ring entry, recycled from the
+    /// evicted oldest slot once the ring is full.
+    fn recycled_ring_slot(&mut self) -> Vec<u32> {
+        if self.delta_ring.len() >= DELTA_RING_CAP {
+            let mut slot = self.delta_ring.pop_front().unwrap();
+            slot.clear();
+            slot
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Build this round's [`BroadcastPlan`] (delta downlink only): for
+    /// each reachable cohort member, send the sparse delta from its last
+    /// acked generation iff the ledger knows that generation, the ring
+    /// still covers the gap, and the delta frame is strictly smaller
+    /// than the dense model frame — otherwise the full model. Members
+    /// sharing a base generation share one encoded delta payload.
+    fn build_broadcast_plan(&mut self, cohort: &[usize], health: &[bool]) -> BroadcastPlan {
+        let r = self.ps.round() as u32 + 1; // the round being played
+        let d = self.cfg.d();
+        let codec = self.cfg.codec;
+        let dense_bytes = wire::model_frame_bytes(d);
+        let mut plan = BroadcastPlan {
+            round: r,
+            digest: params_digest(&self.global.params),
+            assign: vec![None; self.cfg.n_clients],
+            deltas: Vec::new(),
+        };
+        for &c in cohort {
+            if !health[c] {
+                continue; // no frame is written to an unreachable stream
+            }
+            let base = self.fleet.acked_model(c);
+            if base == ACKED_NONE || base > r {
+                continue; // unknown (or nonsensical) base: dense resync
+            }
+            // the broadcast of round `base` reflects server updates
+            // through round base-1, this round's through r-1, so the gap
+            // is the update unions of rounds max(base,1)..=r-1 — the
+            // last `r - max(base,1)` ring entries (G(0) := G(1): round 1
+            // is an empty delta on top of the init model every worker
+            // already holds)
+            if let Some(i) = plan.deltas.iter().position(|(b, _)| *b == base) {
+                plan.assign[c] = Some(i); // same base, same delta payload
+                continue;
+            }
+            let gap = (r - base.max(1)) as usize;
+            if gap > self.delta_ring.len() {
+                continue; // fell off the ring: dense resync
+            }
+            let union = &mut self.union_scratch;
+            union.clear();
+            for round_union in self.delta_ring.iter().rev().take(gap) {
+                union.extend_from_slice(round_union);
+            }
+            union.sort_unstable();
+            union.dedup();
+            // a delta only rides when it beats the dense frame on the
+            // wire under the active codec (it essentially always does —
+            // the union is ~k·n indices against d parameters)
+            if wire::delta_frame_bytes(codec, union) < dense_bytes {
+                plan.assign[c] = Some(plan.deltas.len());
+                plan.deltas.push((base, union.clone()));
+            }
+        }
+        plan
     }
 
     /// Snapshot this engine's per-client membership state (frequency
@@ -409,6 +578,11 @@ impl RoundEngine {
                 self.cfg.n_clients,
                 &self.profile,
             )?;
+            self.note_model_update(Some(&agg));
+        } else {
+            // the update was skipped: the next broadcast differs from
+            // this one by nothing — an empty ring entry
+            self.note_model_update(None);
         }
         let reclustered = self.finish_round(uploaded, &survivors);
         Ok(RoundOutcome {
@@ -442,6 +616,10 @@ impl RoundEngine {
         for &c in &rejoined {
             ensure!(c < n, "pool re-admitted unknown client {c} (n = {n})");
             self.fleet.rejoin(c);
+            // the pool resynced the rejoiner to the *current* global (a
+            // full model, or a digest proof that it still holds it), so
+            // it provably holds this round's broadcast generation
+            self.fleet.set_acked_model(c, self.ps.round() as u32 + 1);
             crate::info!(
                 "round {}: client {c} rejoined (generation {})",
                 self.ps.round() + 1,
@@ -475,6 +653,18 @@ impl RoundEngine {
             self.scheduler.name()
         );
 
+        // ---- delta-downlink broadcast plan (DESIGN.md §9): decided by
+        // the engine from its generation ledger + update ring, executed
+        // frame for frame by the pool. Never built under Dense — that
+        // path stays bit-for-bit the classical dense broadcast.
+        let plan = if self.cfg.downlink == Downlink::Delta {
+            let plan = self.build_broadcast_plan(&cohort, &health);
+            pool.set_broadcast_plan(&plan);
+            Some(plan)
+        } else {
+            None
+        };
+
         // ---- broadcast + local training + top-r reports (lines 3-7)
         let phase1 = self
             .profile
@@ -488,13 +678,27 @@ impl RoundEngine {
         // phase-1 survivors and their reports, in (sorted) cohort order
         let mut alive: Vec<usize> = Vec::with_capacity(m);
         let mut reports: Vec<ClientReport> = Vec::with_capacity(m);
+        let broadcast_gen = self.ps.round() as u32 + 1;
         for (&c, rep) in cohort.iter().zip(phase1) {
             match rep {
                 Some(rep) => {
                     alive.push(c);
                     reports.push(rep);
+                    // a returned report proves the member received and
+                    // applied this round's broadcast (a diverged delta
+                    // receiver bails before reporting)
+                    self.fleet.set_acked_model(c, broadcast_gen);
                 }
-                None => casualties.push(c),
+                None => {
+                    // a member whose stream was never written keeps its
+                    // old (still valid) generation; one that dropped
+                    // mid-broadcast may or may not hold the new model —
+                    // the ledger must forget it (next broadcast dense)
+                    if health[c] {
+                        self.fleet.set_acked_model(c, ACKED_NONE);
+                    }
+                    casualties.push(c);
+                }
             }
         }
 
@@ -573,22 +777,47 @@ impl RoundEngine {
             self.comm.report_up += (m1 * r * 4) as u64;
             self.comm.request_down += (m1 * k * 4) as u64;
         }
-        self.comm.broadcast_down += (m_bcast * d * 4) as u64;
-
         // ---- exact wire accounting: the frame bytes this round costs
         // under the active codec, mirrored frame for frame from the TCP
-        // deployment (model + request + sit down; report + update up) and
-        // pinned equal to the observed socket bytes on casualty-free
-        // rounds by rust/tests/parity.rs (a stream that dies mid-frame
-        // leaves the observed count short by that partial frame — see
-        // DESIGN.md §8). The in-process pool has no wire, so for the
-        // simulator these are the bytes the same round *would* cost.
+        // deployment (model/delta + request + sit down; report + update
+        // up) and pinned equal to the observed socket bytes on
+        // casualty-free rounds by rust/tests/parity.rs (a stream that
+        // dies mid-frame leaves the observed count short by that partial
+        // frame — see DESIGN.md §8). The in-process pool has no wire, so
+        // for the simulator these are the bytes the same round *would*
+        // cost.
         let codec = self.cfg.codec;
+        match &plan {
+            // dense downlink: the classical broadcast, byte-identical to
+            // the pre-delta protocol
+            None => {
+                self.comm.broadcast_down += (m_bcast * d * 4) as u64;
+                self.comm.wire_down += (m_bcast * wire::model_frame_bytes(d)) as u64;
+            }
+            // delta downlink: each reachable cohort member costs exactly
+            // what the plan told the pool to write it — a sparse Delta
+            // frame (8 semantic bytes per changed coordinate) or the
+            // dense fallback
+            Some(p) => {
+                for &c in cohort.iter().filter(|&&c| health[c]) {
+                    match p.delta_for(c) {
+                        Some((_, idx)) => {
+                            self.comm.broadcast_down += (idx.len() * 8) as u64;
+                            self.comm.wire_down +=
+                                wire::delta_frame_bytes(codec, idx) as u64;
+                        }
+                        None => {
+                            self.comm.broadcast_down += (d * 4) as u64;
+                            self.comm.wire_down += wire::model_frame_bytes(d) as u64;
+                        }
+                    }
+                }
+            }
+        }
         // off-cohort reachable streams = all reachable minus the cohort's
         // reachable members (no O(n) membership mask needed)
         let sits = health.iter().filter(|&&h| h).count() - m_bcast;
-        self.comm.wire_down += (sits * wire::SIT_FRAME_BYTES) as u64
-            + (m_bcast * wire::model_frame_bytes(d)) as u64;
+        self.comm.wire_down += (sits * wire::SIT_FRAME_BYTES) as u64;
         for rep in &reports {
             self.comm.wire_up += wire::report_frame_bytes(codec, &rep.report.idx) as u64;
         }
@@ -1171,6 +1400,9 @@ mod tests {
         assert_eq!(out.cohort, vec![0, 1]);
         assert_eq!(engine.fleet().state(1), Membership::Active);
         assert_eq!(engine.fleet().generation(1), 1);
+        // the rejoin resync handed it the current global = round-3
+        // broadcast, and surviving the round confirmed it
+        assert_eq!(engine.fleet().acked_model(1), 3);
     }
 
     #[test]
@@ -1199,6 +1431,153 @@ mod tests {
         // sent coordinates left the error-feedback memory
         assert_eq!(memory[5], 0.0);
         assert_eq!(memory[9], 0.0);
+    }
+
+    /// Delta downlink, engine granularity: round 1 is an empty delta on
+    /// the init model every worker already holds; steady-state rounds
+    /// ride a shared delta whose indices are the previous round's upload
+    /// union; the accounting mirrors those frames exactly.
+    #[test]
+    fn delta_downlink_accounts_sparse_broadcast_frames() {
+        let mut cfg = smoke_cfg();
+        cfg.downlink = Downlink::Delta;
+        let d = cfg.d();
+        let n = cfg.n_clients as u64;
+        let req = (9 + 4 + 4 + 4 * cfg.k) as u64; // raw request frame
+        let mut pool = FakePool::healthy(&cfg);
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+
+        engine.run_round(&mut pool).unwrap();
+        let comm1 = engine.comm();
+        assert_eq!(comm1.broadcast_down, 0, "an empty delta moves no semantic bytes");
+        assert_eq!(
+            comm1.wire_down,
+            n * (wire::delta_frame_bytes(cfg.codec, &[]) as u64 + req)
+        );
+        assert_eq!(engine.fleet().acked_model(0), 1);
+        assert_eq!(engine.fleet().acked_model(1), 1);
+
+        engine.run_round(&mut pool).unwrap();
+        let mut union: Vec<u32> =
+            engine.uploaded_log()[0].iter().flatten().copied().collect();
+        union.sort_unstable();
+        union.dedup();
+        let comm2 = engine.comm();
+        assert_eq!(comm2.broadcast_down, n * 8 * union.len() as u64);
+        assert_eq!(
+            comm2.wire_down - comm1.wire_down,
+            n * (wire::delta_frame_bytes(cfg.codec, &union) as u64 + req),
+            "round 2 broadcasts one shared delta built from round 1's uploads"
+        );
+        // the whole point: two delta rounds cost a fraction of one dense
+        // model frame
+        assert!(comm2.wire_down * 20 < n * wire::model_frame_bytes(d) as u64);
+        // the raw/dense uplink is untouched by the downlink knob
+        assert_eq!(comm2.update_up, 2 * n * 8 * cfg.k as u64);
+    }
+
+    /// A mid-broadcast casualty may or may not hold the new model — the
+    /// ledger forgets it (next broadcast dense); a phase-2 casualty
+    /// provably received the broadcast and keeps its generation.
+    #[test]
+    fn delta_ledger_forgets_mid_broadcast_casualties() {
+        let mut cfg = smoke_cfg();
+        cfg.downlink = Downlink::Delta;
+        let d = cfg.d();
+        let mut pool = FakePool::healthy(&cfg);
+        pool.fail_phase1.insert(1);
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        engine.run_round(&mut pool).unwrap();
+        assert_eq!(engine.fleet().acked_model(0), 1);
+        assert_eq!(engine.fleet().acked_model(1), ACKED_NONE);
+
+        pool.fail_phase1.clear();
+        let before = engine.comm().wire_down;
+        engine.run_round(&mut pool).unwrap();
+        // client 0 rode the delta (round 1's union = its own uploads —
+        // the casualty uploaded nothing), client 1 was resynced dense
+        let mut union: Vec<u32> = engine.uploaded_log()[0][0].clone();
+        union.sort_unstable();
+        union.dedup();
+        let req = (9 + 4 + 4 + 4 * cfg.k) as u64;
+        assert_eq!(
+            engine.comm().wire_down - before,
+            wire::delta_frame_bytes(cfg.codec, &union) as u64
+                + wire::model_frame_bytes(d) as u64
+                + 2 * req
+        );
+        assert_eq!(engine.fleet().acked_model(1), 2, "the dense resync re-acked it");
+
+        // a phase-2 drop happens *after* the broadcast round-tripped:
+        // the generation survives
+        pool.fail_phase2.insert(0);
+        engine.run_round(&mut pool).unwrap();
+        assert_eq!(engine.fleet().acked_model(0), 3);
+        assert_eq!(engine.fleet().state(0), Membership::Suspect);
+    }
+
+    /// The plan builder's fallback ladder: shared deltas per distinct
+    /// base, empty delta for a current client, dense for an unknown base
+    /// or a gap the ring no longer covers.
+    #[test]
+    fn broadcast_plan_chooses_delta_dense_and_shares_bases() {
+        let mut cfg = smoke_cfg();
+        cfg.downlink = Downlink::Delta;
+        cfg.n_clients = 4;
+        let d = cfg.d();
+        let mut pool = FakePool::healthy(&cfg);
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        for _ in 0..3 {
+            engine.run_round(&mut pool).unwrap();
+        }
+        assert_eq!(engine.delta_ring.len(), 3);
+
+        // stage one client per case for round 4
+        engine.fleet.set_acked_model(0, 3);
+        engine.fleet.set_acked_model(1, 3); // same base as 0
+        engine.fleet.set_acked_model(2, ACKED_NONE);
+        engine.fleet.set_acked_model(3, 4); // already current
+        let plan = engine.build_broadcast_plan(&[0, 1, 2, 3], &[true; 4]);
+        assert_eq!(plan.round, 4);
+        assert_eq!(plan.digest, params_digest(engine.global_params()));
+        assert_eq!(plan.assign[0], plan.assign[1], "one encoded delta per base");
+        let (b01, idx01) = plan.delta_for(0).unwrap();
+        assert_eq!(b01, 3);
+        let back = engine.delta_ring.back().unwrap();
+        assert_eq!(idx01, &back[..], "a gap-1 delta is the last round's union");
+        assert!(plan.delta_for(2).is_none(), "unknown base gets the dense model");
+        let (b3, idx3) = plan.delta_for(3).unwrap();
+        assert_eq!((b3, idx3.len()), (4, 0), "a current client gets an empty delta");
+        assert_eq!(plan.deltas.len(), 2);
+
+        // shrink the ring below a gap of 3 -> dense fallback
+        engine.fleet.set_acked_model(0, 1);
+        engine.delta_ring.pop_front();
+        engine.delta_ring.pop_front();
+        let plan = engine.build_broadcast_plan(&[0], &[true; 4]);
+        assert!(plan.delta_for(0).is_none(), "a gap beyond the ring resyncs dense");
+    }
+
+    /// The ring recycles evicted slots once it hits its cap, and an
+    /// all-casualty round records an (accurate) empty union.
+    #[test]
+    fn delta_ring_caps_and_records_empty_rounds() {
+        let mut cfg = smoke_cfg();
+        cfg.downlink = Downlink::Delta;
+        let d = cfg.d();
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        for i in 0..(DELTA_RING_CAP as u32 + 5) {
+            engine.note_model_update_union(&[i]);
+        }
+        assert_eq!(engine.delta_ring.len(), DELTA_RING_CAP);
+        assert_eq!(engine.delta_ring.front().unwrap(), &vec![5u32]);
+        engine.note_model_update(None);
+        assert_eq!(engine.delta_ring.len(), DELTA_RING_CAP);
+        assert!(engine.delta_ring.back().unwrap().is_empty());
+        // Dense knob: the ring is never fed
+        let mut dense = RoundEngine::new(&smoke_cfg(), vec![0.0; d]);
+        dense.note_model_update_union(&[1, 2]);
+        assert!(dense.delta_ring.is_empty());
     }
 
     #[test]

@@ -80,6 +80,11 @@ impl Membership {
     }
 }
 
+/// Sentinel for [`MemberRecord::acked_model`]: the PS does not know what
+/// model this client holds (it died mid-broadcast), so the next
+/// broadcast it receives must be a full dense `Model` frame.
+pub const ACKED_NONE: u32 = u32::MAX;
+
 /// One client's fleet record. Plain data so a sharded topology can hand
 /// records between shard engines on a re-shard.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,11 +96,21 @@ pub struct MemberRecord {
     pub generation: u32,
     /// total rounds this client was scheduled for and failed
     pub casualties: u32,
+    /// last **model generation** this client provably holds (the round
+    /// number of the last broadcast it survived or resynced to; 0 = the
+    /// initial model every worker starts from; [`ACKED_NONE`] = unknown
+    /// -> the delta downlink falls back to a dense frame). DESIGN.md §9.
+    pub acked_model: u32,
 }
 
 impl Default for MemberRecord {
     fn default() -> Self {
-        MemberRecord { state: Membership::Active, generation: 0, casualties: 0 }
+        MemberRecord {
+            state: Membership::Active,
+            generation: 0,
+            casualties: 0,
+            acked_model: 0,
+        }
     }
 }
 
@@ -127,6 +142,19 @@ impl Fleet {
 
     pub fn generation(&self, i: usize) -> u32 {
         self.members[i].generation
+    }
+
+    /// Last model generation client `i` provably holds ([`ACKED_NONE`] =
+    /// unknown).
+    pub fn acked_model(&self, i: usize) -> u32 {
+        self.members[i].acked_model
+    }
+
+    /// Record what model generation client `i` now holds: the round of a
+    /// broadcast it survived, a rejoin resync, or [`ACKED_NONE`] when it
+    /// died mid-broadcast and the PS can no longer assume anything.
+    pub fn set_acked_model(&mut self, i: usize, round: u32) {
+        self.members[i].acked_model = round;
     }
 
     pub fn record(&self, i: usize) -> &MemberRecord {
@@ -295,10 +323,23 @@ mod tests {
         let mut f = Fleet::new(2);
         f.casualty(0);
         f.rejoin(1);
+        f.set_acked_model(0, 7);
+        f.set_acked_model(1, ACKED_NONE);
         let records = f.take_records();
         let g = Fleet::from_records(records);
         assert_eq!(g.state(0), Membership::Suspect);
         assert_eq!(g.state(1), Membership::Rejoining);
         assert_eq!(g.generation(1), 1);
+        assert_eq!(g.acked_model(0), 7, "the model ledger survives a re-shard hand-off");
+        assert_eq!(g.acked_model(1), ACKED_NONE);
+    }
+
+    #[test]
+    fn acked_model_starts_at_the_initial_generation() {
+        let mut f = Fleet::new(2);
+        assert_eq!(f.acked_model(0), 0, "every worker starts holding the init model");
+        f.set_acked_model(0, 3);
+        assert_eq!(f.acked_model(0), 3);
+        assert_eq!(f.acked_model(1), 0, "other clients untouched");
     }
 }

@@ -51,7 +51,7 @@
 use crate::age::{AgeVector, FrequencyVector};
 use crate::backend::{Backend, GlobalState};
 use crate::clustering::{recluster_labels, ClusterManager, MergeRule};
-use crate::config::ExperimentConfig;
+use crate::config::{Downlink, ExperimentConfig};
 use crate::coordinator::aggregator::Aggregate;
 use crate::coordinator::engine::{
     merge_and_apply, ClientPool, PartialRound, RoundEngine, RoundOutcome, UPLOADED_LOG_CAP,
@@ -242,6 +242,9 @@ pub struct ShardedEngine {
     pub recluster_log: Vec<(usize, usize)>,
     /// re-shard events: (round, clients that changed shard)
     pub reshard_log: Vec<(usize, usize)>,
+    /// scratch for the root's fleet-wide updated-index union (delta
+    /// downlink, DESIGN.md §9) — reused every round
+    union_scratch: Vec<u32>,
 }
 
 impl ShardedEngine {
@@ -274,6 +277,7 @@ impl ShardedEngine {
             rounds_done: 0,
             recluster_log: Vec::new(),
             reshard_log: Vec::new(),
+            union_scratch: Vec::new(),
         })
     }
 
@@ -504,6 +508,22 @@ impl ShardedEngine {
                 n,
                 &self.profile,
             )?;
+        }
+
+        // ---- delta downlink (DESIGN.md §9): every shard re-broadcasts
+        // the same root model next round, so every shard's generation
+        // ring must carry the same fleet-wide update union — computed
+        // once here from the root aggregate (`Flat ≡ Sharded(1)` and
+        // shard-count invariance both hang on this)
+        if self.cfg.downlink == Downlink::Delta {
+            if m_total > 0 {
+                agg.updated_indices_into(&mut self.union_scratch);
+            } else {
+                self.union_scratch.clear();
+            }
+            for engine in &mut self.engines {
+                engine.note_model_update_union(&self.union_scratch);
+            }
         }
 
         for (engine, (uploaded, survivors)) in self.engines.iter_mut().zip(finish) {

@@ -269,6 +269,10 @@ impl<'a> Dec<'a> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
     pub fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_bits(self.u32()?))
     }
@@ -427,6 +431,37 @@ pub fn index_block_bytes(idx: &[u32]) -> usize {
         b += varint_len(r);
     }
     b
+}
+
+// ================================================================ digest
+
+/// One parameter's contribution to [`params_digest`]: a splitmix64-style
+/// finalizer over `(position << 32) | value_bits`. Each (index, value)
+/// pair scrambles independently, so the whole-vector digest is the
+/// wrapping **sum** of the terms — position-dependent (swapping two
+/// unequal values changes it) yet order-independent to compute, which is
+/// what lets a delta apply update it in O(|delta|): subtract the old
+/// term, add the new one.
+pub fn digest_term(i: usize, value: f32) -> u64 {
+    let mut z = ((i as u64) << 32) ^ (value.to_bits() as u64);
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Content digest of a parameter vector: wrapping sum of
+/// [`digest_term`] over every position. Identical vectors (bit-for-bit,
+/// including the length implied by the index range) produce identical
+/// digests; the delta downlink uses it to prove a worker's applied model
+/// equals the PS global without shipping the dense vector
+/// (DESIGN.md §9).
+pub fn params_digest(params: &[f32]) -> u64 {
+    let mut d = (params.len() as u64).wrapping_mul(0x2545_f491_4f6c_dd1d);
+    for (i, &v) in params.iter().enumerate() {
+        d = d.wrapping_add(digest_term(i, v));
+    }
+    d
 }
 
 // ============================================================== FrameBuf
@@ -659,6 +694,42 @@ mod tests {
         assert_eq!(back[0], 0.125);
         assert_eq!(back[1], -0.5);
         assert_eq!(back[2], 1.0);
+    }
+
+    #[test]
+    fn digest_is_position_and_value_sensitive() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(params_digest(&a), params_digest(&[1.0, 2.0, 3.0]));
+        // value change
+        assert_ne!(params_digest(&a), params_digest(&[1.0, 2.5, 3.0]));
+        // swapping two unequal values must change it (position matters)
+        assert_ne!(params_digest(&a), params_digest(&[2.0, 1.0, 3.0]));
+        // length matters even when the extra tail is zeros
+        assert_ne!(params_digest(&[0.0; 3]), params_digest(&[0.0; 4]));
+        // -0.0 and 0.0 differ in bits, so they differ in digest (the
+        // digest certifies bit-identity, exactly like the parity pins)
+        assert_ne!(params_digest(&[0.0f32]), params_digest(&[-0.0f32]));
+    }
+
+    #[test]
+    fn digest_updates_incrementally() {
+        crate::testing::prop_check("digest-incremental", 50, |g| {
+            let d = g.usize_in(1, 200);
+            let mut params = g.vec_f32(d, 1.0);
+            let mut dig = params_digest(&params);
+            for _ in 0..g.usize_in(1, 20) {
+                let i = g.usize_in(0, d - 1);
+                let new = g.f32_in(-2.0, 2.0);
+                dig = dig
+                    .wrapping_sub(digest_term(i, params[i]))
+                    .wrapping_add(digest_term(i, new));
+                params[i] = new;
+            }
+            if dig != params_digest(&params) {
+                return Err("incremental digest diverged from recompute".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -31,15 +31,24 @@
 //! model, and swaps the fresh stream into the dead slot —
 //! [`run_worker_rejoin`] is the worker side.
 //!
+//! **Delta downlink** (DESIGN.md §9): under [`Downlink::Delta`] the PS
+//! broadcasts generation-addressed sparse [`Msg::Delta`] frames —
+//! only the parameters changed since each worker's last-acked model
+//! generation — and workers patch their held model in place, verifying
+//! a streamed content digest; any base/digest mismatch deterministically
+//! bails the worker into the rejoin path, where a matching digest lets
+//! the PS skip the dense resync entirely (a 13-byte `Sit` ack instead
+//! of the 4d-byte `Model` frame).
+//!
 //! Steady-state rounds perform **no per-frame buffer allocations** on
 //! either end: every stream owns a [`FrameBuf`] (encode scratch + recv
-//! payload buffer), the worker decodes the model broadcast into a reused
-//! parameter vector, and the PS re-encodes the broadcast frame into the
-//! same `Arc` buffer each round once every stream thread has dropped its
-//! handle. (Decoded *messages* still own their payload `Vec`s — a
-//! received report/update flows into the engine by value.)
-//! [`ServeReport::frame_grows`] exposes the PS-side buffer-growth count
-//! so tests can pin the reuse.
+//! payload buffer), the worker decodes/patches the broadcast into a
+//! reused parameter vector, and the PS encodes each distinct broadcast
+//! frame into a [`FrameRotation`] slot reclaimed once every stream
+//! thread has dropped its handle. (Decoded *messages* still own their
+//! payload `Vec`s — a received report/update flows into the engine by
+//! value.) [`ServeReport::frame_grows`] exposes the PS-side
+//! buffer-growth count so tests can pin the reuse.
 //!
 //! Both ends use the same `ExperimentConfig`; run e.g.:
 //!
@@ -51,20 +60,20 @@
 //! ```
 
 use crate::backend::{make_backend, Backend};
-use crate::config::{ExperimentConfig, Payload};
+use crate::config::{Downlink, ExperimentConfig, Payload};
 use crate::coordinator::engine::{
-    client_train_phase, client_update_phase, eval_dataset, ClientPool, ClientReport, CohortMap,
-    PhaseCfg, RoundEngine,
+    client_train_phase, client_update_phase, eval_dataset, BroadcastPlan, ClientPool,
+    ClientReport, CohortMap, PhaseCfg, RoundEngine,
 };
 use crate::coordinator::topology::Reshard;
 use crate::data::{load_dataset, partition::partition};
 use crate::fl::client::Client;
-use crate::fl::codec::{Codec, FrameBuf};
+use crate::fl::codec::{params_digest, Codec, FrameBuf, IndexScratch};
 use crate::fl::metrics::CommStats;
 use crate::fl::transport::{
-    decode_model_into, encode_model_frame, encode_model_frame_into, recv, recv_frame,
-    recv_payload, request_frame_bytes, send, send_frame, send_report, send_request, Msg,
-    SIT_FRAME_BYTES, TAG_MODEL,
+    apply_delta_in_place, decode_model_into, encode_delta_frame_into, encode_model_frame,
+    encode_model_frame_into, recv, recv_frame, recv_payload, request_frame_bytes, send,
+    send_frame, send_report, send_request, Msg, SIT_FRAME_BYTES, TAG_DELTA, TAG_MODEL,
 };
 use crate::sparse::SparseVec;
 use anyhow::{bail, Context, Result};
@@ -85,8 +94,10 @@ pub struct ServeReport {
     pub uploaded_log: Vec<Vec<Vec<u32>>>,
     /// the engine's byte-accurate communication accounting
     pub comm: CommStats,
-    /// how many times the PS serialized a `Model` frame — the zero-copy
-    /// broadcast pin: exactly one per round, however many workers
+    /// how many times the PS serialized a dense `Model` frame — the
+    /// zero-copy broadcast pin: exactly one per round under the dense
+    /// downlink, however many workers; zero on a healthy delta-downlink
+    /// run (every broadcast is a sparse `Delta` frame)
     pub model_encodes: u64,
     /// round-path bytes the PS actually received on its sockets (report +
     /// update frames) — pinned equal to the engine's `comm.wire_up` on
@@ -125,6 +136,57 @@ pub struct TcpCarry {
     last_generation: u32,
 }
 
+/// A rotation of reusable broadcast frame buffers.
+///
+/// PR 5's single reusable `Arc<Vec<u8>>` had a silent fallback: if any
+/// stream thread still held a clone at encode time, `Arc::get_mut`
+/// failed and the pool allocated a fresh frame — a per-round allocation
+/// invisible to [`ServeReport::frame_grows`]. The delta downlink makes
+/// the problem structural: one round may need *several* distinct frames
+/// live at once (the dense fallback plus one delta frame per distinct
+/// base generation). The rotation keeps a small pool of `Arc` slots;
+/// [`FrameRotation::checkout`] fills the first slot whose refcount has
+/// dropped back to one (the scoped broadcast threads join before
+/// `train_and_report` returns, so by the next round every slot is
+/// reclaimable) and only **adds a slot** — counted in
+/// [`FrameRotation::grows`] — when none is free. Steady-state rounds
+/// therefore allocate no frame buffers, and the growth count is
+/// deterministic: it counts slot additions, not byte-capacity growth,
+/// so varying delta frame sizes do not perturb the reuse pin.
+struct FrameRotation {
+    slots: Vec<Arc<Vec<u8>>>,
+    grows: u64,
+}
+
+impl FrameRotation {
+    fn new() -> Self {
+        FrameRotation { slots: Vec::new(), grows: 0 }
+    }
+
+    /// Hand out a frame buffer filled by `fill`: the first unshared slot
+    /// is reused in place; if every slot is still referenced a new one
+    /// is added (a growth event).
+    fn checkout(&mut self, fill: impl FnOnce(&mut Vec<u8>)) -> Arc<Vec<u8>> {
+        for slot in &mut self.slots {
+            if let Some(buf) = Arc::get_mut(slot) {
+                fill(buf);
+                return Arc::clone(slot);
+            }
+        }
+        self.grows += 1;
+        let mut buf = Vec::new();
+        fill(&mut buf);
+        let slot = Arc::new(buf);
+        self.slots.push(Arc::clone(&slot));
+        slot
+    }
+
+    /// Slot additions so far (the steady-state reuse pin).
+    fn grows(&self) -> u64 {
+        self.grows
+    }
+}
+
 /// Sparse frames are remote input: every index must address the model.
 /// Rejecting here turns a corrupt/malicious worker into a clean protocol
 /// error instead of a PS panic (aggregation) or an index-sized
@@ -144,15 +206,17 @@ fn check_indices(idx: &[u32], d: usize, what: &str) -> Result<()> {
 ///
 /// Broadcast/collect is **concurrent** — one scoped thread per cohort
 /// stream, so a slow worker overlaps with its peers instead of
-/// serializing the round in client order — and the model broadcast is
-/// **zero-copy**: the `Model` frame is encoded once per round into an
-/// `Arc<Vec<u8>>` that is *reused across rounds* (once the stream threads
-/// drop their clones the buffer is re-encoded in place), and the same
-/// bytes are written to every cohort stream. Workers outside the round's
-/// cohort receive a 13-byte [`Msg::Sit`] frame instead of the d-vector,
-/// so downlink scales with the cohort, not with n. A stream that fails
-/// is flagged dead and its client reported as a casualty (`None`) — the
-/// round continues with the survivors.
+/// serializing the round in client order — and the broadcast frames are
+/// **zero-copy**: each distinct frame this round needs (one dense
+/// `Model` frame, and under [`Downlink::Delta`] one `Delta` frame per
+/// distinct base generation in the engine's [`BroadcastPlan`]) is
+/// encoded once into an `Arc<Vec<u8>>` checked out of a
+/// [`FrameRotation`] of buffers *reused across rounds*, and the same
+/// bytes are shared by every cohort stream assigned that frame. Workers
+/// outside the round's cohort receive a 13-byte [`Msg::Sit`] frame
+/// instead of the d-vector, so downlink scales with the cohort, not
+/// with n. A stream that fails is flagged dead and its client reported
+/// as a casualty (`None`) — the round continues with the survivors.
 pub struct TcpClientPool {
     conns: Vec<WorkerConn>,
     /// the accept listener, nonblocking once every initial join landed —
@@ -173,10 +237,21 @@ pub struct TcpClientPool {
     last_generation: Vec<u32>,
     /// reused client-id -> cohort-position map
     cmap: CohortMap,
-    /// the reusable broadcast frame (see the struct docs)
-    model_frame: Arc<Vec<u8>>,
-    /// `Model` frame serializations so far (one per round — pinned by
-    /// tests via [`ServeReport::model_encodes`])
+    /// the rotation of reusable broadcast frame buffers (see the struct
+    /// docs)
+    rotation: FrameRotation,
+    /// the engine's delta-downlink plan for the upcoming broadcast
+    /// (delivered via [`ClientPool::set_broadcast_plan`]; `None` under
+    /// the dense downlink — then every cohort stream gets the full
+    /// `Model` frame)
+    plan: Option<BroadcastPlan>,
+    /// reused delta-value gather scratch (encode_delta_frame_into)
+    val_scratch: Vec<f32>,
+    /// reused index-packing scratch (packed-codec delta frames)
+    idx_scratch: IndexScratch,
+    /// dense `Model` frame serializations so far (one per round under the
+    /// dense downlink; only fallback resyncs under the delta downlink —
+    /// pinned by tests via [`ServeReport::model_encodes`])
     model_encodes: u64,
     /// round-path bytes received (report/update frames, header included)
     wire_up: u64,
@@ -259,7 +334,10 @@ impl TcpClientPool {
             io_timeout_ms: cfg.io_timeout_ms,
             last_generation: vec![0; cfg.n_clients],
             cmap: CohortMap::new(),
-            model_frame: Arc::new(Vec::new()),
+            rotation: FrameRotation::new(),
+            plan: None,
+            val_scratch: Vec::new(),
+            idx_scratch: IndexScratch::default(),
             model_encodes: 0,
             wire_up: 0,
             wire_down: 0,
@@ -277,7 +355,8 @@ impl TcpClientPool {
         }
     }
 
-    /// `Model` frame serializations so far (exactly one per round).
+    /// Dense `Model` frame serializations so far (exactly one per round
+    /// under the dense downlink; zero on a healthy delta-downlink run).
     pub fn model_encodes(&self) -> u64 {
         self.model_encodes
     }
@@ -288,9 +367,10 @@ impl TcpClientPool {
         (self.wire_up, self.wire_down)
     }
 
-    /// Total [`FrameBuf`] capacity-growth events across all streams.
+    /// Total [`FrameBuf`] capacity-growth events across all streams,
+    /// plus broadcast [`FrameRotation`] slot additions.
     pub fn frame_grows(&self) -> u64 {
-        self.conns.iter().map(|wc| wc.fb.grows()).sum()
+        self.conns.iter().map(|wc| wc.fb.grows()).sum::<u64>() + self.rotation.grows()
     }
 
     /// Accepted `Rejoin` re-admissions so far.
@@ -409,8 +489,8 @@ impl ClientPool for TcpClientPool {
             // usual deadline); only the accept itself is nonblocking
             s.set_nonblocking(false).context("rejoin stream blocking mode")?;
             set_stream_deadline(&s, self.io_timeout_ms)?;
-            let (id, generation) = match recv(&mut s, self.codec) {
-                Ok(Msg::Rejoin { client_id, generation, codec }) => {
+            let (id, generation, held_digest) = match recv(&mut s, self.codec) {
+                Ok(Msg::Rejoin { client_id, generation, held_digest, codec }) => {
                     let id = client_id as usize;
                     if codec != self.codec
                         || id >= self.conns.len()
@@ -430,7 +510,7 @@ impl ClientPool for TcpClientPool {
                         let _ = send_frame(&mut wc.stream, &Msg::Shutdown, self.codec, &mut wc.fb);
                         crate::info!("serve: rejoin displaces client {id}'s stale stream");
                     }
-                    (id, generation)
+                    (id, generation, held_digest)
                 }
                 Ok(other) => {
                     crate::info!("serve: expected Rejoin from {peer}, got {other:?}");
@@ -442,13 +522,26 @@ impl ClientPool for TcpClientPool {
                     continue;
                 }
             };
-            // resync: the worker restarted with init params — hand it the
-            // current global model (control frame, excluded from the
-            // round-path wire accounting like Join/Shutdown)
-            let frame = encode_model_frame(self.round, global);
-            if let Err(e) = s.write_all(&frame) {
-                crate::info!("serve: rejoin resync to client {id} failed: {e:#}");
-                continue;
+            // resync — digest-verified skip (DESIGN.md §9): a rejoiner
+            // whose held-model digest matches the current global model
+            // provably already holds it (a warm restart, or a drop after
+            // the broadcast landed), so a 13-byte Sit ack replaces the
+            // 4d-byte Model resync. Dense-downlink workers always send
+            // digest 0 (never a proof); a zero or stale digest falls back
+            // to the full resync. Both are control frames, excluded from
+            // the round-path wire accounting like Join/Shutdown.
+            if held_digest != 0 && held_digest == params_digest(global) {
+                if let Err(e) = send(&mut s, &Msg::Sit { round: self.round }, self.codec) {
+                    crate::info!("serve: rejoin digest ack to client {id} failed: {e:#}");
+                    continue;
+                }
+                crate::info!("serve: client {id} rejoin digest proof accepted — resync skipped");
+            } else {
+                let frame = encode_model_frame(self.round, global);
+                if let Err(e) = s.write_all(&frame) {
+                    crate::info!("serve: rejoin resync to client {id} failed: {e:#}");
+                    continue;
+                }
             }
             crate::info!("serve: client {id} rejoined from {peer} (generation {generation})");
             self.conns[id] = WorkerConn { stream: s, fb: FrameBuf::new(), dead: false };
@@ -457,6 +550,12 @@ impl ClientPool for TcpClientPool {
             admitted.push(id);
         }
         Ok(admitted)
+    }
+
+    /// The engine's delta-downlink plan for the upcoming broadcast — held
+    /// until `train_and_report` consumes it.
+    fn set_broadcast_plan(&mut self, plan: &BroadcastPlan) {
+        self.plan = Some(plan.clone());
     }
 
     fn train_and_report(
@@ -488,19 +587,68 @@ impl ClientPool for TcpClientPool {
             }
         }
         self.wire_down += sit_bytes;
-        // zero-copy broadcast: serialize the d-vector frame once — into
-        // the buffer reused from last round when every stream thread has
-        // dropped its handle — and write the same bytes to every
-        // reachable cohort stream
-        if let Some(buf) = Arc::get_mut(&mut self.model_frame) {
-            encode_model_frame_into(round, global, buf);
-        } else {
-            self.model_frame = Arc::new(encode_model_frame(round, global));
+        // zero-copy broadcast: every distinct frame this round needs is
+        // encoded once into a FrameRotation buffer and its Arc bytes are
+        // shared across the streams assigned to it. Dense downlink: one
+        // Model frame for the whole cohort. Delta downlink: the engine's
+        // BroadcastPlan maps each reachable cohort member to a sparse
+        // Delta frame (shared per distinct base generation) or to the
+        // dense fallback frame — so the attempted-frame byte accounting
+        // below mirrors the engine's per-member arithmetic exactly.
+        let plan = self.plan.take();
+        debug_assert!(plan.as_ref().map_or(true, |p| p.round == round));
+        let rotation = &mut self.rotation;
+        let val_scratch = &mut self.val_scratch;
+        let idx_scratch = &mut self.idx_scratch;
+        let mut dense: Option<Arc<Vec<u8>>> = None;
+        let mut dense_encodes = 0u64;
+        let mut delta_frames: Vec<Option<Arc<Vec<u8>>>> =
+            vec![None; plan.as_ref().map_or(0, |p| p.deltas.len())];
+        let mut assigned: Vec<Option<Arc<Vec<u8>>>> = vec![None; self.conns.len()];
+        let mut attempted_bytes = 0u64;
+        for (i, wc) in self.conns.iter().enumerate() {
+            if self.cmap.slot(i) == usize::MAX || wc.dead {
+                continue;
+            }
+            let slot = plan.as_ref().and_then(|p| p.assign.get(i).copied().flatten());
+            let frame = match slot {
+                Some(di) => {
+                    let p = plan.as_ref().expect("assignment implies a plan");
+                    let entry = &mut delta_frames[di];
+                    if entry.is_none() {
+                        let (base, idx) = &p.deltas[di];
+                        *entry = Some(rotation.checkout(|buf| {
+                            encode_delta_frame_into(
+                                codec,
+                                round,
+                                *base,
+                                p.digest,
+                                idx,
+                                global,
+                                buf,
+                                val_scratch,
+                                idx_scratch,
+                            )
+                        }));
+                    }
+                    Arc::clone(entry.as_ref().expect("just filled"))
+                }
+                None => {
+                    if dense.is_none() {
+                        dense = Some(
+                            rotation
+                                .checkout(|buf| encode_model_frame_into(round, global, buf)),
+                        );
+                        dense_encodes += 1;
+                    }
+                    Arc::clone(dense.as_ref().expect("just filled"))
+                }
+            };
+            attempted_bytes += frame.len() as u64;
+            assigned[i] = Some(frame);
         }
-        self.model_encodes += 1;
-        let frame = Arc::clone(&self.model_frame);
-        let attempted = cohort.iter().filter(|&&c| !self.conns[c].dead).count();
-        self.wire_down += (attempted * frame.len()) as u64;
+        self.model_encodes += dense_encodes;
+        self.wire_down += attempted_bytes;
         // one thread per reachable cohort stream: a slow worker's local
         // training overlaps its peers' instead of serializing the round
         // in client order. Already-dead streams answer None immediately.
@@ -516,7 +664,9 @@ impl ClientPool for TcpClientPool {
                         handles.push(None);
                         continue;
                     }
-                    let frame = Arc::clone(&frame);
+                    let frame = assigned[i]
+                        .take()
+                        .expect("reachable cohort stream without an assigned frame");
                     handles.push(Some(scope.spawn(
                         move || -> Option<(ClientReport, usize)> {
                             match stream_broadcast_collect(wc, &frame, codec, round, d) {
@@ -879,9 +1029,20 @@ fn run_worker_session(
     // seed -> same partition, no data on the wire
     let (train, _) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
     let shards = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed);
-    let mut client = Client::new(id, train.subset(&shards[id]), backend.init_params()?, cfg.seed);
+    let init_params = backend.init_params()?;
+    let delta_down = cfg.downlink == Downlink::Delta;
+    // under the delta downlink the worker must hold a full model copy at
+    // all times (sparse frames patch it in place); the dense downlink
+    // decodes each broadcast into the (initially empty) reused vector
+    let mut params: Vec<f32> = if delta_down { init_params.clone() } else { Vec::new() };
+    let mut client = Client::new(id, train.subset(&shards[id]), init_params, cfg.seed);
     let delta = cfg.payload == Payload::Delta;
     let mut memory = if delta { vec![0.0f32; cfg.d()] } else { Vec::new() };
+    // generation ledger (DESIGN.md §9): which broadcast generation the
+    // held params correspond to, plus their running content digest — the
+    // proof sent with a Rejoin and checked against every Delta frame
+    let mut held_round = 0u32;
+    let mut held_digest = if delta_down { params_digest(&params) } else { 0 };
 
     // under a sharded topology the shard PS indexes streams by
     // shard-local slot; the worker derives its slot from the shared
@@ -899,9 +1060,9 @@ fn run_worker_session(
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
 
     // steady-state transport buffers: one FrameBuf for every frame in and
-    // out, plus the model broadcast decoded into a reused parameter vector
+    // out, plus the model broadcast decoded into the reused parameter
+    // vector above
     let mut fb = FrameBuf::new();
-    let mut params: Vec<f32> = Vec::new();
 
     if generation == 0 {
         send(&mut stream, &Msg::Join { client_id: join_id as u32, codec }, codec)?;
@@ -909,26 +1070,46 @@ fn run_worker_session(
     } else {
         send(
             &mut stream,
-            &Msg::Rejoin { client_id: join_id as u32, generation, codec },
+            &Msg::Rejoin { client_id: join_id as u32, generation, held_digest, codec },
             codec,
         )?;
         // the PS answers an accepted rejoin with the current global model
-        // (or Shutdown if it refused us / training already ended)
+        // — or, when our held-model digest proved we already hold it, a
+        // Sit ack that skips the resync — or Shutdown if it refused us /
+        // training already ended
         let payload = recv_payload(&mut stream, &mut fb).context("rejoin resync")?;
         match payload.first().copied() {
             Some(TAG_MODEL) => {
-                decode_model_into(payload, &mut params).context("rejoin resync model")?;
+                let r = decode_model_into(payload, &mut params).context("rejoin resync model")?;
                 client.state.sync_to(&params);
+                if delta_down {
+                    // the resync frame is tagged with the PS's completed
+                    // round t; the model it carries is generation t + 1
+                    // (the upcoming broadcast) — future Delta frames base
+                    // against that
+                    held_round = r + 1;
+                    held_digest = params_digest(&params);
+                }
                 crate::info!(
                     "worker {id}: rejoined {addr} (generation {generation}), model resynced"
                 );
             }
             _ => match Msg::decode(payload, codec)? {
+                Msg::Sit { round: t } => {
+                    // digest proof accepted: our held params ARE the
+                    // current global model (generation t + 1); no bytes
+                    // to apply
+                    held_round = t + 1;
+                    crate::info!(
+                        "worker {id}: rejoined {addr} (generation {generation}), \
+                         digest proof accepted — resync skipped"
+                    );
+                }
                 Msg::Shutdown => {
                     crate::info!("worker {id}: rejoin refused or training over");
                     return Ok(());
                 }
-                other => bail!("rejoin: expected Model resync or Shutdown, got {other:?}"),
+                other => bail!("rejoin: expected Model resync, Sit ack or Shutdown, got {other:?}"),
             },
         }
     }
@@ -936,14 +1117,50 @@ fn run_worker_session(
     loop {
         let payload = recv_payload(&mut stream, &mut fb)?;
         let round = match payload.first().copied() {
-            Some(TAG_MODEL) => decode_model_into(payload, &mut params)?,
+            Some(TAG_MODEL) => {
+                let r = decode_model_into(payload, &mut params)?;
+                if delta_down {
+                    // dense fallback / resync frame: re-anchor the ledger
+                    held_round = r;
+                    held_digest = params_digest(&params);
+                }
+                r
+            }
+            // sparse broadcast (DESIGN.md §9): patch the held model in
+            // place, then verify the streamed digest. Any mismatch makes
+            // this worker bail — the PS records the casualty, forgets our
+            // acked generation, and a rejoin resyncs us densely — so a
+            // diverged replica can never train on silently wrong params.
+            Some(TAG_DELTA) => match Msg::decode(payload, codec)? {
+                Msg::Delta { round: r, base_round, digest, delta } => {
+                    if !delta_down {
+                        bail!("Delta frame under a dense-downlink config");
+                    }
+                    if base_round != held_round {
+                        bail!(
+                            "delta base generation {base_round} != held generation \
+                             {held_round} — resync needed"
+                        );
+                    }
+                    held_digest = apply_delta_in_place(&mut params, held_digest, &delta)?;
+                    if held_digest != digest {
+                        bail!(
+                            "model digest diverged after delta apply (round {r}): held \
+                             {held_digest:#018x} != broadcast {digest:#018x} — resync needed"
+                        );
+                    }
+                    held_round = r;
+                    r
+                }
+                other => bail!("expected Delta, got {other:?}"),
+            },
             _ => match Msg::decode(payload, codec)? {
                 // off-cohort this round (partial participation): no
                 // broadcast, no training, no upload — just wait for the
                 // next frame
                 Msg::Sit { .. } => continue,
                 Msg::Shutdown => break,
-                other => bail!("expected Model/Sit/Shutdown, got {other:?}"),
+                other => bail!("expected Model/Delta/Sit/Shutdown, got {other:?}"),
             },
         };
         // shared phase 1: sync_to (Adam moments persist), H local steps,
@@ -1049,5 +1266,61 @@ mod tests {
         // the semantic §6 counters are codec-independent
         assert_eq!(packed.comm.uplink(), raw.comm.uplink());
         assert_eq!(packed.comm.downlink(), raw.comm.downlink());
+    }
+
+    /// Delta downlink end to end over real sockets: training is
+    /// bit-for-bit the dense run (the sparse frames reconstruct the
+    /// exact same models), every broadcast is a `Delta` frame (zero
+    /// dense `Model` serializations), the engine's arithmetic wire
+    /// accounting still equals the observed socket bytes, and the
+    /// downlink shrinks by a large factor.
+    #[test]
+    fn delta_downlink_tcp_smoke() {
+        let dense_cfg = smoke_cfg();
+        let dense = crate::testing::run_distributed_localhost(&dense_cfg).unwrap();
+        let mut cfg = smoke_cfg();
+        cfg.downlink = Downlink::Delta;
+        let sparse = crate::testing::run_distributed_localhost(&cfg).unwrap();
+        assert_eq!(sparse.casualties, 0);
+        assert_eq!(
+            sparse.final_params, dense.final_params,
+            "the delta downlink must reconstruct the dense run exactly"
+        );
+        assert_eq!(sparse.uploaded_log, dense.uploaded_log);
+        assert_eq!(
+            sparse.model_encodes, 0,
+            "a healthy delta run never serializes a dense Model frame"
+        );
+        assert_eq!(sparse.comm.wire_up, sparse.wire_up_observed);
+        assert_eq!(
+            sparse.comm.wire_down, sparse.wire_down_observed,
+            "the engine's per-member delta arithmetic must match the socket bytes"
+        );
+        assert!(
+            sparse.wire_down_observed * 5 < dense.wire_down_observed,
+            "delta downlink {} should be well under a fifth of dense {}",
+            sparse.wire_down_observed,
+            dense.wire_down_observed
+        );
+        // uplink is untouched by the downlink representation
+        assert_eq!(sparse.comm.uplink(), dense.comm.uplink());
+    }
+
+    /// The FrameRotation steady-state pin under the delta downlink:
+    /// every round re-encodes its (varying-size) sparse frame into a
+    /// reclaimed rotation slot, so the growth count — slot additions
+    /// plus FrameBuf capacity events — is independent of the round
+    /// count.
+    #[test]
+    fn delta_rounds_reuse_rotated_broadcast_buffers() {
+        let grows_of = |rounds: usize| {
+            let mut cfg = smoke_cfg();
+            cfg.downlink = Downlink::Delta;
+            cfg.rounds = rounds;
+            crate::testing::run_distributed_localhost(&cfg).unwrap().frame_grows
+        };
+        let short = grows_of(2);
+        let long = grows_of(6);
+        assert_eq!(short, long, "per-round broadcast allocations leak into the growth count");
     }
 }

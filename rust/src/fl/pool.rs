@@ -23,8 +23,10 @@ use crate::backend::{
 };
 use crate::config::{ExperimentConfig, Payload};
 use crate::coordinator::engine::{
-    client_train_phase, client_update_phase, ClientPool, ClientReport, CohortMap, PhaseCfg,
+    client_train_phase, client_update_phase, BroadcastPlan, ClientPool, ClientReport, CohortMap,
+    PhaseCfg,
 };
+use crate::fl::codec::params_digest;
 use crate::data::Dataset;
 use crate::fl::client::Client;
 use crate::sparse::SparseVec;
@@ -58,6 +60,11 @@ pub struct InProcessPool<L = BackendLanes> {
     /// reused client-id -> cohort-position map (stamp-versioned)
     cmap: CohortMap,
     pc: PhaseCfg,
+    /// the delta-downlink plan's (round, digest), held between
+    /// `set_broadcast_plan` and the broadcast it describes — the sim has
+    /// no wire to shrink, but verifying the digest against the model
+    /// actually broadcast catches plan/model drift in every sim test
+    plan_check: Option<(u32, u64)>,
 }
 
 /// Requested lane count: config override or auto-detected cores, never
@@ -138,6 +145,7 @@ impl<L: Lanes> InProcessPool<L> {
                 report_cohort: Vec::new(),
                 cmap: CohortMap::new(),
                 pc: PhaseCfg::from_config(cfg),
+                plan_check: None,
             },
             init,
         ))
@@ -210,6 +218,7 @@ impl<L: Lanes> crate::coordinator::topology::Reshard for InProcessPool<L> {
         }
         self.reports.clear();
         self.report_cohort.clear();
+        self.plan_check = None;
     }
 }
 
@@ -218,11 +227,24 @@ impl<L: Lanes> ClientPool for InProcessPool<L> {
         self.clients.len()
     }
 
+    /// Simulated clients read `global` directly, so there is nothing to
+    /// send sparsely — but the digest tripwire (see `plan_check`) runs in
+    /// every delta-downlink sim test.
+    fn set_broadcast_plan(&mut self, plan: &BroadcastPlan) {
+        self.plan_check = Some((plan.round, plan.digest));
+    }
+
     fn train_and_report(
         &mut self,
         global: &[f32],
         cohort: &[usize],
     ) -> Result<Vec<Option<ClientReport>>> {
+        if let Some((round, digest)) = self.plan_check.take() {
+            ensure!(
+                params_digest(global) == digest,
+                "broadcast plan digest (round {round}) does not match the broadcast model"
+            );
+        }
         let pc = self.pc;
         let delta = pc.payload == Payload::Delta;
         let outs = cohort_map(

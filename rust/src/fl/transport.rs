@@ -45,11 +45,12 @@ use std::net::TcpStream;
 pub const MAGIC: u32 = 0x7241_676b;
 
 /// Handshake protocol version, carried in every `Join`/`Rejoin` frame
-/// and checked on decode. v3 added the `Rejoin` re-admission frame and
-/// the version byte itself (v1 = raw-only wire, v2 = negotiated codecs);
-/// a PS refuses handshakes from any other version with a clean error
-/// instead of mis-parsing newer frames.
-pub const PROTOCOL_VERSION: u8 = 3;
+/// and checked on decode. v4 added the sparse `Delta` downlink frame and
+/// the `Rejoin` held-digest proof (v1 = raw-only wire, v2 = negotiated
+/// codecs, v3 = `Rejoin` re-admission + the version byte itself); a PS
+/// refuses handshakes from any other version with a clean error instead
+/// of mis-parsing newer frames.
+pub const PROTOCOL_VERSION: u8 = 4;
 
 /// magic(4) + payload_len(4) + tag(1)
 pub const HEADER_BYTES: usize = 9;
@@ -57,6 +58,10 @@ pub const HEADER_BYTES: usize = 9;
 /// The `Model` frame's tag byte (the worker hot loop peeks at it to
 /// decode the broadcast straight into a reused parameter buffer).
 pub const TAG_MODEL: u8 = 2;
+
+/// The `Delta` frame's tag byte (peeked like [`TAG_MODEL`] so the worker
+/// routes sparse broadcasts into the in-place apply path).
+pub const TAG_DELTA: u8 = 9;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
@@ -68,11 +73,23 @@ pub enum Msg {
     /// stream died (DESIGN.md §8). `generation` is the worker's
     /// admission attempt counter (1 for the first rejoin); the PS
     /// refuses stale or duplicate generations and answers an accepted
-    /// rejoin with a `Model` frame resyncing the current global model.
+    /// rejoin with a `Model` frame resyncing the current global model —
+    /// unless `held_digest` (the content digest of the model the worker
+    /// still holds, 0 = none) matches the PS global, in which case a
+    /// 13-byte `Sit` ack replaces the d-sized resync (DESIGN.md §9).
     /// Carries [`PROTOCOL_VERSION`] like `Join`.
-    Rejoin { client_id: u32, generation: u32, codec: Codec },
+    Rejoin { client_id: u32, generation: u32, held_digest: u64, codec: Codec },
     /// PS -> client: global model broadcast for a round
     Model { round: u32, params: Vec<f32> },
+    /// PS -> client: sparse model broadcast — only the parameters that
+    /// changed between the worker's last-acked generation `base_round`
+    /// and this `round`, as absolute new values. `digest` is the content
+    /// digest ([`crate::fl::codec::params_digest`]) of the full model at
+    /// `round`; the worker updates its running digest incrementally while
+    /// applying and bails (forcing a full-model resync via the rejoin
+    /// path) on any mismatch. Values are always f32 — model state stays
+    /// lossless in every codec, exactly like `Model`.
+    Delta { round: u32, base_round: u32, digest: u64, delta: SparseVec },
     /// client -> PS: top-r report (indices by |g| desc + signed values;
     /// packed codecs transmit the indices only — the PS never reads the
     /// values, so they decode as zeros)
@@ -103,6 +120,18 @@ pub fn model_frame_bytes(d: usize) -> usize {
 
 /// Wire size of the fixed `Sit` control frame.
 pub const SIT_FRAME_BYTES: usize = HEADER_BYTES + 4;
+
+/// Wire size of a `Delta` frame carrying these changed indices (plus one
+/// f32 value per index in every codec — model state stays lossless):
+/// round(4) + base_round(4) + digest(8) + indices + values.
+pub fn delta_frame_bytes(codec: Codec, idx: &[u32]) -> usize {
+    HEADER_BYTES
+        + 4
+        + 4
+        + 8
+        + if codec.packs_indices() { index_block_bytes(idx) } else { list4(idx.len()) }
+        + 4 * idx.len()
+}
 
 /// Wire size of a `Report` frame carrying these indices (raw also ships
 /// an equal-length value list; packed ships indices only).
@@ -151,6 +180,7 @@ impl Msg {
             Msg::Shutdown => 6,
             Msg::Sit { .. } => 7,
             Msg::Rejoin { .. } => 8,
+            Msg::Delta { .. } => TAG_DELTA,
         }
     }
 
@@ -173,13 +203,17 @@ impl Msg {
                 out.push(PROTOCOL_VERSION);
                 out.push(joined.wire_id());
             }
-            Msg::Rejoin { client_id, generation, codec: joined } => {
+            Msg::Rejoin { client_id, generation, held_digest, codec: joined } => {
                 put_u32(out, *client_id);
                 put_u32(out, *generation);
+                out.extend_from_slice(&held_digest.to_le_bytes());
                 out.push(PROTOCOL_VERSION);
                 out.push(joined.wire_id());
             }
             Msg::Model { round, params } => write_model_payload(out, *round, params),
+            Msg::Delta { round, base_round, digest, delta } => write_delta_payload(
+                codec, out, scratch, *round, *base_round, *digest, &delta.idx, &delta.val,
+            ),
             Msg::Report { client_id, round, report, mean_loss } => write_report_payload(
                 codec, out, scratch, *client_id, *round, &report.idx, &report.val, *mean_loss,
             ),
@@ -234,11 +268,21 @@ impl Msg {
             8 => {
                 let client_id = d.u32()?;
                 let generation = d.u32()?;
+                let held_digest = d.u64()?;
                 check_version(d.u8()?, "Rejoin")?;
                 let b = d.u8()?;
                 let joined = Codec::from_wire_id(b)
                     .with_context(|| format!("unknown codec wire id {b}"))?;
-                Msg::Rejoin { client_id, generation, codec: joined }
+                Msg::Rejoin { client_id, generation, held_digest, codec: joined }
+            }
+            TAG_DELTA => {
+                let round = d.u32()?;
+                let base_round = d.u32()?;
+                let digest = d.u64()?;
+                let idx = if codec.packs_indices() { d.index_block()? } else { d.u32s()? };
+                let mut val = Vec::new();
+                d.f32s_bulk_into(idx.len(), &mut val)?;
+                Msg::Delta { round, base_round, digest, delta: SparseVec::new(idx, val) }
             }
             TAG_MODEL => {
                 let round = d.u32()?;
@@ -306,8 +350,9 @@ impl Msg {
     pub fn wire_bytes(&self, codec: Codec) -> usize {
         match self {
             Msg::Join { .. } => HEADER_BYTES + 6,
-            Msg::Rejoin { .. } => HEADER_BYTES + 10,
+            Msg::Rejoin { .. } => HEADER_BYTES + 18,
             Msg::Model { params, .. } => model_frame_bytes(params.len()),
+            Msg::Delta { delta, .. } => delta_frame_bytes(codec, &delta.idx),
             Msg::Report { report, .. } => report_frame_bytes(codec, &report.idx),
             Msg::Request { indices, .. } => request_frame_bytes(codec, indices),
             Msg::Update { update, .. } => update_frame_bytes(codec, &update.idx),
@@ -386,6 +431,87 @@ fn write_request_payload(
         put_u32(out, indices.len() as u32);
         put_u32s_bulk(out, indices);
     }
+}
+
+/// `Delta` payload body — the single definition of the Delta layout,
+/// shared by `Msg::encode_into` and [`encode_delta_frame_into`].
+#[allow(clippy::too_many_arguments)]
+fn write_delta_payload(
+    codec: Codec,
+    out: &mut Vec<u8>,
+    scratch: &mut IndexScratch,
+    round: u32,
+    base_round: u32,
+    digest: u64,
+    idx: &[u32],
+    val: &[f32],
+) {
+    put_u32(out, round);
+    put_u32(out, base_round);
+    out.extend_from_slice(&digest.to_le_bytes());
+    if codec.packs_indices() {
+        write_index_block(out, idx, scratch);
+    } else {
+        put_u32(out, idx.len() as u32);
+        put_u32s_bulk(out, idx);
+    }
+    put_f32s_bulk(out, val);
+}
+
+/// Encode a `Delta` broadcast frame straight from the global parameter
+/// slice into a reusable buffer, gathering the changed values in index
+/// order — byte-identical to `Msg::Delta { .. }.encode(codec)` with
+/// `delta.val[j] = global[delta.idx[j]]` (pinned by
+/// `delta_frame_helper_matches_encode`). `val_scratch` is the reused
+/// gather buffer; `idx` must be in range (it is the PS's own union of
+/// updated indices).
+#[allow(clippy::too_many_arguments)]
+pub fn encode_delta_frame_into(
+    codec: Codec,
+    round: u32,
+    base_round: u32,
+    digest: u64,
+    idx: &[u32],
+    global: &[f32],
+    out: &mut Vec<u8>,
+    val_scratch: &mut Vec<f32>,
+    scratch: &mut IndexScratch,
+) {
+    val_scratch.clear();
+    val_scratch.extend(idx.iter().map(|&i| global[i as usize]));
+    out.clear();
+    out.reserve(delta_frame_bytes(codec, idx));
+    frame_start(out, TAG_DELTA);
+    write_delta_payload(codec, out, scratch, round, base_round, digest, idx, val_scratch);
+    frame_finish(out);
+}
+
+/// Apply a decoded `Delta` in place, updating the running content digest
+/// incrementally (O(|delta|), no dense pass). Every index is
+/// bounds-checked **before** any parameter mutates, so a malformed or
+/// adversarial frame cannot corrupt worker state — it returns an error
+/// with the params untouched. Returns the digest after the apply; the
+/// caller compares it against the frame's `digest` field and treats a
+/// mismatch as divergence (bail -> stream death -> full-model resync via
+/// the rejoin path — deterministic fallback, never silent drift).
+pub fn apply_delta_in_place(
+    params: &mut [f32],
+    mut digest: u64,
+    delta: &SparseVec,
+) -> Result<u64> {
+    for &i in &delta.idx {
+        if i as usize >= params.len() {
+            bail!("delta index {i} out of range (d = {})", params.len());
+        }
+    }
+    for (&i, &v) in delta.idx.iter().zip(&delta.val) {
+        let i = i as usize;
+        digest = digest
+            .wrapping_sub(crate::fl::codec::digest_term(i, params[i]))
+            .wrapping_add(crate::fl::codec::digest_term(i, v));
+        params[i] = v;
+    }
+    Ok(digest)
 }
 
 /// Encode a `Model` broadcast frame straight from a parameter slice into
@@ -552,8 +678,20 @@ mod tests {
     #[test]
     fn all_messages_roundtrip_raw() {
         roundtrip(Msg::Join { client_id: 3, codec: Codec::Raw }, Codec::Raw);
-        roundtrip(Msg::Rejoin { client_id: 2, generation: 4, codec: Codec::Raw }, Codec::Raw);
+        roundtrip(
+            Msg::Rejoin { client_id: 2, generation: 4, held_digest: 0xDEAD_BEEF, codec: Codec::Raw },
+            Codec::Raw,
+        );
         roundtrip(Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] }, Codec::Raw);
+        roundtrip(
+            Msg::Delta {
+                round: 8,
+                base_round: 5,
+                digest: u64::MAX - 3,
+                delta: SparseVec::new(vec![4, 9000, 7], vec![0.5, -1.25, 1e-9]),
+            },
+            Codec::Raw,
+        );
         roundtrip(
             Msg::Report {
                 client_id: 1,
@@ -577,8 +715,22 @@ mod tests {
         for codec in [Codec::Packed, Codec::PackedF16] {
             // Join carries the *worker's* codec field under any frame codec
             roundtrip(Msg::Join { client_id: 3, codec: Codec::PackedF16 }, codec);
-            roundtrip(Msg::Rejoin { client_id: 1, generation: 1, codec: Codec::Packed }, codec);
+            roundtrip(
+                Msg::Rejoin { client_id: 1, generation: 1, held_digest: 7, codec: Codec::Packed },
+                codec,
+            );
             roundtrip(Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] }, codec);
+            // Delta values stay f32 (lossless) even under packed-f16:
+            // model state bit-exactness is what the digest certifies
+            roundtrip(
+                Msg::Delta {
+                    round: 3,
+                    base_round: 1,
+                    digest: 42,
+                    delta: SparseVec::new(vec![39000, 5, 900], vec![1e-9, -2.5, 3.25]),
+                },
+                codec,
+            );
             // report values are not transmitted: they decode as zeros
             let m = Msg::Report {
                 client_id: 1,
@@ -642,9 +794,16 @@ mod tests {
     fn every_variant() -> Vec<Msg> {
         vec![
             Msg::Join { client_id: 3, codec: Codec::Packed },
-            Msg::Rejoin { client_id: 3, generation: 2, codec: Codec::Packed },
+            Msg::Rejoin { client_id: 3, generation: 2, held_digest: 1, codec: Codec::Packed },
             Msg::Model { round: 7, params: vec![] },
             Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] },
+            Msg::Delta {
+                round: 6,
+                base_round: 2,
+                digest: 99,
+                delta: SparseVec::new(vec![10, 11, 900], vec![0.5, -0.5, 2.0]),
+            },
+            Msg::Delta { round: 6, base_round: 5, digest: 0, delta: SparseVec::default() },
             Msg::Report {
                 client_id: 1,
                 round: 2,
@@ -699,6 +858,13 @@ mod tests {
                 update: SparseVec::new(idx.clone(), val.clone()),
             };
             assert_eq!(up.wire_bytes(codec), update_frame_bytes(codec, &idx));
+            let delta = Msg::Delta {
+                round: 2,
+                base_round: 1,
+                digest: 5,
+                delta: SparseVec::new(idx.clone(), val.clone()),
+            };
+            assert_eq!(delta.wire_bytes(codec), delta_frame_bytes(codec, &idx));
         }
         let model = Msg::Model { round: 0, params: vec![0.0; 9] };
         assert_eq!(model.wire_bytes(Codec::Raw), model_frame_bytes(9));
@@ -729,6 +895,79 @@ mod tests {
         };
         assert!(up.wire_bytes(Codec::Packed) < up.wire_bytes(Codec::Raw));
         assert!(up.wire_bytes(Codec::PackedF16) < up.wire_bytes(Codec::Packed));
+    }
+
+    #[test]
+    fn delta_shrinks_the_downlink() {
+        // the standard-scenario shape: |union| <= n*k = 80 changed
+        // indices out of d = 39760
+        let idx: Vec<u32> = (0..80u32).map(|i| (i * 523 + 17 * (i % 7)) % 39760).collect();
+        let dense = model_frame_bytes(39760);
+        for codec in ALL {
+            let sparse = delta_frame_bytes(codec, &idx);
+            assert!(
+                sparse * 100 <= dense,
+                "delta must be >= 100x smaller than the dense frame: {sparse} vs {dense}"
+            );
+        }
+    }
+
+    #[test]
+    fn delta_frame_helper_matches_encode() {
+        let global: Vec<f32> = (0..200).map(|i| (i as f32).sin()).collect();
+        for codec in ALL {
+            for idx in [vec![], vec![7u32], vec![199, 0, 42, 43]] {
+                let val: Vec<f32> = idx.iter().map(|&i| global[i as usize]).collect();
+                let via_msg = Msg::Delta {
+                    round: 9,
+                    base_round: 6,
+                    digest: 0x1234_5678_9abc_def0,
+                    delta: SparseVec::new(idx.clone(), val),
+                }
+                .encode(codec);
+                let mut out = Vec::new();
+                let mut vals = Vec::new();
+                let mut scratch = IndexScratch::default();
+                encode_delta_frame_into(
+                    codec,
+                    9,
+                    6,
+                    0x1234_5678_9abc_def0,
+                    &idx,
+                    &global,
+                    &mut out,
+                    &mut vals,
+                    &mut scratch,
+                );
+                assert_eq!(out, via_msg, "{codec:?} {idx:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_delta_updates_digest_incrementally() {
+        use crate::fl::codec::params_digest;
+        let mut params: Vec<f32> = (0..50).map(|i| i as f32 * 0.25).collect();
+        let digest = params_digest(&params);
+        let delta = SparseVec::new(vec![3, 49, 0], vec![-1.0, 2.5, 0.125]);
+        let new_digest = apply_delta_in_place(&mut params, digest, &delta).unwrap();
+        assert_eq!(params[3], -1.0);
+        assert_eq!(params[49], 2.5);
+        assert_eq!(params[0], 0.125);
+        assert_eq!(new_digest, params_digest(&params), "incremental == recomputed");
+        // an empty delta is the no-op identity
+        let same = apply_delta_in_place(&mut params, new_digest, &SparseVec::default()).unwrap();
+        assert_eq!(same, new_digest);
+    }
+
+    #[test]
+    fn apply_delta_rejects_out_of_range_without_mutating() {
+        let before: Vec<f32> = vec![1.0, 2.0, 3.0];
+        let mut params = before.clone();
+        // in-range prefix, out-of-range tail: nothing may be written
+        let delta = SparseVec::new(vec![0, 1, 3], vec![9.0, 9.0, 9.0]);
+        assert!(apply_delta_in_place(&mut params, 0, &delta).is_err());
+        assert_eq!(params, before, "params must be untouched on rejection");
     }
 
     #[test]
@@ -775,16 +1014,20 @@ mod tests {
         let n = join.len();
         join[n - 1] = 77;
         assert!(Msg::decode(&join[8..], Codec::Raw).is_err());
-        // wrong protocol version in a Join/Rejoin is refused by name
+        // wrong protocol version in a Join/Rejoin is refused by name —
+        // both a future version and a v3 peer (which predates the Delta
+        // downlink and the Rejoin held-digest field)
         for msg in [
             Msg::Join { client_id: 0, codec: Codec::Raw },
-            Msg::Rejoin { client_id: 0, generation: 1, codec: Codec::Raw },
+            Msg::Rejoin { client_id: 0, generation: 1, held_digest: 0, codec: Codec::Raw },
         ] {
-            let mut frame = msg.encode(Codec::Raw);
-            let n = frame.len();
-            frame[n - 2] = PROTOCOL_VERSION + 1; // the version byte
-            let err = Msg::decode(&frame[8..], Codec::Raw).unwrap_err();
-            assert!(format!("{err:#}").contains("protocol version"), "{err:#}");
+            for wrong in [PROTOCOL_VERSION + 1, PROTOCOL_VERSION - 1] {
+                let mut frame = msg.encode(Codec::Raw);
+                let n = frame.len();
+                frame[n - 2] = wrong; // the version byte
+                let err = Msg::decode(&frame[8..], Codec::Raw).unwrap_err();
+                assert!(format!("{err:#}").contains("protocol version"), "{err:#}");
+            }
         }
         // packed update whose value block is truncated
         let up = Msg::Update {
@@ -908,5 +1151,14 @@ mod tests {
         // off-cohort workers in sync every round (DESIGN.md §6)
         assert_eq!(Msg::Sit { round: 1 }.wire_bytes(Codec::Raw), 8 + 1 + 4);
         assert_eq!(SIT_FRAME_BYTES, 13);
+        // raw delta of k entries: header(9) + round(4) + base(4) +
+        // digest(8) + idx list4 + 4k values (DESIGN.md §9)
+        let d = Msg::Delta {
+            round: 0,
+            base_round: 0,
+            digest: 0,
+            delta: SparseVec::new(vec![0; k], vec![0.0; k]),
+        };
+        assert_eq!(d.wire_bytes(Codec::Raw), 9 + 4 + 4 + 8 + (4 + 4 * k) + 4 * k);
     }
 }

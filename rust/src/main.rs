@@ -41,6 +41,7 @@ fn train_spec(cmd: &str, about: &str) -> ArgSpec {
         .opt("io-timeout-ms", "", "PS-side socket read/write deadline in ms (empty/0 = none)")
         .opt("reshard", "", "re-partition shards at recluster boundaries: true | false")
         .opt("codec", "", "wire codec: raw | packed | packed-f16 (empty = preset)")
+        .opt("downlink", "", "broadcast mode: dense | delta (empty = preset)")
         .opt("parallel", "", "in-process client lanes (empty = preset, 0 = auto, 1 = serial)")
         .opt("seed", "42", "experiment seed")
         .opt("config", "", "JSON config file (overrides preset)")
@@ -113,6 +114,10 @@ fn build_config(a: &ragek::util::argparse::Args) -> Result<ExperimentConfig> {
     if !a.get("codec").is_empty() {
         cfg.codec = ragek::fl::codec::Codec::parse(a.get("codec"))
             .ok_or_else(|| anyhow::anyhow!("unknown codec {:?}", a.get("codec")))?;
+    }
+    if !a.get("downlink").is_empty() {
+        cfg.downlink = ragek::config::Downlink::parse(a.get("downlink"))
+            .ok_or_else(|| anyhow::anyhow!("unknown downlink {:?}", a.get("downlink")))?;
     }
     cfg.seed = a.get_usize("seed")? as u64;
     cfg.validate()?;

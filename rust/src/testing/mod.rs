@@ -6,7 +6,7 @@
 
 use crate::backend::Backend;
 use crate::config::ExperimentConfig;
-use crate::coordinator::engine::{ClientPool, ClientReport};
+use crate::coordinator::engine::{BroadcastPlan, ClientPool, ClientReport};
 use crate::fl::pool::InProcessPool;
 use crate::sparse::SparseVec;
 use crate::util::rng::Rng;
@@ -95,6 +95,12 @@ impl ClientPool for FlakyPool {
 
     fn health(&self) -> Vec<bool> {
         self.alive.clone()
+    }
+
+    /// Chaos is transparent to the delta plan: the inner pool still runs
+    /// its digest tripwire on every delta-downlink chaos round.
+    fn set_broadcast_plan(&mut self, plan: &BroadcastPlan) {
+        self.inner.set_broadcast_plan(plan);
     }
 
     fn poll_rejoins(&mut self, global: &[f32]) -> Result<Vec<usize>> {

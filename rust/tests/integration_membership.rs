@@ -114,6 +114,26 @@ fn chaos_ages_match_dense_oracle() {
     });
 }
 
+/// The delta downlink under fixed-seed membership chaos: drops, rejoins
+/// and the acked-generation ledger's forget/readmit transitions must not
+/// perturb training — uploaded logs, final params and ages are
+/// bit-for-bit the dense-downlink chaos run. (The sim pool also digest-
+/// checks every broadcast plan against the model actually broadcast, so
+/// a stale plan would fail loudly here, mid-chaos.)
+#[test]
+fn chaos_delta_downlink_matches_dense_bit_for_bit() {
+    let cfg = chaos_cfg(4, 10);
+    let dense = run_chaos(&cfg, 0.25, 2, 7);
+    let mut dcfg = cfg.clone();
+    dcfg.downlink = ragek::config::Downlink::Delta;
+    let delta = run_chaos(&dcfg, 0.25, 2, 7);
+    assert_eq!(delta.0, dense.0, "chaos uploads must be downlink-independent");
+    assert_eq!(delta.1, dense.1, "chaos params must be downlink-independent");
+    assert_eq!(delta.2, dense.2, "chaos ages must be downlink-independent");
+    assert!(delta.3 > 0, "the chaos must actually bite for this pin to mean anything");
+    assert!(delta.4.iter().any(|&g| g >= 1), "someone must have rejoined");
+}
+
 /// A fully-dead fleet stalls without corrupting state: rounds keep
 /// committing (ages grow), and once everyone rejoins training resumes.
 #[test]
@@ -203,7 +223,7 @@ fn tcp_worker_killed_mid_round_rejoins_and_contributes() {
         let mut s = TcpStream::connect(addr)?;
         send(
             &mut s,
-            &Msg::Rejoin { client_id: 1, generation: 1, codec: Codec::Raw },
+            &Msg::Rejoin { client_id: 1, generation: 1, held_digest: 0, codec: Codec::Raw },
             Codec::Raw,
         )?;
         // the PS answers with the current global model (the resync)

@@ -8,7 +8,7 @@
 
 use ragek::age::DenseAgeVector;
 use ragek::clustering::MergeRule;
-use ragek::config::{ExperimentConfig, Payload};
+use ragek::config::{Downlink, ExperimentConfig, Payload};
 use ragek::coordinator::strategies::StrategyKind;
 use ragek::coordinator::topology::Topology;
 use ragek::fl::codec::Codec;
@@ -291,6 +291,110 @@ fn resharding_sharded_sim_and_tcp_are_identical() {
     assert_eq!(report.comm.wire_up, report.wire_up_observed);
     assert_eq!(report.comm.wire_down, report.wire_down_observed);
     assert_eq!(report.casualties, 0, "a clean run has no casualties");
+}
+
+/// The delta downlink is a pure wire representation (DESIGN.md §9):
+/// training — uploads, cohorts, final parameters — is bit-for-bit the
+/// dense run on BOTH transports, the sim and TCP accounting agree, the
+/// arithmetic wire mirror equals the observed socket bytes, and the
+/// downlink shrinks by well over the 20x acceptance floor.
+#[test]
+fn delta_downlink_sim_and_tcp_match_dense_bit_for_bit() {
+    let cfg = parity_cfg(StrategyKind::RageK);
+    let (sim_log, sim_params, _) = run_sim_comm(&cfg);
+    let dense = run_tcp(&cfg);
+    let mut dcfg = cfg.clone();
+    dcfg.downlink = Downlink::Delta;
+    let (delta_sim_log, delta_sim_params, delta_sim_comm) = run_sim_comm(&dcfg);
+    assert_eq!(delta_sim_log, sim_log, "sim training must be downlink-independent");
+    assert_eq!(delta_sim_params, sim_params);
+    let delta = run_tcp(&dcfg);
+    assert_eq!(delta.uploaded_log, sim_log, "TCP delta uploads must match the dense sim");
+    assert_eq!(delta.final_params, sim_params, "sparse frames must reconstruct exactly");
+    assert_eq!(delta.comm, delta_sim_comm, "sim and TCP delta accounting must agree");
+    assert_eq!(delta.comm.wire_up, delta.wire_up_observed);
+    assert_eq!(
+        delta.comm.wire_down, delta.wire_down_observed,
+        "the per-member delta arithmetic must equal the observed socket bytes"
+    );
+    assert_eq!(delta.model_encodes, 0, "a healthy delta run needs no dense frames");
+    assert_eq!(delta.casualties, 0);
+    assert!(
+        delta.comm.wire_down * 20 < dense.comm.wire_down,
+        "delta downlink {} must be >= 20x under dense {}",
+        delta.comm.wire_down,
+        dense.comm.wire_down
+    );
+    // the uplink and the semantic §6 counters are untouched
+    assert_eq!(delta.comm.uplink(), dense.comm.uplink());
+    assert_eq!(delta.comm.wire_up, dense.comm.wire_up);
+}
+
+/// Partial participation exercises the generation ring: off-cohort
+/// clients fall multiple generations behind and their next broadcast
+/// accumulates the gap's unions into one delta — still bit-for-bit the
+/// dense run, on both transports.
+#[test]
+fn delta_downlink_partial_participation_parity() {
+    let mut cfg = parity_cfg(StrategyKind::RageK);
+    cfg.n_clients = 4;
+    cfg.participation = 0.5;
+    cfg.rounds = 6;
+    let (dense_log, dense_params, _) = run_sim_comm(&cfg);
+    cfg.downlink = Downlink::Delta;
+    let (sim_log, sim_params, sim_comm) = run_sim_comm(&cfg);
+    assert_eq!(sim_log, dense_log, "gap-accumulated deltas must not perturb training");
+    assert_eq!(sim_params, dense_params);
+    let report = run_tcp(&cfg);
+    assert_eq!(report.uploaded_log, sim_log);
+    assert_eq!(report.final_params, sim_params);
+    assert_eq!(report.comm, sim_comm);
+    assert_eq!(report.comm.wire_down, report.wire_down_observed);
+    assert_eq!(report.model_encodes, 0, "every gap must fit the ring on this run");
+}
+
+/// Topology: `Sharded { shards: 1 }` under the delta downlink must stay
+/// bit-for-bit the flat engine — the fleet-wide update union is fed to
+/// every shard engine, so the rings and plans coincide.
+#[test]
+fn delta_downlink_flat_and_sharded_one_are_identical() {
+    let mut cfg = parity_cfg(StrategyKind::RageK);
+    cfg.n_clients = 4;
+    cfg.participation = 0.5;
+    cfg.rounds = 6;
+    cfg.downlink = Downlink::Delta;
+    let (flat_log, flat_params, flat_comm) = run_sim_comm(&cfg);
+    let mut scfg = cfg.clone();
+    scfg.topology = Topology::Sharded { shards: 1, root_merge: MergeRule::Min };
+    let (sh_log, sh_params, sh_comm) = run_sim_comm(&scfg);
+    assert_eq!(sh_log, flat_log, "sharded(1) delta uploads must match flat exactly");
+    assert_eq!(sh_params, flat_params);
+    assert_eq!(sh_comm, flat_comm, "delta accounting must roll up identically");
+}
+
+/// The delta downlink survives root reclustering + dynamic re-sharding:
+/// the acked-generation ledger rides the fleet-record hand-off and the
+/// shard engines keep byte-identical plans — sim and TCP agree, and both
+/// equal the dense-downlink training trajectory.
+#[test]
+fn delta_downlink_resharding_sim_and_tcp_are_identical() {
+    let mut cfg = parity_cfg(StrategyKind::RageK);
+    cfg.n_clients = 6;
+    cfg.rounds = 8;
+    cfg.recluster_every = 4;
+    cfg.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+    let (dense_log, dense_params, _) = run_sim_comm(&cfg);
+    cfg.downlink = Downlink::Delta;
+    let (sim_log, sim_params, sim_comm) = run_sim_comm(&cfg);
+    assert_eq!(sim_log, dense_log, "the re-shard must not perturb delta training");
+    assert_eq!(sim_params, dense_params);
+    let report = run_tcp(&cfg);
+    assert_eq!(report.uploaded_log, sim_log);
+    assert_eq!(report.final_params, sim_params);
+    assert_eq!(report.comm, sim_comm);
+    assert_eq!(report.comm.wire_up, report.wire_up_observed);
+    assert_eq!(report.comm.wire_down, report.wire_down_observed);
+    assert_eq!(report.casualties, 0);
 }
 
 /// The age-debt scheduler is deterministic PS state, so it too must agree

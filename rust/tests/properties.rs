@@ -545,6 +545,72 @@ fn aggregation_is_linear_and_order_invariant() {
     });
 }
 
+/// The delta-downlink reconstruction invariant (DESIGN.md §9): for ANY
+/// base generation, a single delta carrying the union of the per-round
+/// changed-index sets since that base — with the *current* values at
+/// those indices — patches the base snapshot into the head model
+/// **bit-for-bit**, and the incrementally-maintained content digest
+/// equals the from-scratch digest of the head. This is exactly what the
+/// PS's generation ring + `encode_delta_frame` send and what the
+/// worker's `apply_delta_in_place` verifies.
+#[test]
+fn delta_apply_over_any_generation_gap_matches_dense_model() {
+    use ragek::fl::codec::params_digest;
+    use ragek::fl::transport::apply_delta_in_place;
+    prop_check("delta-gap-reconstruction", 100, |g| {
+        let d = g.usize_in(4, 300);
+        let rounds = g.usize_in(1, 20);
+        let mut global = g.vec_f32(d, 1.0);
+        // snapshots[b] = the model after b server updates; ring[b] = the
+        // indices update b+1 touched (what the engine's delta ring holds)
+        let mut snapshots = vec![global.clone()];
+        let mut ring: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..rounds {
+            let k = g.usize_in(1, d);
+            let sel = g.vec_u32_distinct(d, k);
+            for &j in &sel {
+                global[j as usize] += g.f32_in(-1.0, 1.0);
+            }
+            ring.push(sel);
+            snapshots.push(global.clone());
+        }
+        let base = g.usize_in(0, rounds);
+        let mut union: Vec<u32> = ring[base..].iter().flatten().copied().collect();
+        union.sort_unstable();
+        union.dedup();
+        let delta = SparseVec::new(
+            union.clone(),
+            union.iter().map(|&j| global[j as usize]).collect(),
+        );
+        let mut params = snapshots[base].clone();
+        let digest = apply_delta_in_place(&mut params, params_digest(&snapshots[base]), &delta)
+            .map_err(|e| format!("apply failed: {e:#}"))?;
+        if params != global {
+            return Err(format!("gap {} reconstruction diverged", rounds - base));
+        }
+        if digest != params_digest(&global) {
+            return Err("incremental digest != from-scratch digest of the head".into());
+        }
+        // an empty delta (base == head, e.g. a just-resynced rejoiner) is
+        // a no-op with an unchanged digest
+        let empty = SparseVec::new(Vec::new(), Vec::new());
+        let same = apply_delta_in_place(&mut params, digest, &empty)
+            .map_err(|e| format!("empty apply failed: {e:#}"))?;
+        if same != digest || params != global {
+            return Err("empty delta must be a digest-preserving no-op".into());
+        }
+        // an out-of-range index must be rejected before any mutation
+        let bad = SparseVec::new(vec![d as u32], vec![1.0]);
+        if apply_delta_in_place(&mut params, digest, &bad).is_ok() {
+            return Err("out-of-range delta index must be rejected".into());
+        }
+        if params != global {
+            return Err("a rejected delta must leave the params untouched".into());
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn topk_abs_is_exact_against_sort() {
     prop_check("topk-exactness", 200, |g| {
