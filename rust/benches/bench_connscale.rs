@@ -1,0 +1,192 @@
+//! Connection-scale perf for the event-driven PS transport (DESIGN.md
+//! §10): one `poll(2)` reactor, N worker connections.
+//!
+//! Spawns N scripted protocol workers (real TCP, real frames, no local
+//! training — the threads answer instantly, so the measurement isolates
+//! the PS-side transport cost) and drives the standard MNIST round loop
+//! through one [`TcpClientPool`] at n = 8, 32, and 128 connections. The
+//! committed `BENCH_connscale.json` records the table; wall-clock cells
+//! are filled by `cargo bench --bench bench_connscale`
+//! (results/bench/connscale.json).
+//!
+//! Asserted structurally on every run, at every scale:
+//!
+//! - every round commits with zero casualties (the reactor drives all N
+//!   connections to completion);
+//! - `model_encodes == rounds` — the broadcast is serialized **once**
+//!   per round however many connections fan it out (the FrameRotation
+//!   zero-copy pin survives the reactor);
+//! - socket-observed bytes equal the engine's arithmetic mirror
+//!   (`wire_observed == comm.wire_up/wire_down`), so the accounting
+//!   pins hold off the happy path's thread-per-stream predecessor;
+//! - downlink bytes per connection-round are identical across scales —
+//!   the per-connection cost model is flat, which is the number the
+//!   rounds/sec and RSS columns are judged against.
+
+use ragek::bench::Bench;
+use ragek::config::ExperimentConfig;
+use ragek::coordinator::engine::{ClientPool, RoundEngine};
+use ragek::fl::codec::Codec;
+use ragek::fl::distributed::TcpClientPool;
+use ragek::fl::transport::{recv, send, Msg};
+use ragek::sparse::SparseVec;
+use ragek::util::json::Json;
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+
+const ROUNDS: usize = 4;
+const SIZES: [usize; 3] = [8, 32, 128];
+
+fn scenario(n: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.n_clients = n;
+    cfg.rounds = ROUNDS;
+    cfg.participation = 1.0;
+    cfg.recluster_every = 0; // singleton clusters: per-client selection
+    cfg.eval_every = 0;
+    cfg.train_n = 200;
+    cfg.test_n = 64;
+    cfg.io_timeout_ms = 30_000;
+    cfg
+}
+
+/// A scripted worker: joins, then answers every broadcast with a fixed
+/// 12-index report and the echoed request. No training, no sleeps — the
+/// PS-side reactor is the only interesting cost left.
+fn scripted_worker(port: u16, id: u32) -> thread::JoinHandle<anyhow::Result<()>> {
+    thread::spawn(move || {
+        let mut s = TcpStream::connect(("127.0.0.1", port))?;
+        send(&mut s, &Msg::Join { client_id: id, codec: Codec::Raw }, Codec::Raw)?;
+        let base = 13 * id; // disjoint per-client index windows
+        let idx: Vec<u32> = (0..12u32).map(|j| base + j).collect();
+        let val: Vec<f32> = (0..12).map(|j| (12 - j) as f32).collect();
+        let report = SparseVec::new(idx, val);
+        loop {
+            match recv(&mut s, Codec::Raw)? {
+                Msg::Model { round, .. } => {
+                    send(
+                        &mut s,
+                        &Msg::Report {
+                            client_id: id,
+                            round,
+                            report: report.clone(),
+                            mean_loss: 1.0,
+                        },
+                        Codec::Raw,
+                    )?;
+                    let requested = match recv(&mut s, Codec::Raw)? {
+                        Msg::Request { indices, .. } => indices,
+                        other => anyhow::bail!("worker {id}: expected Request, got {other:?}"),
+                    };
+                    let update = ragek::fl::client::Client::answer_request(&report, &requested);
+                    send(&mut s, &Msg::Update { client_id: id, round, update }, Codec::Raw)?;
+                }
+                Msg::Sit { .. } => continue,
+                Msg::Shutdown => return Ok(()),
+                other => anyhow::bail!("worker {id}: unexpected {other:?}"),
+            }
+        }
+    })
+}
+
+/// Resident set size in kB from `/proc/self/status` (None off-Linux —
+/// the column is informational, never asserted).
+fn rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("connscale");
+
+    println!("\none reactor, N connections ({ROUNDS} rounds, scripted workers):");
+    println!(
+        "{:<10} {:>12} {:>18} {:>16} {:>10}",
+        "workers", "rounds/sec", "client-rounds/sec", "down B/conn-rnd", "RSS MB"
+    );
+    let mut table = Vec::new();
+    let mut per_conn_down = Vec::new();
+    for &n in &SIZES {
+        let cfg = scenario(n);
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let port = listener.local_addr()?.port();
+        let workers: Vec<_> = (0..n).map(|i| scripted_worker(port, i as u32)).collect();
+        let mut pool = TcpClientPool::accept(&cfg, listener)?;
+        let init = pool.backend().init_params()?;
+        let mut engine = RoundEngine::new(&cfg, init);
+
+        let mut casualties = 0usize;
+        let mean = b
+            .run_once(&format!("{ROUNDS} rounds n={n}"), || {
+                for _ in 0..ROUNDS {
+                    casualties += engine.run_round(&mut pool).unwrap().casualties.len();
+                }
+            })
+            .mean();
+        let rss = rss_kb();
+        pool.shutdown()?;
+        for w in workers {
+            w.join().unwrap()?;
+        }
+
+        // ---- the structural pins (asserted at every scale)
+        assert_eq!(engine.round(), ROUNDS, "n={n}: every round must commit");
+        assert_eq!(casualties, 0, "n={n}: a healthy fleet must see zero casualties");
+        assert_eq!(
+            pool.model_encodes(),
+            ROUNDS as u64,
+            "n={n}: the dense broadcast must be serialized once per round, \
+             however many connections fan it out"
+        );
+        let comm = engine.comm();
+        assert_eq!(
+            pool.wire_observed(),
+            (comm.wire_up, comm.wire_down),
+            "n={n}: socket-observed bytes must equal the engine's arithmetic mirror"
+        );
+        let per = comm.wire_down as f64 / (ROUNDS * n) as f64;
+        per_conn_down.push(per);
+
+        let rps = ROUNDS as f64 / mean;
+        let rss_mb = rss.map(|kb| kb as f64 / 1024.0);
+        println!(
+            "{n:<10} {rps:>12.2} {:>18.1} {per:>16.1} {:>10}",
+            rps * n as f64,
+            rss_mb.map_or("n/a".to_string(), |m| format!("{m:.1}")),
+        );
+        table.push(Json::obj(vec![
+            ("workers", Json::Num(n as f64)),
+            ("rounds", Json::Num(ROUNDS as f64)),
+            ("rounds_per_sec", Json::Num(rps)),
+            ("client_rounds_per_sec", Json::Num(rps * n as f64)),
+            ("wire_down_per_conn_round", Json::Num(per)),
+            ("rss_kb", rss.map_or(Json::Null, |kb| Json::Num(kb as f64))),
+        ]));
+    }
+
+    // flat per-connection cost model: the downlink bytes one connection
+    // costs per round must not depend on how many neighbors it has
+    let first = per_conn_down[0];
+    for (&n, &per) in SIZES.iter().zip(&per_conn_down) {
+        assert!(
+            (per - first).abs() < 0.5,
+            "per-connection downlink cost must be flat across scales: \
+             n={n} pays {per:.1} B vs {first:.1} B at n={}",
+            SIZES[0]
+        );
+    }
+    println!("(per-connection downlink cost asserted flat across all scales)");
+
+    // machine-readable scale table next to the timing results
+    let dir = std::path::Path::new("results/bench");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let j = Json::obj(vec![("scale", Json::Arr(table))]);
+        let path = dir.join("connscale_table.json");
+        let _ = std::fs::write(&path, j.to_pretty());
+        println!("  -> {}", path.display());
+    }
+
+    b.save();
+    Ok(())
+}

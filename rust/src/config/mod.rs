@@ -102,13 +102,18 @@ pub struct ExperimentConfig {
     /// (DESIGN.md §7). `Sharded { shards: 1 }` is pinned bit-for-bit
     /// identical to `Flat`. Config/CLI knob `shards` (0 = flat).
     pub topology: Topology,
-    /// PS-side socket read/write timeout in milliseconds (0 = none, the
-    /// default). With a deadline set, a hung worker surfaces as a clean
-    /// per-stream casualty (the round finishes with the survivors)
-    /// instead of wedging the collect phase forever; the worker side
-    /// never sets timeouts (off-cohort workers block across whole rounds
-    /// by design). Must comfortably exceed the local training time of
-    /// one round.
+    /// PS-side per-connection, per-phase reactor deadline in
+    /// milliseconds (0 = none, the default; DESIGN.md §10). With a
+    /// deadline set, a worker that has not finished the current
+    /// write/reply phase within the window surfaces as a clean
+    /// per-connection casualty (the round finishes with the survivors)
+    /// instead of wedging the collect phase forever — and unlike the
+    /// old per-syscall socket timeout, a byte-trickling peer cannot
+    /// keep resetting the clock. Also applied as a blocking socket
+    /// timeout to the join/rejoin handshakes. The worker side never
+    /// sets timeouts (off-cohort workers block across whole rounds by
+    /// design). Must comfortably exceed the local training time of one
+    /// round.
     pub io_timeout_ms: u64,
     /// Dynamic re-sharding (sharded topologies only, default on): at
     /// each root recluster boundary, re-partition the fleet across shard

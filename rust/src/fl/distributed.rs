@@ -40,14 +40,26 @@
 //! the PS skip the dense resync entirely (a 13-byte `Sit` ack instead
 //! of the 4d-byte `Model` frame).
 //!
+//! **Event-driven PS transport** (DESIGN.md §10): the PS drives all of
+//! its worker sockets from **one reactor** — a hand-rolled `poll(2)`
+//! readiness loop ([`crate::fl::reactor`]) over nonblocking streams,
+//! with a per-connection state machine (writing-frame → awaiting-reply)
+//! that resumes half-done frames across partial writes and short reads
+//! via the resumable cursors of [`crate::fl::transport`]. No
+//! thread-per-stream: connection count scales to the fd limit, a slow
+//! worker never blocks its peers, and per-connection **phase deadlines**
+//! (`io_timeout_ms`) replace the old blocking socket timeouts — a hung
+//! or trickling worker is dropped as a clean per-client casualty when
+//! its deadline expires, never by a thread join panic.
+//!
 //! Steady-state rounds perform **no per-frame buffer allocations** on
 //! either end: every stream owns a [`FrameBuf`] (encode scratch + recv
 //! payload buffer), the worker decodes/patches the broadcast into a
 //! reused parameter vector, and the PS encodes each distinct broadcast
-//! frame into a [`FrameRotation`] slot reclaimed once every stream
-//! thread has dropped its handle. (Decoded *messages* still own their
-//! payload `Vec`s — a received report/update flows into the engine by
-//! value.) [`ServeReport::frame_grows`] exposes the PS-side
+//! frame into a [`FrameRotation`] slot reclaimed as soon as its last
+//! assigned connection finishes the write. (Decoded *messages* still
+//! own their payload `Vec`s — a received report/update flows into the
+//! engine by value.) [`ServeReport::frame_grows`] exposes the PS-side
 //! buffer-growth count so tests can pin the reuse.
 //!
 //! Both ends use the same `ExperimentConfig`; run e.g.:
@@ -70,16 +82,20 @@ use crate::data::{load_dataset, partition::partition};
 use crate::fl::client::Client;
 use crate::fl::codec::{params_digest, Codec, FrameBuf, IndexScratch};
 use crate::fl::metrics::CommStats;
+use crate::fl::reactor::{poll_fds, PollFd, POLLIN, POLLOUT};
 use crate::fl::transport::{
-    apply_delta_in_place, decode_model_into, encode_delta_frame_into, encode_model_frame,
-    encode_model_frame_into, recv, recv_frame, recv_payload, request_frame_bytes, send,
-    send_frame, send_report, send_request, Msg, SIT_FRAME_BYTES, TAG_DELTA, TAG_MODEL,
+    apply_delta_in_place, decode_model_into, encode_delta_frame_into, encode_frame_into,
+    encode_model_frame, encode_model_frame_into, encode_request_into, recv, recv_frame,
+    recv_payload, send, send_frame, send_report, IoStep, Msg, RecvCursor, SendCursor,
+    SIT_FRAME_BYTES, TAG_DELTA, TAG_MODEL,
 };
 use crate::sparse::SparseVec;
 use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// PS-side summary of a distributed run.
 #[derive(Debug)]
@@ -117,15 +133,65 @@ pub struct ServeReport {
     pub rejoins: u64,
 }
 
-/// One accepted worker stream plus its reused transport buffers.
+/// Where a connection stands in the reactor's current phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ConnState {
+    /// not armed this phase
+    Idle,
+    /// pushing the queued frame out; `expect_reply` arms the read half
+    /// after the last byte (broadcasts and requests await a reply, a
+    /// `Sit` does not)
+    Writing { expect_reply: bool },
+    /// accumulating the worker's reply frame
+    Reading,
+    /// this connection's work for the phase is complete
+    Done,
+}
+
+/// One accepted worker stream (nonblocking) plus its reused transport
+/// buffers and its reactor state machine.
 struct WorkerConn {
     stream: TcpStream,
     fb: FrameBuf,
-    /// a round-path send/recv on this stream failed (timeout, reset, bad
-    /// frame): the pool skips it and reports the client unreachable
-    /// through [`ClientPool::health`] until a `Rejoin` replaces the
-    /// stream
+    /// resumable write offset into the queued outgoing frame
+    send: SendCursor,
+    /// resumable header/payload fill of the incoming frame
+    recv: RecvCursor,
+    /// position in the current reactor phase
+    state: ConnState,
+    /// a shared broadcast frame (a [`FrameRotation`] slot) queued for
+    /// write; `None` means the outgoing frame lives in `fb.buf` (Sit,
+    /// Request). Cleared the moment the last byte is out so the rotation
+    /// slot's refcount can drop back to one and be reclaimed.
+    shared: Option<Arc<Vec<u8>>>,
+    /// when the current phase gives up on this connection (armed per
+    /// phase from `io_timeout_ms`; `None` = wait forever)
+    deadline: Option<Instant>,
+    /// set by a routed (sharded) re-admission — [`ClientPool::poll_rejoins`]
+    /// drains it so the engine learns of the rejoin at the usual point
+    admitted: bool,
+    /// a round-path send/recv on this stream failed (deadline expiry,
+    /// reset, bad frame): the pool skips it and reports the client
+    /// unreachable through [`ClientPool::health`] until a `Rejoin`
+    /// replaces the stream
     dead: bool,
+}
+
+impl WorkerConn {
+    /// Wrap a stream that is already in nonblocking mode.
+    fn new(stream: TcpStream) -> Self {
+        WorkerConn {
+            stream,
+            fb: FrameBuf::new(),
+            send: SendCursor::new(),
+            recv: RecvCursor::new(),
+            state: ConnState::Idle,
+            shared: None,
+            deadline: None,
+            admitted: false,
+            dead: false,
+        }
+    }
 }
 
 /// One worker stream's transferable state — what a dynamic re-shard
@@ -204,19 +270,23 @@ fn check_indices(idx: &[u32], d: usize, what: &str) -> Result<()> {
 /// initial joins) so recovered workers can re-admit themselves with a
 /// `Rejoin` frame between rounds.
 ///
-/// Broadcast/collect is **concurrent** — one scoped thread per cohort
-/// stream, so a slow worker overlaps with its peers instead of
-/// serializing the round in client order — and the broadcast frames are
-/// **zero-copy**: each distinct frame this round needs (one dense
-/// `Model` frame, and under [`Downlink::Delta`] one `Delta` frame per
-/// distinct base generation in the engine's [`BroadcastPlan`]) is
-/// encoded once into an `Arc<Vec<u8>>` checked out of a
-/// [`FrameRotation`] of buffers *reused across rounds*, and the same
-/// bytes are shared by every cohort stream assigned that frame. Workers
-/// outside the round's cohort receive a 13-byte [`Msg::Sit`] frame
-/// instead of the d-vector, so downlink scales with the cohort, not
-/// with n. A stream that fails is flagged dead and its client reported
-/// as a casualty (`None`) — the round continues with the survivors.
+/// Broadcast/collect is **event-driven** — every stream runs
+/// nonblocking and a single [`poll(2)` reactor](crate::fl::reactor)
+/// interleaves all of them, resuming each half-done frame whenever its
+/// socket is ready, so a slow worker overlaps with its peers without a
+/// thread per stream (connection count scales to the fd limit, not the
+/// thread limit). The broadcast frames are **zero-copy**: each distinct
+/// frame this round needs (one dense `Model` frame, and under
+/// [`Downlink::Delta`] one `Delta` frame per distinct base generation
+/// in the engine's [`BroadcastPlan`]) is encoded once into an
+/// `Arc<Vec<u8>>` checked out of a [`FrameRotation`] of buffers
+/// *reused across rounds*, and the same bytes are shared by every
+/// cohort stream assigned that frame. Workers outside the round's
+/// cohort get their 13-byte [`Msg::Sit`] frames in the same batched
+/// reactor write pass, so downlink scales with the cohort, not with n.
+/// A stream that fails — or overruns its per-phase deadline — is
+/// flagged dead and its client reported as a casualty (`None`); the
+/// round continues with the survivors.
 pub struct TcpClientPool {
     conns: Vec<WorkerConn>,
     /// the accept listener, nonblocking once every initial join landed —
@@ -229,8 +299,21 @@ pub struct TcpClientPool {
     d: usize,
     /// the wire format every worker negotiated at Join time
     codec: Codec,
-    /// PS-side socket deadline applied to rejoined streams too
+    /// per-connection per-phase reactor deadline (0 = none); also applied
+    /// as a blocking socket timeout to join/rejoin handshakes
     io_timeout_ms: u64,
+    /// reused `poll(2)` interest set (rebuilt each reactor iteration,
+    /// capacity retained across rounds)
+    pollfds: Vec<PollFd>,
+    /// reused map from `pollfds` entry to connection index
+    pollidx: Vec<usize>,
+    /// reused list of the connections armed for the current phase
+    armed: Vec<usize>,
+    /// sharded serving: `Rejoin` handshakes are drained and routed by
+    /// [`route_rejoins`] (any shard's listener, landing at the current
+    /// owner), so [`ClientPool::poll_rejoins`] only surfaces
+    /// already-admitted slots instead of accepting itself
+    routed_rejoins: bool,
     /// per client: the last admitted `Rejoin` generation (0 = original
     /// join) — a rejoin must carry a strictly larger one, so a flapping
     /// worker's stale duplicate connect is refused
@@ -321,17 +404,27 @@ impl TcpClientPool {
         listener
             .set_nonblocking(true)
             .context("switching the join listener to nonblocking rejoin polling")?;
+        let mut conns = Vec::with_capacity(cfg.n_clients);
+        for s in slots {
+            let s = s.unwrap();
+            // the reactor drives every joined stream in nonblocking mode;
+            // the blocking SO_*TIMEO deadline above only governed the
+            // Join handshake
+            s.set_nonblocking(true).context("switching a joined stream to nonblocking mode")?;
+            conns.push(WorkerConn::new(s));
+        }
         Ok(TcpClientPool {
-            conns: slots
-                .into_iter()
-                .map(|s| WorkerConn { stream: s.unwrap(), fb: FrameBuf::new(), dead: false })
-                .collect(),
+            conns,
             listener,
             backend: make_backend(cfg)?,
             round: 0,
             d: cfg.d(),
             codec: cfg.codec,
             io_timeout_ms: cfg.io_timeout_ms,
+            pollfds: Vec::new(),
+            pollidx: Vec::new(),
+            armed: Vec::new(),
+            routed_rejoins: false,
             last_generation: vec![0; cfg.n_clients],
             cmap: CohortMap::new(),
             rotation: FrameRotation::new(),
@@ -385,6 +478,10 @@ impl TcpClientPool {
     pub fn shutdown(&mut self) -> Result<()> {
         let codec = self.codec;
         for wc in self.conns.iter_mut().filter(|wc| !wc.dead) {
+            // the reactor is done with this stream — the goodbye is a
+            // plain blocking write again (bounded by the socket's
+            // original SO_SNDTIMEO deadline, if any)
+            let _ = wc.stream.set_nonblocking(false);
             if send_frame(&mut wc.stream, &Msg::Shutdown, codec, &mut wc.fb).is_err() {
                 wc.dead = true;
             }
@@ -395,6 +492,148 @@ impl TcpClientPool {
         }
         Ok(())
     }
+
+    /// Sharded serving: drain this shard listener's queued `Rejoin`
+    /// handshakes into `arrivals` **without admitting them** — the
+    /// handshake names a *global* client id, and which shard currently
+    /// owns that id is the root's call ([`route_rejoins`]). Only the
+    /// codec is validated here; generation checks belong to the owning
+    /// pool, whose ledger the stream will land in.
+    fn drain_rejoin_handshakes(&mut self, arrivals: &mut Vec<RejoinArrival>) -> Result<()> {
+        loop {
+            let (mut s, peer) = match self.listener.accept() {
+                Ok(conn) => conn,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(anyhow::Error::new(e).context("polling for rejoins")),
+            };
+            s.set_nonblocking(false).context("rejoin stream blocking mode")?;
+            set_stream_deadline(&s, self.io_timeout_ms)?;
+            match recv(&mut s, self.codec) {
+                Ok(Msg::Rejoin { client_id, generation, held_digest, codec }) => {
+                    if codec != self.codec {
+                        crate::info!(
+                            "serve: refused rejoin from {peer} (client {client_id} \
+                             joined with codec {}, PS runs {})",
+                            codec.name(),
+                            self.codec.name()
+                        );
+                        let _ = send(&mut s, &Msg::Shutdown, self.codec);
+                        continue;
+                    }
+                    arrivals.push(RejoinArrival {
+                        stream: s,
+                        peer,
+                        global_id: client_id as usize,
+                        generation,
+                        held_digest,
+                    });
+                }
+                Ok(other) => {
+                    crate::info!("serve: expected Rejoin from {peer}, got {other:?}");
+                    let _ = send(&mut s, &Msg::Shutdown, self.codec);
+                }
+                Err(e) => {
+                    crate::info!("serve: bad rejoin handshake from {peer}: {e:#}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit a routed rejoin at this pool's `local` slot (the slot that
+    /// currently owns the arrival's global id): same generation fencing,
+    /// displacement, and digest-verified resync as the flat path in
+    /// [`ClientPool::poll_rejoins`], but the admitted slot is flagged so
+    /// the engine's next `poll_rejoins` surfaces it.
+    fn admit_routed(&mut self, local: usize, arrival: RejoinArrival, global: &[f32]) -> Result<()> {
+        let RejoinArrival { mut stream, peer, global_id, generation, held_digest } = arrival;
+        if generation <= self.last_generation[local] {
+            crate::info!("serve: refused rejoin from {peer} (client {global_id} gen {generation})");
+            let _ = send(&mut stream, &Msg::Shutdown, self.codec);
+            return Ok(());
+        }
+        if !self.conns[local].dead {
+            let wc = &mut self.conns[local];
+            let _ = wc.stream.set_nonblocking(false);
+            let _ = send_frame(&mut wc.stream, &Msg::Shutdown, self.codec, &mut wc.fb);
+            crate::info!("serve: rejoin displaces client {global_id}'s stale stream");
+        }
+        if held_digest != 0 && held_digest == params_digest(global) {
+            if let Err(e) = send(&mut stream, &Msg::Sit { round: self.round }, self.codec) {
+                crate::info!("serve: rejoin digest ack to client {global_id} failed: {e:#}");
+                return Ok(());
+            }
+            crate::info!(
+                "serve: client {global_id} rejoin digest proof accepted — resync skipped"
+            );
+        } else {
+            let frame = encode_model_frame(self.round, global);
+            if let Err(e) = stream.write_all(&frame) {
+                crate::info!("serve: rejoin resync to client {global_id} failed: {e:#}");
+                return Ok(());
+            }
+        }
+        stream.set_nonblocking(true).context("rejoined stream nonblocking mode")?;
+        crate::info!(
+            "serve: client {global_id} rejoined from {peer} (generation {generation}) \
+             -> shard slot {local}"
+        );
+        let mut wc = WorkerConn::new(stream);
+        wc.admitted = true;
+        self.conns[local] = wc;
+        self.last_generation[local] = generation;
+        self.rejoins += 1;
+        Ok(())
+    }
+}
+
+/// One drained, codec-validated `Rejoin` handshake awaiting routing to
+/// the shard that currently owns its global client id.
+struct RejoinArrival {
+    stream: TcpStream,
+    peer: std::net::SocketAddr,
+    /// the **global** client id the worker rejoins as (the wire carries
+    /// global ids so routing survives re-sharding)
+    global_id: usize,
+    generation: u32,
+    held_digest: u64,
+}
+
+/// Sharded-TCP rejoin routing (closes the PR 5 addressing gap): a
+/// recovered worker knocks on the port it always knew — its *original*
+/// shard's listener — but re-sharding may have moved its stream's
+/// ownership since. Before each round the topology driver drains every
+/// shard's queued handshakes here and admits each one at the slot the
+/// **current** assignment gives its global id, wherever that is.
+fn route_rejoins(
+    pools: &mut [TcpClientPool],
+    slices: &[Vec<usize>],
+    global: &[f32],
+) -> Result<()> {
+    let mut arrivals = Vec::new();
+    for pool in pools.iter_mut() {
+        pool.drain_rejoin_handshakes(&mut arrivals)?;
+    }
+    for arrival in arrivals {
+        match locate_in_slices(slices, arrival.global_id) {
+            Some((shard, local)) => pools[shard].admit_routed(local, arrival, global)?,
+            None => {
+                let RejoinArrival { mut stream, peer, global_id, .. } = arrival;
+                crate::info!("serve: refused rejoin from {peer} (unknown client {global_id})");
+                let _ = send(&mut stream, &Msg::Shutdown, pools[0].codec);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Which (shard, local slot) currently owns `global_id` under the given
+/// assignment. Linear scan: slices are small, and nothing here assumes
+/// the contiguity the static `locate` arithmetic needs.
+fn locate_in_slices(slices: &[Vec<usize>], global_id: usize) -> Option<(usize, usize)> {
+    slices.iter().enumerate().find_map(|(shard, slice)| {
+        slice.iter().position(|&g| g == global_id).map(|local| (shard, local))
+    })
 }
 
 /// Apply the PS-side socket deadline (0 = none).
@@ -407,49 +646,141 @@ fn set_stream_deadline(s: &TcpStream, io_timeout_ms: u64) -> Result<()> {
     Ok(())
 }
 
-/// One stream's first round half: write the broadcast frame, collect the
-/// worker's `Report` (bounds-checked), return it with the received frame
-/// size.
-fn stream_broadcast_collect(
-    wc: &mut WorkerConn,
-    frame: &[u8],
-    codec: Codec,
-    round: u32,
-    d: usize,
-) -> Result<(ClientReport, usize)> {
-    wc.stream.write_all(frame).context("send model frame")?;
-    match recv_frame(&mut wc.stream, codec, &mut wc.fb)? {
-        Msg::Report { report, mean_loss, round: r, .. } if r == round => {
-            // reports are remote input: reject indices outside the model
-            // before they reach selection/aggregation
-            check_indices(&report.idx, d, "report")?;
-            let up = wc.fb.last_recv_frame_len();
-            Ok((ClientReport { report, mean_loss }, up))
+impl TcpClientPool {
+    /// The reactor: drive every armed connection's state machine to
+    /// `Done` (or death) in one `poll(2)` readiness loop.
+    ///
+    /// Each armed connection enters `Writing` with its outgoing frame
+    /// queued (a shared rotation `Arc`, or the connection's own
+    /// `fb.buf`); the loop polls `POLLOUT` for writers and `POLLIN` for
+    /// readers, resumes the half-done frame of every ready socket via
+    /// its cursors, and flips `Writing → Reading` (when a reply is
+    /// expected) or `→ Done`. A completed reply frame is handed to
+    /// `on_frame(conn_index, payload, frame_len)`; an `Err` from it —
+    /// bad frame, wrong round, out-of-range indices — kills that
+    /// connection only. Per-connection deadlines (armed from
+    /// `io_timeout_ms` at phase start; 0 = none) bound the *whole
+    /// phase*, so neither a hung worker nor a one-byte-per-second
+    /// trickler can hold the round open: expiry marks the connection
+    /// dead with a casualty log naming the client, and the survivors
+    /// continue. Worker-side EOF/reset/panic surfaces the same way — a
+    /// per-client log line, never a PS abort.
+    fn run_reactor(
+        &mut self,
+        desc: &str,
+        sit_desc: &str,
+        mut on_frame: impl FnMut(usize, &[u8], usize) -> Result<()>,
+    ) -> Result<()> {
+        let io_timeout_ms = self.io_timeout_ms;
+        let deadline =
+            (io_timeout_ms > 0).then(|| Instant::now() + Duration::from_millis(io_timeout_ms));
+        for &i in &self.armed {
+            self.conns[i].deadline = deadline;
         }
-        other => bail!("round {round}: expected Report, got {other:?}"),
-    }
-}
-
-/// One stream's second round half: send the index request, collect the
-/// worker's `Update` (bounds-checked), return it with the received frame
-/// size (the request's size is accounted arithmetically by the caller).
-fn stream_request_collect(
-    wc: &mut WorkerConn,
-    indices: &[u32],
-    codec: Codec,
-    round: u32,
-    d: usize,
-) -> Result<(SparseVec, usize)> {
-    send_request(&mut wc.stream, codec, &mut wc.fb, round, indices)?;
-    match recv_frame(&mut wc.stream, codec, &mut wc.fb)? {
-        Msg::Update { update, round: r, .. } if r == round => {
-            // updates scatter-add into the global model: reject
-            // out-of-range remote indices here, not as a panic inside
-            // aggregation
-            check_indices(&update.idx, d, "update")?;
-            Ok((update, wc.fb.last_recv_frame_len()))
+        loop {
+            // rebuild the interest set from the still-live state machines
+            // (the Vecs keep their capacity across iterations and rounds)
+            self.pollfds.clear();
+            self.pollidx.clear();
+            let mut next_deadline: Option<Instant> = None;
+            for &i in &self.armed {
+                let wc = &self.conns[i];
+                if wc.dead {
+                    continue;
+                }
+                let events = match wc.state {
+                    ConnState::Writing { .. } => POLLOUT,
+                    ConnState::Reading => POLLIN,
+                    ConnState::Idle | ConnState::Done => continue,
+                };
+                self.pollfds.push(PollFd::new(wc.stream.as_raw_fd(), events));
+                self.pollidx.push(i);
+                if let Some(dl) = wc.deadline {
+                    next_deadline = Some(next_deadline.map_or(dl, |cur| cur.min(dl)));
+                }
+            }
+            if self.pollfds.is_empty() {
+                return Ok(());
+            }
+            let timeout = next_deadline.map(|dl| dl.saturating_duration_since(Instant::now()));
+            poll_fds(&mut self.pollfds, timeout)?;
+            for k in 0..self.pollidx.len() {
+                if !self.pollfds[k].ready() {
+                    continue;
+                }
+                let i = self.pollidx[k];
+                let wc = &mut self.conns[i];
+                match wc.state {
+                    ConnState::Writing { expect_reply } => {
+                        let frame: &[u8] = match &wc.shared {
+                            Some(arc) => arc.as_slice(),
+                            None => &wc.fb.buf,
+                        };
+                        match wc.send.advance(&mut wc.stream, frame) {
+                            Ok(IoStep::Done) => {
+                                // release the rotation slot now — by the
+                                // next checkout its refcount is back to one
+                                wc.shared = None;
+                                wc.state = if expect_reply {
+                                    ConnState::Reading
+                                } else {
+                                    ConnState::Done
+                                };
+                            }
+                            Ok(IoStep::Pending) => {}
+                            Err(e) => {
+                                wc.dead = true;
+                                wc.shared = None;
+                                let what = if expect_reply { desc } else { sit_desc };
+                                crate::info!("serve: client {i} dropped {what}: {e:#}");
+                            }
+                        }
+                    }
+                    ConnState::Reading => match wc.recv.advance(&mut wc.stream, &mut wc.fb) {
+                        Ok(IoStep::Done) => {
+                            let frame_len = wc.fb.last_recv_frame_len();
+                            match on_frame(i, &wc.fb.payload, frame_len) {
+                                Ok(()) => wc.state = ConnState::Done,
+                                Err(e) => {
+                                    wc.dead = true;
+                                    crate::info!("serve: client {i} dropped {desc}: {e:#}");
+                                }
+                            }
+                        }
+                        Ok(IoStep::Pending) => {}
+                        Err(e) => {
+                            wc.dead = true;
+                            crate::info!("serve: client {i} dropped {desc}: {e:#}");
+                        }
+                    },
+                    ConnState::Idle | ConnState::Done => {}
+                }
+            }
+            // deadline pass: whoever is still unfinished past their
+            // deadline is a straggler casualty — the survivors' round
+            // continues
+            let now = Instant::now();
+            for &i in &self.armed {
+                let wc = &mut self.conns[i];
+                if wc.dead || matches!(wc.state, ConnState::Idle | ConnState::Done) {
+                    continue;
+                }
+                if let Some(dl) = wc.deadline {
+                    if now >= dl {
+                        wc.dead = true;
+                        wc.shared = None;
+                        let what = match wc.state {
+                            ConnState::Writing { expect_reply: false } => sit_desc,
+                            _ => desc,
+                        };
+                        crate::info!(
+                            "serve: client {i} dropped {what}: phase deadline \
+                             ({io_timeout_ms} ms) expired"
+                        );
+                    }
+                }
+            }
         }
-        other => bail!("round {round}: expected Update, got {other:?}"),
     }
 }
 
@@ -478,6 +809,20 @@ impl ClientPool for TcpClientPool {
     /// Stale/duplicate generations (a flapping worker's leftover
     /// connect) are the refusals.
     fn poll_rejoins(&mut self, global: &[f32]) -> Result<Vec<usize>> {
+        if self.routed_rejoins {
+            // sharded serving: [`route_rejoins`] already drained every
+            // listener and admitted each arrival at its current owning
+            // slot (resync included) — here we only surface those
+            // freshly-admitted slots to the engine
+            let mut admitted = Vec::new();
+            for (i, wc) in self.conns.iter_mut().enumerate() {
+                if wc.admitted {
+                    wc.admitted = false;
+                    admitted.push(i);
+                }
+            }
+            return Ok(admitted);
+        }
         let mut admitted = Vec::new();
         loop {
             let (mut s, peer) = match self.listener.accept() {
@@ -507,6 +852,7 @@ impl ClientPool for TcpClientPool {
                         // death — the fresh, higher-generation handshake
                         // supersedes it
                         let wc = &mut self.conns[id];
+                        let _ = wc.stream.set_nonblocking(false);
                         let _ = send_frame(&mut wc.stream, &Msg::Shutdown, self.codec, &mut wc.fb);
                         crate::info!("serve: rejoin displaces client {id}'s stale stream");
                     }
@@ -543,8 +889,9 @@ impl ClientPool for TcpClientPool {
                     continue;
                 }
             }
+            s.set_nonblocking(true).context("rejoined stream nonblocking mode")?;
             crate::info!("serve: client {id} rejoined from {peer} (generation {generation})");
-            self.conns[id] = WorkerConn { stream: s, fb: FrameBuf::new(), dead: false };
+            self.conns[id] = WorkerConn::new(s);
             self.last_generation[id] = generation;
             self.rejoins += 1;
             admitted.push(id);
@@ -569,24 +916,9 @@ impl ClientPool for TcpClientPool {
         let codec = self.codec;
         let d = self.d;
         self.cmap.set(self.conns.len(), cohort);
-        // off-cohort first, inline: a 13-byte Sit per absent (reachable)
-        // worker keeps its round counter in sync without the d-vector —
-        // no point spawning a thread for a tiny recv-less write (in the
-        // cross-device regime most streams are off-cohort). A failed Sit
-        // marks the stream dead; the frame still counts as attempted.
-        let cmap = &self.cmap;
-        let mut sit_bytes = 0u64;
-        for (i, wc) in self.conns.iter_mut().enumerate() {
-            if cmap.slot(i) != usize::MAX || wc.dead {
-                continue;
-            }
-            sit_bytes += SIT_FRAME_BYTES as u64;
-            if let Err(e) = send_frame(&mut wc.stream, &Msg::Sit { round }, codec, &mut wc.fb) {
-                wc.dead = true;
-                crate::info!("serve: client {i} dropped at Sit (round {round}): {e:#}");
-            }
-        }
-        self.wire_down += sit_bytes;
+        // arm every reachable stream for one batched reactor pass.
+        // Off-cohort workers queue a 13-byte Sit (round-counter sync, no
+        // reply) in their own FrameBuf; cohort workers queue the round's
         // zero-copy broadcast: every distinct frame this round needs is
         // encoded once into a FrameRotation buffer and its Arc bytes are
         // shared across the streams assigned to it. Dense downlink: one
@@ -594,104 +926,104 @@ impl ClientPool for TcpClientPool {
         // BroadcastPlan maps each reachable cohort member to a sparse
         // Delta frame (shared per distinct base generation) or to the
         // dense fallback frame — so the attempted-frame byte accounting
-        // below mirrors the engine's per-member arithmetic exactly.
+        // (a frame counts when it is armed, even if the stream dies
+        // mid-write) mirrors the engine's per-member arithmetic exactly.
         let plan = self.plan.take();
-        debug_assert!(plan.as_ref().map_or(true, |p| p.round == round));
-        let rotation = &mut self.rotation;
-        let val_scratch = &mut self.val_scratch;
-        let idx_scratch = &mut self.idx_scratch;
-        let mut dense: Option<Arc<Vec<u8>>> = None;
-        let mut dense_encodes = 0u64;
-        let mut delta_frames: Vec<Option<Arc<Vec<u8>>>> =
-            vec![None; plan.as_ref().map_or(0, |p| p.deltas.len())];
-        let mut assigned: Vec<Option<Arc<Vec<u8>>>> = vec![None; self.conns.len()];
+        debug_assert!(
+            match plan.as_ref() {
+                Some(p) => p.round == round,
+                None => true,
+            },
+            "broadcast plan round mismatch"
+        );
+        let mut sit_bytes = 0u64;
         let mut attempted_bytes = 0u64;
-        for (i, wc) in self.conns.iter().enumerate() {
-            if self.cmap.slot(i) == usize::MAX || wc.dead {
-                continue;
+        let mut dense_encodes = 0u64;
+        {
+            let TcpClientPool { conns, cmap, rotation, val_scratch, idx_scratch, armed, .. } =
+                self;
+            armed.clear();
+            let mut dense: Option<Arc<Vec<u8>>> = None;
+            let mut delta_frames: Vec<Option<Arc<Vec<u8>>>> =
+                vec![None; plan.as_ref().map_or(0, |p| p.deltas.len())];
+            for (i, wc) in conns.iter_mut().enumerate() {
+                if wc.dead {
+                    continue;
+                }
+                wc.send.reset();
+                wc.recv.reset();
+                if cmap.slot(i) == usize::MAX {
+                    sit_bytes += SIT_FRAME_BYTES as u64;
+                    encode_frame_into(&Msg::Sit { round }, codec, &mut wc.fb);
+                    wc.shared = None;
+                    wc.state = ConnState::Writing { expect_reply: false };
+                    armed.push(i);
+                    continue;
+                }
+                let slot = plan.as_ref().and_then(|p| p.assign.get(i).copied().flatten());
+                let frame = match slot {
+                    Some(di) => {
+                        let p = plan.as_ref().expect("assignment implies a plan");
+                        let entry = &mut delta_frames[di];
+                        if entry.is_none() {
+                            let (base, idx) = &p.deltas[di];
+                            *entry = Some(rotation.checkout(|buf| {
+                                encode_delta_frame_into(
+                                    codec,
+                                    round,
+                                    *base,
+                                    p.digest,
+                                    idx,
+                                    global,
+                                    buf,
+                                    val_scratch,
+                                    idx_scratch,
+                                )
+                            }));
+                        }
+                        Arc::clone(entry.as_ref().expect("just filled"))
+                    }
+                    None => {
+                        if dense.is_none() {
+                            dense = Some(
+                                rotation
+                                    .checkout(|buf| encode_model_frame_into(round, global, buf)),
+                            );
+                            dense_encodes += 1;
+                        }
+                        Arc::clone(dense.as_ref().expect("just filled"))
+                    }
+                };
+                attempted_bytes += frame.len() as u64;
+                wc.shared = Some(frame);
+                wc.state = ConnState::Writing { expect_reply: true };
+                armed.push(i);
             }
-            let slot = plan.as_ref().and_then(|p| p.assign.get(i).copied().flatten());
-            let frame = match slot {
-                Some(di) => {
-                    let p = plan.as_ref().expect("assignment implies a plan");
-                    let entry = &mut delta_frames[di];
-                    if entry.is_none() {
-                        let (base, idx) = &p.deltas[di];
-                        *entry = Some(rotation.checkout(|buf| {
-                            encode_delta_frame_into(
-                                codec,
-                                round,
-                                *base,
-                                p.digest,
-                                idx,
-                                global,
-                                buf,
-                                val_scratch,
-                                idx_scratch,
-                            )
-                        }));
-                    }
-                    Arc::clone(entry.as_ref().expect("just filled"))
-                }
-                None => {
-                    if dense.is_none() {
-                        dense = Some(
-                            rotation
-                                .checkout(|buf| encode_model_frame_into(round, global, buf)),
-                        );
-                        dense_encodes += 1;
-                    }
-                    Arc::clone(dense.as_ref().expect("just filled"))
-                }
-            };
-            attempted_bytes += frame.len() as u64;
-            assigned[i] = Some(frame);
         }
         self.model_encodes += dense_encodes;
-        self.wire_down += attempted_bytes;
-        // one thread per reachable cohort stream: a slow worker's local
-        // training overlaps its peers' instead of serializing the round
-        // in client order. Already-dead streams answer None immediately.
-        let cmap = &self.cmap;
-        let collected: Vec<Option<(ClientReport, usize)>> =
-            std::thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(cohort.len());
-                for (i, wc) in self.conns.iter_mut().enumerate() {
-                    if cmap.slot(i) == usize::MAX {
-                        continue;
-                    }
-                    if wc.dead {
-                        handles.push(None);
-                        continue;
-                    }
-                    let frame = assigned[i]
-                        .take()
-                        .expect("reachable cohort stream without an assigned frame");
-                    handles.push(Some(scope.spawn(
-                        move || -> Option<(ClientReport, usize)> {
-                            match stream_broadcast_collect(wc, &frame, codec, round, d) {
-                                Ok(out) => Some(out),
-                                Err(e) => {
-                                    wc.dead = true;
-                                    crate::info!(
-                                        "serve: client {i} dropped mid-round {round}: {e:#}"
-                                    );
-                                    None
-                                }
-                            }
-                        },
-                    )));
+        self.wire_down += sit_bytes + attempted_bytes;
+        // one reactor pass interleaves every armed stream: a slow
+        // worker's local training overlaps its peers' instead of
+        // serializing the round in client order
+        let mut results: Vec<Option<(ClientReport, usize)>> =
+            (0..self.conns.len()).map(|_| None).collect();
+        self.run_reactor(
+            &format!("mid-round {round}"),
+            &format!("at Sit (round {round})"),
+            |i, payload, frame_len| match Msg::decode(payload, codec)? {
+                Msg::Report { report, mean_loss, round: r, .. } if r == round => {
+                    // reports are remote input: reject indices outside
+                    // the model before they reach selection/aggregation
+                    check_indices(&report.idx, d, "report")?;
+                    results[i] = Some((ClientReport { report, mean_loss }, frame_len));
+                    Ok(())
                 }
-                // joining in stream order = ascending client id = cohort
-                // order
-                handles
-                    .into_iter()
-                    .map(|h| h.and_then(|h| h.join().expect("stream thread panicked")))
-                    .collect()
-            });
-        let mut reports = Vec::with_capacity(collected.len());
-        for slot in collected {
-            match slot {
+                other => bail!("round {round}: expected Report, got {other:?}"),
+            },
+        )?;
+        let mut reports = Vec::with_capacity(cohort.len());
+        for &c in cohort {
+            match results[c].take() {
                 Some((rep, up)) => {
                     self.wire_up += up as u64;
                     reports.push(Some(rep));
@@ -711,53 +1043,51 @@ impl ClientPool for TcpClientPool {
         let codec = self.codec;
         let d = self.d;
         self.cmap.set(self.conns.len(), cohort);
-        // attempted-frame downlink accounting, computed before the
-        // threads run (the request frame size is arithmetic)
-        let cmap = &self.cmap;
-        for (i, wc) in self.conns.iter().enumerate() {
-            let p = cmap.slot(i);
-            if p == usize::MAX || wc.dead {
-                continue;
-            }
-            let indices: &[u32] = requests.map(|r| r[p].as_slice()).unwrap_or(&[]);
-            self.wire_down += request_frame_bytes(codec, indices) as u64;
-        }
-        let cmap = &self.cmap;
-        let collected: Vec<Option<(SparseVec, usize)>> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(cohort.len());
-            for (i, wc) in self.conns.iter_mut().enumerate() {
+        // arm each reachable cohort stream with its Request frame
+        // (off-cohort workers already got their Sit): client-side
+        // strategies select locally, so the frame may be empty — it
+        // still flows to keep the wire flow uniform. Attempted-frame
+        // accounting at arm time, as in the broadcast phase.
+        let mut request_bytes = 0u64;
+        {
+            let TcpClientPool { conns, cmap, armed, .. } = self;
+            armed.clear();
+            for (i, wc) in conns.iter_mut().enumerate() {
                 let p = cmap.slot(i);
-                if p == usize::MAX {
-                    continue; // off-cohort workers already got their Sit
-                }
-                if wc.dead {
-                    handles.push(None);
+                if p == usize::MAX || wc.dead {
                     continue;
                 }
-                // client-side strategies select locally; the Request frame
-                // still flows (empty) so the wire flow stays uniform
+                wc.send.reset();
+                wc.recv.reset();
                 let indices: &[u32] = requests.map(|r| r[p].as_slice()).unwrap_or(&[]);
-                handles.push(Some(scope.spawn(move || -> Option<(SparseVec, usize)> {
-                    match stream_request_collect(wc, indices, codec, round, d) {
-                        Ok(out) => Some(out),
-                        Err(e) => {
-                            wc.dead = true;
-                            crate::info!(
-                                "serve: client {i} dropped at exchange (round {round}): {e:#}"
-                            );
-                            None
-                        }
-                    }
-                })));
+                request_bytes += encode_request_into(codec, &mut wc.fb, round, indices) as u64;
+                wc.shared = None;
+                wc.state = ConnState::Writing { expect_reply: true };
+                armed.push(i);
             }
-            handles
-                .into_iter()
-                .map(|h| h.and_then(|h| h.join().expect("stream thread panicked")))
-                .collect()
-        });
-        let mut updates = Vec::with_capacity(collected.len());
-        for slot in collected {
-            match slot {
+        }
+        self.wire_down += request_bytes;
+        let mut results: Vec<Option<(SparseVec, usize)>> =
+            (0..self.conns.len()).map(|_| None).collect();
+        let desc = format!("at exchange (round {round})");
+        self.run_reactor(
+            &desc,
+            &desc,
+            |i, payload, frame_len| match Msg::decode(payload, codec)? {
+                Msg::Update { update, round: r, .. } if r == round => {
+                    // updates scatter-add into the global model: reject
+                    // out-of-range remote indices here, not as a panic
+                    // inside aggregation
+                    check_indices(&update.idx, d, "update")?;
+                    results[i] = Some((update, frame_len));
+                    Ok(())
+                }
+                other => bail!("round {round}: expected Update, got {other:?}"),
+            },
+        )?;
+        let mut updates = Vec::with_capacity(cohort.len());
+        for &c in cohort {
+            match results[c].take() {
                 Some((update, up)) => {
                     self.wire_up += up as u64;
                     updates.push(Some(update));
@@ -886,10 +1216,16 @@ pub fn run_server_on(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Se
 /// sockets never notice).
 ///
 /// Shard collect phases run serially here — [`TcpClientPool`] owns a
-/// non-`Send` PS backend, so it cannot cross shard threads. The per-shard
-/// pools still overlap their own workers (thread per stream), and every
-/// worker of every shard trains concurrently in its own process; only the
-/// PS-side frame pumping serializes across shards.
+/// non-`Send` PS backend, so it cannot cross shard threads. Each shard's
+/// reactor still overlaps its own workers (one `poll(2)` loop per pool),
+/// and every worker of every shard trains concurrently in its own
+/// process; only the PS-side frame pumping serializes across shards.
+///
+/// Rejoins are **routed**: before each round, [`route_rejoins`] drains
+/// every shard listener's queued `Rejoin` handshakes and admits each one
+/// at the slot the *current* assignment gives its global client id — so
+/// a worker that knocks on its original shard's port after a re-shard
+/// still lands on the pool that now owns its stream.
 ///
 /// [`ShardedEngine`]: crate::coordinator::topology::ShardedEngine
 pub fn run_sharded_server_on(
@@ -906,7 +1242,9 @@ pub fn run_sharded_server_on(
         let mut shard_cfg = cfg.clone();
         shard_cfg.n_clients = slice.len();
         crate::info!("serve: accepting shard {s} ({} clients)", slice.len());
-        pools.push(TcpClientPool::accept(&shard_cfg, listener)?);
+        let mut pool = TcpClientPool::accept(&shard_cfg, listener)?;
+        pool.routed_rejoins = true;
+        pools.push(pool);
     }
     let init = pools[0].backend.init_params()?;
     let mut engine = ShardedEngine::new(cfg, init)?;
@@ -915,6 +1253,10 @@ pub fn run_sharded_server_on(
     let mut casualties = 0u64;
 
     for round in 1..=cfg.rounds {
+        // admit queued rejoins at their *current* owning shard before the
+        // round's collect — a re-shard at the end of round t is reflected
+        // in `engine.slices()` by the time round t+1's rejoins route
+        route_rejoins(&mut pools, engine.slices(), engine.global_params())?;
         let out = engine.run_round_serial(&mut pools)?;
         casualties += out.casualties.len() as u64;
         if cfg.eval_every > 0 && round % cfg.eval_every == 0 {
@@ -994,12 +1336,14 @@ pub fn run_worker(cfg: &ExperimentConfig, addr: &str, id: usize) -> Result<()> {
 }
 
 /// [`run_worker`] for a **recovered** worker: instead of a fresh `Join`
-/// it sends a `Rejoin` frame carrying its id and `generation` (its
-/// restart count, >= 1 and strictly increasing across restarts), waits
-/// for the PS's `Model` resync of the current global model, and then
-/// runs the normal round loop. Note the rejoin address derivation
-/// assumes the *static* shard assignment — under an actively re-sharding
-/// topology, rejoin is supported on the flat (single-PS) layout.
+/// it sends a `Rejoin` frame carrying its **global** id and `generation`
+/// (its restart count, >= 1 and strictly increasing across restarts),
+/// waits for the PS's `Model` resync of the current global model, and
+/// then runs the normal round loop. Under a sharded topology any shard's
+/// port works — the worker naturally knocks on its original (statically
+/// derived) shard, and the PS routes the handshake to whichever shard
+/// *currently* owns the id ([`route_rejoins`]), so rejoin survives
+/// dynamic re-sharding.
 pub fn run_worker_rejoin(
     cfg: &ExperimentConfig,
     addr: &str,
@@ -1068,9 +1412,13 @@ fn run_worker_session(
         send(&mut stream, &Msg::Join { client_id: join_id as u32, codec }, codec)?;
         crate::info!("worker {id}: joined {addr} (codec {})", codec.name());
     } else {
+        // a Rejoin carries the **global** id (unlike Join's shard-local
+        // slot): after a dynamic re-shard the stream's owning shard may
+        // have moved, and the PS-side router finds the current owner by
+        // global id — whichever shard's port this knock lands on
         send(
             &mut stream,
-            &Msg::Rejoin { client_id: join_id as u32, generation, held_digest, codec },
+            &Msg::Rejoin { client_id: id as u32, generation, held_digest, codec },
             codec,
         )?;
         // the PS answers an accepted rejoin with the current global model
@@ -1322,5 +1670,51 @@ mod tests {
         let short = grows_of(2);
         let long = grows_of(6);
         assert_eq!(short, long, "per-round broadcast allocations leak into the growth count");
+    }
+
+    /// Off-cohort `Sit` frames ride the reactor's batched write pass and
+    /// still cost exactly [`SIT_FRAME_BYTES`] (13 bytes) each in the
+    /// attempted `wire_down` accounting — one Model frame to the cohort
+    /// member, one 13-byte Sit to the sitter, nothing else.
+    #[test]
+    fn off_cohort_sit_frames_cost_exactly_13_bytes() {
+        use crate::fl::transport::{model_frame_bytes, recv_payload};
+        let cfg = smoke_cfg(); // 2 clients, raw codec
+        let codec = cfg.codec;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // worker 0: this round's cohort — broadcast in, report out
+        let h0 = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            send(&mut s, &Msg::Join { client_id: 0, codec }, codec).unwrap();
+            let mut fb = FrameBuf::new();
+            let payload = recv_payload(&mut s, &mut fb).unwrap();
+            assert_eq!(payload.first().copied(), Some(TAG_MODEL));
+            let report = SparseVec::new(vec![1, 3], vec![0.5, -0.5]);
+            send_report(&mut s, codec, &mut fb, 0, 1, &report, 0.25).unwrap();
+        });
+        // worker 1: off-cohort — exactly one 13-byte Sit
+        let h1 = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            send(&mut s, &Msg::Join { client_id: 1, codec }, codec).unwrap();
+            match recv(&mut s, codec).unwrap() {
+                Msg::Sit { round } => assert_eq!(round, 1),
+                other => panic!("expected Sit, got {other:?}"),
+            }
+        });
+        let mut pool = TcpClientPool::accept(&cfg, listener).unwrap();
+        let global = vec![0.0f32; 64];
+        let reports = pool.train_and_report(&global, &[0]).unwrap();
+        assert_eq!(reports.len(), 1);
+        assert!(reports[0].is_some(), "the cohort member's report must land");
+        assert_eq!(SIT_FRAME_BYTES, 13);
+        let (_, down) = pool.wire_observed();
+        assert_eq!(
+            down as usize,
+            model_frame_bytes(64) + SIT_FRAME_BYTES,
+            "off-cohort downlink must be exactly one 13-byte Sit frame"
+        );
+        h0.join().unwrap();
+        h1.join().unwrap();
     }
 }

@@ -11,6 +11,7 @@ pub mod codec;
 pub mod distributed;
 pub mod metrics;
 pub mod pool;
+pub mod reactor;
 pub mod trainer;
 pub mod transport;
 

@@ -1,0 +1,166 @@
+//! Readiness polling for the event-driven PS transport: a minimal,
+//! dependency-free wrapper over `poll(2)`.
+//!
+//! The offline registry has no `mio`/`tokio`, and the PS reactor
+//! (`fl::distributed`) needs exactly one primitive the standard library
+//! does not expose: "which of these sockets can make progress right
+//! now, or none within this deadline?". `std` already links libc on
+//! every supported platform, so a single `extern "C"` declaration of
+//! `poll` plus a `#[repr(C)]` mirror of `struct pollfd` is the whole
+//! dependency surface — no event-loop framework, no new crates.
+//!
+//! Semantics kept deliberately tiny:
+//!
+//! * level-triggered — a socket that is still readable/writable shows up
+//!   again on the next call, so resumable frame cursors
+//!   ([`crate::fl::transport::RecvCursor`]/[`SendCursor`]) never need
+//!   re-arming logic;
+//! * `EINTR` is retried internally (the reactor re-derives per-connection
+//!   deadlines every iteration, so a slightly stretched wait is harmless);
+//! * error conditions (`POLLERR`/`POLLHUP`/`POLLNVAL`) are reported as
+//!   readiness: the caller's next read/write surfaces the actual
+//!   [`std::io::Error`] with the usual errno detail.
+//!
+//! [`SendCursor`]: crate::fl::transport::SendCursor
+
+use anyhow::{Context, Result};
+use std::os::fd::RawFd;
+use std::time::Duration;
+
+/// `POLLIN`: readable (or peer-closed, which reads as EOF).
+pub const POLLIN: i16 = 0x001;
+/// `POLLOUT`: writable without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// `POLLERR`: error condition (revents only).
+pub const POLLERR: i16 = 0x008;
+/// `POLLHUP`: peer hung up (revents only).
+pub const POLLHUP: i16 = 0x010;
+/// `POLLNVAL`: fd not open (revents only).
+pub const POLLNVAL: i16 = 0x020;
+
+/// ABI mirror of libc's `struct pollfd` (identical layout on every
+/// platform `poll(2)` exists on: int fd, short events, short revents).
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: RawFd,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    /// An interest entry for `fd`, with `revents` cleared.
+    pub fn new(fd: RawFd, events: i16) -> Self {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// Any readiness or error condition reported for this fd — the
+    /// caller should attempt its pending I/O (errors surface there).
+    pub fn ready(&self) -> bool {
+        self.revents != 0
+    }
+}
+
+extern "C" {
+    /// `poll(2)`; `nfds_t` is `c_ulong` on every libc Rust's std links.
+    fn poll(fds: *mut PollFd, nfds: std::ffi::c_ulong, timeout: std::ffi::c_int) -> std::ffi::c_int;
+}
+
+/// Wait until at least one entry is ready, or `timeout` elapses
+/// (`None` = wait forever). Returns how many entries have nonzero
+/// `revents`; 0 means the timeout fired with nothing ready. `EINTR` is
+/// retried with the same timeout.
+pub fn poll_fds(fds: &mut [PollFd], timeout: Option<Duration>) -> Result<usize> {
+    let timeout_ms: std::ffi::c_int = match timeout {
+        None => -1,
+        Some(t) => {
+            // round a sub-millisecond remainder *up* so a deadline just
+            // a few microseconds out does not degenerate into a busy
+            // spin of zero-timeout polls
+            let ms = t.as_millis();
+            let ms = if ms == 0 && !t.is_zero() { 1 } else { ms };
+            ms.min(std::ffi::c_int::MAX as u128) as std::ffi::c_int
+        }
+    };
+    loop {
+        // SAFETY: `fds` is a valid, exclusively-borrowed slice of
+        // repr(C) pollfd-layout structs for the whole call, and nfds is
+        // its exact length.
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as std::ffi::c_ulong, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = std::io::Error::last_os_error();
+        if err.kind() == std::io::ErrorKind::Interrupted {
+            continue;
+        }
+        return Err(err).context("poll(2)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::time::Instant;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn timeout_fires_with_nothing_ready() {
+        let (a, _b) = pair();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let t0 = Instant::now();
+        let n = poll_fds(&mut fds, Some(Duration::from_millis(30))).unwrap();
+        assert_eq!(n, 0, "no data was ever written");
+        assert!(!fds[0].ready());
+        assert!(t0.elapsed() >= Duration::from_millis(25), "the wait must honor the timeout");
+    }
+
+    #[test]
+    fn readable_after_peer_writes() {
+        let (a, mut b) = pair();
+        b.write_all(b"x").unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].ready());
+        assert_ne!(fds[0].revents & POLLIN, 0);
+    }
+
+    #[test]
+    fn fresh_socket_is_writable_and_hangup_reports_ready() {
+        let (a, b) = pair();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLOUT)];
+        let n = poll_fds(&mut fds, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(n, 1, "an empty send buffer is writable immediately");
+        // peer closes: the POLLIN wait reports readiness (EOF reads as
+        // Ok(0) — the reactor's cursors turn that into a clean error)
+        drop(b);
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].ready());
+    }
+
+    #[test]
+    fn mixed_set_reports_only_the_ready_entries() {
+        let (a, mut b) = pair();
+        let (c, _d) = pair();
+        b.write_all(b"y").unwrap();
+        let mut fds =
+            [PollFd::new(a.as_raw_fd(), POLLIN), PollFd::new(c.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, Some(Duration::from_millis(50))).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].ready(), "a has queued data");
+        assert!(!fds[1].ready(), "c is idle");
+    }
+}

@@ -567,6 +567,36 @@ pub fn recv(stream: &mut TcpStream, codec: Codec) -> Result<Msg> {
     recv_frame(stream, codec, &mut fb)
 }
 
+/// Encode one message into the stream's reused [`FrameBuf`] without
+/// writing it — the reactor path queues `fb.buf` behind a [`SendCursor`]
+/// instead of blocking on `write_all`. Returns the frame's wire size.
+/// Steady-state encodes allocate nothing (capacity growth is tracked by
+/// the buffer's growth counter).
+pub fn encode_frame_into(msg: &Msg, codec: Codec, fb: &mut FrameBuf) -> usize {
+    let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
+    msg.encode_into(codec, &mut fb.buf, &mut fb.scratch);
+    fb.note_growth(bc, pc);
+    fb.buf.len()
+}
+
+/// Encode a `Request` frame from a borrowed index slice into the
+/// stream's [`FrameBuf`] without writing it (the reactor's exchange
+/// phase); byte-identical to `Msg::Request { .. }` encoding. Returns the
+/// wire size.
+pub fn encode_request_into(
+    codec: Codec,
+    fb: &mut FrameBuf,
+    round: u32,
+    indices: &[u32],
+) -> usize {
+    let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
+    frame_start(&mut fb.buf, 4); // Msg::Request's tag
+    write_request_payload(codec, &mut fb.buf, &mut fb.scratch, round, indices);
+    frame_finish(&mut fb.buf);
+    fb.note_growth(bc, pc);
+    fb.buf.len()
+}
+
 /// Write one message through the stream's reused [`FrameBuf`]; returns
 /// the frame's wire size. Steady-state sends allocate nothing.
 pub fn send_frame(
@@ -575,11 +605,9 @@ pub fn send_frame(
     codec: Codec,
     fb: &mut FrameBuf,
 ) -> Result<usize> {
-    let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
-    msg.encode_into(codec, &mut fb.buf, &mut fb.scratch);
-    fb.note_growth(bc, pc);
+    let n = encode_frame_into(msg, codec, fb);
     stream.write_all(&fb.buf).context("send frame")?;
-    Ok(fb.buf.len())
+    Ok(n)
 }
 
 /// Encode a `Report` frame from borrowed parts through the stream's
@@ -622,13 +650,9 @@ pub fn send_request(
     round: u32,
     indices: &[u32],
 ) -> Result<usize> {
-    let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
-    frame_start(&mut fb.buf, 4); // Msg::Request's tag
-    write_request_payload(codec, &mut fb.buf, &mut fb.scratch, round, indices);
-    frame_finish(&mut fb.buf);
-    fb.note_growth(bc, pc);
+    let n = encode_request_into(codec, fb, round, indices);
     stream.write_all(&fb.buf).context("send request frame")?;
-    Ok(fb.buf.len())
+    Ok(n)
 }
 
 /// Read one frame's payload (tag + body) into the stream's reused
@@ -658,6 +682,162 @@ pub fn recv_payload<'a>(stream: &mut TcpStream, fb: &'a mut FrameBuf) -> Result<
 pub fn recv_frame(stream: &mut TcpStream, codec: Codec, fb: &mut FrameBuf) -> Result<Msg> {
     let payload = recv_payload(stream, fb)?;
     Msg::decode(payload, codec)
+}
+
+// --------------------------------------------------- resumable framing
+//
+// The blocking helpers above drive a frame to completion in one call;
+// the PS reactor (`fl::distributed`) instead runs its sockets in
+// nonblocking mode and resumes each half-done frame whenever `poll(2)`
+// reports readiness. The two cursors below hold exactly the state a
+// partial transfer needs — the write offset, or the header-so-far plus
+// the payload fill level — and produce/consume **byte-identical frames**
+// to the blocking path (pinned one byte at a time by the torture tests
+// below for every message variant in every codec). They are generic
+// over `Read`/`Write` so tests can starve them through 1-byte mock
+// sockets; on a nonblocking `TcpStream`, `WouldBlock` maps to
+// [`IoStep::Pending`].
+
+/// Outcome of one cursor resumption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoStep {
+    /// The frame completed (the cursor has reset itself for the next
+    /// frame).
+    Done,
+    /// The transport would block; re-arm in the readiness loop and call
+    /// `advance` again when the socket is ready.
+    Pending,
+}
+
+/// Resumable frame write: tracks how many bytes of the queued frame have
+/// reached the socket. One cursor per connection, reused across frames.
+#[derive(Debug, Default)]
+pub struct SendCursor {
+    off: usize,
+}
+
+impl SendCursor {
+    pub fn new() -> Self {
+        SendCursor::default()
+    }
+
+    /// Forget any partial progress (re-arming a connection for a new
+    /// frame after completion does this implicitly — `advance` resets on
+    /// [`IoStep::Done`]).
+    pub fn reset(&mut self) {
+        self.off = 0;
+    }
+
+    /// Push more of `frame` into `w`. Returns [`IoStep::Done`] once the
+    /// last byte is written (resetting the cursor), [`IoStep::Pending`]
+    /// on `WouldBlock`. A peer that closes mid-frame is an error — the
+    /// caller logs the casualty and drops the connection.
+    pub fn advance(&mut self, w: &mut impl Write, frame: &[u8]) -> Result<IoStep> {
+        while self.off < frame.len() {
+            match w.write(&frame[self.off..]) {
+                Ok(0) => bail!(
+                    "connection closed mid-frame ({} of {} bytes written)",
+                    self.off,
+                    frame.len()
+                ),
+                Ok(n) => self.off += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(IoStep::Pending)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("write frame"),
+            }
+        }
+        self.off = 0;
+        Ok(IoStep::Done)
+    }
+}
+
+/// Resumable frame read: accumulates the 8-byte header, validates it,
+/// then fills the frame's payload into the connection's [`FrameBuf`] —
+/// across as many `advance` calls as readiness allows. On
+/// [`IoStep::Done`] the payload (tag + body) sits in `fb.payload`,
+/// exactly as [`recv_payload`] would have left it, and the cursor has
+/// reset itself for the next frame.
+#[derive(Debug, Default)]
+pub struct RecvCursor {
+    hdr: [u8; 8],
+    hdr_got: usize,
+    /// payload length from the validated header; 0 = header not yet
+    /// complete (a zero-length payload is rejected as implausible, so 0
+    /// is unambiguous as a sentinel)
+    need: usize,
+    got: usize,
+}
+
+impl RecvCursor {
+    pub fn new() -> Self {
+        RecvCursor::default()
+    }
+
+    /// Forget any partial frame (used when a connection is re-armed
+    /// after an error; normal completion resets implicitly).
+    pub fn reset(&mut self) {
+        self.hdr_got = 0;
+        self.need = 0;
+        self.got = 0;
+    }
+
+    /// Pull more of the current frame out of `r`. EOF anywhere — before
+    /// the header (a vanished peer) or mid-frame — is an error; a bad
+    /// magic or implausible length fails exactly like the blocking
+    /// [`recv_payload`] path.
+    pub fn advance(&mut self, r: &mut impl Read, fb: &mut FrameBuf) -> Result<IoStep> {
+        while self.hdr_got < 8 {
+            match r.read(&mut self.hdr[self.hdr_got..]) {
+                Ok(0) => {
+                    if self.hdr_got == 0 {
+                        bail!("connection closed");
+                    }
+                    bail!("connection closed mid-header ({} of 8 bytes)", self.hdr_got);
+                }
+                Ok(n) => self.hdr_got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(IoStep::Pending)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("recv header"),
+            }
+        }
+        if self.need == 0 {
+            let magic = u32::from_le_bytes(self.hdr[0..4].try_into().unwrap());
+            if magic != MAGIC {
+                bail!("bad magic {magic:#x}");
+            }
+            let len = u32::from_le_bytes(self.hdr[4..8].try_into().unwrap()) as usize;
+            if len == 0 || len > 512 << 20 {
+                bail!("implausible frame length {len}");
+            }
+            let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
+            fb.payload.resize(len, 0);
+            fb.note_growth(bc, pc);
+            self.need = len;
+            self.got = 0;
+        }
+        while self.got < self.need {
+            match r.read(&mut fb.payload[self.got..self.need]) {
+                Ok(0) => bail!(
+                    "connection closed mid-frame ({} of {} payload bytes)",
+                    self.got,
+                    self.need
+                ),
+                Ok(n) => self.got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(IoStep::Pending)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("recv payload"),
+            }
+        }
+        fb.set_last_recv(8 + self.need);
+        self.reset();
+        Ok(IoStep::Done)
+    }
 }
 
 #[cfg(test)]
@@ -1134,6 +1314,195 @@ mod tests {
             Msg::Request { round: 3, indices: vec![9, 1, 4] }
         );
         handle.join().unwrap();
+    }
+
+    // ---------------------------------------- resumable-framing torture
+    //
+    // The reactor path must produce/consume byte-identical frames to the
+    // blocking path under arbitrarily hostile readiness: here every Msg
+    // variant crosses a mock socket one byte at a time, with a WouldBlock
+    // between every byte, in all three codecs.
+
+    /// Reads at most one byte per call, returning `WouldBlock` before
+    /// every byte — the worst-case readiness schedule.
+    struct TrickleReader<'a> {
+        data: &'a [u8],
+        pos: usize,
+        starved: bool,
+    }
+
+    impl std::io::Read for TrickleReader<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if !self.starved {
+                self.starved = true;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.starved = false;
+            if self.pos >= self.data.len() {
+                return Ok(0); // EOF
+            }
+            if buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    /// Accepts at most one byte per call, with a WouldBlock before every
+    /// byte — the 1-byte-capacity mock socket of the send torture.
+    struct TrickleWriter {
+        out: Vec<u8>,
+        starved: bool,
+    }
+
+    impl std::io::Write for TrickleWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if !self.starved {
+                self.starved = true;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.starved = false;
+            if buf.is_empty() {
+                return Ok(0);
+            }
+            self.out.push(buf[0]);
+            Ok(1)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Drive a cursor until `Done`, re-calling on every `Pending` like
+    /// the reactor does when `poll` reports readiness again.
+    fn pump(mut step: impl FnMut() -> Result<IoStep>) -> Result<usize> {
+        let mut pendings = 0;
+        loop {
+            match step()? {
+                IoStep::Done => return Ok(pendings),
+                IoStep::Pending => pendings += 1,
+            }
+        }
+    }
+
+    #[test]
+    fn recv_cursor_byte_at_a_time_matches_blocking_decode() {
+        for codec in ALL {
+            for m in every_variant() {
+                let frame = m.encode(codec);
+                let mut r = TrickleReader { data: &frame, pos: 0, starved: false };
+                let mut fb = FrameBuf::new();
+                let mut cur = RecvCursor::new();
+                let pendings =
+                    pump(|| cur.advance(&mut r, &mut fb)).unwrap();
+                // one yield per byte: the cursor resumed across every
+                // single split point of the frame
+                assert_eq!(pendings, frame.len(), "{codec:?} {m:?}");
+                assert_eq!(&fb.payload[..], &frame[8..], "payload must be byte-identical");
+                assert_eq!(fb.last_recv_frame_len(), frame.len());
+                // and it decodes to exactly what the blocking path sees
+                let blocking = Msg::decode(&frame[8..], codec).unwrap();
+                let nonblocking = Msg::decode(&fb.payload, codec).unwrap();
+                assert_eq!(nonblocking, blocking, "{codec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn recv_cursor_handles_back_to_back_frames_with_one_buffer() {
+        // steady-state reuse across frames of different sizes: the cursor
+        // self-resets on Done and the FrameBuf stops growing once the
+        // high-water mark is set
+        let codec = Codec::Packed;
+        let frames: Vec<Vec<u8>> = every_variant().iter().map(|m| m.encode(codec)).collect();
+        let all: Vec<u8> = frames.iter().flatten().copied().collect();
+        let mut r = TrickleReader { data: &all, pos: 0, starved: false };
+        let mut fb = FrameBuf::new();
+        let mut cur = RecvCursor::new();
+        for frame in &frames {
+            pump(|| cur.advance(&mut r, &mut fb)).unwrap();
+            assert_eq!(&fb.payload[..], &frame[8..]);
+        }
+        // nothing left: the next advance sees a clean EOF
+        let err = pump(|| cur.advance(&mut r, &mut fb)).unwrap_err();
+        assert!(format!("{err:#}").contains("connection closed"), "{err:#}");
+    }
+
+    #[test]
+    fn send_cursor_through_one_byte_socket_is_byte_identical() {
+        for codec in ALL {
+            for m in every_variant() {
+                let frame = m.encode(codec);
+                let mut w = TrickleWriter { out: Vec::new(), starved: false };
+                let mut cur = SendCursor::new();
+                let pendings = pump(|| cur.advance(&mut w, &frame)).unwrap();
+                assert_eq!(pendings, frame.len(), "one yield per byte, {codec:?} {m:?}");
+                assert_eq!(w.out, frame, "the wire bytes must match the blocking write_all");
+            }
+        }
+    }
+
+    #[test]
+    fn send_cursor_reports_peer_close_mid_frame() {
+        /// accepts 3 bytes, then behaves like a closed socket
+        struct Closing(usize);
+        impl std::io::Write for Closing {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                if self.0 == 0 || buf.is_empty() {
+                    return Ok(0);
+                }
+                self.0 -= 1;
+                Ok(1)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let frame = Msg::Sit { round: 1 }.encode(Codec::Raw);
+        let mut cur = SendCursor::new();
+        let err = cur.advance(&mut Closing(3), &frame).unwrap_err();
+        assert!(format!("{err:#}").contains("3 of 13 bytes"), "{err:#}");
+    }
+
+    #[test]
+    fn recv_cursor_rejects_corruption_like_the_blocking_path() {
+        // bad magic
+        let mut frame = Msg::Sit { round: 1 }.encode(Codec::Raw);
+        frame[0] ^= 0xFF;
+        let mut r = TrickleReader { data: &frame, pos: 0, starved: false };
+        let mut fb = FrameBuf::new();
+        let mut cur = RecvCursor::new();
+        let err = pump(|| cur.advance(&mut r, &mut fb)).unwrap_err();
+        assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+        // implausible length
+        let mut frame = Msg::Sit { round: 1 }.encode(Codec::Raw);
+        frame[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = TrickleReader { data: &frame, pos: 0, starved: false };
+        let mut cur = RecvCursor::new();
+        let err = pump(|| cur.advance(&mut r, &mut fb)).unwrap_err();
+        assert!(format!("{err:#}").contains("implausible frame length"), "{err:#}");
+        // EOF mid-payload names the fill level
+        let frame = Msg::Request { round: 2, indices: vec![1, 2, 3] }.encode(Codec::Raw);
+        let cut = &frame[..frame.len() - 2];
+        let mut r = TrickleReader { data: cut, pos: 0, starved: false };
+        let mut cur = RecvCursor::new();
+        let err = pump(|| cur.advance(&mut r, &mut fb)).unwrap_err();
+        assert!(format!("{err:#}").contains("mid-frame"), "{err:#}");
+    }
+
+    #[test]
+    fn encode_helpers_match_generic_encoding_without_writing() {
+        let codec = Codec::Packed;
+        let mut fb = FrameBuf::new();
+        let msg = Msg::Sit { round: 9 };
+        let n = encode_frame_into(&msg, codec, &mut fb);
+        assert_eq!(fb.buf, msg.encode(codec));
+        assert_eq!(n, msg.wire_bytes(codec));
+        let n = encode_request_into(codec, &mut fb, 3, &[9, 1, 4]);
+        assert_eq!(fb.buf, Msg::Request { round: 3, indices: vec![9, 1, 4] }.encode(codec));
+        assert_eq!(n, request_frame_bytes(codec, &[9, 1, 4]));
     }
 
     #[test]

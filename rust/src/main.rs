@@ -38,7 +38,7 @@ fn train_spec(cmd: &str, about: &str) -> ArgSpec {
         .opt("scheduler", "", "cohort policy: round-robin | random | age-debt (empty = preset)")
         .opt("shards", "", "PS topology: 0 = flat (default), N >= 1 = N shard engines")
         .opt("root-merge", "", "root age-vector merge under sharding: min | max (empty = min)")
-        .opt("io-timeout-ms", "", "PS-side socket read/write deadline in ms (empty/0 = none)")
+        .opt("io-timeout-ms", "", "PS-side per-phase connection deadline in ms (empty/0 = none)")
         .opt("reshard", "", "re-partition shards at recluster boundaries: true | false")
         .opt("codec", "", "wire codec: raw | packed | packed-f16 (empty = preset)")
         .opt("downlink", "", "broadcast mode: dense | delta (empty = preset)")
@@ -305,7 +305,10 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
     cfg.payload = ragek::config::Payload::Delta; // must match cmd_serve
     let id = a.get_usize("id")?;
     // under a sharded topology the worker talks to its shard's PS at
-    // base_port + shard (mirroring cmd_serve's bind layout)
+    // base_port + shard (mirroring cmd_serve's bind layout); Rejoin
+    // handshakes are routed by global id on the PS side (DESIGN.md §10),
+    // so after a dynamic re-shard this statically-derived port still
+    // lands the comeback on whichever shard owns the client now
     let shards = cfg.topology.n_shards();
     let addr = if shards > 1 {
         let (shard, _) = ragek::coordinator::topology::locate(cfg.n_clients, shards, id);

@@ -154,8 +154,20 @@ fn total_outage_recovers_after_rejoin() {
 /// report and the echoed request — no real training, so the thread is
 /// fast and fully deterministic.
 fn scripted_round(stream: &mut TcpStream, id: u32, round: u32, base: u32) -> anyhow::Result<()> {
-    let idx: Vec<u32> = (0..12u32).map(|j| base + j).collect();
-    let val: Vec<f32> = (0..12).map(|j| 12.0 - j as f32).collect();
+    scripted_round_r(stream, id, round, base, 12)
+}
+
+/// [`scripted_round`] with a configurable report width (the fixed index
+/// window `base..base+r`, descending values).
+fn scripted_round_r(
+    stream: &mut TcpStream,
+    id: u32,
+    round: u32,
+    base: u32,
+    r: usize,
+) -> anyhow::Result<()> {
+    let idx: Vec<u32> = (0..r as u32).map(|j| base + j).collect();
+    let val: Vec<f32> = (0..r).map(|j| (r - j) as f32).collect();
     let report = SparseVec::new(idx, val);
     send(
         stream,
@@ -163,7 +175,7 @@ fn scripted_round(stream: &mut TcpStream, id: u32, round: u32, base: u32) -> any
         Codec::Raw,
     )?;
     let requested = match recv(stream, Codec::Raw)? {
-        Msg::Request { indices, round: r } if r == round => indices,
+        Msg::Request { indices, round: rr } if rr == round => indices,
         other => anyhow::bail!("expected Request, got {other:?}"),
     };
     let update = ragek::fl::client::Client::answer_request(&report, &requested);
@@ -446,4 +458,124 @@ fn recluster_reshards_across_pools_with_exact_ages() {
             assert_eq!(shard.fleet().state(i), Membership::Active);
         }
     }
+}
+
+/// Satellite pin (DESIGN.md §8/§10): the sharded-TCP rejoin addressing
+/// gap. Client 3 starts on shard 1, the round-2 recluster boundary
+/// re-shards it onto shard 0 (twins 2+3 pair, exactly as in
+/// [`recluster_reshards_across_pools_with_exact_ages`]), it is killed on
+/// round 4's broadcast, and its comeback knocks on the *original*
+/// shard-1 port with a **global**-id `Rejoin` frame — the PS must route
+/// the handshake to whichever pool currently owns the id, admit it
+/// there, and put the client back to work.
+#[test]
+fn tcp_rejoin_after_reshard_lands_on_new_shard() {
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.n_clients = 6;
+    cfg.payload = Payload::Delta;
+    cfg.participation = 1.0;
+    cfg.recluster_every = 2;
+    cfg.k = 2;
+    cfg.r = 6;
+    cfg.rounds = 6;
+    cfg.train_n = 200;
+    cfg.test_n = 64;
+    cfg.eval_every = 0;
+    cfg.io_timeout_ms = 2000;
+    cfg.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+
+    let listeners: Vec<TcpListener> =
+        (0..2).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let ports: Vec<u16> =
+        listeners.iter().map(|l| l.local_addr().unwrap().port()).collect();
+    let server_cfg = cfg.clone();
+    let server = thread::spawn(move || {
+        ragek::fl::distributed::run_sharded_server_on(&server_cfg, listeners)
+    });
+
+    // five healthy scripted workers on their static shards (global ids
+    // 0,1,2 -> shard 0 locals 0,1,2; ids 4,5 -> shard 1 locals 1,2),
+    // reporting the fixed per-id windows that pair ids 2 and 3 as twins
+    let r = cfg.r;
+    let mut healthy = Vec::new();
+    for g in [0usize, 1, 2, 4, 5] {
+        let (shard, local) = ragek::coordinator::topology::locate(6, 2, g);
+        let port = ports[shard];
+        healthy.push(thread::spawn(move || -> anyhow::Result<()> {
+            let mut s = TcpStream::connect(("127.0.0.1", port))?;
+            send(&mut s, &Msg::Join { client_id: local as u32, codec: Codec::Raw }, Codec::Raw)?;
+            let base = if g == 2 { 500 } else { 100 * g as u32 };
+            loop {
+                match recv(&mut s, Codec::Raw)? {
+                    Msg::Model { round, .. } => {
+                        scripted_round_r(&mut s, g as u32, round, base, r)?
+                    }
+                    Msg::Sit { .. } => continue,
+                    Msg::Shutdown => return Ok(()),
+                    other => anyhow::bail!("worker {g}: unexpected {other:?}"),
+                }
+            }
+        }));
+    }
+
+    // the mortal: global id 3, static shard 1 slot 0; shares the base-500
+    // window with id 2, so the round-2 boundary moves it to shard 0
+    let shard1_port = ports[1];
+    let mortal = thread::spawn(move || -> anyhow::Result<()> {
+        let mut s = TcpStream::connect(("127.0.0.1", shard1_port))?;
+        send(&mut s, &Msg::Join { client_id: 0, codec: Codec::Raw }, Codec::Raw)?;
+        loop {
+            match recv(&mut s, Codec::Raw)? {
+                Msg::Model { round, .. } => {
+                    if round >= 4 {
+                        drop(s); // killed mid-round, *after* the re-shard
+                        break;
+                    }
+                    scripted_round_r(&mut s, 3, round, 500, 6)?;
+                }
+                Msg::Sit { .. } => continue,
+                Msg::Shutdown => return Ok(()),
+                other => anyhow::bail!("mortal: unexpected {other:?}"),
+            }
+        }
+        // ---- the comeback: same port it always knew (shard 1), but a
+        // global client id — the router must land it on shard 0
+        let mut s = TcpStream::connect(("127.0.0.1", shard1_port))?;
+        send(
+            &mut s,
+            &Msg::Rejoin { client_id: 3, generation: 1, held_digest: 0, codec: Codec::Raw },
+            Codec::Raw,
+        )?;
+        match recv(&mut s, Codec::Raw)? {
+            Msg::Model { .. } => {} // the resync from the owning shard
+            Msg::Shutdown => return Ok(()), // refused / run over
+            other => anyhow::bail!("rejoin: expected Model resync, got {other:?}"),
+        }
+        loop {
+            match recv(&mut s, Codec::Raw)? {
+                Msg::Model { round, .. } => scripted_round_r(&mut s, 3, round, 500, 6)?,
+                Msg::Sit { .. } => continue,
+                Msg::Shutdown => return Ok(()),
+                other => anyhow::bail!("mortal (rejoined): unexpected {other:?}"),
+            }
+        }
+    });
+
+    let report = server.join().unwrap().expect("the kill must not abort the sharded run");
+    for h in healthy {
+        h.join().unwrap().expect("healthy workers must run to Shutdown");
+    }
+    mortal.join().unwrap().expect("the mortal's script must complete");
+
+    assert_eq!(report.rounds, 6);
+    assert!(report.casualties >= 1, "the kill must be observed as a casualty");
+    assert_eq!(report.rejoins, 1, "the routed Rejoin must be admitted exactly once");
+    // round 4 (index 3): the kill round — client 3 contributed nothing
+    assert!(report.uploaded_log[3][3].is_empty(), "killed client uploads nothing");
+    assert!(!report.uploaded_log[3][2].is_empty(), "its twin finished round 4");
+    // after the routed rejoin, client 3 contributes again — possible only
+    // if the handshake landed on the shard that owns the id *now*
+    let contributed_after =
+        report.uploaded_log[4..].iter().any(|round| !round[3].is_empty());
+    assert!(contributed_after, "the rejoined worker must contribute via its new shard");
 }
