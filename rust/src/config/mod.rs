@@ -115,6 +115,26 @@ pub struct ExperimentConfig {
     /// design). Must comfortably exceed the local training time of one
     /// round.
     pub io_timeout_ms: u64,
+    /// Speculative over-scheduling ε (DESIGN.md §11): the scheduler
+    /// selects `m + ε` cohort members each round and the round commits
+    /// as soon as the first `m` reports land; the ε stragglers are
+    /// cancelled cleanly (not casualties — their clusters age exactly
+    /// like off-cohort absence). 0 (the default) disables speculation
+    /// and is bit-for-bit identical to the non-speculative path.
+    pub overschedule: usize,
+    /// Adaptive per-connection deadline factor k (DESIGN.md §11): with
+    /// k > 0, each connection's per-phase deadline becomes
+    /// `clamp(ewma_rtt · k, deadline_min_ms, io_timeout_ms)` where the
+    /// EWMA tracks that client's observed phase round-trips, with one
+    /// bounded retry (deadline re-armed once) before the client is
+    /// dropped and degrades toward `Suspect`. 0 (the default) disables
+    /// adaptive deadlines — every connection gets the flat
+    /// `io_timeout_ms` window.
+    pub deadline_factor: f64,
+    /// Floor for adaptive deadlines in milliseconds, so a fast client's
+    /// EWMA can never shrink its window below a sane minimum. Only
+    /// consulted when `deadline_factor > 0`.
+    pub deadline_min_ms: u64,
     /// Dynamic re-sharding (sharded topologies only, default on): at
     /// each root recluster boundary, re-partition the fleet across shard
     /// pools with `ClusterManager::shard_slices` so the assignment
@@ -184,6 +204,9 @@ impl ExperimentConfig {
             scheduler: SchedulerKind::RoundRobin,
             topology: Topology::Flat,
             io_timeout_ms: 0,
+            overschedule: 0,
+            deadline_factor: 0.0,
+            deadline_min_ms: 50,
             reshard: true,
             codec: Codec::Raw,
             downlink: Downlink::Dense,
@@ -239,6 +262,9 @@ impl ExperimentConfig {
             scheduler: SchedulerKind::RoundRobin,
             topology: Topology::Flat,
             io_timeout_ms: 0,
+            overschedule: 0,
+            deadline_factor: 0.0,
+            deadline_min_ms: 50,
             reshard: true,
             codec: Codec::Raw,
             downlink: Downlink::Dense,
@@ -303,6 +329,13 @@ impl ExperimentConfig {
         m.clamp(1, self.n_clients)
     }
 
+    /// Clients actually scheduled per round under speculation:
+    /// `m + overschedule`, capped at the fleet size. Equal to
+    /// [`cohort_size`](Self::cohort_size) when `overschedule = 0`.
+    pub fn scheduled_cohort_size(&self) -> usize {
+        (self.cohort_size() + self.overschedule).min(self.n_clients)
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.k > self.r {
             bail!("k ({}) must be <= r ({})", self.k, self.r);
@@ -315,6 +348,12 @@ impl ExperimentConfig {
         }
         if !(self.participation > 0.0 && self.participation <= 1.0) {
             bail!("participation ({}) must be in (0, 1]", self.participation);
+        }
+        if !(self.deadline_factor.is_finite() && self.deadline_factor >= 0.0) {
+            bail!(
+                "deadline_factor ({}) must be a finite value >= 0 (0 = adaptive deadlines off)",
+                self.deadline_factor
+            );
         }
         if self.topology.n_shards() > self.n_clients {
             bail!(
@@ -382,6 +421,9 @@ impl ExperimentConfig {
                 MergeRule::Max => "max".into(),
             })),
             ("io_timeout_ms", Json::Num(self.io_timeout_ms as f64)),
+            ("overschedule", Json::Num(self.overschedule as f64)),
+            ("deadline_factor", Json::Num(self.deadline_factor)),
+            ("deadline_min_ms", Json::Num(self.deadline_min_ms as f64)),
             ("reshard", Json::Bool(self.reshard)),
             ("codec", Json::Str(self.codec.name().into())),
             ("downlink", Json::Str(self.downlink.name().into())),
@@ -471,6 +513,9 @@ impl ExperimentConfig {
             c.topology = Topology::from_shards(shards, root_merge);
         }
         num!(io_timeout_ms, "io_timeout_ms", u64);
+        num!(overschedule, "overschedule", usize);
+        num!(deadline_factor, "deadline_factor", f64);
+        num!(deadline_min_ms, "deadline_min_ms", u64);
         if let Some(b) = j.get("reshard").and_then(Json::as_bool) {
             c.reshard = b;
         }
@@ -583,6 +628,9 @@ mod tests {
         cfg.payload = Payload::Delta; // delta downlink + grad would need server sgd
         cfg.topology = Topology::Sharded { shards: 3, root_merge: MergeRule::Max };
         cfg.io_timeout_ms = 1500;
+        cfg.overschedule = 2;
+        cfg.deadline_factor = 2.5;
+        cfg.deadline_min_ms = 75;
         cfg.reshard = false;
         let j = cfg.to_json();
         let back = ExperimentConfig::from_json(&j).unwrap();
@@ -602,6 +650,19 @@ mod tests {
         );
         assert_eq!(back.topology, cfg.topology);
         assert_eq!(back.io_timeout_ms, 1500);
+        assert_eq!(back.overschedule, 2);
+        assert_eq!(back.deadline_factor, 2.5);
+        assert_eq!(back.deadline_min_ms, 75);
+        assert_eq!(
+            ExperimentConfig::mnist_paper().overschedule,
+            0,
+            "speculation defaults off: overschedule = 0 is the non-speculative path"
+        );
+        assert_eq!(
+            ExperimentConfig::mnist_paper().deadline_factor,
+            0.0,
+            "adaptive deadlines default off"
+        );
         assert!(!back.reshard);
         assert!(ExperimentConfig::mnist_paper().reshard, "re-sharding defaults on");
         // the default stays flat
@@ -618,6 +679,19 @@ mod tests {
         assert_eq!(cfg.cohort_size(), 4);
         cfg.participation = 0.01; // never below one client
         assert_eq!(cfg.cohort_size(), 1);
+    }
+
+    #[test]
+    fn scheduled_cohort_size_adds_epsilon_and_caps_at_n() {
+        let mut cfg = ExperimentConfig::mnist_paper(); // 10 clients
+        cfg.participation = 0.5; // m = 5
+        assert_eq!(cfg.scheduled_cohort_size(), 5, "epsilon = 0 schedules exactly m");
+        cfg.overschedule = 2;
+        assert_eq!(cfg.scheduled_cohort_size(), 7);
+        cfg.overschedule = 100; // can never schedule more clients than exist
+        assert_eq!(cfg.scheduled_cohort_size(), 10);
+        cfg.participation = 1.0; // full participation leaves no one to speculate on
+        assert_eq!(cfg.scheduled_cohort_size(), 10);
     }
 
     #[test]
@@ -651,6 +725,12 @@ mod tests {
         c.participation = 1.5;
         assert!(c.validate().is_err());
         c.participation = 0.2;
+        assert!(c.validate().is_ok());
+        c.deadline_factor = -1.0;
+        assert!(c.validate().is_err());
+        c.deadline_factor = f64::NAN;
+        assert!(c.validate().is_err());
+        c.deadline_factor = 3.0;
         assert!(c.validate().is_ok());
         // more shards than clients is rejected; equal is fine
         c.topology = Topology::Sharded { shards: 11, root_merge: MergeRule::Min };

@@ -150,6 +150,44 @@ pub trait ClientPool {
     /// always before `train_and_report`.
     fn set_broadcast_plan(&mut self, _plan: &BroadcastPlan) {}
 
+    /// Speculative over-scheduling (DESIGN.md §11): how many phase-1
+    /// reports the engine will commit the upcoming round with. When the
+    /// quota is smaller than the scheduled cohort, the pool should stop
+    /// waiting as soon as `quota` reports have landed and **cancel** the
+    /// stragglers — tear down their round state machines cleanly,
+    /// return `None` for them from [`Self::train_and_report`], and list
+    /// them in [`Self::take_cancelled`]. Cancelled members are *not*
+    /// casualties: they received the broadcast and trained, the round
+    /// simply committed without them. Called at most once per round,
+    /// before `train_and_report`; the quota applies to that call only.
+    /// The default ignores the quota (every member then reports as
+    /// usual and the engine commits them all).
+    fn set_commit_quota(&mut self, _quota: usize) {}
+
+    /// The cohort members the commit quota cancelled in the last
+    /// [`Self::train_and_report`] (any order; the engine sorts). A
+    /// cancelled member provably received this round's broadcast (its
+    /// frame was fully delivered before the round committed), so the
+    /// engine keeps its generation ledger at the broadcast generation
+    /// instead of forgetting it, and its fleet state is untouched — its
+    /// cluster's eq.-(2) ages grow exactly as for off-cohort absence.
+    /// Draining: the call transfers ownership (a second call returns
+    /// empty).
+    fn take_cancelled(&mut self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Per-client phase round-trips observed since the last call:
+    /// `(client id, milliseconds)` per completed write+reply phase, in
+    /// observation order. The engine folds these into each
+    /// [`crate::coordinator::fleet::MemberRecord`]'s EWMA
+    /// (DESIGN.md §11), which transports with adaptive deadlines feed
+    /// back into `clamp(ewma · k, min, io_timeout_ms)` windows. The
+    /// default (simulators have no wire clock) reports nothing.
+    fn take_phase_timings(&mut self) -> Vec<(usize, f32)> {
+        Vec::new()
+    }
+
     /// Algorithm 1 lines 3-7 for the round's **cohort** (sorted, distinct
     /// client ids): broadcast `global` to the cohort, have each member
     /// adopt it (local optimizer state persists — `sync_to`, not a
@@ -254,6 +292,11 @@ pub struct RoundOutcome {
     /// scheduled clients that dropped mid-round (sorted; empty on a
     /// healthy fleet) — their cluster ages kept growing per eq. (2)
     pub casualties: Vec<usize>,
+    /// speculatively over-scheduled clients the round committed without
+    /// (sorted; always empty at `overschedule = 0`). Not casualties —
+    /// their fleet state is untouched and their ages grow exactly like
+    /// off-cohort absence (DESIGN.md §11).
+    pub cancelled: Vec<usize>,
 }
 
 /// Everything one engine's collect phases produced *before* the server
@@ -270,14 +313,18 @@ pub struct RoundOutcome {
 /// absence), and training continues.
 #[derive(Debug)]
 pub struct PartialRound {
-    /// the scheduled cohort (sorted, distinct local ids) — purely
-    /// informational: it is exactly the sorted union of `survivors` and
-    /// `casualties`, and no driver consumes it today
+    /// the scheduled cohort (sorted, distinct local ids; `m + ε` members
+    /// under speculative over-scheduling) — purely informational: it is
+    /// exactly the sorted union of `survivors`, `casualties`, and
+    /// `cancelled`, and no driver consumes it today
     pub cohort: Vec<usize>,
     /// cohort members that completed both phases (sorted)
     pub survivors: Vec<usize>,
     /// cohort members that dropped mid-round (sorted)
     pub casualties: Vec<usize>,
+    /// over-scheduled members the round committed without (sorted; see
+    /// [`RoundOutcome::cancelled`])
+    pub cancelled: Vec<usize>,
     /// sum over the survivors of per-client mean local losses (f64 terms
     /// in survivor order, exactly the summation `util::mean` performs —
     /// so `loss_sum / survivors.len()` reproduces the flat mean
@@ -558,7 +605,8 @@ impl RoundEngine {
     /// reclustering).
     pub fn run_round(&mut self, pool: &mut dyn ClientPool) -> Result<RoundOutcome> {
         let pr = self.collect_round(pool)?;
-        let PartialRound { survivors, casualties, loss_sum, updates, uploaded, .. } = pr;
+        let PartialRound { survivors, casualties, cancelled, loss_sum, updates, uploaded, .. } =
+            pr;
         let mean_loss = if survivors.is_empty() {
             f32::NAN
         } else {
@@ -591,6 +639,7 @@ impl RoundEngine {
             n_clusters: self.ps.clusters().n_clusters(),
             cohort: survivors,
             casualties,
+            cancelled,
         })
     }
 
@@ -634,24 +683,31 @@ impl RoundEngine {
         );
         self.fleet.observe_health(&health);
 
-        // ---- cohort selection (partial participation, fleet-aware)
+        // ---- cohort selection (partial participation, fleet-aware).
+        // Under speculative over-scheduling (DESIGN.md §11) the
+        // scheduler selects m + ε members; the round still commits on
+        // the first m reports and the ε stragglers are cancelled.
         let m = self.cfg.cohort_size();
+        let m_sched = self.cfg.scheduled_cohort_size();
         let states = self.fleet.states();
         let cohort = self.scheduler.select(&ScheduleCtx {
             round: self.ps.round(),
             n,
-            m,
+            m: m_sched,
             ps: &self.ps,
             since_polled: &self.since_polled,
             fleet: &states,
         });
         ensure!(
-            cohort.len() == m
+            cohort.len() == m_sched
                 && cohort.windows(2).all(|w| w[0] < w[1])
                 && cohort.iter().all(|&c| c < n),
-            "scheduler {} returned an invalid cohort {cohort:?} (want {m} sorted ids < {n})",
+            "scheduler {} returned an invalid cohort {cohort:?} (want {m_sched} sorted ids < {n})",
             self.scheduler.name()
         );
+        if m_sched > m {
+            pool.set_commit_quota(m);
+        }
 
         // ---- delta-downlink broadcast plan (DESIGN.md §9): decided by
         // the engine from its generation ledger + update ring, executed
@@ -670,9 +726,20 @@ impl RoundEngine {
             .profile
             .time("pool.train", || pool.train_and_report(&self.global.params, &cohort))?;
         ensure!(
-            phase1.len() == m,
-            "pool returned {} report slots for a cohort of {m}",
+            phase1.len() == m_sched,
+            "pool returned {} report slots for a cohort of {m_sched}",
             phase1.len()
+        );
+        // stragglers the commit quota cancelled: `None` in phase1 but
+        // *not* casualties (DESIGN.md §11) — their broadcast was fully
+        // delivered, so the generation ledger advances like a survivor's
+        let mut cancelled: Vec<usize> =
+            if m_sched > m { pool.take_cancelled() } else { Vec::new() };
+        cancelled.sort_unstable();
+        ensure!(
+            cancelled.windows(2).all(|w| w[0] < w[1])
+                && cancelled.iter().all(|&c| cohort.binary_search(&c).is_ok()),
+            "pool cancelled {cancelled:?}, not a distinct subset of the cohort {cohort:?}"
         );
         let mut casualties: Vec<usize> = Vec::new();
         // phase-1 survivors and their reports, in (sorted) cohort order
@@ -682,12 +749,27 @@ impl RoundEngine {
         for (&c, rep) in cohort.iter().zip(phase1) {
             match rep {
                 Some(rep) => {
+                    ensure!(
+                        cancelled.binary_search(&c).is_err(),
+                        "pool both reported and cancelled client {c}"
+                    );
                     alive.push(c);
                     reports.push(rep);
                     // a returned report proves the member received and
                     // applied this round's broadcast (a diverged delta
                     // receiver bails before reporting)
                     self.fleet.set_acked_model(c, broadcast_gen);
+                }
+                None if cancelled.binary_search(&c).is_ok() => {
+                    // cancelled straggler: it holds this round's
+                    // broadcast and trained on it — the round just
+                    // committed without its report. No fleet damage; it
+                    // ages like an off-cohort client from here.
+                    self.fleet.set_acked_model(c, broadcast_gen);
+                    crate::info!(
+                        "round {}: client {c} cancelled (round committed with {m} of {m_sched})",
+                        self.ps.round() + 1,
+                    );
                 }
                 None => {
                     // a member whose stream was never written keeps its
@@ -818,6 +900,11 @@ impl RoundEngine {
         // reachable members (no O(n) membership mask needed)
         let sits = health.iter().filter(|&&h| h).count() - m_bcast;
         self.comm.wire_down += (sits * wire::SIT_FRAME_BYTES) as u64;
+        // each cancelled straggler is unwedged with one Sit frame at the
+        // moment the round commits (DESIGN.md §11); its late report is
+        // drained off the stream and tallied separately by the transport
+        // (`drained_up`), never here
+        self.comm.wire_down += (cancelled.len() * wire::SIT_FRAME_BYTES) as u64;
         for rep in &reports {
             self.comm.wire_up += wire::report_frame_bytes(codec, &rep.report.idx) as u64;
         }
@@ -837,7 +924,16 @@ impl RoundEngine {
             self.comm.wire_up += wire::update_frame_bytes(codec, &u.idx) as u64;
         }
 
-        Ok(PartialRound { cohort, survivors, casualties, loss_sum, updates, uploaded })
+        // ---- adaptive-deadline feedback: fold the transport's observed
+        // per-phase round-trips into the fleet's EWMAs (DESIGN.md §11).
+        // Simulated pools report nothing and this is a no-op.
+        for (c, ms) in pool.take_phase_timings() {
+            if c < n {
+                self.fleet.observe_rtt(c, ms);
+            }
+        }
+
+        Ok(PartialRound { cohort, survivors, casualties, cancelled, loss_sum, updates, uploaded })
     }
 
     /// Phase 5 of a round: commit the round's uploads to the age and
@@ -1074,6 +1170,13 @@ mod tests {
         last_requests: Option<Vec<Vec<u32>>>,
         fail_phase1: HashSet<usize>,
         fail_phase2: HashSet<usize>,
+        /// members that lose every speculative race (quota rounds only)
+        stalled: HashSet<usize>,
+        /// the engine's commit quota for the next train_and_report
+        quota: Option<usize>,
+        cancelled: Vec<usize>,
+        /// scripted phase round-trips handed back via take_phase_timings
+        timings: Vec<(usize, f32)>,
     }
 
     impl FakePool {
@@ -1085,6 +1188,10 @@ mod tests {
                 last_requests: None,
                 fail_phase1: HashSet::new(),
                 fail_phase2: HashSet::new(),
+                stalled: HashSet::new(),
+                quota: None,
+                cancelled: Vec::new(),
+                timings: Vec::new(),
             }
         }
     }
@@ -1094,6 +1201,18 @@ mod tests {
             self.n
         }
 
+        fn set_commit_quota(&mut self, quota: usize) {
+            self.quota = Some(quota);
+        }
+
+        fn take_cancelled(&mut self) -> Vec<usize> {
+            std::mem::take(&mut self.cancelled)
+        }
+
+        fn take_phase_timings(&mut self) -> Vec<(usize, f32)> {
+            std::mem::take(&mut self.timings)
+        }
+
         fn train_and_report(
             &mut self,
             _global: &[f32],
@@ -1101,7 +1220,7 @@ mod tests {
         ) -> Result<Vec<Option<ClientReport>>> {
             assert!(cohort.iter().all(|&c| c < self.n));
             // client i reports indices 10i..10i+r by descending magnitude
-            Ok(cohort
+            let mut out: Vec<Option<ClientReport>> = cohort
                 .iter()
                 .map(|&i| {
                     if self.fail_phase1.contains(&i) {
@@ -1114,7 +1233,24 @@ mod tests {
                         mean_loss: 1.0,
                     })
                 })
-                .collect())
+                .collect();
+            // speculative commit: the first `quota` non-stalled members
+            // (cohort order) land; every other live member is cancelled
+            if let Some(quota) = self.quota.take() {
+                let mut landed = 0;
+                for (p, &c) in cohort.iter().enumerate() {
+                    if out[p].is_none() {
+                        continue; // a real casualty, not a cancellation
+                    }
+                    if landed < quota && !self.stalled.contains(&c) {
+                        landed += 1;
+                    } else {
+                        out[p] = None;
+                        self.cancelled.push(c);
+                    }
+                }
+            }
+            Ok(out)
         }
 
         fn exchange(
@@ -1307,6 +1443,127 @@ mod tests {
         assert_eq!(out.cohort, vec![0, 1]);
         assert!(out.casualties.is_empty());
         assert_eq!(engine.fleet().state(1), Membership::Active);
+    }
+
+    /// The speculation tentpole at engine granularity (DESIGN.md §11):
+    /// with `overschedule = 1` the scheduler selects m + 1 members, the
+    /// round commits with the first m reports, and the straggler is
+    /// cancelled — no fleet damage, ledger advanced (it holds the
+    /// broadcast), ages growing exactly like off-cohort absence.
+    #[test]
+    fn speculative_round_commits_first_m_and_cancels_stragglers() {
+        let mut cfg = smoke_cfg();
+        cfg.n_clients = 4;
+        cfg.participation = 0.5; // m = 2
+        cfg.overschedule = 1; // schedule 3
+        let d = cfg.d();
+        let mut pool = FakePool::healthy(&cfg);
+        pool.stalled.insert(1); // the straggler of every speculative race
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+
+        let out = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out.cohort, vec![0, 2], "exactly m fast members commit");
+        assert_eq!(out.cancelled, vec![1]);
+        assert!(out.casualties.is_empty(), "a cancelled straggler is not a casualty");
+        assert_eq!(engine.fleet().state(1), Membership::Active, "no fleet damage");
+        assert_eq!(engine.fleet().record(1).casualties, 0);
+        // it provably received the broadcast: the ledger advances like a
+        // survivor's, so the next delta downlink could still reach it
+        assert_eq!(engine.fleet().acked_model(1), 1);
+        // but it uploaded nothing and its ages grew per eq. (2)
+        assert!(engine.uploaded_log()[0][1].is_empty());
+        assert_eq!(engine.ps().clusters().age_of_client(1).get(0), 1);
+        // and it keeps accruing poll debt like an off-cohort client
+        assert_eq!(engine.since_polled[1], 1);
+        assert_eq!(engine.since_polled[0], 0, "a survivor's debt resets");
+
+        // exact wire mirror: 3 broadcast frames went out (the straggler's
+        // was fully delivered before the commit), 1 off-cohort Sit, 1
+        // cancel Sit, and m = 2 report/request/update flows
+        let comm = engine.comm();
+        // raw-codec request frame: header 9 + round 4 + len 4 + 4k indices
+        let req = (9 + 4 + 4 + 4 * cfg.k) as u64;
+        assert_eq!(
+            comm.wire_down,
+            3 * wire::model_frame_bytes(d) as u64
+                + 2 * req
+                + 2 * wire::SIT_FRAME_BYTES as u64,
+            "m+1 broadcasts, one off-cohort Sit, one cancel Sit"
+        );
+        assert_eq!(comm.broadcast_down, 3 * 4 * d as u64);
+        assert_eq!(comm.report_up, 2 * 4 * cfg.r as u64, "only committed reports count");
+        assert_eq!(comm.update_up, 2 * 8 * cfg.k as u64);
+    }
+
+    /// Without stalls every member is equally fast: the commit is
+    /// deterministic — the first m in cohort order land, the ε tail is
+    /// cancelled. And at overschedule = 0 the quota path is never
+    /// engaged at all (bit-for-bit the PR-7 round).
+    #[test]
+    fn speculation_is_deterministic_and_off_by_default() {
+        let mut cfg = smoke_cfg();
+        cfg.n_clients = 4;
+        cfg.participation = 0.5; // m = 2
+        cfg.overschedule = 2; // schedule 4
+        let d = cfg.d();
+        let mut pool = FakePool::healthy(&cfg);
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        let out = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out.cohort, vec![0, 1], "first m in cohort order commit");
+        assert_eq!(out.cancelled, vec![2, 3]);
+
+        // epsilon = 0: the engine must not even arm the quota
+        let mut cfg0 = smoke_cfg();
+        cfg0.n_clients = 4;
+        cfg0.participation = 0.5;
+        let mut pool0 = FakePool::healthy(&cfg0);
+        pool0.stalled.insert(1); // irrelevant without a quota
+        let mut engine0 = RoundEngine::new(&cfg0, vec![0.0; d]);
+        let out0 = engine0.run_round(&mut pool0).unwrap();
+        assert!(pool0.quota.is_none(), "no quota was ever set");
+        assert_eq!(out0.cohort, vec![0, 1]);
+        assert!(out0.cancelled.is_empty());
+    }
+
+    /// A speculative round where a member *also* genuinely fails: the
+    /// dead one is a casualty (fleet damage, ledger forgotten), the
+    /// cancelled one is not — the two outcomes stay distinct.
+    #[test]
+    fn speculative_round_distinguishes_casualty_from_cancelled() {
+        let mut cfg = smoke_cfg();
+        cfg.n_clients = 4;
+        cfg.participation = 0.5; // m = 2
+        cfg.overschedule = 2; // schedule all 4
+        let d = cfg.d();
+        let mut pool = FakePool::healthy(&cfg);
+        pool.fail_phase1.insert(0); // dies outright
+        pool.stalled.insert(1); // merely slow
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        let out = engine.run_round(&mut pool).unwrap();
+        assert_eq!(out.cohort, vec![2, 3], "the two fast live members commit");
+        assert_eq!(out.casualties, vec![0]);
+        assert_eq!(out.cancelled, vec![1]);
+        assert_eq!(engine.fleet().state(0), Membership::Suspect);
+        assert_eq!(engine.fleet().state(1), Membership::Active);
+        assert_eq!(engine.fleet().acked_model(0), ACKED_NONE, "casualty: ledger forgets");
+        assert_eq!(engine.fleet().acked_model(1), 1, "cancelled: ledger advances");
+    }
+
+    /// The adaptive-deadline feedback loop: per-phase timings reported by
+    /// the pool land in the fleet's EWMA records.
+    #[test]
+    fn phase_timings_feed_the_fleet_ewma() {
+        let cfg = smoke_cfg();
+        let d = cfg.d();
+        let mut pool = FakePool::healthy(&cfg);
+        pool.timings = vec![(0, 120.0), (1, 40.0)];
+        let mut engine = RoundEngine::new(&cfg, vec![0.0; d]);
+        engine.run_round(&mut pool).unwrap();
+        assert_eq!(engine.fleet().rtt_ewma_ms(0), 120.0);
+        assert_eq!(engine.fleet().rtt_ewma_ms(1), 40.0);
+        pool.timings = vec![(0, 220.0)];
+        engine.run_round(&mut pool).unwrap();
+        assert!((engine.fleet().rtt_ewma_ms(0) - (0.3 * 220.0 + 0.7 * 120.0)).abs() < 1e-3);
     }
 
     /// A phase-2 drop (report received, update lost) is also a casualty:

@@ -85,9 +85,15 @@ impl Membership {
 /// broadcast it receives must be a full dense `Model` frame.
 pub const ACKED_NONE: u32 = u32::MAX;
 
+/// Smoothing factor for the per-client round-trip EWMA: one observation
+/// moves the estimate 30% of the way to the new sample — reactive enough
+/// to track a worker that slows down, damped enough that one glitch
+/// doesn't halve its deadline.
+pub const RTT_EWMA_ALPHA: f32 = 0.3;
+
 /// One client's fleet record. Plain data so a sharded topology can hand
 /// records between shard engines on a re-shard.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MemberRecord {
     pub state: Membership,
     /// admission generation: 0 for the original join, +1 per accepted
@@ -101,6 +107,12 @@ pub struct MemberRecord {
     /// initial model every worker starts from; [`ACKED_NONE`] = unknown
     /// -> the delta downlink falls back to a dense frame). DESIGN.md §9.
     pub acked_model: u32,
+    /// EWMA of this client's observed per-phase round-trip in
+    /// milliseconds, fed by the transport's reactor timings (0 = no
+    /// observation yet). Drives adaptive per-connection deadlines
+    /// (`clamp(ewma * deadline_factor, deadline_min_ms, io_timeout_ms)`,
+    /// DESIGN.md §11) and is scheduler-visible cost-model input.
+    pub rtt_ewma_ms: f32,
 }
 
 impl Default for MemberRecord {
@@ -110,6 +122,7 @@ impl Default for MemberRecord {
             generation: 0,
             casualties: 0,
             acked_model: 0,
+            rtt_ewma_ms: 0.0,
         }
     }
 }
@@ -159,6 +172,25 @@ impl Fleet {
 
     pub fn record(&self, i: usize) -> &MemberRecord {
         &self.members[i]
+    }
+
+    /// EWMA round-trip estimate for client `i` in ms (0 = never timed).
+    pub fn rtt_ewma_ms(&self, i: usize) -> f32 {
+        self.members[i].rtt_ewma_ms
+    }
+
+    /// Fold one observed phase round-trip (ms) into client `i`'s EWMA.
+    /// The first observation seeds the estimate directly.
+    pub fn observe_rtt(&mut self, i: usize, ms: f32) {
+        if !(ms.is_finite() && ms >= 0.0) {
+            return;
+        }
+        let m = &mut self.members[i];
+        m.rtt_ewma_ms = if m.rtt_ewma_ms == 0.0 {
+            ms
+        } else {
+            RTT_EWMA_ALPHA * ms + (1.0 - RTT_EWMA_ALPHA) * m.rtt_ewma_ms
+        };
     }
 
     /// Per-client states, in id order (the scheduler's view).
@@ -332,6 +364,30 @@ mod tests {
         assert_eq!(g.generation(1), 1);
         assert_eq!(g.acked_model(0), 7, "the model ledger survives a re-shard hand-off");
         assert_eq!(g.acked_model(1), ACKED_NONE);
+    }
+
+    #[test]
+    fn rtt_ewma_seeds_then_smooths() {
+        let mut f = Fleet::new(2);
+        assert_eq!(f.rtt_ewma_ms(0), 0.0, "no observation yet");
+        f.observe_rtt(0, 100.0);
+        assert_eq!(f.rtt_ewma_ms(0), 100.0, "first sample seeds the estimate");
+        f.observe_rtt(0, 200.0);
+        // 0.3 * 200 + 0.7 * 100
+        assert!((f.rtt_ewma_ms(0) - 130.0).abs() < 1e-3, "{}", f.rtt_ewma_ms(0));
+        assert_eq!(f.rtt_ewma_ms(1), 0.0, "other clients untouched");
+        // garbage observations are ignored, not folded in
+        f.observe_rtt(1, f32::NAN);
+        f.observe_rtt(1, -5.0);
+        assert_eq!(f.rtt_ewma_ms(1), 0.0);
+    }
+
+    #[test]
+    fn rtt_ewma_survives_a_handoff() {
+        let mut f = Fleet::new(2);
+        f.observe_rtt(1, 80.0);
+        let g = Fleet::from_records(f.take_records());
+        assert_eq!(g.rtt_ewma_ms(1), 80.0);
     }
 
     #[test]

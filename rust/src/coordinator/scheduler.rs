@@ -353,6 +353,36 @@ mod tests {
         assert_eq!(c, vec![1, 2], "active first, then the stalest dead one");
     }
 
+    /// Tie-break regression pin: a `Suspect` client must never outrank a
+    /// never-polled `Active` one on a `since_polled` tie — the fleet tier
+    /// is the **first** comparator, before any debt score. (Score-first
+    /// ordering would rank the two equal-debt clients by id and let the
+    /// suspect steal the slot whenever its id is smaller.)
+    #[test]
+    fn age_debt_breaks_since_polled_ties_by_tier_first() {
+        let server = ps(4);
+        // clients 0 (Suspect) and 2 (Active, never polled) tie on debt;
+        // fresh PS means the cluster term is identical too
+        let since = [7u32, 0, 7, 0];
+        let fleet = [
+            Membership::Suspect, // same debt as client 2, smaller id
+            Membership::Active,
+            Membership::Active, // never polled since joining
+            Membership::Active,
+        ];
+        let mut s = AgeDebt;
+        assert_eq!(
+            s.select(&fleet_ctx(&server, &since, &fleet, 1)),
+            vec![2],
+            "the never-polled Active client wins the tie, not the Suspect"
+        );
+        assert_eq!(
+            s.select(&fleet_ctx(&server, &since, &fleet, 3)),
+            vec![1, 2, 3],
+            "every Active client fills before the tied Suspect"
+        );
+    }
+
     /// State transition: Dead -> Rejoining. A re-admitted client
     /// schedules like an Active one so its first round promotes it.
     #[test]

@@ -479,6 +479,7 @@ impl ShardedEngine {
         let mut uploaded_global: Vec<Vec<u32>> = vec![Vec::new(); n];
         let mut cohort_global: Vec<usize> = Vec::with_capacity(m_total);
         let mut casualties_global: Vec<usize> = Vec::new();
+        let mut cancelled_global: Vec<usize> = Vec::new();
         let mut finish = Vec::with_capacity(srs.len());
         for (sr, slice) in srs.into_iter().zip(&self.slices) {
             for u in sr.updates {
@@ -491,12 +492,14 @@ impl ShardedEngine {
             }
             cohort_global.extend(sr.survivors.iter().map(|&c| slice[c]));
             casualties_global.extend(sr.casualties.iter().map(|&c| slice[c]));
+            cancelled_global.extend(sr.cancelled.iter().map(|&c| slice[c]));
             finish.push((sr.uploaded, sr.survivors));
         }
         // slices are sorted but need not be contiguous after a re-shard,
         // so shard-order concatenation must be re-sorted
         cohort_global.sort_unstable();
         casualties_global.sort_unstable();
+        cancelled_global.sort_unstable();
 
         if m_total > 0 {
             merge_and_apply(
@@ -544,6 +547,7 @@ impl ShardedEngine {
             n_clusters: self.n_clusters(),
             cohort: cohort_global,
             casualties: casualties_global,
+            cancelled: cancelled_global,
         })
     }
 

@@ -85,7 +85,7 @@ use crate::fl::metrics::CommStats;
 use crate::fl::reactor::{poll_fds, PollFd, POLLIN, POLLOUT};
 use crate::fl::transport::{
     apply_delta_in_place, decode_model_into, encode_delta_frame_into, encode_frame_into,
-    encode_model_frame, encode_model_frame_into, encode_request_into, recv, recv_frame,
+    encode_model_frame, encode_model_frame_into, encode_request_into, recv_frame,
     recv_payload, send, send_frame, send_report, IoStep, Msg, RecvCursor, SendCursor,
     SIT_FRAME_BYTES, TAG_DELTA, TAG_MODEL,
 };
@@ -131,6 +131,14 @@ pub struct ServeReport {
     pub casualties: u64,
     /// total accepted `Rejoin` re-admissions across the run
     pub rejoins: u64,
+    /// total speculative cancellations (a straggler cleanly parked after
+    /// the round committed with the first `m` reports — not a casualty)
+    pub cancellations: u64,
+    /// bytes of stale frames (late reports from cancelled rounds)
+    /// drained off the PS sockets and discarded — counted here, never in
+    /// `wire_up_observed`, so the engine's committed-frame wire mirror
+    /// still pins exactly under speculation
+    pub drained_up: u64,
 }
 
 /// Where a connection stands in the reactor's current phase.
@@ -175,6 +183,19 @@ struct WorkerConn {
     /// unreachable through [`ClientPool::health`] until a `Rejoin`
     /// replaces the stream
     dead: bool,
+    /// EWMA of this stream's completed write→reply phase times in
+    /// milliseconds (0 = no sample yet) — the estimate behind the
+    /// adaptive per-client deadline (DESIGN.md §11)
+    ewma_ms: f32,
+    /// the adaptive deadline has already been re-armed once this phase
+    /// (the one bounded retry before the drop)
+    retried: bool,
+    /// stale inbound frames to discard before the next real reply: a
+    /// speculative cancel leaves exactly one late `Report` in flight
+    /// (the worker sent it before reading the cancel `Sit`), drained
+    /// here with its bytes tallied in the pool's `drained_up` — never
+    /// in `wire_up`, which counts committed round-path frames only
+    drain_frames: u32,
 }
 
 impl WorkerConn {
@@ -190,6 +211,67 @@ impl WorkerConn {
             deadline: None,
             admitted: false,
             dead: false,
+            ewma_ms: 0.0,
+            retried: false,
+            drain_frames: 0,
+        }
+    }
+}
+
+/// A connection whose first frame (`Join` or `Rejoin`) is still
+/// trickling in. Handshakes are part of the nonblocking state machine
+/// (DESIGN.md §11): the listener and every pending stream are *polled*,
+/// so a connect-and-stall client holds only its own slot in this list —
+/// dropped at its deadline — and can never wedge accept or block the
+/// round loop the way the old blocking per-stream `recv` did.
+struct PendingHandshake {
+    stream: TcpStream,
+    peer: std::net::SocketAddr,
+    /// resumable fill of the handshake frame
+    recv: RecvCursor,
+    fb: FrameBuf,
+    /// when this handshake is given up on (`io_timeout_ms`; `None` = 0 =
+    /// no deadline, consistent with every other deadline in this module)
+    deadline: Option<Instant>,
+}
+
+/// What one nonblocking step of a pending handshake produced.
+enum HandshakeStep {
+    /// frame still incomplete, deadline not reached — keep it pending
+    Pending,
+    /// the handshake frame is complete in `fb.payload`
+    Frame,
+    /// the connection is done for (I/O error, EOF, bad framing, or its
+    /// deadline expired mid-handshake) — drop it, log `why`
+    Dropped(String),
+}
+
+impl PendingHandshake {
+    fn new(stream: TcpStream, peer: std::net::SocketAddr, io_timeout_ms: u64) -> Self {
+        PendingHandshake {
+            stream,
+            peer,
+            recv: RecvCursor::new(),
+            fb: FrameBuf::new(),
+            deadline: phase_deadline_ms(io_timeout_ms, 0.0, 0, 0.0)
+                .map(|ms| Instant::now() + Duration::from_millis(ms)),
+        }
+    }
+
+    /// Pull whatever bytes are ready (the stream is nonblocking; this
+    /// never blocks) and report where the handshake stands.
+    fn step(&mut self) -> HandshakeStep {
+        match self.recv.advance(&mut self.stream, &mut self.fb) {
+            Ok(IoStep::Done) => HandshakeStep::Frame,
+            Ok(IoStep::Pending) => {
+                if let Some(dl) = self.deadline {
+                    if Instant::now() >= dl {
+                        return HandshakeStep::Dropped("handshake deadline expired".into());
+                    }
+                }
+                HandshakeStep::Pending
+            }
+            Err(e) => HandshakeStep::Dropped(format!("{e:#}")),
         }
     }
 }
@@ -302,6 +384,27 @@ pub struct TcpClientPool {
     /// per-connection per-phase reactor deadline (0 = none); also applied
     /// as a blocking socket timeout to join/rejoin handshakes
     io_timeout_ms: u64,
+    /// adaptive-deadline multiplier `k` (0 = adaptive deadlines off; the
+    /// per-phase window is then the flat `io_timeout_ms` for everyone)
+    deadline_factor: f64,
+    /// floor of the adaptive window in milliseconds
+    deadline_min_ms: u64,
+    /// speculative commit quota for the next `train_and_report` (set by
+    /// the engine when `overschedule > 0`; `None` = commit everyone)
+    quota: Option<usize>,
+    /// stragglers cleanly cancelled by the last speculative commit,
+    /// drained by [`ClientPool::take_cancelled`]
+    cancelled: Vec<usize>,
+    /// completed (client, ms) phase timings, drained by
+    /// [`ClientPool::take_phase_timings`] into the fleet's EWMA records
+    timings: Vec<(usize, f32)>,
+    /// handshakes still trickling in (nonblocking accept machinery;
+    /// persists across rounds so a slow joiner spans poll passes)
+    pending: Vec<PendingHandshake>,
+    /// bytes of stale frames (late reports from cancelled rounds)
+    /// drained off the wire and discarded — kept out of `wire_up` so the
+    /// engine's committed-frame mirror still pins exactly
+    drained_up: u64,
     /// reused `poll(2)` interest set (rebuilt each reactor iteration,
     /// capacity retained across rounds)
     pollfds: Vec<PollFd>,
@@ -347,12 +450,19 @@ pub struct TcpClientPool {
 }
 
 impl TcpClientPool {
-    /// Block on an already-bound listener until all `cfg.n_clients`
+    /// Wait on an already-bound listener until all `cfg.n_clients`
     /// workers joined with a matching wire codec. Binding is the caller's
     /// job so tests can bind an ephemeral port *before* any worker spawns
     /// (joins then queue in the accept backlog — no sleeps, no port
-    /// races). After the last join the listener turns nonblocking and is
-    /// polled for `Rejoin` frames between rounds.
+    /// races). The listener and every half-done handshake run
+    /// **nonblocking** from the first byte (DESIGN.md §11): a client
+    /// that connects and then stalls — or trickles its `Join` a byte at
+    /// a time — occupies only its own [`PendingHandshake`] slot, is
+    /// dropped cleanly when its `io_timeout_ms` deadline expires, and
+    /// never blocks the other joiners the way the old blocking
+    /// per-stream `recv` did. Protocol violations on a *complete* frame
+    /// (bad/duplicate id, codec mismatch, a non-`Join` message) still
+    /// abort the accept exactly as before.
     pub fn accept(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Self> {
         crate::info!(
             "serve: waiting for {} clients on {:?} (codec {})",
@@ -360,59 +470,96 @@ impl TcpClientPool {
             listener.local_addr(),
             cfg.codec.name()
         );
+        listener
+            .set_nonblocking(true)
+            .context("switching the join listener to nonblocking accept")?;
         let mut slots: Vec<Option<TcpStream>> = (0..cfg.n_clients).map(|_| None).collect();
         let mut joined = 0;
+        let mut pending: Vec<PendingHandshake> = Vec::new();
+        let mut pollfds: Vec<PollFd> = Vec::new();
         while joined < cfg.n_clients {
-            let (mut s, peer) = listener.accept()?;
-            // the straggler seed (`io_timeout_ms`): with a deadline set, a
-            // hung worker fails its stream's read/write instead of wedging
-            // the PS collect phase forever — applied before the Join recv
-            // so even a connect-and-stall client cannot block accept
-            set_stream_deadline(&s, cfg.io_timeout_ms)?;
-            match recv(&mut s, cfg.codec) {
-                Ok(Msg::Join { client_id, codec }) => {
-                    let id = client_id as usize;
-                    if id >= cfg.n_clients || slots[id].is_some() {
-                        let _ = send(&mut s, &Msg::Shutdown, cfg.codec);
-                        Self::shutdown_joined(&mut slots, cfg.codec);
-                        bail!("bad/duplicate client id {id} from {peer}");
+            // one readiness pass over the listener plus every pending
+            // handshake; the poll timeout is the nearest handshake
+            // deadline (None = no deadline anywhere = wait forever)
+            pollfds.clear();
+            pollfds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
+            for ph in &pending {
+                pollfds.push(PollFd::new(ph.stream.as_raw_fd(), POLLIN));
+            }
+            let timeout = pending
+                .iter()
+                .filter_map(|ph| ph.deadline)
+                .min()
+                .map(|dl| dl.saturating_duration_since(Instant::now()));
+            poll_fds(&mut pollfds, timeout)?;
+            // accept every queued connect into a fresh pending handshake
+            loop {
+                match listener.accept() {
+                    Ok((s, peer)) => {
+                        s.set_nonblocking(true)
+                            .context("switching a joining stream to nonblocking mode")?;
+                        pending.push(PendingHandshake::new(s, peer, cfg.io_timeout_ms));
                     }
-                    if codec != cfg.codec {
-                        let _ = send(&mut s, &Msg::Shutdown, cfg.codec);
-                        Self::shutdown_joined(&mut slots, cfg.codec);
-                        bail!(
-                            "client {id} from {peer} joined with codec {}, PS runs {}",
-                            codec.name(),
-                            cfg.codec.name()
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) => return Err(anyhow::Error::new(e).context("accepting a join")),
+                }
+            }
+            // advance every pending handshake one nonblocking step
+            let mut k = 0;
+            while k < pending.len() {
+                match pending[k].step() {
+                    HandshakeStep::Pending => k += 1,
+                    HandshakeStep::Dropped(why) => {
+                        let ph = pending.swap_remove(k);
+                        crate::info!(
+                            "serve: dropped a joining connection from {}: {why}",
+                            ph.peer
                         );
                     }
-                    crate::info!("serve: client {id} joined from {peer}");
-                    slots[id] = Some(s);
-                    joined += 1;
-                }
-                Ok(other) => {
-                    let _ = send(&mut s, &Msg::Shutdown, cfg.codec);
-                    Self::shutdown_joined(&mut slots, cfg.codec);
-                    bail!("expected Join, got {other:?}");
-                }
-                Err(e) => {
-                    Self::shutdown_joined(&mut slots, cfg.codec);
-                    return Err(e.context(format!("recv Join from {peer}")));
+                    HandshakeStep::Frame => {
+                        let mut ph = pending.swap_remove(k);
+                        let peer = ph.peer;
+                        match Msg::decode(&ph.fb.payload, cfg.codec) {
+                            Ok(Msg::Join { client_id, codec }) => {
+                                let id = client_id as usize;
+                                if id >= cfg.n_clients || slots[id].is_some() {
+                                    let _ = ph.stream.set_nonblocking(false);
+                                    let _ = send(&mut ph.stream, &Msg::Shutdown, cfg.codec);
+                                    Self::shutdown_joined(&mut slots, cfg.codec);
+                                    bail!("bad/duplicate client id {id} from {peer}");
+                                }
+                                if codec != cfg.codec {
+                                    let _ = ph.stream.set_nonblocking(false);
+                                    let _ = send(&mut ph.stream, &Msg::Shutdown, cfg.codec);
+                                    Self::shutdown_joined(&mut slots, cfg.codec);
+                                    bail!(
+                                        "client {id} from {peer} joined with codec {}, PS runs {}",
+                                        codec.name(),
+                                        cfg.codec.name()
+                                    );
+                                }
+                                crate::info!("serve: client {id} joined from {peer}");
+                                // already nonblocking — exactly what the
+                                // round reactor wants
+                                slots[id] = Some(ph.stream);
+                                joined += 1;
+                            }
+                            Ok(other) => {
+                                let _ = ph.stream.set_nonblocking(false);
+                                let _ = send(&mut ph.stream, &Msg::Shutdown, cfg.codec);
+                                Self::shutdown_joined(&mut slots, cfg.codec);
+                                bail!("expected Join, got {other:?}");
+                            }
+                            Err(e) => {
+                                Self::shutdown_joined(&mut slots, cfg.codec);
+                                return Err(e.context(format!("recv Join from {peer}")));
+                            }
+                        }
+                    }
                 }
             }
         }
-        listener
-            .set_nonblocking(true)
-            .context("switching the join listener to nonblocking rejoin polling")?;
-        let mut conns = Vec::with_capacity(cfg.n_clients);
-        for s in slots {
-            let s = s.unwrap();
-            // the reactor drives every joined stream in nonblocking mode;
-            // the blocking SO_*TIMEO deadline above only governed the
-            // Join handshake
-            s.set_nonblocking(true).context("switching a joined stream to nonblocking mode")?;
-            conns.push(WorkerConn::new(s));
-        }
+        let conns = slots.into_iter().map(|s| WorkerConn::new(s.unwrap())).collect();
         Ok(TcpClientPool {
             conns,
             listener,
@@ -421,7 +568,16 @@ impl TcpClientPool {
             d: cfg.d(),
             codec: cfg.codec,
             io_timeout_ms: cfg.io_timeout_ms,
-            pollfds: Vec::new(),
+            deadline_factor: cfg.deadline_factor,
+            deadline_min_ms: cfg.deadline_min_ms,
+            quota: None,
+            cancelled: Vec::new(),
+            timings: Vec::new(),
+            // a handshake still trickling when the fleet completes keeps
+            // its slot and deadline across the round loop's rejoin polls
+            pending,
+            drained_up: 0,
+            pollfds,
             pollidx: Vec::new(),
             armed: Vec::new(),
             routed_rejoins: false,
@@ -471,17 +627,26 @@ impl TcpClientPool {
         self.rejoins
     }
 
+    /// Bytes of stale frames (late reports from speculatively cancelled
+    /// rounds) drained off the sockets and discarded — the exact-wire
+    /// complement of `wire_up`, which counts committed frames only.
+    pub fn drained_up(&self) -> u64 {
+        self.drained_up
+    }
+
     /// Tell every worker training is over (best effort — dead streams
     /// are skipped, and a stream failing its goodbye is merely marked
     /// dead), then drain any worker still queued for re-admission so it
     /// is not left blocking on a resync that will never come.
     pub fn shutdown(&mut self) -> Result<()> {
         let codec = self.codec;
+        let io_timeout_ms = self.io_timeout_ms;
         for wc in self.conns.iter_mut().filter(|wc| !wc.dead) {
             // the reactor is done with this stream — the goodbye is a
-            // plain blocking write again (bounded by the socket's
-            // original SO_SNDTIMEO deadline, if any)
+            // plain blocking write again, bounded by the socket deadline
+            // (0 = none, like every other deadline in this module)
             let _ = wc.stream.set_nonblocking(false);
+            let _ = set_stream_deadline(&wc.stream, io_timeout_ms);
             if send_frame(&mut wc.stream, &Msg::Shutdown, codec, &mut wc.fb).is_err() {
                 wc.dead = true;
             }
@@ -493,22 +658,57 @@ impl TcpClientPool {
         Ok(())
     }
 
-    /// Sharded serving: drain this shard listener's queued `Rejoin`
+    /// The nonblocking handshake pump (DESIGN.md §11): accept every
+    /// queued connect into a [`PendingHandshake`], advance each pending
+    /// handshake one readiness step, and move the ones whose first frame
+    /// completed into `done`. **Never blocks**: a byte-trickling or
+    /// stalled client just stays in `self.pending` across rounds —
+    /// dropped with a log line when its `io_timeout_ms` deadline expires
+    /// — so a wedged joiner cannot stall the round loop between rounds
+    /// the way the old blocking per-stream `recv` could.
+    fn pump_handshakes(&mut self, done: &mut Vec<PendingHandshake>) -> Result<()> {
+        loop {
+            match self.listener.accept() {
+                Ok((s, peer)) => {
+                    s.set_nonblocking(true)
+                        .context("switching a handshake stream to nonblocking mode")?;
+                    self.pending.push(PendingHandshake::new(s, peer, self.io_timeout_ms));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(anyhow::Error::new(e).context("polling for rejoins")),
+            }
+        }
+        let mut k = 0;
+        while k < self.pending.len() {
+            match self.pending[k].step() {
+                HandshakeStep::Pending => k += 1,
+                HandshakeStep::Dropped(why) => {
+                    let ph = self.pending.swap_remove(k);
+                    crate::info!("serve: dropped a pending handshake from {}: {why}", ph.peer);
+                }
+                HandshakeStep::Frame => done.push(self.pending.swap_remove(k)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Sharded serving: drain this shard listener's completed `Rejoin`
     /// handshakes into `arrivals` **without admitting them** — the
     /// handshake names a *global* client id, and which shard currently
     /// owns that id is the root's call ([`route_rejoins`]). Only the
     /// codec is validated here; generation checks belong to the owning
     /// pool, whose ledger the stream will land in.
     fn drain_rejoin_handshakes(&mut self, arrivals: &mut Vec<RejoinArrival>) -> Result<()> {
-        loop {
-            let (mut s, peer) = match self.listener.accept() {
-                Ok(conn) => conn,
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                Err(e) => return Err(anyhow::Error::new(e).context("polling for rejoins")),
-            };
-            s.set_nonblocking(false).context("rejoin stream blocking mode")?;
-            set_stream_deadline(&s, self.io_timeout_ms)?;
-            match recv(&mut s, self.codec) {
+        let mut done = Vec::new();
+        self.pump_handshakes(&mut done)?;
+        for ph in done {
+            let PendingHandshake { mut stream, peer, fb, .. } = ph;
+            // the handshake frame is in hand: the answer (resync or
+            // refusal) is a plain blocking write again, bounded by the
+            // socket deadline (0 = none)
+            stream.set_nonblocking(false).context("rejoin stream blocking mode")?;
+            set_stream_deadline(&stream, self.io_timeout_ms)?;
+            match Msg::decode(&fb.payload, self.codec) {
                 Ok(Msg::Rejoin { client_id, generation, held_digest, codec }) => {
                     if codec != self.codec {
                         crate::info!(
@@ -517,11 +717,11 @@ impl TcpClientPool {
                             codec.name(),
                             self.codec.name()
                         );
-                        let _ = send(&mut s, &Msg::Shutdown, self.codec);
+                        let _ = send(&mut stream, &Msg::Shutdown, self.codec);
                         continue;
                     }
                     arrivals.push(RejoinArrival {
-                        stream: s,
+                        stream,
                         peer,
                         global_id: client_id as usize,
                         generation,
@@ -530,7 +730,7 @@ impl TcpClientPool {
                 }
                 Ok(other) => {
                     crate::info!("serve: expected Rejoin from {peer}, got {other:?}");
-                    let _ = send(&mut s, &Msg::Shutdown, self.codec);
+                    let _ = send(&mut stream, &Msg::Shutdown, self.codec);
                 }
                 Err(e) => {
                     crate::info!("serve: bad rejoin handshake from {peer}: {e:#}");
@@ -636,14 +836,45 @@ fn locate_in_slices(slices: &[Vec<usize>], global_id: usize) -> Option<(usize, u
     })
 }
 
-/// Apply the PS-side socket deadline (0 = none).
+/// Apply a blocking-socket deadline, with **`0` = disabled** — the one
+/// definition of the knob's zero case on the blocking paths (handshake
+/// answers, shutdown goodbyes, the worker's own stream). Zero
+/// *explicitly clears* any timeout rather than being skipped or — the
+/// trap std itself guards against — passed through as `Duration::ZERO`,
+/// which `set_read_timeout` rejects as `InvalidInput` ("instant expiry"
+/// is not a thing either end supports). Pinned together with the
+/// reactor end by `zero_io_timeout_disables_deadlines_at_both_ends`.
 fn set_stream_deadline(s: &TcpStream, io_timeout_ms: u64) -> Result<()> {
-    if io_timeout_ms > 0 {
-        let dl = Some(std::time::Duration::from_millis(io_timeout_ms));
-        s.set_read_timeout(dl).context("set_read_timeout")?;
-        s.set_write_timeout(dl).context("set_write_timeout")?;
-    }
+    let dl = (io_timeout_ms > 0).then(|| Duration::from_millis(io_timeout_ms));
+    s.set_read_timeout(dl).context("set_read_timeout")?;
+    s.set_write_timeout(dl).context("set_write_timeout")?;
     Ok(())
+}
+
+/// One phase's deadline window in milliseconds for a connection — the
+/// single definition of every nonblocking-path deadline (reactor phases
+/// and pending handshakes), so `io_timeout_ms = 0` means "no deadline"
+/// *everywhere*, never "instant expiry".
+///
+/// With the adaptive knob on (`deadline_factor > 0`) and an RTT sample
+/// in hand, the window is `clamp(ewma_ms * deadline_factor,
+/// deadline_min_ms, io_timeout_ms)` (DESIGN.md §11) — the cap is only
+/// applied when `io_timeout_ms > 0`. Otherwise the flat `io_timeout_ms`
+/// applies, and `None` (no deadline) only when that is 0.
+fn phase_deadline_ms(
+    io_timeout_ms: u64,
+    deadline_factor: f64,
+    deadline_min_ms: u64,
+    ewma_ms: f32,
+) -> Option<u64> {
+    if deadline_factor > 0.0 && ewma_ms > 0.0 {
+        let mut ms = (ewma_ms as f64 * deadline_factor).max(deadline_min_ms as f64).ceil() as u64;
+        if io_timeout_ms > 0 {
+            ms = ms.min(io_timeout_ms);
+        }
+        return Some(ms.max(1));
+    }
+    (io_timeout_ms > 0).then_some(io_timeout_ms)
 }
 
 impl TcpClientPool {
@@ -667,16 +898,31 @@ impl TcpClientPool {
     /// per-client log line, never a PS abort.
     fn run_reactor(
         &mut self,
+        quota: Option<usize>,
         desc: &str,
         sit_desc: &str,
         mut on_frame: impl FnMut(usize, &[u8], usize) -> Result<()>,
     ) -> Result<()> {
         let io_timeout_ms = self.io_timeout_ms;
-        let deadline =
-            (io_timeout_ms > 0).then(|| Instant::now() + Duration::from_millis(io_timeout_ms));
+        let deadline_factor = self.deadline_factor;
+        let deadline_min_ms = self.deadline_min_ms;
+        let round = self.round;
+        let codec = self.codec;
+        let started = Instant::now();
         for &i in &self.armed {
-            self.conns[i].deadline = deadline;
+            let wc = &mut self.conns[i];
+            wc.retried = false;
+            // adaptive per-client deadline (DESIGN.md §11): a stream
+            // with an RTT sample gets clamp(ewma * k, min, io_timeout);
+            // no sample (or factor 0) falls back to the flat window
+            wc.deadline =
+                phase_deadline_ms(io_timeout_ms, deadline_factor, deadline_min_ms, wc.ewma_ms)
+                    .map(|ms| started + Duration::from_millis(ms));
         }
+        // speculative commit: how many replies have landed, and whether
+        // the quota cancellation has already fired
+        let mut landed = 0usize;
+        let mut cancel_fired = false;
         loop {
             // rebuild the interest set from the still-live state machines
             // (the Vecs keep their capacity across iterations and rounds)
@@ -739,11 +985,39 @@ impl TcpClientPool {
                     ConnState::Reading => match wc.recv.advance(&mut wc.stream, &mut wc.fb) {
                         Ok(IoStep::Done) => {
                             let frame_len = wc.fb.last_recv_frame_len();
-                            match on_frame(i, &wc.fb.payload, frame_len) {
-                                Ok(()) => wc.state = ConnState::Done,
-                                Err(e) => {
-                                    wc.dead = true;
-                                    crate::info!("serve: client {i} dropped {desc}: {e:#}");
+                            if wc.drain_frames > 0 {
+                                // a late report from a cancelled round:
+                                // discard it (exact wire accounting in
+                                // drained_up, never wire_up) and keep
+                                // reading — the real reply follows
+                                wc.drain_frames -= 1;
+                                self.drained_up += frame_len as u64;
+                                crate::info!(
+                                    "serve: client {i} drained a stale frame \
+                                     ({frame_len} B) from a cancelled round"
+                                );
+                            } else {
+                                match on_frame(i, &wc.fb.payload, frame_len) {
+                                    Ok(()) => {
+                                        wc.state = ConnState::Done;
+                                        landed += 1;
+                                        // feed the adaptive-deadline
+                                        // estimate: one completed
+                                        // write→reply phase
+                                        let ms = started.elapsed().as_secs_f32() * 1000.0;
+                                        wc.ewma_ms = if wc.ewma_ms == 0.0 {
+                                            ms
+                                        } else {
+                                            crate::coordinator::fleet::RTT_EWMA_ALPHA * ms
+                                                + (1.0 - crate::coordinator::fleet::RTT_EWMA_ALPHA)
+                                                    * wc.ewma_ms
+                                        };
+                                        self.timings.push((i, ms));
+                                    }
+                                    Err(e) => {
+                                        wc.dead = true;
+                                        crate::info!("serve: client {i} dropped {desc}: {e:#}");
+                                    }
                                 }
                             }
                         }
@@ -756,9 +1030,55 @@ impl TcpClientPool {
                     ConnState::Idle | ConnState::Done => {}
                 }
             }
+            // speculative commit (DESIGN.md §11): the round is full once
+            // `quota` replies landed — everyone still in flight is a
+            // straggler. A stream whose broadcast was fully delivered
+            // (Reading) gets a clean cancel: a 13-byte Sit tells the
+            // worker its round was dropped, its one late report is
+            // flagged for draining, and the stream survives untouched —
+            // no casualty, no fleet damage. A stream still mid-broadcast
+            // (Writing) cannot be cleanly parked — the worker never got
+            // the model — so it is dropped as an ordinary casualty.
+            if let Some(q) = quota {
+                if !cancel_fired && landed >= q {
+                    cancel_fired = true;
+                    let TcpClientPool { conns, armed, cancelled, wire_down, .. } = self;
+                    for &i in armed.iter() {
+                        let wc = &mut conns[i];
+                        if wc.dead {
+                            continue;
+                        }
+                        match wc.state {
+                            ConnState::Reading => {
+                                encode_frame_into(&Msg::Sit { round }, codec, &mut wc.fb);
+                                wc.send.reset();
+                                wc.shared = None;
+                                wc.state = ConnState::Writing { expect_reply: false };
+                                wc.drain_frames += 1;
+                                *wire_down += SIT_FRAME_BYTES as u64;
+                                cancelled.push(i);
+                                crate::info!(
+                                    "serve: client {i} cancelled (round {round} committed \
+                                     with {q} reports) — late report will be drained"
+                                );
+                            }
+                            ConnState::Writing { expect_reply: true } => {
+                                wc.dead = true;
+                                wc.shared = None;
+                                crate::info!(
+                                    "serve: client {i} dropped {desc}: broadcast \
+                                     unfinished when the round committed"
+                                );
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
             // deadline pass: whoever is still unfinished past their
-            // deadline is a straggler casualty — the survivors' round
-            // continues
+            // deadline gets one bounded retry (adaptive deadlines only —
+            // the estimate may simply have been too tight) and is then a
+            // straggler casualty; the survivors' round continues
             let now = Instant::now();
             for &i in &self.armed {
                 let wc = &mut self.conns[i];
@@ -767,6 +1087,26 @@ impl TcpClientPool {
                 }
                 if let Some(dl) = wc.deadline {
                     if now >= dl {
+                        let adaptive = deadline_factor > 0.0 && wc.ewma_ms > 0.0;
+                        if adaptive && !wc.retried {
+                            // one retry with backoff: re-arm a doubled
+                            // adaptive window before giving up
+                            wc.retried = true;
+                            let ms = phase_deadline_ms(
+                                io_timeout_ms,
+                                deadline_factor,
+                                deadline_min_ms,
+                                wc.ewma_ms,
+                            )
+                            .unwrap_or(1);
+                            wc.deadline = Some(now + Duration::from_millis(2 * ms));
+                            crate::info!(
+                                "serve: client {i} missed its adaptive deadline ({ms} ms) \
+                                 — one retry ({} ms)",
+                                2 * ms
+                            );
+                            continue;
+                        }
                         wc.dead = true;
                         wc.shared = None;
                         let what = match wc.state {
@@ -797,6 +1137,18 @@ impl ClientPool for TcpClientPool {
         self.conns.iter().map(|wc| !wc.dead).collect()
     }
 
+    fn set_commit_quota(&mut self, quota: usize) {
+        self.quota = Some(quota);
+    }
+
+    fn take_cancelled(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.cancelled)
+    }
+
+    fn take_phase_timings(&mut self) -> Vec<(usize, f32)> {
+        std::mem::take(&mut self.timings)
+    }
+
     /// Nonblocking accept loop over the kept listener: validate queued
     /// `Rejoin` frames (known id, matching codec, strictly increasing
     /// generation), resync each accepted worker with a `Model` frame
@@ -824,17 +1176,17 @@ impl ClientPool for TcpClientPool {
             return Ok(admitted);
         }
         let mut admitted = Vec::new();
-        loop {
-            let (mut s, peer) = match self.listener.accept() {
-                Ok(conn) => conn,
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                Err(e) => return Err(anyhow::Error::new(e).context("polling for rejoins")),
-            };
-            // accepted streams must block on their own I/O (with the
-            // usual deadline); only the accept itself is nonblocking
-            s.set_nonblocking(false).context("rejoin stream blocking mode")?;
-            set_stream_deadline(&s, self.io_timeout_ms)?;
-            let (id, generation, held_digest) = match recv(&mut s, self.codec) {
+        let mut done = Vec::new();
+        self.pump_handshakes(&mut done)?;
+        for ph in done {
+            let PendingHandshake { mut stream, peer, fb, .. } = ph;
+            // the handshake frame is in hand: the resync answer below is
+            // a plain blocking write again, bounded by the socket
+            // deadline (0 = none)
+            stream.set_nonblocking(false).context("rejoin stream blocking mode")?;
+            set_stream_deadline(&stream, self.io_timeout_ms)?;
+            let mut s = stream;
+            let (id, generation, held_digest) = match Msg::decode(&fb.payload, self.codec) {
                 Ok(Msg::Rejoin { client_id, generation, held_digest, codec }) => {
                     let id = client_id as usize;
                     if codec != self.codec
@@ -951,7 +1303,13 @@ impl ClientPool for TcpClientPool {
                     continue;
                 }
                 wc.send.reset();
-                wc.recv.reset();
+                // a cancelled straggler's stale report may still be
+                // (partially) in flight on this stream — resetting the
+                // cursor would desync the framing; the drain logic in
+                // the reactor finishes the stale frame first
+                if wc.drain_frames == 0 {
+                    wc.recv.reset();
+                }
                 if cmap.slot(i) == usize::MAX {
                     sit_bytes += SIT_FRAME_BYTES as u64;
                     encode_frame_into(&Msg::Sit { round }, codec, &mut wc.fb);
@@ -1007,7 +1365,13 @@ impl ClientPool for TcpClientPool {
         // serializing the round in client order
         let mut results: Vec<Option<(ClientReport, usize)>> =
             (0..self.conns.len()).map(|_| None).collect();
+        // the engine's speculative commit quota (overschedule > 0): the
+        // reactor commits as soon as that many reports land and cancels
+        // the in-flight rest; `None` = wait for everyone (the ε = 0
+        // bit-for-bit path)
+        let quota = self.quota.take();
         self.run_reactor(
+            quota,
             &format!("mid-round {round}"),
             &format!("at Sit (round {round})"),
             |i, payload, frame_len| match Msg::decode(payload, codec)? {
@@ -1058,7 +1422,9 @@ impl ClientPool for TcpClientPool {
                     continue;
                 }
                 wc.send.reset();
-                wc.recv.reset();
+                if wc.drain_frames == 0 {
+                    wc.recv.reset();
+                }
                 let indices: &[u32] = requests.map(|r| r[p].as_slice()).unwrap_or(&[]);
                 request_bytes += encode_request_into(codec, &mut wc.fb, round, indices) as u64;
                 wc.shared = None;
@@ -1071,6 +1437,7 @@ impl ClientPool for TcpClientPool {
             (0..self.conns.len()).map(|_| None).collect();
         let desc = format!("at exchange (round {round})");
         self.run_reactor(
+            None,
             &desc,
             &desc,
             |i, payload, frame_len| match Msg::decode(payload, codec)? {
@@ -1162,9 +1529,11 @@ pub fn run_server_on(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Se
     let (_, test) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
     let test_idx: Vec<usize> = (0..test.len()).collect();
     let mut casualties = 0u64;
+    let mut cancellations = 0u64;
 
     for round in 1..=cfg.rounds {
         let out = engine.run_round(&mut pool)?;
+        cancellations += out.cancelled.len() as u64;
         if !out.casualties.is_empty() {
             casualties += out.casualties.len() as u64;
             crate::info!(
@@ -1202,6 +1571,8 @@ pub fn run_server_on(cfg: &ExperimentConfig, listener: TcpListener) -> Result<Se
         frame_grows: pool.frame_grows(),
         casualties,
         rejoins: pool.rejoins(),
+        cancellations,
+        drained_up: pool.drained_up(),
     })
 }
 
@@ -1251,6 +1622,7 @@ pub fn run_sharded_server_on(
     let (_, test) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
     let test_idx: Vec<usize> = (0..test.len()).collect();
     let mut casualties = 0u64;
+    let mut cancellations = 0u64;
 
     for round in 1..=cfg.rounds {
         // admit queued rejoins at their *current* owning shard before the
@@ -1259,6 +1631,7 @@ pub fn run_sharded_server_on(
         route_rejoins(&mut pools, engine.slices(), engine.global_params())?;
         let out = engine.run_round_serial(&mut pools)?;
         casualties += out.casualties.len() as u64;
+        cancellations += out.cancelled.len() as u64;
         if cfg.eval_every > 0 && round % cfg.eval_every == 0 {
             let (acc, loss) = eval_dataset(
                 pools[0].backend(),
@@ -1294,6 +1667,7 @@ pub fn run_sharded_server_on(
     let mut model_encodes = 0;
     let mut frame_grows = 0;
     let mut rejoins = 0;
+    let mut drained_up = 0;
     for pool in &pools {
         let (up, down) = pool.wire_observed();
         wire_up_observed += up;
@@ -1301,6 +1675,7 @@ pub fn run_sharded_server_on(
         model_encodes += pool.model_encodes();
         frame_grows += pool.frame_grows();
         rejoins += pool.rejoins();
+        drained_up += pool.drained_up();
     }
     Ok(ServeReport {
         rounds: cfg.rounds,
@@ -1315,6 +1690,8 @@ pub fn run_sharded_server_on(
         frame_grows,
         casualties,
         rejoins,
+        cancellations,
+        drained_up,
     })
 }
 
@@ -1518,6 +1895,15 @@ fn run_worker_session(
         send_report(&mut stream, codec, &mut fb, id as u32, round, &rep.report, rep.mean_loss)?;
         let requested = match recv_frame(&mut stream, codec, &mut fb)? {
             Msg::Request { indices, round: r } if r == round => indices,
+            // speculative cancel (DESIGN.md §11): the PS committed the
+            // round without us — our report was drained and discarded.
+            // Not a failure: the stream stays up, the held model (we
+            // applied this round's broadcast) stays valid, and we simply
+            // wait for the next broadcast like an off-cohort client.
+            Msg::Sit { round: r } if r == round => {
+                crate::info!("worker {id}: round {round} cancelled by the PS");
+                continue;
+            }
             other => bail!("expected Request, got {other:?}"),
         };
         // shared phase 2: answer the PS request, or select locally for
@@ -1545,6 +1931,7 @@ fn run_worker_session(
 mod tests {
     use super::*;
     use crate::config::ExperimentConfig;
+    use crate::fl::transport::recv;
 
     fn smoke_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::mnist_smoke();
@@ -1670,6 +2057,176 @@ mod tests {
         let short = grows_of(2);
         let long = grows_of(6);
         assert_eq!(short, long, "per-round broadcast allocations leak into the growth count");
+    }
+
+    /// Satellite pin: `io_timeout_ms = 0` means **no deadline** at both
+    /// ends of the transport — the blocking-socket end
+    /// ([`set_stream_deadline`]) and the reactor/handshake end
+    /// ([`phase_deadline_ms`]) — never "instant expiry" (std rejects a
+    /// zero socket timeout as `InvalidInput`, and a zero poll deadline
+    /// would drop every client on the first pass).
+    #[test]
+    fn zero_io_timeout_disables_deadlines_at_both_ends() {
+        // blocking end: 0 explicitly clears the socket timeouts
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let s = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        set_stream_deadline(&s, 7).unwrap();
+        assert_eq!(s.read_timeout().unwrap(), Some(Duration::from_millis(7)));
+        assert_eq!(s.write_timeout().unwrap(), Some(Duration::from_millis(7)));
+        set_stream_deadline(&s, 0).unwrap();
+        assert_eq!(s.read_timeout().unwrap(), None, "0 = disabled, not instant expiry");
+        assert_eq!(s.write_timeout().unwrap(), None);
+        // reactor/handshake end: the one shared deadline formula
+        assert_eq!(phase_deadline_ms(0, 0.0, 0, 0.0), None, "flat window, knob off");
+        assert_eq!(phase_deadline_ms(5000, 0.0, 0, 0.0), Some(5000));
+        // adaptive window: clamp(ewma * k, min, io_timeout)
+        assert_eq!(phase_deadline_ms(5000, 2.0, 50, 100.0), Some(200));
+        assert_eq!(phase_deadline_ms(5000, 2.0, 50, 10.0), Some(50), "floor applies");
+        assert_eq!(phase_deadline_ms(150, 2.0, 50, 100.0), Some(150), "cap applies");
+        assert_eq!(phase_deadline_ms(0, 2.0, 50, 100.0), Some(200), "io_timeout 0 = no cap");
+        assert_eq!(phase_deadline_ms(0, 2.0, 50, 0.0), None, "no RTT sample: flat window");
+    }
+
+    /// The nonblocking-handshake tentpole: a client that connects first
+    /// and then stalls mid-`Join` (three header bytes, then silence) can
+    /// no longer wedge accept — the real joiners land immediately, the
+    /// staller just occupies a pending-handshake slot until its deadline.
+    #[test]
+    fn stalled_joiner_cannot_block_accept() {
+        let mut cfg = smoke_cfg();
+        cfg.io_timeout_ms = 30_000; // staller deadline far beyond the test
+        let codec = cfg.codec;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // the staller connects BEFORE any real worker and trickles three
+        // bytes of its frame header — under the old blocking accept this
+        // held the accept loop hostage for the full io timeout
+        let mut staller = TcpStream::connect(addr).unwrap();
+        staller.write_all(&[0x5A, 0x5A, 0x5A]).unwrap();
+        let hs: Vec<_> = (0..2u32)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let mut s = TcpStream::connect(addr).unwrap();
+                    send(&mut s, &Msg::Join { client_id: id, codec }, codec).unwrap();
+                    match recv(&mut s, codec).unwrap() {
+                        Msg::Shutdown => {}
+                        other => panic!("expected Shutdown, got {other:?}"),
+                    }
+                })
+            })
+            .collect();
+        let t0 = Instant::now();
+        let mut pool = TcpClientPool::accept(&cfg, listener).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "accept must complete despite the stalled joiner"
+        );
+        assert_eq!(pool.pending.len(), 1, "the staller sits in a pending-handshake slot");
+        pool.shutdown().unwrap();
+        drop(staller);
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    /// The speculation tentpole over real sockets: three workers, commit
+    /// quota two. The sleeping straggler is cleanly cancelled (a Sit, not
+    /// a casualty), its stream survives into the next round, and its one
+    /// late report is drained with exact byte accounting — `wire_up`
+    /// counts committed frames only.
+    #[test]
+    fn speculative_tcp_round_commits_without_the_straggler() {
+        use crate::fl::transport::{report_frame_bytes, update_frame_bytes};
+        let mut cfg = smoke_cfg();
+        cfg.n_clients = 3;
+        cfg.io_timeout_ms = 30_000;
+        let codec = cfg.codec;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = move |id: u32, slow: bool| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            send(&mut s, &Msg::Join { client_id: id, codec }, codec).unwrap();
+            let mut fb = FrameBuf::new();
+            let mut params = Vec::new();
+            loop {
+                let payload = recv_payload(&mut s, &mut fb).unwrap();
+                let round = match payload.first().copied() {
+                    Some(TAG_MODEL) => decode_model_into(payload, &mut params).unwrap(),
+                    _ => match Msg::decode(payload, codec).unwrap() {
+                        Msg::Shutdown => break,
+                        other => panic!("expected Model/Shutdown, got {other:?}"),
+                    },
+                };
+                if slow && round == 1 {
+                    // still "training" when the PS commits the round
+                    std::thread::sleep(Duration::from_millis(400));
+                }
+                let report = SparseVec::new(vec![id, id + 4], vec![1.0, -1.0]);
+                send_report(&mut s, codec, &mut fb, id, round, &report, 0.5).unwrap();
+                match recv_frame(&mut s, codec, &mut fb).unwrap() {
+                    Msg::Request { round: r, .. } if r == round => {
+                        let update = SparseVec::new(vec![id], vec![1.0]);
+                        send_frame(
+                            &mut s,
+                            &Msg::Update { client_id: id, round, update },
+                            codec,
+                            &mut fb,
+                        )
+                        .unwrap();
+                    }
+                    // the speculative cancel: back to awaiting the next
+                    // broadcast, exactly like the real worker loop
+                    Msg::Sit { round: r } if r == round => continue,
+                    other => panic!("expected Request/Sit, got {other:?}"),
+                }
+            }
+        };
+        let hs: Vec<_> = (0..3u32)
+            .map(|id| std::thread::spawn(move || worker(id, id == 2)))
+            .collect();
+        let mut pool = TcpClientPool::accept(&cfg, listener).unwrap();
+        let global = vec![0.0f32; 32];
+
+        // round 1: speculative — the round commits with 2 of 3 reports
+        pool.set_commit_quota(2);
+        let reports = pool.train_and_report(&global, &[0, 1, 2]).unwrap();
+        assert_eq!(
+            reports.iter().map(|r| r.is_some()).collect::<Vec<_>>(),
+            vec![true, true, false]
+        );
+        assert_eq!(pool.take_cancelled(), vec![2]);
+        assert!(
+            pool.health().iter().all(|&h| h),
+            "a cancelled straggler is not a casualty — its stream survives"
+        );
+        let ups = pool.exchange(None, &[0, 1]).unwrap();
+        assert!(ups.iter().all(|u| u.is_some()));
+
+        // round 2: no quota — everyone commits; the straggler's stale
+        // round-1 report is drained off the wire first
+        let reports = pool.train_and_report(&global, &[0, 1, 2]).unwrap();
+        assert!(reports.iter().all(|r| r.is_some()), "the cancelled worker participates again");
+        let ups = pool.exchange(None, &[0, 1, 2]).unwrap();
+        assert!(ups.iter().all(|u| u.is_some()));
+        assert_eq!(
+            pool.drained_up(),
+            report_frame_bytes(codec, &[2, 6]) as u64,
+            "exactly the stale report's bytes, tallied separately"
+        );
+        // committed-frame accounting never saw the stale report
+        let rep_b = |id: u32| report_frame_bytes(codec, &[id, id + 4]) as u64;
+        let upd_b = |id: u32| update_frame_bytes(codec, &[id]) as u64;
+        let (wire_up, _) = pool.wire_observed();
+        let expect = rep_b(0) + rep_b(1) + upd_b(0) + upd_b(1) // round 1: two survivors
+            + rep_b(0) + rep_b(1) + rep_b(2) + upd_b(0) + upd_b(1) + upd_b(2); // round 2: all
+        assert_eq!(wire_up, expect);
+        // the reactor fed per-phase timings for the adaptive deadline
+        let timings = pool.take_phase_timings();
+        assert!(timings.iter().any(|&(c, _)| c == 0) && timings.iter().any(|&(c, _)| c == 2));
+        pool.shutdown().unwrap();
+        for h in hs {
+            h.join().unwrap();
+        }
     }
 
     /// Off-cohort `Sit` frames ride the reactor's batched write pass and

@@ -65,6 +65,11 @@ pub struct InProcessPool<L = BackendLanes> {
     /// no wire to shrink, but verifying the digest against the model
     /// actually broadcast catches plan/model drift in every sim test
     plan_check: Option<(u32, u64)>,
+    /// commit quota for the next `train_and_report` (speculative
+    /// over-scheduling, DESIGN.md §11); `None` = commit everyone
+    quota: Option<usize>,
+    /// members the last quota cancelled, until `take_cancelled` drains
+    cancelled: Vec<usize>,
 }
 
 /// Requested lane count: config override or auto-detected cores, never
@@ -146,6 +151,8 @@ impl<L: Lanes> InProcessPool<L> {
                 cmap: CohortMap::new(),
                 pc: PhaseCfg::from_config(cfg),
                 plan_check: None,
+                quota: None,
+                cancelled: Vec::new(),
             },
             init,
         ))
@@ -219,6 +226,8 @@ impl<L: Lanes> crate::coordinator::topology::Reshard for InProcessPool<L> {
         self.reports.clear();
         self.report_cohort.clear();
         self.plan_check = None;
+        self.quota = None;
+        self.cancelled.clear();
     }
 }
 
@@ -232,6 +241,14 @@ impl<L: Lanes> ClientPool for InProcessPool<L> {
     /// every delta-downlink sim test.
     fn set_broadcast_plan(&mut self, plan: &BroadcastPlan) {
         self.plan_check = Some((plan.round, plan.digest));
+    }
+
+    fn set_commit_quota(&mut self, quota: usize) {
+        self.quota = Some(quota);
+    }
+
+    fn take_cancelled(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.cancelled)
     }
 
     fn train_and_report(
@@ -258,7 +275,23 @@ impl<L: Lanes> ClientPool for InProcessPool<L> {
         )?;
         self.reports = outs.iter().map(|o| o.report.clone()).collect();
         self.report_cohort = cohort.to_vec();
-        Ok(outs.into_iter().map(Some).collect())
+        match self.quota.take() {
+            // simulated clients are never slow, so "the first `q`
+            // reports land" resolves deterministically to the first `q`
+            // in cohort order; the rest are cancelled cleanly — they
+            // trained on the broadcast, the round simply committed
+            // without their reports (the sim face of the TCP
+            // clean-cancel, DESIGN.md §11)
+            Some(q) if q < cohort.len() => {
+                self.cancelled.extend_from_slice(&cohort[q..]);
+                Ok(outs
+                    .into_iter()
+                    .enumerate()
+                    .map(|(p, o)| (p < q).then_some(o))
+                    .collect())
+            }
+            _ => Ok(outs.into_iter().map(Some).collect()),
+        }
     }
 
     fn exchange(
@@ -500,6 +533,51 @@ mod tests {
         for (u, req) in ups.iter().zip(&reqs) {
             assert_eq!(&u.as_ref().unwrap().idx, req, "upload answers the right request");
         }
+    }
+
+    /// Speculation in the sim: under a commit quota the first `q`
+    /// cohort members report and the rest are cancelled — but the
+    /// cancelled members still trained on the broadcast (their local
+    /// state moves), and the exchange runs over the winners alone.
+    #[test]
+    fn commit_quota_cancels_trailing_members_after_they_train() {
+        use crate::data::{load_dataset, partition::partition};
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.participation = 1.0;
+        let (train, _) =
+            load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
+        let shards: Vec<Dataset> = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed)
+            .into_iter()
+            .map(|idx| train.subset(&idx))
+            .collect();
+        let (mut pool, init) = InProcessPool::new(&cfg, shards).unwrap();
+        let before: Vec<Vec<f32>> =
+            (0..cfg.n_clients).map(|i| pool.client_params(i).to_vec()).collect();
+        let full: Vec<usize> = (0..cfg.n_clients).collect();
+        pool.set_commit_quota(2);
+        let reports = pool.train_and_report(&init, &full).unwrap();
+        assert!(reports[0].is_some() && reports[1].is_some());
+        assert!(reports[2].is_none() && reports[3].is_none());
+        assert_eq!(pool.take_cancelled(), vec![2, 3]);
+        assert!(pool.take_cancelled().is_empty(), "draining transfers ownership");
+        for i in 0..cfg.n_clients {
+            assert_ne!(
+                before[i],
+                pool.client_params(i).to_vec(),
+                "client {i} trained whether or not its report committed"
+            );
+        }
+        let winners = vec![0usize, 1];
+        let reqs: Vec<Vec<u32>> = winners
+            .iter()
+            .map(|&c| reports[c].as_ref().unwrap().report.idx[..cfg.k].to_vec())
+            .collect();
+        let ups = pool.exchange(Some(&reqs), &winners).unwrap();
+        assert!(ups.iter().all(Option::is_some));
+        // the quota applied to that round only
+        let reports = pool.train_and_report(&init, &full).unwrap();
+        assert!(reports.iter().all(Option::is_some));
+        assert!(pool.take_cancelled().is_empty());
     }
 
     /// take/install round-trips the client state (the re-shard hand-off

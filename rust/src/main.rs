@@ -39,6 +39,9 @@ fn train_spec(cmd: &str, about: &str) -> ArgSpec {
         .opt("shards", "", "PS topology: 0 = flat (default), N >= 1 = N shard engines")
         .opt("root-merge", "", "root age-vector merge under sharding: min | max (empty = min)")
         .opt("io-timeout-ms", "", "PS-side per-phase connection deadline in ms (empty/0 = none)")
+        .opt("overschedule", "", "extra cohort members scheduled per round; the round commits on the first m reports (empty/0 = off)")
+        .opt("deadline-factor", "", "adaptive per-client deadline = clamp(rtt-ewma * factor, min, io-timeout) (empty/0 = flat io-timeout)")
+        .opt("deadline-min-ms", "", "floor for the adaptive per-client deadline in ms")
         .opt("reshard", "", "re-partition shards at recluster boundaries: true | false")
         .opt("codec", "", "wire codec: raw | packed | packed-f16 (empty = preset)")
         .opt("downlink", "", "broadcast mode: dense | delta (empty = preset)")
@@ -104,6 +107,15 @@ fn build_config(a: &ragek::util::argparse::Args) -> Result<ExperimentConfig> {
     }
     if !a.get("io-timeout-ms").is_empty() {
         cfg.io_timeout_ms = a.get_usize("io-timeout-ms")? as u64;
+    }
+    if !a.get("overschedule").is_empty() {
+        cfg.overschedule = a.get_usize("overschedule")?;
+    }
+    if !a.get("deadline-factor").is_empty() {
+        cfg.deadline_factor = a.get_f64("deadline-factor")?;
+    }
+    if !a.get("deadline-min-ms").is_empty() {
+        cfg.deadline_min_ms = a.get_usize("deadline-min-ms")? as u64;
     }
     match a.get("reshard") {
         "" => {}

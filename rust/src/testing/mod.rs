@@ -12,6 +12,17 @@ use crate::sparse::SparseVec;
 use crate::util::rng::Rng;
 use anyhow::Result;
 
+/// The round fate chaos deals a scheduled cohort member.
+#[derive(Clone, Copy, PartialEq)]
+enum Fate {
+    /// crashed mid-phase (the classic drop chaos)
+    Dead,
+    /// alive but slow: its report would land after the commit
+    Stalled,
+    /// reports on time
+    Fast,
+}
+
 /// A deterministic chaos wrapper over [`InProcessPool`]: scheduled
 /// clients drop with a seeded per-phase probability (mid-round, exactly
 /// like a crashed TCP worker) and re-admit themselves `rejoin_after`
@@ -31,6 +42,21 @@ pub struct FlakyPool {
     alive: Vec<bool>,
     rejoin_at: Vec<Option<usize>>,
     round: usize,
+    /// stall chaos (slow, not dead — DESIGN.md §11) draws from its own
+    /// seeded stream so `stall_rate = 0` leaves the drop chaos
+    /// bit-for-bit unchanged
+    stall: Rng,
+    /// per-round probability a scheduled live client is slow
+    stall_rate: f32,
+    /// probability a due rejoiner's handshake stalls mid-frame: the
+    /// reactor drops the pending handshake at its deadline and the
+    /// worker retries, so admission slips a round instead of wedging
+    handshake_stall_rate: f32,
+    /// commit quota for the next phase 1 (not forwarded to the inner
+    /// pool: chaos, not cohort order, decides who is slow here)
+    quota: Option<usize>,
+    cancelled: Vec<usize>,
+    handshake_stalls: usize,
 }
 
 impl FlakyPool {
@@ -61,6 +87,12 @@ impl FlakyPool {
                 alive: vec![true; n],
                 rejoin_at: vec![None; n],
                 round: 0,
+                stall: Rng::new(chaos_seed ^ 0x57A_11ED),
+                stall_rate: 0.0,
+                handshake_stall_rate: 0.0,
+                quota: None,
+                cancelled: Vec::new(),
+                handshake_stalls: 0,
             },
             init,
         ))
@@ -73,6 +105,27 @@ impl FlakyPool {
     /// Total clients currently down.
     pub fn n_down(&self) -> usize {
         self.alive.iter().filter(|&&a| !a).count()
+    }
+
+    /// Make a fraction of scheduled live clients *slow* each round
+    /// (stalled, not dead): under a satisfiable commit quota they are
+    /// cancelled cleanly and keep training; without one — or when too
+    /// few fast members remain to fill the quota — the stall outlasts
+    /// the phase deadline and they degrade to casualties, exactly like
+    /// the TCP reactor tearing the stream down.
+    pub fn set_stall_rate(&mut self, rate: f32) {
+        self.stall_rate = rate;
+    }
+
+    /// Stall a fraction of rejoin handshakes mid-frame: admission slips
+    /// at least one round per stall, but the round itself never blocks.
+    pub fn set_handshake_stall_rate(&mut self, rate: f32) {
+        self.handshake_stall_rate = rate;
+    }
+
+    /// Rejoin handshakes the chaos has stalled so far.
+    pub fn n_handshake_stalls(&self) -> usize {
+        self.handshake_stalls
     }
 
     /// Draw the chaos verdict for one scheduled client: `true` = it
@@ -108,6 +161,16 @@ impl ClientPool for FlakyPool {
         for c in 0..self.alive.len() {
             if let Some(due) = self.rejoin_at[c] {
                 if due <= self.round {
+                    if self.handshake_stall_rate > 0.0
+                        && self.stall.uniform_in(0.0, 1.0) < self.handshake_stall_rate
+                    {
+                        // mid-handshake stall: the reactor drops the
+                        // pending frame at its deadline; the worker
+                        // retries next round
+                        self.rejoin_at[c] = Some(self.round + 1);
+                        self.handshake_stalls += 1;
+                        continue;
+                    }
                     self.rejoin_at[c] = None;
                     self.alive[c] = true;
                     self.inner.resync_client(c, global);
@@ -118,26 +181,77 @@ impl ClientPool for FlakyPool {
         Ok(admitted)
     }
 
+    fn set_commit_quota(&mut self, quota: usize) {
+        self.quota = Some(quota);
+    }
+
+    fn take_cancelled(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.cancelled)
+    }
+
     fn train_and_report(
         &mut self,
         global: &[f32],
         cohort: &[usize],
     ) -> Result<Vec<Option<ClientReport>>> {
         self.round += 1;
-        // chaos verdicts in cohort order (deterministic given the seed)
-        let mut live = Vec::with_capacity(cohort.len());
-        let mut fate = Vec::with_capacity(cohort.len());
+        let quota = self.quota.take();
+        // chaos verdicts in cohort order (deterministic given the seed):
+        // the drop draw comes first, from the drop stream, so stall
+        // chaos never perturbs it
+        let mut fates = Vec::with_capacity(cohort.len());
+        let mut n_fast = 0usize;
         for &c in cohort {
-            let up = self.alive[c] && !self.drops_now(c);
-            fate.push(up);
-            if up {
-                live.push(c);
+            let fate = if !self.alive[c] || self.drops_now(c) {
+                Fate::Dead
+            } else if self.stall_rate > 0.0
+                && self.stall.uniform_in(0.0, 1.0) < self.stall_rate
+            {
+                Fate::Stalled
+            } else {
+                n_fast += 1;
+                Fate::Fast
+            };
+            fates.push(fate);
+        }
+        // With enough fast members to fill the quota the round commits
+        // early: every live member trains (stragglers hold the
+        // broadcast) and the non-winners are cancelled cleanly. Without
+        // a quota — or with too few fast members — a stall outlasts the
+        // phase deadline and degrades to a casualty.
+        let commit_with_cancel = quota.map_or(false, |q| n_fast >= q);
+        let mut live = Vec::with_capacity(cohort.len());
+        for (&c, fate) in cohort.iter().zip(&fates) {
+            match fate {
+                Fate::Dead => {}
+                Fate::Stalled if !commit_with_cancel => {
+                    self.alive[c] = false;
+                    self.rejoin_at[c] = Some(self.round + self.rejoin_after);
+                }
+                _ => live.push(c),
             }
         }
         let mut outs = self.inner.train_and_report(global, &live)?.into_iter();
-        Ok(fate
-            .into_iter()
-            .map(|up| if up { outs.next().expect("one report per live member") } else { None })
+        let quota = quota.unwrap_or(usize::MAX);
+        let cancelled = &mut self.cancelled;
+        let mut landed = 0usize;
+        Ok(cohort
+            .iter()
+            .zip(&fates)
+            .map(|(&c, &fate)| match fate {
+                Fate::Dead => None,
+                Fate::Stalled if !commit_with_cancel => None,
+                fate => {
+                    let rep = outs.next().expect("one report per live member");
+                    if fate == Fate::Fast && landed < quota {
+                        landed += 1;
+                        rep
+                    } else {
+                        cancelled.push(c);
+                        None
+                    }
+                }
+            })
             .collect())
     }
 

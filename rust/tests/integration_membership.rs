@@ -148,6 +148,132 @@ fn total_outage_recovers_after_rejoin() {
     assert!(params.iter().all(|p| p.is_finite()));
 }
 
+// ================================================== speculative chaos
+
+/// One tuned chaos run (stall / handshake-stall knobs applied before the
+/// first round).
+struct ChaosRun {
+    log: Vec<Vec<Vec<u32>>>,
+    params: Vec<f32>,
+    ages: Vec<Vec<u32>>,
+    casualties: usize,
+    cancelled: usize,
+    generations: Vec<u32>,
+    handshake_stalls: usize,
+}
+
+fn run_chaos_tuned(
+    cfg: &ExperimentConfig,
+    drop_rate: f32,
+    rejoin_after: usize,
+    chaos_seed: u64,
+    tune: impl FnOnce(&mut FlakyPool),
+) -> ChaosRun {
+    let (mut pool, init) = FlakyPool::new(cfg, drop_rate, rejoin_after, chaos_seed).unwrap();
+    tune(&mut pool);
+    let mut engine = RoundEngine::new(cfg, init);
+    let (mut casualties, mut cancelled) = (0, 0);
+    for _ in 0..cfg.rounds {
+        let out = engine.run_round(&mut pool).unwrap();
+        casualties += out.casualties.len();
+        cancelled += out.cancelled.len();
+    }
+    ChaosRun {
+        log: engine.uploaded_log().iter().cloned().collect(),
+        params: engine.global_params().to_vec(),
+        ages: (0..cfg.n_clients)
+            .map(|i| engine.ps().clusters().age_of_client(i).to_vec())
+            .collect(),
+        casualties,
+        cancelled,
+        generations: (0..cfg.n_clients).map(|i| engine.fleet().generation(i)).collect(),
+        handshake_stalls: pool.n_handshake_stalls(),
+    }
+}
+
+/// Speculative rounds under stall chaos (slow clients, nobody dead):
+/// every round commits at most `m` reports — exactly `m` whenever enough
+/// fast members remain — the stragglers are cancelled (never casualties
+/// while the quota is satisfiable), the run replays deterministically,
+/// and the eq.-(2) ages still equal the dense oracle: a cancelled round
+/// is an empty upload record, pure uniform aging.
+#[test]
+fn speculative_chaos_commits_m_with_dense_oracle_ages() {
+    let mut cfg = chaos_cfg(6, 10);
+    cfg.participation = 0.5; // m = 3
+    cfg.overschedule = 2; // schedule 5, commit on the first 3
+    let m = cfg.cohort_size();
+    let run = || {
+        run_chaos_tuned(&cfg, 0.0, 2, 11, |pool| pool.set_stall_rate(0.3))
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.log, b.log, "speculative stall chaos must be deterministic");
+    assert_eq!(a.params, b.params);
+    assert_eq!(a.ages, b.ages);
+    assert!(a.cancelled > 0, "the stall chaos must actually cancel someone");
+    for (round, per_client) in a.log.iter().enumerate() {
+        let committed = per_client.iter().filter(|u| !u.is_empty()).count();
+        assert!(
+            committed <= m,
+            "round {}: {committed} commits exceed the quota m = {m}",
+            round + 1
+        );
+    }
+    assert!(
+        a.log.iter().any(|r| r.iter().filter(|u| !u.is_empty()).count() == m),
+        "some round must have filled its quota"
+    );
+    assert!(a.params.iter().all(|p| p.is_finite()));
+    // dense eq.-(2) oracle over the full log: cancellation is recorded
+    // as absence, so every client's lazy ages replay exactly
+    let d = cfg.d();
+    let mut dense: Vec<DenseAgeVector> =
+        (0..cfg.n_clients).map(|_| DenseAgeVector::new(d)).collect();
+    for per_client in &a.log {
+        for (i, uploaded) in per_client.iter().enumerate() {
+            dense[i].update(uploaded);
+        }
+    }
+    for (i, dense_i) in dense.iter().enumerate() {
+        assert_eq!(
+            a.ages[i],
+            dense_i.as_slice(),
+            "client {i}: lazy ages diverged from the dense oracle under cancellation"
+        );
+    }
+}
+
+/// A stall during the rejoin handshake defers admission (the reactor
+/// drops the pending frame at its deadline; the worker retries) but
+/// never wedges the round: with every handshake stalling, dropped
+/// clients simply stay gone — all rounds still commit — while the same
+/// chaos with clean handshakes re-admits them.
+#[test]
+fn stalled_rejoin_handshake_defers_admission_without_wedging() {
+    let cfg = chaos_cfg(4, 10);
+    let clean = run_chaos_tuned(&cfg, 0.25, 2, 7, |_| {});
+    assert!(
+        clean.generations.iter().any(|&g| g >= 1),
+        "baseline chaos must re-admit someone: {:?}",
+        clean.generations
+    );
+    let stalled =
+        run_chaos_tuned(&cfg, 0.25, 2, 7, |pool| pool.set_handshake_stall_rate(1.0));
+    assert_eq!(stalled.log.len(), cfg.rounds, "every round must still commit");
+    assert!(stalled.handshake_stalls > 0, "the handshake chaos must actually fire");
+    assert!(
+        stalled.generations.iter().all(|&g| g == 0),
+        "a permanently stalled handshake is never admitted: {:?}",
+        stalled.generations
+    );
+    assert!(
+        stalled.casualties >= clean.casualties.min(1),
+        "drop chaos is untouched by handshake chaos"
+    );
+    assert!(stalled.params.iter().all(|p| p.is_finite()));
+}
+
 // ====================================================== TCP kill/rejoin
 
 /// A scripted protocol round: answer a `Model` broadcast with a fixed

@@ -397,6 +397,44 @@ fn delta_downlink_resharding_sim_and_tcp_are_identical() {
     assert_eq!(report.casualties, 0);
 }
 
+/// Speculative over-scheduling is off by default: every parity pin in
+/// this file runs with `overschedule = 0`, i.e. the scheduler selects
+/// exactly `m` members and the quota path is never armed — today's
+/// protocol bit-for-bit. This pin keeps that default honest.
+#[test]
+fn overschedule_defaults_to_off() {
+    let cfg = parity_cfg(StrategyKind::RageK);
+    assert_eq!(cfg.overschedule, 0);
+    assert_eq!(cfg.scheduled_cohort_size(), cfg.cohort_size());
+    let mut scfg = cfg.clone();
+    scfg.overschedule = 1;
+    assert_eq!(scfg.scheduled_cohort_size(), scfg.cohort_size() + 1);
+}
+
+/// A speculative sim run (ε > 0) is deterministic across repeats and
+/// still commits exactly `m` reports per round — the ε stragglers are
+/// cancelled, never uploaded, and the run replays bit-for-bit.
+#[test]
+fn speculative_sim_is_deterministic_and_commits_m_per_round() {
+    let mut cfg = parity_cfg(StrategyKind::RageK);
+    cfg.n_clients = 4;
+    cfg.participation = 0.5;
+    cfg.overschedule = 1; // schedule 3, commit 2
+    cfg.rounds = 6;
+    let m = cfg.cohort_size();
+    let (log_a, params_a) = run_sim(&cfg);
+    let (log_b, params_b) = run_sim(&cfg);
+    assert_eq!(log_a, log_b, "speculative sim must be deterministic across repeats");
+    assert_eq!(params_a, params_b);
+    for round in &log_a {
+        assert_eq!(
+            round.iter().filter(|u| !u.is_empty()).count(),
+            m,
+            "each speculative round commits exactly m uploads"
+        );
+    }
+}
+
 /// The age-debt scheduler is deterministic PS state, so it too must agree
 /// across transports.
 #[test]
