@@ -1,0 +1,120 @@
+//! Fleet-scale simulation perf: compact client state machines at
+//! n = 10³ / 10⁴ / 10⁵ simulated clients (DESIGN.md §12).
+//!
+//! Builds a [`ragek::fl::CompactPool`] per scale — every client a
+//! zero-float `Fresh` slot viewing an `Arc`-shared corpus — and drives
+//! real engine rounds with a fixed 32-member cohort under the age-debt
+//! scheduler, so the O(n) paths (scheduling, ages, fleet bookkeeping)
+//! and the O(cohort) paths (training, materialization) are both on the
+//! clock. Reports construction time, rounds/sec, resident model bytes
+//! per client (deterministic, via `resident_client_floats`) and the
+//! process RSS peak — the committed `BENCH_fleetscale.json` baseline.
+//!
+//! Hard gate: at n = 10⁵ the per-client resident footprint must be at
+//! least 10x below the dense pool's analytic 3·d·4 bytes/client (in
+//! practice it is ~1000x: only ever-scheduled clients hold floats).
+
+use ragek::bench::Bench;
+use ragek::config::ExperimentConfig;
+use ragek::coordinator::engine::RoundEngine;
+use ragek::coordinator::scheduler::SchedulerKind;
+use ragek::data::{load_dataset, partition::Scheme, Shard};
+use ragek::fl::CompactPool;
+use ragek::util::timer::peak_rss_bytes;
+use std::sync::Arc;
+
+const ROUNDS: usize = 2;
+const COHORT: usize = 32;
+/// shared synthetic corpus rows; clients view 2 rows each, modularly
+const CORPUS_ROWS: usize = 512;
+
+fn scenario(n: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist_scaled();
+    cfg.n_clients = n;
+    cfg.participation = COHORT as f64 / n as f64;
+    cfg.scheduler = SchedulerKind::AgeDebt;
+    cfg.partition = Scheme::Iid; // shards are built directly below
+    cfg.parallel = 1;
+    cfg.rounds = ROUNDS;
+    cfg.recluster_every = ROUNDS; // one recluster lands inside the run
+    cfg.h = 1;
+    cfg.batch = 16;
+    cfg.r = 40;
+    cfg.k = 8;
+    cfg.eval_every = 0;
+    cfg.train_n = CORPUS_ROWS;
+    cfg.test_n = 64;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("fleetscale");
+    let base = scenario(1000);
+    let (corpus, _) =
+        load_dataset(base.corpus, &base.data_dir, base.seed, base.train_n, base.test_n);
+    let corpus = Arc::new(corpus);
+    let d = base.d();
+    let dense_bytes_per_client = 3.0 * d as f64 * 4.0;
+
+    println!(
+        "\ncompact fleet, {ROUNDS} rounds, cohort {COHORT}, age-debt scheduler \
+         (dense analytic: {:.0} KB/client):",
+        dense_bytes_per_client / 1024.0
+    );
+    println!(
+        "{:<10} {:>12} {:>10} {:>16} {:>14}",
+        "n", "rounds/sec", "live", "bytes/client", "peak RSS MB"
+    );
+
+    for n in [1_000usize, 10_000, 100_000] {
+        let cfg = scenario(n);
+        assert_eq!(cfg.cohort_size(), COHORT, "participation must pin a {COHORT}-cohort");
+        let rows = corpus.len() as u32;
+        let shards: Vec<Shard> = (0..n as u32)
+            .map(|i| Shard::view(corpus.clone(), vec![(2 * i) % rows, (2 * i + 1) % rows]))
+            .collect();
+
+        let mut built = None;
+        b.run_once(&format!("construct compact pool n={n}"), || {
+            built = Some(CompactPool::new(&cfg, shards).unwrap());
+        });
+        let (mut pool, init) = built.expect("pool constructed");
+        assert_eq!(pool.resident_client_floats(), 0, "fresh fleets hold zero model floats");
+
+        let mut engine = RoundEngine::new(&cfg, init);
+        let mean = b
+            .run_once(&format!("{ROUNDS} rounds n={n}, cohort {COHORT}"), || {
+                for _ in 0..ROUNDS {
+                    engine.run_round(&mut pool).unwrap();
+                }
+            })
+            .mean();
+
+        assert_eq!(engine.round(), ROUNDS, "every round must commit at n={n}");
+        assert!(
+            pool.n_live() >= COHORT && pool.n_live() <= ROUNDS * COHORT,
+            "only scheduled clients materialize: {} live at n={n}",
+            pool.n_live()
+        );
+        let per_client = pool.resident_client_floats() as f64 * 4.0 / n as f64;
+        let rss_mb = peak_rss_bytes().map(|x| x as f64 / (1024.0 * 1024.0));
+        println!(
+            "{n:<10} {:>12.2} {:>10} {:>16.1} {:>14}",
+            ROUNDS as f64 / mean,
+            pool.n_live(),
+            per_client,
+            rss_mb.map(|x| format!("{x:.1}")).unwrap_or_else(|| "n/a".into())
+        );
+        if n == 100_000 {
+            // the acceptance gate: >= 10x below dense per-client state
+            assert!(
+                per_client * 10.0 <= dense_bytes_per_client,
+                "fleet-scale footprint regressed: {per_client:.1} B/client vs \
+                 dense {dense_bytes_per_client:.0} B/client"
+            );
+        }
+    }
+
+    b.save();
+    Ok(())
+}

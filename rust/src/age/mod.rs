@@ -27,13 +27,48 @@
 //! client (the f^t[i] of eq. (3)); its pairwise dot products drive the
 //! DBSCAN clustering.
 
-/// Per-cluster age vector (eq. 2), lazy epoch-offset representation.
+/// Per-cluster age vector (eq. 2), lazy epoch-offset representation with
+/// a **hybrid sparse/dense backing** (fleet-scale refit, DESIGN.md §12).
+///
+/// A fresh vector is all-zero and a typical cluster only ever resets a
+/// small, stable subset of the d coordinates (k per round, heavily
+/// repeated), so materializing `last_reset` as a `Vec<u32>` of length d
+/// *per cluster* is the O(n·d) assumption that killed fleet-scale runs:
+/// 10⁵ singleton clusters at the MNIST d = 39760 is ~16 GB before the
+/// first round. The hybrid starts [`Repr::Sparse`] — a map of the touched
+/// coordinates over an implicit `base` reset-round for everything else —
+/// and only densifies when the touched support grows past d/4 (at which
+/// point the map would cost more than the vector). All observable
+/// semantics (`get`, eq. (2) `update`, merges, `reset`, equality) are
+/// bit-for-bit those of the dense epoch-offset form, pinned against
+/// [`DenseAgeVector`] in `rust/tests/properties.rs` and the
+/// representation-transition tests below.
+///
+/// The running `sum_last` makes `mean_age` O(1) exact integer arithmetic,
+/// and in the sparse regime `max_age` is O(1) too (some coordinate always
+/// sits at `base`) — both were O(d) sweeps the age-debt scheduler paid
+/// per cluster per round.
 #[derive(Debug, Clone)]
 pub struct AgeVector {
-    /// round at which index j last reset to age 0 (invariant: <= round)
-    last_reset: Vec<u32>,
+    d: usize,
     /// rounds elapsed in this vector's epoch
     round: u32,
+    /// conceptual `last_reset[j]` (round at which j last reset to age 0,
+    /// invariant: <= round), in one of two physical forms
+    repr: Repr,
+    /// running sum of the conceptual `last_reset` over all d coordinates
+    sum_last: u64,
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    /// `map[j]` overrides; every other coordinate has `last_reset = base`.
+    /// Invariants: every map value >= `base`, and `map.len() * 4 < d` —
+    /// so at least one coordinate always sits at `base`, making it the
+    /// exact minimum of the conceptual vector.
+    Sparse { map: std::collections::HashMap<u32, u32>, base: u32 },
+    /// the classical materialized `last_reset` vector
+    Dense(Vec<u32>),
 }
 
 /// Equality is on the *ages*, not the internal epoch: two vectors that
@@ -46,12 +81,19 @@ impl PartialEq for AgeVector {
 }
 
 impl AgeVector {
+    /// O(1) in d — a fresh vector materializes nothing (the fleet-scale
+    /// property `ClusterManager::new` relies on for 10⁵+ singletons).
     pub fn new(d: usize) -> Self {
-        AgeVector { last_reset: vec![0; d], round: 0 }
+        AgeVector {
+            d,
+            round: 0,
+            repr: Repr::Sparse { map: std::collections::HashMap::new(), base: 0 },
+            sum_last: 0,
+        }
     }
 
     pub fn d(&self) -> usize {
-        self.last_reset.len()
+        self.d
     }
 
     /// Rounds elapsed in this vector's epoch (diagnostics).
@@ -59,13 +101,48 @@ impl AgeVector {
         self.round
     }
 
+    /// Conceptual `last_reset[j]`; panics on j >= d like the dense form.
+    #[inline]
+    fn last(&self, j: usize) -> u32 {
+        assert!(j < self.d, "age index {j} out of bounds (d = {})", self.d);
+        match &self.repr {
+            Repr::Sparse { map, base } => map.get(&(j as u32)).copied().unwrap_or(*base),
+            Repr::Dense(last) => last[j],
+        }
+    }
+
     pub fn get(&self, j: usize) -> u32 {
-        self.round - self.last_reset[j]
+        self.round - self.last(j)
+    }
+
+    /// Coordinates explicitly tracked by the backing store: the touched
+    /// support in the sparse regime, d once densified (diagnostics — the
+    /// memory-model number `bench_fleetscale` reports).
+    pub fn backing_len(&self) -> usize {
+        match &self.repr {
+            Repr::Sparse { map, .. } => map.len(),
+            Repr::Dense(last) => last.len(),
+        }
     }
 
     /// Dense materialization (oracle comparisons, artifact interop).
     pub fn to_vec(&self) -> Vec<u32> {
-        self.last_reset.iter().map(|&lr| self.round - lr).collect()
+        (0..self.d).map(|j| self.get(j)).collect()
+    }
+
+    /// Sparse support outgrew d/4: switch to the materialized vector
+    /// (cheaper than the map from here on). One-way per epoch — `reset`
+    /// re-sparsifies on cluster splits.
+    fn maybe_densify(&mut self) {
+        if let Repr::Sparse { map, base } = &self.repr {
+            if self.d > 0 && map.len() * 4 >= self.d {
+                let mut last = vec![*base; self.d];
+                for (&j, &lr) in map {
+                    last[j as usize] = lr;
+                }
+                self.repr = Repr::Dense(last);
+            }
+        }
     }
 
     /// eq. (2): every index ages by one, except the just-requested
@@ -74,9 +151,25 @@ impl AgeVector {
     /// `benches/bench_age.rs` for the gap at d = 2.5M).
     pub fn update(&mut self, selected: &[u32]) {
         self.round += 1;
-        for &j in selected {
-            self.last_reset[j as usize] = self.round;
+        let round = self.round;
+        match &mut self.repr {
+            Repr::Sparse { map, base } => {
+                for &j in selected {
+                    assert!((j as usize) < self.d, "age index {j} out of bounds");
+                    let lr = map.entry(j).or_insert(*base);
+                    self.sum_last += (round - *lr) as u64;
+                    *lr = round;
+                }
+            }
+            Repr::Dense(last) => {
+                for &j in selected {
+                    let lr = &mut last[j as usize];
+                    self.sum_last += (round - *lr) as u64;
+                    *lr = round;
+                }
+            }
         }
+        self.maybe_densify();
     }
 
     /// Merge another cluster's vector into this one. Elementwise **min**:
@@ -93,40 +186,97 @@ impl AgeVector {
         self.merge_with(other, u32::max);
     }
 
-    /// Merges happen only on (M-periodic) cluster formation, so O(d) is
-    /// fine here; both operands are rebased onto a common epoch that can
-    /// represent every merged age.
+    /// Merges happen only on (M-periodic) cluster formation; both
+    /// operands are rebased onto a common epoch that can represent every
+    /// merged age. Two sparse operands merge in O(|support union|) — the
+    /// merged default age is `pick` of the operand defaults, and because
+    /// each operand's tracked ages never exceed its default age and
+    /// `pick` is monotone, every merged override stays <= the merged
+    /// default, i.e. lands at or above the new base (the sparse
+    /// invariant). Either operand dense -> O(d) materialized merge, as
+    /// before.
     fn merge_with(&mut self, other: &AgeVector, pick: fn(u32, u32) -> u32) {
         assert_eq!(self.d(), other.d());
-        let my_round = self.round;
-        let round = my_round.max(other.round);
-        for (j, lr) in self.last_reset.iter_mut().enumerate() {
-            let age = pick(my_round - *lr, other.round - other.last_reset[j]);
-            *lr = round - age;
+        let (r1, r2) = (self.round, other.round);
+        let round = r1.max(r2);
+        if let (Repr::Sparse { map: m1, base: b1 }, Repr::Sparse { map: m2, base: b2 }) =
+            (&self.repr, &other.repr)
+        {
+            let default = pick(r1 - b1, r2 - b2);
+            let base = round - default;
+            let mut map = std::collections::HashMap::with_capacity(m1.len() + m2.len());
+            let mut overridden = |j: u32| {
+                let a1 = r1 - m1.get(&j).copied().unwrap_or(*b1);
+                let a2 = r2 - m2.get(&j).copied().unwrap_or(*b2);
+                let age = pick(a1, a2);
+                if age != default {
+                    map.insert(j, round - age);
+                }
+            };
+            for &j in m1.keys() {
+                overridden(j);
+            }
+            for &j in m2.keys() {
+                if !m1.contains_key(&j) {
+                    overridden(j);
+                }
+            }
+            self.sum_last = base as u64 * (self.d - map.len()) as u64
+                + map.values().map(|&lr| lr as u64).sum::<u64>();
+            self.repr = Repr::Sparse { map, base };
+            self.round = round;
+            self.maybe_densify();
+            return;
         }
+        let mut last = Vec::with_capacity(self.d);
+        let mut sum = 0u64;
+        for j in 0..self.d {
+            let age = pick(r1 - self.last(j), r2 - other.last(j));
+            let lr = round - age;
+            sum += lr as u64;
+            last.push(lr);
+        }
+        self.repr = Repr::Dense(last);
+        self.sum_last = sum;
         self.round = round;
     }
 
-    /// All ages back to 0 (cluster split carry-over rule).
+    /// All ages back to 0 (cluster split carry-over rule). Re-enters the
+    /// sparse regime: the zeroed vector is uniform, so nothing needs
+    /// materializing.
     pub fn reset(&mut self) {
-        self.last_reset.fill(self.round);
+        self.repr = Repr::Sparse { map: std::collections::HashMap::new(), base: self.round };
+        self.sum_last = self.round as u64 * self.d as u64;
     }
 
     /// Ages gathered at `idx` as f32 scores (selection input).
     pub fn gather(&self, idx: &[u32]) -> Vec<f32> {
-        idx.iter().map(|&j| (self.round - self.last_reset[j as usize]) as f32).collect()
+        idx.iter().map(|&j| self.get(j as usize) as f32).collect()
     }
 
+    /// O(1) in the sparse regime (some coordinate always sits at `base`,
+    /// the exact minimum last-reset); the densified regime keeps the old
+    /// O(d) sweep.
     pub fn max_age(&self) -> u32 {
-        self.last_reset.iter().map(|&lr| self.round - lr).max().unwrap_or(0)
+        if self.d == 0 {
+            return 0;
+        }
+        match &self.repr {
+            Repr::Sparse { base, .. } => self.round - base,
+            Repr::Dense(last) => {
+                let round = self.round;
+                last.iter().map(|&lr| round - lr).max().unwrap_or(0)
+            }
+        }
     }
 
+    /// O(1): exact integer arithmetic over the running last-reset sum
+    /// (`sum(age) = round * d - sum_last`), converted to f64 once.
     pub fn mean_age(&self) -> f64 {
-        if self.last_reset.is_empty() {
+        if self.d == 0 {
             return 0.0;
         }
-        let sum: f64 = self.last_reset.iter().map(|&lr| (self.round - lr) as f64).sum();
-        sum / self.last_reset.len() as f64
+        (self.round as u64 * self.d as u64 - self.sum_last) as f64 / self.d as f64
     }
 }
 
@@ -222,6 +372,12 @@ impl FrequencyVector {
 
     pub fn get(&self, j: u32) -> u32 {
         self.counts.get(&j).copied().unwrap_or(0)
+    }
+
+    /// The support as (index, count) pairs, in arbitrary (hash) order —
+    /// the material the clustering posting index is built from.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.counts.iter().map(|(&j, &c)| (j, c))
     }
 
     /// <self, other> (sparse dot product over the smaller support).
@@ -342,6 +498,83 @@ mod tests {
         assert_eq!(a.gather(&[0, 1, 4]), vec![2.0, 1.0, 0.0]);
         assert_eq!(a.max_age(), 2);
         assert!((a.mean_age() - (2.0 + 1.0 + 2.0 + 2.0 + 0.0) / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fresh_vector_materializes_nothing() {
+        // the fleet-scale property: 10^5 singleton clusters at d = 2.5M
+        // must cost O(1) each until coordinates are actually touched
+        let a = AgeVector::new(2_515_338);
+        assert_eq!(a.backing_len(), 0);
+        assert_eq!(a.max_age(), 0);
+        assert_eq!(a.mean_age(), 0.0);
+        assert_eq!(a.d(), 2_515_338);
+    }
+
+    #[test]
+    fn sparse_tracks_only_touched_support() {
+        let mut a = AgeVector::new(1000);
+        for _ in 0..50 {
+            a.update(&[3, 7, 900]);
+        }
+        assert_eq!(a.backing_len(), 3, "repeated resets must not grow the backing");
+        assert_eq!(a.get(3), 0);
+        assert_eq!(a.get(0), 50);
+        assert_eq!(a.max_age(), 50);
+        let expect_mean = (997.0 * 50.0) / 1000.0;
+        assert!((a.mean_age() - expect_mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn densifies_past_quarter_support_with_identical_ages() {
+        let d = 40;
+        let mut a = AgeVector::new(d);
+        let mut oracle = DenseAgeVector::new(d);
+        // touch one new coordinate per round until the sparse->dense
+        // transition triggers, checking exact agreement across it
+        for j in 0..(d as u32 / 2) {
+            a.update(&[j]);
+            oracle.update(&[j]);
+            assert_eq!(a.to_vec(), oracle.as_slice(), "diverged at round {j}");
+            assert_eq!(a.max_age(), oracle.max_age());
+        }
+        assert_eq!(a.backing_len(), d, "support of d/2 must have densified");
+        // and reset() re-enters the sparse regime
+        a.reset();
+        oracle.reset();
+        assert_eq!(a.backing_len(), 0);
+        assert_eq!(a.to_vec(), oracle.as_slice());
+        a.update(&[0]);
+        oracle.update(&[0]);
+        assert_eq!(a.to_vec(), oracle.as_slice());
+    }
+
+    #[test]
+    fn sparse_merge_stays_sparse_and_exact() {
+        // two sparse operands with different epochs and overlapping
+        // support merge in O(union) without materializing d entries
+        let d = 10_000;
+        let cases: [(fn(u32, u32) -> u32, fn(&mut AgeVector, &AgeVector)); 2] =
+            [(u32::min, AgeVector::merge_min), (u32::max, AgeVector::merge_max)];
+        for (pick, merge) in cases {
+            let mut a = AgeVector::new(d);
+            let mut b = AgeVector::new(d);
+            for _ in 0..7 {
+                a.update(&[1, 2, 3]);
+            }
+            for _ in 0..3 {
+                b.update(&[3, 4]);
+            }
+            let mut merged = a.clone();
+            merge(&mut merged, &b);
+            assert!(merged.backing_len() <= 5, "merge must stay sparse");
+            for j in 0..d {
+                assert_eq!(merged.get(j), pick(a.get(j), b.get(j)), "index {j}");
+            }
+            let brute: f64 = (0..d).map(|j| merged.get(j) as f64).sum::<f64>() / d as f64;
+            assert!((merged.mean_age() - brute).abs() < 1e-9);
+            assert_eq!(merged.max_age(), (0..d).map(|j| merged.get(j)).max().unwrap());
+        }
     }
 
     #[test]

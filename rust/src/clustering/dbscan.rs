@@ -34,10 +34,20 @@ pub fn dbscan(dist: &[Vec<f64>], params: DbscanParams) -> Vec<isize> {
     for (i, row) in dist.iter().enumerate() {
         assert_eq!(row.len(), n, "distance matrix must be square (row {i})");
     }
-    let neighbors = |i: usize| -> Vec<usize> {
-        (0..n).filter(|&j| dist[i][j] <= params.eps).collect()
-    };
+    dbscan_with(n, params, |i| (0..n).filter(|&j| dist[i][j] <= params.eps).collect())
+}
 
+/// DBSCAN over an abstract neighborhood oracle: `neighbors(i)` returns
+/// every point within `eps` of `i` (including `i` itself), **ascending**.
+/// This is the fleet-scale entry point — paired with
+/// [`crate::clustering::SimilarityIndex`] the oracle answers from sparse
+/// posting lists in O(candidates) instead of an O(n²) materialized
+/// matrix, while the expansion logic (and therefore the labelling) stays
+/// byte-identical to the matrix form above, which now delegates here.
+pub fn dbscan_with<F>(n: usize, params: DbscanParams, mut neighbors: F) -> Vec<isize>
+where
+    F: FnMut(usize) -> Vec<usize>,
+{
     let mut labels = vec![NOISE; n];
     let mut visited = vec![false; n];
     let mut next_cluster: isize = 0;

@@ -6,20 +6,26 @@ pub mod dbscan;
 pub mod manager;
 pub mod similarity;
 
-pub use dbscan::{dbscan, DbscanParams, NOISE};
+pub use dbscan::{dbscan, dbscan_with, DbscanParams, NOISE};
 pub use manager::{ClusterManager, MergeRule};
-pub use similarity::{connectivity_matrix, distance_matrix};
+pub use similarity::{connectivity_matrix, distance_matrix, SimilarityIndex};
 
 use crate::age::FrequencyVector;
 
 /// The full frequency -> labels pipeline of Algorithm 1's reclustering
-/// step: eq.-(3) connectivity, symmetrized distance, DBSCAN. The
+/// step: eq.-(3) similarity, symmetrized distance, DBSCAN. The
 /// **single** definition shared by the flat PS
 /// (`ParameterServer::force_recluster`) and the sharded root
 /// (`ShardedEngine`'s fleet-wide recluster), so the
 /// `Flat == Sharded(1)` parity is structural, not comment-enforced.
+///
+/// Since PR 9 this runs on the posting-list [`SimilarityIndex`] +
+/// [`dbscan_with`] instead of materializing the O(n²) matrices — same
+/// labels bit for bit (`similarity::tests::lean_neighbors_match_dense_matrix`
+/// pins the oracle, the dbscan expansion is shared code), but memory and
+/// time scale with actual support overlap, which is what lets the
+/// M-periodic recluster run at 10⁵ clients.
 pub fn recluster_labels(freqs: &[FrequencyVector], params: DbscanParams) -> Vec<isize> {
-    let conn = connectivity_matrix(freqs);
-    let dist = distance_matrix(&conn);
-    dbscan(&dist, params)
+    let index = SimilarityIndex::new(freqs);
+    dbscan_with(freqs.len(), params, |i| index.neighbors(i, params.eps))
 }

@@ -41,6 +41,89 @@ pub fn distance_matrix(connectivity: &[Vec<f64>]) -> Vec<Vec<f64>> {
     d
 }
 
+/// Sparse neighborhood oracle over the eq.-(3) geometry (fleet-scale
+/// refit, DESIGN.md §12): an inverted index from feature (parameter
+/// index) to the clients whose request history touches it.
+///
+/// The dense pipeline materializes the full n×n connectivity and distance
+/// matrices — O(n²) memory and O(n² · nnz) time, the structure that caps
+/// reclustering at a few hundred clients. But two clients are at distance
+/// < 1.0 **only if** their frequency supports intersect (both dot
+/// products are zero otherwise and the distance clamps to exactly 1.0),
+/// so for any `eps < 1.0` the neighbor set of `i` lives inside the union
+/// of the posting lists of `i`'s own support. [`Self::neighbors`]
+/// enumerates those candidates and evaluates the *same* f64 expression
+/// per pair as [`connectivity_matrix`] + [`distance_matrix`] — both dot
+/// directions, the same operand order, the same clamp — so the labels
+/// that come out of [`crate::clustering::dbscan_with`] are bit-identical
+/// to the matrix path (pinned in `lean_neighbors_match_dense_matrix`).
+/// `eps >= 1.0` degenerates to everything-is-a-neighbor and is answered
+/// without touching the index.
+pub struct SimilarityIndex<'a> {
+    freqs: &'a [FrequencyVector],
+    self_dots: Vec<f64>,
+    /// feature -> ascending client ids whose support contains it
+    postings: std::collections::HashMap<u32, Vec<u32>>,
+}
+
+impl<'a> SimilarityIndex<'a> {
+    /// Build in O(total support) — no pairwise work.
+    pub fn new(freqs: &'a [FrequencyVector]) -> Self {
+        let self_dots: Vec<f64> = freqs.iter().map(|f| f.self_dot()).collect();
+        let mut postings: std::collections::HashMap<u32, Vec<u32>> =
+            std::collections::HashMap::new();
+        for (i, f) in freqs.iter().enumerate() {
+            for (j, _) in f.iter() {
+                postings.entry(j).or_default().push(i as u32);
+            }
+        }
+        SimilarityIndex { freqs, self_dots, postings }
+    }
+
+    /// The symmetrized eq.-(3) distance of the dense pipeline, term for
+    /// term: `connectivity_matrix` computes c[i][j] with `freqs[i]` as
+    /// the dot receiver and c[j][i] with `freqs[j]` — replicated exactly
+    /// so f64 summation order (and thus every last bit) matches.
+    fn distance(&self, i: usize, j: usize) -> f64 {
+        let c = |a: usize, b: usize| -> f64 {
+            if self.self_dots[a] <= 0.0 {
+                if a == b {
+                    1.0
+                } else {
+                    0.0
+                }
+            } else if a == b {
+                1.0
+            } else {
+                self.freqs[a].dot(&self.freqs[b]) / self.self_dots[a]
+            }
+        };
+        let s = 0.5 * (c(i, j) + c(j, i));
+        (1.0 - s).clamp(0.0, 1.0)
+    }
+
+    /// All points within `eps` of `i` (including `i`), ascending — the
+    /// oracle [`crate::clustering::dbscan_with`] expects. Cost is
+    /// O(candidate support) per call, never O(n).
+    pub fn neighbors(&self, i: usize, eps: f64) -> Vec<usize> {
+        let n = self.freqs.len();
+        if eps >= 1.0 {
+            // every pairwise distance clamps to <= 1.0
+            return (0..n).collect();
+        }
+        let mut cand: Vec<usize> = vec![i];
+        for (j, _) in self.freqs[i].iter() {
+            if let Some(post) = self.postings.get(&j) {
+                cand.extend(post.iter().map(|&c| c as usize));
+            }
+        }
+        cand.sort_unstable();
+        cand.dedup();
+        cand.retain(|&j| self.distance(i, j) <= eps);
+        cand
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +179,39 @@ mod tests {
         let m = connectivity_matrix(&[a, b]);
         assert_eq!(m[0][0], 1.0);
         assert_eq!(m[0][1], 0.0);
+    }
+
+    /// Randomized histories (overlapping supports, empty clients,
+    /// heavy-hitter features): the posting-list oracle must return
+    /// exactly the dense matrix's neighbor rows, bit for bit.
+    #[test]
+    fn lean_neighbors_match_dense_matrix() {
+        let mut rng = crate::util::rng::Rng::new(0xC1u64);
+        for trial in 0..20 {
+            let n = 2 + rng.below(30);
+            let freqs: Vec<FrequencyVector> = (0..n)
+                .map(|_| {
+                    let mut f = FrequencyVector::new();
+                    for _ in 0..rng.below(6) {
+                        let idx: Vec<u32> =
+                            (0..1 + rng.below(8)).map(|_| rng.below(40) as u32).collect();
+                        f.record(&idx);
+                    }
+                    f
+                })
+                .collect();
+            let dist = distance_matrix(&connectivity_matrix(&freqs));
+            let index = SimilarityIndex::new(&freqs);
+            for eps in [0.05, 0.35, 0.8, 1.0, 1.5] {
+                for i in 0..n {
+                    let dense: Vec<usize> = (0..n).filter(|&j| dist[i][j] <= eps).collect();
+                    assert_eq!(
+                        index.neighbors(i, eps),
+                        dense,
+                        "trial {trial}, eps {eps}, point {i}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -69,6 +69,39 @@ impl Downlink {
     }
 }
 
+/// How the in-process simulator stores per-client state (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClientStore {
+    /// every client fully materialized — three d-sized vectors each
+    /// (params + Adam moments), ~470 KB/client for the MNIST MLP. The
+    /// default; fine up to a few thousand clients.
+    #[default]
+    Dense,
+    /// fleet-scale compact slots ([`crate::fl::CompactPool`]): a client
+    /// holds zero model floats until the first round it is scheduled,
+    /// so 10⁴–10⁶ mostly-idle clients fit in memory. Bit-for-bit
+    /// identical trajectories (rust/src/fl/compact.rs parity pins);
+    /// flat topology only.
+    Compact,
+}
+
+impl ClientStore {
+    pub fn name(self) -> &'static str {
+        match self {
+            ClientStore::Dense => "dense",
+            ClientStore::Compact => "compact",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ClientStore> {
+        match s {
+            "dense" => Some(ClientStore::Dense),
+            "compact" => Some(ClientStore::Compact),
+            _ => None,
+        }
+    }
+}
+
 /// What "accuracy averaged over all users" (Fig. 3/5) evaluates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EvalMode {
@@ -186,6 +219,11 @@ pub struct ExperimentConfig {
     /// sharded topology this is **per shard** (auto divides the cores by
     /// the shard count, so `0` fills the machine exactly once).
     pub parallel: usize,
+    /// per-client state storage in the in-process simulator: `dense`
+    /// (every client fully materialized, the default) | `compact`
+    /// (fleet-scale slots — only ever-scheduled clients hold model
+    /// floats; flat topology only). Never changes results, only memory.
+    pub client_store: ClientStore,
     pub data_dir: String,
     pub artifacts_dir: String,
 }
@@ -233,6 +271,7 @@ impl ExperimentConfig {
             test_n: 1000,
             eval_every: 5,
             parallel: 0,
+            client_store: ClientStore::Dense,
             data_dir: "data".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -287,6 +326,7 @@ impl ExperimentConfig {
             test_n: 600,
             eval_every: 5,
             parallel: 0,
+            client_store: ClientStore::Dense,
             data_dir: "data".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -377,6 +417,12 @@ impl ExperimentConfig {
         if !matches!(self.server_opt.as_str(), "adam" | "sgd") {
             bail!("server_opt must be adam or sgd");
         }
+        if self.client_store == ClientStore::Compact && self.topology.n_shards() > 1 {
+            // shard pools own disjoint client slices with their own
+            // dense arrays; the compact slot store is a flat-simulator
+            // representation (DESIGN.md §12)
+            bail!("client_store=compact requires the flat topology");
+        }
         if self.downlink == Downlink::Delta
             && self.payload == Payload::Grad
             && self.server_opt != "sgd"
@@ -460,6 +506,7 @@ impl ExperimentConfig {
             ("test_n", Json::Num(self.test_n as f64)),
             ("eval_every", Json::Num(self.eval_every as f64)),
             ("parallel", Json::Num(self.parallel as f64)),
+            ("client_store", Json::Str(self.client_store.name().into())),
             ("data_dir", Json::Str(self.data_dir.clone())),
             ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
         ])
@@ -581,6 +628,10 @@ impl ExperimentConfig {
                 other => bail!("unknown merge_rule {other:?}"),
             };
         }
+        if let Some(s) = j.get("client_store").and_then(Json::as_str) {
+            c.client_store =
+                ClientStore::parse(s).with_context(|| format!("unknown client_store {s:?}"))?;
+        }
         if let Some(s) = j.get("data_dir").and_then(Json::as_str) {
             c.data_dir = s.to_string();
         }
@@ -667,6 +718,16 @@ mod tests {
         assert!(ExperimentConfig::mnist_paper().reshard, "re-sharding defaults on");
         // the default stays flat
         assert_eq!(ExperimentConfig::mnist_paper().topology, Topology::Flat);
+        assert_eq!(
+            ExperimentConfig::mnist_paper().client_store,
+            ClientStore::Dense,
+            "the client store defaults dense"
+        );
+        // compact round-trips (on a flat config — compact is flat-only)
+        let mut cfg = ExperimentConfig::mnist_paper();
+        cfg.client_store = ClientStore::Compact;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.client_store, ClientStore::Compact);
     }
 
     #[test]
@@ -743,6 +804,12 @@ mod tests {
         assert!(c.validate().is_err());
         c.topology = Topology::Sharded { shards: 1, root_merge: MergeRule::Min };
         assert!(c.validate().is_ok(), "a single shard never replicates the runtime");
+        // the compact client store is a flat-simulator representation
+        let mut c = ExperimentConfig::mnist_paper();
+        c.client_store = ClientStore::Compact;
+        assert!(c.validate().is_ok());
+        c.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -764,6 +831,10 @@ mod tests {
         assert_eq!(ExperimentConfig::from_json(&j).unwrap().downlink, Downlink::Delta);
         let j = Json::parse(r#"{"model": "mnist", "root_merge": "avg"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"model": "mnist", "client_store": "sparse"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"model": "mnist", "client_store": "compact"}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().client_store, ClientStore::Compact);
         let j = Json::parse(r#"{"model": "mnist", "shards": 2}"#).unwrap();
         assert_eq!(
             ExperimentConfig::from_json(&j).unwrap().topology,

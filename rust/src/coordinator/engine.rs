@@ -379,6 +379,9 @@ pub struct RoundEngine {
     delta_ring: VecDeque<Vec<u32>>,
     /// scratch for per-base union accumulation in plan construction
     union_scratch: Vec<u32>,
+    /// reused per-round buffer for the scheduler's fleet-state view
+    /// (zero steady-state allocations at fleet scale)
+    states_scratch: Vec<crate::coordinator::fleet::Membership>,
 }
 
 impl RoundEngine {
@@ -404,6 +407,7 @@ impl RoundEngine {
             fleet: Fleet::new(cfg.n_clients),
             delta_ring: VecDeque::new(),
             union_scratch: Vec::new(),
+            states_scratch: Vec::new(),
         }
     }
 
@@ -689,14 +693,14 @@ impl RoundEngine {
         // the first m reports and the ε stragglers are cancelled.
         let m = self.cfg.cohort_size();
         let m_sched = self.cfg.scheduled_cohort_size();
-        let states = self.fleet.states();
+        self.fleet.states_into(&mut self.states_scratch);
         let cohort = self.scheduler.select(&ScheduleCtx {
             round: self.ps.round(),
             n,
             m: m_sched,
             ps: &self.ps,
             since_polled: &self.since_polled,
-            fleet: &states,
+            fleet: &self.states_scratch,
         });
         ensure!(
             cohort.len() == m_sched
@@ -1668,7 +1672,7 @@ mod tests {
         let cfg = smoke_cfg();
         let pc = PhaseCfg::from_config(&cfg);
         let ds = synthetic_mnist(0, 64);
-        let mut client = Client::new(0, ds, vec![0.0; pc.d], 1);
+        let mut client = Client::new(0, crate::data::Shard::from_owned(ds), vec![0.0; pc.d], 1);
         let mut backend = crate::backend::RustBackend::new(cfg.r, cfg.lr_client, cfg.seed);
         let mut memory = vec![0.0f32; pc.d];
         memory[5] = 2.5;

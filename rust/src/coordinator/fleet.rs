@@ -198,6 +198,14 @@ impl Fleet {
         self.members.iter().map(|m| m.state).collect()
     }
 
+    /// [`Self::states`] into a caller-owned buffer — the engine reuses
+    /// one scratch vector across rounds so the per-round scheduler view
+    /// costs zero allocations even at fleet scale.
+    pub fn states_into(&self, out: &mut Vec<Membership>) {
+        out.clear();
+        out.extend(self.members.iter().map(|m| m.state));
+    }
+
     /// Clients not written off (Active, Suspect, or Rejoining).
     pub fn n_live(&self) -> usize {
         self.members.iter().filter(|m| m.state.is_live()).count()

@@ -101,16 +101,23 @@ impl ParameterServer {
         let pos = &self.cohort_map;
         let disjoint = self.cfg.strategy == StrategyKind::RageK;
         let mut out: Vec<Vec<u32>> = vec![Vec::new(); cohort.len()];
-        for cluster in 0..self.clusters.n_clusters() {
-            let members: Vec<usize> = self
-                .clusters
-                .members_of(cluster)
-                .iter()
-                .copied()
-                .filter(|&m| pos.slot(m) != usize::MAX)
-                .collect();
-            if members.is_empty() {
-                continue; // cluster sits this round; its ages keep growing
+        // Group the *cohort* by cluster — O(m log m) — instead of
+        // scanning every cluster for cohort members (O(n_clusters) per
+        // round, the fleet-scale killer at 10⁵ singleton clusters).
+        // Clusters come out ascending, members within a cluster ascending
+        // (the cohort is sorted) — exactly the order the old
+        // cluster-major scan produced, so selections are bit-identical.
+        let mut grouped: Vec<(usize, usize)> =
+            cohort.iter().map(|&c| (self.clusters.cluster_of(c), c)).collect();
+        grouped.sort_unstable();
+        let mut g = 0;
+        let mut members: Vec<usize> = Vec::new();
+        while g < grouped.len() {
+            let cluster = grouped[g].0;
+            members.clear();
+            while g < grouped.len() && grouped[g].0 == cluster {
+                members.push(grouped[g].1);
+                g += 1;
             }
             let age = self.clusters.age_of_cluster(cluster);
             if disjoint && members.len() > 1 {
@@ -143,14 +150,39 @@ impl ParameterServer {
             f.record(req);
         }
         if self.cfg.strategy.uses_age() {
-            for cluster in 0..self.clusters.n_clusters() {
-                let mut union: Vec<u32> = Vec::new();
-                for &m in self.clusters.members_of(cluster) {
-                    union.extend_from_slice(&requested[m]);
+            // Union-building is driven by the round's *uploaders* (<= the
+            // cohort size), not by a members_of scan over every cluster —
+            // a cluster with no uploader contributes an empty union, and
+            // its eq. (2) sweep is just the O(1) epoch bump below. Same
+            // unions, same update order (ascending cluster id) as the old
+            // cluster-major loop.
+            let mut touched: Vec<(usize, usize)> = requested
+                .iter()
+                .enumerate()
+                .filter(|(_, req)| !req.is_empty())
+                .map(|(i, _)| (self.clusters.cluster_of(i), i))
+                .collect();
+            touched.sort_unstable();
+            let mut union: Vec<u32> = Vec::new();
+            let mut bumped = 0; // clusters below this already updated
+            let mut t = 0;
+            while t < touched.len() {
+                let cluster = touched[t].0;
+                for c in bumped..cluster {
+                    self.clusters.update_ages(c, &[]);
+                }
+                union.clear();
+                while t < touched.len() && touched[t].0 == cluster {
+                    union.extend_from_slice(&requested[touched[t].1]);
+                    t += 1;
                 }
                 union.sort_unstable();
                 union.dedup();
                 self.clusters.update_ages(cluster, &union);
+                bumped = cluster + 1;
+            }
+            for c in bumped..self.clusters.n_clusters() {
+                self.clusters.update_ages(c, &[]);
             }
         }
         self.round += 1;

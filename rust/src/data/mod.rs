@@ -57,6 +57,109 @@ impl Dataset {
     }
 }
 
+/// A client's view of a corpus: an `Arc`-shared [`Dataset`] plus an
+/// optional row-index view. At fleet scale (PR 9) every client holds a
+/// `Shard` over the **same** corpus allocation — per-client cost is the
+/// index list (4 bytes/row), not a row copy — while small tests can wrap
+/// an owned `Dataset` via [`Shard::from_owned`]. Row order follows the
+/// index list exactly, matching what [`Dataset::subset`] would have
+/// copied, so training numerics are identical to the old owned-shard
+/// path.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    data: std::sync::Arc<Dataset>,
+    /// `None` = the whole dataset is the shard
+    idx: Option<Vec<u32>>,
+}
+
+impl Shard {
+    /// The whole corpus as one shard (no index indirection).
+    pub fn whole(data: std::sync::Arc<Dataset>) -> Self {
+        Shard { data, idx: None }
+    }
+
+    /// A row-index view over a shared corpus.
+    pub fn view(data: std::sync::Arc<Dataset>, idx: Vec<u32>) -> Self {
+        debug_assert!(idx.iter().all(|&i| (i as usize) < data.len()));
+        Shard { data, idx: Some(idx) }
+    }
+
+    /// Wrap an owned dataset (tests, TCP workers holding one shard).
+    pub fn from_owned(ds: Dataset) -> Self {
+        Shard::whole(std::sync::Arc::new(ds))
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.idx {
+            Some(idx) => idx.len(),
+            None => self.data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.dim
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.data.num_classes
+    }
+
+    /// Map a shard-local row position to the corpus row index.
+    fn corpus_row(&self, i: usize) -> usize {
+        match &self.idx {
+            Some(idx) => idx[i] as usize,
+            None => i,
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.data.sample(self.corpus_row(i))
+    }
+
+    pub fn label(&self, i: usize) -> u8 {
+        self.data.y[self.corpus_row(i)]
+    }
+
+    /// Sorted distinct labels present in this shard.
+    pub fn label_set(&self) -> Vec<u8> {
+        let mut set: Vec<u8> = (0..self.len()).map(|i| self.label(i)).collect();
+        set.sort_unstable();
+        set.dedup();
+        set
+    }
+
+    /// Gather shard-local row positions into contiguous (x, y) buffers
+    /// for the backend call (the `Shard` face of [`gather_batch`]).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.dim());
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.label(i) as i32);
+        }
+        (x, y)
+    }
+}
+
+/// Partition a shared corpus into per-client [`Shard`] views — the
+/// fleet-scale replacement for mapping [`partition::partition`] through
+/// [`Dataset::subset`]: one corpus allocation, n index views over it.
+pub fn partition_shards(
+    data: &std::sync::Arc<Dataset>,
+    n_clients: usize,
+    scheme: &partition::Scheme,
+    seed: u64,
+) -> Vec<Shard> {
+    partition::partition(data, n_clients, scheme, seed)
+        .into_iter()
+        .map(|idx| Shard::view(data.clone(), idx.into_iter().map(|i| i as u32).collect()))
+        .collect()
+}
+
 /// Cycling mini-batch iterator with per-epoch reshuffling.
 #[derive(Debug)]
 pub struct BatchIter {
@@ -197,5 +300,52 @@ mod tests {
         let (x, y) = gather_batch(&d, &[1, 0]);
         assert_eq!(x, vec![4.0, 5.0, 6.0, 7.0, 0.0, 1.0, 2.0, 3.0]);
         assert_eq!(y, vec![1, 0]);
+    }
+
+    /// A `Shard` view must read bit-for-bit what an owned `subset` copy
+    /// would have — same rows, same order, same gather layout.
+    #[test]
+    fn shard_view_matches_owned_subset() {
+        let d = std::sync::Arc::new(tiny());
+        let owned = d.subset(&[2, 0]);
+        let view = Shard::view(d.clone(), vec![2, 0]);
+        assert_eq!(view.len(), owned.len());
+        assert_eq!(view.dim(), owned.dim);
+        assert_eq!(view.num_classes(), owned.num_classes);
+        for i in 0..owned.len() {
+            assert_eq!(view.row(i), owned.sample(i));
+            assert_eq!(view.label(i), owned.y[i]);
+        }
+        let (vx, vy) = view.gather(&[1, 0, 1]);
+        let (ox, oy) = gather_batch(&owned, &[1, 0, 1]);
+        assert_eq!(vx, ox);
+        assert_eq!(vy, oy);
+        assert_eq!(view.label_set(), vec![0, 2]);
+    }
+
+    #[test]
+    fn whole_shard_passthrough() {
+        let d = std::sync::Arc::new(tiny());
+        let s = Shard::whole(d.clone());
+        assert_eq!(s.len(), 3);
+        for i in 0..3 {
+            assert_eq!(s.row(i), d.sample(i));
+        }
+        assert_eq!(s.label_set(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn partition_shards_cover_like_subsets() {
+        let data = std::sync::Arc::new(synth::synthetic_mnist(0, 120));
+        let scheme = partition::Scheme::Iid;
+        let shards = partition_shards(&data, 4, &scheme, 7);
+        let parts = partition::partition(&data, 4, &scheme, 7);
+        assert_eq!(shards.len(), 4);
+        for (s, p) in shards.iter().zip(&parts) {
+            assert_eq!(s.len(), p.len());
+            for (i, &row) in p.iter().enumerate() {
+                assert_eq!(s.row(i), data.sample(row));
+            }
+        }
     }
 }

@@ -1756,7 +1756,8 @@ fn run_worker_session(
     // all times (sparse frames patch it in place); the dense downlink
     // decodes each broadcast into the (initially empty) reused vector
     let mut params: Vec<f32> = if delta_down { init_params.clone() } else { Vec::new() };
-    let mut client = Client::new(id, train.subset(&shards[id]), init_params, cfg.seed);
+    let shard = crate::data::Shard::from_owned(train.subset(&shards[id]));
+    let mut client = Client::new(id, shard, init_params, cfg.seed);
     let delta = cfg.payload == Payload::Delta;
     let mut memory = if delta { vec![0.0f32; cfg.d()] } else { Vec::new() };
     // generation ledger (DESIGN.md §9): which broadcast generation the

@@ -8,6 +8,7 @@
 
 pub mod client;
 pub mod codec;
+pub mod compact;
 pub mod distributed;
 pub mod metrics;
 pub mod pool;
@@ -17,6 +18,7 @@ pub mod transport;
 
 pub use client::Client;
 pub use codec::Codec;
+pub use compact::CompactPool;
 pub use metrics::{CommStats, History, RoundRecord};
 pub use pool::InProcessPool;
 pub use trainer::{Trainer, TrainReport};

@@ -26,9 +26,9 @@ use crate::coordinator::engine::{
     client_train_phase, client_update_phase, BroadcastPlan, ClientPool, ClientReport, CohortMap,
     PhaseCfg,
 };
-use crate::fl::codec::params_digest;
-use crate::data::Dataset;
+use crate::data::Shard;
 use crate::fl::client::Client;
+use crate::fl::codec::params_digest;
 use crate::sparse::SparseVec;
 use anyhow::{ensure, Context, Result};
 
@@ -78,7 +78,7 @@ pub struct InProcessPool<L = BackendLanes> {
 /// the cores *divided by the shard count* — `parallel = 0` then fills the
 /// machine exactly once instead of `shards ×` oversubscribing it (an
 /// explicit `parallel` stays per-shard, as documented on the knob).
-fn lane_count(cfg: &ExperimentConfig, n_clients: usize) -> usize {
+pub(crate) fn lane_count(cfg: &ExperimentConfig, n_clients: usize) -> usize {
     let want = if cfg.parallel == 0 {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         (cores / cfg.topology.n_shards()).max(1)
@@ -92,7 +92,7 @@ impl InProcessPool {
     /// Build the pool from one data shard per client. Returns the pool
     /// and the deterministic initial parameters every client started
     /// from (the engine's initial global model).
-    pub fn new(cfg: &ExperimentConfig, shards: Vec<Dataset>) -> Result<(Self, Vec<f32>)> {
+    pub fn new(cfg: &ExperimentConfig, shards: Vec<Shard>) -> Result<(Self, Vec<f32>)> {
         let lanes = make_backend_lanes(cfg, lane_count(cfg, cfg.n_clients))
             .context("creating backend lanes")?;
         let ids: Vec<usize> = (0..cfg.n_clients).collect();
@@ -108,7 +108,7 @@ impl InProcessPool<Vec<SendBackend>> {
     /// `cfg` is the shard-local config (`n_clients` = `ids.len()`).
     pub fn new_send(
         cfg: &ExperimentConfig,
-        shards: Vec<Dataset>,
+        shards: Vec<Shard>,
         ids: &[usize],
     ) -> Result<(Self, Vec<f32>)> {
         let lanes = make_send_lanes(cfg, lane_count(cfg, cfg.n_clients))
@@ -120,7 +120,7 @@ impl InProcessPool<Vec<SendBackend>> {
 impl<L: Lanes> InProcessPool<L> {
     fn with_lanes(
         cfg: &ExperimentConfig,
-        shards: Vec<Dataset>,
+        shards: Vec<Shard>,
         ids: &[usize],
         mut lanes: L,
     ) -> Result<(Self, Vec<f32>)> {
@@ -381,7 +381,29 @@ where
         .enumerate()
         .map(|(p, (_i, (c, slot)))| (p, c, slot))
         .collect();
+    lane_map(&mut work, lanes, f)
+}
 
+/// The lane fan-out itself, shared with [`crate::fl::compact::CompactPool`]
+/// (which assembles its work list from materialized slots instead of a
+/// dense client array): chunk the work items across the backend lanes on
+/// scoped threads, collecting results in work order. With a single lane
+/// (or a non-replicable serial backend) the work runs inline on the
+/// calling thread; numerics are identical either way.
+pub(crate) fn lane_map<T, F, L>(
+    work: &mut [(usize, &mut Client, Option<&mut Vec<f32>>)],
+    lanes: &mut L,
+    f: F,
+) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize, &mut Client, &mut dyn Backend, Option<&mut Vec<f32>>) -> Result<T> + Sync,
+    L: Lanes,
+{
+    let m = work.len();
+    if m == 0 {
+        return Ok(Vec::new());
+    }
     if let Some(lanes) = lanes.parallel() {
         let n_lanes = lanes.len().min(m).max(1);
         if n_lanes > 1 {
@@ -509,15 +531,13 @@ mod tests {
     /// cohort: the pool must answer from the right cached reports.
     #[test]
     fn exchange_accepts_survivor_subset_of_trained_cohort() {
-        use crate::data::{load_dataset, partition::partition};
+        use crate::data::{load_dataset, partition_shards};
         let mut cfg = ExperimentConfig::mnist_smoke();
         cfg.participation = 1.0;
         let (train, _) =
             load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
-        let shards: Vec<Dataset> = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed)
-            .into_iter()
-            .map(|idx| train.subset(&idx))
-            .collect();
+        let train = std::sync::Arc::new(train);
+        let shards = partition_shards(&train, cfg.n_clients, &cfg.partition, cfg.seed);
         let (mut pool, init) = InProcessPool::new(&cfg, shards).unwrap();
         let full: Vec<usize> = (0..cfg.n_clients).collect();
         let reports = pool.train_and_report(&init, &full).unwrap();
@@ -541,15 +561,13 @@ mod tests {
     /// state moves), and the exchange runs over the winners alone.
     #[test]
     fn commit_quota_cancels_trailing_members_after_they_train() {
-        use crate::data::{load_dataset, partition::partition};
+        use crate::data::{load_dataset, partition_shards};
         let mut cfg = ExperimentConfig::mnist_smoke();
         cfg.participation = 1.0;
         let (train, _) =
             load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
-        let shards: Vec<Dataset> = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed)
-            .into_iter()
-            .map(|idx| train.subset(&idx))
-            .collect();
+        let train = std::sync::Arc::new(train);
+        let shards = partition_shards(&train, cfg.n_clients, &cfg.partition, cfg.seed);
         let (mut pool, init) = InProcessPool::new(&cfg, shards).unwrap();
         let before: Vec<Vec<f32>> =
             (0..cfg.n_clients).map(|i| pool.client_params(i).to_vec()).collect();

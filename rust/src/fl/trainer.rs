@@ -2,26 +2,29 @@
 //! protocol to the parallel in-process pools, plus the
 //! evaluation/reporting shell the examples and benches consume.
 //!
-//! The `topology` knob decides the driver: a flat run binds one
-//! [`RoundEngine`] to one [`InProcessPool`]; a sharded run builds one
-//! `Send` pool per shard ([`SendPool`]) and drives them through the
-//! [`ShardedEngine`] root aggregator, shard rounds in parallel on scoped
-//! threads (DESIGN.md §7). All protocol logic lives in the engines and is
-//! shared bit-for-bit with the TCP deployment (`fl::distributed`); see
-//! `rust/tests/parity.rs` — including the `Flat ≡ Sharded { shards: 1 }`
-//! pin.
+//! The `topology` and `client_store` knobs decide the driver: a flat run
+//! binds one [`RoundEngine`] to one [`InProcessPool`] (or, under
+//! `client_store = compact`, a fleet-scale [`CompactPool`] — DESIGN.md
+//! §12); a sharded run builds one `Send` pool per shard ([`SendPool`])
+//! and drives them through the [`ShardedEngine`] root aggregator, shard
+//! rounds in parallel on scoped threads (DESIGN.md §7). All protocol
+//! logic lives in the engines and is shared bit-for-bit with the TCP
+//! deployment (`fl::distributed`); see `rust/tests/parity.rs` —
+//! including the `Flat ≡ Sharded { shards: 1 }` pin.
 
 use crate::backend::Backend;
-use crate::config::{BackendKind, EvalMode, ExperimentConfig};
+use crate::config::{BackendKind, ClientStore, EvalMode, ExperimentConfig};
 use crate::coordinator::engine::{eval_dataset, RoundEngine};
 use crate::coordinator::server::ParameterServer;
 use crate::coordinator::topology::{client_shards, locate, ShardedEngine, Topology};
-use crate::data::{load_dataset, partition::partition, Dataset};
+use crate::data::{load_dataset, partition_shards, Dataset, Shard};
+use crate::fl::compact::CompactPool;
 use crate::fl::metrics::{CommStats, History, RoundRecord};
 use crate::fl::pool::{InProcessPool, SendPool};
 use crate::util::timer::Profile;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Everything a finished run reports (the examples/benches render these
 /// into the paper's figures).
@@ -43,6 +46,7 @@ pub struct TrainReport {
 /// Which engine/pool pair drives the rounds.
 enum Driver {
     Flat { engine: RoundEngine, pool: InProcessPool },
+    Compact { engine: RoundEngine, pool: CompactPool },
     Sharded { engine: ShardedEngine, pools: Vec<SendPool> },
 }
 
@@ -55,16 +59,14 @@ pub fn build_sharded_inprocess(
 ) -> Result<(ShardedEngine, Vec<SendPool>)> {
     cfg.validate()?;
     let (train, _) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
-    let shards: Vec<Dataset> = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed)
-        .into_iter()
-        .map(|idx| train.subset(&idx))
-        .collect();
+    let train = Arc::new(train);
+    let shards = partition_shards(&train, cfg.n_clients, &cfg.partition, cfg.seed);
     build_sharded_pools(cfg, shards)
 }
 
 fn build_sharded_pools(
     cfg: &ExperimentConfig,
-    shards: Vec<Dataset>,
+    shards: Vec<Shard>,
 ) -> Result<(ShardedEngine, Vec<SendPool>)> {
     if cfg.backend != BackendKind::Rust {
         bail!(
@@ -74,7 +76,7 @@ fn build_sharded_pools(
     }
     let n_shards = cfg.topology.n_shards();
     let slices = client_shards(cfg.n_clients, n_shards);
-    let mut by_shard: Vec<Vec<Dataset>> = (0..n_shards).map(|_| Vec::new()).collect();
+    let mut by_shard: Vec<Vec<Shard>> = (0..n_shards).map(|_| Vec::new()).collect();
     for (id, ds) in shards.into_iter().enumerate() {
         by_shard[locate(cfg.n_clients, n_shards, id).0].push(ds);
     }
@@ -108,18 +110,22 @@ impl Trainer {
         cfg.validate()?;
         let (train, test) =
             load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
-        let shards: Vec<Dataset> = partition(&train, cfg.n_clients, &cfg.partition, cfg.seed)
-            .into_iter()
-            .map(|idx| train.subset(&idx))
-            .collect();
+        let train = Arc::new(train);
+        let shards = partition_shards(&train, cfg.n_clients, &cfg.partition, cfg.seed);
 
-        let driver = match cfg.topology {
-            Topology::Flat => {
+        let driver = match (cfg.topology, cfg.client_store) {
+            (Topology::Flat, ClientStore::Dense) => {
                 let (pool, init) =
                     InProcessPool::new(cfg, shards).context("creating client pool")?;
                 Driver::Flat { engine: RoundEngine::new(cfg, init), pool }
             }
-            Topology::Sharded { .. } => {
+            (Topology::Flat, ClientStore::Compact) => {
+                let (pool, init) =
+                    CompactPool::new(cfg, shards).context("creating compact client pool")?;
+                Driver::Compact { engine: RoundEngine::new(cfg, init), pool }
+            }
+            // validate() rejects compact + sharded
+            (Topology::Sharded { .. }, _) => {
                 let (engine, pools) = build_sharded_pools(cfg, shards)?;
                 Driver::Sharded { engine, pools }
             }
@@ -130,6 +136,12 @@ impl Trainer {
             Driver::Flat { pool, .. } => {
                 for c in pool.clients() {
                     personal_test[c.id] = test.indices_with_labels(&c.label_set());
+                }
+            }
+            Driver::Compact { pool, .. } => {
+                // answered from the shard views — no client materializes
+                for (c, slot) in personal_test.iter_mut().enumerate() {
+                    *slot = test.indices_with_labels(&pool.label_set(c));
                 }
             }
             Driver::Sharded { pools, .. } => {
@@ -160,7 +172,7 @@ impl Trainer {
     /// there.
     pub fn engine(&self) -> &RoundEngine {
         match &self.driver {
-            Driver::Flat { engine, .. } => engine,
+            Driver::Flat { engine, .. } | Driver::Compact { engine, .. } => engine,
             Driver::Sharded { .. } => {
                 panic!("Trainer::engine() is flat-topology only; use Trainer::sharded()")
             }
@@ -170,31 +182,40 @@ impl Trainer {
     /// The sharded engine (None under the flat topology).
     pub fn sharded(&self) -> Option<&ShardedEngine> {
         match &self.driver {
-            Driver::Flat { .. } => None,
+            Driver::Flat { .. } | Driver::Compact { .. } => None,
             Driver::Sharded { engine, .. } => Some(engine),
         }
     }
 
-    /// The flat in-process pool. Panics under a sharded topology — use
-    /// [`Self::client_params`] for per-client state there.
+    /// The flat **dense** in-process pool. Panics under a sharded
+    /// topology or the compact client store — use
+    /// [`Self::client_params`] / [`Self::compact_pool`] there.
     pub fn pool(&self) -> &InProcessPool {
         match &self.driver {
             Driver::Flat { pool, .. } => pool,
-            Driver::Sharded { .. } => {
-                panic!("Trainer::pool() is flat-topology only; use Trainer::client_params()")
+            Driver::Compact { .. } | Driver::Sharded { .. } => {
+                panic!("Trainer::pool() is dense-flat only; use Trainer::client_params()")
             }
         }
     }
 
-    /// Mutable access to the flat in-process pool (chaos harnesses,
-    /// hand-off tests). Panics under a sharded topology like
-    /// [`Self::pool`].
+    /// Mutable access to the flat dense pool (chaos harnesses, hand-off
+    /// tests). Panics like [`Self::pool`] otherwise.
     pub fn pool_mut(&mut self) -> &mut InProcessPool {
         match &mut self.driver {
             Driver::Flat { pool, .. } => pool,
-            Driver::Sharded { .. } => {
-                panic!("Trainer::pool_mut() is flat-topology only")
+            Driver::Compact { .. } | Driver::Sharded { .. } => {
+                panic!("Trainer::pool_mut() is dense-flat only")
             }
+        }
+    }
+
+    /// The compact pool when `client_store = compact` (None otherwise) —
+    /// memory introspection for the fleet-scale bench.
+    pub fn compact_pool(&self) -> Option<&CompactPool> {
+        match &self.driver {
+            Driver::Compact { pool, .. } => Some(pool),
+            _ => None,
         }
     }
 
@@ -206,7 +227,9 @@ impl Trainer {
 
     pub fn global_params(&self) -> &[f32] {
         match &self.driver {
-            Driver::Flat { engine, .. } => engine.global_params(),
+            Driver::Flat { engine, .. } | Driver::Compact { engine, .. } => {
+                engine.global_params()
+            }
             Driver::Sharded { engine, .. } => engine.global_params(),
         }
     }
@@ -216,6 +239,7 @@ impl Trainer {
     pub fn client_params(&self, i: usize) -> &[f32] {
         match &self.driver {
             Driver::Flat { pool, .. } => pool.client_params(i),
+            Driver::Compact { pool, .. } => pool.client_params(i),
             Driver::Sharded { engine, pools, .. } => {
                 let (shard, local) = locate(self.cfg.n_clients, engine.n_shards(), i);
                 pools[shard].client_params(local)
@@ -227,7 +251,7 @@ impl Trainer {
     /// sharded topology — DESIGN.md §7).
     pub fn comm(&self) -> CommStats {
         match &self.driver {
-            Driver::Flat { engine, .. } => engine.comm(),
+            Driver::Flat { engine, .. } | Driver::Compact { engine, .. } => engine.comm(),
             Driver::Sharded { engine, .. } => engine.comm(),
         }
     }
@@ -236,7 +260,9 @@ impl Trainer {
     /// topology.
     pub fn uploaded_log(&self) -> &VecDeque<Vec<Vec<u32>>> {
         match &self.driver {
-            Driver::Flat { engine, .. } => engine.uploaded_log(),
+            Driver::Flat { engine, .. } | Driver::Compact { engine, .. } => {
+                engine.uploaded_log()
+            }
             Driver::Sharded { engine, .. } => engine.uploaded_log(),
         }
     }
@@ -244,21 +270,25 @@ impl Trainer {
     /// Fleet-wide cluster count (sum over shards when sharded).
     pub fn n_clusters(&self) -> usize {
         match &self.driver {
-            Driver::Flat { engine, .. } => engine.ps().clusters().n_clusters(),
+            Driver::Flat { engine, .. } | Driver::Compact { engine, .. } => {
+                engine.ps().clusters().n_clusters()
+            }
             Driver::Sharded { engine, .. } => engine.n_clusters(),
         }
     }
 
     fn cluster_labels(&self) -> Vec<usize> {
         match &self.driver {
-            Driver::Flat { engine, .. } => engine.ps().clusters().labels(),
+            Driver::Flat { engine, .. } | Driver::Compact { engine, .. } => {
+                engine.ps().clusters().labels()
+            }
             Driver::Sharded { engine, .. } => engine.cluster_labels(),
         }
     }
 
     pub fn profile(&self) -> &Profile {
         match &self.driver {
-            Driver::Flat { engine, .. } => engine.profile(),
+            Driver::Flat { engine, .. } | Driver::Compact { engine, .. } => engine.profile(),
             Driver::Sharded { engine, .. } => engine.profile(),
         }
     }
@@ -272,6 +302,7 @@ impl Trainer {
     fn driver_backend(driver: &mut Driver) -> &mut dyn Backend {
         match driver {
             Driver::Flat { pool, .. } => pool.backend_mut(),
+            Driver::Compact { pool, .. } => pool.backend_mut(),
             Driver::Sharded { pools, .. } => pools[0].backend_mut(),
         }
     }
@@ -312,6 +343,7 @@ impl Trainer {
     pub fn run_round(&mut self) -> Result<f32> {
         match &mut self.driver {
             Driver::Flat { engine, pool } => Ok(engine.run_round(pool)?.mean_loss),
+            Driver::Compact { engine, pool } => Ok(engine.run_round(pool)?.mean_loss),
             Driver::Sharded { engine, pools } => Ok(engine.run_round(pools)?.mean_loss),
         }
     }
@@ -329,8 +361,11 @@ impl Trainer {
             // heatmap snapshots (Fig. 2 / Fig. 4) — the fleet-wide eq. (3)
             // matrix only exists on a flat PS
             if self.heatmap_rounds.contains(&round) {
-                if let Driver::Flat { engine, .. } = &self.driver {
-                    heatmaps.push((round, engine.ps().connectivity()));
+                match &self.driver {
+                    Driver::Flat { engine, .. } | Driver::Compact { engine, .. } => {
+                        heatmaps.push((round, engine.ps().connectivity()));
+                    }
+                    Driver::Sharded { .. } => {}
                 }
             }
 
@@ -414,6 +449,31 @@ mod tests {
         // two shard engines, clusters counted fleet-wide
         assert_eq!(report.cluster_labels.len(), cfg.n_clients);
         assert!(report.history.comm.uplink() > 0);
+    }
+
+    /// The `client_store` knob never changes results: a compact-store
+    /// trainer is bit-for-bit a dense-store trainer end to end (losses,
+    /// globals, per-client params, comm accounting).
+    #[test]
+    fn compact_store_matches_dense_trainer() {
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.rounds = 4;
+        cfg.participation = 0.5; // leave fresh slots alive
+        let mut dense = Trainer::from_config(&cfg).unwrap();
+        cfg.client_store = ClientStore::Compact;
+        let mut compact = Trainer::from_config(&cfg).unwrap();
+        assert!(compact.compact_pool().is_some());
+
+        let rd = dense.run().unwrap();
+        let rc = compact.run().unwrap();
+        let ld: Vec<f32> = rd.history.rounds.iter().map(|r| r.train_loss).collect();
+        let lc: Vec<f32> = rc.history.rounds.iter().map(|r| r.train_loss).collect();
+        assert_eq!(ld, lc, "per-round training losses must match exactly");
+        assert_eq!(dense.global_params(), compact.global_params());
+        assert_eq!(rd.history.comm.uplink(), rc.history.comm.uplink());
+        for i in 0..cfg.n_clients {
+            assert_eq!(dense.client_params(i), compact.client_params(i), "client {i} params");
+        }
     }
 
     #[test]

@@ -45,6 +45,7 @@ fn train_spec(cmd: &str, about: &str) -> ArgSpec {
         .opt("reshard", "", "re-partition shards at recluster boundaries: true | false")
         .opt("codec", "", "wire codec: raw | packed | packed-f16 (empty = preset)")
         .opt("downlink", "", "broadcast mode: dense | delta (empty = preset)")
+        .opt("client-store", "", "per-client state storage: dense | compact (empty = preset)")
         .opt("parallel", "", "in-process client lanes (empty = preset, 0 = auto, 1 = serial)")
         .opt("seed", "42", "experiment seed")
         .opt("config", "", "JSON config file (overrides preset)")
@@ -130,6 +131,10 @@ fn build_config(a: &ragek::util::argparse::Args) -> Result<ExperimentConfig> {
     if !a.get("downlink").is_empty() {
         cfg.downlink = ragek::config::Downlink::parse(a.get("downlink"))
             .ok_or_else(|| anyhow::anyhow!("unknown downlink {:?}", a.get("downlink")))?;
+    }
+    if !a.get("client-store").is_empty() {
+        cfg.client_store = ragek::config::ClientStore::parse(a.get("client-store"))
+            .ok_or_else(|| anyhow::anyhow!("unknown client-store {:?}", a.get("client-store")))?;
     }
     cfg.seed = a.get_usize("seed")? as u64;
     cfg.validate()?;

@@ -4,13 +4,43 @@
 //! membership-chaos harness [`FlakyPool`] shared by the integration
 //! tests and `bench_membership`.
 
-use crate::backend::Backend;
+use crate::backend::{Backend, Lanes};
 use crate::config::ExperimentConfig;
 use crate::coordinator::engine::{BroadcastPlan, ClientPool, ClientReport};
+use crate::data::{load_dataset, partition_shards, Shard};
+use crate::fl::compact::CompactPool;
 use crate::fl::pool::InProcessPool;
 use crate::sparse::SparseVec;
 use crate::util::rng::Rng;
 use anyhow::Result;
+use std::sync::Arc;
+
+/// Pools the chaos harness can wrap: a [`ClientPool`] that can also
+/// reset one client's local state to the current global model, mimicking
+/// a worker-process restart before a `Rejoin`.
+pub trait ResyncPool: ClientPool {
+    fn resync_client(&mut self, i: usize, global: &[f32]);
+}
+
+impl<L: Lanes> ResyncPool for InProcessPool<L> {
+    fn resync_client(&mut self, i: usize, global: &[f32]) {
+        InProcessPool::resync_client(self, i, global);
+    }
+}
+
+impl<L: Lanes> ResyncPool for CompactPool<L> {
+    fn resync_client(&mut self, i: usize, global: &[f32]) {
+        CompactPool::resync_client(self, i, global);
+    }
+}
+
+/// The standard data pipeline: the same per-client shard views the
+/// [`crate::fl::trainer::Trainer`] would build.
+fn standard_shards(cfg: &ExperimentConfig) -> Vec<Shard> {
+    let (train, _) = load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
+    let train = Arc::new(train);
+    partition_shards(&train, cfg.n_clients, &cfg.partition, cfg.seed)
+}
 
 /// The round fate chaos deals a scheduled cohort member.
 #[derive(Clone, Copy, PartialEq)]
@@ -23,17 +53,21 @@ enum Fate {
     Fast,
 }
 
-/// A deterministic chaos wrapper over [`InProcessPool`]: scheduled
-/// clients drop with a seeded per-phase probability (mid-round, exactly
-/// like a crashed TCP worker) and re-admit themselves `rejoin_after`
-/// rounds later through [`ClientPool::poll_rejoins`] — the simulator
-/// face of the fleet-membership protocol (DESIGN.md §8). A dropped
-/// client's local state is reset to the current global model on rejoin
-/// ([`InProcessPool::resync_client`]), mimicking a restarted worker
+/// A deterministic chaos wrapper over any [`ResyncPool`] (the dense
+/// [`InProcessPool`] by default, the fleet-scale [`CompactPool`] via
+/// [`FlakyPool::new_compact`]): scheduled clients drop with a seeded
+/// per-phase probability (mid-round, exactly like a crashed TCP worker)
+/// and re-admit themselves `rejoin_after` rounds later through
+/// [`ClientPool::poll_rejoins`] — the simulator face of the
+/// fleet-membership protocol (DESIGN.md §8). A dropped client's local
+/// state is reset to the current global model on rejoin
+/// ([`ResyncPool::resync_client`]), mimicking a restarted worker
 /// process. All chaos is drawn from its own seeded RNG in cohort order,
-/// so a run is bit-for-bit reproducible.
-pub struct FlakyPool {
-    inner: InProcessPool,
+/// so a run is bit-for-bit reproducible — and identical across inner
+/// pool representations, which is exactly what the compact-vs-dense
+/// chaos parity pin below leans on.
+pub struct FlakyPool<P = InProcessPool> {
+    inner: P,
     chaos: Rng,
     /// per-phase drop probability for a scheduled live client
     drop_rate: f32,
@@ -59,7 +93,7 @@ pub struct FlakyPool {
     handshake_stalls: usize,
 }
 
-impl FlakyPool {
+impl FlakyPool<InProcessPool> {
     /// Build over the standard data pipeline (same shards the [`crate::fl::trainer::Trainer`]
     /// would build). Returns the pool and the initial global params.
     pub fn new(
@@ -68,37 +102,53 @@ impl FlakyPool {
         rejoin_after: usize,
         chaos_seed: u64,
     ) -> Result<(Self, Vec<f32>)> {
-        use crate::data::{load_dataset, partition::partition};
-        let (train, _) =
-            load_dataset(cfg.corpus, &cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n);
-        let shards: Vec<crate::data::Dataset> =
-            partition(&train, cfg.n_clients, &cfg.partition, cfg.seed)
-                .into_iter()
-                .map(|idx| train.subset(&idx))
-                .collect();
-        let (inner, init) = InProcessPool::new(cfg, shards)?;
+        let (inner, init) = InProcessPool::new(cfg, standard_shards(cfg))?;
+        Ok((FlakyPool::wrap(cfg, inner, drop_rate, rejoin_after, chaos_seed), init))
+    }
+}
+
+impl FlakyPool<CompactPool> {
+    /// Like [`FlakyPool::new`] but chaos flows through the fleet-scale
+    /// compact client store — drop/stall/rejoin churn exercises the
+    /// materialize/resync/arena lifecycle.
+    pub fn new_compact(
+        cfg: &ExperimentConfig,
+        drop_rate: f32,
+        rejoin_after: usize,
+        chaos_seed: u64,
+    ) -> Result<(Self, Vec<f32>)> {
+        let (inner, init) = CompactPool::new(cfg, standard_shards(cfg))?;
+        Ok((FlakyPool::wrap(cfg, inner, drop_rate, rejoin_after, chaos_seed), init))
+    }
+}
+
+impl<P: ResyncPool> FlakyPool<P> {
+    fn wrap(
+        cfg: &ExperimentConfig,
+        inner: P,
+        drop_rate: f32,
+        rejoin_after: usize,
+        chaos_seed: u64,
+    ) -> Self {
         let n = cfg.n_clients;
-        Ok((
-            FlakyPool {
-                inner,
-                chaos: Rng::new(chaos_seed ^ 0xF1A_C4A0_5),
-                drop_rate,
-                rejoin_after,
-                alive: vec![true; n],
-                rejoin_at: vec![None; n],
-                round: 0,
-                stall: Rng::new(chaos_seed ^ 0x57A_11ED),
-                stall_rate: 0.0,
-                handshake_stall_rate: 0.0,
-                quota: None,
-                cancelled: Vec::new(),
-                handshake_stalls: 0,
-            },
-            init,
-        ))
+        FlakyPool {
+            inner,
+            chaos: Rng::new(chaos_seed ^ 0xF1A_C4A0_5),
+            drop_rate,
+            rejoin_after,
+            alive: vec![true; n],
+            rejoin_at: vec![None; n],
+            round: 0,
+            stall: Rng::new(chaos_seed ^ 0x57A_11ED),
+            stall_rate: 0.0,
+            handshake_stall_rate: 0.0,
+            quota: None,
+            cancelled: Vec::new(),
+            handshake_stalls: 0,
+        }
     }
 
-    pub fn inner(&self) -> &InProcessPool {
+    pub fn inner(&self) -> &P {
         &self.inner
     }
 
@@ -141,7 +191,7 @@ impl FlakyPool {
     }
 }
 
-impl ClientPool for FlakyPool {
+impl<P: ResyncPool> ClientPool for FlakyPool<P> {
     fn n_clients(&self) -> usize {
         self.inner.n_clients()
     }
@@ -382,6 +432,61 @@ pub fn prop_check(name: &str, cases: usize, mut body: impl FnMut(&mut Gen) -> Re
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::RoundEngine;
+
+    /// Drive `rounds` chaos rounds, returning the global model and the
+    /// per-client age vectors (the membership protocol's full surface).
+    fn drive_chaos(
+        cfg: &ExperimentConfig,
+        pool: &mut dyn ClientPool,
+        init: Vec<f32>,
+        rounds: usize,
+    ) -> (Vec<f32>, Vec<Vec<u32>>) {
+        let mut engine = RoundEngine::new(cfg, init);
+        for _ in 0..rounds {
+            engine.run_round(pool).unwrap();
+        }
+        let ages = (0..cfg.n_clients)
+            .map(|i| engine.ps().clusters().age_of_client(i).to_vec())
+            .collect();
+        (engine.global_params().to_vec(), ages)
+    }
+
+    /// Drop/stall/rejoin chaos through the compact client store is
+    /// bit-for-bit the dense run: same casualties, same rejoin rounds,
+    /// same ages, same global trajectory. The chaos RNG draws depend
+    /// only on cohort composition and liveness, so any divergence in
+    /// the compact materialize/resync/arena lifecycle would cascade
+    /// into different verdicts and fail loudly here.
+    #[test]
+    fn compact_chaos_matches_dense_oracle() {
+        let mut cfg = ExperimentConfig::mnist_smoke();
+        cfg.rounds = 8;
+        cfg.participation = 0.75; // cohort of 3 out of 4
+        let (drop_rate, rejoin_after, seed) = (0.35, 2, 0xC1A05);
+
+        let (mut dense, init_d) = FlakyPool::new(&cfg, drop_rate, rejoin_after, seed).unwrap();
+        let (mut compact, init_c) =
+            FlakyPool::new_compact(&cfg, drop_rate, rejoin_after, seed).unwrap();
+        assert_eq!(init_d, init_c);
+        dense.set_stall_rate(0.25);
+        compact.set_stall_rate(0.25);
+        dense.set_handshake_stall_rate(0.5);
+        compact.set_handshake_stall_rate(0.5);
+
+        let (gd, ages_d) = drive_chaos(&cfg, &mut dense, init_d, cfg.rounds);
+        let (gc, ages_c) = drive_chaos(&cfg, &mut compact, init_c, cfg.rounds);
+        assert_eq!(ages_d, ages_c, "ages pinned to the dense oracle");
+        assert_eq!(gd, gc, "global params must match exactly");
+        assert_eq!(dense.n_down(), compact.n_down());
+        assert_eq!(dense.n_handshake_stalls(), compact.n_handshake_stalls());
+        assert_eq!(dense.health(), compact.health());
+        // the chaos actually churned the compact lifecycle
+        assert!(
+            compact.inner().n_live() > 0,
+            "chaos rounds should have materialized scheduled clients"
+        );
+    }
 
     #[test]
     fn passes_good_property() {

@@ -51,9 +51,49 @@ impl Profile {
     }
 }
 
+/// One `<key>: <n> kB` line of `/proc/self/status`, in bytes.
+fn proc_status_bytes(key: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            let kb: u64 = rest.trim().split_whitespace().next()?.parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`), or `None` where procfs is unavailable. The
+/// high-water mark is kernel-maintained and monotone, so it captures the
+/// true allocation peak even after buffers are freed — what
+/// `bench_fleetscale` reports as bytes/client.
+pub fn peak_rss_bytes() -> Option<u64> {
+    proc_status_bytes("VmHWM:")
+}
+
+/// Current resident set size in bytes (`VmRSS`), or `None` where procfs
+/// is unavailable. Deltas of this across a pool construction give the
+/// *incremental* footprint of that structure.
+pub fn current_rss_bytes() -> Option<u64> {
+    proc_status_bytes("VmRSS:")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rss_probes_report_on_linux() {
+        if !cfg!(target_os = "linux") {
+            return;
+        }
+        let peak = peak_rss_bytes().expect("VmHWM readable on linux");
+        let cur = current_rss_bytes().expect("VmRSS readable on linux");
+        assert!(peak > 0 && cur > 0);
+        // the high-water mark can never sit below the current RSS
+        assert!(peak >= cur, "peak {peak} < current {cur}");
+    }
 
     #[test]
     fn accumulates_phases() {
