@@ -1,0 +1,741 @@
+//! Protocol conformance lints — `cargo run -p analyze`.
+//!
+//! Three source-level invariants that `rustc` cannot express, checked on
+//! every CI run (DESIGN.md §13):
+//!
+//! 1. **Panic-free protocol edges.** The modules that sit on the wire —
+//!    [`EDGE_MODULES`] — must not contain `.unwrap()`, `.expect(`,
+//!    `panic!(`, `unreachable!(`, `todo!(` or `unimplemented!(` outside
+//!    `#[cfg(test)]` blocks. A remote peer controls every byte those
+//!    modules parse; a panic there is a remotely triggerable crash of
+//!    the parameter server. Provably-infallible sites carry an escape
+//!    hatch: `// analyze: allow(panic, <reason>)` on the same or the
+//!    immediately preceding line. The reason is mandatory — a bare
+//!    marker is itself a violation.
+//! 2. **Wire-pin coverage.** Every variant of `Msg` (the whole wire
+//!    vocabulary) must appear in the `every_variant()` fixture that
+//!    feeds the `wire_bytes_never_encodes` pin test, so a new message
+//!    type cannot ship without its arithmetic-size pin.
+//! 3. **Knob documentation.** Every CLI option (`.opt`/`.flag` in
+//!    `main.rs`) and every serialized config key
+//!    (`ExperimentConfig::to_json`) must be mentioned in README.md or
+//!    DESIGN.md — knobs that exist only in the source are knobs nobody
+//!    tunes.
+//!
+//! Exit codes: 0 = clean, 1 = violations (printed one per line as
+//! `file:line: [lint] message`), 2 = internal error (an anchor the
+//! scanner keys on — `enum Msg {`, `fn to_json` — drifted, or a file is
+//! unreadable). `--self-test` seeds known-bad snippets through the same
+//! scanners and exits nonzero unless every seeded violation is caught
+//! and every clean snippet passes, proving the lints have teeth.
+//!
+//! The scanner is deliberately line-based (strings and comments are
+//! stripped with a small cross-line state machine) rather than a full
+//! parser: it is zero-dependency, fast, and the failure mode of a
+//! false positive is an escape-hatch comment, not a shipped panic.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Modules on the wire: a remote peer reaches this code with attacker
+/// controlled bytes, so they must never panic outside tests.
+const EDGE_MODULES: &[&str] = &[
+    "rust/src/fl/transport.rs",
+    "rust/src/fl/codec.rs",
+    "rust/src/fl/distributed.rs",
+    "rust/src/fl/reactor.rs",
+    "rust/src/fl/conn_fsm.rs",
+    "rust/src/coordinator/server.rs",
+];
+
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+const ALLOW_MARKER: &str = "analyze: allow(panic";
+
+struct Violation {
+    file: String,
+    line: usize,
+    lint: &'static str,
+    msg: String,
+}
+
+impl Violation {
+    fn show(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.lint, self.msg)
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--self-test") {
+        return self_test();
+    }
+    if let Some(unknown) = args.iter().find(|a| a.as_str() != "--self-test") {
+        eprintln!("analyze: unknown argument {unknown:?} (only --self-test is accepted)");
+        return ExitCode::from(2);
+    }
+    let root = repo_root();
+    let mut violations = Vec::new();
+    let mut internal = Vec::new();
+
+    for rel in EDGE_MODULES {
+        match read(&root, rel) {
+            Ok(src) => violations.extend(lint_panics(rel, &src)),
+            Err(e) => internal.push(e),
+        }
+    }
+    match read(&root, "rust/src/fl/transport.rs") {
+        Ok(src) => match lint_msg_coverage(&src) {
+            Ok(v) => violations.extend(v),
+            Err(e) => internal.push(e),
+        },
+        Err(e) => internal.push(e),
+    }
+    {
+        let main_rs = read(&root, "rust/src/main.rs");
+        let config_rs = read(&root, "rust/src/config/mod.rs");
+        let readme = read(&root, "README.md");
+        let design = read(&root, "DESIGN.md");
+        match (main_rs, config_rs, readme, design) {
+            (Ok(m), Ok(c), Ok(r), Ok(d)) => match lint_knob_docs(&m, &c, &r, &d) {
+                Ok(v) => violations.extend(v),
+                Err(e) => internal.push(e),
+            },
+            (m, c, r, d) => {
+                for res in [m, c, r, d] {
+                    if let Err(e) = res {
+                        internal.push(e);
+                    }
+                }
+            }
+        }
+    }
+
+    if !internal.is_empty() {
+        for e in &internal {
+            eprintln!("analyze: internal error: {e}");
+        }
+        return ExitCode::from(2);
+    }
+    if violations.is_empty() {
+        println!(
+            "analyze: clean — {} edge modules panic-free, wire pin covers every Msg variant, \
+             all knobs documented",
+            EDGE_MODULES.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            println!("{}", v.show());
+        }
+        println!("analyze: {} violation(s)", violations.len());
+        ExitCode::from(1)
+    }
+}
+
+/// The workspace root: this crate lives at `<root>/rust/analyze`.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+}
+
+fn read(root: &Path, rel: &str) -> Result<String, String> {
+    std::fs::read_to_string(root.join(rel)).map_err(|e| format!("{rel}: {e}"))
+}
+
+// ---------------------------------------------------------------- cleaning
+
+/// Cross-line scanner state: inside a `/* */` comment or a `"` string
+/// that did not close on its line.
+#[derive(Clone, Copy, Default)]
+struct CleanState {
+    in_block_comment: bool,
+    in_string: bool,
+}
+
+/// Strip comments and literal *contents* from one line. String literals
+/// keep their delimiting quotes (so `.expect("msg")` still reads
+/// `.expect("")` and matches the token scan) but lose their interior, so
+/// a string that merely *mentions* `.unwrap()` cannot trip the lint.
+fn clean_line(line: &str, mut st: CleanState) -> (String, CleanState) {
+    let b: Vec<char> = line.chars().collect();
+    let mut out = String::new();
+    let mut i = 0;
+    while i < b.len() {
+        if st.in_block_comment {
+            if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                st.in_block_comment = false;
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if st.in_string {
+            if b[i] == '\\' {
+                i += 2;
+            } else if b[i] == '"' {
+                st.in_string = false;
+                out.push('"');
+                i += 1;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        match b[i] {
+            '/' if i + 1 < b.len() && b[i + 1] == '/' => break,
+            '/' if i + 1 < b.len() && b[i + 1] == '*' => {
+                st.in_block_comment = true;
+                i += 2;
+            }
+            '"' => {
+                out.push('"');
+                st.in_string = true;
+                i += 1;
+            }
+            'r' if i + 1 < b.len() && (b[i + 1] == '"' || b[i + 1] == '#') => {
+                // Raw string r"..." / r#"..."# — assumed single-line,
+                // which holds for every edge module (cross-line raw
+                // strings would need the full lexer this tool avoids).
+                let mut j = i + 1;
+                let mut hashes = 0;
+                while j < b.len() && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < b.len() && b[j] == '"' {
+                    j += 1;
+                    'scan: while j < b.len() {
+                        if b[j] == '"' {
+                            let mut k = j + 1;
+                            let mut seen = 0;
+                            while k < b.len() && b[k] == '#' && seen < hashes {
+                                seen += 1;
+                                k += 1;
+                            }
+                            if seen == hashes {
+                                j = k;
+                                break 'scan;
+                            }
+                        }
+                        j += 1;
+                    }
+                    out.push_str("\"\"");
+                    i = j;
+                } else {
+                    out.push('r');
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // Char literal ('x', '\n', '\'') vs lifetime ('a in
+                // &'a T): a literal closes within three chars.
+                if i + 1 < b.len() && b[i + 1] == '\\' {
+                    let mut j = i + 2;
+                    while j < b.len() && b[j] != '\'' {
+                        j += 1;
+                    }
+                    out.push_str("''");
+                    i = j + 1;
+                } else if i + 2 < b.len() && b[i + 2] == '\'' {
+                    out.push_str("''");
+                    i += 3;
+                } else {
+                    out.push('\'');
+                    i += 1;
+                }
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    (out, st)
+}
+
+fn clean_all(src: &str) -> Vec<String> {
+    let mut st = CleanState::default();
+    src.lines()
+        .map(|l| {
+            let (c, next) = clean_line(l, st);
+            st = next;
+            c
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------ lint: panics
+
+/// Scan one edge module for panic tokens outside `#[cfg(test)]` blocks.
+fn lint_panics(file: &str, src: &str) -> Vec<Violation> {
+    let raw: Vec<&str> = src.lines().collect();
+    let cleaned = clean_all(src);
+    let mut out = Vec::new();
+
+    let mut depth: i32 = 0;
+    // Some(d): inside a #[cfg(test)] block; resume when depth returns to d.
+    let mut skip_until: Option<i32> = None;
+    // Saw #[cfg(test)]; the next `{` opens the excluded block.
+    let mut armed = false;
+
+    for (idx, clean) in cleaned.iter().enumerate() {
+        let trimmed = clean.trim();
+        if skip_until.is_none() && trimmed.starts_with("#[cfg(test)]") {
+            armed = true;
+        }
+        let test_at_start = armed || skip_until.is_some();
+
+        for c in clean.chars() {
+            match c {
+                '{' => {
+                    if armed && skip_until.is_none() {
+                        skip_until = Some(depth);
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(d) = skip_until {
+                        if depth <= d {
+                            skip_until = None;
+                            armed = false;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        // `#[cfg(test)] use ...;` gates a single braceless item.
+        if armed && skip_until.is_none() && trimmed.ends_with(';') {
+            armed = false;
+        }
+
+        if test_at_start || skip_until.is_some() || armed {
+            continue;
+        }
+        for token in PANIC_TOKENS {
+            if !clean.contains(token) {
+                continue;
+            }
+            let prev = idx.checked_sub(1).and_then(|p| raw.get(p).copied());
+            match allow_marker(raw.get(idx).copied(), prev) {
+                Marker::Valid => {}
+                Marker::MissingReason => out.push(Violation {
+                    file: file.into(),
+                    line: idx + 1,
+                    lint: "panic-free-edge",
+                    msg: format!(
+                        "`{token}` has a bare `// analyze: allow(panic)` marker — a reason is \
+                         mandatory: `// analyze: allow(panic, <why this cannot fire>)`"
+                    ),
+                }),
+                Marker::Absent => out.push(Violation {
+                    file: file.into(),
+                    line: idx + 1,
+                    lint: "panic-free-edge",
+                    msg: format!(
+                        "`{token}` in a protocol-edge module outside #[cfg(test)]; return an \
+                         error instead, or annotate why it cannot fire with \
+                         `// analyze: allow(panic, <reason>)`"
+                    ),
+                }),
+            }
+            break; // one violation per line is enough signal
+        }
+    }
+    out
+}
+
+enum Marker {
+    Valid,
+    MissingReason,
+    Absent,
+}
+
+/// Look for `// analyze: allow(panic, reason)` on the flagged line or the
+/// one above it (raw text — the marker lives in a comment).
+fn allow_marker(same: Option<&str>, prev: Option<&str>) -> Marker {
+    for line in [same, prev].into_iter().flatten() {
+        if let Some(pos) = line.find(ALLOW_MARKER) {
+            let rest = &line[pos + ALLOW_MARKER.len()..];
+            let Some(close) = rest.find(')') else { return Marker::MissingReason };
+            let reason = rest[..close].trim_start_matches(',').trim();
+            return if reason.is_empty() { Marker::MissingReason } else { Marker::Valid };
+        }
+    }
+    Marker::Absent
+}
+
+// ------------------------------------------------- lint: Msg pin coverage
+
+/// Every `Msg` variant must appear in the `every_variant()` fixture that
+/// the `wire_bytes_never_encodes` pin test iterates.
+fn lint_msg_coverage(transport_src: &str) -> Result<Vec<Violation>, String> {
+    let cleaned = clean_all(transport_src);
+    let variants = enum_variants(&cleaned, "enum Msg")?;
+    if variants.len() < 5 {
+        return Err(format!(
+            "enum Msg parse drifted: found only {} variants ({variants:?})",
+            variants.len()
+        ));
+    }
+    let fixture = item_body(&cleaned, "fn every_variant")
+        .ok_or("transport.rs: `fn every_variant` fixture not found")?;
+    let pin = item_body(&cleaned, "fn wire_bytes_never_encodes")
+        .ok_or("transport.rs: `fn wire_bytes_never_encodes` pin test not found")?;
+
+    let mut out = Vec::new();
+    if !pin.contains("every_variant()") {
+        out.push(Violation {
+            file: "rust/src/fl/transport.rs".into(),
+            line: 1,
+            lint: "wire-pin-coverage",
+            msg: "wire_bytes_never_encodes no longer iterates every_variant()".into(),
+        });
+    }
+    for v in &variants {
+        if !contains_ident(&fixture, &format!("Msg::{v}")) {
+            out.push(Violation {
+                file: "rust/src/fl/transport.rs".into(),
+                line: 1,
+                lint: "wire-pin-coverage",
+                msg: format!(
+                    "Msg::{v} is missing from every_variant(); every wire message needs its \
+                     arithmetic-size pin in wire_bytes_never_encodes"
+                ),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Variant names of `enum <name> {` at nesting depth 1 inside the enum.
+fn enum_variants(cleaned: &[String], anchor: &str) -> Result<Vec<String>, String> {
+    let start = cleaned
+        .iter()
+        .position(|l| l.contains(anchor) && l.contains('{'))
+        .ok_or_else(|| format!("anchor `{anchor} {{` not found"))?;
+    let mut variants = Vec::new();
+    let mut depth = 0i32;
+    for line in &cleaned[start..] {
+        let trimmed = line.trim();
+        if depth == 1 {
+            let name: String = trimmed
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if name.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                let tail = trimmed[name.len()..].trim_start();
+                if tail.is_empty()
+                    || tail.starts_with('{')
+                    || tail.starts_with('(')
+                    || tail.starts_with(',')
+                {
+                    variants.push(name);
+                }
+            }
+        }
+        for c in line.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(variants);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    Err(format!("anchor `{anchor}` block never closed"))
+}
+
+/// The text of an item from its anchor line to its matching close brace.
+fn item_body(cleaned: &[String], anchor: &str) -> Option<String> {
+    let start = cleaned.iter().position(|l| l.contains(anchor))?;
+    let mut depth = 0i32;
+    let mut opened = false;
+    let mut body = String::new();
+    for line in &cleaned[start..] {
+        body.push_str(line);
+        body.push('\n');
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some(body);
+        }
+    }
+    None
+}
+
+/// `needle` occurs and is not a prefix of a longer path segment
+/// (`Msg::Join` must not be satisfied by `Msg::JoinAck`).
+fn contains_ident(haystack: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = haystack[from..].find(needle) {
+        let end = from + pos + needle.len();
+        let boundary = haystack[end..]
+            .chars()
+            .next()
+            .is_none_or(|c| !c.is_ascii_alphanumeric() && c != '_');
+        if boundary {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+// --------------------------------------------------- lint: knob docs
+
+/// Every CLI knob and every serialized config key must be mentioned in
+/// README.md or DESIGN.md.
+fn lint_knob_docs(
+    main_src: &str,
+    config_src: &str,
+    readme: &str,
+    design: &str,
+) -> Result<Vec<Violation>, String> {
+    let cli = cli_knobs(main_src);
+    if cli.len() < 10 {
+        return Err(format!("main.rs CLI parse drifted: found only {} knobs", cli.len()));
+    }
+    let keys = to_json_keys(config_src)?;
+    if keys.len() < 10 {
+        return Err(format!("to_json parse drifted: found only {} keys", keys.len()));
+    }
+    let docs = format!("{readme}\n{design}");
+    let mut out = Vec::new();
+    for knob in &cli {
+        if !docs_mention(&docs, &format!("--{knob}")) {
+            out.push(Violation {
+                file: "rust/src/main.rs".into(),
+                line: 1,
+                lint: "knob-docs",
+                msg: format!("CLI option --{knob} is not documented in README.md or DESIGN.md"),
+            });
+        }
+    }
+    for key in &keys {
+        let kebab = key.replace('_', "-");
+        if !docs_mention(&docs, key) && !docs_mention(&docs, &format!("--{kebab}")) {
+            out.push(Violation {
+                file: "rust/src/config/mod.rs".into(),
+                line: 1,
+                lint: "knob-docs",
+                msg: format!(
+                    "config key `{key}` (to_json) is not documented in README.md or DESIGN.md"
+                ),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Names declared via `.opt("name", ...)` / `.flag("name", ...)`.
+fn cli_knobs(main_src: &str) -> Vec<String> {
+    let mut knobs = Vec::new();
+    for call in [".opt(\"", ".flag(\""] {
+        let mut from = 0;
+        while let Some(pos) = main_src[from..].find(call) {
+            let start = from + pos + call.len();
+            let name: String = main_src[start..]
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '-')
+                .collect();
+            if !name.is_empty()
+                && main_src[start + name.len()..].starts_with('"')
+                && !knobs.contains(&name)
+            {
+                knobs.push(name);
+            }
+            from = start;
+        }
+    }
+    knobs
+}
+
+/// Keys of `ExperimentConfig::to_json`: string literals opening a tuple —
+/// `("key", ...` on one line, or a bare `"key",` directly after a line
+/// ending in `(` (the multi-line tuple form rustfmt produces).
+fn to_json_keys(config_src: &str) -> Result<Vec<String>, String> {
+    let raw_lines: Vec<&str> = config_src.lines().collect();
+    let cleaned = clean_all(config_src);
+    let start = cleaned
+        .iter()
+        .position(|l| l.contains("fn to_json"))
+        .ok_or("config/mod.rs: `fn to_json` not found")?;
+    let mut depth = 0i32;
+    let mut opened = false;
+    let mut keys = Vec::new();
+    for idx in start..cleaned.len() {
+        let raw = raw_lines[idx].trim();
+        let key = if let Some(rest) = raw.strip_prefix("(\"") {
+            take_key(rest)
+        } else if raw.starts_with('"') && idx > start && raw_lines[idx - 1].trim_end().ends_with('(')
+        {
+            take_key(&raw[1..])
+        } else {
+            None
+        };
+        if let Some(k) = key {
+            if !keys.contains(&k) {
+                keys.push(k);
+            }
+        }
+        for c in cleaned[idx].chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Ok(keys);
+        }
+    }
+    Err("config/mod.rs: `fn to_json` block never closed".into())
+}
+
+/// `rest` starts just past the opening quote: read `key",` and return key.
+fn take_key(rest: &str) -> Option<String> {
+    let key: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '_')
+        .collect();
+    (!key.is_empty() && rest[key.len()..].starts_with("\",")).then_some(key)
+}
+
+/// Word-boundary mention: the character on each side of the match is not
+/// part of a knob name, so `--id` is not satisfied by `--io-timeout-ms`
+/// and key `r` is not satisfied by the middle of a word.
+fn docs_mention(docs: &str, needle: &str) -> bool {
+    let is_word = |c: char| c.is_ascii_alphanumeric() || c == '_' || c == '-';
+    let mut from = 0;
+    while let Some(pos) = docs[from..].find(needle) {
+        let at = from + pos;
+        let before_ok = at == 0 || !docs[..at].chars().next_back().is_some_and(is_word);
+        // A flag's own leading dashes must not fail the boundary check.
+        let before_ok = before_ok || needle.starts_with('-');
+        let after_ok = !docs[at + needle.len()..].chars().next().is_some_and(is_word);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+// ------------------------------------------------------------- self-test
+
+/// Seed known-bad and known-clean snippets through the real scanners and
+/// verify the lints fire exactly where they must. Exits nonzero if any
+/// seeded violation goes undetected — the CI step runs this before
+/// trusting a clean report on the tree.
+fn self_test() -> ExitCode {
+    let mut failures = Vec::new();
+    let mut check = |name: &str, ok: bool| {
+        println!("self-test: {} {name}", if ok { "ok  " } else { "FAIL" });
+        if !ok {
+            failures.push(name.to_string());
+        }
+    };
+
+    let seeded_bad = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n\
+                      pub fn g() { panic!(\"boom\"); }\n";
+    let v = lint_panics("seeded.rs", seeded_bad);
+    check("seeded .unwrap() and panic! are both caught", v.len() == 2);
+    check("seeded violations would exit nonzero", !v.is_empty());
+
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() {\n        panic!(\"fine here\");\n    }\n}\n";
+    check("#[cfg(test)] blocks are exempt", lint_panics("t.rs", in_test).is_empty());
+
+    let allowed = "fn f(w: &[u8]) -> u32 {\n    \
+                   // analyze: allow(panic, chunks_exact yields exact windows)\n    \
+                   u32::from_le_bytes(w.try_into().unwrap())\n}\n";
+    check("marker with a reason is honored", lint_panics("a.rs", allowed).is_empty());
+
+    let bare = "fn f() {\n    // analyze: allow(panic)\n    None::<u32>.unwrap();\n}\n";
+    let v = lint_panics("b.rs", bare);
+    check(
+        "bare marker without a reason is itself a violation",
+        v.len() == 1 && v[0].msg.contains("reason is mandatory"),
+    );
+
+    let in_string = "fn f() {\n    let msg = \"never call .unwrap() here\";\n    drop(msg);\n}\n";
+    check("tokens inside string literals are ignored", lint_panics("s.rs", in_string).is_empty());
+
+    let in_comment = "fn f() {\n    // a stray panic!(...) in prose\n    /* .unwrap() too */\n}\n";
+    check("tokens inside comments are ignored", lint_panics("c.rs", in_comment).is_empty());
+
+    let synthetic_transport = "pub enum Msg {\n    Join { id: u32 },\n    Model { round: u32 },\n    \
+         Report { id: u32 },\n    Request { round: u32 },\n    Update { id: u32 },\n    \
+         Ghost { round: u32 },\n}\n\
+         #[cfg(test)]\nmod tests {\n    fn every_variant() -> Vec<Msg> {\n        \
+         vec![Msg::Join { id: 1 }, Msg::Model { round: 1 }, Msg::Report { id: 1 },\n             \
+         Msg::Request { round: 1 }, Msg::Update { id: 1 }]\n    }\n    \
+         fn wire_bytes_never_encodes() {\n        for m in every_variant() { drop(m); }\n    }\n}\n";
+    match lint_msg_coverage(synthetic_transport) {
+        Ok(v) => check(
+            "a Msg variant missing from every_variant() is caught",
+            v.len() == 1 && v[0].msg.contains("Msg::Ghost"),
+        ),
+        Err(e) => {
+            println!("self-test: msg-coverage scanner errored: {e}");
+            check("msg-coverage scanner runs on a synthetic enum", false);
+        }
+    }
+
+    let main_src = ".opt(\"alpha\", \"\", \"x\").opt(\"beta-gamma\", \"\", \"x\")\
+                    .opt(\"gone\", \"\", \"x\").flag(\"verbose\", \"x\")\
+                    .opt(\"k1\", \"\", \"\").opt(\"k2\", \"\", \"\").opt(\"k3\", \"\", \"\")\
+                    .opt(\"k4\", \"\", \"\").opt(\"k5\", \"\", \"\").opt(\"k6\", \"\", \"\")";
+    let config_src = "fn to_json() {\n    x(vec![\n        (\"alpha\", 1),\n        (\n            \
+         \"hidden_knob\",\n            2,\n        ),\n        (\"k1\", 0),\n        (\"k2\", 0),\n        \
+         (\"k3\", 0),\n        (\"k4\", 0),\n        (\"k5\", 0),\n        (\"k6\", 0),\n        \
+         (\"k7\", 0),\n        (\"k8\", 0),\n    ])\n}\n";
+    let docs = "--alpha --beta-gamma --verbose hidden is not enough, hidden_knob is. \
+                --k1 --k2 --k3 --k4 --k5 --k6 k7 k8 alpha";
+    match lint_knob_docs(main_src, config_src, docs, "") {
+        Ok(v) => {
+            check(
+                "an undocumented CLI knob is caught",
+                v.iter().any(|x| x.msg.contains("--gone")),
+            );
+            check(
+                "documented knobs pass (multi-line tuple keys included)",
+                !v.iter().any(|x| x.msg.contains("hidden_knob") || x.msg.contains("--alpha")),
+            );
+        }
+        Err(e) => {
+            println!("self-test: knob scanner errored: {e}");
+            check("knob scanner runs on a synthetic config", false);
+        }
+    }
+
+    check("--id is not satisfied by --io-timeout-ms", {
+        !docs_mention("--io-timeout-ms", "--id") && docs_mention("use --id here", "--id")
+    });
+
+    if failures.is_empty() {
+        println!("self-test: all lints have teeth");
+        ExitCode::SUCCESS
+    } else {
+        println!("self-test: {} check(s) FAILED — the lints are blind", failures.len());
+        ExitCode::from(2)
+    }
+}

@@ -2,6 +2,10 @@
 //! warmup + timed iterations, mean/median/p99 + throughput reporting,
 //! and a tabular printer shared by every `rust/benches/*.rs` target.
 
+// Measuring wall time is this module's whole purpose; the clippy.toml
+// clock ban (DESIGN.md §13) protects the deterministic layers, not this.
+#![allow(clippy::disallowed_methods)]
+
 use crate::util::{mean, percentile, stddev};
 use std::time::Instant;
 

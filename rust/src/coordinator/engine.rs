@@ -1006,10 +1006,8 @@ pub fn merge_and_apply(
             });
         }
         Payload::Grad => {
-            let t0 = std::time::Instant::now();
             let scale = n_clients as f32 / uploaders as f32; // see the sgd branch note
-            backend.server_apply(global, agg, scale, cfg.lr_server)?;
-            profile.add("ps.apply", t0.elapsed().as_secs_f64());
+            profile.time("ps.apply", || backend.server_apply(global, agg, scale, cfg.lr_server))?;
         }
     }
     Ok(())

@@ -265,12 +265,21 @@ impl<'a> Dec<'a> {
         Ok(self.take(1)?[0])
     }
 
+    /// Like [`Dec::take`], but as a fixed-size array — the length check
+    /// rides the fallible conversion, so a decoder word read can never
+    /// panic (the protocol edge is a no-panic zone, `cargo run -p
+    /// analyze`).
+    fn take_word<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let s = self.take(N)?;
+        s.try_into().map_err(|_| anyhow::anyhow!("internal: take({N}) returned a short slice"))
+    }
+
     pub fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_word()?))
     }
 
     pub fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_word()?))
     }
 
     pub fn f32(&mut self) -> Result<f32> {
@@ -291,13 +300,16 @@ impl<'a> Dec<'a> {
                 return Ok(x);
             }
         }
-        unreachable!("the 5th byte either returned or bailed");
+        // the 5th byte either returned or bailed above (0x80 ⊂ 0xf0);
+        // kept as a defensive error rather than a panic at the edge
+        bail!("overlong varint");
     }
 
     /// Length-prefixed raw u32 list (the v1 format).
     pub fn u32s(&mut self) -> Result<Vec<u32>> {
         let n = self.u32()? as usize;
         let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        // analyze: allow(panic, chunks_exact(4) yields exact 4-byte windows)
         Ok(bytes.chunks_exact(4).map(|w| u32::from_le_bytes(w.try_into().unwrap())).collect())
     }
 
@@ -313,6 +325,7 @@ impl<'a> Dec<'a> {
     pub fn f32s_bulk_into(&mut self, n: usize, out: &mut Vec<f32>) -> Result<()> {
         let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
         out.clear();
+        // analyze: allow(panic, chunks_exact(4) yields exact 4-byte windows)
         out.extend(bytes.chunks_exact(4).map(|w| f32::from_le_bytes(w.try_into().unwrap())));
         Ok(())
     }
@@ -322,6 +335,7 @@ impl<'a> Dec<'a> {
         let bytes = self.take(n.checked_mul(2).unwrap_or(usize::MAX))?;
         Ok(bytes
             .chunks_exact(2)
+            // analyze: allow(panic, chunks_exact(2) yields exact 2-byte windows)
             .map(|w| f16_bits_to_f32(u16::from_le_bytes(w.try_into().unwrap())))
             .collect())
     }
@@ -495,6 +509,13 @@ impl FrameBuf {
     /// Wire size (header + payload) of the most recent received frame.
     pub fn last_recv_frame_len(&self) -> usize {
         self.last_recv
+    }
+
+    /// The payload (tag + body) of the most recently completed receive —
+    /// what [`crate::fl::transport::RecvCursor::advance`] leaves behind
+    /// on `Done`, ready for [`crate::fl::transport::Msg::decode`].
+    pub fn recv_payload(&self) -> &[u8] {
+        &self.payload
     }
 
     pub(crate) fn note_growth(&mut self, buf_cap_before: usize, payload_cap_before: usize) {

@@ -1,0 +1,590 @@
+//! Pure, enumerable transition functions for the reactor's per-connection
+//! state machines (DESIGN.md §13).
+//!
+//! `fl::distributed`'s reactor drives three interacting machines — the
+//! per-connection phase state ([`ConnState`]), the pending-handshake
+//! lifecycle, and the per-phase deadline policy. PR 10 splits the
+//! *decisions* out of the I/O loop into this module: every transition is
+//! a total function from `(state, event)` to `(next state, effect)`,
+//! with no I/O, no clocks, and no allocation, so the full state × event
+//! product is small enough to walk exhaustively in a model-checking test
+//! (`model_check` below). The reactor keeps the I/O — classifying cursor
+//! outcomes into [`ConnEvent`]s and applying [`Effect`]s to sockets,
+//! buffers, and byte counters — but it can no longer invent a transition
+//! the model check has not seen.
+//!
+//! Invariants pinned by the exhaustive tests:
+//!
+//! * **totality** — every `(state, event)` pair has a defined transition
+//!   (the functions cannot panic; `analyze` additionally denies panic
+//!   macros in this module at the source level);
+//! * **progress** — from every live state the admissible events reach
+//!   `Done` or a casualty; nothing can wedge, because every blocking
+//!   state accepts [`ConnEvent::DeadlineExpired`] and a non-retryable
+//!   expiry is always a casualty;
+//! * **single-count accounting** — each transition carries at most one
+//!   [`Effect`] (by construction), the frame-consuming effects
+//!   ([`Effect::Landed`], [`Effect::DrainedStale`]) arise only in
+//!   `Reading`, and [`Effect::QueueCancelSit`] — the one effect that
+//!   adds downlink bytes — is reachable only once per commit, because
+//!   its own transition leaves `Reading`;
+//! * **deadline coverage** — [`phase_deadline_ms`] returns a window for
+//!   every configuration with `io_timeout_ms > 0`, and a cancelled
+//!   straggler's `Sit` write-out is re-armed with a *fresh* flat window
+//!   ([`cancel_deadline_ms`]) instead of inheriting the nearly-expired
+//!   reply deadline that put it in the cancel set in the first place.
+
+/// Where a connection stands in the reactor's current phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnState {
+    /// not armed this phase
+    Idle,
+    /// pushing the queued frame out; `expect_reply` arms the read half
+    /// after the last byte (broadcasts and requests await a reply, a
+    /// `Sit` does not)
+    Writing { expect_reply: bool },
+    /// accumulating the worker's reply frame
+    Reading,
+    /// this connection's work for the phase is complete
+    Done,
+}
+
+/// Outcome of one [`SendCursor::advance`] call on a ready socket.
+///
+/// [`SendCursor::advance`]: crate::fl::transport::SendCursor::advance
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteOutcome {
+    /// the last byte of the queued frame reached the socket
+    Complete,
+    /// the transport would block; stay armed
+    Pending,
+    /// the stream is done for (reset, EOF mid-frame)
+    Failed,
+}
+
+/// Outcome of one [`RecvCursor::advance`] call on a ready socket, with
+/// the completed frame already classified by the caller (stale-drain
+/// check, then the engine's `on_frame` validation).
+///
+/// [`RecvCursor::advance`]: crate::fl::transport::RecvCursor::advance
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadOutcome {
+    /// a complete frame from a cancelled round — discard and keep reading
+    StaleFrame,
+    /// a complete frame the engine accepted
+    FrameAccepted,
+    /// a complete frame the engine rejected (bad round, bad indices)
+    FrameRejected,
+    /// the transport would block; stay armed
+    Pending,
+    /// the stream is done for (reset, EOF, bad framing)
+    Failed,
+}
+
+/// Everything that can happen to an armed connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnEvent {
+    /// the pool armed this connection for a new phase with a queued
+    /// outgoing frame (authoritative: cursors are reset alongside)
+    Armed { expect_reply: bool },
+    /// `poll(2)` reported the socket writable and the send cursor ran
+    Write(WriteOutcome),
+    /// `poll(2)` reported the socket readable and the recv cursor ran
+    Read(ReadOutcome),
+    /// the speculative commit quota filled while this connection was
+    /// still in flight (DESIGN.md §11)
+    RoundCommitted,
+    /// this connection's phase deadline passed; `can_retry` is true for
+    /// an adaptive window that has not used its one bounded retry
+    DeadlineExpired { can_retry: bool },
+}
+
+/// Why a connection became a casualty — the caller maps this to its
+/// per-client log line and `dead` flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CasualtyKind {
+    /// the queued frame could not be written out
+    WriteFailed,
+    /// the reply stream failed (reset, EOF, bad framing)
+    ReadFailed,
+    /// the engine rejected a structurally complete reply
+    FrameRejected,
+    /// the round committed while this connection's broadcast was still
+    /// unfinished — the worker never got the model, so there is nothing
+    /// to cancel cleanly
+    BroadcastUnfinished,
+    /// the phase deadline expired with no retry left
+    DeadlineExpired,
+}
+
+/// The single side effect a transition instructs the reactor to apply.
+/// One effect per transition by construction — the model check leans on
+/// this to prove no wire byte is ever counted twice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effect {
+    /// nothing beyond the state change
+    None,
+    /// the queued frame is fully out: drop the shared rotation slot so
+    /// its refcount can fall back to one
+    ReleaseFrame,
+    /// a committed reply landed: count it toward the quota, feed the
+    /// adaptive-deadline EWMA, record the phase timing
+    Landed,
+    /// a stale frame from a cancelled round completed: tally its bytes
+    /// in `drained_up` (never `wire_up`) and keep reading
+    DrainedStale,
+    /// queue the 13-byte cancel `Sit`, count it in `wire_down`, flag one
+    /// stale reply for draining, record the cancellation, and re-arm the
+    /// deadline with a fresh flat window ([`cancel_deadline_ms`])
+    QueueCancelSit,
+    /// grant the one bounded adaptive retry: double the window, mark the
+    /// retry spent
+    RearmDeadline,
+    /// mark the connection dead and log the casualty
+    Casualty(CasualtyKind),
+}
+
+/// A transition's full instruction to the reactor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transition {
+    pub next: ConnState,
+    pub effect: Effect,
+}
+
+fn stay(state: ConnState) -> Transition {
+    Transition { next: state, effect: Effect::None }
+}
+
+/// The per-connection transition function — total over the full
+/// state × event product, pure, and panic-free. The reactor calls this
+/// for every event it observes and applies the returned effect; the
+/// model check walks every pair.
+pub fn conn_step(state: ConnState, event: ConnEvent) -> Transition {
+    match (state, event) {
+        // ------------------------------------------------- phase arming
+        // Arming is authoritative: the pool queues a fresh outgoing
+        // frame and resets the cursors, so it overrides whatever phase
+        // state was left behind (normally `Idle` or `Done`).
+        (_, ConnEvent::Armed { expect_reply }) => Transition {
+            next: ConnState::Writing { expect_reply },
+            effect: Effect::None,
+        },
+        // --------------------------------------------------- write half
+        (ConnState::Writing { expect_reply }, ConnEvent::Write(WriteOutcome::Complete)) => {
+            Transition {
+                next: if expect_reply { ConnState::Reading } else { ConnState::Done },
+                effect: Effect::ReleaseFrame,
+            }
+        }
+        (ConnState::Writing { .. }, ConnEvent::Write(WriteOutcome::Pending)) => stay(state),
+        (ConnState::Writing { .. }, ConnEvent::Write(WriteOutcome::Failed)) => {
+            Transition { next: state, effect: Effect::Casualty(CasualtyKind::WriteFailed) }
+        }
+        // ---------------------------------------------------- read half
+        (ConnState::Reading, ConnEvent::Read(ReadOutcome::StaleFrame)) => {
+            Transition { next: ConnState::Reading, effect: Effect::DrainedStale }
+        }
+        (ConnState::Reading, ConnEvent::Read(ReadOutcome::FrameAccepted)) => {
+            Transition { next: ConnState::Done, effect: Effect::Landed }
+        }
+        (ConnState::Reading, ConnEvent::Read(ReadOutcome::FrameRejected)) => {
+            Transition { next: state, effect: Effect::Casualty(CasualtyKind::FrameRejected) }
+        }
+        (ConnState::Reading, ConnEvent::Read(ReadOutcome::Pending)) => stay(state),
+        (ConnState::Reading, ConnEvent::Read(ReadOutcome::Failed)) => {
+            Transition { next: state, effect: Effect::Casualty(CasualtyKind::ReadFailed) }
+        }
+        // ------------------------------------------- speculative commit
+        // A stream whose broadcast was fully delivered gets the clean
+        // cancel; one still mid-broadcast cannot be parked (the worker
+        // never got the model) and is an ordinary casualty. A `Sit`
+        // writer is already parked; `Idle`/`Done` have nothing to cancel.
+        (ConnState::Reading, ConnEvent::RoundCommitted) => Transition {
+            next: ConnState::Writing { expect_reply: false },
+            effect: Effect::QueueCancelSit,
+        },
+        (ConnState::Writing { expect_reply: true }, ConnEvent::RoundCommitted) => {
+            Transition { next: state, effect: Effect::Casualty(CasualtyKind::BroadcastUnfinished) }
+        }
+        // ----------------------------------------------------- deadlines
+        (
+            ConnState::Writing { .. } | ConnState::Reading,
+            ConnEvent::DeadlineExpired { can_retry: true },
+        ) => Transition { next: state, effect: Effect::RearmDeadline },
+        (
+            ConnState::Writing { .. } | ConnState::Reading,
+            ConnEvent::DeadlineExpired { can_retry: false },
+        ) => Transition { next: state, effect: Effect::Casualty(CasualtyKind::DeadlineExpired) },
+        // ------------------------------------------------ inert corners
+        // Terminal phase states ignore everything but arming; I/O events
+        // cannot reach them because the reactor only polls Writing (OUT)
+        // and Reading (IN) connections.
+        _ => stay(state),
+    }
+}
+
+/// One nonblocking pull of a pending handshake, classified by the caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandshakeRead {
+    /// the handshake frame is complete
+    Frame,
+    /// frame still incomplete, socket would block
+    Pending,
+    /// the stream failed (reset, EOF, bad framing)
+    Failed,
+}
+
+/// What to do with a pending handshake after one pull.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandshakeDecision {
+    /// keep it in the pending list
+    Keep,
+    /// hand the completed frame to admission
+    Complete,
+    /// drop it: the deadline expired mid-handshake
+    DropExpired,
+    /// drop it: the stream failed
+    DropFailed,
+}
+
+/// The pending-handshake transition function. A frame that completes on
+/// the same pull its deadline expires still wins — the bytes are all
+/// here, so dropping it would discard a finished handshake for nothing.
+pub fn handshake_step(read: HandshakeRead, deadline_expired: bool) -> HandshakeDecision {
+    match (read, deadline_expired) {
+        (HandshakeRead::Frame, _) => HandshakeDecision::Complete,
+        (HandshakeRead::Failed, _) => HandshakeDecision::DropFailed,
+        (HandshakeRead::Pending, true) => HandshakeDecision::DropExpired,
+        (HandshakeRead::Pending, false) => HandshakeDecision::Keep,
+    }
+}
+
+/// One phase's deadline window in milliseconds. With an RTT estimate in
+/// hand, the window is `clamp(ewma_ms * deadline_factor, deadline_min_ms,
+/// io_timeout_ms)` (DESIGN.md §11) — the cap is only applied when
+/// `io_timeout_ms > 0`. Otherwise the flat `io_timeout_ms` applies, and
+/// `None` (no deadline) only when that is 0.
+pub fn phase_deadline_ms(
+    io_timeout_ms: u64,
+    deadline_factor: f64,
+    deadline_min_ms: u64,
+    ewma_ms: f32,
+) -> Option<u64> {
+    if deadline_factor > 0.0 && ewma_ms > 0.0 {
+        let mut ms = (ewma_ms as f64 * deadline_factor).max(deadline_min_ms as f64).ceil() as u64;
+        if io_timeout_ms > 0 {
+            ms = ms.min(io_timeout_ms);
+        }
+        return Some(ms.max(1));
+    }
+    (io_timeout_ms > 0).then_some(io_timeout_ms)
+}
+
+/// The deadline window for a cancelled straggler's `Sit` write-out: a
+/// fresh *flat* window, started at cancel time.
+///
+/// The connection earned its cancellation by being slow — its adaptive
+/// reply deadline is, by definition, nearly (or already) spent when the
+/// quota fills. PR 8 let the 13-byte `Sit` inherit that stale window, so
+/// a straggler could be cancelled ("no fleet damage", DESIGN.md §11) and
+/// then immediately dropped as a deadline casualty anyway, purely
+/// because its cancel housekeeping raced a deadline armed for a
+/// different, much larger transfer. The model check's deadline invariant
+/// surfaced the corner; this window (pinned by `cancel_window_is_fresh_
+/// and_flat`) closes it.
+pub fn cancel_deadline_ms(io_timeout_ms: u64) -> Option<u64> {
+    phase_deadline_ms(io_timeout_ms, 0.0, 0, 0.0)
+}
+
+#[cfg(test)]
+mod model_check {
+    use super::*;
+
+    fn all_states() -> [ConnState; 5] {
+        [
+            ConnState::Idle,
+            ConnState::Writing { expect_reply: true },
+            ConnState::Writing { expect_reply: false },
+            ConnState::Reading,
+            ConnState::Done,
+        ]
+    }
+
+    fn all_events() -> Vec<ConnEvent> {
+        let mut evs = vec![
+            ConnEvent::Armed { expect_reply: true },
+            ConnEvent::Armed { expect_reply: false },
+            ConnEvent::RoundCommitted,
+            ConnEvent::DeadlineExpired { can_retry: true },
+            ConnEvent::DeadlineExpired { can_retry: false },
+        ];
+        for w in [WriteOutcome::Complete, WriteOutcome::Pending, WriteOutcome::Failed] {
+            evs.push(ConnEvent::Write(w));
+        }
+        for r in [
+            ReadOutcome::StaleFrame,
+            ReadOutcome::FrameAccepted,
+            ReadOutcome::FrameRejected,
+            ReadOutcome::Pending,
+            ReadOutcome::Failed,
+        ] {
+            evs.push(ConnEvent::Read(r));
+        }
+        evs
+    }
+
+    /// The events the reactor can actually generate in each state: write
+    /// outcomes only while polling `POLLOUT`, read outcomes only while
+    /// polling `POLLIN`, commit/deadline sweeps against any armed state.
+    fn admissible(s: ConnState) -> Vec<ConnEvent> {
+        let mut evs: Vec<ConnEvent> = Vec::new();
+        match s {
+            ConnState::Writing { .. } => {
+                for w in [WriteOutcome::Complete, WriteOutcome::Pending, WriteOutcome::Failed] {
+                    evs.push(ConnEvent::Write(w));
+                }
+            }
+            ConnState::Reading => {
+                for r in [
+                    ReadOutcome::StaleFrame,
+                    ReadOutcome::FrameAccepted,
+                    ReadOutcome::FrameRejected,
+                    ReadOutcome::Pending,
+                    ReadOutcome::Failed,
+                ] {
+                    evs.push(ConnEvent::Read(r));
+                }
+            }
+            ConnState::Idle | ConnState::Done => return evs,
+        }
+        evs.push(ConnEvent::RoundCommitted);
+        evs.push(ConnEvent::DeadlineExpired { can_retry: true });
+        evs.push(ConnEvent::DeadlineExpired { can_retry: false });
+        evs
+    }
+
+    fn is_blocking(s: ConnState) -> bool {
+        matches!(s, ConnState::Writing { .. } | ConnState::Reading)
+    }
+
+    /// Totality over the full product, and the terminal phase states are
+    /// inert under everything except arming.
+    #[test]
+    fn full_product_is_total_and_terminals_are_inert() {
+        for s in all_states() {
+            for e in all_events() {
+                let t = conn_step(s, e); // must not panic for any pair
+                if matches!(s, ConnState::Idle | ConnState::Done)
+                    && !matches!(e, ConnEvent::Armed { .. })
+                {
+                    assert_eq!(t.next, s, "terminal {s:?} moved on {e:?}");
+                    assert_eq!(t.effect, Effect::None, "terminal {s:?} acted on {e:?}");
+                }
+            }
+        }
+    }
+
+    /// Arming is authoritative from every state, and nothing else ever
+    /// re-arms: `Writing` is entered only by `Armed` or the cancel path.
+    #[test]
+    fn arming_is_authoritative() {
+        for s in all_states() {
+            for expect_reply in [true, false] {
+                let t = conn_step(s, ConnEvent::Armed { expect_reply });
+                assert_eq!(t.next, ConnState::Writing { expect_reply });
+                assert_eq!(t.effect, Effect::None);
+            }
+        }
+    }
+
+    /// Every live state reaches `Done` or a casualty under its admissible
+    /// events — walked as a reachability fixpoint over the whole graph,
+    /// so no reachable state is stuck.
+    #[test]
+    fn every_live_state_reaches_done_or_casualty() {
+        for start in all_states() {
+            if !is_blocking(start) {
+                continue;
+            }
+            // BFS over the admissible-event graph from `start`
+            let mut frontier = vec![start];
+            let mut seen = vec![start];
+            let mut done_reachable = false;
+            let mut casualty_reachable = false;
+            while let Some(s) = frontier.pop() {
+                assert!(
+                    !admissible(s).is_empty() || !is_blocking(s),
+                    "blocking state {s:?} admits no events"
+                );
+                for e in admissible(s) {
+                    let t = conn_step(s, e);
+                    if matches!(t.effect, Effect::Casualty(_)) {
+                        casualty_reachable = true;
+                        continue; // dead is terminal; the walk stops here
+                    }
+                    if t.next == ConnState::Done {
+                        done_reachable = true;
+                    }
+                    if !seen.contains(&t.next) {
+                        seen.push(t.next);
+                        frontier.push(t.next);
+                    }
+                }
+            }
+            assert!(done_reachable, "{start:?} cannot reach Done");
+            assert!(casualty_reachable, "{start:?} cannot reach a casualty");
+        }
+    }
+
+    /// Every blocking state accepts a deadline event, a non-retryable
+    /// expiry is always a casualty (the universal escape — nothing can
+    /// wedge the round while a deadline is armed), and the one bounded
+    /// retry keeps the state put so the next expiry is final.
+    #[test]
+    fn deadline_expiry_is_a_universal_escape() {
+        for s in all_states() {
+            if !is_blocking(s) {
+                continue;
+            }
+            let retry = conn_step(s, ConnEvent::DeadlineExpired { can_retry: true });
+            assert_eq!(retry.next, s, "retry must not change phase state");
+            assert_eq!(retry.effect, Effect::RearmDeadline);
+            let fin = conn_step(s, ConnEvent::DeadlineExpired { can_retry: false });
+            assert_eq!(fin.effect, Effect::Casualty(CasualtyKind::DeadlineExpired));
+        }
+    }
+
+    /// Byte-accounting effects are single-sourced: the frame-consuming
+    /// effects only arise in `Reading` from the matching read outcome,
+    /// the cancel `Sit` (the one downlink-byte effect) only from
+    /// `(Reading, RoundCommitted)`, and a frame release only from a
+    /// completed write. With one effect per transition by construction,
+    /// no `(state, event)` pair can count a byte twice.
+    #[test]
+    fn byte_effects_are_single_sourced() {
+        for s in all_states() {
+            for e in all_events() {
+                let t = conn_step(s, e);
+                match t.effect {
+                    Effect::Landed => {
+                        assert_eq!(s, ConnState::Reading);
+                        assert_eq!(e, ConnEvent::Read(ReadOutcome::FrameAccepted));
+                        assert_eq!(t.next, ConnState::Done);
+                    }
+                    Effect::DrainedStale => {
+                        assert_eq!(s, ConnState::Reading);
+                        assert_eq!(e, ConnEvent::Read(ReadOutcome::StaleFrame));
+                        assert_eq!(t.next, ConnState::Reading, "the real reply follows");
+                    }
+                    Effect::QueueCancelSit => {
+                        assert_eq!((s, e), (ConnState::Reading, ConnEvent::RoundCommitted));
+                        assert_eq!(t.next, ConnState::Writing { expect_reply: false });
+                    }
+                    Effect::ReleaseFrame => {
+                        assert!(matches!(s, ConnState::Writing { .. }));
+                        assert_eq!(e, ConnEvent::Write(WriteOutcome::Complete));
+                    }
+                    Effect::None | Effect::RearmDeadline | Effect::Casualty(_) => {}
+                }
+            }
+        }
+    }
+
+    /// A connection is cancelled at most once per commit: the cancel
+    /// transition leaves `Reading`, and from the post-cancel state no
+    /// admissible event can produce another `QueueCancelSit` or a
+    /// `Landed` — the cancelled straggler can neither be double-counted
+    /// in `wire_down` nor sneak a late reply into the committed round.
+    #[test]
+    fn cancel_is_at_most_once_and_final() {
+        let cancel = conn_step(ConnState::Reading, ConnEvent::RoundCommitted);
+        assert_eq!(cancel.effect, Effect::QueueCancelSit);
+        // walk everything reachable from the post-cancel state
+        let mut frontier = vec![cancel.next];
+        let mut seen = vec![cancel.next];
+        while let Some(s) = frontier.pop() {
+            for e in admissible(s) {
+                let t = conn_step(s, e);
+                assert_ne!(t.effect, Effect::QueueCancelSit, "double cancel via {s:?} {e:?}");
+                assert_ne!(t.effect, Effect::Landed, "post-cancel landing via {s:?} {e:?}");
+                if !matches!(t.effect, Effect::Casualty(_)) && !seen.contains(&t.next) {
+                    seen.push(t.next);
+                    frontier.push(t.next);
+                }
+            }
+        }
+    }
+
+    /// The handshake decision table, exhaustively: a completed frame
+    /// always wins, a failure always drops, and only a still-pending
+    /// handshake can expire.
+    #[test]
+    fn handshake_product() {
+        for expired in [false, true] {
+            assert_eq!(
+                handshake_step(HandshakeRead::Frame, expired),
+                HandshakeDecision::Complete
+            );
+            assert_eq!(
+                handshake_step(HandshakeRead::Failed, expired),
+                HandshakeDecision::DropFailed
+            );
+        }
+        assert_eq!(handshake_step(HandshakeRead::Pending, false), HandshakeDecision::Keep);
+        assert_eq!(handshake_step(HandshakeRead::Pending, true), HandshakeDecision::DropExpired);
+    }
+
+    /// Deadlines always surface from std's sleep/timeout machinery as
+    /// `>= 1 ms` windows — never "instant expiry" (std rejects a zero
+    /// timeout), and whenever `io_timeout_ms > 0` **every** blocking
+    /// state gets a window: the deadline-coverage half of the model
+    /// check, swept over a grid of every regime boundary.
+    #[test]
+    fn deadline_window_grid() {
+        // the PR 8 pins, preserved verbatim
+        assert_eq!(phase_deadline_ms(0, 0.0, 0, 0.0), None, "flat window, knob off");
+        assert_eq!(phase_deadline_ms(5000, 0.0, 0, 0.0), Some(5000));
+        assert_eq!(phase_deadline_ms(5000, 2.0, 50, 100.0), Some(200));
+        assert_eq!(phase_deadline_ms(5000, 2.0, 50, 10.0), Some(50), "floor applies");
+        assert_eq!(phase_deadline_ms(150, 2.0, 50, 100.0), Some(150), "cap applies");
+        assert_eq!(phase_deadline_ms(0, 2.0, 50, 100.0), Some(200), "io_timeout 0 = no cap");
+        assert_eq!(phase_deadline_ms(0, 2.0, 50, 0.0), None, "no RTT sample: flat window");
+        // the exhaustive grid: every combination of regime boundaries
+        for io in [0u64, 1, 150, 5000] {
+            for factor in [0.0f64, 0.5, 2.0] {
+                for min in [0u64, 50, 9000] {
+                    for ewma in [0.0f32, 0.4, 10.0, 100.0, 1.0e6] {
+                        let got = phase_deadline_ms(io, factor, min, ewma);
+                        if io > 0 {
+                            let ms = got.expect("io_timeout > 0 must always arm a deadline");
+                            assert!(ms >= 1, "std rejects zero windows");
+                            assert!(ms <= io.max(1), "the flat timeout caps every window");
+                        } else if factor > 0.0 && ewma > 0.0 {
+                            let ms = got.expect("adaptive window with a sample");
+                            assert!(ms >= 1, "std rejects zero windows");
+                            assert!(ms >= min, "uncapped adaptive windows respect the floor");
+                        } else {
+                            assert_eq!(got, None, "no knob, no deadline");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Regression pin for the cancelled-straggler deadline corner: the
+    /// `Sit` write-out window is flat (independent of the straggler's
+    /// EWMA — which is exactly what expired on it) and present whenever
+    /// the flat timeout is on, so a cancel is never retro-converted into
+    /// a deadline casualty by an inherited, already-spent window.
+    #[test]
+    fn cancel_window_is_fresh_and_flat() {
+        assert_eq!(cancel_deadline_ms(0), None);
+        assert_eq!(cancel_deadline_ms(3000), Some(3000));
+        // the straggler's (spent) adaptive window would have been far
+        // tighter; the fresh flat window must not depend on it
+        let adaptive = phase_deadline_ms(3000, 2.0, 50, 40.0);
+        assert_eq!(adaptive, Some(80), "the reply window the straggler just missed");
+        assert_ne!(cancel_deadline_ms(3000), adaptive);
+    }
+}

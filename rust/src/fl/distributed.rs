@@ -71,6 +71,14 @@
 //! ragek worker --connect 127.0.0.1:7700 --id 2 --rejoin 1
 //! ```
 
+// The transport's semantics ARE wall-clock time — per-phase I/O
+// deadlines, EWMA-adaptive reply windows, handshake expiry — so the
+// clippy.toml `disallowed-methods` ban on clock reads (which keeps the
+// simulation and codec layers deterministic) is lifted for this module
+// as a whole. The *decisions* those clocks feed are pure and
+// model-checked in `crate::fl::conn_fsm` (DESIGN.md §13).
+#![allow(clippy::disallowed_methods)]
+
 use crate::backend::{make_backend, Backend};
 use crate::config::{Downlink, ExperimentConfig, Payload};
 use crate::coordinator::engine::{
@@ -81,6 +89,10 @@ use crate::coordinator::topology::Reshard;
 use crate::data::{load_dataset, partition::partition};
 use crate::fl::client::Client;
 use crate::fl::codec::{params_digest, Codec, FrameBuf, IndexScratch};
+use crate::fl::conn_fsm::{
+    cancel_deadline_ms, conn_step, handshake_step, phase_deadline_ms, CasualtyKind, ConnEvent,
+    ConnState, Effect, HandshakeDecision, HandshakeRead, ReadOutcome, WriteOutcome,
+};
 use crate::fl::metrics::CommStats;
 use crate::fl::reactor::{poll_fds, PollFd, POLLIN, POLLOUT};
 use crate::fl::transport::{
@@ -139,21 +151,6 @@ pub struct ServeReport {
     /// `wire_up_observed`, so the engine's committed-frame wire mirror
     /// still pins exactly under speculation
     pub drained_up: u64,
-}
-
-/// Where a connection stands in the reactor's current phase.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum ConnState {
-    /// not armed this phase
-    Idle,
-    /// pushing the queued frame out; `expect_reply` arms the read half
-    /// after the last byte (broadcasts and requests await a reply, a
-    /// `Sit` does not)
-    Writing { expect_reply: bool },
-    /// accumulating the worker's reply frame
-    Reading,
-    /// this connection's work for the phase is complete
-    Done,
 }
 
 /// One accepted worker stream (nonblocking) plus its reused transport
@@ -259,19 +256,29 @@ impl PendingHandshake {
     }
 
     /// Pull whatever bytes are ready (the stream is nonblocking; this
-    /// never blocks) and report where the handshake stands.
+    /// never blocks), classify the outcome, and let the pure decision
+    /// table ([`handshake_step`]) say where the handshake stands.
     fn step(&mut self) -> HandshakeStep {
-        match self.recv.advance(&mut self.stream, &mut self.fb) {
-            Ok(IoStep::Done) => HandshakeStep::Frame,
-            Ok(IoStep::Pending) => {
-                if let Some(dl) = self.deadline {
-                    if Instant::now() >= dl {
-                        return HandshakeStep::Dropped("handshake deadline expired".into());
-                    }
-                }
-                HandshakeStep::Pending
+        let mut io_err: Option<anyhow::Error> = None;
+        let read = match self.recv.advance(&mut self.stream, &mut self.fb) {
+            Ok(IoStep::Done) => HandshakeRead::Frame,
+            Ok(IoStep::Pending) => HandshakeRead::Pending,
+            Err(e) => {
+                io_err = Some(e);
+                HandshakeRead::Failed
             }
-            Err(e) => HandshakeStep::Dropped(format!("{e:#}")),
+        };
+        let expired = self.deadline.is_some_and(|dl| Instant::now() >= dl);
+        match handshake_step(read, expired) {
+            HandshakeDecision::Complete => HandshakeStep::Frame,
+            HandshakeDecision::Keep => HandshakeStep::Pending,
+            HandshakeDecision::DropExpired => {
+                HandshakeStep::Dropped("handshake deadline expired".into())
+            }
+            HandshakeDecision::DropFailed => HandshakeStep::Dropped(match io_err {
+                Some(e) => format!("{e:#}"),
+                None => "handshake I/O failed".into(),
+            }),
         }
     }
 }
@@ -559,7 +566,16 @@ impl TcpClientPool {
                 }
             }
         }
-        let conns = slots.into_iter().map(|s| WorkerConn::new(s.unwrap())).collect();
+        // the accept loop only exits once `joined == n_clients`, so every
+        // slot is filled — but a protocol edge never panics on its own
+        // invariant: a hole is a clean error, not an abort
+        let mut conns = Vec::with_capacity(slots.len());
+        for (id, s) in slots.into_iter().enumerate() {
+            match s {
+                Some(s) => conns.push(WorkerConn::new(s)),
+                None => bail!("internal: accept loop finished with client {id} unjoined"),
+            }
+        }
         Ok(TcpClientPool {
             conns,
             listener,
@@ -851,35 +867,15 @@ fn set_stream_deadline(s: &TcpStream, io_timeout_ms: u64) -> Result<()> {
     Ok(())
 }
 
-/// One phase's deadline window in milliseconds for a connection — the
-/// single definition of every nonblocking-path deadline (reactor phases
-/// and pending handshakes), so `io_timeout_ms = 0` means "no deadline"
-/// *everywhere*, never "instant expiry".
-///
-/// With the adaptive knob on (`deadline_factor > 0`) and an RTT sample
-/// in hand, the window is `clamp(ewma_ms * deadline_factor,
-/// deadline_min_ms, io_timeout_ms)` (DESIGN.md §11) — the cap is only
-/// applied when `io_timeout_ms > 0`. Otherwise the flat `io_timeout_ms`
-/// applies, and `None` (no deadline) only when that is 0.
-fn phase_deadline_ms(
-    io_timeout_ms: u64,
-    deadline_factor: f64,
-    deadline_min_ms: u64,
-    ewma_ms: f32,
-) -> Option<u64> {
-    if deadline_factor > 0.0 && ewma_ms > 0.0 {
-        let mut ms = (ewma_ms as f64 * deadline_factor).max(deadline_min_ms as f64).ceil() as u64;
-        if io_timeout_ms > 0 {
-            ms = ms.min(io_timeout_ms);
-        }
-        return Some(ms.max(1));
-    }
-    (io_timeout_ms > 0).then_some(io_timeout_ms)
-}
-
 impl TcpClientPool {
     /// The reactor: drive every armed connection's state machine to
     /// `Done` (or death) in one `poll(2)` readiness loop.
+    ///
+    /// The loop owns the I/O only: cursor outcomes are classified into
+    /// [`ConnEvent`]s, every state change goes through the pure
+    /// [`conn_step`] table (exhaustively model-checked in
+    /// [`crate::fl::conn_fsm`]), and the returned [`Effect`] tells this
+    /// loop which sockets, buffers, and byte counters to touch.
     ///
     /// Each armed connection enters `Writing` with its outgoing frame
     /// queued (a shared rotation `Arc`, or the connection's own
@@ -956,78 +952,98 @@ impl TcpClientPool {
                 }
                 let i = self.pollidx[k];
                 let wc = &mut self.conns[i];
-                match wc.state {
-                    ConnState::Writing { expect_reply } => {
+                // classify the cursor I/O into a pure FSM event; every
+                // transition below is covered by the conn_fsm model check
+                let mut io_err: Option<anyhow::Error> = None;
+                let mut frame_len = 0usize;
+                let event = match wc.state {
+                    ConnState::Writing { .. } => {
                         let frame: &[u8] = match &wc.shared {
                             Some(arc) => arc.as_slice(),
                             None => &wc.fb.buf,
                         };
-                        match wc.send.advance(&mut wc.stream, frame) {
-                            Ok(IoStep::Done) => {
-                                // release the rotation slot now — by the
-                                // next checkout its refcount is back to one
-                                wc.shared = None;
-                                wc.state = if expect_reply {
-                                    ConnState::Reading
-                                } else {
-                                    ConnState::Done
-                                };
-                            }
-                            Ok(IoStep::Pending) => {}
+                        ConnEvent::Write(match wc.send.advance(&mut wc.stream, frame) {
+                            Ok(IoStep::Done) => WriteOutcome::Complete,
+                            Ok(IoStep::Pending) => WriteOutcome::Pending,
                             Err(e) => {
-                                wc.dead = true;
-                                wc.shared = None;
-                                let what = if expect_reply { desc } else { sit_desc };
-                                crate::info!("serve: client {i} dropped {what}: {e:#}");
+                                io_err = Some(e);
+                                WriteOutcome::Failed
                             }
-                        }
+                        })
                     }
-                    ConnState::Reading => match wc.recv.advance(&mut wc.stream, &mut wc.fb) {
-                        Ok(IoStep::Done) => {
-                            let frame_len = wc.fb.last_recv_frame_len();
-                            if wc.drain_frames > 0 {
-                                // a late report from a cancelled round:
-                                // discard it (exact wire accounting in
-                                // drained_up, never wire_up) and keep
-                                // reading — the real reply follows
-                                wc.drain_frames -= 1;
-                                self.drained_up += frame_len as u64;
-                                crate::info!(
-                                    "serve: client {i} drained a stale frame \
-                                     ({frame_len} B) from a cancelled round"
-                                );
-                            } else {
-                                match on_frame(i, &wc.fb.payload, frame_len) {
-                                    Ok(()) => {
-                                        wc.state = ConnState::Done;
-                                        landed += 1;
-                                        // feed the adaptive-deadline
-                                        // estimate: one completed
-                                        // write→reply phase
-                                        let ms = started.elapsed().as_secs_f32() * 1000.0;
-                                        wc.ewma_ms = if wc.ewma_ms == 0.0 {
-                                            ms
-                                        } else {
-                                            crate::coordinator::fleet::RTT_EWMA_ALPHA * ms
-                                                + (1.0 - crate::coordinator::fleet::RTT_EWMA_ALPHA)
-                                                    * wc.ewma_ms
-                                        };
-                                        self.timings.push((i, ms));
-                                    }
-                                    Err(e) => {
-                                        wc.dead = true;
-                                        crate::info!("serve: client {i} dropped {desc}: {e:#}");
+                    ConnState::Reading => {
+                        ConnEvent::Read(match wc.recv.advance(&mut wc.stream, &mut wc.fb) {
+                            Ok(IoStep::Done) => {
+                                frame_len = wc.fb.last_recv_frame_len();
+                                if wc.drain_frames > 0 {
+                                    ReadOutcome::StaleFrame
+                                } else {
+                                    match on_frame(i, &wc.fb.payload, frame_len) {
+                                        Ok(()) => ReadOutcome::FrameAccepted,
+                                        Err(e) => {
+                                            io_err = Some(e);
+                                            ReadOutcome::FrameRejected
+                                        }
                                     }
                                 }
                             }
+                            Ok(IoStep::Pending) => ReadOutcome::Pending,
+                            Err(e) => {
+                                io_err = Some(e);
+                                ReadOutcome::Failed
+                            }
+                        })
+                    }
+                    ConnState::Idle | ConnState::Done => continue,
+                };
+                let was_sit_write =
+                    matches!(wc.state, ConnState::Writing { expect_reply: false });
+                let t = conn_step(wc.state, event);
+                wc.state = t.next;
+                match t.effect {
+                    Effect::None => {}
+                    Effect::ReleaseFrame => {
+                        // release the rotation slot now — by the next
+                        // checkout its refcount is back to one
+                        wc.shared = None;
+                    }
+                    Effect::Landed => {
+                        landed += 1;
+                        // feed the adaptive-deadline estimate: one
+                        // completed write→reply phase
+                        let ms = started.elapsed().as_secs_f32() * 1000.0;
+                        wc.ewma_ms = if wc.ewma_ms == 0.0 {
+                            ms
+                        } else {
+                            crate::coordinator::fleet::RTT_EWMA_ALPHA * ms
+                                + (1.0 - crate::coordinator::fleet::RTT_EWMA_ALPHA) * wc.ewma_ms
+                        };
+                        self.timings.push((i, ms));
+                    }
+                    Effect::DrainedStale => {
+                        // a late report from a cancelled round: discard
+                        // it (exact wire accounting in drained_up, never
+                        // wire_up) and keep reading — the real reply
+                        // follows
+                        wc.drain_frames -= 1;
+                        self.drained_up += frame_len as u64;
+                        crate::info!(
+                            "serve: client {i} drained a stale frame \
+                             ({frame_len} B) from a cancelled round"
+                        );
+                    }
+                    Effect::Casualty(_) => {
+                        wc.dead = true;
+                        wc.shared = None;
+                        let what = if was_sit_write { sit_desc } else { desc };
+                        match io_err {
+                            Some(e) => crate::info!("serve: client {i} dropped {what}: {e:#}"),
+                            None => crate::info!("serve: client {i} dropped {what}"),
                         }
-                        Ok(IoStep::Pending) => {}
-                        Err(e) => {
-                            wc.dead = true;
-                            crate::info!("serve: client {i} dropped {desc}: {e:#}");
-                        }
-                    },
-                    ConnState::Idle | ConnState::Done => {}
+                    }
+                    // the I/O events above never produce these (pinned
+                    // by the model check's byte_effects_are_single_sourced)
+                    Effect::QueueCancelSit | Effect::RearmDeadline => {}
                 }
             }
             // speculative commit (DESIGN.md §11): the round is full once
@@ -1043,26 +1059,35 @@ impl TcpClientPool {
                 if !cancel_fired && landed >= q {
                     cancel_fired = true;
                     let TcpClientPool { conns, armed, cancelled, wire_down, .. } = self;
+                    let now = Instant::now();
                     for &i in armed.iter() {
                         let wc = &mut conns[i];
                         if wc.dead {
                             continue;
                         }
-                        match wc.state {
-                            ConnState::Reading => {
+                        let t = conn_step(wc.state, ConnEvent::RoundCommitted);
+                        wc.state = t.next;
+                        match t.effect {
+                            Effect::QueueCancelSit => {
                                 encode_frame_into(&Msg::Sit { round }, codec, &mut wc.fb);
                                 wc.send.reset();
                                 wc.shared = None;
-                                wc.state = ConnState::Writing { expect_reply: false };
                                 wc.drain_frames += 1;
                                 *wire_down += SIT_FRAME_BYTES as u64;
                                 cancelled.push(i);
+                                // the 13-byte Sit write-out gets a fresh
+                                // flat window — inheriting the straggler's
+                                // nearly-spent reply deadline turned clean
+                                // cancels into deadline casualties
+                                // (conn_fsm::cancel_window_is_fresh_and_flat)
+                                wc.deadline = cancel_deadline_ms(io_timeout_ms)
+                                    .map(|ms| now + Duration::from_millis(ms));
                                 crate::info!(
                                     "serve: client {i} cancelled (round {round} committed \
                                      with {q} reports) — late report will be drained"
                                 );
                             }
-                            ConnState::Writing { expect_reply: true } => {
+                            Effect::Casualty(CasualtyKind::BroadcastUnfinished) => {
                                 wc.dead = true;
                                 wc.shared = None;
                                 crate::info!(
@@ -1085,39 +1110,56 @@ impl TcpClientPool {
                 if wc.dead || matches!(wc.state, ConnState::Idle | ConnState::Done) {
                     continue;
                 }
-                if let Some(dl) = wc.deadline {
-                    if now >= dl {
-                        let adaptive = deadline_factor > 0.0 && wc.ewma_ms > 0.0;
-                        if adaptive && !wc.retried {
-                            // one retry with backoff: re-arm a doubled
-                            // adaptive window before giving up
-                            wc.retried = true;
-                            let ms = phase_deadline_ms(
-                                io_timeout_ms,
-                                deadline_factor,
-                                deadline_min_ms,
-                                wc.ewma_ms,
-                            )
-                            .unwrap_or(1);
-                            wc.deadline = Some(now + Duration::from_millis(2 * ms));
-                            crate::info!(
-                                "serve: client {i} missed its adaptive deadline ({ms} ms) \
-                                 — one retry ({} ms)",
-                                2 * ms
-                            );
-                            continue;
-                        }
-                        wc.dead = true;
-                        wc.shared = None;
-                        let what = match wc.state {
-                            ConnState::Writing { expect_reply: false } => sit_desc,
-                            _ => desc,
-                        };
+                let expired = wc.deadline.is_some_and(|dl| now >= dl);
+                if !expired {
+                    continue;
+                }
+                let adaptive = deadline_factor > 0.0 && wc.ewma_ms > 0.0;
+                let can_retry = adaptive && !wc.retried;
+                let was_sit_write =
+                    matches!(wc.state, ConnState::Writing { expect_reply: false });
+                let t = conn_step(wc.state, ConnEvent::DeadlineExpired { can_retry });
+                wc.state = t.next;
+                match t.effect {
+                    Effect::RearmDeadline => {
+                        // one retry with backoff: re-arm a doubled
+                        // adaptive window before giving up
+                        wc.retried = true;
+                        let ms = phase_deadline_ms(
+                            io_timeout_ms,
+                            deadline_factor,
+                            deadline_min_ms,
+                            wc.ewma_ms,
+                        )
+                        .unwrap_or(1);
+                        wc.deadline = Some(now + Duration::from_millis(2 * ms));
                         crate::info!(
-                            "serve: client {i} dropped {what}: phase deadline \
-                             ({io_timeout_ms} ms) expired"
+                            "serve: client {i} missed its adaptive deadline ({ms} ms) \
+                             — one retry ({} ms)",
+                            2 * ms
                         );
                     }
+                    Effect::Casualty(_) => {
+                        wc.dead = true;
+                        wc.shared = None;
+                        let what = if was_sit_write { sit_desc } else { desc };
+                        // name the window that actually expired — the
+                        // flat knob's value was misleading for adaptive
+                        // (EWMA-derived) windows
+                        if adaptive {
+                            crate::info!(
+                                "serve: client {i} dropped {what}: adaptive phase \
+                                 deadline expired (EWMA {:.1} ms)",
+                                wc.ewma_ms
+                            );
+                        } else {
+                            crate::info!(
+                                "serve: client {i} dropped {what}: phase deadline \
+                                 ({io_timeout_ms} ms) expired"
+                            );
+                        }
+                    }
+                    _ => {}
                 }
             }
         }
@@ -1314,18 +1356,20 @@ impl ClientPool for TcpClientPool {
                     sit_bytes += SIT_FRAME_BYTES as u64;
                     encode_frame_into(&Msg::Sit { round }, codec, &mut wc.fb);
                     wc.shared = None;
-                    wc.state = ConnState::Writing { expect_reply: false };
+                    wc.state = conn_step(wc.state, ConnEvent::Armed { expect_reply: false }).next;
                     armed.push(i);
                     continue;
                 }
                 let slot = plan.as_ref().and_then(|p| p.assign.get(i).copied().flatten());
-                let frame = match slot {
-                    Some(di) => {
-                        let p = plan.as_ref().expect("assignment implies a plan");
+                // a delta slot assignment implies a plan, so pair them in
+                // one match — the impossible (Some, None) corner falls
+                // through to the dense fallback instead of panicking
+                let frame = match (slot, plan.as_ref()) {
+                    (Some(di), Some(p)) => {
                         let entry = &mut delta_frames[di];
-                        if entry.is_none() {
+                        let arc = entry.get_or_insert_with(|| {
                             let (base, idx) = &p.deltas[di];
-                            *entry = Some(rotation.checkout(|buf| {
+                            rotation.checkout(|buf| {
                                 encode_delta_frame_into(
                                     codec,
                                     round,
@@ -1337,24 +1381,21 @@ impl ClientPool for TcpClientPool {
                                     val_scratch,
                                     idx_scratch,
                                 )
-                            }));
-                        }
-                        Arc::clone(entry.as_ref().expect("just filled"))
+                            })
+                        });
+                        Arc::clone(arc)
                     }
-                    None => {
-                        if dense.is_none() {
-                            dense = Some(
-                                rotation
-                                    .checkout(|buf| encode_model_frame_into(round, global, buf)),
-                            );
+                    _ => {
+                        let arc = dense.get_or_insert_with(|| {
                             dense_encodes += 1;
-                        }
-                        Arc::clone(dense.as_ref().expect("just filled"))
+                            rotation.checkout(|buf| encode_model_frame_into(round, global, buf))
+                        });
+                        Arc::clone(arc)
                     }
                 };
                 attempted_bytes += frame.len() as u64;
                 wc.shared = Some(frame);
-                wc.state = ConnState::Writing { expect_reply: true };
+                wc.state = conn_step(wc.state, ConnEvent::Armed { expect_reply: true }).next;
                 armed.push(i);
             }
         }
@@ -1428,7 +1469,7 @@ impl ClientPool for TcpClientPool {
                 let indices: &[u32] = requests.map(|r| r[p].as_slice()).unwrap_or(&[]);
                 request_bytes += encode_request_into(codec, &mut wc.fb, round, indices) as u64;
                 wc.shared = None;
-                wc.state = ConnState::Writing { expect_reply: true };
+                wc.state = conn_step(wc.state, ConnEvent::Armed { expect_reply: true }).next;
                 armed.push(i);
             }
         }

@@ -9,6 +9,7 @@
 pub mod client;
 pub mod codec;
 pub mod compact;
+pub mod conn_fsm;
 pub mod distributed;
 pub mod metrics;
 pub mod pool;

@@ -48,6 +48,15 @@ pub struct PollFd {
     pub revents: i16,
 }
 
+// The layout is ABI, not convention — `poll(2)` reads these bytes in
+// place. Pinned at compile time (and re-checked under Miri by
+// `tests/miri_memory.rs`, which also validates the pointer arithmetic).
+const _: () = assert!(std::mem::size_of::<PollFd>() == 8);
+const _: () = assert!(std::mem::align_of::<PollFd>() == 4);
+const _: () = assert!(std::mem::offset_of!(PollFd, fd) == 0);
+const _: () = assert!(std::mem::offset_of!(PollFd, events) == 4);
+const _: () = assert!(std::mem::offset_of!(PollFd, revents) == 6);
+
 impl PollFd {
     /// An interest entry for `fd`, with `revents` cleared.
     pub fn new(fd: RawFd, events: i16) -> Self {
@@ -115,6 +124,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(clippy::disallowed_methods)] // asserting a real-time timeout needs a real clock
     fn timeout_fires_with_nothing_ready() {
         let (a, _b) = pair();
         let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];

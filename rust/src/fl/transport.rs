@@ -662,20 +662,31 @@ pub fn send_request(
 pub fn recv_payload<'a>(stream: &mut TcpStream, fb: &'a mut FrameBuf) -> Result<&'a [u8]> {
     let mut header = [0u8; 8];
     stream.read_exact(&mut header).context("recv header")?;
-    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
-    if magic != MAGIC {
-        bail!("bad magic {magic:#x}");
-    }
-    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
-    if len == 0 || len > 512 << 20 {
-        bail!("implausible frame length {len}");
-    }
+    let len = parse_frame_header(&header)?;
     let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
     fb.payload.resize(len, 0);
     fb.note_growth(bc, pc);
     stream.read_exact(&mut fb.payload).context("recv payload")?;
     fb.set_last_recv(8 + len);
     Ok(&fb.payload)
+}
+
+/// Validate a frame header — magic then length plausibility — and return
+/// the payload length. The single definition shared by the blocking
+/// ([`recv_payload`]) and resumable ([`RecvCursor`]) receive paths, so
+/// both reject exactly the same garbage; fixed-index reads off the
+/// `[u8; 8]` keep it free of fallible slice conversions (the protocol
+/// edge is a no-panic zone, enforced by `cargo run -p analyze`).
+pub fn parse_frame_header(hdr: &[u8; 8]) -> Result<usize> {
+    let magic = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+    if magic != MAGIC {
+        bail!("bad magic {magic:#x}");
+    }
+    let len = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
+    if len == 0 || len > 512 << 20 {
+        bail!("implausible frame length {len}");
+    }
+    Ok(len)
 }
 
 /// Read one message through the stream's reused [`FrameBuf`].
@@ -805,14 +816,7 @@ impl RecvCursor {
             }
         }
         if self.need == 0 {
-            let magic = u32::from_le_bytes(self.hdr[0..4].try_into().unwrap());
-            if magic != MAGIC {
-                bail!("bad magic {magic:#x}");
-            }
-            let len = u32::from_le_bytes(self.hdr[4..8].try_into().unwrap()) as usize;
-            if len == 0 || len > 512 << 20 {
-                bail!("implausible frame length {len}");
-            }
+            let len = parse_frame_header(&self.hdr)?;
             let (bc, pc) = (fb.buf.capacity(), fb.payload.capacity());
             fb.payload.resize(len, 0);
             fb.note_growth(bc, pc);

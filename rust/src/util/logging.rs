@@ -22,6 +22,9 @@ pub fn enabled(level: Level) -> bool {
     level as u8 <= LEVEL.load(Ordering::Relaxed)
 }
 
+// Log lines carry a wall-clock offset by design (clippy.toml bans clock
+// reads elsewhere to keep the simulation layers deterministic).
+#[allow(clippy::disallowed_methods)]
 pub fn log(level: Level, msg: &str) {
     if !enabled(level) {
         return;

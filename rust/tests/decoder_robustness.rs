@@ -1,0 +1,182 @@
+//! Decoder robustness: the exhaustive hostile-bytes sweep (DESIGN.md
+//! §13). A remote peer controls every byte the PS and workers parse, so
+//! the decode stack has exactly two legal outcomes on malformed input —
+//! `Ok` (the corruption happened to produce another well-formed frame)
+//! or `Err` — and one illegal one: a panic. This suite walks, for every
+//! `Msg` variant in every codec:
+//!
+//! - **every payload truncation point** through the blocking
+//!   [`Msg::decode`] path — each strict prefix must return `Err`
+//!   (length prefixes and the trailing-bytes check make a cleanly
+//!   decodable strict prefix impossible by construction);
+//! - **every frame truncation point** through the resumable
+//!   [`RecvCursor`] path, where the stream ends in EOF — must `Err`,
+//!   never complete, never spin;
+//! - **every single-byte corruption** (xor 0x01 / 0x80 / 0xff at every
+//!   offset) through both paths — outcome unasserted, termination and
+//!   panic-freedom are the property. Header corruptions additionally
+//!   must never complete a frame *silently shorter* than the magic +
+//!   length contract allows.
+//!
+//! The sweep is a few thousand decodes of sub-100-byte frames — cheap
+//! natively; it is deliberately NOT in the Miri allowlist (Miri runs it
+//! ~100x slower for no extra soundness signal beyond what
+//! `miri_memory.rs` already covers on representative cuts).
+
+use ragek::fl::codec::FrameBuf;
+use ragek::fl::transport::{IoStep, Msg, RecvCursor};
+use ragek::fl::Codec;
+use ragek::sparse::SparseVec;
+
+const ALL: [Codec; 3] = [Codec::Raw, Codec::Packed, Codec::PackedF16];
+const MASKS: [u8; 3] = [0x01, 0x80, 0xff];
+
+/// One frame of every wire variant (mirrors the `wire_bytes` pin
+/// fixture; the analyze lint keeps the canonical one exhaustive).
+fn every_variant() -> Vec<Msg> {
+    vec![
+        Msg::Join { client_id: 3, codec: Codec::Packed },
+        Msg::Rejoin { client_id: 3, generation: 2, held_digest: 1, codec: Codec::Packed },
+        Msg::Model { round: 7, params: vec![] },
+        Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] },
+        Msg::Delta {
+            round: 6,
+            base_round: 2,
+            digest: 99,
+            delta: SparseVec::new(vec![10, 11, 900], vec![0.5, -0.5, 2.0]),
+        },
+        Msg::Delta { round: 6, base_round: 5, digest: 0, delta: SparseVec::default() },
+        Msg::Report {
+            client_id: 1,
+            round: 2,
+            report: SparseVec::new(vec![900, 5], vec![0.5, -0.25]),
+            mean_loss: 2.25,
+        },
+        Msg::Report { client_id: 1, round: 2, report: SparseVec::new(vec![], vec![]), mean_loss: 0.5 },
+        Msg::Request { round: 9, indices: vec![1, 200_000, 3] },
+        Msg::Request { round: 9, indices: vec![] },
+        Msg::Update {
+            client_id: 0,
+            round: 1,
+            update: SparseVec::new(vec![4, 8, 15], vec![0.1, 0.2, 0.3]),
+        },
+        Msg::Update { client_id: 0, round: 1, update: SparseVec::new(vec![], vec![]) },
+        Msg::Shutdown,
+        Msg::Sit { round: 4 },
+    ]
+}
+
+/// Drive a whole byte slice through the resumable read path. `&[u8]`'s
+/// `Read` impl never blocks and ends in `Ok(0)`, so this terminates with
+/// either a completed frame or the cursor's error.
+fn recv_all(bytes: &[u8]) -> Result<Vec<u8>, anyhow::Error> {
+    let mut r: &[u8] = bytes;
+    let mut cur = RecvCursor::new();
+    let mut fb = FrameBuf::new();
+    loop {
+        match cur.advance(&mut r, &mut fb)? {
+            IoStep::Done => return Ok(fb.recv_payload().to_vec()),
+            IoStep::Pending => unreachable!("&[u8] never reports WouldBlock"),
+        }
+    }
+}
+
+#[test]
+fn every_payload_truncation_point_errors() {
+    for codec in ALL {
+        for m in every_variant() {
+            let frame = m.encode(codec);
+            let payload = &frame[8..];
+            for cut in 0..payload.len() {
+                assert!(
+                    Msg::decode(&payload[..cut], codec).is_err(),
+                    "{codec:?} {m:?}: strict prefix of {cut}/{} bytes decoded cleanly",
+                    payload.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_frame_truncation_point_errors_through_recv_cursor() {
+    for codec in ALL {
+        for m in every_variant() {
+            let frame = m.encode(codec);
+            for cut in 0..frame.len() {
+                let res = recv_all(&frame[..cut]);
+                assert!(
+                    res.is_err(),
+                    "{codec:?} {m:?}: frame cut at {cut}/{} completed through RecvCursor",
+                    frame.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_single_byte_payload_corruption_is_panic_free() {
+    for codec in ALL {
+        for m in every_variant() {
+            let frame = m.encode(codec);
+            let payload = &frame[8..];
+            for pos in 0..payload.len() {
+                for mask in MASKS {
+                    let mut p = payload.to_vec();
+                    p[pos] ^= mask;
+                    // outcome is free (a flipped bit can form another
+                    // valid message); not panicking is the property —
+                    // and a decoded Ok must re-encode without panicking
+                    // either, since the PS logs/echoes what it accepts.
+                    if let Ok(back) = Msg::decode(&p, codec) {
+                        let _ = back.encode(codec);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_single_byte_frame_corruption_is_panic_free_through_recv_cursor() {
+    for codec in ALL {
+        for m in every_variant() {
+            let frame = m.encode(codec);
+            for pos in 0..frame.len() {
+                for mask in MASKS {
+                    let mut f = frame.clone();
+                    f[pos] ^= mask;
+                    match recv_all(&f) {
+                        // corrupting the length downward can complete a
+                        // short frame; its payload then faces decode,
+                        // which must stay panic-free like everything else
+                        Ok(payload) => {
+                            let _ = Msg::decode(&payload, codec);
+                        }
+                        Err(_) => {}
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The one corruption with a hard *semantic* requirement: flipping any
+/// bit of the 4-byte magic must kill the frame at the header, before a
+/// single payload byte is interpreted.
+#[test]
+fn magic_corruption_never_reaches_the_payload() {
+    let frame = Msg::Sit { round: 4 }.encode(Codec::Raw);
+    for pos in 0..4 {
+        for mask in MASKS {
+            let mut f = frame.clone();
+            f[pos] ^= mask;
+            let err = recv_all(&f).expect_err("corrupt magic must not complete");
+            assert!(
+                format!("{err:#}").contains("magic"),
+                "pos {pos} mask {mask:#x}: expected a magic error, got: {err:#}"
+            );
+        }
+    }
+}

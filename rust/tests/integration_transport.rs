@@ -2,6 +2,11 @@
 //! real sockets running one full rAge-k protocol round with the actual
 //! frame encoding — under the raw v1 codec and the packed v2 codec.
 
+// These tests assert real-time transport behavior (timeouts firing,
+// stragglers dying on the clock), so the clippy.toml clock ban
+// (DESIGN.md §13) does not apply here.
+#![allow(clippy::disallowed_methods)]
+
 use ragek::fl::codec::Codec;
 use ragek::fl::transport::{recv, send, Msg};
 use ragek::sparse::SparseVec;

@@ -1,0 +1,306 @@
+//! Memory-model conformance under Miri (DESIGN.md §13).
+//!
+//! This file is the pinned allowlist for the nightly `cargo miri test`
+//! CI job: every test here is **socket-free and clock-free** (Miri has
+//! no network and no monotonic clock), exercising exactly the unsafe-
+//! adjacent surfaces a remote peer can reach — the codec decoders over
+//! attacker-controlled bytes, the resumable transport cursors through
+//! pathological 1-byte/`WouldBlock`/`Interrupted` streams, and the
+//! `#[repr(C)]` FFI mirror handed to `poll(2)`.
+//!
+//! Keep it that way: a test that opens a `TcpStream`, spawns the
+//! reactor, or reads a clock belongs in the ordinary integration suites,
+//! not here — Miri would reject it (or worse, silently skip the
+//! interesting part). Case counts are small; Miri runs ~100x slower
+//! than native.
+
+use std::io::{Read, Write};
+
+use ragek::fl::codec::{
+    f16_bits_to_f32, f32_to_f16_bits, index_block_bytes, varint_len, write_index_block,
+    write_varint, Dec, FrameBuf, IndexScratch,
+};
+use ragek::fl::transport::{parse_frame_header, IoStep, Msg, RecvCursor, SendCursor, MAGIC};
+use ragek::fl::Codec;
+use ragek::fl::reactor::{PollFd, POLLIN, POLLOUT};
+use ragek::sparse::SparseVec;
+
+const ALL: [Codec; 3] = [Codec::Raw, Codec::Packed, Codec::PackedF16];
+
+/// One frame of every wire variant — mirrors the fixture behind the
+/// `wire_bytes_never_encodes` pin (the analyze lint keeps that one
+/// exhaustive; this one exists so Miri sees every decode path).
+fn every_variant() -> Vec<Msg> {
+    vec![
+        Msg::Join { client_id: 3, codec: Codec::Packed },
+        Msg::Rejoin { client_id: 3, generation: 2, held_digest: 1, codec: Codec::Packed },
+        Msg::Model { round: 7, params: vec![] },
+        Msg::Model { round: 7, params: vec![1.0, -2.5, 3.25] },
+        Msg::Delta {
+            round: 6,
+            base_round: 2,
+            digest: 99,
+            delta: SparseVec::new(vec![10, 11, 900], vec![0.5, -0.5, 2.0]),
+        },
+        Msg::Delta { round: 6, base_round: 5, digest: 0, delta: SparseVec::default() },
+        Msg::Report {
+            client_id: 1,
+            round: 2,
+            report: SparseVec::new(vec![900, 5], vec![0.5, -0.25]),
+            mean_loss: 2.25,
+        },
+        Msg::Request { round: 9, indices: vec![1, 200_000, 3] },
+        Msg::Request { round: 9, indices: vec![] },
+        Msg::Update {
+            client_id: 0,
+            round: 1,
+            update: SparseVec::new(vec![4, 8, 15], vec![0.125, 0.25, 0.5]),
+        },
+        Msg::Shutdown,
+        Msg::Sit { round: 4 },
+    ]
+}
+
+/// encode -> decode -> encode is byte-identical in every codec. (Exact
+/// `Msg` equality would be too strong: packed codecs deliberately drop
+/// Report values, so the *bytes* are the invariant.)
+#[test]
+fn msg_encode_decode_encode_is_byte_stable() {
+    for codec in ALL {
+        for m in every_variant() {
+            let frame = m.encode(codec);
+            assert_eq!(m.wire_bytes(codec), frame.len(), "{codec:?} {m:?}");
+            let back = Msg::decode(&frame[8..], codec)
+                .unwrap_or_else(|e| panic!("{codec:?} {m:?}: {e:#}"));
+            assert_eq!(back.encode(codec), frame, "{codec:?} {m:?}");
+        }
+    }
+}
+
+#[test]
+fn truncated_payloads_error_under_miri() {
+    // every strict prefix of a representative payload must Err (never
+    // read out of bounds — that is the point of running this under Miri)
+    for codec in ALL {
+        for m in [
+            Msg::Rejoin { client_id: 9, generation: 1, held_digest: 7, codec },
+            Msg::Request { round: 3, indices: vec![2, 40, 41, 9000] },
+            Msg::Model { round: 1, params: vec![0.5, -0.5] },
+        ] {
+            let frame = m.encode(codec);
+            let payload = &frame[8..];
+            for cut in 0..payload.len() {
+                assert!(
+                    Msg::decode(&payload[..cut], codec).is_err(),
+                    "{codec:?} {m:?} cut at {cut} must not decode"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn varint_boundaries_roundtrip() {
+    for x in [0u32, 1, 127, 128, 16383, 16384, (1 << 28) - 1, 1 << 28, u32::MAX] {
+        let mut b = Vec::new();
+        write_varint(&mut b, x);
+        assert_eq!(b.len(), varint_len(x));
+        let mut d = Dec::new(&b);
+        assert_eq!(d.varint().unwrap(), x);
+        d.done().unwrap();
+    }
+    // overlong and truncated forms stay errors under Miri's strict rules
+    assert!(Dec::new(&[0x80]).varint().is_err());
+    assert!(Dec::new(&[0xff, 0xff, 0xff, 0xff, 0x10]).varint().is_err());
+}
+
+#[test]
+fn f16_conversions_are_total() {
+    for x in [0.0f32, -0.0, 1.0, -2.5, 65504.0, 1e-8, f32::INFINITY, f32::NAN] {
+        let h = f32_to_f16_bits(x);
+        let back = f16_bits_to_f32(h);
+        // totality + idempotence, not exactness: f16 is lossy by design
+        assert_eq!(f32_to_f16_bits(back), h, "f16 bits must be stable for {x}");
+    }
+}
+
+#[test]
+fn index_block_roundtrips_in_original_order() {
+    let mut scratch = IndexScratch::default();
+    for idx in [vec![], vec![7], vec![3, 1, 2], vec![1_000_000, 0, 500_000, 2]] {
+        let mut b = Vec::new();
+        write_index_block(&mut b, &idx, &mut scratch);
+        assert_eq!(b.len(), index_block_bytes(&idx));
+        let mut d = Dec::new(&b);
+        assert_eq!(d.index_block().unwrap(), idx);
+        d.done().unwrap();
+    }
+}
+
+// ------------------------------------------------------------ mock I/O
+
+/// A `Read`/`Write` that moves at most one byte per call and interleaves
+/// `WouldBlock` (every other call) plus a single `Interrupted` hiccup —
+/// the worst legal behavior of a nonblocking socket.
+struct Trickle {
+    data: Vec<u8>,
+    pos: usize,
+    calls: usize,
+    interrupted_once: bool,
+    sink: Vec<u8>,
+}
+
+impl Trickle {
+    fn reader(data: Vec<u8>) -> Self {
+        Trickle { data, pos: 0, calls: 0, interrupted_once: false, sink: Vec::new() }
+    }
+
+    fn writer() -> Self {
+        Trickle::reader(Vec::new())
+    }
+
+    fn hiccup(&mut self) -> Option<std::io::Error> {
+        self.calls += 1;
+        if !self.interrupted_once && self.calls == 3 {
+            self.interrupted_once = true;
+            return Some(std::io::Error::from(std::io::ErrorKind::Interrupted));
+        }
+        if self.calls % 2 == 0 {
+            return Some(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+        }
+        None
+    }
+}
+
+impl Read for Trickle {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if let Some(e) = self.hiccup() {
+            return Err(e);
+        }
+        if self.pos >= self.data.len() || buf.is_empty() {
+            return Ok(0);
+        }
+        buf[0] = self.data[self.pos];
+        self.pos += 1;
+        Ok(1)
+    }
+}
+
+impl Write for Trickle {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if let Some(e) = self.hiccup() {
+            return Err(e);
+        }
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        self.sink.push(buf[0]);
+        Ok(1)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn send_cursor_survives_one_byte_writes_with_hiccups() {
+    let frame = Msg::Request { round: 5, indices: vec![3, 1, 4, 1_000] }.encode(Codec::Packed);
+    let mut w = Trickle::writer();
+    let mut cur = SendCursor::new();
+    let mut pendings = 0usize;
+    loop {
+        match cur.advance(&mut w, &frame).unwrap() {
+            IoStep::Done => break,
+            IoStep::Pending => pendings += 1,
+        }
+        assert!(pendings < 10_000, "no forward progress");
+    }
+    assert_eq!(w.sink, frame, "every byte exactly once, in order");
+    assert!(pendings > 0, "the trickle writer must have exercised Pending");
+}
+
+#[test]
+fn recv_cursor_survives_one_byte_reads_with_hiccups() {
+    for codec in ALL {
+        let msg = Msg::Update {
+            client_id: 2,
+            round: 9,
+            update: SparseVec::new(vec![11, 3, 700], vec![0.5, -1.0, 0.25]),
+        };
+        let frame = msg.encode(codec);
+        let mut r = Trickle::reader(frame.clone());
+        let mut cur = RecvCursor::new();
+        let mut fb = FrameBuf::new();
+        let mut pendings = 0usize;
+        loop {
+            match cur.advance(&mut r, &mut fb).unwrap() {
+                IoStep::Done => break,
+                IoStep::Pending => pendings += 1,
+            }
+            assert!(pendings < 10_000, "no forward progress");
+        }
+        assert!(pendings > 0, "the trickle reader must have exercised Pending");
+        assert_eq!(fb.last_recv_frame_len(), frame.len());
+        assert_eq!(fb.recv_payload(), &frame[8..]);
+        let back = Msg::decode(fb.recv_payload(), codec).unwrap();
+        assert_eq!(back.encode(codec), frame);
+    }
+}
+
+#[test]
+fn recv_cursor_truncated_stream_is_an_error_never_a_hang() {
+    let frame = Msg::Sit { round: 1 }.encode(Codec::Raw);
+    for cut in 0..frame.len() {
+        let mut r = Trickle::reader(frame[..cut].to_vec());
+        let mut cur = RecvCursor::new();
+        let mut fb = FrameBuf::new();
+        let err = loop {
+            match cur.advance(&mut r, &mut fb) {
+                Ok(IoStep::Done) => panic!("cut at {cut} must not complete"),
+                Ok(IoStep::Pending) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(format!("{err:#}").contains("closed"), "cut at {cut}: {err:#}");
+    }
+}
+
+#[test]
+fn parse_frame_header_rejects_garbage_before_allocating() {
+    let good = Msg::Shutdown.encode(Codec::Raw);
+    let mut hdr = [0u8; 8];
+    hdr.copy_from_slice(&good[..8]);
+    assert_eq!(parse_frame_header(&hdr).unwrap(), good.len() - 8);
+
+    let mut bad_magic = hdr;
+    bad_magic[0] ^= 0xff;
+    assert!(parse_frame_header(&bad_magic).is_err());
+
+    let mut zero_len = [0u8; 8];
+    zero_len[..4].copy_from_slice(&MAGIC.to_le_bytes());
+    assert!(parse_frame_header(&zero_len).is_err(), "zero-length payload is implausible");
+
+    let mut huge = zero_len;
+    huge[4..].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(parse_frame_header(&huge).is_err(), "4 GiB claim must be rejected, not allocated");
+}
+
+// ----------------------------------------------------------- FFI layout
+
+/// `PollFd` is handed to `poll(2)` as `struct pollfd` — its layout is
+/// ABI, not convention. Pin size, alignment, and the offset of every
+/// field; Miri additionally checks the pointer arithmetic itself.
+#[test]
+fn pollfd_layout_matches_struct_pollfd_abi() {
+    assert_eq!(std::mem::size_of::<PollFd>(), 8);
+    assert_eq!(std::mem::align_of::<PollFd>(), 4);
+    let p = PollFd::new(3, POLLIN | POLLOUT);
+    let base = &p as *const PollFd as usize;
+    assert_eq!(&p.fd as *const _ as usize - base, 0, "fd at offset 0");
+    assert_eq!(&p.events as *const _ as usize - base, 4, "events at offset 4");
+    assert_eq!(&p.revents as *const _ as usize - base, 6, "revents at offset 6");
+    assert_eq!(POLLIN, 0x001, "poll(2) ABI constant");
+    assert_eq!(POLLOUT, 0x004, "poll(2) ABI constant");
+    assert_eq!(p.revents, 0, "interest entries start with revents cleared");
+}

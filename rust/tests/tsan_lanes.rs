@@ -1,0 +1,62 @@
+//! Data-race conformance under ThreadSanitizer (DESIGN.md §13).
+//!
+//! This file is the pinned allowlist for the nightly TSan CI job: each
+//! test drives one of the two scoped-thread fan-outs in the stack —
+//! the [`ragek::fl::InProcessPool`] parallel client lanes and the
+//! sharded-engine round threads — end to end, so TSan observes every
+//! cross-thread edge (lane partitioning, shard aggregation, the
+//! age-vector merges at the root) under a real training workload.
+//!
+//! The tests are ordinary `cargo test` tests too (they assert real
+//! convergence facts, cheaply); the sanitizer is what makes them bite.
+//! Keep them socket-free: multi-process transport has its own suites,
+//! and TSan only sees races inside one process.
+
+use ragek::clustering::MergeRule;
+use ragek::config::ExperimentConfig;
+use ragek::coordinator::topology::Topology;
+use ragek::fl::trainer::Trainer;
+
+fn smoke(parallel: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist_smoke();
+    cfg.parallel = parallel;
+    cfg.rounds = rounds;
+    cfg.eval_every = 0;
+    cfg
+}
+
+/// Every client lane trains concurrently on its own scoped thread; the
+/// aggregate must come out finite and the round count exact.
+#[test]
+fn parallel_lanes_are_race_free() {
+    let mut t = Trainer::from_config(&smoke(4, 3)).unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.history.rounds.len(), 3);
+    assert!(report.history.rounds.iter().all(|r| r.train_loss.is_finite()));
+}
+
+/// Lane partitioning must not change the math: one lane and four lanes
+/// over the same seed produce the identical loss trajectory. (Under
+/// TSan this doubles as the cross-thread determinism witness — a racy
+/// reduction would diverge here long before it segfaults anywhere.)
+#[test]
+fn lane_count_does_not_change_the_trajectory() {
+    let serial = Trainer::from_config(&smoke(1, 2)).unwrap().run().unwrap();
+    let fanned = Trainer::from_config(&smoke(4, 2)).unwrap().run().unwrap();
+    let a: Vec<f32> = serial.history.rounds.iter().map(|r| r.train_loss).collect();
+    let b: Vec<f32> = fanned.history.rounds.iter().map(|r| r.train_loss).collect();
+    assert_eq!(a, b, "lane fan-out changed the training trajectory");
+}
+
+/// Shard engines run their rounds on scoped threads and merge age
+/// vectors at the root; with lanes enabled inside each shard this nests
+/// both fan-outs.
+#[test]
+fn sharded_round_threads_are_race_free() {
+    let mut cfg = smoke(2, 3);
+    cfg.topology = Topology::Sharded { shards: 2, root_merge: MergeRule::Min };
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.history.rounds.len(), 3);
+    assert!(report.history.rounds.iter().all(|r| r.train_loss.is_finite()));
+}
